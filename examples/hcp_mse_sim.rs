@@ -1,0 +1,84 @@
+//! HCP configuration study (Fig. 11 / Fig. 13): quantization MSE of the
+//! patched linear product vs number of patched columns, for the six
+//! Tab. 4 configurations, under Gaussian and Laplace activation priors,
+//! across hidden sizes.
+//!
+//!   cargo run --release --example hcp_mse_sim [hidden_sizes...]
+//!
+//! Writes runs/hcp_mse_sim.csv. The expected shape (paper Fig. 11):
+//! every config improves on the unpatched baseline, *-O2-B dominates,
+//! and MSE decreases monotonically with patch size.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use chon::hcp::modes::{baseline, apply, HcpConfig, QuantizedPair};
+use chon::hcp::{scores, top_k};
+use chon::util::ndarray::{matmul, Mat};
+use chon::util::prng::Rng;
+
+fn run_prior(
+    prior: &str,
+    hidden: usize,
+    out: &mut impl Write,
+) -> Result<()> {
+    let m = 64; // token rows
+    let n = 64; // output features
+    let mut rng = Rng::new(0xC0FFEE ^ hidden as u64);
+    let x = Mat::from_fn(m, hidden, |_, _| match prior {
+        "gaussian" => rng.normal() * 2.0,
+        _ => rng.laplace(2.0),
+    });
+    let w = Mat::from_fn(hidden, n, |_, _| rng.normal() * 0.5);
+    let truth = matmul(&x, &w);
+    let q = QuantizedPair::new(&x, &w);
+    let order = top_k(&scores(&q.dx, &q.dw), hidden);
+    let base_mse = baseline(&q).mse(&truth);
+    println!("\n[{prior}, hidden {hidden}] baseline MSE {base_mse:.3e}");
+    println!(
+        "{:<10} {:>8} {:>12} {:>10}",
+        "config", "k", "MSE", "vs base"
+    );
+    for (name, cfg) in HcpConfig::taxonomy() {
+        for frac in [0.02f64, 0.05, 0.0909, 0.25] {
+            let k = ((hidden as f64 * frac).round() as usize).max(1);
+            let idx = &order[..k];
+            let mse = apply(cfg, &q, idx).mse(&truth);
+            println!(
+                "{:<10} {:>8} {:>12.3e} {:>9.1}%",
+                name,
+                k,
+                mse,
+                (mse / base_mse - 1.0) * 100.0
+            );
+            writeln!(out, "{prior},{hidden},{name},{k},{mse:.6e},{base_mse:.6e}")?;
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    chon::util::logger::init();
+    let sizes: Vec<usize> = {
+        let args: Vec<usize> = std::env::args()
+            .skip(1)
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        if args.is_empty() {
+            vec![512, 1024, 2048]
+        } else {
+            args
+        }
+    };
+    std::fs::create_dir_all("runs")?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create("runs/hcp_mse_sim.csv")?);
+    writeln!(f, "prior,hidden,config,k,mse,baseline_mse")?;
+    for prior in ["gaussian", "laplace"] {
+        for &h in &sizes {
+            run_prior(prior, h, &mut f)?;
+        }
+    }
+    println!("\nwritten runs/hcp_mse_sim.csv");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! End-to-end driver (deliverable (b) / EXPERIMENTS.md §E2E): train a GLA
+//! model under the full CHON recipe on the synthetic corpus for a few
+//! hundred steps, with periodic eval, longitudinal diagnostics, cloze
+//! scoring, and a BF16 reference run for the loss-gap readout.
+//!
+//!   cargo run --release --example train_gla_e2e [model] [steps]
+//!
+//! Defaults: model=small_gla if its artifacts exist (else tiny_gla),
+//! steps from the artifact's schedule. Proves all three layers compose:
+//! Pallas kernels (in the CHON HLO) -> JAX model -> Rust coordinator.
+
+use anyhow::Result;
+
+use chon::config::RunConfig;
+use chon::coordinator::{evalsuite, loss_gap_pct, Trainer};
+use chon::runtime::LoadedArtifact;
+
+fn main() -> Result<()> {
+    chon::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let model = args.first().cloned().unwrap_or_else(|| {
+        if artifacts.join("train_small_gla_chon.manifest.txt").exists() {
+            "small_gla".to_string()
+        } else {
+            "tiny_gla".to_string()
+        }
+    });
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let mut cfg = RunConfig::default();
+    cfg.artifacts = artifacts;
+    cfg.model = model.clone();
+    cfg.recipe = "chon".into();
+    cfg.steps = steps;
+    cfg.diag_every = 25;
+    cfg.eval_every = 50;
+    cfg.log_every = 10;
+    cfg.out_dir = "runs".into();
+
+    println!("=== E2E: {} / chon ===", model);
+    let mut tr = Trainer::new(cfg.clone())?;
+    let n = if steps > 0 { steps } else { tr.total_steps };
+    let t0 = std::time::Instant::now();
+    tr.train(n)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let (eval_loss, eval_acc) = tr.evaluate(4)?;
+    let chon_loss = tr.log.tail_mean_loss(10).unwrap();
+    let dir = tr.write_outputs()?;
+
+    // loss curve summary (every ~n/10 steps)
+    println!("\nloss curve (step, loss):");
+    let stride = (n / 10).max(1);
+    for r in tr.log.records.iter().step_by(stride) {
+        println!("  {:5}  {:.4}", r.step, r.loss);
+    }
+    println!(
+        "\nchon: {n} steps in {wall:.0}s ({:.0} ms/step); final loss {chon_loss:.4}; \
+         eval loss {eval_loss:.4} acc {eval_acc:.3}",
+        tr.log.mean_step_ms()
+    );
+
+    // cloze downstream scoring
+    let fwd = LoadedArtifact::load(&cfg.artifacts, &format!("fwd_{model}"))?;
+    let cloze = evalsuite::cloze_accuracy(&fwd, &tr.state.params, cfg.seed)?;
+    println!("cloze accuracy (fact completion): {cloze:.3}");
+
+    // hot-channel persistence readout (Sec. 3.3)
+    for (comp, series) in tr.monitor.hot_channel_persistence(8) {
+        if let (Some(first), Some(last)) = (series.first(), series.last()) {
+            println!(
+                "hot-channel persistence {comp}: {:.2} (early) -> {:.2} (late)",
+                first.1, last.1
+            );
+        }
+    }
+
+    // BF16 reference for the headline loss gap (Tab. 2's metric)
+    println!("\n=== BF16 reference run ===");
+    let mut cfg_b = cfg.clone();
+    cfg_b.recipe = "bf16".into();
+    cfg_b.diag_every = 0;
+    cfg_b.eval_every = 0;
+    let mut trb = Trainer::new(cfg_b)?;
+    trb.train(n)?;
+    let bf16_loss = trb.log.tail_mean_loss(10).unwrap();
+    trb.write_outputs()?;
+    println!(
+        "\nHEADLINE: bf16 {bf16_loss:.4} vs chon {chon_loss:.4} -> loss gap {:+.3}%",
+        loss_gap_pct(chon_loss, bf16_loss)
+    );
+    println!("outputs in {}", dir.display());
+    Ok(())
+}

@@ -1,0 +1,275 @@
+"""AOT pipeline: lower every (model, recipe) unit to HLO **text** artifacts.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Each artifact ``<name>.hlo.txt`` ships with ``<name>.manifest.txt``
+describing its positional inputs/outputs (flattened pytree order — the
+order PJRT sees) plus model/recipe metadata, so the Rust coordinator is
+fully self-describing at runtime. ``artifacts/index.txt`` lists everything.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts [--set full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import recipe as recipe_mod
+from .model import HyperConfig, ModelConfig
+
+# --------------------------------------------------------------------------
+# Build matrix
+# --------------------------------------------------------------------------
+
+MODELS = {
+    # tiny: ablation workhorse (Tab. 2/3, Figs. 5-8, 12, 26/27, 32)
+    "tiny_gla": ModelConfig(
+        name="tiny_gla", arch="gla", vocab=256, d_model=64, n_layers=2,
+        n_heads=2, d_ff=176, seq_len=64, batch=4,
+    ),
+    "tiny_sa": ModelConfig(
+        name="tiny_sa", arch="sa", vocab=256, d_model=64, n_layers=2,
+        n_heads=2, d_ff=176, seq_len=64, batch=4,
+    ),
+    # small: the end-to-end example scale (examples/train_gla_e2e)
+    "small_gla": ModelConfig(
+        name="small_gla", arch="gla", vocab=512, d_model=128, n_layers=4,
+        n_heads=4, d_ff=352, seq_len=128, batch=8,
+    ),
+    "small_sa": ModelConfig(
+        name="small_sa", arch="sa", vocab=512, d_model=128, n_layers=4,
+        n_heads=4, d_ff=352, seq_len=128, batch=8,
+    ),
+}
+
+HYPERS = {
+    "tiny_gla": HyperConfig(peak_lr=1e-3, warmup=40, total_steps=300),
+    "tiny_sa": HyperConfig(peak_lr=1e-3, warmup=40, total_steps=300),
+    "small_gla": HyperConfig(peak_lr=8e-4, warmup=60, total_steps=400),
+    "small_sa": HyperConfig(peak_lr=8e-4, warmup=60, total_steps=400),
+}
+
+# Which recipes get a train artifact per model (Tab. 2 grid on tiny_gla).
+TRAIN_RECIPES = {
+    "tiny_gla": [
+        "bf16", "fp8", "nvfp4", "nvfp4_hcp", "chon", "chon_no_sr",
+        "chon_no_rht", "chon_no_2d", "chon_no_sr_rht", "chon_no_last4",
+        "hcp_no_postqk_rht",
+    ],
+    "tiny_sa": ["bf16", "fp8", "nvfp4", "chon"],
+    "small_gla": ["bf16", "fp8", "nvfp4", "chon"],
+    "small_sa": ["bf16", "nvfp4", "chon"],
+}
+
+# Single-operator sensitivity (Tab. 3): nvfp4 on one op, BF16 elsewhere.
+SENSITIVITY_MODELS = ("tiny_gla", "tiny_sa")
+
+SETS = {
+    # "test": the minimum for `make test` + examples/quickstart
+    "test": {"models": ["tiny_gla"], "train": ["bf16", "nvfp4", "chon"],
+             "sensitivity": False},
+    # "core": everything the Tab. 2 ablation + diagnostics need
+    "core": {"models": ["tiny_gla", "tiny_sa"], "train": None,
+             "sensitivity": True},
+    # "full": core + the e2e small models
+    "full": {"models": list(MODELS), "train": None, "sensitivity": True},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_names(tree, prefix):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append((name, leaf))
+    return out
+
+
+def _dtype_tag(x):
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(
+        str(jnp.asarray(x).dtype), str(jnp.asarray(x).dtype)
+    )
+
+
+def _aval_line(kind, i, name, leaf):
+    arr = jnp.asarray(leaf) if not hasattr(leaf, "shape") else leaf
+    dims = ",".join(str(d) for d in arr.shape) if len(arr.shape) else "scalar"
+    dt = {"float32": "f32", "int32": "i32", "uint32": "u32"}.get(
+        str(arr.dtype), str(arr.dtype)
+    )
+    return f"{kind} {i} {name} {dt} {dims}"
+
+
+def emit(out_dir, name, fn, example_args, arg_names, meta, metrics=None):
+    """Lower fn at example_args; write <name>.hlo.txt + manifest."""
+    t0 = time.time()
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    lines = [f"artifact {name}"]
+    for k, v in meta.items():
+        lines.append(f"{k} {v}")
+    idx = 0
+    for arg, aname in zip(example_args, arg_names):
+        for n, leaf in _flat_names(arg, aname):
+            lines.append(_aval_line("input", idx, n, leaf))
+            idx += 1
+    out_shape = jax.eval_shape(fn, *example_args)
+    idx = 0
+    for n, leaf in _flat_names(out_shape, "out"):
+        lines.append(_aval_line("output", idx, n, leaf))
+        idx += 1
+    if metrics:
+        for m in metrics:
+            lines.append(f"metric {m}")
+    with open(os.path.join(out_dir, f"{name}.manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    dt = time.time() - t0
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {dt:.1f}s", flush=True)
+    return name
+
+
+def model_meta(cfg: ModelConfig, hyper: HyperConfig, kind, recipe_name):
+    return {
+        "kind": kind,
+        "model": cfg.name,
+        "arch": cfg.arch,
+        "recipe": recipe_name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "total_steps": hyper.total_steps,
+        "warmup": hyper.warmup,
+        "peak_lr": hyper.peak_lr,
+    }
+
+
+def make_init_fn(cfg: ModelConfig):
+    def init(seed):
+        return model_mod.init_params(
+            cfg, jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        )
+
+    return init
+
+
+def build(out_dir: str, which: str) -> list[str]:
+    sel = SETS[which]
+    os.makedirs(out_dir, exist_ok=True)
+    emitted = []
+    for mname in sel["models"]:
+        cfg = MODELS[mname]
+        hyper = HYPERS[mname]
+        protect = 1 if cfg.n_layers <= 4 else 4
+        rcps = recipe_mod.recipes(protect_last=protect)
+        train_list = sel["train"] or TRAIN_RECIPES[mname]
+
+        params_shapes = jax.eval_shape(
+            lambda k: model_mod.init_params(cfg, k), jax.random.PRNGKey(0)
+        )
+        params_ex = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params_shapes
+        )
+        mopt = model_mod.zeros_like_tree(params_ex)
+        tokens = jnp.zeros((cfg.batch, cfg.seq_len), jnp.int32)
+        step = jnp.int32(0)
+        seed = jnp.int32(0)
+
+        print(f"[{mname}] params={model_mod.param_count(cfg):,}", flush=True)
+
+        emitted.append(emit(
+            out_dir, f"init_{mname}", make_init_fn(cfg),
+            (seed,), ("seed",),
+            model_meta(cfg, hyper, "init", "-"),
+        ))
+
+        # diag artifacts: flagship recipe + bf16 comparison
+        for rname in ("chon", "bf16"):
+            emitted.append(emit(
+                out_dir, f"diag_{mname}_{rname}",
+                model_mod.make_diag_fn(cfg, rcps[rname]),
+                (params_ex, tokens, seed), ("params", "tokens", "seed"),
+                model_meta(cfg, hyper, "diag", rname),
+                metrics=model_mod.diag_schema(cfg),
+            ))
+        emitted.append(emit(
+            out_dir, f"fwd_{mname}",
+            model_mod.make_fwd_fn(cfg, rcps["chon"]),
+            (params_ex, tokens), ("params", "tokens"),
+            model_meta(cfg, hyper, "fwd", "chon"),
+        ))
+        for rname in sorted(set(train_list) & {"bf16", "fp8", "nvfp4", "chon"}):
+            emitted.append(emit(
+                out_dir, f"eval_{mname}_{rname}",
+                model_mod.make_eval_fn(cfg, rcps[rname]),
+                (params_ex, tokens, tokens), ("params", "tokens", "targets"),
+                model_meta(cfg, hyper, "eval", rname),
+            ))
+
+        # train artifacts
+        for rname in train_list:
+            emitted.append(emit(
+                out_dir, f"train_{mname}_{rname}",
+                model_mod.make_train_fn(cfg, rcps[rname], hyper),
+                (params_ex, mopt, mopt, step, tokens, tokens, seed),
+                ("params", "m", "v", "step", "tokens", "targets", "seed"),
+                model_meta(cfg, hyper, "train", rname),
+            ))
+
+        # single-operator sensitivity (Tab. 3)
+        if sel["sensitivity"] and mname in SENSITIVITY_MODELS:
+            base = rcps["nvfp4"]._replace(protect_last=0)
+            for op in model_mod.arch_ops(cfg.arch):
+                tag = op.replace(".", "_")
+
+                def override(arch, layer, n_layers, o, _target=op):
+                    return recipe_mod.op_quant_single(base, _target, o)
+
+                emitted.append(emit(
+                    out_dir, f"train_{mname}_only_{tag}",
+                    model_mod.make_train_fn(cfg, base, hyper,
+                                            op_cfg_override=override),
+                    (params_ex, mopt, mopt, step, tokens, tokens, seed),
+                    ("params", "m", "v", "step", "tokens", "targets", "seed"),
+                    model_meta(cfg, hyper, "train", f"only_{tag}"),
+                ))
+    with open(os.path.join(out_dir, "index.txt"), "w") as f:
+        f.write("\n".join(emitted) + "\n")
+    return emitted
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="test", choices=list(SETS))
+    args = ap.parse_args()
+    t0 = time.time()
+    emitted = build(args.out, args.set)
+    print(f"emitted {len(emitted)} artifacts in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

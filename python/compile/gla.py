@@ -1,0 +1,108 @@
+"""L2 Gated Linear Attention block (Yang et al. 2024; paper App. E.7).
+
+Recurrence per head (Eq. 49–50):
+
+    λ_t = σ(gk_t)^{1/γ}                        (log-sigmoid gate, γ=16)
+    S_t = diag(λ_t) S_{t-1} + k_t v_tᵀ
+    o_t = (q_t / √d_k)ᵀ S_t
+    y_t = σ(g_t) ⊙ o_t                         (output gate, Eq. 48)
+
+The asymmetric 1/√d_k scaling is applied to q only (the paper's §E.7
+"Scaling Asymmetry" note — the k-projection's compensating magnitude
+growth is one of the outlier mechanisms the diagnostics track).
+
+All six projections (q, k, v, gk, g, o) are quantized linears; the o
+projection and gk projection are the post-QK / gating protection targets
+of the CHON recipe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+GLA_OPS = ("attn.q", "attn.k", "attn.v", "attn.gk", "attn.g", "attn.o")
+
+
+def gla_attention(x, p, keys, cfgs, *, n_heads, gate_gamma=16.0,
+                  collect=None, tag=""):
+    """One GLA attention sub-block.
+
+    x: (B, T, D). p: dict with wq/wk/wv/wgk (D, D), wg (D, D), wo (D, D),
+    gk_bias (D,). Head dims d_k = d_v = D / n_heads.
+    Returns (B, T, D).
+    """
+    b, t, d = x.shape
+    h = n_heads
+    dk = d // h
+
+    q = quant.qlinear(x, p["wq"], keys["attn.q"], cfgs["attn.q"])
+    k = quant.qlinear(x, p["wk"], keys["attn.k"], cfgs["attn.k"])
+    v = quant.qlinear(x, p["wv"], keys["attn.v"], cfgs["attn.v"])
+    gk = quant.qlinear(x, p["wgk"], keys["attn.gk"], cfgs["attn.gk"]) + p["gk_bias"]
+    g = quant.qlinear(x, p["wg"], keys["attn.g"], cfgs["attn.g"])
+
+    if collect is not None:
+        collect[f"{tag}attn.q"] = q
+        collect[f"{tag}attn.k"] = k
+        collect[f"{tag}attn.v"] = v
+        collect[f"{tag}attn.gk"] = gk
+        collect[f"{tag}attn.g"] = g
+
+    def split(z):
+        return z.reshape(b, t, h, dk).transpose(1, 0, 2, 3)  # (T, B, H, dk)
+
+    qh = split(q) / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    kh = split(k)
+    vh = split(v)
+    # Decay: λ = exp(log σ(gk) / γ) = σ(gk)^{1/γ}  (App. E.7 Eq. 50)
+    lam = jnp.exp(jax.nn.log_sigmoid(split(gk)) / gate_gamma)
+
+    s0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+
+    def step(s, inp):
+        q_t, k_t, v_t, lam_t = inp
+        s = s * lam_t[..., None] + k_t[..., None] * v_t[..., None, :]
+        o_t = jnp.einsum("bhd,bhdv->bhv", q_t, s)
+        return s, o_t
+
+    _, o = jax.lax.scan(step, s0, (qh, kh, vh, lam))
+    o = o.transpose(1, 0, 2, 3).reshape(b, t, d)  # (B, T, D)
+    o = o * jax.nn.sigmoid(g)
+    y = quant.qlinear(o, p["wo"], keys["attn.o"], cfgs["attn.o"])
+    if collect is not None:
+        collect[f"{tag}attn.o"] = y
+    return y
+
+
+def gla_attention_ref(x, p, *, n_heads, gate_gamma=16.0):
+    """Unquantized O(T²) reference (materialized decay products) for tests.
+
+    Computes o_t = Σ_{i<=t} (∏_{j=i+1..t} λ_j) ⊙-weighted ⟨q_t, k_i⟩ v_i
+    directly; must match the scan implementation with BF16 ops.
+    """
+    b, t, d = x.shape
+    h = n_heads
+    dk = d // h
+    q = (x @ p["wq"]).reshape(b, t, h, dk) / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    k = (x @ p["wk"]).reshape(b, t, h, dk)
+    v = (x @ p["wv"]).reshape(b, t, h, dk)
+    gk = (x @ p["wgk"] + p["gk_bias"]).reshape(b, t, h, dk)
+    g = x @ p["wg"]
+    lam = jnp.exp(jax.nn.log_sigmoid(gk) / gate_gamma)
+    # cumulative log-decay along time: L_t = Σ_{j<=t} log λ_j
+    loglam = jnp.log(jnp.maximum(lam, 1e-38))
+    cum = jnp.cumsum(loglam, axis=1)  # (B,T,H,dk)
+    outs = []
+    for ti in range(t):
+        # weights for source i <= ti: exp(cum_t - cum_i) elementwise on dk
+        w_ti = jnp.exp(cum[:, ti : ti + 1] - cum[:, : ti + 1])  # (B,ti+1,H,dk)
+        kk = k[:, : ti + 1] * w_ti
+        scores = jnp.einsum("bhd,bihd->bih", q[:, ti], kk)
+        o_t = jnp.einsum("bih,bihd->bhd", scores, v[:, : ti + 1])
+        outs.append(o_t)
+    o = jnp.stack(outs, axis=1).reshape(b, t, d)
+    o = o * jax.nn.sigmoid(g)
+    return o @ p["wo"]

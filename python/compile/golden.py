@@ -1,0 +1,84 @@
+"""Dump cross-language golden fixtures: the Python oracle's outputs for
+deterministic inputs, consumed by the Rust test `golden_parity` to prove
+the two NVFP4 implementations agree bit-for-bit (fake-quant path).
+
+Run as part of `make artifacts`:  python -m compile.golden --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def _fmt(vals) -> str:
+    return " ".join(repr(float(v)) for v in np.asarray(vals).reshape(-1))
+
+
+def cases():
+    rng = np.random.default_rng(0xC0DE)
+    out = []
+
+    # e2m1 rtn over a dense ramp + random values
+    ramp = np.linspace(-7, 7, 113).astype(np.float32)
+    out.append(("e2m1_rtn", ramp, ref.e2m1_rtn(jnp.array(ramp))))
+
+    # e4m3 rtn over log-spaced magnitudes
+    mags = np.concatenate(
+        [
+            np.geomspace(1e-5, 500, 77).astype(np.float32),
+            -np.geomspace(1e-3, 448, 33).astype(np.float32),
+            np.zeros(1, np.float32),
+        ]
+    )
+    out.append(("e4m3_rtn", mags, ref.e4m3_rtn(jnp.array(mags))))
+
+    # nvfp4 fake-quant: gaussian, heavy-tail, spiky, tiny-scale
+    for name, x in [
+        ("nvfp4_gauss", rng.normal(0, 2, 256).astype(np.float32)),
+        ("nvfp4_heavy", rng.standard_t(2, 256).astype(np.float32) * 3),
+        ("nvfp4_spiky", np.where(rng.random(256) < 0.02, 500.0, 0.05).astype(np.float32)),
+        ("nvfp4_tiny", rng.normal(0, 1e-4, 256).astype(np.float32)),
+    ]:
+        out.append((name, x, ref.nvfp4_quant_dequant(jnp.array(x).reshape(1, -1))))
+
+    # 2d weight scaling
+    w = rng.normal(0, 1, (32, 64)).astype(np.float32)
+    out.append(("nvfp4_2d", w, ref.nvfp4_quant_dequant_2d(jnp.array(w))))
+
+    # mxfp4
+    x = rng.normal(0, 1.5, 256).astype(np.float32)
+    out.append(("mxfp4", x, ref.mxfp4_quant_dequant(jnp.array(x).reshape(1, -1))))
+
+    # fwht (unnormalized)
+    h = rng.normal(0, 1, 64).astype(np.float32)
+    out.append(("fwht", h, ref.fwht(jnp.array(h).reshape(1, -1))))
+
+    # kurtosis scalar
+    k = rng.normal(0, 1, 4096).astype(np.float32)
+    k[7] = 40.0
+    out.append(("kurtosis", k, jnp.array([ref.kurtosis(jnp.array(k))])))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "golden_quant.txt")
+    with open(path, "w") as f:
+        for name, x, y in cases():
+            f.write(f"case {name}\n")
+            f.write(f"in {_fmt(x)}\n")
+            f.write(f"out {_fmt(y)}\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

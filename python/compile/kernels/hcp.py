@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: fused Hot-Channel Patch GEMM (S-O2-B, Alg. 1).
+
+Single-kernel (S) mode fuses the three contractions of the patched product
+
+    Y = X̂ Ŵ + ΔX_I Ŵ_I + X̂_I ΔW_I
+
+into one grid so the MXU sees one logical GEMM over the concatenated
+channel dimension [K ; k ; k] — the hardware-efficient "concat" trick of
+Alg. 1 — without materializing the concatenated operands in HBM.
+
+Dual-kernel (D) mode (Tab. 4 / Tab. 5 "pre-fuse") runs the base GEMM and
+the residual correction as separate pallas_calls, mirroring the unfused
+Triton pipeline the paper benchmarks against.
+
+Tiling: grid (M/bm, N/bn); each step owns a (bm, K)+(bm, k) LHS stripe and
+a (K, bn)+(k, bn) RHS stripe in VMEM and writes one (bm, bn) output tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nvfp4 import INTERPRET, _pick_block_rows
+
+
+def _fused_kernel(xq_ref, wq_ref, dxg_ref, wqg_ref, xqg_ref, dwg_ref, o_ref):
+    xq = xq_ref[...]
+    wq = wq_ref[...]
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(dxg_ref[...], wqg_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(xqg_ref[...], dwg_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def _base_kernel(xq_ref, wq_ref, o_ref):
+    o_ref[...] = jnp.dot(xq_ref[...], wq_ref[...], preferred_element_type=jnp.float32)
+
+
+def _residual_kernel(dxg_ref, wqg_ref, xqg_ref, dwg_ref, o_ref):
+    acc = jnp.dot(dxg_ref[...], wqg_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + jnp.dot(xqg_ref[...], dwg_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def _tiles(m, n, bm, bn):
+    bm = _pick_block_rows(m, bm)
+    bn = _pick_block_rows(n, bn)
+    return bm, bn
+
+
+def hcp_gemm_fused(xq, wq, dxg, wqg, xqg, dwg, *, bm: int = 8, bn: int = 128):
+    """Single-kernel (S-mode) patched GEMM.
+
+    xq: (M, K) quantized activations; wq: (K, N) quantized weights;
+    dxg: (M, k) gathered hot-channel activation residuals;
+    wqg: (k, N) gathered quantized weight rows;
+    xqg: (M, k) gathered quantized activation columns;
+    dwg: (k, N) gathered weight residual rows.
+    Returns (M, N) f32.
+    """
+    m, kdim = xq.shape
+    _, n = wq.shape
+    bm, bn = _tiles(m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    lhs = lambda i, j: (i, 0)
+    rhs = lambda i, j: (0, j)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lhs),
+            pl.BlockSpec((kdim, bn), rhs),
+            pl.BlockSpec((bm, dxg.shape[1]), lhs),
+            pl.BlockSpec((wqg.shape[0], bn), rhs),
+            pl.BlockSpec((bm, xqg.shape[1]), lhs),
+            pl.BlockSpec((dwg.shape[0], bn), rhs),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(
+        xq.astype(jnp.float32),
+        wq.astype(jnp.float32),
+        dxg.astype(jnp.float32),
+        wqg.astype(jnp.float32),
+        xqg.astype(jnp.float32),
+        dwg.astype(jnp.float32),
+    )
+
+
+def hcp_gemm_dual(xq, wq, dxg, wqg, xqg, dwg, *, bm: int = 8, bn: int = 128):
+    """Dual-kernel (D-mode): base GEMM and residual GEMM as separate calls."""
+    m, kdim = xq.shape
+    _, n = wq.shape
+    bm, bn = _tiles(m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    lhs = lambda i, j: (i, 0)
+    rhs = lambda i, j: (0, j)
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    base = pl.pallas_call(
+        _base_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, kdim), lhs), pl.BlockSpec((kdim, bn), rhs)],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(xq.astype(jnp.float32), wq.astype(jnp.float32))
+    resid = pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, dxg.shape[1]), lhs),
+            pl.BlockSpec((wqg.shape[0], bn), rhs),
+            pl.BlockSpec((bm, xqg.shape[1]), lhs),
+            pl.BlockSpec((dwg.shape[0], bn), rhs),
+        ],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(
+        dxg.astype(jnp.float32),
+        wqg.astype(jnp.float32),
+        xqg.astype(jnp.float32),
+        dwg.astype(jnp.float32),
+    )
+    return base + resid

@@ -1,0 +1,155 @@
+"""L1 Pallas kernels: NVFP4 quantize-dequantize (1D and 2D block scaling).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Blackwell
+tensor-core quantization (TransformerEngine NVFP4) maps to TPU as a VMEM
+row-tile kernel. Each grid step owns a (block_rows, N) VMEM tile containing
+an integer number of 1x16 scale blocks; the global encode scale rides in as
+a (1,1) scalar block (computed in a separate amax pass, mirroring the
+paper's Implementation note on memory traffic in App. C.4).
+
+Kernels MUST run with interpret=True: on CPU PJRT, real Mosaic lowering
+emits custom-calls the runtime cannot execute. The in-kernel math reuses
+the jnp lattice helpers from ref.py so kernel-vs-oracle tests isolate the
+*blocking/scaling structure*, which is what the kernel owns.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# All pallas_call sites in this repo go through this flag so the AOT path
+# can assert interpret mode is on.
+INTERPRET = True
+
+
+def _pick_block_rows(m: int, preferred: int = 8) -> int:
+    """Largest divisor of m that is <= preferred (VMEM sublane tiling)."""
+    for b in range(min(preferred, m), 0, -1):
+        if m % b == 0:
+            return b
+    return 1
+
+
+def _qdq_kernel(x_ref, senc_ref, o_ref, *, rounding):
+    """One (bm, N) tile: per-1x16-block scales + E2M1 RTN quant-dequant."""
+    x = x_ref[...]
+    s_enc = senc_ref[0, 0]
+    s_dec = 1.0 / s_enc
+    bm, n = x.shape
+    xb = x.reshape(bm, n // ref.BLOCK, ref.BLOCK)
+    amax_b = jnp.max(jnp.abs(xb), axis=-1)
+    s_e4m3 = ref.e4m3_rtn(amax_b / ref.E2M1_MAX * s_enc)
+    denom = s_e4m3 * s_dec
+    s_enc_b = jnp.where(denom > 0, 1.0 / jnp.maximum(denom, 1e-45), 0.0)
+    scaled = xb * s_enc_b[..., None]
+    q = ref.e2m1_rtn(scaled)
+    deq = q * (s_e4m3 * s_dec)[..., None]
+    o_ref[...] = deq.reshape(bm, n)
+
+
+def _qdq_sr_kernel(x_ref, u_ref, senc_ref, o_ref):
+    """Stochastic-rounding variant (backward path)."""
+    x = x_ref[...]
+    u = u_ref[...]
+    s_enc = senc_ref[0, 0]
+    s_dec = 1.0 / s_enc
+    bm, n = x.shape
+    xb = x.reshape(bm, n // ref.BLOCK, ref.BLOCK)
+    ub = u.reshape(bm, n // ref.BLOCK, ref.BLOCK)
+    amax_b = jnp.max(jnp.abs(xb), axis=-1)
+    s_e4m3 = ref.e4m3_rtn(amax_b / ref.E2M1_MAX * s_enc)
+    denom = s_e4m3 * s_dec
+    s_enc_b = jnp.where(denom > 0, 1.0 / jnp.maximum(denom, 1e-45), 0.0)
+    scaled = xb * s_enc_b[..., None]
+    q = ref.e2m1_sr(scaled, ub)
+    deq = q * (s_e4m3 * s_dec)[..., None]
+    o_ref[...] = deq.reshape(bm, n)
+
+
+def nvfp4_qdq(x, *, rounding: str = "rtn", u=None, block_rows: int = 8):
+    """NVFP4 fake-quantize a 2D tensor with 1x16 block scaling (Pallas).
+
+    Matches ref.nvfp4_quant_dequant exactly (asserted in tests).
+    """
+    assert x.ndim == 2, x.shape
+    m, n = x.shape
+    assert n % ref.BLOCK == 0, (m, n)
+    bm = _pick_block_rows(m, block_rows)
+    amax = jnp.max(jnp.abs(x))
+    s_enc = jnp.where(amax > 0, (ref.E2M1_MAX * ref.E4M3_MAX) / amax, 1.0)
+    s_enc = s_enc.reshape(1, 1).astype(jnp.float32)
+    grid = (m // bm,)
+    x_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    if rounding == "rtn":
+        return pl.pallas_call(
+            functools.partial(_qdq_kernel, rounding="rtn"),
+            grid=grid,
+            in_specs=[x_spec, s_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=INTERPRET,
+        )(x.astype(jnp.float32), s_enc)
+    assert u is not None and u.shape == x.shape
+    return pl.pallas_call(
+        _qdq_sr_kernel,
+        grid=grid,
+        in_specs=[x_spec, x_spec, s_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), u.astype(jnp.float32), s_enc)
+
+
+def _qdq2d_kernel(x_ref, senc_ref, o_ref, *, tile):
+    """One (tile, N) row band sharing 2D (tile x 16) block scales."""
+    x = x_ref[...]
+    s_enc = senc_ref[0, 0]
+    s_dec = 1.0 / s_enc
+    bm, n = x.shape
+    xb = x.reshape(bm, n // ref.BLOCK, ref.BLOCK)
+    # 2D scaling: amax over the whole (tile x BLOCK) brick.
+    amax_b = jnp.max(jnp.abs(xb), axis=(0, 2))  # (n/BLOCK,)
+    s_e4m3 = ref.e4m3_rtn(amax_b / ref.E2M1_MAX * s_enc)
+    denom = s_e4m3 * s_dec
+    s_enc_b = jnp.where(denom > 0, 1.0 / jnp.maximum(denom, 1e-45), 0.0)
+    scaled = xb * s_enc_b[None, :, None]
+    q = ref.e2m1_rtn(scaled)
+    deq = q * (s_e4m3 * s_dec)[None, :, None]
+    o_ref[...] = deq.reshape(bm, n)
+
+
+def nvfp4_qdq_2d(x, *, tile: int = 16):
+    """NVFP4 fake-quantize with 2D (tile x 16) weight block scaling (Pallas).
+
+    Matches ref.nvfp4_quant_dequant_2d. Rows are padded to the tile size.
+    """
+    assert x.ndim == 2
+    m, n = x.shape
+    assert n % ref.BLOCK == 0
+    pad = (-m) % tile
+    x_p = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)]) if pad else x
+    mp = x_p.shape[0]
+    amax = jnp.max(jnp.abs(x_p))
+    s_enc = jnp.where(amax > 0, (ref.E2M1_MAX * ref.E4M3_MAX) / amax, 1.0)
+    s_enc = s_enc.reshape(1, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_qdq2d_kernel, tile=tile),
+        grid=(mp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x_p.astype(jnp.float32), s_enc)
+    return out[:m, :]

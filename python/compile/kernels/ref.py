@@ -1,0 +1,402 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+This module is the correctness ground truth: Pallas kernels (nvfp4.py,
+sr.py, rht.py, hcp.py) are asserted allclose against these functions in
+python/tests/, and the Rust quant substrate (rust/src/quant/) is checked
+against golden fixtures dumped from here.
+
+NVFP4 numerics follow App. C.4 of the paper exactly:
+
+  global encode scale   s_enc      = (6 * 448) / amax(X)           (Def C.1)
+  local decode scale    s_dec_b    = amax_b / 6                    (Def C.3)
+  stored block scale    s_e4m3_b   = e4m3(s_dec_b * s_enc)         (Eq. 41)
+  effective enc scale   s_enc_b    = 1 / (fp32(s_e4m3_b) * s_dec)  (Eq. 42)
+  quantized element     x_hat_i    = q_e2m1(x_i * s_enc_b)         (Eq. 43)
+  dequantized element   x_dq_i     = x_hat_i * fp32(s_e4m3_b) * s_dec
+
+All float8 arithmetic is *emulated* in f32 (frexp-based) so the lowered HLO
+contains no f8 dtypes — xla_extension 0.5.1 (the runtime backend) predates
+reliable f8 support on the CPU PJRT plugin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Format constants
+# --------------------------------------------------------------------------
+
+E2M1_MAX = 6.0          # largest magnitude representable in FP4 E2M1
+E4M3_MAX = 448.0        # largest magnitude representable in FP8 E4M3
+E4M3_MIN_NORMAL_EXP = -6   # smallest normal exponent (2^-6)
+E4M3_MANT_BITS = 3
+BLOCK = 16              # NVFP4 micro-block length (1x16)
+
+# The 8 non-negative E2M1 code points.
+E2M1_VALUES = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+
+
+# --------------------------------------------------------------------------
+# E2M1 rounding (RTN round-half-even, floor, stochastic)
+# --------------------------------------------------------------------------
+
+def e2m1_rtn(v):
+    """Round-to-nearest-even onto the E2M1 lattice. |v| is clamped to 6.
+
+    The lattice spacing is 0.5 on [0,2), 1.0 on [2,4), 2.0 on [4,6];
+    jnp.round is round-half-to-even, which on a uniformly spaced sub-lattice
+    coincides with IEEE RTN-even on the format's mantissa bit.
+    """
+    a = jnp.abs(v)
+    s = jnp.sign(v)
+    a = jnp.minimum(a, E2M1_MAX)
+    r = jnp.where(
+        a < 2.0,
+        jnp.round(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.round(a), jnp.round(a * 0.5) * 2.0),
+    )
+    return s * r
+
+
+def e2m1_floor(v):
+    """Round-toward-zero onto the E2M1 lattice (used by stochastic rounding)."""
+    a = jnp.minimum(jnp.abs(v), E2M1_MAX)
+    s = jnp.sign(v)
+    r = jnp.where(
+        a < 2.0,
+        jnp.floor(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.floor(a), jnp.floor(a * 0.5) * 2.0),
+    )
+    return s * r
+
+
+def e2m1_spacing(a):
+    """Lattice spacing at magnitude ``a`` (for the upward neighbour)."""
+    return jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+
+
+def e2m1_sr(v, u):
+    """Stochastic rounding onto the E2M1 lattice.
+
+    ``u`` are uniforms in [0,1) with the same shape as ``v``. E[e2m1_sr(v,U)]
+    == clamp(v) for v within range (unbiasedness — property-tested).
+    """
+    a = jnp.minimum(jnp.abs(v), E2M1_MAX)
+    s = jnp.sign(v)
+    lo = jnp.where(
+        a < 2.0,
+        jnp.floor(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.floor(a), jnp.floor(a * 0.5) * 2.0),
+    )
+    step = e2m1_spacing(lo)  # spacing *above* lo (at 2/4 boundaries: next gap)
+    hi = jnp.minimum(lo + step, E2M1_MAX)
+    frac = jnp.where(hi > lo, (a - lo) / (hi - lo), 0.0)
+    r = jnp.where(u < frac, hi, lo)
+    return s * r
+
+
+# --------------------------------------------------------------------------
+# E4M3 emulation (f32 arithmetic only)
+# --------------------------------------------------------------------------
+
+def e4m3_rtn(v):
+    """Round-to-nearest-even onto the FP8 E4M3 lattice, saturating at 448.
+
+    Uses frexp for an exact exponent so no f8 dtype appears in the HLO.
+    Zero maps to zero. Subnormals (exp < -6) round on the fixed 2^-9 grid.
+    """
+    a = jnp.abs(v)
+    s = jnp.sign(v)
+    # frexp: a = m * 2^e with m in [0.5, 1)  =>  floor(log2 a) = e - 1
+    _, e = jnp.frexp(jnp.where(a > 0, a, 1.0))
+    e = e - 1
+    e = jnp.maximum(e, E4M3_MIN_NORMAL_EXP)
+    step = jnp.exp2((e - E4M3_MANT_BITS).astype(jnp.float32))
+    r = jnp.round(a / step) * step
+    r = jnp.minimum(r, E4M3_MAX)
+    return jnp.where(a == 0.0, 0.0, s * r)
+
+
+# --------------------------------------------------------------------------
+# NVFP4 two-level microscaling (App. C.4)
+# --------------------------------------------------------------------------
+
+def _blocked(x):
+    """Reshape (..., N) -> (..., N/BLOCK, BLOCK). N must divide by BLOCK."""
+    assert x.shape[-1] % BLOCK == 0, f"last dim {x.shape[-1]} % {BLOCK} != 0"
+    return x.reshape(*x.shape[:-1], x.shape[-1] // BLOCK, BLOCK)
+
+
+def nvfp4_scales(x):
+    """Compute (s_enc global, s_dec global, stored e4m3 block decode scales).
+
+    Returns (s_enc: scalar, s_dec: scalar, s_e4m3: (..., N/BLOCK)).
+    """
+    xb = _blocked(x)
+    amax = jnp.max(jnp.abs(x))
+    # Guard the all-zero tensor: any finite scale works, everything encodes 0.
+    s_enc = jnp.where(amax > 0, (E2M1_MAX * E4M3_MAX) / amax, 1.0)
+    s_dec = 1.0 / s_enc
+    amax_b = jnp.max(jnp.abs(xb), axis=-1)
+    s_dec_b = amax_b / E2M1_MAX
+    s_e4m3 = e4m3_rtn(s_dec_b * s_enc)
+    return s_enc, s_dec, s_e4m3
+
+
+def nvfp4_quant_dequant(x, rounding="rtn", u=None):
+    """Fake-quantize ``x`` through NVFP4: quantize then dequantize in f32.
+
+    rounding: "rtn" (forward path) or "sr" (backward path; ``u`` uniforms
+    required, same shape as x).
+
+    This is exactly the paper's ablation methodology (App. C.3): values and
+    scales are bit-faithful NVFP4, the subsequent GEMM runs in high precision.
+    """
+    s_enc, s_dec, s_e4m3 = nvfp4_scales(x)
+    xb = _blocked(x)
+    # Effective per-block encode scale (Eq. 42); blocks whose stored scale
+    # quantized to zero (amax_b == 0, or underflow) encode/decode to zero.
+    denom = s_e4m3 * s_dec
+    s_enc_b = jnp.where(denom > 0, 1.0 / jnp.maximum(denom, 1e-45), 0.0)
+    scaled = xb * s_enc_b[..., None]
+    if rounding == "rtn":
+        q = e2m1_rtn(scaled)
+    elif rounding == "sr":
+        assert u is not None
+        q = e2m1_sr(scaled, _blocked(u))
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown rounding {rounding!r}")
+    deq = q * (s_e4m3 * s_dec)[..., None]
+    return deq.reshape(x.shape)
+
+
+def nvfp4_quant_dequant_2d(x, rounding="rtn", u=None, tile=16):
+    """2D (tile x BLOCK) block scaling used for weights in the NVIDIA recipe.
+
+    Rows are grouped into ``tile``-row bands; each band shares its block
+    scales (computed from the band's amax per 16-column block). Implemented
+    by folding the row band into the block dimension.
+    """
+    m = x.shape[-2]
+    pad = (-m) % tile
+    if pad:
+        x_p = jnp.concatenate(
+            [x, jnp.zeros((*x.shape[:-2], pad, x.shape[-1]), x.dtype)], axis=-2
+        )
+    else:
+        x_p = x
+    mp = x_p.shape[-2]
+    # (..., mp/tile, tile, N/BLOCK, BLOCK) -> amax over (tile, BLOCK)
+    xb = x_p.reshape(*x_p.shape[:-2], mp // tile, tile, x.shape[-1] // BLOCK, BLOCK)
+    amax = jnp.max(jnp.abs(x_p))
+    s_enc = jnp.where(amax > 0, (E2M1_MAX * E4M3_MAX) / amax, 1.0)
+    s_dec = 1.0 / s_enc
+    amax_b = jnp.max(jnp.abs(xb), axis=(-3, -1), keepdims=True)  # tile rows + block
+    s_dec_b = amax_b / E2M1_MAX
+    s_e4m3 = e4m3_rtn(s_dec_b * s_enc)
+    denom = s_e4m3 * s_dec
+    s_enc_b = jnp.where(denom > 0, 1.0 / jnp.maximum(denom, 1e-45), 0.0)
+    scaled = xb * s_enc_b
+    if rounding == "rtn":
+        q = e2m1_rtn(scaled)
+    else:
+        assert u is not None
+        u_p = (
+            jnp.concatenate(
+                [u, jnp.zeros((*u.shape[:-2], pad, u.shape[-1]), u.dtype)], axis=-2
+            )
+            if pad
+            else u
+        )
+        ub = u_p.reshape(xb.shape)
+        q = e2m1_sr(scaled, ub)
+    deq = (q * (s_e4m3 * s_dec)).reshape(x_p.shape)
+    return deq[..., :m, :]
+
+
+def ftz_ratio(x):
+    """Flush-to-zero ratio: fraction of nonzero inputs that quantize to 0."""
+    deq = nvfp4_quant_dequant(x)
+    nz = x != 0.0
+    flushed = jnp.logical_and(nz, deq == 0.0)
+    return jnp.sum(flushed) / jnp.maximum(jnp.sum(nz), 1)
+
+
+# --------------------------------------------------------------------------
+# MXFP4 baseline (power-of-two E8M0 block scales, Quartet-style)
+# --------------------------------------------------------------------------
+
+def mxfp4_quant_dequant(x):
+    """MXFP4: 32-wide blocks, power-of-two (E8M0) decode scales, no global.
+
+    OCP MX spec semantics: shared exponent = floor(log2(amax)) - emax_elem
+    (emax of E2M1 is 2), i.e. s_dec = 2^(floor(log2 amax) - 2). Block values
+    land in [0, 8)·s_dec, so magnitudes in (6, 8)·s_dec saturate to 6 —
+    the clamping NVFP4's finer e4m3 scale avoids.
+    """
+    blk = 32
+    assert x.shape[-1] % blk == 0
+    xb = x.reshape(*x.shape[:-1], x.shape[-1] // blk, blk)
+    amax_b = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # frexp: amax = m * 2^e, m in [0.5,1) => floor(log2 amax) = e - 1
+    _, e = jnp.frexp(jnp.where(amax_b > 0, amax_b, 1.0))
+    s_dec_b = jnp.exp2((e - 1 - 2).astype(jnp.float32))
+    q = e2m1_rtn(xb / s_dec_b)
+    deq = jnp.where(amax_b > 0, q * s_dec_b, 0.0)
+    return deq.reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# Randomized Hadamard Transform (backward path, Wgrad only)
+# --------------------------------------------------------------------------
+
+def fwht(x):
+    """Fast Walsh–Hadamard transform over the last dim (power of 2).
+
+    Unnormalized: fwht(fwht(x)) == n * x. Orthogonal up to sqrt(n).
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT size {n} not a power of 2"
+    lead = x.shape[:-1]
+    y = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        y = y.reshape(-1, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+        h *= 2
+    return y.reshape(*lead, n)
+
+
+def rht(x, signs):
+    """Randomized Hadamard: orthonormal H @ diag(signs) @ x over last dim.
+
+    ``signs`` in {-1, +1}, shape (n,). Inverse is rht_inv.
+    """
+    n = x.shape[-1]
+    return fwht(x * signs) / jnp.sqrt(jnp.asarray(n, x.dtype))
+
+
+def rht_inv(y, signs):
+    n = y.shape[-1]
+    return signs * fwht(y) / jnp.sqrt(jnp.asarray(n, y.dtype))
+
+
+# --------------------------------------------------------------------------
+# Hot-Channel Patch oracle (Sec. 4 + App. A/B)
+# --------------------------------------------------------------------------
+
+def hcp_scores(dx, dw):
+    """Channel importance score, Eq. (2): s_j = mean|ΔX_:,j| + mean|ΔW_j,:|.
+
+    dx: (M, K) activation residual (channels along K);
+    dw: (K, N) weight residual (channels along K).
+    Returns (K,) scores.
+    """
+    sx = jnp.mean(jnp.abs(dx), axis=tuple(range(dx.ndim - 1)))
+    sw = jnp.mean(jnp.abs(dw), axis=tuple(range(1, dw.ndim)))
+    return sx + sw
+
+
+def topk_channels(scores, k):
+    """Indices of the k largest scores (the hot-channel set I).
+
+    Sort-based (not lax.top_k): the runtime's XLA 0.5.1 HLO parser predates
+    the TopK custom attribute, while `sort` round-trips fine.
+    """
+    return jnp.argsort(-scores)[:k]
+
+
+def hcp_matmul(x, w, k, order="o2", target="b", rounding="rtn", u=None, idx=None):
+    """Reference patched matmul: Y ≈ x @ w with NVFP4 fake quant + HCP.
+
+    x: (M, K), w: (K, N), channels along K. k = |I| patched channels.
+    order: "o2" (both-sided on I), "o1a"/"o1w" (single-sided first order),
+    or "none" (plain quantized baseline). ``target`` narrows o2 to W/A/B.
+    Returns (y, idx) — idx is the channel set used (given or computed).
+    """
+    xq = nvfp4_quant_dequant(x, rounding=rounding, u=u)
+    wq = nvfp4_quant_dequant_2d(w.T).T  # 2D scaling along w's K-dim blocks
+    dx = x - xq
+    dw = w - wq
+    if idx is None:
+        idx = topk_channels(hcp_scores(dx, dw), k)
+    y = xq @ wq
+    if order == "o2":
+        if target in ("b", "a"):
+            y = y + dx[:, idx] @ wq[idx, :]
+        if target in ("b", "w"):
+            y = y + xq[:, idx] @ dw[idx, :]
+    elif order == "o1a":
+        # full activation patch on I: replaces X̂_I with X_I against Ŵ
+        y = y + dx[:, idx] @ wq[idx, :]
+    elif order == "o1w":
+        y = y + xq[:, idx] @ dw[idx, :]
+    elif order == "none":
+        pass
+    else:  # pragma: no cover
+        raise ValueError(order)
+    return y, idx
+
+
+# --------------------------------------------------------------------------
+# Diagnostics oracles (Sec. 3 definitions)
+# --------------------------------------------------------------------------
+
+def kurtosis(x):
+    """Excess kurtosis (Eq. 1) of the flattened tensor."""
+    x = x.reshape(-1).astype(jnp.float32)
+    mu = jnp.mean(x)
+    d = x - mu
+    var = jnp.mean(d * d)
+    m4 = jnp.mean(d**4)
+    return m4 / jnp.maximum(var * var, 1e-30) - 3.0
+
+
+def block_kurtosis(x, bm=16, bn=16):
+    """Per-(bm x bn)-block excess kurtosis map of a 2D tensor (Fig. 4)."""
+    m, n = x.shape
+    mm, nn = (m // bm) * bm, (n // bn) * bn
+    xb = x[:mm, :nn].reshape(mm // bm, bm, nn // bn, bn).transpose(0, 2, 1, 3)
+    xb = xb.reshape(mm // bm, nn // bn, bm * bn)
+    mu = jnp.mean(xb, axis=-1, keepdims=True)
+    d = xb - mu
+    var = jnp.mean(d * d, axis=-1)
+    m4 = jnp.mean(d**4, axis=-1)
+    return m4 / jnp.maximum(var * var, 1e-30) - 3.0
+
+
+def topk_magnitude(x, k=3):
+    """Top-k |x| over the flattened tensor (Fig. 6a / 21). Sort-based —
+    see topk_channels for why lax.top_k is avoided."""
+    return -jnp.sort(-jnp.abs(x).reshape(-1))[:k]
+
+
+def channel_topk_magnitude(x, k=3):
+    """Per-channel max magnitude, then top-k channels (Fig. 3 hot channels)."""
+    cm = jnp.max(jnp.abs(x), axis=tuple(range(x.ndim - 1)))
+    idx = jnp.argsort(-cm)[:k]
+    return cm[idx], idx
+
+
+def softmax_entropy(logits):
+    """Mean post-softmax entropy over the last axis (Fig. 7)."""
+    p = jax.nn.softmax(logits, axis=-1)
+    h = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-30)), axis=-1)
+    return jnp.mean(h)
+
+
+def cosine_alignment(w_up, w_gate):
+    """Mean |cos| row alignment between W_up and W_gate (Fig. 8)."""
+    num = jnp.abs(jnp.sum(w_up * w_gate, axis=-1))
+    den = jnp.linalg.norm(w_up, axis=-1) * jnp.linalg.norm(w_gate, axis=-1)
+    return jnp.mean(num / jnp.maximum(den, 1e-30))
+
+
+def quant_mse(x, rounding="rtn", u=None):
+    """Mean squared NVFP4 quantization error of a tensor (Fig. 32)."""
+    deq = nvfp4_quant_dequant(x, rounding=rounding, u=u)
+    return jnp.mean((x - deq) ** 2)

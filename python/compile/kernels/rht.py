@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: Randomized Hadamard Transform (backward / Wgrad path).
+
+The FWHT butterfly runs entirely inside one VMEM row tile: for a (bm, n)
+block the kernel performs log2(n) reshape-free butterfly stages. On real
+TPU hardware each stage is a lane shuffle within the 8x128 register tile
+(n <= 128) or a VMEM-local permutation; here (interpret=True) it lowers to
+plain HLO slices/concats.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .nvfp4 import INTERPRET, _pick_block_rows
+
+
+def _rht_kernel(x_ref, sign_ref, o_ref, *, inverse):
+    x = x_ref[...]
+    s = sign_ref[...].reshape(-1)
+    bm, n = x.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(n, jnp.float32))
+    if not inverse:
+        y = x * s[None, :]
+    else:
+        y = x
+    h = 1
+    while h < n:
+        y = y.reshape(bm, n // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2).reshape(bm, n)
+        h *= 2
+    y = y * scale
+    if inverse:
+        y = y * s[None, :]
+    o_ref[...] = y
+
+
+def rht(x, signs, *, inverse: bool = False, block_rows: int = 8):
+    """Orthonormal randomized Hadamard over the last dim (Pallas kernel).
+
+    Matches ref.rht / ref.rht_inv. x: (M, N) with N a power of two;
+    signs: (N,) in {-1, +1}.
+    """
+    assert x.ndim == 2
+    m, n = x.shape
+    assert n & (n - 1) == 0, f"RHT size {n} not a power of 2"
+    bm = _pick_block_rows(m, block_rows)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_rht_kernel, inverse=inverse),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), signs.astype(jnp.float32).reshape(1, n))

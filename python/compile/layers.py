@@ -1,0 +1,105 @@
+"""L2 shared layers: RMSNorm, SwiGLU FFN, embeddings, AdamW, schedules.
+
+Everything here is recipe-aware: linear projections route through
+``quant.qlinear`` with a per-operator OpQuant resolved by the recipe
+(embeddings, norms and the LM head always stay in high precision, per the
+NVIDIA NVFP4 recipe and App. C.3 "Sensitive Ops in higher precision").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    """RMSNorm with learnable scale γ (the Fig. 29 analysis object)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def swiglu_ffn(x, p, keys, cfgs, collect=None, tag=""):
+    """SwiGLU FFN: (x W_up) ⊙ Swish(x W_gate) W_down (Sec. 3.2).
+
+    p: dict with w_up (D,F), w_gate (D,F), w_down (F,D).
+    keys/cfgs: per-op PRNG keys and OpQuant configs keyed 'up','gate','down'.
+    collect: optional dict to stash probe activations into (diag path).
+    """
+    up = quant.qlinear(x, p["w_up"], keys["up"], cfgs["up"])
+    gate = quant.qlinear(x, p["w_gate"], keys["gate"], cfgs["gate"])
+    act = up * jax.nn.silu(gate)
+    down = quant.qlinear(act, p["w_down"], keys["down"], cfgs["down"])
+    if collect is not None:
+        collect[f"{tag}mlp.u"] = up
+        collect[f"{tag}mlp.g"] = gate
+        collect[f"{tag}mlp.d"] = down
+    return down
+
+
+def embed(tokens, table):
+    """Token embedding lookup (always high precision)."""
+    return table[tokens]
+
+
+def lm_head(x, w):
+    """Vocabulary projection (always high precision — final-layer rule)."""
+    return x @ w
+
+
+def cross_entropy(logits, targets):
+    """Mean next-token cross-entropy. logits: (B,T,V); targets: (B,T)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# AdamW + cosine schedule (in-graph training substrate)
+# --------------------------------------------------------------------------
+
+def cosine_lr(step, peak_lr, warmup, total, min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio * peak (paper setup)."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), gn
+
+
+def adamw_update(params, grads, m, v, step, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    """One AdamW step (decoupled weight decay; paper hyperparameters)."""
+    step_f = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**step_f
+    bc2 = 1.0 - b2**step_f
+
+    def upd(p, g, m_, v_):
+        m2 = b1 * m_ + (1 - b1) * g
+        v2 = b2 * v_ + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return p2, m2, v2
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, new_m, new_v

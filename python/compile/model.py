@@ -1,0 +1,345 @@
+"""L2 model orchestrator: GLA / SA language models, training, diagnostics.
+
+Defines the jax functions that aot.py lowers to HLO-text artifacts:
+
+  init_fn    (seed)                                   -> params
+  train_fn   (params, m, v, step, tokens, tgts, seed) -> (params', m', v',
+                                                          loss, gnorm, lr)
+  eval_fn    (params, tokens, tgts)                   -> (loss, acc)
+  fwd_fn     (params, tokens)                         -> logits
+  diag_fn    (params, tokens, seed)                   -> (metric vector,
+                                                          channel-mag maps)
+
+The diag vector's slot names come from ``diag_schema`` and are written to
+the artifact manifest so the Rust monitor decodes the longitudinal series
+without any Python on the request path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, quant, recipe as recipe_mod
+from .gla import GLA_OPS, gla_attention
+from .kernels import ref
+from .softmax_attn import SA_OPS, softmax_attention
+
+
+class ModelConfig(NamedTuple):
+    name: str = "tiny_gla"
+    arch: str = "gla"            # "gla" | "sa"
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 176              # ~2.75x, multiple of 16
+    seq_len: int = 64
+    batch: int = 4
+    gate_gamma: float = 16.0
+    qk_norm: bool = True
+
+
+class HyperConfig(NamedTuple):
+    peak_lr: float = 1e-3
+    warmup: int = 50
+    total_steps: int = 400
+    weight_decay: float = 0.1
+    clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+
+
+MLP_OPS = ("mlp.up", "mlp.gate", "mlp.down")
+
+
+def arch_ops(arch: str) -> tuple[str, ...]:
+    base = GLA_OPS if arch == "gla" else SA_OPS
+    return tuple(base) + MLP_OPS
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the parameter pytree (dict-of-lists, deterministic order)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    ks = iter(jax.random.split(key, 4 + cfg.n_layers * 16))
+
+    def dense(shape, scale=0.02):
+        return jax.random.normal(next(ks), shape, jnp.float32) * scale
+
+    out_scale = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    layers_p = []
+    for _ in range(cfg.n_layers):
+        p = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense((d, d)),
+            "wk": dense((d, d)),
+            "wv": dense((d, d)),
+            "wo": dense((d, d), out_scale),
+            "w_up": dense((d, f)),
+            "w_gate": dense((d, f)),
+            "w_down": dense((f, d), out_scale),
+        }
+        if cfg.arch == "gla":
+            p["wgk"] = dense((d, d))
+            p["wg"] = dense((d, d))
+            # Spread initial decays: biases in [0, 3] -> λ ∈ (0.96, 0.996)
+            p["gk_bias"] = jnp.linspace(0.0, 3.0, d, dtype=jnp.float32)
+        else:
+            dk = d // cfg.n_heads
+            p["q_norm"] = jnp.ones((dk,), jnp.float32)
+            p["k_norm"] = jnp.ones((dk,), jnp.float32)
+        layers_p.append(p)
+    return {
+        "embed": dense((v, d)),
+        "layers": layers_p,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense((d, v)),
+    }
+
+
+def zeros_like_tree(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _op_param_map(arch: str) -> dict[str, str]:
+    m = {
+        "attn.q": "wq", "attn.k": "wk", "attn.v": "wv", "attn.o": "wo",
+        "mlp.up": "w_up", "mlp.gate": "w_gate", "mlp.down": "w_down",
+    }
+    if arch == "gla":
+        m.update({"attn.gk": "wgk", "attn.g": "wg"})
+    return m
+
+
+def forward(params, tokens, key, cfg: ModelConfig, rcp, collect=None,
+            op_cfg_override=None):
+    """LM forward pass. tokens: (B, T) int32 -> logits (B, T, V).
+
+    op_cfg_override: optional (arch, layer, n_layers, op) -> OpQuant used by
+    the Tab. 3 single-operator sensitivity runs.
+    """
+    ops = arch_ops(cfg.arch)
+    x = layers.embed(tokens, params["embed"])
+    for li, p in enumerate(params["layers"]):
+        if op_cfg_override is None:
+            cfgs = recipe_mod.layer_cfgs(rcp, cfg.arch, li, cfg.n_layers, ops)
+        else:
+            cfgs = {op: op_cfg_override(cfg.arch, li, cfg.n_layers, op)
+                    for op in ops}
+        keys = {
+            op: jax.random.fold_in(key, li * 131 + oi)
+            for oi, op in enumerate(ops)
+        }
+        tag = f"L{li}."
+        h = layers.rmsnorm(x, p["attn_norm"])
+        if cfg.arch == "gla":
+            attn_keys = {k: keys[k] for k in GLA_OPS}
+            attn_cfgs = {k: cfgs[k] for k in GLA_OPS}
+            a = gla_attention(
+                h, p, attn_keys, attn_cfgs, n_heads=cfg.n_heads,
+                gate_gamma=cfg.gate_gamma, collect=collect, tag=tag,
+            )
+        else:
+            attn_keys = {k: keys[k] for k in SA_OPS}
+            attn_cfgs = {k: cfgs[k] for k in SA_OPS}
+            a = softmax_attention(
+                h, p, attn_keys, attn_cfgs, n_heads=cfg.n_heads,
+                qk_norm=cfg.qk_norm, collect=collect, tag=tag,
+            )
+        x = x + a
+        h = layers.rmsnorm(x, p["ffn_norm"])
+        ffn_keys = {k.split(".")[1]: keys[k] for k in MLP_OPS}
+        ffn_cfgs = {k.split(".")[1]: cfgs[k] for k in MLP_OPS}
+        x = x + layers.swiglu_ffn(
+            h, p, ffn_keys, ffn_cfgs, collect=collect, tag=tag
+        )
+    x = layers.rmsnorm(x, params["final_norm"])
+    return layers.lm_head(x, params["lm_head"])
+
+
+def loss_fn(params, tokens, targets, key, cfg, rcp, op_cfg_override=None):
+    logits = forward(params, tokens, key, cfg, rcp,
+                     op_cfg_override=op_cfg_override)
+    return layers.cross_entropy(logits, targets)
+
+
+# --------------------------------------------------------------------------
+# Training / eval steps (the AOT units)
+# --------------------------------------------------------------------------
+
+def make_train_fn(cfg: ModelConfig, rcp, hyper: HyperConfig,
+                  op_cfg_override=None):
+    """Build train_step(params, m, v, step, tokens, targets, seed)."""
+
+    def train_step(params, m, v, step, tokens, targets, seed):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+        key = jax.random.fold_in(key, step)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, key, cfg, rcp, op_cfg_override
+        )
+        grads, gnorm = layers.clip_by_global_norm(grads, hyper.clip)
+        lr = layers.cosine_lr(step, hyper.peak_lr, hyper.warmup,
+                              hyper.total_steps)
+        params, m, v = layers.adamw_update(
+            params, grads, m, v, step, lr=lr, b1=hyper.b1, b2=hyper.b2,
+            weight_decay=hyper.weight_decay,
+        )
+        return params, m, v, loss, gnorm, lr
+
+    return train_step
+
+
+def make_eval_fn(cfg: ModelConfig, rcp):
+    def eval_step(params, tokens, targets):
+        key = jax.random.PRNGKey(0)  # fwd path has no stochastic ops
+        logits = forward(params, tokens, key, cfg, rcp)
+        loss = layers.cross_entropy(logits, targets)
+        pred = jnp.argmax(logits, axis=-1)
+        acc = jnp.mean((pred == targets).astype(jnp.float32))
+        return loss, acc
+
+    return eval_step
+
+
+def make_fwd_fn(cfg: ModelConfig, rcp):
+    def fwd(params, tokens):
+        key = jax.random.PRNGKey(0)
+        return forward(params, tokens, key, cfg, rcp)
+
+    return fwd
+
+
+# --------------------------------------------------------------------------
+# Diagnostics (the Sec. 3 longitudinal monitor payload)
+# --------------------------------------------------------------------------
+
+ACT_STATS = ("kurt", "top1", "top3", "ftz", "qmse", "bkmin", "bkavg", "bkmax")
+WT_STATS = ("kurt", "ftz", "qmse")
+
+
+def diag_schema(cfg: ModelConfig) -> list[str]:
+    """Names for every slot of the diag metric vector, in order."""
+    ops = arch_ops(cfg.arch)
+    names = []
+    for li in range(cfg.n_layers):
+        for op in ops:
+            for s in ACT_STATS:
+                names.append(f"L{li}.{op}.act.{s}")
+        for op in ops:
+            for s in WT_STATS:
+                names.append(f"L{li}.{op}.wt.{s}")
+        names.append(f"L{li}.mlp.alignment")
+        if cfg.arch == "sa":
+            names.append(f"L{li}.attn.presoftmax.kurt")
+            names.append(f"L{li}.attn.presoftmax.max")
+            names.append(f"L{li}.attn.postsoftmax.entropy")
+    return names
+
+
+# map op name -> collect tag used inside the blocks
+_COLLECT_KEY = {
+    "attn.q": "attn.q", "attn.k": "attn.k", "attn.v": "attn.v",
+    "attn.gk": "attn.gk", "attn.g": "attn.g", "attn.o": "attn.o",
+    "mlp.up": "mlp.u", "mlp.gate": "mlp.g", "mlp.down": "mlp.d",
+}
+
+
+def _act_stats(a):
+    a2 = a.reshape(-1, a.shape[-1]).astype(jnp.float32)
+    top = ref.topk_magnitude(a2, 3)
+    # 16x16 block kurtosis map (Fig. 4): min/avg/max summary in-graph
+    bk = ref.block_kurtosis(a2)
+    return [
+        ref.kurtosis(a2),
+        top[0],
+        top[2],
+        ref.ftz_ratio(a2),
+        ref.quant_mse(a2),
+        jnp.min(bk),
+        jnp.mean(bk),
+        jnp.max(bk),
+    ]
+
+
+def _wt_stats(w):
+    w2 = w.reshape(-1, w.shape[-1]).astype(jnp.float32)
+    return [ref.kurtosis(w2), ref.ftz_ratio(w2), ref.quant_mse(w2)]
+
+
+def make_diag_fn(cfg: ModelConfig, rcp):
+    """diag(params, tokens, seed) -> (metrics, chan_o, chan_up[, chan_gk])."""
+    ops = arch_ops(cfg.arch)
+    pmap = _op_param_map(cfg.arch)
+
+    def diag(params, tokens, seed):
+        key = jax.random.fold_in(jax.random.PRNGKey(1), seed)
+        collect: dict = {}
+        forward(params, tokens, key, cfg, rcp, collect=collect)
+        vals = []
+        chan_o, chan_up, chan_gk = [], [], []
+        for li in range(cfg.n_layers):
+            tag = f"L{li}."
+            for op in ops:
+                vals.extend(_act_stats(collect[tag + _COLLECT_KEY[op]]))
+            for op in ops:
+                vals.extend(_wt_stats(params["layers"][li][pmap[op]]))
+            vals.append(
+                ref.cosine_alignment(
+                    params["layers"][li]["w_up"].T,
+                    params["layers"][li]["w_gate"].T,
+                )
+            )
+            if cfg.arch == "sa":
+                import numpy as _np
+
+                pre = collect[tag + "attn.presoftmax"]
+                post = collect[tag + "attn.postsoftmax"]
+                t = pre.shape[-1]
+                # concrete numpy mask: traced boolean indexing is not allowed
+                mask = _np.tril(_np.ones((t, t), bool))
+                flat = pre.reshape(-1, t, t)
+                sel = flat[:, mask]  # causal-valid logits only
+                vals.append(ref.kurtosis(sel))
+                vals.append(jnp.max(jnp.abs(pre)))
+                p = post
+                h = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-30)), axis=-1)
+                vals.append(jnp.mean(h))
+            # per-channel max |act| maps (Fig. 3 hot channels)
+            co = collect[tag + "attn.o"]
+            cu = collect[tag + "mlp.u"]
+            chan_o.append(jnp.max(jnp.abs(co.reshape(-1, co.shape[-1])), axis=0))
+            chan_up.append(jnp.max(jnp.abs(cu.reshape(-1, cu.shape[-1])), axis=0))
+            if cfg.arch == "gla":
+                cg = collect[tag + "attn.gk"]
+                chan_gk.append(
+                    jnp.max(jnp.abs(cg.reshape(-1, cg.shape[-1])), axis=0)
+                )
+        metrics = jnp.stack([jnp.asarray(v, jnp.float32) for v in vals])
+        outs = [metrics, jnp.stack(chan_o), jnp.stack(chan_up)]
+        if cfg.arch == "gla":
+            outs.append(jnp.stack(chan_gk))
+        return tuple(outs)
+
+    return diag

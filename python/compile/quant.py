@@ -1,0 +1,196 @@
+"""L2 quantized-training primitives: the CHON linear layer.
+
+Implements the paper's computational workflow (Fig. 9) as a
+``jax.custom_vjp`` so one linear layer carries the whole recipe:
+
+  forward (Fprop):   Y  = Q_rtn(X) @ Q_rtn2d(W)      [+ HCP compensation]
+  backward (Dgrad):  dX = Q_sr(dY) @ Q(W)^T
+  backward (Wgrad):  dW = Q_sr(H·X)^T @ Q_sr(H·dY)   [RHT along the
+                                                      contraction dim]
+
+Quantizers are NVFP4 fake-quant (bit-faithful values + scales, high
+precision GEMM — the paper's own ablation methodology, App. C.3), FP8
+(per-tensor e4m3) for the FP8 baseline, or identity for BF16.
+
+Gradients use the straight-through estimator for the fake-quant itself;
+gradient *tensors* are re-quantized per the recipe before the backward
+GEMMs, which is what distinguishes Dgrad/Wgrad precision in Fig. 9.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hcp as hcp_kernels
+from .kernels import nvfp4 as nvfp4_kernels
+from .kernels import ref
+from .kernels import rht as rht_kernels
+
+
+class OpQuant(NamedTuple):
+    """Per-operator quantization config (hashable; nondiff custom_vjp arg).
+
+    mode: "bf16" | "fp8" | "nvfp4"
+    scaling_2d: 2D (16x16) block scaling for weights (NVIDIA recipe (ii))
+    sr: stochastic rounding for backward-pass tensors
+    rht: randomized Hadamard transform on the Wgrad contraction dim
+    hcp_frac: fraction of channels patched by HCP (0 disables; paper: 9.09%)
+    use_pallas: route fwd activation quant + HCP GEMM through the L1
+        Pallas kernels (numerically identical to the jnp oracle)
+    """
+
+    mode: str = "nvfp4"
+    scaling_2d: bool = True
+    sr: bool = True
+    rht: bool = True
+    hcp_frac: float = 0.0
+    use_pallas: bool = False
+
+
+BF16 = OpQuant(mode="bf16")
+FP8 = OpQuant(mode="fp8")
+
+
+def _qdq_act(x2, cfg: OpQuant, *, u=None):
+    """Quantize-dequantize a 2D activation/grad (1D 1x16 block scaling)."""
+    if cfg.mode == "bf16":
+        return x2
+    if cfg.mode == "fp8":
+        amax = jnp.max(jnp.abs(x2))
+        s = jnp.where(amax > 0, ref.E4M3_MAX / amax, 1.0)
+        return ref.e4m3_rtn(x2 * s) / s
+    if u is not None:
+        return ref.nvfp4_quant_dequant(x2, rounding="sr", u=u)
+    if cfg.use_pallas:
+        return nvfp4_kernels.nvfp4_qdq(x2)
+    return ref.nvfp4_quant_dequant(x2)
+
+
+def _qdq_weight(w, cfg: OpQuant):
+    """Quantize-dequantize a (K, N) weight; block scales along K."""
+    if cfg.mode == "bf16":
+        return w
+    if cfg.mode == "fp8":
+        amax = jnp.max(jnp.abs(w))
+        s = jnp.where(amax > 0, ref.E4M3_MAX / amax, 1.0)
+        return ref.e4m3_rtn(w * s) / s
+    if cfg.scaling_2d:
+        if cfg.use_pallas:
+            return nvfp4_kernels.nvfp4_qdq_2d(w.T).T
+        return ref.nvfp4_quant_dequant_2d(w.T).T
+    if cfg.use_pallas:
+        return nvfp4_kernels.nvfp4_qdq(w.T).T
+    return ref.nvfp4_quant_dequant(w.T).T
+
+
+def _hcp_k(cfg: OpQuant, kdim: int) -> int:
+    if cfg.mode != "nvfp4" or cfg.hcp_frac <= 0.0:
+        return 0
+    return max(1, int(round(cfg.hcp_frac * kdim)))
+
+
+def _forward_2d(x2, w, cfg: OpQuant):
+    """Quantized forward product on flattened (M, K) @ (K, N)."""
+    if cfg.mode == "bf16":
+        return x2 @ w
+    xq = _qdq_act(x2, cfg)
+    wq = _qdq_weight(w, cfg)
+    k = _hcp_k(cfg, x2.shape[-1])
+    if k == 0:
+        return xq @ wq
+    dx = x2 - xq
+    dw = w - wq
+    idx = ref.topk_channels(ref.hcp_scores(dx, dw), k)
+    if cfg.use_pallas:
+        return hcp_kernels.hcp_gemm_fused(
+            xq, wq, dx[:, idx], wq[idx, :], xq[:, idx], dw[idx, :]
+        )
+    return xq @ wq + dx[:, idx] @ wq[idx, :] + xq[:, idx] @ dw[idx, :]
+
+
+def _bwd_quant(g2, cfg: OpQuant, key):
+    """Backward-tensor quantization: SR if enabled, else RTN (1D scaling)."""
+    if cfg.mode != "nvfp4":
+        return _qdq_act(g2, cfg)
+    if cfg.sr:
+        u = jax.random.uniform(key, g2.shape, jnp.float32)
+        return ref.nvfp4_quant_dequant(g2, rounding="sr", u=u)
+    return ref.nvfp4_quant_dequant(g2)
+
+
+def _maybe_rht(a2, b2, cfg: OpQuant, key):
+    """Apply the orthonormal RHT along the (power-of-2) contraction dim of
+    Wgrad: dW = (H·X)^T (H·dY) == X^T dY exactly before quantization."""
+    m = a2.shape[0]
+    if not cfg.rht or cfg.mode != "nvfp4" or (m & (m - 1)) != 0:
+        return a2, b2
+    signs = jnp.where(
+        jax.random.bernoulli(key, 0.5, (m,)), 1.0, -1.0
+    ).astype(jnp.float32)
+    # Transform columns (the contraction dim): work on transposed views.
+    if cfg.use_pallas:
+        ar = rht_kernels.rht(a2.T, signs).T
+        br = rht_kernels.rht(b2.T, signs).T
+    else:
+        ar = ref.rht(a2.T, signs).T
+        br = ref.rht(b2.T, signs).T
+    return ar, br
+
+
+def qlinear(x, w, key, cfg: OpQuant):
+    """Quantized linear y = x @ w with the CHON fwd/bwd recipe.
+
+    x: (..., K); w: (K, N); key: PRNG key consumed by SR/RHT in backward.
+    """
+    return _qlinear(x, w, key, cfg)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _qlinear(x, w, key, cfg):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _forward_2d(x2, w, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _qlinear_fwd(x, w, key, cfg):
+    return _qlinear(x, w, key, cfg), (x, w, key)
+
+
+def _qlinear_bwd(cfg, res, gy):
+    x, w, key = res
+    lead = x.shape[:-1]
+    kdim, n = w.shape
+    x2 = x.reshape(-1, kdim)
+    g2 = gy.reshape(-1, n).astype(jnp.float32)
+    k_dgrad, k_wgrad_a, k_wgrad_b, k_rht = jax.random.split(key, 4)
+    if cfg.mode == "bf16":
+        dx = (g2 @ w.T).reshape(x.shape)
+        dw = x2.T @ g2
+        return dx, dw, None
+    # Dgrad: dX = Q(dY) Q(W)^T
+    gq = _bwd_quant(g2, cfg, k_dgrad)
+    wq = _qdq_weight(w, cfg)
+    dx = (gq @ wq.T).reshape(x.shape)
+    # Wgrad: dW = Q(H X)^T Q(H dY) — RHT diffuses sparse outliers (App. C.3)
+    xr, gr = _maybe_rht(x2.astype(jnp.float32), g2, cfg, k_rht)
+    xrq = _bwd_quant(xr, cfg, k_wgrad_a)
+    grq = _bwd_quant(gr, cfg, k_wgrad_b)
+    dw = xrq.T @ grq
+    return dx, dw, None
+
+
+_qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)
+
+
+def fp8_qdq(x):
+    """Per-tensor FP8 (e4m3) fake quantization, exposed for diagnostics."""
+    amax = jnp.max(jnp.abs(x))
+    s = jnp.where(amax > 0, ref.E4M3_MAX / amax, 1.0)
+    return ref.e4m3_rtn(x * s) / s

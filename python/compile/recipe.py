@@ -1,0 +1,121 @@
+"""CHON / NVFP4 / BF16 recipe configs and per-operator precision assignment.
+
+A Recipe is the Tab. 2 ablation unit. ``op_quant`` maps (recipe, layer,
+op) -> OpQuant, encoding:
+
+  * last-N-layer protection (NVIDIA recipe (i); "Last4" discussion §F.2)
+  * post-QK protection (CHON): W_o + W_gk for LA, W_v for SA in BF16
+  * SR / RHT / 2D-scaling toggles (recipe (iii)/(ii))
+  * HCP channel fraction (paper: 9.09% of channels)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from .quant import BF16, OpQuant
+
+
+class Recipe(NamedTuple):
+    name: str = "nvfp4"
+    mode: str = "nvfp4"          # bf16 | fp8 | nvfp4
+    sr: bool = True              # stochastic rounding in backward
+    rht: bool = True             # randomized Hadamard on Wgrad
+    scaling_2d: bool = True      # 2D weight block scaling
+    hcp_frac: float = 0.0        # HCP patched-channel fraction
+    protect_last: int = 0        # keep last N layers fully BF16
+    post_qk: bool = False        # protect post-QK ops (W_o/W_gk LA, W_v SA)
+    use_pallas: bool = False     # route through L1 Pallas kernels
+
+
+# The Tab. 2 ablation grid (+ baselines used by Tab. 1 / Tab. 8).
+# protect_last is expressed in layers; aot.py clamps it to n_layers - 1.
+HCP_FRAC = 0.0909  # 9.09% of channels (App. C.1)
+
+
+def recipes(protect_last: int = 1) -> dict[str, Recipe]:
+    pl = protect_last
+    return {
+        "bf16": Recipe("bf16", mode="bf16"),
+        "fp8": Recipe("fp8", mode="fp8"),
+        # NVIDIA et al. 2025 baseline recipe
+        "nvfp4": Recipe("nvfp4", protect_last=pl),
+        # full CHON = NVFP4 + HCP + post-QK protection
+        "chon": Recipe(
+            "chon", hcp_frac=HCP_FRAC, protect_last=pl, post_qk=True,
+            use_pallas=True,
+        ),
+        "chon_no_sr": Recipe(
+            "chon_no_sr", sr=False, hcp_frac=HCP_FRAC, protect_last=pl,
+            post_qk=True,
+        ),
+        "chon_no_rht": Recipe(
+            "chon_no_rht", rht=False, hcp_frac=HCP_FRAC, protect_last=pl,
+            post_qk=True,
+        ),
+        "chon_no_2d": Recipe(
+            "chon_no_2d", scaling_2d=False, hcp_frac=HCP_FRAC,
+            protect_last=pl, post_qk=True,
+        ),
+        "chon_no_sr_rht": Recipe(
+            "chon_no_sr_rht", sr=False, rht=False, hcp_frac=HCP_FRAC,
+            protect_last=pl, post_qk=True,
+        ),
+        "chon_no_last4": Recipe(
+            "chon_no_last4", hcp_frac=HCP_FRAC, protect_last=0, post_qk=True,
+        ),
+        # HCP without post-QK protection and without RHT
+        # (Tab. 2 row "w/o chon, rht")
+        "hcp_no_postqk_rht": Recipe(
+            "hcp_no_postqk_rht", rht=False, hcp_frac=HCP_FRAC, protect_last=pl,
+        ),
+        # NVFP4 + HCP only (isolates HCP's contribution)
+        "nvfp4_hcp": Recipe("nvfp4_hcp", hcp_frac=HCP_FRAC, protect_last=pl),
+    }
+
+
+# post-QK sensitive operators per architecture (Tab. 3 / Fig. 2)
+POST_QK_OPS = {
+    "gla": ("attn.o", "attn.gk"),
+    "sa": ("attn.v",),
+}
+
+
+def op_quant(recipe: Recipe, arch: str, layer: int, n_layers: int,
+             op: str) -> OpQuant:
+    """Resolve the OpQuant for one linear operator in one layer."""
+    if recipe.mode == "bf16":
+        return BF16
+    if recipe.protect_last > 0 and layer >= n_layers - recipe.protect_last:
+        return BF16
+    if recipe.post_qk and op in POST_QK_OPS.get(arch, ()):
+        return BF16
+    return OpQuant(
+        mode=recipe.mode,
+        scaling_2d=recipe.scaling_2d,
+        sr=recipe.sr,
+        rht=recipe.rht,
+        hcp_frac=recipe.hcp_frac,
+        use_pallas=recipe.use_pallas,
+    )
+
+
+def layer_cfgs(recipe: Recipe, arch: str, layer: int, n_layers: int,
+               ops: tuple[str, ...]) -> dict[str, OpQuant]:
+    return {op: op_quant(recipe, arch, layer, n_layers, op) for op in ops}
+
+
+def sensitivity_recipe(base: Recipe, quantize_only: str) -> Recipe:
+    """Tab. 3 operator-sensitivity mode: marker recipe that quantizes a
+    single operator, everything else BF16 (resolved in op_quant_single)."""
+    return base._replace(name=f"only_{quantize_only.replace('.', '_')}")
+
+
+def op_quant_single(recipe: Recipe, target_op: str, op: str) -> OpQuant:
+    """Per-op resolution for the single-operator sensitivity ablation."""
+    if op != target_op:
+        return BF16
+    return OpQuant(
+        mode=recipe.mode, scaling_2d=recipe.scaling_2d, sr=recipe.sr,
+        rht=recipe.rht, hcp_frac=recipe.hcp_frac, use_pallas=False,
+    )

@@ -1,0 +1,73 @@
+"""L2 Softmax Attention block (Qwen-style MHA, RoPE, optional QK-norm).
+
+This is the SA comparator of the paper's architecture study: the softmax
+normalization constraint is the outlier source (Sec. 3.2, Fig. 7), the
+value projection is the sensitive post-QK operator (Tab. 3). The diag path
+collects pre-softmax logits and post-softmax probabilities so the monitor
+can track pre-softmax kurtosis / max and post-softmax entropy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .layers import rmsnorm
+
+SA_OPS = ("attn.q", "attn.k", "attn.v", "attn.o")
+
+
+def rope(x, *, base: float = 10000.0):
+    """Rotary position embedding over head dim pairs. x: (B, T, H, dk)."""
+    b, t, h, dk = x.shape
+    half = dk // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    inv = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * inv  # (T, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def softmax_attention(x, p, keys, cfgs, *, n_heads, qk_norm=True,
+                      collect=None, tag=""):
+    """One causal MHA sub-block. x: (B, T, D); returns (B, T, D)."""
+    b, t, d = x.shape
+    h = n_heads
+    dk = d // h
+
+    q = quant.qlinear(x, p["wq"], keys["attn.q"], cfgs["attn.q"])
+    k = quant.qlinear(x, p["wk"], keys["attn.k"], cfgs["attn.k"])
+    v = quant.qlinear(x, p["wv"], keys["attn.v"], cfgs["attn.v"])
+    if collect is not None:
+        collect[f"{tag}attn.q"] = q
+        collect[f"{tag}attn.k"] = k
+        collect[f"{tag}attn.v"] = v
+
+    qh = q.reshape(b, t, h, dk)
+    kh = k.reshape(b, t, h, dk)
+    vh = v.reshape(b, t, h, dk)
+    if qk_norm:
+        # Qwen3-style per-head RMS QK normalization (outlier suppressor).
+        qh = rmsnorm(qh, p["q_norm"])
+        kh = rmsnorm(kh, p["k_norm"])
+    qh = rope(qh)
+    kh = rope(kh)
+
+    logits = jnp.einsum("bihd,bjhd->bhij", qh, kh) / jnp.sqrt(
+        jnp.asarray(dk, jnp.float32)
+    )
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if collect is not None:
+        # Probe only the causal-valid entries for entropy/kurtosis stats.
+        collect[f"{tag}attn.presoftmax"] = jnp.where(mask[None, None], logits, 0.0)
+        collect[f"{tag}attn.postsoftmax"] = probs
+    o = jnp.einsum("bhij,bjhd->bihd", probs, vh).reshape(b, t, d)
+    y = quant.qlinear(o, p["wo"], keys["attn.o"], cfgs["attn.o"])
+    if collect is not None:
+        collect[f"{tag}attn.o"] = y
+    return y

@@ -1,0 +1,98 @@
+"""Diagnostics oracles: kurtosis, entropy, alignment, top-k, block stats."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def test_gaussian_kurtosis_near_zero():
+    x = jnp.array(np.random.default_rng(0).normal(0, 1, 200_000), jnp.float32)
+    assert abs(float(ref.kurtosis(x))) < 0.15
+
+
+def test_laplace_kurtosis_near_three():
+    x = jnp.array(np.random.default_rng(1).laplace(0, 1, 200_000), jnp.float32)
+    assert abs(float(ref.kurtosis(x)) - 3.0) < 0.5
+
+
+def test_uniform_kurtosis_negative():
+    x = jnp.array(np.random.default_rng(2).uniform(-1, 1, 100_000), jnp.float32)
+    assert float(ref.kurtosis(x)) == pytest.approx(-1.2, abs=0.1)
+
+
+def test_outlier_raises_kurtosis():
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 1, 10_000).astype(np.float32)
+    k0 = float(ref.kurtosis(jnp.array(x)))
+    x[0] = 100.0
+    k1 = float(ref.kurtosis(jnp.array(x)))
+    assert k1 > k0 + 100
+
+
+def test_block_kurtosis_localizes_outlier():
+    rng = np.random.default_rng(4)
+    x = rng.normal(0, 1, (64, 64)).astype(np.float32)
+    x[3, 5] = 100.0  # block (0, 0)
+    bk = np.asarray(ref.block_kurtosis(jnp.array(x)))
+    assert bk.shape == (4, 4)
+    assert bk[0, 0] == bk.max()
+    assert bk[0, 0] > 50
+    # other blocks stay near gaussian
+    others = np.delete(bk.reshape(-1), 0)
+    assert np.all(np.abs(others) < 3)
+
+
+def test_block_kurtosis_truncates_ragged_edges():
+    x = jnp.array(np.random.default_rng(5).normal(0, 1, (33, 50)), jnp.float32)
+    bk = ref.block_kurtosis(x)
+    assert bk.shape == (2, 3)
+
+
+def test_topk_magnitude():
+    x = jnp.array([[1.0, -7.0], [3.0, 0.5]])
+    np.testing.assert_allclose(np.asarray(ref.topk_magnitude(x, 3)), [7.0, 3.0, 1.0])
+
+
+def test_channel_topk_magnitude():
+    x = np.ones((8, 4), np.float32)
+    x[2, 1] = -50.0
+    x[5, 3] = 20.0
+    vals, idx = ref.channel_topk_magnitude(jnp.array(x), 2)
+    np.testing.assert_allclose(np.asarray(vals), [50.0, 20.0])
+    np.testing.assert_array_equal(np.asarray(idx), [1, 3])
+
+
+def test_softmax_entropy_bounds():
+    # uniform logits -> ln(n); one-hot-ish -> ~0
+    n = 64
+    uni = jnp.zeros((4, n))
+    assert float(ref.softmax_entropy(uni)) == pytest.approx(np.log(n), rel=1e-5)
+    sharp = jnp.zeros((4, n)).at[:, 0].set(100.0)
+    assert float(ref.softmax_entropy(sharp)) < 1e-3
+
+
+def test_entropy_decreases_as_logits_sharpen():
+    """Fig. 7 mechanism: larger pre-softmax max -> lower entropy."""
+    rng = np.random.default_rng(6)
+    base = rng.normal(0, 1, (16, 128)).astype(np.float32)
+    ent = [
+        float(ref.softmax_entropy(jnp.array(base * t))) for t in (1.0, 2.0, 4.0, 8.0)
+    ]
+    assert all(a > b for a, b in zip(ent, ent[1:]))
+
+
+def test_cosine_alignment_identical_and_orthogonal():
+    w = jnp.array(np.random.default_rng(7).normal(0, 1, (32, 64)), jnp.float32)
+    assert float(ref.cosine_alignment(w, w)) == pytest.approx(1.0, abs=1e-5)
+    # random pairs: near zero on average
+    w2 = jnp.array(np.random.default_rng(8).normal(0, 1, (32, 64)), jnp.float32)
+    assert float(ref.cosine_alignment(w, w2)) < 0.3
+
+
+def test_quant_mse_scales_quadratically():
+    x = jnp.array(np.random.default_rng(9).normal(0, 1, (32, 64)), jnp.float32)
+    m1 = float(ref.quant_mse(x))
+    m2 = float(ref.quant_mse(x * 10.0))
+    assert m2 == pytest.approx(m1 * 100.0, rel=0.05)

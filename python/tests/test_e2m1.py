@@ -1,0 +1,118 @@
+"""E2M1 lattice unit tests: RTN tie behaviour, floor, SR unbiasedness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+ALL_CODES = sorted({s * v for v in ref.E2M1_VALUES for s in (1.0, -1.0)})
+
+
+def test_code_points_are_fixed_points():
+    v = jnp.array(ALL_CODES, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref.e2m1_rtn(v)), np.array(ALL_CODES))
+    np.testing.assert_array_equal(np.asarray(ref.e2m1_floor(v)), np.array(ALL_CODES))
+
+
+@pytest.mark.parametrize(
+    "x,expected",
+    [
+        (0.25, 0.0),   # tie -> even mantissa (0.0)
+        (0.75, 1.0),   # tie -> 1.0 (m=0)
+        (1.25, 1.0),
+        (1.75, 2.0),
+        (2.5, 2.0),
+        (3.5, 4.0),
+        (5.0, 4.0),
+        (0.26, 0.5),
+        (5.01, 6.0),
+        (100.0, 6.0),  # clamp
+        (-2.5, -2.0),
+        (-100.0, -6.0),
+    ],
+)
+def test_rtn_ties_to_even(x, expected):
+    assert float(ref.e2m1_rtn(jnp.float32(x))) == expected
+
+
+@pytest.mark.parametrize(
+    "x,expected",
+    [(0.49, 0.0), (0.99, 0.5), (1.99, 1.5), (2.99, 2.0), (3.99, 3.0), (5.99, 4.0)],
+)
+def test_floor_rounds_toward_zero(x, expected):
+    assert float(ref.e2m1_floor(jnp.float32(x))) == expected
+    assert float(ref.e2m1_floor(jnp.float32(-x))) == -expected
+
+
+def test_rtn_maps_to_lattice_everywhere():
+    rng = np.random.default_rng(0)
+    v = rng.uniform(-8, 8, size=4096).astype(np.float32)
+    out = np.asarray(ref.e2m1_rtn(jnp.array(v)))
+    assert set(np.unique(out)).issubset(set(ALL_CODES))
+
+
+def test_rtn_is_nearest():
+    rng = np.random.default_rng(1)
+    v = rng.uniform(-6, 6, size=2048).astype(np.float32)
+    out = np.asarray(ref.e2m1_rtn(jnp.array(v)))
+    codes = np.array(ALL_CODES)
+    nearest = np.min(np.abs(v[:, None] - codes[None, :]), axis=1)
+    np.testing.assert_allclose(np.abs(v - out), nearest, atol=1e-6)
+
+
+def test_sr_unbiased():
+    """E[SR(v)] == v within a tight CI for in-range values."""
+    rng = np.random.default_rng(2)
+    v = jnp.array([0.3, 1.2, 2.7, 4.5, -0.7, -3.3], jnp.float32)
+    n = 40000
+    u = jnp.array(rng.random((n, 6)).astype(np.float32))
+    samples = ref.e2m1_sr(jnp.broadcast_to(v, (n, 6)), u)
+    mean = np.asarray(jnp.mean(samples, axis=0))
+    # SE of the mean is < step/sqrt(n) ~ 0.01; allow 4 sigma.
+    np.testing.assert_allclose(mean, np.asarray(v), atol=0.04)
+
+
+def test_sr_lands_on_neighbours_only():
+    rng = np.random.default_rng(3)
+    v = rng.uniform(-6, 6, size=2048).astype(np.float32)
+    u = rng.random(2048).astype(np.float32)
+    out = np.asarray(ref.e2m1_sr(jnp.array(v), jnp.array(u)))
+    codes = np.array(ALL_CODES)
+    # every output is a code point within one lattice gap of the input
+    assert set(np.round(np.unique(out), 4)).issubset(set(codes))
+    assert np.all(np.abs(out - v) <= 2.0 + 1e-6)
+
+
+def test_e4m3_basics():
+    assert float(ref.e4m3_rtn(jnp.float32(448.0))) == 448.0
+    assert float(ref.e4m3_rtn(jnp.float32(1e9))) == 448.0  # saturate
+    assert float(ref.e4m3_rtn(jnp.float32(0.0))) == 0.0
+    # 3 mantissa bits at exponent 4: step = 2^(4-3) = 2, lattice {16, 18, ...};
+    # |-17.3| is nearer 18.
+    assert float(ref.e4m3_rtn(jnp.float32(-17.3))) == -18.0
+
+
+def test_e4m3_nearest_on_lattice():
+    # Build the positive e4m3 lattice explicitly and check nearest-ness.
+    codes = [0.0]
+    for e in range(-6, 9):
+        for m in range(8):
+            val = (1 + m / 8) * 2.0**e
+            if val <= 448.0:
+                codes.append(val)
+    for m in range(1, 8):  # subnormals
+        codes.append(m / 8 * 2.0**-6)
+    codes = np.unique(np.array(codes, np.float32))
+    rng = np.random.default_rng(4)
+    v = (rng.uniform(0.001, 500, size=1024)).astype(np.float32)
+    out = np.asarray(ref.e4m3_rtn(jnp.array(v)))
+    for vi, oi in zip(v, out):
+        if vi >= 448.0:
+            assert oi == 448.0
+            continue
+        d = np.abs(codes - vi)
+        best = d.min()
+        assert abs(oi - vi) <= best + 1e-5 * vi, (vi, oi)

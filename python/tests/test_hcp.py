@@ -1,0 +1,133 @@
+"""HCP theory checks: Lemmas A.3–A.9, MSE ordering (Thm A.12), scoring."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def _pair(m=32, kdim=128, n=64, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(0, scale, (m, kdim)).astype(np.float32))
+    w = jnp.array(rng.normal(0, 1, (kdim, n)).astype(np.float32))
+    return x, w
+
+
+def _mses(x, w, k, idx=None):
+    y_true = np.asarray(x @ w)
+    out = {}
+    for order in ("none", "o1a", "o1w", "o2"):
+        y, idx = ref.hcp_matmul(x, w, k, order=order, idx=idx)
+        out[order] = float(np.mean((np.asarray(y) - y_true) ** 2))
+    return out
+
+
+def test_mse_ordering_matches_theorem():
+    """MSE(O2) < MSE(O1 single-sided) < MSE(baseline) on all-channel patch.
+
+    With I = all channels, Lemma A.4/A.5 are exact: o1a error = -ΔWᵀX,
+    o2 error = +ΔWᵀΔX, baseline stacks all three terms.
+    """
+    x, w = _pair(seed=1)
+    k = x.shape[1]  # patch everything -> lemma regime
+    m = _mses(x, w, k, idx=jnp.arange(k))
+    assert m["o2"] < m["o1a"] < m["none"]
+    assert m["o2"] < m["o1w"] < m["none"]
+
+
+def test_mse_ordering_with_topk_patch():
+    """With a partial (top-k) patch the ordering still holds on average."""
+    x, w = _pair(seed=2)
+    m = _mses(x, w, k=24)
+    assert m["o2"] <= m["o1a"] + 1e-9 or m["o2"] <= m["o1w"] + 1e-9
+    assert m["o2"] < m["none"]
+
+
+def test_error_decomposition_exact():
+    """Prop 4.1: ŴᵀX̂ = WᵀX + WᵀΔX' + ΔW'ᵀX + ΔW'ᵀΔX' with Δ' = q - full.
+
+    (Using X̂ = X + ΔX' convention of Sec. 4; ref stores Δ = X - X̂.)
+    """
+    x, w = _pair(m=16, kdim=64, n=32, seed=3)
+    xq = ref.nvfp4_quant_dequant(x)
+    wq = ref.nvfp4_quant_dequant_2d(w.T).T
+    dxp = xq - x
+    dwp = wq - w
+    lhs = np.asarray(xq @ wq)
+    rhs = np.asarray(x @ w + x @ dwp + dxp @ w + dxp @ dwp)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-3)
+
+
+def test_second_order_residual_identity():
+    """Lemma A.5 / Eq. (3): full patch output == WᵀX - ΔWᵀΔX exactly."""
+    x, w = _pair(m=8, kdim=32, n=16, seed=4)
+    xq = ref.nvfp4_quant_dequant(x)
+    wq = ref.nvfp4_quant_dequant_2d(w.T).T
+    dx, dw = x - xq, w - wq
+    y, _ = ref.hcp_matmul(x, w, k=32, idx=jnp.arange(32))
+    want = np.asarray(x @ w - dx @ dw)
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-3)
+
+
+def test_scores_find_planted_hot_channel():
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (64, 128)).astype(np.float32)
+    w = rng.normal(0, 1, (128, 32)).astype(np.float32)
+    x[:, 77] *= 80.0  # plant an activation hot channel
+    w[13, :] *= 60.0  # plant a weight hot channel
+    x, w = jnp.array(x), jnp.array(w)
+    xq = ref.nvfp4_quant_dequant(x)
+    wq = ref.nvfp4_quant_dequant_2d(w.T).T
+    s = ref.hcp_scores(x - xq, w - wq)
+    top = set(np.asarray(ref.topk_channels(s, 4)).tolist())
+    assert 77 in top
+    assert 13 in top
+
+
+def test_more_patched_channels_monotone_mse():
+    """MSE decreases (weakly) as the patch set grows along the score order."""
+    x, w = _pair(seed=6, scale=3.0)
+    y_true = np.asarray(x @ w)
+    xq = ref.nvfp4_quant_dequant(x)
+    wq = ref.nvfp4_quant_dequant_2d(w.T).T
+    order = np.asarray(
+        ref.topk_channels(ref.hcp_scores(x - xq, w - wq), x.shape[1])
+    )
+    prev = None
+    for k in (0, 8, 32, 128):
+        idx = jnp.array(order[:k], jnp.int32) if k else None
+        y, _ = ref.hcp_matmul(x, w, k, order="o2" if k else "none", idx=idx)
+        mse = float(np.mean((np.asarray(y) - y_true) ** 2))
+        if prev is not None:
+            assert mse <= prev * 1.001
+        prev = mse
+
+
+def test_precomputed_indices_equal_fresh_selection():
+    """Alg. 1 right panel: reusing cached indices == recomputing them when
+    the distribution hasn't changed."""
+    x, w = _pair(seed=7)
+    y1, idx = ref.hcp_matmul(x, w, 16)
+    y2, _ = ref.hcp_matmul(x, w, 16, idx=idx)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_dual_side_beats_single_side_under_heavy_tails():
+    """Fig. 32-style claim: B-target recovers more than A- or W-only when
+    both operands carry outliers."""
+    rng = np.random.default_rng(8)
+    x = rng.standard_t(2, (64, 128)).astype(np.float32) * 2
+    w = rng.standard_t(2, (128, 64)).astype(np.float32)
+    x, w = jnp.array(x), jnp.array(w)
+    y_true = np.asarray(x @ w)
+
+    def mse(order, target="b"):
+        y, _ = ref.hcp_matmul(x, w, 16, order=order, target=target)
+        return float(np.mean((np.asarray(y) - y_true) ** 2))
+
+    both = mse("o2", "b")
+    a_only = mse("o2", "a")
+    w_only = mse("o2", "w")
+    assert both <= a_only + 1e-9
+    assert both <= w_only + 1e-9

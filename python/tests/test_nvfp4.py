@@ -1,0 +1,151 @@
+"""NVFP4 microscaling properties: error bounds, FTZ, 2D scaling, MXFP4."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def _randn(shape, seed=0, scale=1.0):
+    return jnp.array(np.random.default_rng(seed).normal(0, scale, shape), jnp.float32)
+
+
+def test_roundtrip_relative_error_bound():
+    """Per-element error <= half lattice gap at block amax: |e| <= amax_b/8
+    (gap at the top of the E2M1 range is 2 out of 6) plus e4m3 scale error."""
+    x = _randn((64, 256), seed=1, scale=3.0)
+    d = ref.nvfp4_quant_dequant(x)
+    xb = np.asarray(x).reshape(64, 16, 16)
+    db = np.asarray(d).reshape(64, 16, 16)
+    amax_b = np.abs(xb).max(-1, keepdims=True)
+    # gap/2 = amax/6 * 2 / 2 = amax/6; e4m3 scale rel error <= 2^-4 -> pad.
+    bound = amax_b / 6.0 * (1 + 2.0**-3) + 1e-7
+    assert np.all(np.abs(xb - db) <= bound)
+
+
+def test_zero_tensor():
+    x = jnp.zeros((8, 32), jnp.float32)
+    d = ref.nvfp4_quant_dequant(x)
+    assert float(jnp.max(jnp.abs(d))) == 0.0
+    assert float(ref.ftz_ratio(x)) == 0.0
+
+
+def test_single_outlier_saturates_its_block_only():
+    x = np.full((1, 64), 0.01, np.float32)
+    x[0, 5] = 1000.0  # hot element in block 0
+    d = np.asarray(ref.nvfp4_quant_dequant(jnp.array(x)))
+    # Other blocks (16..64) keep their small values representable.
+    assert np.all(np.abs(d[0, 16:] - 0.01) / 0.01 < 0.25)
+    # Block 0's small values flush to zero (they're < amax/6/2 of the block).
+    assert np.all(d[0, :5] == 0.0)
+    assert d[0, 5] == pytest.approx(1000.0, rel=0.07)
+
+
+def test_ftz_increases_with_dynamic_range():
+    rng = np.random.default_rng(7)
+    base = rng.normal(0, 1, (32, 256)).astype(np.float32)
+    mild = base.copy()
+    spiky = base.copy()
+    spiky[:, 0] *= 300.0  # inject per-block outliers -> small values flushed
+    f_mild = float(ref.ftz_ratio(jnp.array(mild)))
+    f_spiky = float(ref.ftz_ratio(jnp.array(spiky)))
+    assert f_spiky > f_mild
+
+
+def test_scales_storable_in_e4m3():
+    """Stored block scales must lie in the representable e4m3 range (Rmk C.2)."""
+    x = _randn((16, 256), seed=3, scale=50.0)
+    _, _, s = ref.nvfp4_scales(x)
+    s = np.asarray(s)
+    assert np.all(s <= 448.0)
+    assert np.all(s >= 0.0)
+
+
+def test_2d_equals_1d_when_tile_is_one():
+    x = _randn((32, 64), seed=4)
+    a = ref.nvfp4_quant_dequant_2d(x, tile=1)
+    b = ref.nvfp4_quant_dequant(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)
+
+
+def test_2d_coarser_than_1d():
+    """16x16 shared scales can't be more accurate than per-row scales."""
+    x = _randn((64, 256), seed=5, scale=2.0)
+    e1 = float(jnp.mean((x - ref.nvfp4_quant_dequant(x)) ** 2))
+    e2 = float(jnp.mean((x - ref.nvfp4_quant_dequant_2d(x)) ** 2))
+    assert e2 >= e1 * 0.999
+
+
+def test_2d_handles_row_padding():
+    x = _randn((19, 64), seed=6)
+    d = ref.nvfp4_quant_dequant_2d(x, tile=16)
+    assert d.shape == x.shape
+    assert np.isfinite(np.asarray(d)).all()
+
+
+def test_sr_unbiased_through_full_pipeline():
+    x = _randn((4, 64), seed=8)
+    n = 3000
+    rng = np.random.default_rng(9)
+    acc = np.zeros((4, 64), np.float64)
+    for i in range(n):
+        u = jnp.array(rng.random((4, 64)).astype(np.float32))
+        acc += np.asarray(ref.nvfp4_quant_dequant(x, rounding="sr", u=u))
+    mean = acc / n
+    # bias should be well under the RTN error scale
+    err = np.abs(mean - np.asarray(x))
+    amax_b = np.abs(np.asarray(x)).reshape(4, 4, 16).max(-1, keepdims=True)
+    np.testing.assert_array_less(err, np.broadcast_to(amax_b / 6, (4, 4, 16)).reshape(4, 64) + 0.02)
+
+
+def test_mxfp4_roundtrip():
+    x = _randn((8, 128), seed=10, scale=2.0)
+    d = ref.mxfp4_quant_dequant(x)
+    assert d.shape == x.shape
+    # power-of-two scales: lattice error <= s_dec (half the top gap of 2),
+    # clamp error <= 2*s_dec for magnitudes in (6,8)*s_dec; s_dec <= amax/4.
+    xb = np.asarray(x).reshape(8, 4, 32)
+    amax_b = np.abs(xb).max(-1, keepdims=True)
+    db = np.asarray(d).reshape(8, 4, 32)
+    assert np.all(np.abs(xb - db) <= amax_b / 2.0 + 1e-7)
+
+
+def test_nvfp4_beats_mxfp4_on_gaussian():
+    """Two-level scaling should (on average) beat power-of-two block scales."""
+    x = _randn((64, 512), seed=11, scale=1.7)
+    e_nv = float(jnp.mean((x - ref.nvfp4_quant_dequant(x)) ** 2))
+    e_mx = float(jnp.mean((x - ref.mxfp4_quant_dequant(x)) ** 2))
+    assert e_nv < e_mx
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    blocks=st.integers(1, 8),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_roundtrip_bounded(rows, blocks, scale, seed):
+    """Sweep shapes/scales: dequant error bounded, no NaN/Inf, lattice-valued."""
+    n = blocks * 16
+    x = jnp.array(
+        np.random.default_rng(seed).normal(0, scale, (rows, n)).astype(np.float32)
+    )
+    d = ref.nvfp4_quant_dequant(x)
+    assert np.isfinite(np.asarray(d)).all()
+    xb = np.asarray(x).reshape(rows, blocks, 16)
+    db = np.asarray(d).reshape(rows, blocks, 16)
+    amax_b = np.abs(xb).max(-1, keepdims=True)
+    assert np.all(np.abs(xb - db) <= amax_b / 6.0 * (1 + 2.0**-3) + 1e-30)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), heavy=st.booleans())
+def test_hypothesis_ftz_in_unit_range(seed, heavy):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_t(2 if heavy else 50, (16, 64)).astype(np.float32)
+    f = float(ref.ftz_ratio(jnp.array(x)))
+    assert 0.0 <= f <= 1.0

@@ -1,0 +1,130 @@
+"""Pallas kernels (interpret=True) vs the pure-jnp oracle, swept shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hcp, nvfp4, ref, rht
+
+
+def _randn(shape, seed=0, scale=1.0):
+    return jnp.array(np.random.default_rng(seed).normal(0, scale, shape), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 3, 8, 16, 24, 40]),
+    blocks=st.sampled_from([1, 2, 4, 8]),
+    scale=st.sampled_from([1e-2, 1.0, 37.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qdq_kernel_matches_ref(rows, blocks, scale, seed):
+    x = _randn((rows, blocks * 16), seed=seed, scale=scale)
+    got = nvfp4.nvfp4_qdq(x)
+    want = ref.nvfp4_quant_dequant(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([5, 16, 17, 48]),
+    blocks=st.sampled_from([1, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qdq2d_kernel_matches_ref(rows, blocks, seed):
+    x = _randn((rows, blocks * 16), seed=seed)
+    got = nvfp4.nvfp4_qdq_2d(x)
+    want = ref.nvfp4_quant_dequant_2d(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qdq_sr_kernel_matches_ref():
+    x = _randn((16, 64), seed=1)
+    u = jnp.array(np.random.default_rng(2).random((16, 64)).astype(np.float32))
+    got = nvfp4.nvfp4_qdq(x, rounding="sr", u=u)
+    want = ref.nvfp4_quant_dequant(x, rounding="sr", u=u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qdq_kernel_zero_input():
+    x = jnp.zeros((8, 32), jnp.float32)
+    assert float(jnp.max(jnp.abs(nvfp4.nvfp4_qdq(x)))) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([1, 4, 8, 24]),
+    logn=st.sampled_from([4, 5, 6, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rht_kernel_matches_ref(rows, logn, seed):
+    n = 2**logn
+    x = _randn((rows, n), seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    s = jnp.array(rng.choice([-1.0, 1.0], n).astype(np.float32))
+    got = rht.rht(x, s)
+    want = ref.rht(x, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rht_kernel_inverse_roundtrip():
+    x = _randn((8, 128), seed=3)
+    s = jnp.array(np.random.default_rng(4).choice([-1.0, 1.0], 128).astype(np.float32))
+    y = rht.rht(x, s)
+    back = rht.rht(y, s, inverse=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+def test_rht_preserves_energy():
+    x = _randn((8, 64), seed=5)
+    s = jnp.array(np.random.default_rng(6).choice([-1.0, 1.0], 64).astype(np.float32))
+    y = rht.rht(x, s)
+    np.testing.assert_allclose(
+        float(jnp.sum(y * y)), float(jnp.sum(x * x)), rtol=1e-5
+    )
+
+
+def test_rht_diffuses_outliers():
+    """A single spike spreads to ~uniform magnitude ±1/sqrt(n) of its mass."""
+    n = 128
+    x = np.zeros((1, n), np.float32)
+    x[0, 17] = 100.0
+    s = jnp.array(np.random.default_rng(7).choice([-1.0, 1.0], n).astype(np.float32))
+    y = np.asarray(rht.rht(jnp.array(x), s))
+    assert np.max(np.abs(y)) <= 100.0 / np.sqrt(n) + 1e-4
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([4, 8, 16]),
+    kdim=st.sampled_from([32, 64]),
+    n=st.sampled_from([16, 48]),
+    k=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hcp_fused_and_dual_match_oracle(m, kdim, n, k, seed):
+    x = _randn((m, kdim), seed=seed, scale=2.0)
+    w = _randn((kdim, n), seed=seed + 1)
+    xq = ref.nvfp4_quant_dequant(x)
+    wq = ref.nvfp4_quant_dequant_2d(w.T).T
+    dx, dw = x - xq, w - wq
+    idx = ref.topk_channels(ref.hcp_scores(dx, dw), k)
+    want, _ = ref.hcp_matmul(x, w, k, idx=idx)
+    args = (xq, wq, dx[:, idx], wq[idx, :], xq[:, idx], dw[idx, :])
+    got_f = hcp.hcp_gemm_fused(*args)
+    got_d = hcp.hcp_gemm_dual(*args)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want), atol=1e-4)
+
+
+def test_hcp_fused_reduces_error_vs_baseline():
+    x = _randn((32, 128), seed=11, scale=3.0)
+    w = _randn((128, 64), seed=12)
+    y_true = np.asarray(x @ w)
+    y_base, _ = ref.hcp_matmul(x, w, 0, order="none")
+    y_hcp, _ = ref.hcp_matmul(x, w, 16)
+    e_base = np.mean((np.asarray(y_base) - y_true) ** 2)
+    e_hcp = np.mean((np.asarray(y_hcp) - y_true) ** 2)
+    assert e_hcp < e_base

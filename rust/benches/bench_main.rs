@@ -1,0 +1,806 @@
+//! `cargo bench` — regenerates every table and figure of the paper's
+//! evaluation on this testbed (custom harness; criterion is not in the
+//! offline vendor set).
+//!
+//! Usage:
+//!   cargo bench                 # run everything
+//!   cargo bench -- tab5 fig11   # run selected benches
+//!   CHON_BENCH_STEPS=300 cargo bench -- tab2
+//!
+//! Benches that need trained models train the tiny configs in-process
+//! (a few seconds each at the default 120 steps); results are written to
+//! runs/bench/*.csv and printed in the paper's table/figure layout.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use chon::bench::{time_auto, Table};
+use chon::config::RunConfig;
+use chon::coordinator::{ablation, evalsuite, Monitor, Trainer};
+use chon::diagnostics;
+use chon::hcp;
+use chon::hcp::modes::{apply, baseline, HcpConfig, QuantizedPair};
+use chon::hcp::pipeline;
+use chon::quant::{fp8_fake_quant, mxfp4, nvfp4, rht};
+use chon::util::ndarray::{matmul, matmul_par, Mat};
+use chon::util::prng::Rng;
+
+/// On a single-core CPU testbed, XLA's LLVM passes dominate (minutes per
+/// nvfp4-family artifact). Benches trade step time for compile time by
+/// defaulting to backend optimization level 0 — set XLA_FLAGS yourself to
+/// override (perf step-time numbers in EXPERIMENTS.md §Perf were measured
+/// separately at full optimization).
+fn fast_compile_flags() {
+    if std::env::var_os("XLA_FLAGS").is_none() {
+        std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=0");
+    }
+}
+
+fn steps_budget() -> usize {
+    std::env::var("CHON_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60)
+}
+
+fn out_dir() -> PathBuf {
+    let p = PathBuf::from("runs/bench");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    p.join("index.txt").exists().then_some(p)
+}
+
+fn run_cfg(model: &str, recipe: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.recipe = recipe.into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.out_dir = out_dir();
+    cfg
+}
+
+/// Train with periodic diagnostics; returns the trainer (monitor filled).
+fn diag_run(model: &str, recipe: &str, steps: usize, probes: usize) -> Result<Trainer> {
+    let mut cfg = run_cfg(model, recipe);
+    cfg.diag_every = (steps / probes).max(1);
+    let mut tr = Trainer::new(cfg)?;
+    tr.diagnose()?; // step-0 probe
+    tr.train(steps)?;
+    Ok(tr)
+}
+
+fn series_str(s: &[(usize, f32)]) -> String {
+    s.iter()
+        .map(|(_, v)| format!("{v:>8.3}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+// ------------------------------------------------------------------
+// Tables
+// ------------------------------------------------------------------
+
+/// Tab. 2: recipe ablation grid (final loss + gap vs BF16).
+fn tab2() -> Result<()> {
+    let dir = artifacts().context("artifacts missing")?;
+    let steps = steps_budget();
+    let mut recipes = Vec::new();
+    for e in std::fs::read_dir(&dir)? {
+        let name = e?.file_name().to_string_lossy().to_string();
+        if let Some(r) = name
+            .strip_prefix("train_tiny_gla_")
+            .and_then(|r| r.strip_suffix(".manifest.txt"))
+        {
+            if !r.starts_with("only_") {
+                recipes.push(r.to_string());
+            }
+        }
+    }
+    recipes.sort_by_key(|r| (r != "bf16", r.clone()));
+    let base = run_cfg("tiny_gla", "bf16");
+    let rows = ablation::table2(&base, &recipes, steps, 10)?;
+    ablation::print_table2(&rows);
+    ablation::write_table2(&rows, &out_dir().join("table2.csv"))?;
+    Ok(())
+}
+
+/// Tab. 3: operator sensitivity (both architectures).
+fn tab3() -> Result<()> {
+    let dir = artifacts().context("artifacts missing")?;
+    let steps = steps_budget();
+    for model in ["tiny_gla", "tiny_sa"] {
+        let mut ops = Vec::new();
+        for e in std::fs::read_dir(&dir)? {
+            let name = e?.file_name().to_string_lossy().to_string();
+            if let Some(rest) = name
+                .strip_prefix(&format!("train_{model}_only_"))
+                .and_then(|r| r.strip_suffix(".manifest.txt"))
+            {
+                ops.push(rest.replacen('_', ".", 1));
+            }
+        }
+        if ops.is_empty() {
+            println!("tab3: no sensitivity artifacts for {model} (need --set core/full)");
+            continue;
+        }
+        ops.sort();
+        println!("\n== Tab. 3 ({model}) ==");
+        let base = run_cfg(model, "bf16");
+        let rows = ablation::table3(&base, &ops, steps, 10)?;
+        ablation::print_table3(&rows);
+        ablation::write_table3(&rows, &out_dir().join(format!("table3_{model}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Tab. 1/8 substitute: downstream eval across recipes.
+fn tab1() -> Result<()> {
+    artifacts().context("artifacts missing")?;
+    let steps = steps_budget().max(100);
+    let base = run_cfg("tiny_gla", "bf16");
+    let recipes: Vec<String> = ["bf16", "fp8", "nvfp4", "chon"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let rows = evalsuite::run_suite(&base, &recipes, steps)?;
+    evalsuite::print_suite(&rows);
+    let mut f = std::fs::File::create(out_dir().join("table1.csv"))?;
+    writeln!(f, "recipe,cloze_acc,heldout_loss,heldout_acc")?;
+    for r in &rows {
+        writeln!(
+            f,
+            "{},{:.4},{:.4},{:.4}",
+            r.recipe, r.cloze_acc, r.heldout_loss, r.heldout_acc
+        )?;
+    }
+    Ok(())
+}
+
+/// Tab. 5: HCP kernel overhead — pre-fuse stage sum vs post-fuse kernel,
+/// as a ratio of the step (Fprop+Dgrad+Wgrad GEMM) time.
+fn tab5() -> Result<()> {
+    let shapes = [(2048usize, 2048usize), (1024, 2048), (4096, 2048), (2048, 4096)];
+    let m = 256; // token rows
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut table = Table::new(&[
+        "Shape (WxX)", "Fprop ms", "Deq", "Gthr", "Resid", "Cat", "Sum", "Fused",
+        "Pre-fuse %", "Post-fuse %",
+    ]);
+    let mut csv = std::fs::File::create(out_dir().join("table5.csv"))?;
+    writeln!(
+        csv,
+        "k,n,fprop_ms,deq_ms,gthr_ms,resid_ms,cat_ms,sum_ms,fused_ms,prefuse_pct,postfuse_pct"
+    )?;
+    for (kdim, n) in shapes {
+        let mut rng = Rng::new(kdim as u64 ^ n as u64);
+        let x = Mat::from_fn(m, kdim, |_, _| rng.normal());
+        let w = Mat::from_fn(kdim, n, |_, _| rng.normal() * 0.2);
+        let hot = (kdim as f64 * 0.0909) as usize;
+        let idx: Vec<usize> = (0..hot).map(|i| i * (kdim / hot)).collect();
+
+        // GEMM step time (Fprop; Dgrad/Wgrad have the same flops here)
+        let t_gemm = time_auto(300.0, || {
+            std::hint::black_box(matmul_par(&x, &w, threads));
+        });
+        let step_ms = t_gemm.median_ms * 3.0; // Fprop + Dgrad + Wgrad
+
+        // pre-fuse pipeline: measure each stage
+        let mut st_acc = pipeline::StageTimes::default();
+        let reps = 5;
+        for _ in 0..reps {
+            let (_, _, st) = pipeline::prefuse(&x, &w, &idx);
+            st_acc.dequant_ms += st.dequant_ms;
+            st_acc.gather_ms += st.gather_ms;
+            st_acc.residual_ms += st.residual_ms;
+            st_acc.concat_ms += st.concat_ms;
+        }
+        let d = reps as f64;
+        let (deq, gth, res, cat) = (
+            st_acc.dequant_ms / d,
+            st_acc.gather_ms / d,
+            st_acc.residual_ms / d,
+            st_acc.concat_ms / d,
+        );
+        let sum = deq + gth + res + cat;
+
+        // post-fuse single pass
+        let t_fused = time_auto(200.0, || {
+            std::hint::black_box(pipeline::postfuse(&x, &w, &idx));
+        });
+        let fused = t_fused.median_ms;
+
+        let pre_pct = sum / (step_ms + sum) * 100.0;
+        let post_pct = fused / (step_ms + fused) * 100.0;
+        table.row(&[
+            format!("{kdim}x{n}"),
+            format!("{:.2}", t_gemm.median_ms),
+            format!("{deq:.2}"),
+            format!("{gth:.2}"),
+            format!("{res:.2}"),
+            format!("{cat:.2}"),
+            format!("{sum:.2}"),
+            format!("{fused:.2}"),
+            format!("{pre_pct:.2}%"),
+            format!("{post_pct:.2}%"),
+        ]);
+        writeln!(
+            csv,
+            "{kdim},{n},{:.3},{deq:.3},{gth:.3},{res:.3},{cat:.3},{sum:.3},{fused:.3},{pre_pct:.2},{post_pct:.2}",
+            t_gemm.median_ms
+        )?;
+    }
+    println!("\n== Tab. 5: HCP kernel overhead (pre-fuse vs post-fuse) ==");
+    table.print();
+    Ok(())
+}
+
+// ------------------------------------------------------------------
+// Figures
+// ------------------------------------------------------------------
+
+/// Fig. 1 + Fig. 17: per-component activation kurtosis, GLA vs SA.
+fn fig1() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 1: activation kurtosis GLA vs Qwen-style SA ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig1.csv"))?;
+    writeln!(csv, "arch,component,act_kurtosis")?;
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            println!("  (skip {model}: artifacts missing)");
+            continue;
+        }
+        let tr = diag_run(model, "bf16", steps, 2)?;
+        let last = tr.monitor.records.last().unwrap();
+        println!("[{model}]");
+        let mut attn = Vec::new();
+        let mut mlp = Vec::new();
+        for (name, v) in tr.monitor.names.iter().zip(&last.values) {
+            if name.ends_with(".act.kurt") {
+                let comp = name.trim_end_matches(".act.kurt");
+                println!("  {comp:<18} {v:>8.3}");
+                writeln!(csv, "{model},{comp},{v}")?;
+                if comp.contains("attn") {
+                    attn.push(*v);
+                } else {
+                    mlp.push(*v);
+                }
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+        println!("  mean attn {:.3} | mean mlp {:.3}", mean(&attn), mean(&mlp));
+    }
+    Ok(())
+}
+
+/// Fig. 3/19/22: hot-channel maps early vs late + persistence.
+fn fig3() -> Result<()> {
+    let steps = steps_budget();
+    let tr = diag_run("tiny_gla", "chon", steps, 8)?;
+    println!("\n== Fig. 3: drifting spikes -> persistent hot channels ==");
+    let m = &tr.monitor;
+    for (comp, series) in m.hot_channel_persistence(8) {
+        println!(
+            "{comp:<10} overlap(t, t-1): {}",
+            series
+                .iter()
+                .map(|(s, j)| format!("{s}:{j:.2}"))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+    // top-5 channel ids at first vs last probe per component
+    let first = m.records.first().unwrap();
+    let last = m.records.last().unwrap();
+    for mi in 0..first.channel_maps.len() {
+        let name = &first.channel_maps[mi].0;
+        let flat = |r: &chon::coordinator::DiagRecord| -> Vec<f32> {
+            r.channel_maps[mi].1.iter().flatten().copied().collect()
+        };
+        let h0: Vec<usize> = diagnostics::hot_channels(&flat(first), 5)
+            .iter()
+            .map(|&(i, _)| i)
+            .collect();
+        let h1: Vec<usize> = diagnostics::hot_channels(&flat(last), 5)
+            .iter()
+            .map(|&(i, _)| i)
+            .collect();
+        println!(
+            "{name:<10} top-5 @step{}: {h0:?}  @step{}: {h1:?}",
+            first.step, last.step
+        );
+    }
+    tr.monitor.write_channel_csvs(&out_dir(), "fig3")?;
+    Ok(())
+}
+
+/// Fig. 4/18: block-level kurtosis min/avg/max, SA vs LA.
+fn fig4() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 4: 16x16 block kurtosis (min/avg/max) ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig4.csv"))?;
+    writeln!(csv, "arch,component,bk_min,bk_avg,bk_max")?;
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            continue;
+        }
+        let tr = diag_run(model, "bf16", steps, 2)?;
+        let last = tr.monitor.records.last().unwrap();
+        println!(
+            "[{model}]  {:<20} {:>8} {:>8} {:>8}",
+            "component", "min", "avg", "max"
+        );
+        let names = &tr.monitor.names;
+        for (i, name) in names.iter().enumerate() {
+            if let Some(comp) = name.strip_suffix(".act.bkavg") {
+                let minv = last.values[names
+                    .iter()
+                    .position(|n| n == &format!("{comp}.act.bkmin"))
+                    .unwrap()];
+                let maxv = last.values[names
+                    .iter()
+                    .position(|n| n == &format!("{comp}.act.bkmax"))
+                    .unwrap()];
+                let avg = last.values[i];
+                println!("  {comp:<20} {minv:>8.2} {avg:>8.2} {maxv:>8.2}");
+                writeln!(csv, "{model},{comp},{minv},{avg},{maxv}")?;
+            }
+        }
+    }
+    println!("(expected: LA avg lower than SA, but max spikes persist in both)");
+    Ok(())
+}
+
+/// Fig. 5: per-tensor kurtosis evolution (weights vs activations).
+fn fig5() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 5: kurtosis evolution over training ==");
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            continue;
+        }
+        let tr = diag_run(model, "bf16", steps, 8)?;
+        println!(
+            "[{model}] act kurt: {}",
+            series_str(&tr.monitor.series_mean_matching(".act.kurt"))
+        );
+        println!(
+            "[{model}] wt  kurt: {}",
+            series_str(&tr.monitor.series_mean_matching(".wt.kurt"))
+        );
+        write_series_csv(&tr.monitor, &out_dir().join(format!("fig5_{model}.csv")))?;
+    }
+    Ok(())
+}
+
+/// Fig. 6: top-k magnitude evolution; gk top-1 under BF16/NVFP4/CHON.
+fn fig6() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 6: top-k magnitude evolution ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig6.csv"))?;
+    writeln!(csv, "recipe,step,gk_top1,o_top1,up_top1,mean_top1,mean_top3")?;
+    for recipe in ["bf16", "nvfp4", "chon"] {
+        let tr = diag_run("tiny_gla", recipe, steps, 8)?;
+        let m = &tr.monitor;
+        let gk = m.series("L0.attn.gk.act.top1").unwrap_or_default();
+        let o = m.series("L0.attn.o.act.top1").unwrap_or_default();
+        let up = m.series("L0.mlp.up.act.top1").unwrap_or_default();
+        let t1 = m.series_mean_matching(".act.top1");
+        let t3 = m.series_mean_matching(".act.top3");
+        println!("[{recipe}] gk top1: {}", series_str(&gk));
+        for i in 0..gk.len() {
+            writeln!(
+                csv,
+                "{recipe},{},{},{},{},{},{}",
+                gk[i].0, gk[i].1, o[i].1, up[i].1, t1[i].1, t3[i].1
+            )?;
+        }
+    }
+    println!("(gk magnitudes dominating o/up reproduces the Fig. 6b shape)");
+    Ok(())
+}
+
+/// Fig. 7: softmax-induced instability (SA only).
+fn fig7() -> Result<()> {
+    let steps = steps_budget();
+    if !Path::new("artifacts")
+        .join("train_tiny_sa_bf16.manifest.txt")
+        .exists()
+    {
+        println!("fig7: tiny_sa artifacts missing (need --set core/full)");
+        return Ok(());
+    }
+    let tr = diag_run("tiny_sa", "bf16", steps, 8)?;
+    let m = &tr.monitor;
+    println!("\n== Fig. 7: softmax instability (tiny_sa) ==");
+    println!(
+        "pre-softmax kurt: {}",
+        series_str(&m.series_mean_matching("presoftmax.kurt"))
+    );
+    println!(
+        "pre-softmax max : {}",
+        series_str(&m.series_mean_matching("presoftmax.max"))
+    );
+    println!(
+        "post-softmax H  : {}",
+        series_str(&m.series_mean_matching("postsoftmax.entropy"))
+    );
+    write_series_csv(m, &out_dir().join("fig7.csv"))?;
+    Ok(())
+}
+
+/// Fig. 8: SwiGLU weight alignment dynamics, GLA vs SA.
+fn fig8() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 8: SwiGLU W_up/W_gate cosine alignment ==");
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            continue;
+        }
+        let tr = diag_run(model, "bf16", steps, 8)?;
+        println!(
+            "[{model}] alignment: {}",
+            series_str(&tr.monitor.series_mean_matching("mlp.alignment"))
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 11/13: HCP config MSE sweep.
+fn fig11() -> Result<()> {
+    println!("\n== Fig. 11: HCP config MSE vs patched columns ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig11.csv"))?;
+    writeln!(csv, "prior,hidden,config,k,mse,base_mse")?;
+    for prior in ["gaussian", "laplace"] {
+        for hidden in [512usize, 1024] {
+            let m = 64;
+            let n = 64;
+            let mut rng = Rng::new(hidden as u64);
+            let x = Mat::from_fn(m, hidden, |_, _| match prior {
+                "gaussian" => rng.normal() * 2.0,
+                _ => rng.laplace(2.0),
+            });
+            let w = Mat::from_fn(hidden, n, |_, _| rng.normal() * 0.5);
+            let truth = matmul(&x, &w);
+            let q = QuantizedPair::new(&x, &w);
+            let order = hcp::top_k(&hcp::scores(&q.dx, &q.dw), hidden);
+            let base = baseline(&q).mse(&truth);
+            print!("[{prior} {hidden}] base {base:.2e} |");
+            for (name, cfg) in HcpConfig::taxonomy() {
+                let k = (hidden as f64 * 0.0909) as usize;
+                let mse = apply(cfg, &q, &order[..k]).mse(&truth);
+                print!(" {name} {:.1}%", (mse / base - 1.0) * 100.0);
+                writeln!(csv, "{prior},{hidden},{name},{k},{mse:.6e},{base:.6e}")?;
+            }
+            println!();
+        }
+    }
+    println!("(expected shape: O2-B lowest, W/A single-sided in between, all < baseline)");
+    Ok(())
+}
+
+/// Fig. 26/27: FTZ dynamics, activations vs weights, across recipes.
+fn fig26() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 26/27: flush-to-zero dynamics ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig26.csv"))?;
+    writeln!(csv, "recipe,step,act_ftz,wt_ftz,gate_ftz")?;
+    for recipe in ["bf16", "nvfp4", "chon"] {
+        let tr = diag_run("tiny_gla", recipe, steps, 8)?;
+        let m = &tr.monitor;
+        let act = m.series_mean_matching(".act.ftz");
+        let wt = m.series_mean_matching(".wt.ftz");
+        let gate = m.series_mean_matching("attn.g.act.ftz");
+        println!("[{recipe}] act FTZ: {}", series_str(&act));
+        println!("[{recipe}] wt  FTZ: {}", series_str(&wt));
+        for i in 0..act.len() {
+            writeln!(csv, "{recipe},{},{},{},{}", act[i].0, act[i].1, wt[i].1, gate[i].1)?;
+        }
+    }
+    println!("(expected: act FTZ >> wt FTZ; CHON pulls act FTZ toward BF16)");
+    Ok(())
+}
+
+/// Fig. 32: quantization-error MSE dynamics, act vs weight.
+fn fig32() -> Result<()> {
+    let steps = steps_budget();
+    println!("\n== Fig. 32: quantization error dynamics ==");
+    let mut csv = std::fs::File::create(out_dir().join("fig32.csv"))?;
+    writeln!(csv, "model,step,act_qmse,wt_qmse,ratio")?;
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            continue;
+        }
+        let tr = diag_run(model, "bf16", steps, 8)?;
+        let m = &tr.monitor;
+        let act = m.series_mean_matching(".act.qmse");
+        let wt = m.series_mean_matching(".wt.qmse");
+        println!("[{model}] act qMSE: {}", series_str(&act));
+        println!("[{model}] wt  qMSE: {}", series_str(&wt));
+        for i in 0..act.len() {
+            let ratio = act[i].1 / wt[i].1.max(1e-12);
+            writeln!(csv, "{model},{},{},{},{ratio}", act[i].0, act[i].1, wt[i].1)?;
+        }
+        if let (Some(a), Some(w)) = (act.last(), wt.last()) {
+            println!(
+                "[{model}] final act/wt error ratio: {:.1}x (paper: 1-2 orders)",
+                a.1 / w.1.max(1e-12)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 29/30/31: RMSNorm gamma distributions + lm_head superposition.
+fn fig29() -> Result<()> {
+    use chon::diagnostics::gamma::{gamma_depth_slope, gamma_stats, weight_overlap};
+    let steps = steps_budget();
+    println!("\n== Fig. 29/30: RMSNorm gamma | Fig. 31: weight overlap ==");
+    for model in ["tiny_gla", "tiny_sa"] {
+        if !Path::new("artifacts")
+            .join(format!("train_{model}_bf16.manifest.txt"))
+            .exists()
+        {
+            continue;
+        }
+        for recipe in ["bf16", "nvfp4"] {
+            let mut tr = Trainer::new(run_cfg(model, recipe))?;
+            tr.train(steps)?;
+            let mut layer_means = Vec::new();
+            let mut frac_above = Vec::new();
+            let mut lm_head: Option<Mat> = None;
+            for (name, t) in tr.state.names.iter().zip(&tr.state.params) {
+                if name.contains("_norm'") || name.ends_with("norm']") {
+                    let s = gamma_stats(&t.f32_data);
+                    if name.contains("layers") {
+                        layer_means.push(s.mean);
+                        frac_above.push(s.frac_above_one);
+                    }
+                }
+                if name.contains("lm_head") {
+                    lm_head = Some(Mat::from_vec(t.shape[0], t.shape[1], t.f32_data.clone()));
+                }
+            }
+            let mean_frac =
+                frac_above.iter().sum::<f64>() / frac_above.len().max(1) as f64;
+            let overlap = lm_head
+                .as_ref()
+                .map(|w| weight_overlap(&w.transpose())) // vocab rows
+                .unwrap_or(0.0);
+            println!(
+                "[{model}/{recipe}] gamma>1 frac {mean_frac:.3}; depth slope {:+.4}; lm_head overlap {overlap:.5}",
+                gamma_depth_slope(&layer_means)
+            );
+        }
+    }
+    println!("(expected: SA gamma > LA gamma; NVFP4 overlap <= BF16 overlap)");
+    Ok(())
+}
+
+/// Fig. 15c substitute: fine-tuning loss-gap trajectory.
+fn fig15() -> Result<()> {
+    use chon::coordinator::finetune;
+    let steps = steps_budget();
+    let base = run_cfg("tiny_gla", "bf16");
+    let pts = finetune::finetune_gap_study(&base, "nvfp4", steps, steps, (steps / 5).max(1))?;
+    finetune::print_gap_trajectory("nvfp4", &pts);
+    Ok(())
+}
+
+/// Format comparison: NVFP4 vs MXFP4 vs FP8 MSE across distributions
+/// (supports the §C.4 microscaling discussion).
+fn formats() -> Result<()> {
+    println!("\n== Format MSE comparison (NVFP4 / MXFP4 / FP8) ==");
+    let mut table = Table::new(&["distribution", "NVFP4", "MXFP4", "FP8"]);
+    let mut rng = Rng::new(0xF0);
+    let n = 65536;
+    let dists: Vec<(&str, Vec<f32>)> = vec![
+        ("gaussian", (0..n).map(|_| rng.normal()).collect()),
+        ("laplace", (0..n).map(|_| rng.laplace(1.0)).collect()),
+        ("student-t(3)", (0..n).map(|_| rng.student_t(3)).collect()),
+        ("spiky(1:300x)", {
+            let mut v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for i in (0..n).step_by(512) {
+                v[i] *= 300.0;
+            }
+            v
+        }),
+    ];
+    for (name, x) in &dists {
+        let mse_nv = nvfp4::quant_mse(x);
+        let mse_mx = mxfp4::quant_mse(x);
+        let d8 = fp8_fake_quant(x);
+        let mse_8: f64 = x
+            .iter()
+            .zip(&d8)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / x.len() as f64;
+        table.row(&[
+            name.to_string(),
+            format!("{mse_nv:.3e}"),
+            format!("{mse_mx:.3e}"),
+            format!("{mse_8:.3e}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+/// Perf microbenches for EXPERIMENTS.md §Perf (L3 substrate hot paths).
+fn perf() -> Result<()> {
+    println!("\n== L3 perf microbenches ==");
+    let mut table = Table::new(&["kernel", "size", "median ms", "throughput"]);
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..1 << 20).map(|_| rng.normal()).collect();
+
+    let t = time_auto(400.0, || {
+        std::hint::black_box(nvfp4::fake_quant(&x, nvfp4::Rounding::Rtn, None));
+    });
+    table.row(&[
+        "nvfp4 fake_quant".into(),
+        "1M f32".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.0} MB/s", 4.0 * x.len() as f64 / t.median_ms / 1e3),
+    ]);
+
+    let t = time_auto(400.0, || {
+        std::hint::black_box(nvfp4::quantize(&x, nvfp4::Rounding::Rtn, None));
+    });
+    table.row(&[
+        "nvfp4 quantize(pack)".into(),
+        "1M f32".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.0} MB/s", 4.0 * x.len() as f64 / t.median_ms / 1e3),
+    ]);
+
+    let t = time_auto(400.0, || {
+        std::hint::black_box(diagnostics::kurtosis(&x));
+    });
+    table.row(&[
+        "kurtosis".into(),
+        "1M f32".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.2} GB/s", 4.0 * x.len() as f64 / t.median_ms / 1e6),
+    ]);
+
+    let mat = Mat::from_vec(1024, 1024, x[..1 << 20].to_vec());
+    let signs = rht::random_signs(1024, &mut rng);
+    let t = time_auto(400.0, || {
+        std::hint::black_box(rht::rht(&mat, &signs));
+    });
+    table.row(&[
+        "rht 1024".into(),
+        "1024x1024".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.2} GB/s", 4.0 * mat.data.len() as f64 / t.median_ms / 1e6),
+    ]);
+
+    let a = Mat::from_fn(512, 512, |_, _| rng.normal());
+    let b = Mat::from_fn(512, 512, |_, _| rng.normal());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let t = time_auto(400.0, || {
+        std::hint::black_box(matmul_par(&a, &b, threads));
+    });
+    let flops = 2.0 * 512f64.powi(3);
+    table.row(&[
+        format!("matmul_par x{threads}"),
+        "512^3".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
+    ]);
+
+    // PJRT step timing, if artifacts available
+    if artifacts().is_some() {
+        for recipe in ["bf16", "chon"] {
+            let mut tr = Trainer::new(run_cfg("tiny_gla", recipe))?;
+            tr.train(12)?;
+            table.row(&[
+                format!("train step ({recipe})"),
+                "tiny_gla".into(),
+                format!("{:.1}", tr.log.mean_step_ms()),
+                format!(
+                    "{:.0} tok/s",
+                    (tr.batch * tr.seq_len) as f64 / tr.log.mean_step_ms() * 1e3
+                ),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn write_series_csv(m: &Monitor, path: &Path) -> Result<()> {
+    m.write_csv(path)?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------
+
+type BenchFn = fn() -> Result<()>;
+
+fn main() {
+    chon::util::logger::init();
+    fast_compile_flags();
+    let registry: Vec<(&str, &str, BenchFn)> = vec![
+        ("tab1", "downstream eval across recipes (Tab. 1/8)", tab1),
+        ("tab2", "recipe ablation grid (Tab. 2, Fig. 12)", tab2),
+        ("tab3", "operator sensitivity (Tab. 3, Fig. 14)", tab3),
+        ("tab5", "HCP kernel overhead (Tab. 5)", tab5),
+        ("fig1", "activation kurtosis GLA vs SA (Fig. 1/17)", fig1),
+        ("fig3", "hot-channel maps + persistence (Fig. 3/19/22)", fig3),
+        ("fig4", "block kurtosis min/avg/max (Fig. 4/18)", fig4),
+        ("fig5", "kurtosis evolution (Fig. 5)", fig5),
+        ("fig6", "top-k magnitude evolution (Fig. 6/20/21/28)", fig6),
+        ("fig7", "softmax instability (Fig. 7)", fig7),
+        ("fig8", "SwiGLU alignment (Fig. 8)", fig8),
+        ("fig11", "HCP config MSE sweep (Fig. 11/13)", fig11),
+        ("fig15", "fine-tuning gap trajectory (Fig. 15c)", fig15),
+        ("fig26", "FTZ dynamics (Fig. 26/27)", fig26),
+        ("fig29", "RMSNorm gamma + superposition (Fig. 29/30/31)", fig29),
+        ("fig32", "quant error dynamics (Fig. 32)", fig32),
+        ("formats", "NVFP4 vs MXFP4 vs FP8 MSE", formats),
+        ("perf", "L3 hot-path microbenches (§Perf)", perf),
+    ];
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let selected: Vec<&(&str, &str, BenchFn)> = if args.is_empty() {
+        registry.iter().collect()
+    } else {
+        registry
+            .iter()
+            .filter(|(name, _, _)| args.iter().any(|a| name.contains(a.as_str())))
+            .collect()
+    };
+    if selected.is_empty() {
+        eprintln!("no bench matches {args:?}; available:");
+        for (name, desc, _) in &registry {
+            eprintln!("  {name:<8} {desc}");
+        }
+        std::process::exit(1);
+    }
+    let t0 = std::time::Instant::now();
+    let mut failed = 0;
+    for (name, desc, f) in selected {
+        println!("\n########## bench {name} — {desc} ##########");
+        let t = std::time::Instant::now();
+        match f() {
+            Ok(()) => println!("[bench {name} done in {:.1}s]", t.elapsed().as_secs_f64()),
+            Err(e) => {
+                failed += 1;
+                eprintln!("[bench {name} FAILED: {e:#}]");
+            }
+        }
+    }
+    println!(
+        "\nall benches finished in {:.0}s ({failed} failed)",
+        t0.elapsed().as_secs_f64()
+    );
+    if failed > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,114 @@
+//! Bench harness utilities (criterion substitute — DESIGN.md
+//! §Substitutions): warmup + repeated timing with median/mean/min stats,
+//! and a tiny table printer shared by the per-figure benches.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` with `warmup` throwaway iterations then `iters` measured ones.
+pub fn time_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        iters,
+        mean_ms: mean,
+        median_ms: samples[samples.len() / 2],
+        min_ms: samples[0],
+    }
+}
+
+/// Adaptive: pick iteration count so total measured time ~ `budget_ms`.
+pub fn time_auto(budget_ms: f64, mut f: impl FnMut()) -> Timing {
+    let t = Instant::now();
+    f();
+    let once = t.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / once.max(1e-3)) as usize).clamp(3, 1000);
+    time_fn(1, iters, f)
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(10)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&self.widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(self.widths.iter().sum::<usize>() + 2 * self.widths.len()));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let t = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min_ms <= t.median_ms);
+        assert!(t.min_ms <= t.mean_ms * 1.001);
+    }
+
+    #[test]
+    fn auto_clamps() {
+        let t = time_auto(5.0, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(t.iters >= 3 && t.iters <= 1000);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,179 @@
+//! Config system: typed run configuration, loadable from a TOML-subset
+//! file with CLI `--key value` overrides (the clap/serde substitution).
+
+pub mod toml;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// Top-level run configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// directory with *.hlo.txt + *.manifest.txt artifacts
+    pub artifacts: PathBuf,
+    /// model config name, e.g. "tiny_gla" (must exist in artifacts)
+    pub model: String,
+    /// recipe name, e.g. "chon" / "nvfp4" / "bf16"
+    pub recipe: String,
+    /// training steps (0 = use the artifact's total_steps)
+    pub steps: usize,
+    /// run diagnostics every N steps (0 = never)
+    pub diag_every: usize,
+    /// evaluate every N steps (0 = never)
+    pub eval_every: usize,
+    /// checkpoint directory (empty = no checkpoints)
+    pub checkpoint_dir: Option<PathBuf>,
+    /// master seed
+    pub seed: u64,
+    /// output directory for metric CSVs
+    pub out_dir: PathBuf,
+    /// worker threads for rust-side compute
+    pub threads: usize,
+    /// log training loss every N steps
+    pub log_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: PathBuf::from("artifacts"),
+            model: "tiny_gla".into(),
+            recipe: "chon".into(),
+            steps: 0,
+            diag_every: 20,
+            eval_every: 50,
+            checkpoint_dir: None,
+            seed: 0,
+            out_dir: PathBuf::from("runs"),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            log_every: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file (sections: root + [run]) if it exists.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = RunConfig::default();
+        for section in ["", "run"] {
+            cfg.artifacts = PathBuf::from(doc.str_or(
+                section,
+                "artifacts",
+                cfg.artifacts.to_str().unwrap(),
+            ));
+            cfg.model = doc.str_or(section, "model", &cfg.model).to_string();
+            cfg.recipe = doc.str_or(section, "recipe", &cfg.recipe).to_string();
+            cfg.steps = doc.int_or(section, "steps", cfg.steps as i64) as usize;
+            cfg.diag_every =
+                doc.int_or(section, "diag_every", cfg.diag_every as i64) as usize;
+            cfg.eval_every =
+                doc.int_or(section, "eval_every", cfg.eval_every as i64) as usize;
+            cfg.seed = doc.int_or(section, "seed", cfg.seed as i64) as u64;
+            cfg.out_dir = PathBuf::from(doc.str_or(
+                section,
+                "out_dir",
+                cfg.out_dir.to_str().unwrap(),
+            ));
+            cfg.threads = doc.int_or(section, "threads", cfg.threads as i64) as usize;
+            cfg.log_every =
+                doc.int_or(section, "log_every", cfg.log_every as i64) as usize;
+            if let Some(v) = doc.get(section, "checkpoint_dir").and_then(|v| v.as_str())
+            {
+                cfg.checkpoint_dir = Some(PathBuf::from(v));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply `--key value` style overrides (the CLI surface).
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut it = args.iter();
+        while let Some(arg) = it.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected argument {arg:?} (expected --key value)");
+            };
+            let mut next = || {
+                it.next()
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))
+            };
+            match key {
+                "artifacts" => self.artifacts = PathBuf::from(next()?),
+                "model" => self.model = next()?,
+                "recipe" => self.recipe = next()?,
+                "steps" => self.steps = next()?.parse()?,
+                "diag-every" => self.diag_every = next()?.parse()?,
+                "eval-every" => self.eval_every = next()?.parse()?,
+                "seed" => self.seed = next()?.parse()?,
+                "out-dir" => self.out_dir = PathBuf::from(next()?),
+                "threads" => self.threads = next()?.parse()?,
+                "log-every" => self.log_every = next()?.parse()?,
+                "checkpoint-dir" => self.checkpoint_dir = Some(PathBuf::from(next()?)),
+                "config" => {
+                    let loaded = RunConfig::from_file(&PathBuf::from(next()?))?;
+                    *self = loaded;
+                }
+                _ => bail!("unknown flag --{key}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.model, "tiny_gla");
+        assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_args(&[
+            "--model".into(),
+            "tiny_sa".into(),
+            "--steps".into(),
+            "123".into(),
+            "--recipe".into(),
+            "nvfp4".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.model, "tiny_sa");
+        assert_eq!(c.steps, 123);
+        assert_eq!(c.recipe, "nvfp4");
+    }
+
+    #[test]
+    fn rejects_unknown_flags() {
+        let mut c = RunConfig::default();
+        assert!(c.apply_args(&["--bogus".into(), "1".into()]).is_err());
+        assert!(c.apply_args(&["positional".into()]).is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("chon_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(
+            &p,
+            "[run]\nmodel = \"tiny_sa\"\nsteps = 42\nrecipe = \"bf16\"\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.model, "tiny_sa");
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.recipe, "bf16");
+    }
+}

@@ -1,0 +1,216 @@
+//! Hand-rolled TOML-subset parser (the offline vendor set has no serde /
+//! toml crates — DESIGN.md §Substitutions).
+//!
+//! Supported: `[section]` headers, `key = value` with string ("..."),
+//! integer, float, boolean and flat string/number arrays, `#` comments.
+//! Enough for run configs; nested tables are spelled [a.b].
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: section -> key -> value. Root keys live in "".
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn parse_scalar(s: &str, lineno: usize) -> Result<Value, TomlError> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| TomlError::Parse(lineno, "unterminated string".into()))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError::Parse(lineno, format!("cannot parse value {s:?}")))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError::Parse(lineno, "bad section header".into()))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| TomlError::Parse(lineno, "expected key = value".into()))?;
+        let key = key.trim().to_string();
+        let val = val.trim();
+        let value = if let Some(body) = val.strip_prefix('[') {
+            let body = body
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError::Parse(lineno, "unterminated array".into()))?;
+            let items: Result<Vec<Value>, _> = body
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| parse_scalar(s, lineno))
+                .collect();
+            Value::Array(items?)
+        } else {
+            parse_scalar(val, lineno)?
+        };
+        doc.sections.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# run config
+name = "tab2"        # inline comment
+steps = 300
+lr = 1.0e-3
+verbose = true
+
+[model]
+arch = "gla"
+dims = [64, 128]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "name", ""), "tab2");
+        assert_eq!(doc.int_or("", "steps", 0), 300);
+        assert!((doc.float_or("", "lr", 0.0) - 1e-3).abs() < 1e-12);
+        assert!(doc.bool_or("", "verbose", false));
+        assert_eq!(doc.str_or("model", "arch", ""), "gla");
+        match doc.get("model", "dims").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.int_or("x", "y", 7), 7);
+        assert_eq!(doc.str_or("", "nope", "d"), "d");
+    }
+
+    #[test]
+    fn string_with_hash() {
+        let doc = parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("nonsense").is_err());
+        assert!(parse("k = @@").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.float_or("", "x", 0.0), 3.0);
+    }
+}

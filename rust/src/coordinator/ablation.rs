@@ -1,0 +1,172 @@
+//! Ablation runners: the Tab. 2 recipe grid and the Tab. 3 operator
+//! sensitivity study, driven entirely from Rust over the AOT artifacts.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use log::info;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::loss_gap_pct;
+use crate::coordinator::trainer::Trainer;
+use crate::runtime::Manifest;
+
+/// One Tab. 2 row.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub recipe: String,
+    pub final_loss: f32,
+    pub gap_pct: f64,
+}
+
+/// Train every recipe in `recipes` for `steps` with identical data/seed;
+/// report final losses sorted by ascending gap to the bf16 baseline.
+pub fn table2(
+    base: &RunConfig,
+    recipes: &[String],
+    steps: usize,
+    tail: usize,
+) -> Result<Vec<Table2Row>> {
+    let mut losses = Vec::new();
+    for recipe in recipes {
+        let mut cfg = base.clone();
+        cfg.recipe = recipe.clone();
+        cfg.diag_every = 0;
+        cfg.eval_every = 0;
+        let mut tr = Trainer::new(cfg)
+            .with_context(|| format!("building trainer for {recipe}"))?;
+        tr.train(steps)?;
+        let loss = tr.log.tail_mean_loss(tail).unwrap();
+        info!("table2: {recipe} -> final loss {loss:.6}");
+        tr.write_outputs()?;
+        losses.push((recipe.clone(), loss));
+    }
+    let baseline = losses
+        .iter()
+        .find(|(r, _)| r == "bf16")
+        .map(|&(_, l)| l)
+        .unwrap_or_else(|| losses[0].1);
+    let mut rows: Vec<Table2Row> = losses
+        .into_iter()
+        .map(|(recipe, final_loss)| Table2Row {
+            recipe,
+            final_loss,
+            gap_pct: loss_gap_pct(final_loss, baseline),
+        })
+        .collect();
+    rows.sort_by(|a, b| a.gap_pct.partial_cmp(&b.gap_pct).unwrap());
+    Ok(rows)
+}
+
+pub fn write_table2(rows: &[Table2Row], path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "configuration,final_loss,loss_gap_pct")?;
+    for r in rows {
+        writeln!(f, "{},{:.6},{:.3}", r.recipe, r.final_loss, r.gap_pct)?;
+    }
+    Ok(())
+}
+
+pub fn print_table2(rows: &[Table2Row]) {
+    println!("\nTable 2 — final loss and relative gap to BF16 (sorted)");
+    println!("{:<28} {:>12} {:>14}", "Configuration", "Final Loss", "Loss Gap (%)");
+    for r in rows {
+        println!("{:<28} {:>12.6} {:>14.3}", r.recipe, r.final_loss, r.gap_pct);
+    }
+}
+
+/// One Tab. 3 row: per-operator quantization sensitivity.
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub op: String,
+    pub delta_loss: f64,
+    pub op_params: usize,
+    /// ΔLoss / params ×1e6 (the parameter-normalized sensitivity score)
+    pub score: f64,
+}
+
+/// Parameter count of the weight backing one operator, from the manifest.
+fn op_param_count(man: &Manifest, op: &str) -> usize {
+    let pname = match op {
+        "attn.q" => "wq",
+        "attn.k" => "wk",
+        "attn.v" => "wv",
+        "attn.o" => "wo",
+        "attn.gk" => "wgk",
+        "attn.g" => "wg",
+        "mlp.up" => "w_up",
+        "mlp.gate" => "w_gate",
+        "mlp.down" => "w_down",
+        _ => return 0,
+    };
+    man.inputs
+        .iter()
+        .filter(|s| s.name.contains(&format!("['{pname}']")))
+        .map(|s| s.numel())
+        .sum()
+}
+
+/// Tab. 3: train with exactly one operator quantized (nvfp4), everything
+/// else BF16; sensitivity score = ΔLoss vs BF16 / operator params.
+pub fn table3(
+    base: &RunConfig,
+    ops: &[String],
+    steps: usize,
+    tail: usize,
+) -> Result<Vec<Table3Row>> {
+    // BF16 reference
+    let mut cfg = base.clone();
+    cfg.recipe = "bf16".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    let mut tr = Trainer::new(cfg.clone())?;
+    tr.train(steps)?;
+    let base_loss = tr.log.tail_mean_loss(tail).unwrap() as f64;
+    info!("table3: bf16 baseline loss {base_loss:.6}");
+
+    let mut rows = Vec::new();
+    for op in ops {
+        let tag = op.replace('.', "_");
+        let mut cfg_op = cfg.clone();
+        cfg_op.recipe = format!("only_{tag}");
+        let mut tr = Trainer::new(cfg_op)
+            .with_context(|| format!("loading sensitivity artifact for {op}"))?;
+        tr.train(steps)?;
+        let loss = tr.log.tail_mean_loss(tail).unwrap() as f64;
+        let op_params = op_param_count(&tr.train_exe.manifest, op);
+        let delta = loss - base_loss;
+        let score = if op_params > 0 {
+            delta / op_params as f64 * 1e6
+        } else {
+            0.0
+        };
+        info!("table3: {op} loss {loss:.6} Δ {delta:+.6} score {score:+.4}");
+        rows.push(Table3Row { op: op.clone(), delta_loss: delta, op_params, score });
+    }
+    rows.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    Ok(rows)
+}
+
+pub fn write_table3(rows: &[Table3Row], path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "operator,delta_loss,op_params,sensitivity_score_x1e6")?;
+    for r in rows {
+        writeln!(f, "{},{:.6},{},{:.4}", r.op, r.delta_loss, r.op_params, r.score)?;
+    }
+    Ok(())
+}
+
+pub fn print_table3(rows: &[Table3Row]) {
+    println!("\nTable 3 — operator quantization sensitivity (normalized)");
+    println!(
+        "{:<12} {:>12} {:>12} {:>18}",
+        "Operator", "ΔLoss", "Params", "Score (Δ/p ×1e6)"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:>12.6} {:>12} {:>18.4}",
+            r.op, r.delta_loss, r.op_params, r.score
+        );
+    }
+}

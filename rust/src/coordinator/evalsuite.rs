@@ -1,0 +1,144 @@
+//! Downstream eval suite — the lm-eval-harness substitute (DESIGN.md
+//! §Substitutions, Tab. 1/8).
+//!
+//! Tasks:
+//!  * cloze: the corpus embeds deterministic facts "<subject> is
+//!    <object>."; we teacher-force the fact through the fwd artifact and
+//!    score per-token accuracy on the object span.
+//!  * heldout: loss/accuracy on fresh corpus batches via the eval artifact.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::trainer::Trainer;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::{HostTensor, LoadedArtifact};
+
+/// Scores for one recipe checkpoint.
+#[derive(Clone, Debug)]
+pub struct EvalScores {
+    pub recipe: String,
+    pub cloze_acc: f64,
+    pub heldout_loss: f32,
+    pub heldout_acc: f32,
+}
+
+/// Teacher-forced cloze accuracy over the corpus facts.
+///
+/// For each fact, the byte sequence "<subject> is <object>." is packed
+/// into a (batch, seq) window; accuracy counts next-token hits on the
+/// object span only.
+pub fn cloze_accuracy(
+    fwd: &LoadedArtifact,
+    params: &[HostTensor],
+    seed: u64,
+) -> Result<f64> {
+    let man = &fwd.manifest;
+    let batch = man.meta_usize("batch")?;
+    let seq = man.meta_usize("seq_len")?;
+    let vocab = man.meta_usize("vocab")?;
+    let corpus = Corpus::new(CorpusConfig { seed, ..CorpusConfig::default() });
+    let tok = Tokenizer::byte_level(); // facts are scored at byte level
+    let mut hits = 0usize;
+    let mut total = 0usize;
+
+    let facts = corpus.cloze_pairs();
+    let mut fi = 0;
+    while fi < facts.len() {
+        // pack up to `batch` facts into one forward call
+        let mut tokens = vec![32i32; batch * seq]; // pad with spaces
+        let mut spans: Vec<(usize, usize, Vec<u32>)> = Vec::new(); // row, prompt_len, object toks
+        for row in 0..batch {
+            if fi >= facts.len() {
+                break;
+            }
+            let (prompt, object) = &facts[fi];
+            fi += 1;
+            let p: Vec<u32> = tok.encode(prompt).iter().map(|&t| t % vocab as u32).collect();
+            let o: Vec<u32> = tok.encode(object).iter().map(|&t| t % vocab as u32).collect();
+            if p.len() + o.len() + 1 > seq {
+                continue;
+            }
+            for (i, &t) in p.iter().chain(o.iter()).enumerate() {
+                tokens[row * seq + i] = t as i32;
+            }
+            spans.push((row, p.len(), o));
+        }
+        if spans.is_empty() {
+            continue;
+        }
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::i32(vec![batch, seq], tokens.clone()));
+        let out = fwd.run(&inputs)?;
+        let logits = &out[0]; // (batch, seq, vocab)
+        if logits.shape != vec![batch, seq, vocab] {
+            bail!("unexpected fwd output shape {:?}", logits.shape);
+        }
+        for (row, plen, object) in spans {
+            for (j, &want) in object.iter().enumerate() {
+                // prediction at position plen+j-1 targets token plen+j
+                let pos = plen + j - 1 + 1 - 1; // = plen + j - 1
+                let base = (row * seq + pos) * vocab;
+                let slice = &logits.f32_data[base..base + vocab];
+                let argmax = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                total += 1;
+                if argmax == want as usize {
+                    hits += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        bail!("no cloze spans fit the sequence length");
+    }
+    Ok(hits as f64 / total as f64)
+}
+
+/// Train a fresh model per recipe and evaluate it (the Tab. 1 substitute).
+pub fn run_suite(
+    base: &crate::config::RunConfig,
+    recipes: &[String],
+    steps: usize,
+) -> Result<Vec<EvalScores>> {
+    let fwd = LoadedArtifact::load(&base.artifacts, &format!("fwd_{}", base.model))?;
+    let mut out = Vec::new();
+    for recipe in recipes {
+        let mut cfg = base.clone();
+        cfg.recipe = recipe.clone();
+        cfg.diag_every = 0;
+        cfg.eval_every = 0;
+        let mut tr = Trainer::new(cfg)?;
+        tr.train(steps)?;
+        let (heldout_loss, heldout_acc) = tr.evaluate(4)?;
+        let cloze = cloze_accuracy(&fwd, &tr.state.params, base.seed)?;
+        log::info!(
+            "eval-suite {recipe}: cloze {cloze:.3} heldout loss {heldout_loss:.4} acc {heldout_acc:.3}"
+        );
+        out.push(EvalScores {
+            recipe: recipe.clone(),
+            cloze_acc: cloze,
+            heldout_loss,
+            heldout_acc,
+        });
+    }
+    Ok(out)
+}
+
+pub fn print_suite(rows: &[EvalScores]) {
+    println!("\nTable 1 (substitute) — downstream eval across recipes");
+    println!(
+        "{:<14} {:>12} {:>14} {:>13}",
+        "Setting", "Cloze Acc", "Heldout Loss", "Heldout Acc"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>12.3} {:>14.4} {:>13.3}",
+            r.recipe, r.cloze_acc, r.heldout_loss, r.heldout_acc
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Post-training flow (App. D.1 analogue): continue training a
+//! pretrained checkpoint on a *shifted* data distribution (new corpus
+//! seed = the "SFT dataset") under different precisions, and track the
+//! NVFP4-vs-BF16 loss-gap trajectory (the Fig. 15c readout — the gap
+//! widening during decay is the paper's SFT observation).
+
+use anyhow::Result;
+use log::info;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::loss_gap_pct;
+use crate::coordinator::trainer::Trainer;
+
+/// One probe of the fine-tuning gap trajectory.
+#[derive(Clone, Copy, Debug)]
+pub struct GapPoint {
+    pub step: usize,
+    pub bf16_loss: f32,
+    pub quant_loss: f32,
+    pub gap_pct: f64,
+}
+
+/// Pretrain for `pretrain_steps` (bf16), checkpoint, then fine-tune the
+/// same initial state under bf16 and `quant_recipe` on a shifted corpus;
+/// returns the gap trajectory sampled every `probe_every` steps.
+pub fn finetune_gap_study(
+    base: &RunConfig,
+    quant_recipe: &str,
+    pretrain_steps: usize,
+    finetune_steps: usize,
+    probe_every: usize,
+) -> Result<Vec<GapPoint>> {
+    // Phase 1: pretrain in BF16 on the base corpus.
+    let mut cfg = base.clone();
+    cfg.recipe = "bf16".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    let mut pre = Trainer::new(cfg.clone())?;
+    pre.train(pretrain_steps)?;
+    let ckpt_dir = base.out_dir.join("finetune_ckpt");
+    let ckpt = pre.save_checkpoint_to(&ckpt_dir)?;
+    info!(
+        "finetune: pretrained {} steps (loss {:.4}), checkpoint {}",
+        pretrain_steps,
+        pre.log.final_loss().unwrap(),
+        ckpt.display()
+    );
+
+    // Phase 2: fine-tune from the checkpoint on a shifted distribution.
+    let mut mk = |recipe: &str| -> Result<Trainer> {
+        let mut c = cfg.clone();
+        c.recipe = recipe.into();
+        c.seed = base.seed + 10_007; // shifted corpus = the "SFT" dataset
+        let mut tr = Trainer::new(c)?;
+        tr.load_params(&ckpt)?;
+        Ok(tr)
+    };
+    let mut ft_bf16 = mk("bf16")?;
+    let mut ft_quant = mk(quant_recipe)?;
+
+    let mut out = Vec::new();
+    let mut done = 0;
+    while done < finetune_steps {
+        let chunk = probe_every.min(finetune_steps - done);
+        ft_bf16.train(chunk)?;
+        ft_quant.train(chunk)?;
+        done += chunk;
+        let lb = ft_bf16.log.tail_mean_loss(5).unwrap();
+        let lq = ft_quant.log.tail_mean_loss(5).unwrap();
+        let p = GapPoint {
+            step: done,
+            bf16_loss: lb,
+            quant_loss: lq,
+            gap_pct: loss_gap_pct(lq, lb),
+        };
+        info!(
+            "finetune @{}: bf16 {:.4} vs {quant_recipe} {:.4} -> gap {:+.3}%",
+            p.step, p.bf16_loss, p.quant_loss, p.gap_pct
+        );
+        out.push(p);
+    }
+    Ok(out)
+}
+
+pub fn print_gap_trajectory(recipe: &str, points: &[GapPoint]) {
+    println!("\nFig. 15c (substitute) — fine-tuning loss gap ({recipe} vs bf16)");
+    println!("{:>8} {:>12} {:>12} {:>10}", "step", "bf16", recipe, "gap %");
+    for p in points {
+        println!(
+            "{:>8} {:>12.4} {:>12.4} {:>+10.3}",
+            p.step, p.bf16_loss, p.quant_loss, p.gap_pct
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! Training metrics: per-step records, CSV persistence, small analyses
+//! (loss-gap computation for the Tab. 2 report).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One training step's scalars.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub wall_ms: f64,
+}
+
+/// Append-only metric log for one run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricLog {
+    pub records: Vec<StepMetrics>,
+}
+
+impl MetricLog {
+    pub fn push(&mut self, m: StepMetrics) {
+        self.records.push(m);
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` records (smoother final-loss estimate).
+    pub fn tail_mean_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let k = n.min(self.records.len()).max(1);
+        let s: f32 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.loss)
+            .sum();
+        Some(s / k as f32)
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.wall_ms).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        writeln!(f, "step,loss,grad_norm,lr,wall_ms")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{:.3}",
+                r.step, r.loss, r.grad_norm, r.lr, r.wall_ms
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Relative loss gap vs a baseline, in percent (Tab. 2's "Loss Gap (%)").
+pub fn loss_gap_pct(loss: f32, baseline: f32) -> f64 {
+    ((loss as f64) - (baseline as f64)) / (baseline as f64) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepMetrics {
+        StepMetrics { step, loss, grad_norm: 1.0, lr: 1e-3, wall_ms: 5.0 }
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut log = MetricLog::default();
+        for i in 0..10 {
+            log.push(rec(i, i as f32));
+        }
+        assert_eq!(log.final_loss(), Some(9.0));
+        assert_eq!(log.tail_mean_loss(2), Some(8.5));
+        assert_eq!(log.tail_mean_loss(100), Some(4.5));
+    }
+
+    #[test]
+    fn gap_pct() {
+        assert!((loss_gap_pct(2.18, 2.168) - 0.5535).abs() < 0.01);
+        assert_eq!(loss_gap_pct(2.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn csv_written() {
+        let dir = std::env::temp_dir().join("chon_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        let mut log = MetricLog::default();
+        log.push(rec(0, 5.0));
+        log.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,loss"));
+        assert!(text.contains("0,5,1,0.001"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: training orchestration over the AOT artifacts.
+//!
+//! The paper's contribution is a training recipe (L1/L2), so L3 is the
+//! training-systems substrate the authors got from Flame/FSDP: trainer
+//! loop + optimizer state management, data prefetch, the longitudinal
+//! outlier monitor, the ablation runners that regenerate Tab. 2/3, the
+//! downstream eval suite, and checkpointing.
+
+pub mod ablation;
+pub mod evalsuite;
+pub mod finetune;
+pub mod metrics;
+pub mod monitor;
+pub mod trainer;
+
+pub use metrics::{loss_gap_pct, MetricLog, StepMetrics};
+pub use monitor::{DiagRecord, Monitor};
+pub use trainer::Trainer;

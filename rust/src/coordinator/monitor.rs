@@ -1,0 +1,196 @@
+//! Longitudinal outlier monitor — the Sec. 3 instrumentation.
+//!
+//! Stores the diag artifact's metric vector + per-channel magnitude maps
+//! at every probe step, derives the paper's longitudinal analyses
+//! (hot-channel persistence, kurtosis/FTZ/MSE trajectories) and persists
+//! everything as CSV for plotting.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::diagnostics;
+
+/// One diagnostics probe at a training step.
+#[derive(Clone, Debug)]
+pub struct DiagRecord {
+    pub step: usize,
+    /// values aligned with `Monitor::names`
+    pub values: Vec<f32>,
+    /// per-channel max-magnitude maps: (component tag, (layers x channels))
+    pub channel_maps: Vec<(String, Vec<Vec<f32>>)>,
+}
+
+/// The longitudinal series for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Monitor {
+    pub names: Vec<String>,
+    pub records: Vec<DiagRecord>,
+}
+
+impl Monitor {
+    pub fn new(names: Vec<String>) -> Self {
+        Monitor { names, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: DiagRecord) {
+        assert_eq!(rec.values.len(), self.names.len(), "diag schema mismatch");
+        self.records.push(rec);
+    }
+
+    /// Time series of one named metric.
+    pub fn series(&self, name: &str) -> Option<Vec<(usize, f32)>> {
+        let idx = self.names.iter().position(|n| n == name)?;
+        Some(
+            self.records
+                .iter()
+                .map(|r| (r.step, r.values[idx]))
+                .collect(),
+        )
+    }
+
+    /// Mean over all metrics whose name contains `needle` at each step —
+    /// e.g. needle=".act.kurt" gives the Fig. 5 activation-kurtosis curve.
+    pub fn series_mean_matching(&self, needle: &str) -> Vec<(usize, f32)> {
+        let idxs: Vec<usize> = self
+            .names
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.contains(needle))
+            .map(|(i, _)| i)
+            .collect();
+        if idxs.is_empty() {
+            return Vec::new();
+        }
+        self.records
+            .iter()
+            .map(|r| {
+                let s: f32 = idxs.iter().map(|&i| r.values[i]).sum();
+                (r.step, s / idxs.len() as f32)
+            })
+            .collect()
+    }
+
+    /// Hot-channel persistence (Sec. 3.3): Jaccard overlap of the top-k
+    /// channel set between consecutive probes, per component map.
+    /// Returns (component, Vec<(step, overlap-with-previous)>).
+    pub fn hot_channel_persistence(&self, k: usize) -> Vec<(String, Vec<(usize, f64)>)> {
+        let mut out = Vec::new();
+        if self.records.len() < 2 {
+            return out;
+        }
+        let n_maps = self.records[0].channel_maps.len();
+        for mi in 0..n_maps {
+            let comp = self.records[0].channel_maps[mi].0.clone();
+            let mut series = Vec::new();
+            for w in self.records.windows(2) {
+                // flatten layers: overlap computed on the concatenated map
+                let hot = |r: &DiagRecord| {
+                    let flat: Vec<f32> = r.channel_maps[mi]
+                        .1
+                        .iter()
+                        .flatten()
+                        .copied()
+                        .collect();
+                    diagnostics::hot_channels(&flat, k)
+                };
+                let a = hot(&w[0]);
+                let b = hot(&w[1]);
+                series.push((w[1].step, diagnostics::channel_overlap(&a, &b)));
+            }
+            out.push((comp, series));
+        }
+        out
+    }
+
+    /// Write the full metric series as a long-format CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        writeln!(f, "step,metric,value")?;
+        for r in &self.records {
+            for (n, v) in self.names.iter().zip(&r.values) {
+                writeln!(f, "{},{},{}", r.step, n, v)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write channel-magnitude maps (one CSV per component).
+    pub fn write_channel_csvs(&self, dir: &Path, prefix: &str) -> Result<()> {
+        if self.records.is_empty() {
+            return Ok(());
+        }
+        for (mi, (comp, _)) in self.records[0].channel_maps.iter().enumerate() {
+            let p = dir.join(format!("{prefix}_channels_{comp}.csv"));
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&p)?);
+            writeln!(f, "step,layer,channel,max_abs")?;
+            for r in &self.records {
+                for (li, chans) in r.channel_maps[mi].1.iter().enumerate() {
+                    for (ci, &v) in chans.iter().enumerate() {
+                        writeln!(f, "{},{},{},{}", r.step, li, ci, v)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, v: f32, hot: usize) -> DiagRecord {
+        let mut map = vec![0.1f32; 16];
+        map[hot] = 10.0;
+        DiagRecord {
+            step,
+            values: vec![v, v * 2.0],
+            channel_maps: vec![("gk".into(), vec![map])],
+        }
+    }
+
+    #[test]
+    fn series_lookup() {
+        let mut m = Monitor::new(vec!["a.kurt".into(), "b.kurt".into()]);
+        m.push(rec(0, 1.0, 3));
+        m.push(rec(10, 2.0, 3));
+        assert_eq!(m.series("a.kurt").unwrap(), vec![(0, 1.0), (10, 2.0)]);
+        let mean = m.series_mean_matching(".kurt");
+        assert_eq!(mean, vec![(0, 1.5), (10, 3.0)]);
+    }
+
+    #[test]
+    fn persistence_detects_fixed_vs_drifting() {
+        let mut fixed = Monitor::new(vec!["x".into(), "y".into()]);
+        for s in 0..5 {
+            fixed.push(rec(s * 10, 1.0, 7)); // same hot channel
+        }
+        let p = fixed.hot_channel_persistence(1);
+        assert!(p[0].1.iter().all(|&(_, j)| j == 1.0));
+
+        let mut drift = Monitor::new(vec!["x".into(), "y".into()]);
+        for s in 0..5 {
+            drift.push(rec(s * 10, 1.0, s)); // hot channel moves every probe
+        }
+        let p = drift.hot_channel_persistence(1);
+        assert!(p[0].1.iter().all(|&(_, j)| j == 0.0));
+    }
+
+    #[test]
+    fn csv_output() {
+        let dir = std::env::temp_dir().join("chon_monitor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = Monitor::new(vec!["a".into(), "b".into()]);
+        m.push(rec(0, 1.0, 0));
+        m.write_csv(&dir.join("diag.csv")).unwrap();
+        m.write_channel_csvs(&dir, "run").unwrap();
+        assert!(dir.join("run_channels_gk.csv").exists());
+        let text = std::fs::read_to_string(dir.join("diag.csv")).unwrap();
+        assert!(text.contains("0,a,1"));
+    }
+}

@@ -1,0 +1,365 @@
+//! The training orchestrator: owns model/optimizer state as host tensors,
+//! drives the AOT train/eval/diag executables, the data prefetcher, the
+//! longitudinal monitor and checkpointing. Python never runs here.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use log::info;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{MetricLog, StepMetrics};
+use crate::coordinator::monitor::{DiagRecord, Monitor};
+use crate::data::batcher::{Batch, Batcher, Prefetcher};
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::{
+    save_checkpoint, DType, HostTensor, LoadedArtifact,
+};
+
+/// Model + optimizer state in manifest order.
+pub struct TrainState {
+    /// parameter tensors, aligned with the "params" input slots
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: usize,
+    /// names of the parameter slots (e.g. "params['embed']")
+    pub names: Vec<String>,
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub train_exe: std::rc::Rc<LoadedArtifact>,
+    /// lazily compiled on first use (XLA compiles are expensive on 1 core)
+    diag_exe: Option<std::rc::Rc<LoadedArtifact>>,
+    eval_exe: Option<std::rc::Rc<LoadedArtifact>>,
+    diag_tried: bool,
+    eval_tried: bool,
+    pub state: TrainState,
+    pub log: MetricLog,
+    pub monitor: Monitor,
+    prefetch: Prefetcher,
+    /// (batch, seq_len) from the artifact meta
+    pub batch: usize,
+    pub seq_len: usize,
+    pub total_steps: usize,
+}
+
+/// Split train-artifact outputs: params, m, v (k each), then scalars.
+fn split_state_outputs(
+    outputs: Vec<HostTensor>,
+    k: usize,
+) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>, Vec<f32>)> {
+    if outputs.len() < 3 * k + 3 {
+        bail!("train outputs {} < 3*{k}+3", outputs.len());
+    }
+    let mut it = outputs.into_iter();
+    let params: Vec<HostTensor> = it.by_ref().take(k).collect();
+    let m: Vec<HostTensor> = it.by_ref().take(k).collect();
+    let v: Vec<HostTensor> = it.by_ref().take(k).collect();
+    let scalars: Vec<f32> = it
+        .map(|t| {
+            if t.dtype == DType::F32 {
+                t.f32_data[0]
+            } else {
+                t.i32_data[0] as f32
+            }
+        })
+        .collect();
+    Ok((params, m, v, scalars))
+}
+
+impl Trainer {
+    /// Build a trainer from a run config: loads artifacts, initializes
+    /// parameters via the init artifact, spins up the data prefetcher.
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        let dir = cfg.artifacts.clone();
+        let train_name = format!("train_{}_{}", cfg.model, cfg.recipe);
+        let train_exe = LoadedArtifact::load_cached(&dir, &train_name)
+            .with_context(|| format!("loading {train_name}"))?;
+        let man = &train_exe.manifest;
+        let vocab = man.meta_usize("vocab")?;
+        let batch = man.meta_usize("batch")?;
+        let seq_len = man.meta_usize("seq_len")?;
+        let total_steps = if cfg.steps > 0 {
+            cfg.steps
+        } else {
+            man.meta_usize("total_steps")?
+        };
+
+        // init params
+        let init_exe = LoadedArtifact::load_cached(&dir, &format!("init_{}", cfg.model))?;
+        let params = init_exe.run(&[HostTensor::scalar_i32(cfg.seed as i32)])?;
+        let names: Vec<String> = man
+            .inputs_with_prefix("params")
+            .iter()
+            .map(|s| s.name.clone())
+            .collect();
+        if params.len() != names.len() {
+            bail!(
+                "init produced {} tensors, train expects {} params",
+                params.len(),
+                names.len()
+            );
+        }
+        let zeros =
+            |ps: &[HostTensor]| ps.iter().map(|p| HostTensor::zeros(p.dtype, p.shape.clone())).collect();
+        let state = TrainState {
+            m: zeros(&params),
+            v: zeros(&params),
+            params,
+            step: 0,
+            names,
+        };
+
+        // data pipeline
+        let corpus = Corpus::new(CorpusConfig { seed: cfg.seed, ..CorpusConfig::default() });
+        let tok_text = corpus.generate(32 * 1024, u64::MAX);
+        let tokenizer = if vocab > 256 {
+            Tokenizer::train(&tok_text, vocab)
+        } else {
+            Tokenizer::byte_level()
+        };
+        let batcher = Batcher::new(corpus, tokenizer, batch, seq_len, vocab);
+        let prefetch = Prefetcher::spawn(batcher, 4);
+
+        // metric names come from the (cheap) manifest, not the executable
+        let names = crate::runtime::Manifest::load(
+            &dir,
+            &format!("diag_{}_{}", cfg.model, diag_recipe(&cfg.recipe)),
+        )
+        .map(|m| m.metrics)
+        .unwrap_or_default();
+        Ok(Trainer {
+            cfg,
+            train_exe,
+            diag_exe: None,
+            eval_exe: None,
+            diag_tried: false,
+            eval_tried: false,
+            state,
+            log: MetricLog::default(),
+            monitor: Monitor::new(names),
+            prefetch,
+            batch,
+            seq_len,
+            total_steps,
+        })
+    }
+
+    fn batch_tensors(&self, b: &Batch) -> (HostTensor, HostTensor) {
+        (
+            HostTensor::i32(vec![b.batch, b.seq_len], b.tokens.clone()),
+            HostTensor::i32(vec![b.batch, b.seq_len], b.targets.clone()),
+        )
+    }
+
+    /// Run one training step; returns its metrics.
+    pub fn step(&mut self) -> Result<StepMetrics> {
+        let b = self.prefetch.next();
+        let (tokens, targets) = self.batch_tensors(&b);
+        let t0 = Instant::now();
+        let k = self.state.params.len();
+        let mut inputs = Vec::with_capacity(3 * k + 4);
+        inputs.extend(self.state.params.iter().cloned());
+        inputs.extend(self.state.m.iter().cloned());
+        inputs.extend(self.state.v.iter().cloned());
+        inputs.push(HostTensor::scalar_i32(self.state.step as i32));
+        inputs.push(tokens);
+        inputs.push(targets);
+        inputs.push(HostTensor::scalar_i32(self.cfg.seed as i32));
+        let outputs = self.train_exe.run(&inputs)?;
+        let (params, m, v, scalars) = split_state_outputs(outputs, k)?;
+        self.state.params = params;
+        self.state.m = m;
+        self.state.v = v;
+        self.state.step += 1;
+        let met = StepMetrics {
+            step: self.state.step,
+            loss: scalars[0],
+            grad_norm: scalars[1],
+            lr: scalars[2],
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        self.log.push(met);
+        Ok(met)
+    }
+
+    /// Lazily compile the diag executable (expensive; only when probing).
+    fn ensure_diag(&mut self) -> Option<&LoadedArtifact> {
+        if !self.diag_tried {
+            self.diag_tried = true;
+            self.diag_exe = LoadedArtifact::load_cached(
+                &self.cfg.artifacts,
+                &format!("diag_{}_{}", self.cfg.model, diag_recipe(&self.cfg.recipe)),
+            )
+            .ok();
+        }
+        self.diag_exe.as_deref()
+    }
+
+    /// Lazily compile the eval executable.
+    pub fn ensure_eval(&mut self) -> Option<&LoadedArtifact> {
+        if !self.eval_tried {
+            self.eval_tried = true;
+            self.eval_exe = LoadedArtifact::load_cached(
+                &self.cfg.artifacts,
+                &format!("eval_{}_{}", self.cfg.model, eval_recipe(&self.cfg.recipe)),
+            )
+            .ok();
+        }
+        self.eval_exe.as_deref()
+    }
+
+    /// Run the diag artifact on a fresh batch and record it.
+    pub fn diagnose(&mut self) -> Result<()> {
+        if self.ensure_diag().is_none() {
+            return Ok(());
+        }
+        let diag = self.diag_exe.as_ref().unwrap();
+        let b = self.prefetch.next();
+        let (tokens, _) = self.batch_tensors(&b);
+        let mut inputs = self.state.params.clone();
+        inputs.push(tokens);
+        inputs.push(HostTensor::scalar_i32(self.state.step as i32));
+        let outputs = diag.run(&inputs)?;
+        // output 0: metric vector; 1..: channel maps (layers x channels)
+        let values = outputs[0].f32_data.clone();
+        let map_names: Vec<&str> = match outputs.len() {
+            4 => vec!["attn_o", "mlp_up", "attn_gk"],
+            3 => vec!["attn_o", "mlp_up"],
+            n => bail!("unexpected diag output count {n}"),
+        };
+        let mut channel_maps = Vec::new();
+        for (t, name) in outputs[1..].iter().zip(map_names) {
+            let (layers, chans) = (t.shape[0], t.shape[1]);
+            let rows = (0..layers)
+                .map(|l| t.f32_data[l * chans..(l + 1) * chans].to_vec())
+                .collect();
+            channel_maps.push((name.to_string(), rows));
+        }
+        self.monitor.push(DiagRecord { step: self.state.step, values, channel_maps });
+        Ok(())
+    }
+
+    /// Evaluate held-out loss/accuracy on `n_batches` fresh batches.
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<(f32, f32)> {
+        if self.ensure_eval().is_none() {
+            bail!("no eval artifact for {}/{}", self.cfg.model, self.cfg.recipe);
+        }
+        let eval = self.eval_exe.as_ref().unwrap();
+        let mut loss = 0.0f32;
+        let mut acc = 0.0f32;
+        for _ in 0..n_batches {
+            let b = self.prefetch.next();
+            let (tokens, targets) = self.batch_tensors(&b);
+            let mut inputs = self.state.params.clone();
+            inputs.push(tokens);
+            inputs.push(targets);
+            let out = eval.run(&inputs)?;
+            loss += out[0].f32_data[0];
+            acc += out[1].f32_data[0];
+        }
+        Ok((loss / n_batches as f32, acc / n_batches as f32))
+    }
+
+    /// Main training loop with periodic diag/eval/logging.
+    pub fn train(&mut self, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            let met = self.step()?;
+            if self.cfg.log_every > 0 && met.step % self.cfg.log_every == 0 {
+                info!(
+                    "step {:4}  loss {:.4}  gnorm {:.3}  lr {:.2e}  {:.0} ms",
+                    met.step, met.loss, met.grad_norm, met.lr, met.wall_ms
+                );
+            }
+            if self.cfg.diag_every > 0 && met.step % self.cfg.diag_every == 0 {
+                self.diagnose()?;
+            }
+            if self.cfg.eval_every > 0
+                && met.step % self.cfg.eval_every == 0
+                && self.ensure_eval().is_some()
+            {
+                let (l, a) = self.evaluate(2)?;
+                info!("eval @ {}: loss {:.4} acc {:.3}", met.step, l, a);
+            }
+            if let Some(dir) = &self.cfg.checkpoint_dir {
+                if met.step % 100 == 0 {
+                    self.save_checkpoint_to(dir)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Persist params (+ metadata) to `<dir>/<model>_<recipe>_<step>.ckpt`.
+    pub fn save_checkpoint_to(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!(
+            "{}_{}_{:05}.ckpt",
+            self.cfg.model, self.cfg.recipe, self.state.step
+        ));
+        let tensors: Vec<(String, HostTensor)> = self
+            .state
+            .names
+            .iter()
+            .cloned()
+            .zip(self.state.params.iter().cloned())
+            .collect();
+        save_checkpoint(&path, &tensors)?;
+        Ok(path)
+    }
+
+    /// Restore params from a checkpoint (optimizer state resets).
+    pub fn load_params(&mut self, path: &Path) -> Result<()> {
+        let tensors = crate::runtime::load_checkpoint(path)?;
+        if tensors.len() != self.state.params.len() {
+            bail!(
+                "checkpoint has {} tensors, expected {}",
+                tensors.len(),
+                self.state.params.len()
+            );
+        }
+        for ((name, t), want) in tensors.iter().zip(&self.state.names) {
+            if name != want {
+                bail!("checkpoint tensor {name} != expected {want}");
+            }
+            let _ = t;
+        }
+        self.state.params = tensors.into_iter().map(|(_, t)| t).collect();
+        Ok(())
+    }
+
+    /// Write run outputs (metrics CSV, diag CSVs) to the out dir.
+    pub fn write_outputs(&self) -> Result<PathBuf> {
+        let dir = self
+            .cfg
+            .out_dir
+            .join(format!("{}_{}", self.cfg.model, self.cfg.recipe));
+        std::fs::create_dir_all(&dir)?;
+        self.log.write_csv(&dir.join("train.csv"))?;
+        if !self.monitor.records.is_empty() {
+            self.monitor.write_csv(&dir.join("diag.csv"))?;
+            self.monitor.write_channel_csvs(&dir, "diag")?;
+        }
+        Ok(dir)
+    }
+}
+
+fn diag_recipe(recipe: &str) -> &str {
+    // diag artifacts exist for chon + bf16; others reuse chon's probes
+    if recipe == "bf16" {
+        "bf16"
+    } else {
+        "chon"
+    }
+}
+
+fn eval_recipe(recipe: &str) -> &str {
+    match recipe {
+        "bf16" | "fp8" | "nvfp4" | "chon" => recipe,
+        _ => "chon",
+    }
+}

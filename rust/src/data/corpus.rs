@@ -1,0 +1,193 @@
+//! Synthetic corpus generator — the RedPajama substitute (DESIGN.md
+//! §Substitutions).
+//!
+//! Produces byte-level text with learnable structure at several scales so
+//! a small LM's loss actually decreases:
+//!   * Zipf-distributed word vocabulary (natural-language rank law)
+//!   * order-2 Markov chain over words (local predictability)
+//!   * templated "facts" with deterministic continuations, reused by the
+//!     downstream cloze eval suite (the Tab. 1 substitute)
+
+use crate::util::prng::{Rng, Zipf};
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub n_words: usize,
+    pub zipf_s: f64,
+    pub n_facts: usize,
+    pub fact_every: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { n_words: 512, zipf_s: 1.1, n_facts: 64, fact_every: 24, seed: 0 }
+    }
+}
+
+/// A templated fact: "<subject> is <object>." — subject determines object
+/// deterministically, so a trained model can be cloze-tested on it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fact {
+    pub subject: String,
+    pub object: String,
+}
+
+pub struct Corpus {
+    cfg: CorpusConfig,
+    words: Vec<String>,
+    zipf: Zipf,
+    /// markov[w] = the 4 preferred successors of word w
+    markov: Vec<[usize; 4]>,
+    pub facts: Vec<Fact>,
+}
+
+const SYLLABLES: [&str; 16] = [
+    "ka", "to", "mi", "ren", "shu", "bel", "or", "da", "vin", "lu", "pe",
+    "gor", "sa", "ti", "mon", "ze",
+];
+
+fn make_word(rng: &mut Rng) -> String {
+    let n = 2 + rng.below(2);
+    (0..n).map(|_| SYLLABLES[rng.below(SYLLABLES.len())]).collect()
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut words = Vec::with_capacity(cfg.n_words);
+        while words.len() < cfg.n_words {
+            let w = make_word(&mut rng);
+            if !words.contains(&w) {
+                words.push(w);
+            }
+        }
+        let markov = (0..cfg.n_words)
+            .map(|_| {
+                [
+                    rng.below(cfg.n_words),
+                    rng.below(cfg.n_words),
+                    rng.below(cfg.n_words),
+                    rng.below(cfg.n_words),
+                ]
+            })
+            .collect();
+        let mut facts = Vec::with_capacity(cfg.n_facts);
+        let mut srng = rng.fold_in(0xFAC7);
+        while facts.len() < cfg.n_facts {
+            let s = make_word(&mut srng);
+            let o = make_word(&mut srng);
+            if !facts.iter().any(|f: &Fact| f.subject == s) {
+                facts.push(Fact { subject: s, object: o });
+            }
+        }
+        let zipf = Zipf::new(cfg.n_words, cfg.zipf_s);
+        Corpus { cfg, words, zipf, markov, facts }
+    }
+
+    /// Generate `n_bytes` of corpus text, deterministic in (config, seed).
+    pub fn generate(&self, n_bytes: usize, stream_seed: u64) -> String {
+        let mut rng = Rng::new(self.cfg.seed ^ stream_seed.wrapping_mul(0x9E37));
+        let mut out = String::with_capacity(n_bytes + 64);
+        let mut prev = self.zipf.sample(&mut rng);
+        let mut since_fact = 0usize;
+        while out.len() < n_bytes {
+            since_fact += 1;
+            if since_fact >= self.cfg.fact_every && !self.facts.is_empty() {
+                since_fact = 0;
+                let f = &self.facts[rng.below(self.facts.len())];
+                out.push_str(&f.subject);
+                out.push_str(" is ");
+                out.push_str(&f.object);
+                out.push_str(". ");
+                continue;
+            }
+            // 70%: Markov successor; 30%: fresh Zipf draw
+            let w = if rng.uniform() < 0.7 {
+                self.markov[prev][rng.below(4)]
+            } else {
+                self.zipf.sample(&mut rng)
+            };
+            out.push_str(&self.words[w]);
+            prev = w;
+            if rng.uniform() < 0.12 {
+                out.push_str(". ");
+            } else {
+                out.push(' ');
+            }
+        }
+        out.truncate(n_bytes);
+        out
+    }
+
+    /// Cloze prompts for the eval suite: ("<subject> is ", "<object>").
+    pub fn cloze_pairs(&self) -> Vec<(String, String)> {
+        self.facts
+            .iter()
+            .map(|f| (format!("{} is ", f.subject), f.object.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let c1 = Corpus::new(CorpusConfig::default());
+        let c2 = Corpus::new(CorpusConfig::default());
+        assert_eq!(c1.generate(4096, 7), c2.generate(4096, 7));
+        assert_eq!(c1.facts, c2.facts);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let c1 = Corpus::new(CorpusConfig::default());
+        let c2 = Corpus::new(CorpusConfig { seed: 1, ..CorpusConfig::default() });
+        assert_ne!(c1.generate(1024, 0), c2.generate(1024, 0));
+    }
+
+    #[test]
+    fn exact_length_and_ascii() {
+        let c = Corpus::new(CorpusConfig::default());
+        let s = c.generate(10_000, 3);
+        assert_eq!(s.len(), 10_000);
+        assert!(s.is_ascii());
+    }
+
+    #[test]
+    fn facts_embedded_in_stream() {
+        let c = Corpus::new(CorpusConfig { fact_every: 4, ..CorpusConfig::default() });
+        let s = c.generate(50_000, 1);
+        let mut found = 0;
+        for f in &c.facts {
+            if s.contains(&format!("{} is {}", f.subject, f.object)) {
+                found += 1;
+            }
+        }
+        assert!(found > c.facts.len() / 4, "only {found} facts found");
+    }
+
+    #[test]
+    fn compressible_structure() {
+        // Markov + Zipf text must have much lower byte entropy than random.
+        let c = Corpus::new(CorpusConfig::default());
+        let s = c.generate(100_000, 2);
+        let mut counts = [0usize; 256];
+        for &b in s.as_bytes() {
+            counts[b as usize] += 1;
+        }
+        let n = s.len() as f64;
+        let h: f64 = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum();
+        assert!(h < 5.0, "byte entropy {h} too high");
+    }
+}

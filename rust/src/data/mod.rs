@@ -1,0 +1,6 @@
+//! Data substrate: synthetic corpus (RedPajama substitute), tokenizer,
+//! packing/batching with background prefetch.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;

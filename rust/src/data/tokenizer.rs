@@ -1,0 +1,153 @@
+//! Byte-level tokenizer with a greedy bigram-merge vocabulary (micro-BPE).
+//!
+//! Vocab layout: [0..256) raw bytes, [256..vocab) learned merges. A 256-
+//! entry vocab degrades to plain byte-level. Round-trip is lossless for
+//! any input (property-tested).
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    /// merges[i] = (left token, right token) producing token 256 + i
+    pub merges: Vec<(u32, u32)>,
+    rank: HashMap<(u32, u32), u32>,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer (vocab exactly 256).
+    pub fn byte_level() -> Self {
+        Tokenizer { vocab: 256, merges: Vec::new(), rank: HashMap::new() }
+    }
+
+    /// Train greedy bigram merges on `text` up to `vocab` entries.
+    pub fn train(text: &str, vocab: usize) -> Self {
+        assert!(vocab >= 256, "vocab must hold all bytes");
+        let mut toks: Vec<u32> = text.bytes().map(u32::from).collect();
+        let mut merges = Vec::new();
+        while merges.len() + 256 < vocab {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|&(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = 256 + merges.len() as u32;
+            merges.push(pair);
+            toks = merge_pass(&toks, pair, new_id);
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, 256 + i as u32))
+            .collect();
+        Tokenizer { vocab, merges, rank }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut toks: Vec<u32> = text.bytes().map(u32::from).collect();
+        // Apply merges in training order (rank order = priority order).
+        for (i, &pair) in self.merges.iter().enumerate() {
+            let id = 256 + i as u32;
+            if toks.len() < 2 {
+                break;
+            }
+            toks = merge_pass(&toks, pair, id);
+        }
+        toks
+    }
+
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(toks.len() * 2);
+        for &t in toks {
+            self.expand(t, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn expand(&self, t: u32, out: &mut Vec<u8>) {
+        if t < 256 {
+            out.push(t as u8);
+        } else {
+            let (a, b) = self.merges[(t - 256) as usize];
+            self.expand(a, out);
+            self.expand(b, out);
+        }
+    }
+
+    /// Fast path when no merge applies to the pair.
+    pub fn has_merge(&self, a: u32, b: u32) -> bool {
+        self.rank.contains_key(&(a, b))
+    }
+}
+
+fn merge_pass(toks: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::byte_level();
+        let s = "hello, NVFP4 world! \x01\x7f";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.encode(s).len(), s.len());
+    }
+
+    #[test]
+    fn trained_roundtrip_lossless() {
+        let c = Corpus::new(CorpusConfig::default());
+        let train = c.generate(20_000, 0);
+        let t = Tokenizer::train(&train, 512);
+        assert!(!t.merges.is_empty());
+        for seed in 1..4 {
+            let s = c.generate(5_000, seed);
+            assert_eq!(t.decode(&t.encode(&s)), s, "roundtrip seed {seed}");
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let c = Corpus::new(CorpusConfig::default());
+        let text = c.generate(20_000, 0);
+        let t = Tokenizer::train(&text, 512);
+        let toks = t.encode(&text);
+        assert!(
+            toks.len() < text.len() * 8 / 10,
+            "compression {} / {}",
+            toks.len(),
+            text.len()
+        );
+        assert!(toks.iter().all(|&x| (x as usize) < t.vocab));
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let t = Tokenizer::train("abababab cdcdcdcd", 260);
+        for tok in t.encode("abcdabcd xyz") {
+            assert!((tok as usize) < t.vocab);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Checkpoint-level analyses: RMSNorm γ distributions (Fig. 29/30,
+//! App. E.8) and lm_head representational overlap / superposition
+//! (Fig. 31, App. E.9).
+
+use crate::util::ndarray::Mat;
+
+/// Summary of one RMSNorm scale vector γ.
+#[derive(Clone, Copy, Debug)]
+pub struct GammaStats {
+    pub mean: f64,
+    pub max: f64,
+    /// fraction of channels with γ > 1 (the SA-vs-LA discriminator)
+    pub frac_above_one: f64,
+}
+
+/// Analyze one γ vector.
+pub fn gamma_stats(gamma: &[f32]) -> GammaStats {
+    let n = gamma.len().max(1) as f64;
+    let mean = gamma.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let max = gamma.iter().fold(f64::MIN, |m, &v| m.max(v as f64));
+    let above = gamma.iter().filter(|&&v| v > 1.0).count() as f64 / n;
+    GammaStats { mean, max, frac_above_one: above }
+}
+
+/// Depth trend of γ means: simple least-squares slope over layer index
+/// (Fig. 30 observation (i): |γ| grows with depth in SA models).
+pub fn gamma_depth_slope(per_layer_means: &[f64]) -> f64 {
+    let n = per_layer_means.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let xm = (n as f64 - 1.0) / 2.0;
+    let ym = per_layer_means.iter().sum::<f64>() / n as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in per_layer_means.iter().enumerate() {
+        let dx = i as f64 - xm;
+        num += dx * (y - ym);
+        den += dx * dx;
+    }
+    num / den.max(1e-30)
+}
+
+/// Weight overlap magnitude (Fig. 31): squared Frobenius norm of the
+/// off-diagonal of the row-normalized Gram matrix of `w` (rows =
+/// representation vectors), divided by the number of off-diagonal
+/// entries. 0 = orthogonal features; grows with superposition density.
+pub fn weight_overlap(w: &Mat) -> f64 {
+    let r = w.rows;
+    if r < 2 {
+        return 0.0;
+    }
+    // row norms
+    let norms: Vec<f64> = (0..r)
+        .map(|i| {
+            w.row(i)
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-30)
+        })
+        .collect();
+    let mut acc = 0.0;
+    for i in 0..r {
+        for j in (i + 1)..r {
+            let dot: f64 = w
+                .row(i)
+                .iter()
+                .zip(w.row(j))
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            let c = dot / (norms[i] * norms[j]);
+            acc += 2.0 * c * c; // count (i,j) and (j,i)
+        }
+    }
+    acc / (r * (r - 1)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn gamma_stats_basic() {
+        let s = gamma_stats(&[0.5, 1.5, 2.0, 0.9]);
+        assert!((s.mean - 1.225).abs() < 1e-6);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.frac_above_one, 0.5);
+    }
+
+    #[test]
+    fn depth_slope_direction() {
+        assert!(gamma_depth_slope(&[1.0, 1.2, 1.4, 1.9]) > 0.0);
+        assert!(gamma_depth_slope(&[2.0, 1.5, 1.0]) < 0.0);
+        assert_eq!(gamma_depth_slope(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn orthogonal_rows_have_zero_overlap() {
+        let eye = Mat::from_fn(8, 8, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert!(weight_overlap(&eye) < 1e-12);
+    }
+
+    #[test]
+    fn identical_rows_have_unit_overlap() {
+        let ones = Mat::from_fn(4, 8, |_, c| (c as f32 + 1.0).sin());
+        assert!((weight_overlap(&ones) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_rows_between_extremes_and_shrink_with_width() {
+        let mut rng = Rng::new(3);
+        let narrow = Mat::from_fn(32, 16, |_, _| rng.normal());
+        let wide = Mat::from_fn(32, 256, |_, _| rng.normal());
+        let on = weight_overlap(&narrow);
+        let ow = weight_overlap(&wide);
+        // E[cos^2] = 1/d for random vectors: wider space -> lower overlap
+        assert!(on > ow, "narrow {on} vs wide {ow}");
+        assert!((on - 1.0 / 16.0).abs() < 0.03);
+        assert!((ow - 1.0 / 256.0).abs() < 0.003);
+    }
+}

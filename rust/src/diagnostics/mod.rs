@@ -1,0 +1,260 @@
+//! Outlier diagnostics substrate — every indicator of Sec. 3 / App. E,
+//! natively in Rust so the coordinator can analyze checkpoints and
+//! activations on the request path.
+//!
+//! * kurtosis (Eq. 1), per-tensor and per-16×16-block (Fig. 1/4/5/17/18)
+//! * top-k magnitude + per-channel hot-channel maps (Fig. 3/6/20/21/22)
+//! * flush-to-zero ratio (Sec. 3 FTZ; Fig. 26/27)
+//! * softmax entropy + pre-softmax stats (Fig. 7)
+//! * SwiGLU weight cosine alignment (Fig. 8)
+//! * quantization-error MSE (Fig. 32), Frobenius energy (App. E.5)
+
+pub mod gamma;
+
+use crate::quant::nvfp4;
+use crate::util::ndarray::Mat;
+
+/// Excess kurtosis (Eq. 1) with f64 accumulation.
+pub fn kurtosis(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let n = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut m2 = 0.0;
+    let mut m4 = 0.0;
+    for &v in x {
+        let d = v as f64 - mean;
+        let d2 = d * d;
+        m2 += d2;
+        m4 += d2 * d2;
+    }
+    m2 /= n;
+    m4 /= n;
+    if m2 <= 1e-30 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+/// Summary of a per-block statistic map (the Fig. 4 min/avg/max triplet).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockSummary {
+    pub min: f64,
+    pub avg: f64,
+    pub max: f64,
+}
+
+/// Per-(bm×bn)-block kurtosis of a matrix; ragged edges truncated.
+pub fn block_kurtosis(x: &Mat, bm: usize, bn: usize) -> Vec<f64> {
+    let rb = x.rows / bm;
+    let cb = x.cols / bn;
+    let mut out = Vec::with_capacity(rb * cb);
+    let mut buf = vec![0.0f32; bm * bn];
+    for i in 0..rb {
+        for j in 0..cb {
+            let mut p = 0;
+            for r in i * bm..(i + 1) * bm {
+                let row = x.row(r);
+                buf[p..p + bn].copy_from_slice(&row[j * bn..(j + 1) * bn]);
+                p += bn;
+            }
+            out.push(kurtosis(&buf));
+        }
+    }
+    out
+}
+
+pub fn summarize(vals: &[f64]) -> BlockSummary {
+    if vals.is_empty() {
+        return BlockSummary::default();
+    }
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut sum = 0.0;
+    for &v in vals {
+        min = min.min(v);
+        max = max.max(v);
+        sum += v;
+    }
+    BlockSummary { min, avg: sum / vals.len() as f64, max }
+}
+
+/// Top-k magnitudes over a flat tensor, descending.
+pub fn topk_magnitude(x: &[f32], k: usize) -> Vec<f32> {
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let k = k.min(mags.len());
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    mags.truncate(k);
+    mags
+}
+
+/// Per-channel (column) max magnitude — the hot-channel map of Fig. 3.
+pub fn channel_max(x: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.cols];
+    for r in 0..x.rows {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            out[c] = out[c].max(v.abs());
+        }
+    }
+    out
+}
+
+/// Top-k hot channels (indices + magnitudes) from a channel map.
+pub fn hot_channels(chan: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..chan.len()).collect();
+    idx.sort_by(|&a, &b| {
+        chan[b].partial_cmp(&chan[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k.min(chan.len()));
+    idx.into_iter().map(|i| (i, chan[i])).collect()
+}
+
+/// Jaccard overlap of two hot-channel index sets — the drift/persistence
+/// measure behind "transient spikes -> fixed hot channels" (Sec. 3.3).
+pub fn channel_overlap(a: &[(usize, f32)], b: &[(usize, f32)]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let sa: std::collections::HashSet<usize> = a.iter().map(|&(i, _)| i).collect();
+    let sb: std::collections::HashSet<usize> = b.iter().map(|&(i, _)| i).collect();
+    let inter = sa.intersection(&sb).count() as f64;
+    let union = sa.union(&sb).count() as f64;
+    inter / union
+}
+
+/// NVFP4 flush-to-zero ratio of a tensor.
+pub fn ftz(x: &[f32]) -> f64 {
+    nvfp4::ftz_ratio(x)
+}
+
+/// NVFP4 quantization MSE of a tensor.
+pub fn quant_mse(x: &[f32]) -> f64 {
+    nvfp4::quant_mse(x)
+}
+
+/// Frobenius energy ‖X‖²_F (App. E.5).
+pub fn frobenius_energy(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Mean softmax entropy over rows of a logits matrix (Fig. 7).
+pub fn softmax_entropy(logits: &Mat) -> f64 {
+    let mut total = 0.0;
+    for r in 0..logits.rows {
+        let row = logits.row(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut z = 0.0f64;
+        for &v in row {
+            z += ((v - max) as f64).exp();
+        }
+        let logz = z.ln() + max as f64;
+        let mut h = 0.0;
+        for &v in row {
+            let logp = v as f64 - logz;
+            h -= logp.exp() * logp;
+        }
+        total += h;
+    }
+    total / logits.rows as f64
+}
+
+/// Mean |cos| alignment between paired rows of two matrices (Fig. 8).
+pub fn cosine_alignment(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut total = 0.0;
+    for r in 0..a.rows {
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (&x, &y) in a.row(r).iter().zip(b.row(r)) {
+            dot += x as f64 * y as f64;
+            na += x as f64 * x as f64;
+            nb += y as f64 * y as f64;
+        }
+        total += dot.abs() / (na.sqrt() * nb.sqrt()).max(1e-30);
+    }
+    total / a.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn kurtosis_reference_distributions() {
+        let mut rng = Rng::new(1);
+        let g: Vec<f32> = (0..200_000).map(|_| rng.normal()).collect();
+        assert!(kurtosis(&g).abs() < 0.15, "gaussian {}", kurtosis(&g));
+        let l: Vec<f32> = (0..200_000).map(|_| rng.laplace(1.0)).collect();
+        assert!((kurtosis(&l) - 3.0).abs() < 0.5, "laplace {}", kurtosis(&l));
+        let u: Vec<f32> = (0..200_000).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        assert!((kurtosis(&u) + 1.2).abs() < 0.1, "uniform {}", kurtosis(&u));
+    }
+
+    #[test]
+    fn outlier_raises_kurtosis() {
+        let mut rng = Rng::new(2);
+        let mut x: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let k0 = kurtosis(&x);
+        x[0] = 100.0;
+        assert!(kurtosis(&x) > k0 + 100.0);
+    }
+
+    #[test]
+    fn block_kurtosis_localizes() {
+        let mut rng = Rng::new(3);
+        let mut m = Mat::from_fn(64, 64, |_, _| rng.normal());
+        *m.at_mut(3, 5) = 100.0;
+        let bk = block_kurtosis(&m, 16, 16);
+        assert_eq!(bk.len(), 16);
+        let s = summarize(&bk);
+        assert!(s.max > 50.0);
+        assert_eq!(bk[0], s.max, "outlier in block (0,0)");
+        assert!(bk[1].abs() < 3.0);
+    }
+
+    #[test]
+    fn topk_and_channels() {
+        let m = Mat::from_vec(2, 4, vec![1., -7., 0.5, 2., 3., 0.1, 0.2, -2.]);
+        assert_eq!(topk_magnitude(&m.data, 2), vec![7.0, 3.0]);
+        let ch = channel_max(&m);
+        assert_eq!(ch, vec![3.0, 7.0, 0.5, 2.0]);
+        let hot = hot_channels(&ch, 2);
+        assert_eq!(hot[0].0, 1);
+        assert_eq!(hot[1].0, 0);
+    }
+
+    #[test]
+    fn overlap_measures_persistence() {
+        let a = vec![(1usize, 1.0f32), (2, 0.9), (3, 0.8)];
+        let b = vec![(1usize, 1.1f32), (2, 0.7), (9, 0.6)];
+        let j = channel_overlap(&a, &b);
+        assert!((j - 0.5).abs() < 1e-9); // |{1,2}| / |{1,2,3,9}|
+        assert_eq!(channel_overlap(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let uni = Mat::zeros(4, 64);
+        assert!((softmax_entropy(&uni) - (64f64).ln()).abs() < 1e-9);
+        let mut sharp = Mat::zeros(4, 64);
+        for r in 0..4 {
+            *sharp.at_mut(r, 0) = 100.0;
+        }
+        assert!(softmax_entropy(&sharp) < 1e-3);
+    }
+
+    #[test]
+    fn alignment_identity_and_random() {
+        let mut rng = Rng::new(4);
+        let a = Mat::from_fn(32, 64, |_, _| rng.normal());
+        assert!((cosine_alignment(&a, &a) - 1.0).abs() < 1e-9);
+        let b = Mat::from_fn(32, 64, |_, _| rng.normal());
+        assert!(cosine_alignment(&a, &b) < 0.3);
+    }
+
+    #[test]
+    fn frobenius_energy_known() {
+        assert_eq!(frobenius_energy(&[3.0, 4.0]), 25.0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Hot-Channel Patch engine (Sec. 4, App. A/B, Alg. 1).
+//!
+//! * scoring + top-k selection (Eq. 2/6)
+//! * the six compensation configurations of Tab. 4 (S/D × O1/O2 × W/A/B)
+//! * Alg. 1 both variants: fresh selection vs pre-computed indices
+//! * the pre-fuse vs post-fuse kernel pipelines benchmarked in Tab. 5
+
+pub mod modes;
+pub mod patch;
+pub mod pipeline;
+
+use crate::util::ndarray::Mat;
+
+/// Channel importance score, Eq. (2): s_j = mean|ΔX_:,j| + mean|ΔW_j,:|.
+///
+/// dx: (M, K) activation residual (channels along columns);
+/// dw: (K, N) weight residual (channels along rows). Returns K scores.
+pub fn scores(dx: &Mat, dw: &Mat) -> Vec<f64> {
+    assert_eq!(dx.cols, dw.rows);
+    let k = dx.cols;
+    let mut s = vec![0.0f64; k];
+    for r in 0..dx.rows {
+        let row = dx.row(r);
+        for (j, &v) in row.iter().enumerate() {
+            s[j] += v.abs() as f64;
+        }
+    }
+    for v in s.iter_mut() {
+        *v /= dx.rows as f64;
+    }
+    for j in 0..k {
+        let row = dw.row(j);
+        let m: f64 = row.iter().map(|&v| v.abs() as f64).sum::<f64>() / dw.cols as f64;
+        s[j] += m;
+    }
+    s
+}
+
+/// Indices of the k largest scores (stable: ties broken by lower index).
+pub fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k.min(scores.len()));
+    idx
+}
+
+/// Select hot channels from quantization residuals (Alg. 1 steps 1–3).
+pub fn select_hot_channels(x: &Mat, w: &Mat, k: usize) -> Vec<usize> {
+    let xq = crate::quant::nvfp4::fake_quant_mat(x);
+    let wq = crate::quant::nvfp4::fake_quant_mat_2d(w, 16);
+    let dx = x.sub(&xq);
+    let dw = w.sub(&wq);
+    top_k(&scores(&dx, &dw), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn scores_shape_and_positivity() {
+        let mut rng = Rng::new(1);
+        let dx = Mat::from_fn(8, 16, |_, _| rng.normal());
+        let dw = Mat::from_fn(16, 4, |_, _| rng.normal());
+        let s = scores(&dx, &dw);
+        assert_eq!(s.len(), 16);
+        assert!(s.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn top_k_orders_and_truncates() {
+        let s = vec![1.0, 5.0, 3.0, 5.0, 0.0];
+        assert_eq!(top_k(&s, 3), vec![1, 3, 2]); // tie 1 vs 3 -> lower first
+        assert_eq!(top_k(&s, 99).len(), 5);
+    }
+
+    #[test]
+    fn finds_planted_channels() {
+        let mut rng = Rng::new(2);
+        let mut x = Mat::from_fn(64, 128, |_, _| rng.normal());
+        let mut w = Mat::from_fn(128, 32, |_, _| rng.normal());
+        for r in 0..x.rows {
+            *x.at_mut(r, 77) *= 80.0;
+        }
+        for c in 0..w.cols {
+            *w.at_mut(13, c) *= 60.0;
+        }
+        let idx = select_hot_channels(&x, &w, 4);
+        assert!(idx.contains(&77), "activation channel found: {idx:?}");
+        assert!(idx.contains(&13), "weight channel found: {idx:?}");
+    }
+}

@@ -1,0 +1,224 @@
+//! The Tab. 4 configuration taxonomy: Mode (S/D) × Order (O1/O2) ×
+//! Target (W/A/B), with the quantized patched matmul for each.
+//!
+//! Numerics follow App. A:
+//!   baseline : Ŷ = ŴᵀX̂                         (Lemma A.3)
+//!   O1-A     : + Ŵ_Iᵀ ΔX_I                      (Lemma A.4, act patch)
+//!   O1-W     : + ΔW_Iᵀ X̂_I                      (symmetric weight patch)
+//!   O2-B     : + Ŵ_Iᵀ ΔX_I + ΔW_Iᵀ X̂_I          (Lemma A.5 — residual
+//!              error collapses to ΔW_IᵀΔX_I on I)
+//!
+//! S (single-kernel) materializes the concatenated operands and runs ONE
+//! GEMM (Alg. 1's concat trick); D (dual-kernel) runs base + correction
+//! GEMMs separately. Both produce identical values (property-tested);
+//! they differ in kernel structure and therefore in Tab. 5 overhead.
+
+use crate::quant::nvfp4;
+use crate::util::ndarray::{matmul, matmul_into, Mat};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Single,
+    Dual,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    O1,
+    O2,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Weight,
+    Activation,
+    Both,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HcpConfig {
+    pub mode: Mode,
+    pub order: Order,
+    pub target: Target,
+}
+
+impl HcpConfig {
+    /// The six named configurations of Tab. 4.
+    pub fn taxonomy() -> Vec<(&'static str, HcpConfig)> {
+        use Mode::*;
+        use Order::*;
+        use Target::*;
+        vec![
+            ("S-O1-W", HcpConfig { mode: Single, order: O1, target: Weight }),
+            ("S-O1-A", HcpConfig { mode: Single, order: O1, target: Activation }),
+            ("D-O1-W", HcpConfig { mode: Dual, order: O1, target: Weight }),
+            ("D-O1-A", HcpConfig { mode: Dual, order: O1, target: Activation }),
+            ("S-O2-B", HcpConfig { mode: Single, order: O2, target: Both }),
+            ("D-O2-B", HcpConfig { mode: Dual, order: O2, target: Both }),
+        ]
+    }
+}
+
+/// Quantized operands + residuals for one linear (shared by all configs).
+pub struct QuantizedPair {
+    pub xq: Mat,
+    pub wq: Mat,
+    pub dx: Mat,
+    pub dw: Mat,
+}
+
+impl QuantizedPair {
+    pub fn new(x: &Mat, w: &Mat) -> Self {
+        let xq = nvfp4::fake_quant_mat(x);
+        let wq = nvfp4::fake_quant_mat_2d(w, 16);
+        QuantizedPair { dx: x.sub(&xq), dw: w.sub(&wq), xq, wq }
+    }
+}
+
+/// Baseline quantized product ŴᵀX̂ with no compensation.
+pub fn baseline(q: &QuantizedPair) -> Mat {
+    matmul(&q.xq, &q.wq)
+}
+
+/// Apply one HCP configuration over hot channels `idx`.
+pub fn apply(cfg: HcpConfig, q: &QuantizedPair, idx: &[usize]) -> Mat {
+    let patch_a = matches!(cfg.target, Target::Activation | Target::Both);
+    let patch_w = matches!(cfg.target, Target::Weight | Target::Both);
+    match cfg.mode {
+        Mode::Single => {
+            // Concatenate along the contraction dim: one logical GEMM.
+            let mut lhs = q.xq.clone();
+            let mut rhs = q.wq.clone();
+            if patch_a {
+                lhs = lhs.hcat(&q.dx.gather_cols(idx));
+                rhs = rhs.vcat(&q.wq.gather_rows(idx));
+            }
+            if patch_w {
+                lhs = lhs.hcat(&q.xq.gather_cols(idx));
+                rhs = rhs.vcat(&q.dw.gather_rows(idx));
+            }
+            matmul(&lhs, &rhs)
+        }
+        Mode::Dual => {
+            let mut out = baseline(q);
+            if patch_a {
+                matmul_into(
+                    &q.dx.gather_cols(idx),
+                    &q.wq.gather_rows(idx),
+                    &mut out,
+                    true,
+                );
+            }
+            if patch_w {
+                matmul_into(
+                    &q.xq.gather_cols(idx),
+                    &q.dw.gather_rows(idx),
+                    &mut out,
+                    true,
+                );
+            }
+            out
+        }
+    }
+}
+
+/// Full patched matmul: quantize, select hot channels, compensate.
+/// Returns (output, hot channel indices).
+pub fn hcp_matmul(x: &Mat, w: &Mat, k: usize, cfg: HcpConfig) -> (Mat, Vec<usize>) {
+    let q = QuantizedPair::new(x, w);
+    let idx = super::top_k(&super::scores(&q.dx, &q.dw), k);
+    (apply(cfg, &q, &idx), idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn pair(m: usize, k: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(m, k, |_, _| rng.normal() * 2.0);
+        let w = Mat::from_fn(k, n, |_, _| rng.normal());
+        (x, w)
+    }
+
+    #[test]
+    fn single_and_dual_agree() {
+        let (x, w) = pair(16, 64, 32, 1);
+        let q = QuantizedPair::new(&x, &w);
+        let idx = crate::hcp::top_k(&crate::hcp::scores(&q.dx, &q.dw), 8);
+        for (name, cfg) in HcpConfig::taxonomy() {
+            let other = HcpConfig {
+                mode: if cfg.mode == Mode::Single { Mode::Dual } else { Mode::Single },
+                ..cfg
+            };
+            let a = apply(cfg, &q, &idx);
+            let b = apply(other, &q, &idx);
+            for (u, v) in a.data.iter().zip(&b.data) {
+                assert!((u - v).abs() < 1e-3, "{name}: {u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn o2_b_beats_baseline_and_single_sided() {
+        let (x, w) = pair(32, 128, 64, 2);
+        let truth = matmul(&x, &w);
+        let q = QuantizedPair::new(&x, &w);
+        let idx: Vec<usize> = (0..128).collect(); // full patch -> lemma regime
+        let mse = |m: &Mat| m.mse(&truth);
+        let base = mse(&baseline(&q));
+        let o1a = mse(&apply(
+            HcpConfig { mode: Mode::Single, order: Order::O1, target: Target::Activation },
+            &q,
+            &idx,
+        ));
+        let o1w = mse(&apply(
+            HcpConfig { mode: Mode::Single, order: Order::O1, target: Target::Weight },
+            &q,
+            &idx,
+        ));
+        let o2b = mse(&apply(
+            HcpConfig { mode: Mode::Single, order: Order::O2, target: Target::Both },
+            &q,
+            &idx,
+        ));
+        assert!(o2b < o1a && o2b < o1w, "o2b {o2b} o1a {o1a} o1w {o1w}");
+        assert!(o1a < base && o1w < base, "base {base}");
+    }
+
+    #[test]
+    fn full_patch_equals_second_order_identity() {
+        // Eq. (3): full-I patch == WᵀX - ΔWᵀΔX
+        let (x, w) = pair(8, 32, 16, 3);
+        let q = QuantizedPair::new(&x, &w);
+        let idx: Vec<usize> = (0..32).collect();
+        let got = apply(
+            HcpConfig { mode: Mode::Single, order: Order::O2, target: Target::Both },
+            &q,
+            &idx,
+        );
+        let mut want = matmul(&x, &w);
+        let corr = matmul(&q.dx, &q.dw);
+        for (a, b) in want.data.iter_mut().zip(&corr.data) {
+            *a -= b;
+        }
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mse_monotone_in_patch_size() {
+        let (x, w) = pair(32, 128, 32, 4);
+        let truth = matmul(&x, &w);
+        let cfg = HcpConfig { mode: Mode::Single, order: Order::O2, target: Target::Both };
+        let mut prev = f64::INFINITY;
+        for k in [0usize, 8, 32, 128] {
+            let (y, _) = hcp_matmul(&x, &w, k, cfg);
+            let e = y.mse(&truth);
+            assert!(e <= prev * 1.001, "k={k}: {e} vs {prev}");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Alg. 1 — Hot-Channel Patch operand expansion.
+//!
+//! Left panel (normal process): quantize, compute residuals, score,
+//! select top-k, gather, concat. Right panel (pre-computed indices):
+//! skip scoring/selection, reuse a cached index set — valid because hot
+//! channels are persistent in mid/late training (Sec. 3.3).
+
+use crate::quant::nvfp4;
+use crate::util::ndarray::Mat;
+
+/// Expanded operands ready for one concatenated GEMM: Y = X_out · W_out.
+pub struct Expanded {
+    /// (M, K + 2k): [X̂ | ΔX_I | X̂_I]
+    pub x_out: Mat,
+    /// (K + 2k, N): [Ŵ ; Ŵ_I ; ΔW_I]
+    pub w_out: Mat,
+    /// the hot-channel index set used
+    pub idx: Vec<usize>,
+}
+
+/// Alg. 1 left: full pipeline with fresh scoring + selection.
+pub fn expand(x: &Mat, w: &Mat, k: usize) -> Expanded {
+    // 1. Quantization & Dequantization
+    let xq = nvfp4::fake_quant_mat(x);
+    let wq = nvfp4::fake_quant_mat_2d(w, 16);
+    // 2. Residual computation
+    let dx = x.sub(&xq);
+    let dw = w.sub(&wq);
+    // 3. Scoring & selection (top-k)
+    let idx = super::top_k(&super::scores(&dx, &dw), k);
+    // 4–5. Gather + concat
+    expand_gathered(&xq, &wq, &dx, &dw, idx)
+}
+
+/// Alg. 1 right: reuse pre-computed indices (skips scoring entirely).
+pub fn expand_with_indices(x: &Mat, w: &Mat, idx: &[usize]) -> Expanded {
+    let xq = nvfp4::fake_quant_mat(x);
+    let wq = nvfp4::fake_quant_mat_2d(w, 16);
+    let dx = x.sub(&xq);
+    let dw = w.sub(&wq);
+    expand_gathered(&xq, &wq, &dx, &dw, idx.to_vec())
+}
+
+fn expand_gathered(xq: &Mat, wq: &Mat, dx: &Mat, dw: &Mat, idx: Vec<usize>) -> Expanded {
+    let x_out = xq.hcat(&dx.gather_cols(&idx)).hcat(&xq.gather_cols(&idx));
+    let w_out = wq.vcat(&wq.gather_rows(&idx)).vcat(&dw.gather_rows(&idx));
+    Expanded { x_out, w_out, idx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hcp::modes::{apply, HcpConfig, Mode, Order, QuantizedPair, Target};
+    use crate::util::ndarray::matmul;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn expanded_gemm_equals_s_o2_b() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(16, 64, |_, _| rng.normal() * 2.0);
+        let w = Mat::from_fn(64, 32, |_, _| rng.normal());
+        let e = expand(&x, &w, 8);
+        let y = matmul(&e.x_out, &e.w_out);
+        let q = QuantizedPair::new(&x, &w);
+        let want = apply(
+            HcpConfig { mode: Mode::Single, order: Order::O2, target: Target::Both },
+            &q,
+            &e.idx,
+        );
+        for (a, b) in y.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn precomputed_indices_match_fresh_when_stationary() {
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(16, 64, |_, _| rng.normal());
+        let w = Mat::from_fn(64, 16, |_, _| rng.normal());
+        let fresh = expand(&x, &w, 6);
+        let cached = expand_with_indices(&x, &w, &fresh.idx);
+        assert_eq!(fresh.idx, cached.idx);
+        assert_eq!(fresh.x_out.data, cached.x_out.data);
+        assert_eq!(fresh.w_out.data, cached.w_out.data);
+    }
+
+    #[test]
+    fn expansion_shapes() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(8, 32, |_, _| rng.normal());
+        let w = Mat::from_fn(32, 48, |_, _| rng.normal());
+        let e = expand(&x, &w, 4);
+        assert_eq!((e.x_out.rows, e.x_out.cols), (8, 32 + 8));
+        assert_eq!((e.w_out.rows, e.w_out.cols), (32 + 8, 48));
+    }
+}

@@ -1,0 +1,24 @@
+//! CHON — Compensated Hot-channel Optimization for NVFP4.
+//!
+//! Reproduction of "Dissecting Outlier Dynamics in LLM NVFP4 Pretraining"
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * L3 (this crate): training coordinator, PJRT runtime, diagnostics
+//!   monitor, HCP engine, synthetic-data pipeline, benches.
+//! * L2 (python/compile): JAX GLA / Softmax-Attention models with the CHON
+//!   quantized-training recipe, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * L1 (python/compile/kernels): Pallas kernels (NVFP4 quantizer, fused
+//!   HCP GEMM, RHT) inlined into the lowered HLO (interpret=True).
+//!
+//! Python never runs on the request path: the binary loads HLO text via
+//! the PJRT C API (`xla` crate) and drives training/eval/diagnostics.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod diagnostics;
+pub mod hcp;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,183 @@
+//! `chon` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train           train one (model, recipe) run with monitoring
+//!   ablate-table2   the Tab. 2 recipe ablation grid
+//!   ablate-table3   the Tab. 3 operator sensitivity study
+//!   eval-suite      the Tab. 1 downstream eval substitute
+//!   diag            longitudinal diagnostics run (high probe frequency)
+//!   info            list available artifacts
+//!
+//! Flags are `--key value`; see `chon help`.
+
+use anyhow::{bail, Context, Result};
+
+use chon::config::RunConfig;
+use chon::coordinator::{ablation, evalsuite, Trainer};
+
+const HELP: &str = "\
+chon — CHON/NVFP4 training coordinator
+
+USAGE: chon <command> [--key value ...]
+
+COMMANDS:
+  train          train one (model, recipe); writes runs/<model>_<recipe>/
+  ablate-table2  run the Tab. 2 recipe grid (GLA ablation)
+  ablate-table3  run the Tab. 3 operator sensitivity study
+  eval-suite     train bf16/fp8/nvfp4/chon and report downstream scores
+  finetune       post-training gap study (Fig. 15c substitute)
+  diag           longitudinal diagnostics (diag every 10 steps)
+  info           list artifacts in the artifacts directory
+  help           this text
+
+COMMON FLAGS:
+  --artifacts DIR   (default artifacts)   --model NAME   (default tiny_gla)
+  --recipe NAME     (default chon)        --steps N      (default: artifact)
+  --seed N          --out-dir DIR         --diag-every N --eval-every N
+  --log-every N     --checkpoint-dir DIR  --config FILE.toml
+";
+
+fn default_recipes(artifacts: &std::path::Path, model: &str) -> Vec<String> {
+    // every train_<model>_<recipe> artifact that exists, bf16 first
+    let mut found = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(artifacts) {
+        let prefix = format!("train_{model}_");
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if let Some(rest) = name
+                .strip_prefix(&prefix)
+                .and_then(|r| r.strip_suffix(".manifest.txt"))
+            {
+                if !rest.starts_with("only_") {
+                    found.push(rest.to_string());
+                }
+            }
+        }
+    }
+    found.sort_by_key(|r| (r != "bf16", r.clone()));
+    found
+}
+
+fn sensitivity_ops(artifacts: &std::path::Path, model: &str) -> Vec<String> {
+    let mut ops = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(artifacts) {
+        let prefix = format!("train_{model}_only_");
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if let Some(rest) = name
+                .strip_prefix(&prefix)
+                .and_then(|r| r.strip_suffix(".manifest.txt"))
+            {
+                ops.push(rest.replacen('_', ".", 1));
+            }
+        }
+    }
+    ops.sort();
+    ops
+}
+
+fn main() -> Result<()> {
+    chon::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(&args[1..])?;
+
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        "info" => {
+            let idx = cfg.artifacts.join("index.txt");
+            let listing = std::fs::read_to_string(&idx)
+                .with_context(|| format!("no index at {}", idx.display()))?;
+            println!("artifacts in {}:", cfg.artifacts.display());
+            print!("{listing}");
+        }
+        "train" => {
+            let steps = cfg.steps;
+            let mut tr = Trainer::new(cfg)?;
+            let n = if steps > 0 { steps } else { tr.total_steps };
+            tr.train(n)?;
+            if tr.ensure_eval().is_some() {
+                let (l, a) = tr.evaluate(4)?;
+                println!("final eval: loss {l:.4} acc {a:.3}");
+            }
+            let dir = tr.write_outputs()?;
+            println!(
+                "trained {} steps; final loss {:.4}; mean step {:.0} ms; outputs in {}",
+                n,
+                tr.log.final_loss().unwrap_or(f32::NAN),
+                tr.log.mean_step_ms(),
+                dir.display()
+            );
+        }
+        "diag" => {
+            cfg.diag_every = if cfg.diag_every == 0 { 10 } else { cfg.diag_every };
+            let steps = cfg.steps;
+            let mut tr = Trainer::new(cfg)?;
+            let n = if steps > 0 { steps } else { tr.total_steps };
+            tr.train(n)?;
+            let dir = tr.write_outputs()?;
+            for (comp, series) in tr.monitor.hot_channel_persistence(8) {
+                let head: Vec<f64> = series.iter().take(3).map(|&(_, j)| j).collect();
+                let tail: Vec<f64> =
+                    series.iter().rev().take(3).rev().map(|&(_, j)| j).collect();
+                println!(
+                    "hot-channel persistence {comp}: early {head:.2?} -> late {tail:.2?}"
+                );
+            }
+            println!("diagnostics written to {}", dir.display());
+        }
+        "ablate-table2" => {
+            let recipes = default_recipes(&cfg.artifacts, &cfg.model);
+            if recipes.is_empty() {
+                bail!("no train artifacts for model {}", cfg.model);
+            }
+            let steps = if cfg.steps > 0 { cfg.steps } else { 200 };
+            let rows = ablation::table2(&cfg, &recipes, steps, 10)?;
+            ablation::print_table2(&rows);
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let p = cfg.out_dir.join("table2.csv");
+            ablation::write_table2(&rows, &p)?;
+            println!("written {}", p.display());
+        }
+        "ablate-table3" => {
+            let ops = sensitivity_ops(&cfg.artifacts, &cfg.model);
+            if ops.is_empty() {
+                bail!(
+                    "no sensitivity artifacts for {} (build with --set core/full)",
+                    cfg.model
+                );
+            }
+            let steps = if cfg.steps > 0 { cfg.steps } else { 150 };
+            let rows = ablation::table3(&cfg, &ops, steps, 10)?;
+            ablation::print_table3(&rows);
+            std::fs::create_dir_all(&cfg.out_dir)?;
+            let p = cfg.out_dir.join("table3.csv");
+            ablation::write_table3(&rows, &p)?;
+            println!("written {}", p.display());
+        }
+        "finetune" => {
+            let steps = if cfg.steps > 0 { cfg.steps } else { 120 };
+            let points = chon::coordinator::finetune::finetune_gap_study(
+                &cfg, "nvfp4", steps, steps, (steps / 6).max(1),
+            )?;
+            chon::coordinator::finetune::print_gap_trajectory("nvfp4", &points);
+        }
+        "eval-suite" => {
+            let all = default_recipes(&cfg.artifacts, &cfg.model);
+            let wanted = ["bf16", "fp8", "nvfp4", "chon"];
+            let recipes: Vec<String> = all
+                .into_iter()
+                .filter(|r| wanted.contains(&r.as_str()))
+                .collect();
+            let steps = if cfg.steps > 0 { cfg.steps } else { 200 };
+            let rows = evalsuite::run_suite(&cfg, &recipes, steps)?;
+            evalsuite::print_suite(&rows);
+        }
+        other => bail!("unknown command {other:?}; see `chon help`"),
+    }
+    Ok(())
+}

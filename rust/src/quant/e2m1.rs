@@ -1,0 +1,248 @@
+//! FP4 E2M1 codec: 16 code points, RTN-even / floor / stochastic rounding.
+//!
+//! Code layout (4 bits): `s eem` — sign, 2 exponent bits (bias 1),
+//! 1 mantissa bit. Values: ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}.
+//!
+//! The rounding functions mirror python/compile/kernels/ref.py exactly
+//! (piecewise uniform sub-lattices with round-half-even), so Rust-side
+//! diagnostics agree with the AOT'd model numerics.
+
+/// Largest representable magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+
+/// The 8 non-negative code point values, indexed by the low 3 bits.
+pub const E2M1_VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Round half to even on the integer lattice.
+#[inline]
+fn round_half_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) & 1 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Round-to-nearest-even onto the E2M1 lattice (|v| clamped to 6).
+#[inline]
+pub fn rtn(v: f32) -> f32 {
+    let a = v.abs().min(E2M1_MAX);
+    let s = if v.is_sign_negative() { -1.0 } else { 1.0 };
+    let r = if a < 2.0 {
+        round_half_even(a * 2.0) * 0.5
+    } else if a < 4.0 {
+        round_half_even(a)
+    } else {
+        round_half_even(a * 0.5) * 2.0
+    };
+    s * r
+}
+
+/// Round toward zero onto the lattice.
+#[inline]
+pub fn floor(v: f32) -> f32 {
+    let a = v.abs().min(E2M1_MAX);
+    let s = if v.is_sign_negative() { -1.0 } else { 1.0 };
+    let r = if a < 2.0 {
+        (a * 2.0).floor() * 0.5
+    } else if a < 4.0 {
+        a.floor()
+    } else {
+        (a * 0.5).floor() * 2.0
+    };
+    s * r
+}
+
+/// Lattice spacing above magnitude `a`.
+#[inline]
+pub fn spacing(a: f32) -> f32 {
+    if a < 2.0 {
+        0.5
+    } else if a < 4.0 {
+        1.0
+    } else {
+        2.0
+    }
+}
+
+/// Stochastic rounding with uniform `u` in [0, 1).
+#[inline]
+pub fn sr(v: f32, u: f32) -> f32 {
+    let a = v.abs().min(E2M1_MAX);
+    let s = if v.is_sign_negative() { -1.0 } else { 1.0 };
+    let lo = if a < 2.0 {
+        (a * 2.0).floor() * 0.5
+    } else if a < 4.0 {
+        a.floor()
+    } else {
+        (a * 0.5).floor() * 2.0
+    };
+    let hi = (lo + spacing(lo)).min(E2M1_MAX);
+    let frac = if hi > lo { (a - lo) / (hi - lo) } else { 0.0 };
+    s * if u < frac { hi } else { lo }
+}
+
+/// Encode a lattice value (must be exact) into a 4-bit code.
+pub fn encode(v: f32) -> u8 {
+    let sign = if v.is_sign_negative() && v != 0.0 { 8u8 } else { 0 };
+    let a = v.abs();
+    let mag = E2M1_VALUES
+        .iter()
+        .position(|&x| x == a)
+        .unwrap_or_else(|| panic!("not an E2M1 value: {v}"));
+    sign | mag as u8
+}
+
+/// Decode a 4-bit code to its f32 value.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    let v = E2M1_VALUES[(code & 7) as usize];
+    if code & 8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Quantize (RTN) and encode in one step.
+#[inline]
+pub fn encode_rtn(v: f32) -> u8 {
+    encode(rtn(v))
+}
+
+/// Pack 4-bit codes two per byte (low nibble first).
+pub fn pack(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = pair[0] & 0xF;
+        let hi = if pair.len() > 1 { pair[1] & 0xF } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack two-per-byte nibbles back into `n` codes.
+pub fn unpack(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for &b in packed {
+        out.push(b & 0xF);
+        if out.len() < n {
+            out.push(b >> 4);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rtn_ties_to_even() {
+        // (input, expected) — identical table to the Python tests.
+        let cases = [
+            (0.25, 0.0),
+            (0.75, 1.0),
+            (1.25, 1.0),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+            (0.26, 0.5),
+            (5.01, 6.0),
+            (100.0, 6.0),
+            (-2.5, -2.0),
+            (-100.0, -6.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(rtn(x), want, "rtn({x})");
+        }
+    }
+
+    #[test]
+    fn all_codes_roundtrip() {
+        for code in 0u8..16 {
+            let v = decode(code);
+            if v == 0.0 && code == 8 {
+                continue; // -0 normalizes to +0 code
+            }
+            assert_eq!(decode(encode(v)), v);
+            assert_eq!(rtn(v), v, "code points are fixed points");
+        }
+    }
+
+    #[test]
+    fn floor_toward_zero() {
+        assert_eq!(floor(0.49), 0.0);
+        assert_eq!(floor(1.99), 1.5);
+        assert_eq!(floor(3.99), 3.0);
+        assert_eq!(floor(5.99), 4.0);
+        assert_eq!(floor(-1.99), -1.5);
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        let mut state = 0x1234_5678_u64;
+        let mut next_u = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 40) as f32) / (1u64 << 24) as f32
+        };
+        for &v in &[0.3f32, 1.2, 2.7, 4.5, -0.7, -3.3] {
+            let n = 200_000;
+            let mean: f64 = (0..n).map(|_| sr(v, next_u()) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - v as f64).abs() < 0.02,
+                "sr bias at {v}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn sr_lands_on_neighbours() {
+        for i in 0..1000 {
+            let v = -6.0 + 12.0 * (i as f32) / 1000.0;
+            let lo = floor(v);
+            let hi_mag = (lo.abs() + spacing(lo.abs())).min(E2M1_MAX);
+            for u in [0.0, 0.3, 0.7, 0.999] {
+                let q = sr(v, u);
+                assert!(
+                    q == lo || q.abs() == hi_mag,
+                    "sr({v}, {u}) = {q}, lo={lo}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let codes: Vec<u8> = (0..33).map(|i| (i % 16) as u8).collect();
+        let packed = pack(&codes);
+        assert_eq!(packed.len(), 17);
+        assert_eq!(unpack(&packed, 33), codes);
+    }
+
+    #[test]
+    fn rtn_is_nearest() {
+        let codes: Vec<f32> = (0u8..16).map(decode).collect();
+        for i in 0..2000 {
+            let v = -7.0 + 14.0 * (i as f32) / 2000.0;
+            let q = rtn(v);
+            let vc = v.clamp(-6.0, 6.0);
+            let best = codes
+                .iter()
+                .map(|&c| (c - vc).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!((q - vc).abs() <= best + 1e-6, "rtn({v})={q}");
+        }
+    }
+}

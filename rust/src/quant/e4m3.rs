@@ -1,0 +1,148 @@
+//! FP8 E4M3 codec (fn variant: no inf, max ±448), used for NVFP4 block
+//! decode scales (App. C.4 Eq. 41).
+//!
+//! `rtn` mirrors ref.py's frexp-based f32 emulation bit-for-bit; the
+//! encode/decode pair additionally gives the real 8-bit storage format
+//! (sign 1, exp 4 bias 7, mant 3) for the packed representation.
+
+pub const E4M3_MAX: f32 = 448.0;
+const MIN_NORMAL_EXP: i32 = -6;
+const MANT_BITS: i32 = 3;
+
+/// floor(log2(|v|)) for positive finite v, exact (via f32 bits + subnormal
+/// normalization) — the Rust analogue of jnp.frexp's exponent.
+#[inline]
+fn floor_log2(a: f32) -> i32 {
+    debug_assert!(a > 0.0);
+    let bits = a.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp != 0 {
+        exp - 127
+    } else {
+        // f32 subnormal: a = mant * 2^-149, floor(log2 mant) = 31 - lz
+        let mant = bits & 0x7F_FFFF;
+        -149 + (31 - mant.leading_zeros() as i32)
+    }
+}
+
+/// Round half to even on the integer lattice.
+#[inline]
+fn round_half_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) & 1 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+/// Round-to-nearest-even onto the E4M3 lattice, saturating at ±448.
+pub fn rtn(v: f32) -> f32 {
+    if v == 0.0 {
+        return 0.0;
+    }
+    let a = v.abs();
+    let s = if v < 0.0 { -1.0 } else { 1.0 };
+    let e = floor_log2(a).max(MIN_NORMAL_EXP);
+    let step = (2.0f32).powi(e - MANT_BITS);
+    let r = (round_half_even(a / step) * step).min(E4M3_MAX);
+    s * r
+}
+
+/// Encode an f32 (rounding to the lattice first) into the 8-bit format.
+pub fn encode(v: f32) -> u8 {
+    let q = rtn(v);
+    if q == 0.0 {
+        return 0;
+    }
+    let sign = if q < 0.0 { 0x80u8 } else { 0 };
+    let a = q.abs();
+    let e = floor_log2(a);
+    if e < MIN_NORMAL_EXP {
+        // subnormal: exp field 0, mantissa in units of 2^-9
+        let mant = (a / (2.0f32).powi(MIN_NORMAL_EXP - MANT_BITS)).round() as u8;
+        return sign | (mant & 0x07);
+    }
+    let exp_field = (e + 7) as u8;
+    let mant = ((a / (2.0f32).powi(e) - 1.0) * 8.0).round() as u8;
+    sign | (exp_field << 3) | (mant & 0x07)
+}
+
+/// Decode the 8-bit format to f32.
+pub fn decode(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0 } else { 1.0 };
+    let exp_field = ((code >> 3) & 0x0F) as i32;
+    let mant = (code & 0x07) as f32;
+    if exp_field == 0 {
+        return sign * mant * (2.0f32).powi(MIN_NORMAL_EXP - MANT_BITS);
+    }
+    sign * (1.0 + mant / 8.0) * (2.0f32).powi(exp_field - 7)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturates_at_max() {
+        assert_eq!(rtn(448.0), 448.0);
+        assert_eq!(rtn(1e9), 448.0);
+        assert_eq!(rtn(-1e9), -448.0);
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(rtn(0.0), 0.0);
+        assert_eq!(rtn(1.0), 1.0);
+        assert_eq!(rtn(17.3), 18.0); // step 2 at exponent 4
+        assert_eq!(rtn(-17.3), -18.0);
+        assert_eq!(rtn(447.0), 448.0); // step 32 at exponent 8
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_lattice() {
+        // every normal lattice point must roundtrip exactly
+        for exp in -6..=8i32 {
+            for m in 0..8u32 {
+                let v = (1.0 + m as f32 / 8.0) * (2.0f32).powi(exp);
+                if v > 448.0 {
+                    continue;
+                }
+                assert_eq!(decode(encode(v)), v, "v={v}");
+                assert_eq!(decode(encode(-v)), -v);
+            }
+        }
+        // subnormals
+        for m in 1..8u32 {
+            let v = m as f32 * (2.0f32).powi(-9);
+            assert_eq!(decode(encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn rtn_idempotent() {
+        let mut state = 99u64;
+        for _ in 0..2000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let u = ((state >> 40) as f32) / (1u64 << 24) as f32;
+            let v = (u - 0.5) * 1000.0;
+            let q = rtn(v);
+            assert_eq!(rtn(q), q, "not idempotent at {v}");
+            assert_eq!(decode(encode(q)), q, "codec mismatch at {v} -> {q}");
+        }
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(0.99999), -1);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(448.0), 8);
+        assert_eq!(floor_log2(0.015625), -6);
+    }
+}

@@ -1,0 +1,44 @@
+//! NVFP4 / MXFP4 / FP8 numeric-format substrate.
+//!
+//! Everything the paper's quantization pipeline needs, natively in Rust so
+//! the coordinator can run diagnostics, HCP selection and format benches
+//! without touching Python: E2M1 + E4M3 codecs, two-level microscaling
+//! (App. C.4), stochastic rounding, the MXFP4 baseline and the randomized
+//! Hadamard transform.
+
+pub mod e2m1;
+pub mod e4m3;
+pub mod mxfp4;
+pub mod nvfp4;
+pub mod recover;
+pub mod rht;
+
+/// Per-tensor FP8 (e4m3) fake quantization — the FP8 baseline runs.
+pub fn fp8_fake_quant(x: &[f32]) -> Vec<f32> {
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return x.to_vec();
+    }
+    let s = e4m3::E4M3_MAX / amax;
+    x.iter().map(|&v| e4m3::rtn(v * s) / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn fp8_much_finer_than_fp4() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let d8 = fp8_fake_quant(&x);
+        let mse8: f64 = x
+            .iter()
+            .zip(&d8)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / x.len() as f64;
+        assert!(mse8 < nvfp4::quant_mse(&x) / 10.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! MXFP4 baseline (OCP MX spec): 32-wide blocks, power-of-two (E8M0)
+//! shared scales, no global scale. The comparison format for the NVFP4
+//! recipe discussion (§2 Related Work, Quartet/AWS baselines).
+
+use crate::quant::e2m1;
+
+pub const BLOCK: usize = 32;
+
+/// floor(log2 a) via f32 bits (a > 0, normal).
+#[inline]
+fn floor_log2(a: f32) -> i32 {
+    (((a.to_bits() >> 23) & 0xFF) as i32) - 127
+}
+
+/// Fake-quantize with OCP MX semantics: shared exp = floor(log2 amax) - 2.
+pub fn fake_quant(x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len() % BLOCK, 0);
+    let mut out = Vec::with_capacity(x.len());
+    for blk in x.chunks(BLOCK) {
+        let amax_b = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax_b == 0.0 {
+            out.extend(std::iter::repeat(0.0).take(BLOCK));
+            continue;
+        }
+        let s_dec = (2.0f32).powi(floor_log2(amax_b) - 2);
+        for &v in blk {
+            out.push(e2m1::rtn(v / s_dec) * s_dec);
+        }
+    }
+    out
+}
+
+pub fn quant_mse(x: &[f32]) -> f64 {
+    let d = fake_quant(x);
+    x.iter()
+        .zip(&d)
+        .map(|(&a, &b)| {
+            let e = (a - b) as f64;
+            e * e
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::nvfp4;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn error_bounded() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() * 2.0).collect();
+        let d = fake_quant(&x);
+        for (blk, dblk) in x.chunks(32).zip(d.chunks(32)) {
+            let amax_b = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (a, b) in blk.iter().zip(dblk) {
+                assert!((a - b).abs() <= amax_b / 2.0 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn nvfp4_beats_mxfp4_on_gaussian() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..8192).map(|_| rng.normal() * 1.7).collect();
+        assert!(nvfp4::quant_mse(&x) < quant_mse(&x));
+    }
+
+    #[test]
+    fn zero_block() {
+        let x = vec![0.0f32; 32];
+        assert!(fake_quant(&x).iter().all(|&v| v == 0.0));
+    }
+}

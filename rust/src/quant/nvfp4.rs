@@ -1,0 +1,314 @@
+//! NVFP4 two-level microscaling quantizer (App. C.4), Rust substrate.
+//!
+//! Packed representation: 4-bit E2M1 codes (2/byte), one E4M3 (u8) decode
+//! scale per 1x16 block, one global f32 decode scale — exactly the tensor
+//! layout a Blackwell tensor-core GEMM consumes (Eq. 44). `fake_quant`
+//! shortcuts quantize→dequantize for diagnostics and parity tests against
+//! python/compile/kernels/ref.py.
+
+use crate::quant::{e2m1, e4m3};
+use crate::util::ndarray::Mat;
+use crate::util::prng::Rng;
+
+pub const BLOCK: usize = 16;
+
+/// Rounding mode for the element quantizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Round-to-nearest-even (forward path).
+    Rtn,
+    /// Stochastic rounding (backward path).
+    Sr,
+}
+
+/// A quantized tensor in storage format.
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub n: usize,
+    /// packed 4-bit codes, two per byte
+    pub codes: Vec<u8>,
+    /// one E4M3-encoded decode scale per block
+    pub scales: Vec<u8>,
+    /// global decode scale (f32, Def. C.1)
+    pub s_dec: f32,
+}
+
+impl Quantized {
+    /// Storage bytes (the memory-footprint model for EXPERIMENTS.md).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + 4
+    }
+}
+
+/// Global encode scale (Def. C.1): map amax onto 6*448.
+#[inline]
+pub fn global_enc_scale(amax: f32) -> f32 {
+    if amax > 0.0 {
+        (e2m1::E2M1_MAX * e4m3::E4M3_MAX) / amax
+    } else {
+        1.0
+    }
+}
+
+fn amax(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// Quantize a flat slice with 1x16 block scaling. n % 16 == 0.
+pub fn quantize(x: &[f32], rounding: Rounding, rng: Option<&mut Rng>) -> Quantized {
+    assert_eq!(x.len() % BLOCK, 0, "len {} % 16 != 0", x.len());
+    let s_enc = global_enc_scale(amax(x));
+    let s_dec = 1.0 / s_enc;
+    let nblocks = x.len() / BLOCK;
+    let mut codes = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(nblocks);
+    let mut local_rng;
+    let rng = match rng {
+        Some(r) => r,
+        None => {
+            local_rng = Rng::new(0);
+            &mut local_rng
+        }
+    };
+    for b in 0..nblocks {
+        let blk = &x[b * BLOCK..(b + 1) * BLOCK];
+        let amax_b = amax(blk);
+        let s_dec_b = amax_b / e2m1::E2M1_MAX;
+        let s_e4m3_code = e4m3::encode(s_dec_b * s_enc);
+        let s_e4m3 = e4m3::decode(s_e4m3_code);
+        scales.push(s_e4m3_code);
+        let denom = s_e4m3 * s_dec;
+        let s_enc_b = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+        for &v in blk {
+            let scaled = v * s_enc_b;
+            let q = match rounding {
+                Rounding::Rtn => e2m1::rtn(scaled),
+                Rounding::Sr => e2m1::sr(scaled, rng.uniform()),
+            };
+            codes.push(e2m1::encode(q));
+        }
+    }
+    Quantized { n: x.len(), codes: e2m1::pack(&codes), scales, s_dec }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let codes = e2m1::unpack(&q.codes, q.n);
+    let mut out = Vec::with_capacity(q.n);
+    for (b, &sc) in q.scales.iter().enumerate() {
+        let s = e4m3::decode(sc) * q.s_dec;
+        for i in 0..BLOCK {
+            out.push(e2m1::decode(codes[b * BLOCK + i]) * s);
+        }
+    }
+    out
+}
+
+/// quantize→dequantize in one pass (no packing), matching ref.py exactly.
+pub fn fake_quant(x: &[f32], rounding: Rounding, rng: Option<&mut Rng>) -> Vec<f32> {
+    assert_eq!(x.len() % BLOCK, 0);
+    let s_enc = global_enc_scale(amax(x));
+    let s_dec = 1.0 / s_enc;
+    let mut out = Vec::with_capacity(x.len());
+    let mut local_rng;
+    let rng = match rng {
+        Some(r) => r,
+        None => {
+            local_rng = Rng::new(0);
+            &mut local_rng
+        }
+    };
+    for blk in x.chunks(BLOCK) {
+        let amax_b = amax(blk);
+        let s_e4m3 = e4m3::rtn(amax_b / e2m1::E2M1_MAX * s_enc);
+        let denom = s_e4m3 * s_dec;
+        let s_enc_b = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+        for &v in blk {
+            let q = match rounding {
+                Rounding::Rtn => e2m1::rtn(v * s_enc_b),
+                Rounding::Sr => e2m1::sr(v * s_enc_b, rng.uniform()),
+            };
+            out.push(q * s_e4m3 * s_dec);
+        }
+    }
+    out
+}
+
+/// Fake-quantize a matrix with 1D (per-row 1x16) block scaling.
+pub fn fake_quant_mat(x: &Mat) -> Mat {
+    Mat::from_vec(x.rows, x.cols, fake_quant(&x.data, Rounding::Rtn, None))
+}
+
+/// Fake-quantize with 2D (tile x 16) block scaling along rows
+/// (ref.nvfp4_quant_dequant_2d semantics, weights path).
+pub fn fake_quant_mat_2d(x: &Mat, tile: usize) -> Mat {
+    assert_eq!(x.cols % BLOCK, 0);
+    let s_enc = global_enc_scale(amax(&x.data));
+    let s_dec = 1.0 / s_enc;
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let nblocks = x.cols / BLOCK;
+    for band0 in (0..x.rows).step_by(tile) {
+        let band_end = (band0 + tile).min(x.rows);
+        for b in 0..nblocks {
+            // amax over the (tile x 16) brick
+            let mut amax_b = 0.0f32;
+            for r in band0..band_end {
+                for c in b * BLOCK..(b + 1) * BLOCK {
+                    amax_b = amax_b.max(x.at(r, c).abs());
+                }
+            }
+            let s_e4m3 = e4m3::rtn(amax_b / e2m1::E2M1_MAX * s_enc);
+            let denom = s_e4m3 * s_dec;
+            let s_enc_b = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+            for r in band0..band_end {
+                for c in b * BLOCK..(b + 1) * BLOCK {
+                    let q = e2m1::rtn(x.at(r, c) * s_enc_b);
+                    *out.at_mut(r, c) = q * s_e4m3 * s_dec;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Flush-to-zero ratio: fraction of nonzero inputs quantizing to exact 0.
+pub fn ftz_ratio(x: &[f32]) -> f64 {
+    let deq = fake_quant(x, Rounding::Rtn, None);
+    let mut nz = 0usize;
+    let mut flushed = 0usize;
+    for (&v, &d) in x.iter().zip(&deq) {
+        if v != 0.0 {
+            nz += 1;
+            if d == 0.0 {
+                flushed += 1;
+            }
+        }
+    }
+    if nz == 0 {
+        0.0
+    } else {
+        flushed as f64 / nz as f64
+    }
+}
+
+/// Mean squared quantization error.
+pub fn quant_mse(x: &[f32]) -> f64 {
+    let deq = fake_quant(x, Rounding::Rtn, None);
+    x.iter()
+        .zip(&deq)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn pack_roundtrip_matches_fake_quant() {
+        let x = randn(256, 1, 2.0);
+        let q = quantize(&x, Rounding::Rtn, None);
+        let deq = dequantize(&q);
+        let fq = fake_quant(&x, Rounding::Rtn, None);
+        for (a, b) in deq.iter().zip(&fq) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn storage_is_4bit_plus_scales() {
+        let x = randn(1024, 2, 1.0);
+        let q = quantize(&x, Rounding::Rtn, None);
+        // 512 code bytes + 64 scale bytes + 4 global
+        assert_eq!(q.storage_bytes(), 512 + 64 + 4);
+    }
+
+    #[test]
+    fn error_bounded_by_block_amax() {
+        let x = randn(512, 3, 3.0);
+        let fq = fake_quant(&x, Rounding::Rtn, None);
+        for (blk, dblk) in x.chunks(16).zip(fq.chunks(16)) {
+            let amax_b = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = amax_b / 6.0 * (1.0 + 0.125) + 1e-7;
+            for (a, b) in blk.iter().zip(dblk) {
+                assert!((a - b).abs() <= bound, "err {} bound {}", (a - b).abs(), bound);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let x = vec![0.0f32; 64];
+        assert!(fake_quant(&x, Rounding::Rtn, None).iter().all(|&v| v == 0.0));
+        assert_eq!(ftz_ratio(&x), 0.0);
+    }
+
+    #[test]
+    fn outlier_flushes_block_neighbours() {
+        let mut x = vec![0.01f32; 64];
+        x[5] = 1000.0;
+        let d = fake_quant(&x, Rounding::Rtn, None);
+        assert!(d[0] == 0.0 && d[1] == 0.0, "small block-0 values flushed");
+        assert!((d[5] - 1000.0).abs() / 1000.0 < 0.07);
+        // other blocks keep their values
+        assert!((d[20] - 0.01).abs() / 0.01 < 0.25);
+        assert!(ftz_ratio(&x) > 0.0);
+    }
+
+    #[test]
+    fn sr_unbiased_pipeline() {
+        let x = randn(64, 4, 1.0);
+        let mut rng = Rng::new(5);
+        let n = 2000;
+        let mut acc = vec![0.0f64; 64];
+        for _ in 0..n {
+            let d = fake_quant(&x, Rounding::Sr, Some(&mut rng));
+            for (a, &v) in acc.iter_mut().zip(&d) {
+                *a += v as f64;
+            }
+        }
+        for (i, (&a, &v)) in acc.iter().zip(&x).enumerate() {
+            let mean = a / n as f64;
+            let blk = &x[(i / 16) * 16..(i / 16 + 1) * 16];
+            let amax_b = blk.iter().fold(0.0f32, |m, &w| m.max(w.abs()));
+            assert!(
+                (mean - v as f64).abs() < (amax_b / 6.0) as f64 + 0.02,
+                "bias at {i}: {mean} vs {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn fake_quant_2d_tile1_equals_1d() {
+        let x = Mat::from_vec(8, 32, randn(256, 6, 1.0));
+        let a = fake_quant_mat(&x);
+        let b = fake_quant_mat_2d(&x, 1);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn fake_quant_2d_not_finer_than_1d() {
+        let x = Mat::from_vec(64, 64, randn(4096, 7, 2.0));
+        let e1 = x.mse(&fake_quant_mat(&x));
+        let e2 = x.mse(&fake_quant_mat_2d(&x, 16));
+        assert!(e2 >= e1 * 0.999, "2D {e2} vs 1D {e1}");
+    }
+
+    #[test]
+    fn mse_scales_quadratically() {
+        let x = randn(1024, 8, 1.0);
+        let x10: Vec<f32> = x.iter().map(|&v| v * 10.0).collect();
+        let m1 = quant_mse(&x);
+        let m2 = quant_mse(&x10);
+        assert!((m2 / m1 - 100.0).abs() < 7.0, "ratio {}", m2 / m1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Recover-block mechanism (App. C.3 recipe item ⑤): an NVFP4-specific
+//! rehydration step for weight regions exhibiting *transient* outliers.
+//!
+//! A per-block EMA of the block amax tracks each block's steady-state
+//! range. When a block's instantaneous amax spikes above
+//! `threshold × EMA`, quantizing it would either clip the spike (2D
+//! shared scales) or flush the block's small values (inflated local
+//! scale); the recover mechanism instead "rehydrates" the block — keeps
+//! it in high precision for that step — and lets the EMA absorb the new
+//! range over subsequent steps. Persistent growth therefore re-enters the
+//! quantized path automatically, matching the paper's transient-vs-
+//! persistent outlier taxonomy (Sec. 3.3).
+
+use crate::quant::nvfp4::{self, Rounding, BLOCK};
+
+/// Streaming per-block range tracker + selective rehydration.
+#[derive(Clone, Debug)]
+pub struct RecoverBlocks {
+    /// EMA of per-block amax (None until first observation)
+    ema: Vec<f32>,
+    initialized: bool,
+    /// EMA smoothing factor
+    pub alpha: f32,
+    /// spike threshold: rehydrate when amax > threshold * ema
+    pub threshold: f32,
+    /// blocks rehydrated on the last step (diagnostics)
+    pub last_recovered: usize,
+    /// total rehydration events
+    pub total_recovered: usize,
+    steps: usize,
+}
+
+impl RecoverBlocks {
+    pub fn new(n_blocks: usize, alpha: f32, threshold: f32) -> Self {
+        RecoverBlocks {
+            ema: vec![0.0; n_blocks],
+            initialized: false,
+            alpha,
+            threshold,
+            last_recovered: 0,
+            total_recovered: 0,
+            steps: 0,
+        }
+    }
+
+    /// Number of tracked blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.ema.len()
+    }
+
+    /// Quantize-dequantize `x`, rehydrating transient-spike blocks.
+    ///
+    /// Returns the fake-quantized tensor; spiking blocks pass through in
+    /// full precision this step. Updates the EMA with the observed amax.
+    pub fn fake_quant_with_recovery(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ema.len() * BLOCK, "block count mismatch");
+        let mut out = nvfp4::fake_quant(x, Rounding::Rtn, None);
+        self.last_recovered = 0;
+        self.steps += 1;
+        for (b, blk) in x.chunks(BLOCK).enumerate() {
+            let amax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if self.initialized {
+                let ema = self.ema[b];
+                if ema > 0.0 && amax > self.threshold * ema {
+                    // transient spike: rehydrate the block this step
+                    out[b * BLOCK..(b + 1) * BLOCK].copy_from_slice(blk);
+                    self.last_recovered += 1;
+                    self.total_recovered += 1;
+                }
+            }
+            self.ema[b] = if self.initialized {
+                (1.0 - self.alpha) * self.ema[b] + self.alpha * amax
+            } else {
+                amax
+            };
+        }
+        self.initialized = true;
+        out
+    }
+
+    /// Fraction of blocks rehydrated on the last call.
+    pub fn recovery_rate(&self) -> f64 {
+        self.last_recovered as f64 / self.ema.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn base_tensor(n_blocks: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n_blocks * BLOCK).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn steady_state_never_recovers() {
+        let mut rb = RecoverBlocks::new(8, 0.1, 4.0);
+        for step in 0..20 {
+            let x = base_tensor(8, step);
+            rb.fake_quant_with_recovery(&x);
+        }
+        assert_eq!(rb.total_recovered, 0, "gaussian steady state is quiet");
+    }
+
+    #[test]
+    fn transient_spike_is_rehydrated_exactly() {
+        let mut rb = RecoverBlocks::new(8, 0.1, 4.0);
+        // warm up the EMA
+        for step in 0..5 {
+            rb.fake_quant_with_recovery(&base_tensor(8, step));
+        }
+        // inject a 100x spike into block 3
+        let mut x = base_tensor(8, 99);
+        let spike_pos = 3 * BLOCK + 7;
+        x[spike_pos] = 100.0;
+        let out = rb.fake_quant_with_recovery(&x);
+        assert_eq!(rb.last_recovered, 1);
+        // the whole block passed through unquantized
+        assert_eq!(&out[3 * BLOCK..4 * BLOCK], &x[3 * BLOCK..4 * BLOCK]);
+        // neighbours still quantized (value changed by quantization)
+        let prev_block = &out[2 * BLOCK..3 * BLOCK];
+        assert_ne!(prev_block, &x[2 * BLOCK..3 * BLOCK]);
+    }
+
+    #[test]
+    fn persistent_growth_reenters_quantized_path() {
+        let mut rb = RecoverBlocks::new(4, 0.5, 3.0);
+        for step in 0..5 {
+            rb.fake_quant_with_recovery(&base_tensor(4, step));
+        }
+        // block 0 becomes persistently hot: after the EMA adapts,
+        // recovery stops firing.
+        let mut fired = Vec::new();
+        for step in 0..10 {
+            let mut x = base_tensor(4, 100 + step);
+            for v in x[..BLOCK].iter_mut() {
+                *v *= 50.0;
+            }
+            rb.fake_quant_with_recovery(&x);
+            fired.push(rb.last_recovered);
+        }
+        assert!(fired[0] >= 1, "first spike recovered");
+        assert_eq!(*fired.last().unwrap(), 0, "EMA absorbed the new range");
+    }
+
+    #[test]
+    fn recovery_reduces_error_under_spikes() {
+        let mut rb = RecoverBlocks::new(8, 0.1, 4.0);
+        for step in 0..5 {
+            rb.fake_quant_with_recovery(&base_tensor(8, step));
+        }
+        let mut x = base_tensor(8, 7);
+        x[5] = 500.0; // block-0 spike flushes its neighbours without recovery
+        let with = rb.fake_quant_with_recovery(&x);
+        let without = nvfp4::fake_quant(&x, Rounding::Rtn, None);
+        let mse = |d: &[f32]| {
+            x.iter()
+                .zip(d)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(mse(&with) < mse(&without) / 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block count mismatch")]
+    fn wrong_size_rejected() {
+        let mut rb = RecoverBlocks::new(4, 0.1, 4.0);
+        rb.fake_quant_with_recovery(&[0.0; 16]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Randomized Hadamard Transform (backward/Wgrad path, App. C.3).
+//!
+//! In-place iterative FWHT butterflies; same pairing as ref.py's reshape
+//! formulation, so cross-language fixtures agree. `rht`/`rht_inv` are the
+//! orthonormal (1/sqrt n) randomized pair.
+
+use crate::util::ndarray::Mat;
+use crate::util::prng::Rng;
+
+/// In-place unnormalized FWHT over a power-of-2-length slice.
+/// fwht(fwht(x)) == n * x.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT size {n} not a power of 2");
+    let mut h = 1;
+    while h < n {
+        for group in (0..n).step_by(2 * h) {
+            for j in group..group + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Random ±1 signs derived from an Rng.
+pub fn random_signs(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.sign()).collect()
+}
+
+/// Orthonormal randomized Hadamard over the rows of a matrix (last dim).
+pub fn rht(x: &Mat, signs: &[f32]) -> Mat {
+    assert_eq!(x.cols, signs.len());
+    let scale = 1.0 / (x.cols as f32).sqrt();
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        for (v, &s) in row.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        fwht_inplace(row);
+        for v in row.iter_mut() {
+            *v *= scale;
+        }
+    }
+    out
+}
+
+/// Inverse of `rht`.
+pub fn rht_inv(y: &Mat, signs: &[f32]) -> Mat {
+    assert_eq!(y.cols, signs.len());
+    let scale = 1.0 / (y.cols as f32).sqrt();
+    let mut out = y.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        fwht_inplace(row);
+        for (v, &s) in row.iter_mut().zip(signs) {
+            *v *= scale * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn involution() {
+        let mut x = vec![1.0f32, 2.0, -3.0, 0.5, 7.0, -1.0, 0.0, 4.0];
+        let orig = x.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a / 8.0 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn hadamard_2() {
+        let mut x = vec![3.0f32, 1.0];
+        fwht_inplace(&mut x);
+        assert_eq!(x, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn rht_roundtrip() {
+        let x = rand_mat(8, 64, 1);
+        let mut rng = Rng::new(2);
+        let s = random_signs(64, &mut rng);
+        let y = rht(&x, &s);
+        let back = rht_inv(&y, &s);
+        for (a, b) in x.data.iter().zip(&back.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let x = rand_mat(4, 128, 3);
+        let mut rng = Rng::new(4);
+        let s = random_signs(128, &mut rng);
+        let y = rht(&x, &s);
+        assert!((x.frob_sq() - y.frob_sq()).abs() / x.frob_sq() < 1e-5);
+    }
+
+    #[test]
+    fn diffuses_spike() {
+        let mut x = Mat::zeros(1, 256);
+        *x.at_mut(0, 100) = 64.0;
+        let mut rng = Rng::new(5);
+        let s = random_signs(256, &mut rng);
+        let y = rht(&x, &s);
+        let max = y.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!((max - 64.0 / 16.0).abs() < 1e-4, "spike -> uniform ±4");
+    }
+
+    #[test]
+    fn wgrad_identity_before_quant() {
+        // (H X)^T (H dY) == X^T dY (orthogonality of the transform)
+        use crate::util::ndarray::matmul;
+        let x = rand_mat(64, 8, 6); // contraction dim = rows = 64
+        let dy = rand_mat(64, 5, 7);
+        let mut rng = Rng::new(8);
+        let s = random_signs(64, &mut rng);
+        let xr = rht(&x.transpose(), &s).transpose();
+        let dyr = rht(&dy.transpose(), &s).transpose();
+        let want = matmul(&x.transpose(), &dy);
+        let got = matmul(&xr.transpose(), &dyr);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Artifact manifests: the self-describing metadata emitted next to each
+//! HLO text file by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+
+/// One positional input/output slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub index: usize,
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl Slot {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed <name>.manifest.txt.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub meta: BTreeMap<String, String>,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    /// diag metric slot names (empty for non-diag artifacts)
+    pub metrics: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut name = String::new();
+        let mut meta = BTreeMap::new();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        let mut metrics = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.splitn(2, ' ');
+            let key = parts.next().unwrap();
+            let rest = parts.next().unwrap_or("");
+            match key {
+                "artifact" => name = rest.to_string(),
+                "input" | "output" => {
+                    let fields: Vec<&str> = rest.split(' ').collect();
+                    if fields.len() != 4 {
+                        bail!("manifest line {}: bad slot: {line}", lineno + 1);
+                    }
+                    let slot = Slot {
+                        index: fields[0].parse()?,
+                        name: fields[1].to_string(),
+                        dtype: DType::parse(fields[2])?,
+                        shape: if fields[3] == "scalar" {
+                            vec![]
+                        } else {
+                            fields[3]
+                                .split(',')
+                                .map(|d| d.parse::<usize>().map_err(Into::into))
+                                .collect::<Result<Vec<_>>>()?
+                        },
+                    };
+                    if key == "input" {
+                        inputs.push(slot);
+                    } else {
+                        outputs.push(slot);
+                    }
+                }
+                "metric" => metrics.push(rest.to_string()),
+                _ => {
+                    meta.insert(key.to_string(), rest.to_string());
+                }
+            }
+        }
+        if name.is_empty() {
+            bail!("manifest missing 'artifact' line");
+        }
+        Ok(Manifest { name, meta, inputs, outputs, metrics })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let p = dir.join(format!("{name}.manifest.txt"));
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading manifest {}", p.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("manifest {} missing meta {key}", self.name))?
+            .parse()
+            .with_context(|| format!("meta {key} not an integer"))
+    }
+
+    pub fn meta_str(&self, key: &str) -> &str {
+        self.meta.get(key).map(String::as_str).unwrap_or("")
+    }
+
+    /// Input slots whose names start with `prefix` (e.g. "params").
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<&Slot> {
+        self.inputs
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .collect()
+    }
+
+    /// Find an output slot index by exact name.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact train_tiny_gla_chon
+kind train
+model tiny_gla
+vocab 256
+input 0 params['embed'] f32 256,64
+input 1 step i32 scalar
+output 0 out[0]['embed'] f32 256,64
+output 1 out[3] f32 scalar
+metric L0.attn.q.act.kurt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "train_tiny_gla_chon");
+        assert_eq!(m.meta_str("kind"), "train");
+        assert_eq!(m.meta_usize("vocab").unwrap(), 256);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].shape, vec![256, 64]);
+        assert_eq!(m.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.outputs.len(), 2);
+        assert_eq!(m.metrics, vec!["L0.attn.q.act.kurt"]);
+        assert_eq!(m.inputs_with_prefix("params").len(), 1);
+        assert_eq!(m.output_index("out[3]"), Some(1));
+    }
+
+    #[test]
+    fn rejects_missing_name() {
+        assert!(Manifest::parse("kind train\n").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_slot() {
+        assert!(Manifest::parse("artifact x\ninput 0 y f32\n").is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! Loaded artifacts: HLO text -> PJRT executable + manifest, with a
+//! shape-checked execute. One global CPU client (PJRT clients are heavy).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+thread_local! {
+    // PjRtClient is Rc-backed (not Sync): one client per thread. The
+    // coordinator drives all PJRT work from a single thread; rust-side
+    // compute threads never touch the client.
+    static CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// The thread's PJRT CPU client (created on first use).
+pub fn client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+thread_local! {
+    // Compiled-executable memo: XLA compiles are expensive (seconds to
+    // minutes on a single core); ablation/bench flows reuse artifacts.
+    static EXE_CACHE: RefCell<HashMap<(PathBuf, String), Rc<LoadedArtifact>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Like `load`, but memoized per (dir, name) for this thread.
+    pub fn load_cached(dir: &Path, name: &str) -> Result<Rc<LoadedArtifact>> {
+        let key = (dir.to_path_buf(), name.to_string());
+        if let Some(hit) = EXE_CACHE.with(|c| c.borrow().get(&key).cloned()) {
+            return Ok(hit);
+        }
+        let loaded = Rc::new(Self::load(dir, name)?);
+        EXE_CACHE.with(|c| c.borrow_mut().insert(key, loaded.clone()));
+        Ok(loaded)
+    }
+
+    /// Load `<dir>/<name>.hlo.txt` (+ manifest), compile on the CPU client.
+    pub fn load(dir: &Path, name: &str) -> Result<LoadedArtifact> {
+        let manifest = Manifest::load(dir, name)?;
+        let hlo = manifest.hlo_path(dir);
+        let proto = xla::HloModuleProto::from_text_file(&hlo)
+            .with_context(|| format!("parsing HLO text {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(LoadedArtifact { manifest, exe })
+    }
+
+    /// Execute with host tensors; returns outputs in manifest order.
+    ///
+    /// Inputs are validated against the manifest (count, dtype, shape) so
+    /// coordinator bugs surface as errors, not XLA crashes.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest expects {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        for (t, slot) in inputs.iter().zip(&self.manifest.inputs) {
+            if t.shape != slot.shape || t.dtype != slot.dtype {
+                bail!(
+                    "{}: input {} ({}) expects {:?}{:?}, got {:?}{:?}",
+                    self.manifest.name,
+                    slot.index,
+                    slot.name,
+                    slot.dtype,
+                    slot.shape,
+                    t.dtype,
+                    t.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: single tuple of all outputs.
+        let parts = tuple.to_tuple().context("untupling result")?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest expects {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `PjRtClient::cpu().compile` ->
+//! `execute`. HLO *text* is the interchange format (xla_extension 0.5.1
+//! rejects jax>=0.5's 64-bit-id serialized protos).
+
+pub mod artifact;
+pub mod executable;
+pub mod tensor;
+
+pub use artifact::Manifest;
+pub use executable::{client, LoadedArtifact};
+pub use tensor::{load_checkpoint, save_checkpoint, DType, HostTensor};

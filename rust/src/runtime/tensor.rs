@@ -1,0 +1,220 @@
+//! Host tensors + conversion to/from xla::Literal, and the checkpoint
+//! binary format (magic + dtype + shape + raw data per tensor).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a host tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// A dense host tensor (row-major).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub i32_data: Vec<i32>,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { dtype: DType::F32, shape, f32_data: data, i32_data: Vec::new() }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { dtype: DType::I32, shape, f32_data: Vec::new(), i32_data: data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::f32(shape, vec![0.0; n]),
+            DType::I32 => HostTensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Convert into an xla Literal (reshaped to the tensor's shape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self.dtype {
+            DType::F32 => xla::Literal::vec1(&self.f32_data),
+            DType::I32 => xla::Literal::vec1(&self.i32_data),
+        };
+        if self.shape.is_empty() {
+            // scalar: vec1 of len 1 -> reshape to rank 0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Read a Literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// Write a list of named tensors to a checkpoint file.
+pub fn save_checkpoint(path: &Path, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(b"CHONCKPT")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[match t.dtype {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        }])?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match t.dtype {
+            DType::F32 => {
+                for &v in &t.f32_data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            DType::I32 => {
+                for &v in &t.i32_data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint file.
+pub fn load_checkpoint(path: &Path) -> Result<Vec<(String, HostTensor)>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != b"CHONCKPT" {
+        bail!("bad checkpoint magic in {}", path.display());
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let count = u32::from_le_bytes(u32buf) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32buf)?;
+        let nlen = u32::from_le_bytes(u32buf) as usize;
+        let mut nbuf = vec![0u8; nlen];
+        f.read_exact(&mut nbuf)?;
+        let name = String::from_utf8(nbuf)?;
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        f.read_exact(&mut u32buf)?;
+        let rank = u32::from_le_bytes(u32buf) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        let mut u64buf = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64buf)?;
+            shape.push(u64::from_le_bytes(u64buf) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let t = match tag[0] {
+            0 => {
+                let mut data = vec![0f32; n];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut u32buf)?;
+                    *v = f32::from_le_bytes(u32buf);
+                }
+                HostTensor::f32(shape, data)
+            }
+            1 => {
+                let mut data = vec![0i32; n];
+                for v in data.iter_mut() {
+                    f.read_exact(&mut u32buf)?;
+                    *v = i32::from_le_bytes(u32buf);
+                }
+                HostTensor::i32(shape, data)
+            }
+            other => bail!("bad dtype tag {other}"),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("chon_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("test.ckpt");
+        let tensors = vec![
+            ("a".to_string(), HostTensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.])),
+            ("b".to_string(), HostTensor::i32(vec![4], vec![7, 8, 9, 10])),
+            ("s".to_string(), HostTensor::scalar_f32(3.25)),
+        ];
+        save_checkpoint(&p, &tensors).unwrap();
+        let back = load_checkpoint(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].0, "a");
+        assert_eq!(back[0].1.f32_data, tensors[0].1.f32_data);
+        assert_eq!(back[1].1.i32_data, tensors[1].1.i32_data);
+        assert_eq!(back[2].1.shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("chon_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxx").unwrap();
+        assert!(load_checkpoint(&p).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared substrate: PRNG, tiny ndarray, mini property-test harness,
+//! logging. These replace crates absent from the offline vendor set
+//! (DESIGN.md §Substitutions).
+
+pub mod logger;
+pub mod ndarray;
+pub mod prng;
+pub mod proptest;

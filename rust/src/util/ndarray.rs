@@ -1,0 +1,291 @@
+//! Minimal dense 2-D f32 tensor + cache-blocked matmul.
+//!
+//! The offline vendor set has no ndarray/nalgebra/rayon; this is the small
+//! substrate the HCP pipeline, diagnostics and benches run on. Parallelism
+//! uses std::thread::scope over row bands.
+
+use std::fmt;
+
+/// Row-major (rows x cols) f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Gather the given columns into a new (rows x idx.len()) matrix.
+    pub fn gather_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Gather the given rows into a new (idx.len() x cols) matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (j, &r) in idx.iter().enumerate() {
+            out.row_mut(j).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Horizontal concatenation [self | other].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Vertical concatenation [self ; other].
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+/// Cache-blocked single-threaded matmul: out = a (m x k) * b (k x n).
+/// The k-inner / n-innermost loop autovectorizes under -O.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut out, false);
+    out
+}
+
+/// out (+)= a * b; `accumulate` keeps existing contents.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    const KC: usize = 256;
+    let n = b.cols;
+    for kb in (0..a.cols).step_by(KC) {
+        let kend = (kb + KC).min(a.cols);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Multi-threaded matmul over row bands (std::thread::scope).
+pub fn matmul_par(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let t = threads.max(1).min(a.rows.max(1));
+    if t <= 1 || a.rows < 16 {
+        return matmul(a, b);
+    }
+    let n = b.cols;
+    let mut out = Mat::zeros(a.rows, n);
+    let band = a.rows.div_ceil(t);
+    let chunks: Vec<&mut [f32]> = out.data.chunks_mut(band * n).collect();
+    std::thread::scope(|s| {
+        for (ti, chunk) in chunks.into_iter().enumerate() {
+            let r0 = ti * band;
+            let rows = chunk.len() / n;
+            let a_ref = &a;
+            let b_ref = &b;
+            s.spawn(move || {
+                for i in 0..rows {
+                    let arow = a_ref.row(r0 + i);
+                    let orow = &mut chunk[i * n..(i + 1) * n];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b_ref.data[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            orow[j] += av * brow[j];
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = rand_mat(5, 7, 1);
+        let eye = Mat::from_fn(7, 7, |r, c| if r == c { 1.0 } else { 0.0 });
+        let out = matmul(&a, &eye);
+        assert_eq!(out.data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        let a = rand_mat(33, 47, 2);
+        let b = rand_mat(47, 29, 3);
+        let s = matmul(&a, &b);
+        let p = matmul_par(&a, &b, 4);
+        for (x, y) in s.data.iter().zip(&p.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = rand_mat(4, 4, 4);
+        let b = rand_mat(4, 4, 5);
+        let mut out = matmul(&a, &b);
+        matmul_into(&a, &b, &mut out, true);
+        let double = matmul(&a, &b);
+        for (x, y) in out.data.iter().zip(&double.data) {
+            assert!((x - 2.0 * y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gather_and_concat() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let g = a.gather_cols(&[2, 0]);
+        assert_eq!(g.data, vec![3., 1., 6., 4.]);
+        let r = a.gather_rows(&[1]);
+        assert_eq!(r.data, vec![4., 5., 6.]);
+        let h = a.hcat(&g);
+        assert_eq!(h.cols, 5);
+        assert_eq!(h.row(0), &[1., 2., 3., 3., 1.]);
+        let v = a.vcat(&a);
+        assert_eq!(v.rows, 4);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = rand_mat(6, 9, 6);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+}

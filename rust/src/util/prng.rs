@@ -1,0 +1,244 @@
+//! Deterministic PRNG substrate: splitmix64 seeding + xoshiro256++ core,
+//! with the samplers the workload generators and benches need (uniform,
+//! normal, Laplace, Student-t, Zipf, Rademacher).
+//!
+//! `rand`/`rand_distr` are not in the offline vendor set; this is the
+//! documented substitution (DESIGN.md §Substitutions).
+
+/// splitmix64: seed expander (reference implementation, Vigna 2015).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ — fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-thread / per-layer keys).
+    pub fn fold_in(&self, data: u64) -> Rng {
+        let mut sm = self.s[0] ^ data.wrapping_mul(0xA076_1D64_78BD_642F);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached spare omitted for simplicity).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Laplace(0, b) via inverse CDF.
+    pub fn laplace(&mut self, b: f32) -> f32 {
+        let u = self.uniform() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).max(1e-12).ln()
+    }
+
+    /// Student-t with `dof` degrees of freedom (heavy-tail generator):
+    /// t = Z / sqrt(ChiSq_dof / dof), ChiSq via sum of dof squared normals.
+    pub fn student_t(&mut self, dof: u32) -> f32 {
+        let z = self.normal();
+        let mut chi = 0.0f32;
+        for _ in 0..dof {
+            let n = self.normal();
+            chi += n * n;
+        }
+        z / (chi / dof as f32).sqrt().max(1e-6)
+    }
+
+    /// Rademacher ±1.
+    #[inline]
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with normals scaled by `scale`.
+    pub fn fill_normal(&mut self, out: &mut [f32], scale: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * scale;
+        }
+    }
+}
+
+/// Zipf(s) sampler over [0, n) using precomputed CDF (corpus substrate).
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform() as f64;
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fold_in_changes_stream() {
+        let base = Rng::new(7);
+        let mut a = base.fold_in(1);
+        let mut b = base.fold_in(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn laplace_variance() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let mut s2 = 0.0f64;
+        for _ in 0..n {
+            let x = r.laplace(1.0) as f64;
+            s2 += x * x;
+        }
+        let var = s2 / n as f64; // Laplace(0,1) variance = 2
+        assert!((var - 2.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn student_t_heavier_than_normal() {
+        let mut r = Rng::new(4);
+        let n = 100_000;
+        let kurt = |xs: &[f32]| {
+            let m = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+            let v = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>()
+                / xs.len() as f64;
+            let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>()
+                / xs.len() as f64;
+            m4 / (v * v) - 3.0
+        };
+        let t: Vec<f32> = (0..n).map(|_| r.student_t(5)).collect();
+        let g: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        assert!(kurt(&t) > kurt(&g) + 1.0);
+    }
+
+    #[test]
+    fn zipf_rank_ordering() {
+        let z = Zipf::new(100, 1.2);
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+}

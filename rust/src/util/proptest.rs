@@ -1,0 +1,197 @@
+//! Mini property-test harness (the offline substitute for the proptest
+//! crate — DESIGN.md §Substitutions).
+//!
+//! `check` runs a property over N generated cases and, on failure, greedily
+//! shrinks the failing input via the generator's `shrink` hook before
+//! panicking with the minimized counterexample.
+
+use crate::util::prng::Rng;
+use std::fmt::Debug;
+
+/// A generator of random test inputs with optional shrinking.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with the (shrunk)
+/// counterexample on failure.
+pub fn check<G: Gen>(name: &str, seed: u64, cases: usize, gen: &G,
+                     prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed ^ 0x70707070);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // shrink loop: first failing candidate wins, repeat to fixpoint
+        let mut cur = v;
+        let mut budget = 200;
+        'outer: while budget > 0 {
+            for cand in gen.shrink(&cur) {
+                budget -= 1;
+                if !prop(&cand) {
+                    cur = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property {name:?} failed at case {case} with (shrunk) input: {cur:?}"
+        );
+    }
+}
+
+/// Generator: f32 vector with length a multiple of `quantum`, values from
+/// a mixture of gaussian / heavy-tail / spiky distributions.
+pub struct VecGen {
+    pub min_blocks: usize,
+    pub max_blocks: usize,
+    pub quantum: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecGen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let blocks = self.min_blocks + rng.below(self.max_blocks - self.min_blocks + 1);
+        let n = blocks * self.quantum;
+        let style = rng.below(4);
+        let mut v: Vec<f32> = (0..n)
+            .map(|_| match style {
+                0 => rng.normal() * self.scale,
+                1 => rng.laplace(self.scale),
+                2 => rng.student_t(3) * self.scale,
+                _ => rng.uniform_in(-self.scale, self.scale),
+            })
+            .collect();
+        // occasionally plant an extreme outlier (the paper's regime)
+        if rng.uniform() < 0.3 && !v.is_empty() {
+            let i = rng.below(v.len());
+            v[i] = self.scale * 300.0 * rng.sign();
+        }
+        v
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        // halve the vector (keeping quantum alignment)
+        if v.len() > self.quantum {
+            let half = (v.len() / 2 / self.quantum).max(1) * self.quantum;
+            out.push(v[..half].to_vec());
+            out.push(v[v.len() - half..].to_vec());
+        }
+        // zero out halves of the values
+        if v.iter().any(|&x| x != 0.0) {
+            let mut a = v.clone();
+            for x in a.iter_mut().take(v.len() / 2) {
+                *x = 0.0;
+            }
+            out.push(a);
+            let mut b = v.clone();
+            for x in b.iter_mut().skip(v.len() / 2) {
+                *x = 0.0;
+            }
+            out.push(b);
+        }
+        out
+    }
+}
+
+/// Generator: usize in [lo, hi] with halving shrink.
+pub struct RangeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for RangeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+        }
+        out
+    }
+}
+
+/// Pair generator combinator.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", 1, 50, &RangeGen { lo: 0, hi: 100 }, |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check("always-false", 2, 10, &RangeGen { lo: 0, hi: 100 }, |_| false);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrinks_toward_minimum() {
+        // fails for v >= 10; shrinking should not mask the failure
+        check("ge10", 3, 100, &RangeGen { lo: 0, hi: 100 }, |&v| v < 10);
+    }
+
+    #[test]
+    fn vecgen_respects_quantum() {
+        let g = VecGen { min_blocks: 1, max_blocks: 5, quantum: 16, scale: 1.0 };
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let v = g.generate(&mut rng);
+            assert_eq!(v.len() % 16, 0);
+            assert!(!v.is_empty());
+        }
+    }
+
+    #[test]
+    fn vecgen_shrink_preserves_quantum() {
+        let g = VecGen { min_blocks: 1, max_blocks: 5, quantum: 16, scale: 1.0 };
+        let mut rng = Rng::new(5);
+        let v = g.generate(&mut rng);
+        for s in g.shrink(&v) {
+            assert_eq!(s.len() % 16, 0);
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Cross-language parity: the Rust quant substrate must match the Python
+//! oracle (python/compile/kernels/ref.py) on golden fixtures dumped by
+//! `python -m compile.golden` (part of `make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use chon::diagnostics;
+use chon::quant::{e2m1, e4m3, mxfp4, nvfp4, rht};
+use chon::util::ndarray::Mat;
+
+fn fixtures() -> Option<PathBuf> {
+    for base in ["artifacts", "../artifacts"] {
+        let p = Path::new(base).join("golden_quant.txt");
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+struct Case {
+    name: String,
+    input: Vec<f32>,
+    output: Vec<f32>,
+}
+
+fn parse_cases(text: &str) -> Vec<Case> {
+    let mut cases = Vec::new();
+    let mut name = String::new();
+    let mut input = Vec::new();
+    for line in text.lines() {
+        if let Some(n) = line.strip_prefix("case ") {
+            name = n.to_string();
+        } else if let Some(v) = line.strip_prefix("in ") {
+            input = v.split(' ').map(|s| s.parse().unwrap()).collect();
+        } else if let Some(v) = line.strip_prefix("out ") {
+            cases.push(Case {
+                name: name.clone(),
+                input: input.clone(),
+                output: v.split(' ').map(|s| s.parse().unwrap()).collect(),
+            });
+        }
+    }
+    cases
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "{name}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "{name}[{i}]: got {g}, want {w} (in={})",
+            got.len()
+        );
+    }
+}
+
+#[test]
+fn golden_parity_with_python_oracle() {
+    let Some(path) = fixtures() else {
+        eprintln!("SKIP: no golden fixtures (run `make artifacts`)");
+        return;
+    };
+    let text = std::fs::read_to_string(path).unwrap();
+    let cases = parse_cases(&text);
+    assert!(cases.len() >= 8, "expected >= 8 golden cases");
+    for c in &cases {
+        match c.name.as_str() {
+            "e2m1_rtn" => {
+                let got: Vec<f32> = c.input.iter().map(|&v| e2m1::rtn(v)).collect();
+                assert_close(&c.name, &got, &c.output, 0.0, 0.0);
+            }
+            "e4m3_rtn" => {
+                let got: Vec<f32> = c.input.iter().map(|&v| e4m3::rtn(v)).collect();
+                assert_close(&c.name, &got, &c.output, 0.0, 1e-6);
+            }
+            n if n.starts_with("nvfp4_2d") => {
+                let w = Mat::from_vec(32, 64, c.input.clone());
+                let got = nvfp4::fake_quant_mat_2d(&w, 16);
+                assert_close(&c.name, &got.data, &c.output, 1e-7, 1e-5);
+            }
+            n if n.starts_with("nvfp4") => {
+                let got = nvfp4::fake_quant(&c.input, nvfp4::Rounding::Rtn, None);
+                assert_close(&c.name, &got, &c.output, 1e-7, 1e-5);
+            }
+            "mxfp4" => {
+                let got = mxfp4::fake_quant(&c.input);
+                assert_close(&c.name, &got, &c.output, 1e-7, 1e-5);
+            }
+            "fwht" => {
+                let mut got = c.input.clone();
+                rht::fwht_inplace(&mut got);
+                assert_close(&c.name, &got, &c.output, 1e-4, 1e-5);
+            }
+            "kurtosis" => {
+                let got = diagnostics::kurtosis(&c.input) as f32;
+                assert!(
+                    (got - c.output[0]).abs() <= 1e-3 * c.output[0].abs().max(1.0),
+                    "kurtosis: {got} vs {}",
+                    c.output[0]
+                );
+            }
+            other => panic!("unknown golden case {other}"),
+        }
+    }
+    println!("golden parity: {} cases OK", cases.len());
+}

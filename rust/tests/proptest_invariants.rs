@@ -1,0 +1,240 @@
+//! Property-based invariants over the quant/HCP/data substrates, driven
+//! by the in-repo mini property-test harness (util::proptest).
+
+use chon::data::corpus::{Corpus, CorpusConfig};
+use chon::data::tokenizer::Tokenizer;
+use chon::diagnostics;
+use chon::hcp;
+use chon::quant::{e2m1, nvfp4, rht};
+use chon::util::ndarray::{matmul, Mat};
+use chon::util::prng::Rng;
+use chon::util::proptest::{check, Gen, PairGen, RangeGen, VecGen};
+
+fn vecgen(scale: f32) -> VecGen {
+    VecGen { min_blocks: 1, max_blocks: 16, quantum: 16, scale }
+}
+
+#[test]
+fn prop_dequant_error_bounded_per_block() {
+    // |x - dq(q(x))| <= amax_block/6 * (1 + 2^-3) elementwise, any dist.
+    check("nvfp4 error bound", 11, 200, &vecgen(2.0), |x| {
+        let d = nvfp4::fake_quant(x, nvfp4::Rounding::Rtn, None);
+        x.chunks(16).zip(d.chunks(16)).all(|(xb, db)| {
+            let amax = xb.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = amax / 6.0 * 1.125 + 1e-7;
+            xb.iter().zip(db).all(|(a, b)| (a - b).abs() <= bound)
+        })
+    });
+}
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    // quantizing an already-quantized tensor is a fixed point
+    check("nvfp4 idempotent", 12, 100, &vecgen(3.0), |x| {
+        let d1 = nvfp4::fake_quant(x, nvfp4::Rounding::Rtn, None);
+        let d2 = nvfp4::fake_quant(&d1, nvfp4::Rounding::Rtn, None);
+        d1.iter()
+            .zip(&d2)
+            .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1e-20))
+    });
+}
+
+#[test]
+fn prop_quantize_pack_roundtrip_equals_fake_quant() {
+    check("pack roundtrip", 13, 100, &vecgen(1.0), |x| {
+        let q = nvfp4::quantize(x, nvfp4::Rounding::Rtn, None);
+        let deq = nvfp4::dequantize(&q);
+        let fq = nvfp4::fake_quant(x, nvfp4::Rounding::Rtn, None);
+        deq.iter()
+            .zip(&fq)
+            .all(|(a, b)| (a - b).abs() <= 1e-6 * b.abs().max(1e-20))
+    });
+}
+
+#[test]
+fn prop_ftz_in_unit_interval_and_scale_invariant_direction() {
+    check("ftz range", 14, 150, &vecgen(1.0), |x| {
+        let f = nvfp4::ftz_ratio(x);
+        (0.0..=1.0).contains(&f)
+    });
+}
+
+#[test]
+fn prop_storage_is_half_byte_per_element_plus_scales() {
+    check(
+        "storage size",
+        15,
+        50,
+        &RangeGen { lo: 1, hi: 64 },
+        |&blocks| {
+            let x = vec![1.0f32; blocks * 16];
+            let q = nvfp4::quantize(&x, nvfp4::Rounding::Rtn, None);
+            q.storage_bytes() == blocks * 8 + blocks + 4
+        },
+    );
+}
+
+#[test]
+fn prop_sr_stays_on_neighbouring_lattice_points() {
+    check("sr neighbours", 16, 100, &vecgen(2.0), |x| {
+        let mut rng = Rng::new(9);
+        let d = nvfp4::fake_quant(x, nvfp4::Rounding::Sr, Some(&mut rng));
+        let r = nvfp4::fake_quant(x, nvfp4::Rounding::Rtn, None);
+        // SR result within one max lattice gap of the RTN result
+        x.chunks(16)
+            .zip(d.chunks(16))
+            .zip(r.chunks(16))
+            .all(|((xb, db), _rb)| {
+                let amax = xb.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                // one lattice gap (<= 2 in scaled space) plus the e4m3
+                // block-scale rounding slack (rel err <= 2^-3)
+                let gap = amax / 3.0 * 1.125 + 1e-7;
+                xb.iter().zip(db).all(|(a, b)| (a - b).abs() <= gap)
+            })
+    });
+}
+
+#[test]
+fn prop_fwht_involution_and_energy() {
+    check(
+        "fwht involution",
+        17,
+        60,
+        &RangeGen { lo: 1, hi: 8 },
+        |&logn| {
+            let n = 1usize << logn;
+            let mut rng = Rng::new(logn as u64);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut y = x.clone();
+            rht::fwht_inplace(&mut y);
+            rht::fwht_inplace(&mut y);
+            y.iter()
+                .zip(&x)
+                .all(|(a, b)| (a / n as f32 - b).abs() < 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_rht_preserves_wgrad_product() {
+    // (HX)^T(HdY) == X^T dY for any sizes (before quantization)
+    check(
+        "rht wgrad identity",
+        18,
+        30,
+        &PairGen(RangeGen { lo: 2, hi: 6 }, RangeGen { lo: 1, hi: 8 }),
+        |&(logm, cols)| {
+            let m = 1usize << logm;
+            let mut rng = Rng::new((logm * 31 + cols) as u64);
+            let x = Mat::from_fn(m, cols, |_, _| rng.normal());
+            let dy = Mat::from_fn(m, cols, |_, _| rng.normal());
+            let s = rht::random_signs(m, &mut rng);
+            let xr = rht::rht(&x.transpose(), &s).transpose();
+            let dyr = rht::rht(&dy.transpose(), &s).transpose();
+            let want = matmul(&x.transpose(), &dy);
+            let got = matmul(&xr.transpose(), &dyr);
+            want.data
+                .iter()
+                .zip(&got.data)
+                .all(|(a, b)| (a - b).abs() < 1e-3 * a.abs().max(1.0))
+        },
+    );
+}
+
+#[test]
+fn prop_hcp_o2b_never_worse_than_baseline() {
+    check(
+        "hcp beats baseline",
+        19,
+        25,
+        &RangeGen { lo: 1, hi: 8 },
+        |&kblocks| {
+            let kdim = kblocks * 16;
+            let mut rng = Rng::new(kblocks as u64 ^ 0xAB);
+            let x = Mat::from_fn(16, kdim, |_, _| rng.student_t(3));
+            let w = Mat::from_fn(kdim, 16, |_, _| rng.normal());
+            let truth = matmul(&x, &w);
+            let cfg = chon::hcp::modes::HcpConfig {
+                mode: chon::hcp::modes::Mode::Single,
+                order: chon::hcp::modes::Order::O2,
+                target: chon::hcp::modes::Target::Both,
+            };
+            let q = chon::hcp::modes::QuantizedPair::new(&x, &w);
+            let idx = hcp::top_k(&hcp::scores(&q.dx, &q.dw), (kdim / 8).max(1));
+            let patched = chon::hcp::modes::apply(cfg, &q, &idx).mse(&truth);
+            let base = chon::hcp::modes::baseline(&q).mse(&truth);
+            patched <= base * 1.0001
+        },
+    );
+}
+
+#[test]
+fn prop_top_k_is_subset_and_sorted_by_score() {
+    check(
+        "top_k ordering",
+        20,
+        100,
+        &RangeGen { lo: 1, hi: 200 },
+        |&n| {
+            let mut rng = Rng::new(n as u64);
+            let scores: Vec<f64> = (0..n).map(|_| rng.uniform() as f64).collect();
+            let k = (n / 3).max(1);
+            let idx = hcp::top_k(&scores, k);
+            if idx.len() != k.min(n) {
+                return false;
+            }
+            // every selected >= every unselected
+            let min_sel = idx.iter().map(|&i| scores[i]).fold(f64::INFINITY, f64::min);
+            (0..n)
+                .filter(|i| !idx.contains(i))
+                .all(|i| scores[i] <= min_sel + 1e-15)
+        },
+    );
+}
+
+#[test]
+fn prop_tokenizer_roundtrip_lossless() {
+    let corpus = Corpus::new(CorpusConfig::default());
+    let tok = Tokenizer::train(&corpus.generate(10_000, 0), 384);
+    check(
+        "tokenizer roundtrip",
+        21,
+        40,
+        &RangeGen { lo: 1, hi: 5000 },
+        |&seed| {
+            let s = corpus.generate(1 + seed % 2000, seed as u64);
+            tok.decode(&tok.encode(&s)) == s
+        },
+    );
+}
+
+#[test]
+fn prop_kurtosis_invariant_to_affine_transform() {
+    check("kurtosis affine invariance", 22, 80, &vecgen(1.0), |x| {
+        if x.len() < 32 {
+            return true;
+        }
+        let k1 = diagnostics::kurtosis(x);
+        let y: Vec<f32> = x.iter().map(|&v| 3.0 * v + 7.0).collect();
+        let k2 = diagnostics::kurtosis(&y);
+        (k1 - k2).abs() < 1e-2 * k1.abs().max(1.0)
+    });
+}
+
+#[test]
+fn prop_e2m1_rtn_minimizes_distance() {
+    check(
+        "e2m1 nearest",
+        23,
+        60,
+        &RangeGen { lo: 0, hi: 14000 },
+        |&i| {
+            let v = -7.0 + (i as f32) / 1000.0;
+            let q = e2m1::rtn(v);
+            let clamped = v.clamp(-6.0, 6.0);
+            (0u8..16)
+                .map(e2m1::decode)
+                .all(|c| (q - clamped).abs() <= (c - clamped).abs() + 1e-6)
+        },
+    );
+}
