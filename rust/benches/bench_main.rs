@@ -10,6 +10,17 @@
 //! Benches that need trained models train the tiny configs in-process
 //! (a few seconds each at the default 120 steps); results are written to
 //! runs/bench/*.csv and printed in the paper's table/figure layout.
+//!
+//! Backend: the benches run on whatever `CHON_BENCH_BACKEND` selects
+//! (default native — fully offline). With `--features pjrt` and a built
+//! artifacts/ directory, set CHON_BENCH_BACKEND=pjrt to bench the XLA
+//! path instead.
+
+#![allow(
+    clippy::needless_range_loop,
+    clippy::field_reassign_with_default,
+    clippy::uninlined_format_args
+)]
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -24,6 +35,7 @@ use chon::hcp;
 use chon::hcp::modes::{apply, baseline, HcpConfig, QuantizedPair};
 use chon::hcp::pipeline;
 use chon::quant::{fp8_fake_quant, mxfp4, nvfp4, rht};
+use chon::runtime::native;
 use chon::util::ndarray::{matmul, matmul_par, Mat};
 use chon::util::prng::Rng;
 
@@ -36,6 +48,10 @@ fn fast_compile_flags() {
     if std::env::var_os("XLA_FLAGS").is_none() {
         std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=0");
     }
+}
+
+fn bench_backend() -> String {
+    std::env::var("CHON_BENCH_BACKEND").unwrap_or_else(|_| "native".into())
 }
 
 fn steps_budget() -> usize {
@@ -51,13 +67,19 @@ fn out_dir() -> PathBuf {
     p
 }
 
-fn artifacts() -> Option<PathBuf> {
-    let p = PathBuf::from("artifacts");
-    p.join("index.txt").exists().then_some(p)
+/// Whether a (model, recipe) can run on the selected backend.
+fn model_available(model: &str) -> bool {
+    if bench_backend() == "native" {
+        return native::model_cfg(model).is_ok();
+    }
+    Path::new("artifacts")
+        .join(format!("train_{model}_bf16.manifest.txt"))
+        .exists()
 }
 
 fn run_cfg(model: &str, recipe: &str) -> RunConfig {
     let mut cfg = RunConfig::default();
+    cfg.backend = bench_backend();
     cfg.model = model.into();
     cfg.recipe = recipe.into();
     cfg.diag_every = 0;
@@ -90,20 +112,26 @@ fn series_str(s: &[(usize, f32)]) -> String {
 
 /// Tab. 2: recipe ablation grid (final loss + gap vs BF16).
 fn tab2() -> Result<()> {
-    let dir = artifacts().context("artifacts missing")?;
     let steps = steps_budget();
-    let mut recipes = Vec::new();
-    for e in std::fs::read_dir(&dir)? {
-        let name = e?.file_name().to_string_lossy().to_string();
-        if let Some(r) = name
-            .strip_prefix("train_tiny_gla_")
-            .and_then(|r| r.strip_suffix(".manifest.txt"))
-        {
-            if !r.starts_with("only_") {
-                recipes.push(r.to_string());
+    let mut recipes = if bench_backend() == "native" {
+        native::available_recipes()
+    } else {
+        let mut found = Vec::new();
+        let rd = std::fs::read_dir("artifacts")
+            .context("artifacts missing (run `make artifacts`)")?;
+        for e in rd {
+            let name = e?.file_name().to_string_lossy().to_string();
+            if let Some(r) = name
+                .strip_prefix("train_tiny_gla_")
+                .and_then(|r| r.strip_suffix(".manifest.txt"))
+            {
+                if !r.starts_with("only_") {
+                    found.push(r.to_string());
+                }
             }
         }
-    }
+        found
+    };
     recipes.sort_by_key(|r| (r != "bf16", r.clone()));
     let base = run_cfg("tiny_gla", "bf16");
     let rows = ablation::table2(&base, &recipes, steps, 10)?;
@@ -114,19 +142,25 @@ fn tab2() -> Result<()> {
 
 /// Tab. 3: operator sensitivity (both architectures).
 fn tab3() -> Result<()> {
-    let dir = artifacts().context("artifacts missing")?;
     let steps = steps_budget();
     for model in ["tiny_gla", "tiny_sa"] {
-        let mut ops = Vec::new();
-        for e in std::fs::read_dir(&dir)? {
-            let name = e?.file_name().to_string_lossy().to_string();
-            if let Some(rest) = name
-                .strip_prefix(&format!("train_{model}_only_"))
-                .and_then(|r| r.strip_suffix(".manifest.txt"))
-            {
-                ops.push(rest.replacen('_', ".", 1));
+        let mut ops = if bench_backend() == "native" {
+            native::sensitivity_ops_for(model)?
+        } else {
+            let mut found = Vec::new();
+            let rd = std::fs::read_dir("artifacts")
+                .context("artifacts missing (run `make artifacts`)")?;
+            for e in rd {
+                let name = e?.file_name().to_string_lossy().to_string();
+                if let Some(rest) = name
+                    .strip_prefix(&format!("train_{model}_only_"))
+                    .and_then(|r| r.strip_suffix(".manifest.txt"))
+                {
+                    found.push(rest.replacen('_', ".", 1));
+                }
             }
-        }
+            found
+        };
         if ops.is_empty() {
             println!("tab3: no sensitivity artifacts for {model} (need --set core/full)");
             continue;
@@ -143,7 +177,6 @@ fn tab3() -> Result<()> {
 
 /// Tab. 1/8 substitute: downstream eval across recipes.
 fn tab1() -> Result<()> {
-    artifacts().context("artifacts missing")?;
     let steps = steps_budget().max(100);
     let base = run_cfg("tiny_gla", "bf16");
     let recipes: Vec<String> = ["bf16", "fp8", "nvfp4", "chon"]
@@ -253,11 +286,8 @@ fn fig1() -> Result<()> {
     let mut csv = std::fs::File::create(out_dir().join("fig1.csv"))?;
     writeln!(csv, "arch,component,act_kurtosis")?;
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
-            println!("  (skip {model}: artifacts missing)");
+        if !model_available(model) {
+            println!("  (skip {model}: not available on this backend)");
             continue;
         }
         let tr = diag_run(model, "bf16", steps, 2)?;
@@ -331,10 +361,7 @@ fn fig4() -> Result<()> {
     let mut csv = std::fs::File::create(out_dir().join("fig4.csv"))?;
     writeln!(csv, "arch,component,bk_min,bk_avg,bk_max")?;
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
+        if !model_available(model) {
             continue;
         }
         let tr = diag_run(model, "bf16", steps, 2)?;
@@ -369,10 +396,7 @@ fn fig5() -> Result<()> {
     let steps = steps_budget();
     println!("\n== Fig. 5: kurtosis evolution over training ==");
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
+        if !model_available(model) {
             continue;
         }
         let tr = diag_run(model, "bf16", steps, 8)?;
@@ -419,11 +443,8 @@ fn fig6() -> Result<()> {
 /// Fig. 7: softmax-induced instability (SA only).
 fn fig7() -> Result<()> {
     let steps = steps_budget();
-    if !Path::new("artifacts")
-        .join("train_tiny_sa_bf16.manifest.txt")
-        .exists()
-    {
-        println!("fig7: tiny_sa artifacts missing (need --set core/full)");
+    if !model_available("tiny_sa") {
+        println!("fig7: tiny_sa not available on this backend");
         return Ok(());
     }
     let tr = diag_run("tiny_sa", "bf16", steps, 8)?;
@@ -450,10 +471,7 @@ fn fig8() -> Result<()> {
     let steps = steps_budget();
     println!("\n== Fig. 8: SwiGLU W_up/W_gate cosine alignment ==");
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
+        if !model_available(model) {
             continue;
         }
         let tr = diag_run(model, "bf16", steps, 8)?;
@@ -527,10 +545,7 @@ fn fig32() -> Result<()> {
     let mut csv = std::fs::File::create(out_dir().join("fig32.csv"))?;
     writeln!(csv, "model,step,act_qmse,wt_qmse,ratio")?;
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
+        if !model_available(model) {
             continue;
         }
         let tr = diag_run(model, "bf16", steps, 8)?;
@@ -559,10 +574,7 @@ fn fig29() -> Result<()> {
     let steps = steps_budget();
     println!("\n== Fig. 29/30: RMSNorm gamma | Fig. 31: weight overlap ==");
     for model in ["tiny_gla", "tiny_sa"] {
-        if !Path::new("artifacts")
-            .join(format!("train_{model}_bf16.manifest.txt"))
-            .exists()
-        {
+        if !model_available(model) {
             continue;
         }
         for recipe in ["bf16", "nvfp4"] {
@@ -574,7 +586,9 @@ fn fig29() -> Result<()> {
             for (name, t) in tr.state.names.iter().zip(&tr.state.params) {
                 if name.contains("_norm'") || name.ends_with("norm']") {
                     let s = gamma_stats(&t.f32_data);
-                    if name.contains("layers") {
+                    // per-layer norms: "params['layers'][i]" (pjrt) or
+                    // "params['L<i>']" (native)
+                    if name.contains("layers") || name.contains("['L") {
                         layer_means.push(s.mean);
                         frac_above.push(s.frac_above_one);
                     }
@@ -712,8 +726,8 @@ fn perf() -> Result<()> {
         format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
     ]);
 
-    // PJRT step timing, if artifacts available
-    if artifacts().is_some() {
+    // end-to-end train-step timing on the selected backend
+    if model_available("tiny_gla") {
         for recipe in ["bf16", "chon"] {
             let mut tr = Trainer::new(run_cfg("tiny_gla", recipe))?;
             tr.train(12)?;

@@ -10,7 +10,10 @@ use anyhow::{bail, Context, Result};
 /// Top-level run configuration for the coordinator.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// directory with *.hlo.txt + *.manifest.txt artifacts
+    /// execution engine: "native" (pure Rust, no artifacts needed) or
+    /// "pjrt" (AOT HLO via the XLA PJRT C API; needs `--features pjrt`)
+    pub backend: String,
+    /// directory with *.hlo.txt + *.manifest.txt artifacts (pjrt backend)
     pub artifacts: PathBuf,
     /// model config name, e.g. "tiny_gla" (must exist in artifacts)
     pub model: String,
@@ -37,6 +40,7 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
+            backend: "native".into(),
             artifacts: PathBuf::from("artifacts"),
             model: "tiny_gla".into(),
             recipe: "chon".into(),
@@ -62,6 +66,7 @@ impl RunConfig {
         let doc = toml::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let mut cfg = RunConfig::default();
         for section in ["", "run"] {
+            cfg.backend = doc.str_or(section, "backend", &cfg.backend).to_string();
             cfg.artifacts = PathBuf::from(doc.str_or(
                 section,
                 "artifacts",
@@ -104,6 +109,7 @@ impl RunConfig {
                     .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))
             };
             match key {
+                "backend" => self.backend = next()?,
                 "artifacts" => self.artifacts = PathBuf::from(next()?),
                 "model" => self.model = next()?,
                 "recipe" => self.recipe = next()?,
@@ -134,7 +140,15 @@ mod tests {
     fn defaults_sane() {
         let c = RunConfig::default();
         assert_eq!(c.model, "tiny_gla");
+        assert_eq!(c.backend, "native");
         assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn backend_flag_parses() {
+        let mut c = RunConfig::default();
+        c.apply_args(&["--backend".into(), "pjrt".into()]).unwrap();
+        assert_eq!(c.backend, "pjrt");
     }
 
     #[test]

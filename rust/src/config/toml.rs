@@ -6,13 +6,23 @@
 //! Enough for run configs; nested tables are spelled [a.b].
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+/// Parse failure with its 1-based line number (hand-rolled; `thiserror`
+/// is not in the offline vendor set).
+#[derive(Debug)]
 pub enum TomlError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TomlError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {

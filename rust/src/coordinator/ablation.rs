@@ -5,11 +5,11 @@ use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
-use log::info;
 
 use crate::config::RunConfig;
 use crate::coordinator::metrics::loss_gap_pct;
 use crate::coordinator::trainer::Trainer;
+use crate::info;
 use crate::runtime::Manifest;
 
 /// One Tab. 2 row.
@@ -134,7 +134,7 @@ pub fn table3(
             .with_context(|| format!("loading sensitivity artifact for {op}"))?;
         tr.train(steps)?;
         let loss = tr.log.tail_mean_loss(tail).unwrap() as f64;
-        let op_params = op_param_count(&tr.train_exe.manifest, op);
+        let op_params = op_param_count(tr.train_exe.manifest(), op);
         let delta = loss - base_loss;
         let score = if op_params > 0 {
             delta / op_params as f64 * 1e6

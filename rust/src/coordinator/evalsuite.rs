@@ -12,7 +12,8 @@ use anyhow::{bail, Result};
 use crate::coordinator::trainer::Trainer;
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{HostTensor, LoadedArtifact};
+use crate::info;
+use crate::runtime::{backend_for, Executable, HostTensor};
 
 /// Scores for one recipe checkpoint.
 #[derive(Clone, Debug)]
@@ -29,11 +30,11 @@ pub struct EvalScores {
 /// into a (batch, seq) window; accuracy counts next-token hits on the
 /// object span only.
 pub fn cloze_accuracy(
-    fwd: &LoadedArtifact,
+    fwd: &dyn Executable,
     params: &[HostTensor],
     seed: u64,
 ) -> Result<f64> {
-    let man = &fwd.manifest;
+    let man = fwd.manifest();
     let batch = man.meta_usize("batch")?;
     let seq = man.meta_usize("seq_len")?;
     let vocab = man.meta_usize("vocab")?;
@@ -105,7 +106,8 @@ pub fn run_suite(
     recipes: &[String],
     steps: usize,
 ) -> Result<Vec<EvalScores>> {
-    let fwd = LoadedArtifact::load(&base.artifacts, &format!("fwd_{}", base.model))?;
+    let backend = backend_for(&base.backend)?;
+    let fwd = backend.load(&base.artifacts, &format!("fwd_{}", base.model))?;
     let mut out = Vec::new();
     for recipe in recipes {
         let mut cfg = base.clone();
@@ -115,8 +117,8 @@ pub fn run_suite(
         let mut tr = Trainer::new(cfg)?;
         tr.train(steps)?;
         let (heldout_loss, heldout_acc) = tr.evaluate(4)?;
-        let cloze = cloze_accuracy(&fwd, &tr.state.params, base.seed)?;
-        log::info!(
+        let cloze = cloze_accuracy(fwd.as_ref(), &tr.state.params, base.seed)?;
+        info!(
             "eval-suite {recipe}: cloze {cloze:.3} heldout loss {heldout_loss:.4} acc {heldout_acc:.3}"
         );
         out.push(EvalScores {

@@ -5,11 +5,11 @@
 //! widening during decay is the paper's SFT observation).
 
 use anyhow::Result;
-use log::info;
 
 use crate::config::RunConfig;
 use crate::coordinator::metrics::loss_gap_pct;
 use crate::coordinator::trainer::Trainer;
+use crate::info;
 
 /// One probe of the fine-tuning gap trajectory.
 #[derive(Clone, Copy, Debug)]

@@ -1,12 +1,13 @@
 //! The training orchestrator: owns model/optimizer state as host tensors,
-//! drives the AOT train/eval/diag executables, the data prefetcher, the
-//! longitudinal monitor and checkpointing. Python never runs here.
+//! drives the train/eval/diag executables of the selected backend (native
+//! pure-Rust or PJRT), the data prefetcher, the longitudinal monitor and
+//! checkpointing. Python never runs here.
 
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use log::info;
 
 use crate::config::RunConfig;
 use crate::coordinator::metrics::{MetricLog, StepMetrics};
@@ -14,9 +15,8 @@ use crate::coordinator::monitor::{DiagRecord, Monitor};
 use crate::data::batcher::{Batch, Batcher, Prefetcher};
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::tokenizer::Tokenizer;
-use crate::runtime::{
-    save_checkpoint, DType, HostTensor, LoadedArtifact,
-};
+use crate::info;
+use crate::runtime::{backend_for, save_checkpoint, Backend, DType, Executable, HostTensor};
 
 /// Model + optimizer state in manifest order.
 pub struct TrainState {
@@ -31,10 +31,11 @@ pub struct TrainState {
 
 pub struct Trainer {
     pub cfg: RunConfig,
-    pub train_exe: std::rc::Rc<LoadedArtifact>,
-    /// lazily compiled on first use (XLA compiles are expensive on 1 core)
-    diag_exe: Option<std::rc::Rc<LoadedArtifact>>,
-    eval_exe: Option<std::rc::Rc<LoadedArtifact>>,
+    backend: Box<dyn Backend>,
+    pub train_exe: Rc<dyn Executable>,
+    /// lazily loaded on first use (XLA compiles are expensive on 1 core)
+    diag_exe: Option<Rc<dyn Executable>>,
+    eval_exe: Option<Rc<dyn Executable>>,
     diag_tried: bool,
     eval_tried: bool,
     pub state: TrainState,
@@ -72,14 +73,17 @@ fn split_state_outputs(
 }
 
 impl Trainer {
-    /// Build a trainer from a run config: loads artifacts, initializes
-    /// parameters via the init artifact, spins up the data prefetcher.
+    /// Build a trainer from a run config: resolves the backend, loads the
+    /// train/init executables, initializes parameters, spins up the data
+    /// prefetcher.
     pub fn new(cfg: RunConfig) -> Result<Self> {
+        let backend = backend_for(&cfg.backend)?;
         let dir = cfg.artifacts.clone();
         let train_name = format!("train_{}_{}", cfg.model, cfg.recipe);
-        let train_exe = LoadedArtifact::load_cached(&dir, &train_name)
-            .with_context(|| format!("loading {train_name}"))?;
-        let man = &train_exe.manifest;
+        let train_exe = backend
+            .load(&dir, &train_name)
+            .with_context(|| format!("loading {train_name} ({} backend)", backend.name()))?;
+        let man = train_exe.manifest();
         let vocab = man.meta_usize("vocab")?;
         let batch = man.meta_usize("batch")?;
         let seq_len = man.meta_usize("seq_len")?;
@@ -88,15 +92,15 @@ impl Trainer {
         } else {
             man.meta_usize("total_steps")?
         };
-
-        // init params
-        let init_exe = LoadedArtifact::load_cached(&dir, &format!("init_{}", cfg.model))?;
-        let params = init_exe.run(&[HostTensor::scalar_i32(cfg.seed as i32)])?;
         let names: Vec<String> = man
             .inputs_with_prefix("params")
             .iter()
             .map(|s| s.name.clone())
             .collect();
+
+        // init params
+        let init_exe = backend.load(&dir, &format!("init_{}", cfg.model))?;
+        let params = init_exe.run(&[HostTensor::scalar_i32(cfg.seed as i32)])?;
         if params.len() != names.len() {
             bail!(
                 "init produced {} tensors, train expects {} params",
@@ -104,8 +108,11 @@ impl Trainer {
                 names.len()
             );
         }
-        let zeros =
-            |ps: &[HostTensor]| ps.iter().map(|p| HostTensor::zeros(p.dtype, p.shape.clone())).collect();
+        let zeros = |ps: &[HostTensor]| {
+            ps.iter()
+                .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
+                .collect()
+        };
         let state = TrainState {
             m: zeros(&params),
             v: zeros(&params),
@@ -126,14 +133,13 @@ impl Trainer {
         let prefetch = Prefetcher::spawn(batcher, 4);
 
         // metric names come from the (cheap) manifest, not the executable
-        let names = crate::runtime::Manifest::load(
-            &dir,
-            &format!("diag_{}_{}", cfg.model, diag_recipe(&cfg.recipe)),
-        )
-        .map(|m| m.metrics)
-        .unwrap_or_default();
+        let metric_names = backend
+            .manifest(&dir, &format!("diag_{}_{}", cfg.model, diag_recipe(&cfg.recipe)))
+            .map(|m| m.metrics)
+            .unwrap_or_default();
         Ok(Trainer {
             cfg,
+            backend,
             train_exe,
             diag_exe: None,
             eval_exe: None,
@@ -141,7 +147,7 @@ impl Trainer {
             eval_tried: false,
             state,
             log: MetricLog::default(),
-            monitor: Monitor::new(names),
+            monitor: Monitor::new(metric_names),
             prefetch,
             batch,
             seq_len,
@@ -187,28 +193,32 @@ impl Trainer {
         Ok(met)
     }
 
-    /// Lazily compile the diag executable (expensive; only when probing).
-    fn ensure_diag(&mut self) -> Option<&LoadedArtifact> {
+    /// Lazily load the diag executable (expensive on PJRT; only when probing).
+    fn ensure_diag(&mut self) -> Option<&dyn Executable> {
         if !self.diag_tried {
             self.diag_tried = true;
-            self.diag_exe = LoadedArtifact::load_cached(
-                &self.cfg.artifacts,
-                &format!("diag_{}_{}", self.cfg.model, diag_recipe(&self.cfg.recipe)),
-            )
-            .ok();
+            self.diag_exe = self
+                .backend
+                .load(
+                    &self.cfg.artifacts,
+                    &format!("diag_{}_{}", self.cfg.model, diag_recipe(&self.cfg.recipe)),
+                )
+                .ok();
         }
         self.diag_exe.as_deref()
     }
 
-    /// Lazily compile the eval executable.
-    pub fn ensure_eval(&mut self) -> Option<&LoadedArtifact> {
+    /// Lazily load the eval executable.
+    pub fn ensure_eval(&mut self) -> Option<&dyn Executable> {
         if !self.eval_tried {
             self.eval_tried = true;
-            self.eval_exe = LoadedArtifact::load_cached(
-                &self.cfg.artifacts,
-                &format!("eval_{}_{}", self.cfg.model, eval_recipe(&self.cfg.recipe)),
-            )
-            .ok();
+            self.eval_exe = self
+                .backend
+                .load(
+                    &self.cfg.artifacts,
+                    &format!("eval_{}_{}", self.cfg.model, eval_recipe(&self.cfg.recipe)),
+                )
+                .ok();
         }
         self.eval_exe.as_deref()
     }
@@ -218,7 +228,7 @@ impl Trainer {
         if self.ensure_diag().is_none() {
             return Ok(());
         }
-        let diag = self.diag_exe.as_ref().unwrap();
+        let diag = self.diag_exe.as_ref().unwrap().clone();
         let b = self.prefetch.next();
         let (tokens, _) = self.batch_tensors(&b);
         let mut inputs = self.state.params.clone();
@@ -249,7 +259,7 @@ impl Trainer {
         if self.ensure_eval().is_none() {
             bail!("no eval artifact for {}/{}", self.cfg.model, self.cfg.recipe);
         }
-        let eval = self.eval_exe.as_ref().unwrap();
+        let eval = self.eval_exe.as_ref().unwrap().clone();
         let mut loss = 0.0f32;
         let mut acc = 0.0f32;
         for _ in 0..n_batches {

@@ -3,15 +3,32 @@
 //! Reproduction of "Dissecting Outlier Dynamics in LLM NVFP4 Pretraining"
 //! as a three-layer Rust + JAX + Pallas system:
 //!
-//! * L3 (this crate): training coordinator, PJRT runtime, diagnostics
-//!   monitor, HCP engine, synthetic-data pipeline, benches.
+//! * L3 (this crate): training coordinator, pluggable execution backends,
+//!   diagnostics monitor, HCP engine, synthetic-data pipeline, benches.
 //! * L2 (python/compile): JAX GLA / Softmax-Attention models with the CHON
 //!   quantized-training recipe, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * L1 (python/compile/kernels): Pallas kernels (NVFP4 quantizer, fused
 //!   HCP GEMM, RHT) inlined into the lowered HLO (interpret=True).
 //!
-//! Python never runs on the request path: the binary loads HLO text via
-//! the PJRT C API (`xla` crate) and drives training/eval/diagnostics.
+//! Execution is backend-pluggable (`runtime::Backend`):
+//!
+//! * `native` (default) — the tiny GLA/SA training step in pure Rust over
+//!   the `util::ndarray` + `quant` + `hcp` substrates; offline,
+//!   deterministic, needs no artifacts and no libxla.
+//! * `pjrt` (`--features pjrt`) — the binary loads AOT HLO text via the
+//!   PJRT C API (`xla` crate) and drives training/eval/diagnostics.
+//!   Python never runs on the request path.
+
+// Style-only lints relaxed crate-wide: the numeric substrate is written
+// index-style on purpose (mirrors the blocked/banded kernel structure).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::field_reassign_with_default,
+    clippy::manual_memcpy,
+    clippy::type_complexity,
+    clippy::uninlined_format_args
+)]
 
 pub mod bench;
 pub mod config;

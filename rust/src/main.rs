@@ -6,7 +6,7 @@
 //!   ablate-table3   the Tab. 3 operator sensitivity study
 //!   eval-suite      the Tab. 1 downstream eval substitute
 //!   diag            longitudinal diagnostics run (high probe frequency)
-//!   info            list available artifacts
+//!   info            list available models/recipes (or pjrt artifacts)
 //!
 //! Flags are `--key value`; see `chon help`.
 
@@ -14,6 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use chon::config::RunConfig;
 use chon::coordinator::{ablation, evalsuite, Trainer};
+use chon::runtime::native;
 
 const HELP: &str = "\
 chon — CHON/NVFP4 training coordinator
@@ -27,21 +28,33 @@ COMMANDS:
   eval-suite     train bf16/fp8/nvfp4/chon and report downstream scores
   finetune       post-training gap study (Fig. 15c substitute)
   diag           longitudinal diagnostics (diag every 10 steps)
-  info           list artifacts in the artifacts directory
+  info           list models/recipes (native) or artifacts (pjrt)
   help           this text
 
 COMMON FLAGS:
+  --backend B       native|pjrt (default native; pjrt needs --features pjrt)
   --artifacts DIR   (default artifacts)   --model NAME   (default tiny_gla)
   --recipe NAME     (default chon)        --steps N      (default: artifact)
   --seed N          --out-dir DIR         --diag-every N --eval-every N
   --log-every N     --checkpoint-dir DIR  --config FILE.toml
+
+The native backend runs the tiny GLA/SA training step in pure Rust — no
+artifacts directory and no libxla needed; runs are bit-reproducible for a
+fixed --seed.
 ";
 
-fn default_recipes(artifacts: &std::path::Path, model: &str) -> Vec<String> {
+fn is_native(cfg: &RunConfig) -> bool {
+    cfg.backend == "native"
+}
+
+fn default_recipes(cfg: &RunConfig) -> Vec<String> {
+    if is_native(cfg) {
+        return native::available_recipes();
+    }
     // every train_<model>_<recipe> artifact that exists, bf16 first
     let mut found = Vec::new();
-    if let Ok(rd) = std::fs::read_dir(artifacts) {
-        let prefix = format!("train_{model}_");
+    if let Ok(rd) = std::fs::read_dir(&cfg.artifacts) {
+        let prefix = format!("train_{}_", cfg.model);
         for e in rd.flatten() {
             let name = e.file_name().to_string_lossy().to_string();
             if let Some(rest) = name
@@ -58,10 +71,13 @@ fn default_recipes(artifacts: &std::path::Path, model: &str) -> Vec<String> {
     found
 }
 
-fn sensitivity_ops(artifacts: &std::path::Path, model: &str) -> Vec<String> {
+fn sensitivity_ops(cfg: &RunConfig) -> Result<Vec<String>> {
+    if is_native(cfg) {
+        return native::sensitivity_ops_for(&cfg.model);
+    }
     let mut ops = Vec::new();
-    if let Ok(rd) = std::fs::read_dir(artifacts) {
-        let prefix = format!("train_{model}_only_");
+    if let Ok(rd) = std::fs::read_dir(&cfg.artifacts) {
+        let prefix = format!("train_{}_only_", cfg.model);
         for e in rd.flatten() {
             let name = e.file_name().to_string_lossy().to_string();
             if let Some(rest) = name
@@ -73,7 +89,7 @@ fn sensitivity_ops(artifacts: &std::path::Path, model: &str) -> Vec<String> {
         }
     }
     ops.sort();
-    ops
+    Ok(ops)
 }
 
 fn main() -> Result<()> {
@@ -89,11 +105,22 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "help" | "--help" | "-h" => print!("{HELP}"),
         "info" => {
-            let idx = cfg.artifacts.join("index.txt");
-            let listing = std::fs::read_to_string(&idx)
-                .with_context(|| format!("no index at {}", idx.display()))?;
-            println!("artifacts in {}:", cfg.artifacts.display());
-            print!("{listing}");
+            if is_native(&cfg) {
+                println!("backend: native (pure Rust, no artifacts needed)");
+                println!("models:  {}", native::available_models().join(" "));
+                println!("recipes: {}", native::available_recipes().join(" "));
+                println!(
+                    "sensitivity ops ({}): {}",
+                    cfg.model,
+                    native::sensitivity_ops_for(&cfg.model)?.join(" ")
+                );
+            } else {
+                let idx = cfg.artifacts.join("index.txt");
+                let listing = std::fs::read_to_string(&idx)
+                    .with_context(|| format!("no index at {}", idx.display()))?;
+                println!("artifacts in {}:", cfg.artifacts.display());
+                print!("{listing}");
+            }
         }
         "train" => {
             let steps = cfg.steps;
@@ -131,7 +158,7 @@ fn main() -> Result<()> {
             println!("diagnostics written to {}", dir.display());
         }
         "ablate-table2" => {
-            let recipes = default_recipes(&cfg.artifacts, &cfg.model);
+            let recipes = default_recipes(&cfg);
             if recipes.is_empty() {
                 bail!("no train artifacts for model {}", cfg.model);
             }
@@ -144,7 +171,7 @@ fn main() -> Result<()> {
             println!("written {}", p.display());
         }
         "ablate-table3" => {
-            let ops = sensitivity_ops(&cfg.artifacts, &cfg.model);
+            let ops = sensitivity_ops(&cfg)?;
             if ops.is_empty() {
                 bail!(
                     "no sensitivity artifacts for {} (build with --set core/full)",
@@ -167,7 +194,7 @@ fn main() -> Result<()> {
             chon::coordinator::finetune::print_gap_trajectory("nvfp4", &points);
         }
         "eval-suite" => {
-            let all = default_recipes(&cfg.artifacts, &cfg.model);
+            let all = default_recipes(&cfg);
             let wanted = ["bf16", "fp8", "nvfp4", "chon"];
             let recipes: Vec<String> = all
                 .into_iter()

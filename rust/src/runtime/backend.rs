@@ -1,0 +1,133 @@
+//! The pluggable execution engine behind the coordinator.
+//!
+//! `Executable` mirrors `LoadedArtifact`'s surface (manifest + shape-checked
+//! run), `Backend` resolves artifact names to executables. Two engines:
+//!
+//! * `NativeBackend` (runtime::native) — the tiny GLA/SA training step in
+//!   pure Rust over the util::ndarray + quant + hcp substrates. Needs no
+//!   artifacts directory, no libxla, works on a fresh offline checkout.
+//! * `PjrtBackend` (`--features pjrt`) — the original AOT-HLO path through
+//!   the XLA PJRT C API.
+//!
+//! Both validate inputs against the manifest via `check_inputs`, so
+//! coordinator bugs surface as errors regardless of engine.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+/// One loaded artifact: self-describing metadata + execute.
+pub trait Executable {
+    /// The artifact's manifest (shapes, meta, metric names).
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute with host tensors; returns outputs in manifest order.
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// An execution engine that resolves artifact names.
+pub trait Backend {
+    /// Engine name ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Cheap manifest-only lookup — no model build, no XLA compile.
+    fn manifest(&self, dir: &Path, name: &str) -> Result<Manifest>;
+
+    /// Load (and for PJRT: compile) the named artifact.
+    fn load(&self, dir: &Path, name: &str) -> Result<Rc<dyn Executable>>;
+}
+
+/// Resolve a backend by name (the `--backend` CLI flag).
+pub fn backend_for(kind: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        "native" => Ok(Box::new(crate::runtime::native::NativeBackend)),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(crate::runtime::executable::PjrtBackend)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "backend \"pjrt\" requires building with --features pjrt \
+             (see rust/README.md); the default build is native-only"
+        ),
+        other => bail!("unknown backend {other:?} (expected native|pjrt)"),
+    }
+}
+
+/// Validate inputs against the manifest (count, dtype, shape).
+pub fn check_inputs(man: &Manifest, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != man.inputs.len() {
+        bail!(
+            "{}: got {} inputs, manifest expects {}",
+            man.name,
+            inputs.len(),
+            man.inputs.len()
+        );
+    }
+    for (t, slot) in inputs.iter().zip(&man.inputs) {
+        if t.shape != slot.shape || t.dtype != slot.dtype {
+            bail!(
+                "{}: input {} ({}) expects {:?}{:?}, got {:?}{:?}",
+                man.name,
+                slot.index,
+                slot.name,
+                slot.dtype,
+                slot.shape,
+                t.dtype,
+                t.shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::DType;
+
+    #[test]
+    fn backend_factory_resolves_native() {
+        let b = backend_for("native").unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn backend_factory_rejects_unknown() {
+        assert!(backend_for("tpu").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_unavailable_without_feature() {
+        let err = backend_for("pjrt").unwrap_err().to_string();
+        assert!(err.contains("--features pjrt"), "{err}");
+    }
+
+    #[test]
+    fn check_inputs_catches_count_and_shape() {
+        let man = Manifest::parse(
+            "artifact t\ninput 0 a f32 2,2\ninput 1 b i32 scalar\noutput 0 y f32 scalar\n",
+        )
+        .unwrap();
+        let good = vec![
+            HostTensor::f32(vec![2, 2], vec![0.0; 4]),
+            HostTensor::scalar_i32(1),
+        ];
+        assert!(check_inputs(&man, &good).is_ok());
+        assert!(check_inputs(&man, &good[..1]).is_err());
+        let bad_shape = vec![
+            HostTensor::f32(vec![4], vec![0.0; 4]),
+            HostTensor::scalar_i32(1),
+        ];
+        assert!(check_inputs(&man, &bad_shape).is_err());
+        let bad_dtype = vec![
+            HostTensor::i32(vec![2, 2], vec![0; 4]),
+            HostTensor::scalar_i32(1),
+        ];
+        assert!(check_inputs(&man, &bad_dtype).is_err());
+        let _ = DType::F32;
+    }
+}

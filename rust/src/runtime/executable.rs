@@ -1,5 +1,10 @@
-//! Loaded artifacts: HLO text -> PJRT executable + manifest, with a
-//! shape-checked execute. One global CPU client (PJRT clients are heavy).
+//! PJRT executables (`--features pjrt`): HLO text -> PJRT executable +
+//! manifest, with a shape-checked execute. One global CPU client per
+//! thread (PJRT clients are heavy).
+//!
+//! This module is the `xla::*`-touching half of the runtime and is gated
+//! behind the `pjrt` cargo feature; the offline default build runs the
+//! native engine only (runtime::native).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -9,6 +14,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::Manifest;
+use crate::runtime::backend::{check_inputs, Backend, Executable};
 use crate::runtime::tensor::HostTensor;
 
 thread_local! {
@@ -73,28 +79,7 @@ impl LoadedArtifact {
     /// Inputs are validated against the manifest (count, dtype, shape) so
     /// coordinator bugs surface as errors, not XLA crashes.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        if inputs.len() != self.manifest.inputs.len() {
-            bail!(
-                "{}: got {} inputs, manifest expects {}",
-                self.manifest.name,
-                inputs.len(),
-                self.manifest.inputs.len()
-            );
-        }
-        for (t, slot) in inputs.iter().zip(&self.manifest.inputs) {
-            if t.shape != slot.shape || t.dtype != slot.dtype {
-                bail!(
-                    "{}: input {} ({}) expects {:?}{:?}, got {:?}{:?}",
-                    self.manifest.name,
-                    slot.index,
-                    slot.name,
-                    slot.dtype,
-                    slot.shape,
-                    t.dtype,
-                    t.shape
-                );
-            }
-        }
+        check_inputs(&self.manifest, inputs)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(HostTensor::to_literal)
@@ -114,5 +99,32 @@ impl LoadedArtifact {
             );
         }
         parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+impl Executable for LoadedArtifact {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        LoadedArtifact::run(self, inputs)
+    }
+}
+
+/// The PJRT execution engine.
+pub struct PjrtBackend;
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self, dir: &Path, name: &str) -> Result<Manifest> {
+        Manifest::load(dir, name)
+    }
+
+    fn load(&self, dir: &Path, name: &str) -> Result<Rc<dyn Executable>> {
+        Ok(LoadedArtifact::load_cached(dir, name)?)
     }
 }

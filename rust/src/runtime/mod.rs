@@ -1,14 +1,24 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! The runtime layer: artifact manifests, host tensors, and the pluggable
+//! execution engines behind the coordinator.
 //!
-//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `PjRtClient::cpu().compile` ->
-//! `execute`. HLO *text* is the interchange format (xla_extension 0.5.1
-//! rejects jax>=0.5's 64-bit-id serialized protos).
+//! * `backend` — the `Backend`/`Executable` traits + `backend_for` factory.
+//! * `native` — pure-Rust engine (default; offline, deterministic).
+//! * `executable` — the PJRT/XLA engine (`--features pjrt`): HLO *text* is
+//!   the interchange format (`HloModuleProto::from_text_file` ->
+//!   `XlaComputation::from_proto` -> `PjRtClient::cpu().compile` ->
+//!   `execute`; xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+//!   serialized protos).
 
 pub mod artifact;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod executable;
+pub mod native;
 pub mod tensor;
 
 pub use artifact::Manifest;
-pub use executable::{client, LoadedArtifact};
+pub use backend::{backend_for, check_inputs, Backend, Executable};
+#[cfg(feature = "pjrt")]
+pub use executable::{client, LoadedArtifact, PjrtBackend};
+pub use native::NativeBackend;
 pub use tensor::{load_checkpoint, save_checkpoint, DType, HostTensor};

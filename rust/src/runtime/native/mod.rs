@@ -1,0 +1,413 @@
+//! The native pure-Rust execution engine.
+//!
+//! Resolves the same artifact names the AOT pipeline emits
+//! (`init_<model>`, `train_<model>_<recipe>`, `eval_…`, `diag_…`,
+//! `fwd_<model>`) but synthesizes the manifest and executes the training
+//! step directly on the util::ndarray + quant + hcp substrates — no
+//! artifacts directory, no libxla, fully offline and deterministic.
+
+pub mod model;
+pub mod recipe;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::{Manifest, Slot};
+use crate::runtime::backend::{check_inputs, Backend, Executable};
+use crate::runtime::tensor::{DType, HostTensor};
+
+pub use model::{model_cfg, Arch, ModelCfg, ParamSpec};
+pub use recipe::{available_recipes, NativeRecipe};
+
+/// The models the native engine ships.
+pub fn available_models() -> Vec<&'static str> {
+    vec!["tiny_gla", "tiny_sa"]
+}
+
+/// Tab. 3 operator list for a model name.
+pub fn sensitivity_ops_for(model: &str) -> Result<Vec<String>> {
+    Ok(recipe::sensitivity_ops(model_cfg(model)?.arch))
+}
+
+/// Artifact kinds the engine understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Init,
+    Train,
+    Eval,
+    Diag,
+    Fwd,
+}
+
+/// Split an artifact name into (kind, model, recipe).
+fn parse_name(name: &str) -> Result<(Kind, String, Option<String>)> {
+    let cases: [(&str, Kind, bool); 5] = [
+        ("init_", Kind::Init, false),
+        ("train_", Kind::Train, true),
+        ("eval_", Kind::Eval, true),
+        ("diag_", Kind::Diag, true),
+        ("fwd_", Kind::Fwd, false),
+    ];
+    for (prefix, kind, has_recipe) in cases {
+        if let Some(rest) = name.strip_prefix(prefix) {
+            if !has_recipe {
+                return Ok((kind, rest.to_string(), None));
+            }
+            for m in available_models() {
+                if let Some(r) = rest.strip_prefix(&format!("{m}_")) {
+                    return Ok((kind, m.to_string(), Some(r.to_string())));
+                }
+            }
+            bail!("cannot split model/recipe in artifact name {name:?}");
+        }
+    }
+    bail!("unknown artifact name {name:?}");
+}
+
+fn slot(index: usize, name: &str, dtype: DType, shape: Vec<usize>) -> Slot {
+    Slot { index, name: name.to_string(), dtype, shape }
+}
+
+fn base_meta(cfg: &ModelCfg, kind: &str, recipe_name: Option<&str>) -> BTreeMap<String, String> {
+    let mut meta = BTreeMap::new();
+    meta.insert("kind".into(), kind.into());
+    meta.insert("backend".into(), "native".into());
+    meta.insert("model".into(), cfg.name.clone());
+    if let Some(r) = recipe_name {
+        meta.insert("recipe".into(), r.into());
+    }
+    meta.insert("vocab".into(), cfg.vocab.to_string());
+    meta.insert("batch".into(), cfg.batch.to_string());
+    meta.insert("seq_len".into(), cfg.seq.to_string());
+    meta.insert("total_steps".into(), cfg.total_steps.to_string());
+    meta
+}
+
+fn build_manifest(
+    name: &str,
+    kind: Kind,
+    cfg: &ModelCfg,
+    recipe_name: Option<&str>,
+) -> Manifest {
+    let specs = model::param_specs(cfg);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    let mut metrics = Vec::new();
+    let push_params = |dst: &mut Vec<Slot>| {
+        for spec in &specs {
+            let idx = dst.len();
+            dst.push(slot(idx, &spec.name, DType::F32, spec.shape.clone()));
+        }
+    };
+    match kind {
+        Kind::Init => {
+            inputs.push(slot(0, "seed", DType::I32, vec![]));
+            for spec in &specs {
+                let idx = outputs.len();
+                outputs.push(slot(idx, &spec.name, DType::F32, spec.shape.clone()));
+            }
+        }
+        Kind::Train => {
+            push_params(&mut inputs);
+            let k = specs.len();
+            for (i, spec) in specs.iter().enumerate() {
+                inputs.push(slot(k + i, &format!("m[{i}]"), DType::F32, spec.shape.clone()));
+            }
+            for (i, spec) in specs.iter().enumerate() {
+                inputs
+                    .push(slot(2 * k + i, &format!("v[{i}]"), DType::F32, spec.shape.clone()));
+            }
+            inputs.push(slot(3 * k, "step", DType::I32, vec![]));
+            inputs.push(slot(3 * k + 1, "tokens", DType::I32, vec![b, s]));
+            inputs.push(slot(3 * k + 2, "targets", DType::I32, vec![b, s]));
+            inputs.push(slot(3 * k + 3, "seed", DType::I32, vec![]));
+            for (i, spec) in specs.iter().enumerate() {
+                let suffix = spec.name.strip_prefix("params").unwrap_or(&spec.name);
+                outputs.push(slot(i, &format!("out{suffix}"), DType::F32, spec.shape.clone()));
+            }
+            for (i, spec) in specs.iter().enumerate() {
+                outputs
+                    .push(slot(k + i, &format!("out_m[{i}]"), DType::F32, spec.shape.clone()));
+            }
+            for (i, spec) in specs.iter().enumerate() {
+                outputs.push(slot(
+                    2 * k + i,
+                    &format!("out_v[{i}]"),
+                    DType::F32,
+                    spec.shape.clone(),
+                ));
+            }
+            outputs.push(slot(3 * k, "loss", DType::F32, vec![]));
+            outputs.push(slot(3 * k + 1, "grad_norm", DType::F32, vec![]));
+            outputs.push(slot(3 * k + 2, "lr", DType::F32, vec![]));
+        }
+        Kind::Eval => {
+            push_params(&mut inputs);
+            let k = specs.len();
+            inputs.push(slot(k, "tokens", DType::I32, vec![b, s]));
+            inputs.push(slot(k + 1, "targets", DType::I32, vec![b, s]));
+            outputs.push(slot(0, "loss", DType::F32, vec![]));
+            outputs.push(slot(1, "accuracy", DType::F32, vec![]));
+        }
+        Kind::Fwd => {
+            push_params(&mut inputs);
+            let k = specs.len();
+            inputs.push(slot(k, "tokens", DType::I32, vec![b, s]));
+            outputs.push(slot(0, "logits", DType::F32, vec![b, s, cfg.vocab]));
+        }
+        Kind::Diag => {
+            push_params(&mut inputs);
+            let k = specs.len();
+            inputs.push(slot(k, "tokens", DType::I32, vec![b, s]));
+            inputs.push(slot(k + 1, "step", DType::I32, vec![]));
+            metrics = model::metric_names(cfg);
+            outputs.push(slot(0, "metrics", DType::F32, vec![metrics.len()]));
+            for (i, (tag, chans)) in model::diag_map_shapes(cfg).iter().enumerate() {
+                outputs.push(slot(1 + i, tag, DType::F32, vec![cfg.layers, *chans]));
+            }
+        }
+    }
+    Manifest {
+        name: name.to_string(),
+        meta: base_meta(
+            cfg,
+            match kind {
+                Kind::Init => "init",
+                Kind::Train => "train",
+                Kind::Eval => "eval",
+                Kind::Diag => "diag",
+                Kind::Fwd => "fwd",
+            },
+            recipe_name,
+        ),
+        inputs,
+        outputs,
+        metrics,
+    }
+}
+
+/// One resolved native artifact.
+pub struct NativeExec {
+    kind: Kind,
+    cfg: ModelCfg,
+    recipe: Option<NativeRecipe>,
+    manifest: Manifest,
+}
+
+impl NativeExec {
+    pub fn new(name: &str) -> Result<NativeExec> {
+        let (kind, model_name, recipe_name) = parse_name(name)?;
+        let cfg = model_cfg(&model_name)?;
+        let rec = match &recipe_name {
+            Some(r) => Some(recipe::recipe(r)?),
+            None => None,
+        };
+        let manifest = build_manifest(name, kind, &cfg, recipe_name.as_deref());
+        Ok(NativeExec { kind, cfg, recipe: rec, manifest })
+    }
+
+    fn bf16(&self) -> NativeRecipe {
+        recipe::recipe("bf16").expect("bf16 recipe")
+    }
+}
+
+impl Executable for NativeExec {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        check_inputs(&self.manifest, inputs)?;
+        let k = model::param_specs(&self.cfg).len();
+        match self.kind {
+            Kind::Init => {
+                let seed = inputs[0].i32_data[0] as u64;
+                Ok(model::init_params(&self.cfg, seed))
+            }
+            Kind::Train => {
+                let rec = self.recipe.clone().unwrap_or_else(|| self.bf16());
+                let step = inputs[3 * k].i32_data[0] as usize;
+                let tokens = &inputs[3 * k + 1].i32_data;
+                let targets = &inputs[3 * k + 2].i32_data;
+                let seed = inputs[3 * k + 3].i32_data[0] as u64;
+                let (p2, m2, v2, loss, gnorm, lr) = model::train_step(
+                    &self.cfg,
+                    &rec,
+                    &inputs[..k],
+                    &inputs[k..2 * k],
+                    &inputs[2 * k..3 * k],
+                    step,
+                    tokens,
+                    targets,
+                    seed,
+                );
+                let mut out = p2;
+                out.extend(m2);
+                out.extend(v2);
+                out.push(HostTensor::scalar_f32(loss));
+                out.push(HostTensor::scalar_f32(gnorm));
+                out.push(HostTensor::scalar_f32(lr));
+                Ok(out)
+            }
+            Kind::Eval => {
+                let rec = self.recipe.clone().unwrap_or_else(|| self.bf16());
+                let (loss, acc) = model::eval_step(
+                    &self.cfg,
+                    &rec,
+                    &inputs[..k],
+                    &inputs[k].i32_data,
+                    &inputs[k + 1].i32_data,
+                );
+                Ok(vec![HostTensor::scalar_f32(loss), HostTensor::scalar_f32(acc)])
+            }
+            Kind::Fwd => {
+                let rec = self.bf16(); // forward scoring runs full precision
+                let logits = model::forward_logits(
+                    &self.cfg,
+                    &rec,
+                    &inputs[..k],
+                    &inputs[k].i32_data,
+                );
+                Ok(vec![HostTensor::f32(
+                    vec![self.cfg.batch, self.cfg.seq, self.cfg.vocab],
+                    logits.data,
+                )])
+            }
+            Kind::Diag => {
+                let rec = self.recipe.clone().unwrap_or_else(|| self.bf16());
+                let (values, maps) = model::diag_step(
+                    &self.cfg,
+                    &rec,
+                    &inputs[..k],
+                    &inputs[k].i32_data,
+                );
+                let mut out =
+                    vec![HostTensor::f32(vec![values.len()], values)];
+                for map in maps {
+                    out.push(HostTensor::f32(vec![map.rows, map.cols], map.data));
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// The native engine (stateless: executables are cheap to construct).
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self, _dir: &Path, name: &str) -> Result<Manifest> {
+        let (kind, model_name, recipe_name) = parse_name(name)?;
+        let cfg = model_cfg(&model_name)?;
+        if let Some(r) = &recipe_name {
+            recipe::recipe(r)?; // validate
+        }
+        Ok(build_manifest(name, kind, &cfg, recipe_name.as_deref()))
+    }
+
+    fn load(&self, _dir: &Path, name: &str) -> Result<Rc<dyn Executable>> {
+        Ok(Rc::new(NativeExec::new(name)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_names() {
+        let (k, m, r) = parse_name("train_tiny_gla_chon_no_sr").unwrap();
+        assert_eq!(k, Kind::Train);
+        assert_eq!(m, "tiny_gla");
+        assert_eq!(r.as_deref(), Some("chon_no_sr"));
+        let (k, m, r) = parse_name("init_tiny_sa").unwrap();
+        assert_eq!(k, Kind::Init);
+        assert_eq!(m, "tiny_sa");
+        assert!(r.is_none());
+        assert!(parse_name("bogus_tiny_gla").is_err());
+        assert!(parse_name("train_big_model_chon").is_err());
+    }
+
+    #[test]
+    fn train_manifest_shape_matches_trainer_protocol() {
+        let man = NativeBackend
+            .manifest(Path::new("unused"), "train_tiny_gla_chon")
+            .unwrap();
+        let k = man.inputs_with_prefix("params").len();
+        assert!(k > 0);
+        // 3k state inputs + step + tokens + targets + seed
+        assert_eq!(man.inputs.len(), 3 * k + 4);
+        // 3k state outputs + loss + grad_norm + lr
+        assert_eq!(man.outputs.len(), 3 * k + 3);
+        assert_eq!(man.meta_usize("vocab").unwrap(), 256);
+        assert_eq!(man.meta_usize("batch").unwrap(), 4);
+        assert_eq!(man.meta_usize("seq_len").unwrap(), 32);
+        assert!(man.meta_usize("total_steps").unwrap() > 0);
+        // ablation's param counting sees the per-op weight names
+        assert!(man.inputs.iter().any(|s| s.name.contains("['wq']")));
+        assert!(man.inputs.iter().any(|s| s.name.contains("['wgk']")));
+    }
+
+    #[test]
+    fn init_then_train_roundtrip() {
+        let be = NativeBackend;
+        let dir = Path::new("unused");
+        let init = be.load(dir, "init_tiny_gla").unwrap();
+        let params = init.run(&[HostTensor::scalar_i32(3)]).unwrap();
+        let train = be.load(dir, "train_tiny_gla_bf16").unwrap();
+        let man = train.manifest();
+        let k = params.len();
+        let mut inputs = params.clone();
+        for p in &params {
+            inputs.push(HostTensor::zeros(p.dtype, p.shape.clone()));
+        }
+        for p in &params {
+            inputs.push(HostTensor::zeros(p.dtype, p.shape.clone()));
+        }
+        inputs.push(HostTensor::scalar_i32(0));
+        let (b, s) = (4, 32);
+        inputs.push(HostTensor::i32(vec![b, s], vec![65; b * s]));
+        inputs.push(HostTensor::i32(vec![b, s], vec![66; b * s]));
+        inputs.push(HostTensor::scalar_i32(3));
+        let out = train.run(&inputs).unwrap();
+        assert_eq!(out.len(), man.outputs.len());
+        let loss = out[3 * k].f32_data[0];
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn run_rejects_bad_inputs() {
+        let be = NativeBackend;
+        let init = be.load(Path::new("x"), "init_tiny_gla").unwrap();
+        let err = init.run(&[]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+    }
+
+    #[test]
+    fn diag_manifest_metrics_nonempty() {
+        let man = NativeBackend
+            .manifest(Path::new("x"), "diag_tiny_gla_chon")
+            .unwrap();
+        assert!(!man.metrics.is_empty());
+        assert!(man.metrics.iter().any(|n| n == "L0.attn.gk.act.kurt"));
+        assert_eq!(man.outputs.len(), 4); // metrics + 3 channel maps
+        let man = NativeBackend
+            .manifest(Path::new("x"), "diag_tiny_sa_bf16")
+            .unwrap();
+        assert_eq!(man.outputs.len(), 3); // metrics + 2 channel maps
+    }
+
+    #[test]
+    fn unknown_recipe_rejected_at_load() {
+        let be = NativeBackend;
+        assert!(be.load(Path::new("x"), "train_tiny_gla_fp3").is_err());
+    }
+}

@@ -1,0 +1,1166 @@
+//! The native training step: a tiny GLA / softmax-attention LM with
+//! hand-written backprop, Adam, and the NVFP4/CHON fake-quant recipe,
+//! entirely on the util::ndarray + quant + hcp substrates.
+//!
+//! Architecture (both models): embed -> L x [rmsnorm -> attention ->
+//! residual -> rmsnorm -> SwiGLU -> residual] -> rmsnorm -> lm_head.
+//! GLA attention is the parallel-form gated linear attention: K is
+//! modulated per-channel by sigmoid(X W_gk), scores are causal-masked and
+//! row-normalized by 1/((t+1) sqrt(d)) (no softmax), and the context is
+//! gated by sigmoid(X W_g) before W_o. SA is standard causal softmax.
+//!
+//! Quantization follows the recipe resolution of native::recipe: forward
+//! GEMM operands are fake-quantized (NVFP4 1x16 activations, 2D 16x16
+//! weights, optional HCP O2-B compensation); the Wgrad GEMM quantizes both
+//! operands with optional RHT rotation over the contraction dim and
+//! stochastic rounding on the gradient side. Gradients flow through the
+//! quantizers with the straight-through estimator. Everything is
+//! deterministic in (seed, step) — SR draws come from a per-step PRNG.
+
+use anyhow::{bail, Result};
+
+use crate::diagnostics;
+use crate::hcp;
+use crate::quant::{fp8_fake_quant, nvfp4, rht};
+use crate::runtime::native::recipe::{op_quant, NativeRecipe, OpQuant, QuantKind};
+use crate::runtime::tensor::HostTensor;
+use crate::util::ndarray::{matmul, matmul_into, Mat};
+use crate::util::prng::Rng;
+
+/// Attention family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Gla,
+    Sa,
+}
+
+/// Static model configuration (the native analogue of the AOT meta).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub arch: Arch,
+    pub vocab: usize,
+    pub d: usize,
+    pub ff: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub total_steps: usize,
+}
+
+/// Resolve a model config by name.
+pub fn model_cfg(name: &str) -> Result<ModelCfg> {
+    let arch = match name {
+        "tiny_gla" => Arch::Gla,
+        "tiny_sa" => Arch::Sa,
+        other => bail!("unknown native model {other:?} (expected tiny_gla|tiny_sa)"),
+    };
+    Ok(ModelCfg {
+        name: name.to_string(),
+        arch,
+        vocab: 256,
+        d: 32,
+        ff: 64,
+        layers: 2,
+        batch: 4,
+        seq: 32,
+        total_steps: 200,
+    })
+}
+
+/// Per-layer weight slots, in parameter order.
+fn layer_slots(arch: Arch) -> &'static [&'static str] {
+    match arch {
+        Arch::Gla => &[
+            "attn_norm", "wq", "wk", "wv", "wgk", "wg", "wo", "mlp_norm",
+            "w_up", "w_gate", "w_down",
+        ],
+        Arch::Sa => &[
+            "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_up", "w_gate",
+            "w_down",
+        ],
+    }
+}
+
+/// One named parameter slot.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+fn slot_shape(cfg: &ModelCfg, slot: &str) -> Vec<usize> {
+    let (d, ff) = (cfg.d, cfg.ff);
+    match slot {
+        "attn_norm" | "mlp_norm" => vec![d],
+        "w_up" | "w_gate" => vec![d, ff],
+        "w_down" => vec![ff, d],
+        _ => vec![d, d], // wq wk wv wgk wg wo
+    }
+}
+
+/// The full parameter layout, in slot order.
+pub fn param_specs(cfg: &ModelCfg) -> Vec<ParamSpec> {
+    let mut out = vec![ParamSpec {
+        name: "params['embed']".into(),
+        shape: vec![cfg.vocab, cfg.d],
+    }];
+    for l in 0..cfg.layers {
+        for slot in layer_slots(cfg.arch) {
+            out.push(ParamSpec {
+                name: format!("params['L{l}']['{slot}']"),
+                shape: slot_shape(cfg, slot),
+            });
+        }
+    }
+    out.push(ParamSpec { name: "params['final_norm']".into(), shape: vec![cfg.d] });
+    out.push(ParamSpec {
+        name: "params['lm_head']".into(),
+        shape: vec![cfg.d, cfg.vocab],
+    });
+    out
+}
+
+/// Index of a per-layer slot in the parameter list.
+fn pidx(cfg: &ModelCfg, layer: usize, slot: &str) -> usize {
+    let slots = layer_slots(cfg.arch);
+    let off = slots
+        .iter()
+        .position(|s| *s == slot)
+        .unwrap_or_else(|| panic!("no slot {slot} for {:?}", cfg.arch));
+    1 + layer * slots.len() + off
+}
+
+fn final_norm_idx(cfg: &ModelCfg) -> usize {
+    1 + cfg.layers * layer_slots(cfg.arch).len()
+}
+
+fn lm_head_idx(cfg: &ModelCfg) -> usize {
+    final_norm_idx(cfg) + 1
+}
+
+/// Deterministic, seed-sensitive initialization.
+pub fn init_params(cfg: &ModelCfg, seed: u64) -> Vec<HostTensor> {
+    let base = Rng::new(seed ^ 0xC407_1A17);
+    param_specs(cfg)
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let n: usize = spec.shape.iter().product();
+            let data = if spec.name.contains("norm") {
+                vec![1.0f32; n]
+            } else if spec.name.contains("lm_head") {
+                // zero head: uniform logits at step 0, fast early descent
+                vec![0.0f32; n]
+            } else {
+                let scale = if spec.name.contains("embed") {
+                    0.02
+                } else {
+                    1.0 / (spec.shape[0] as f32).sqrt()
+                };
+                let mut rng = base.fold_in(i as u64 + 1);
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, scale);
+                v
+            };
+            HostTensor::f32(spec.shape.clone(), data)
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------------
+// Tensor plumbing
+// ------------------------------------------------------------------
+
+fn to_mat(t: &HostTensor) -> Mat {
+    match t.shape.len() {
+        1 => Mat::from_vec(1, t.shape[0], t.f32_data.clone()),
+        2 => Mat::from_vec(t.shape[0], t.shape[1], t.f32_data.clone()),
+        _ => panic!("native params are rank 1/2, got {:?}", t.shape),
+    }
+}
+
+fn params_to_mats(params: &[HostTensor]) -> Vec<Mat> {
+    params.iter().map(to_mat).collect()
+}
+
+fn mats_to_tensors(specs: &[ParamSpec], mats: Vec<Mat>) -> Vec<HostTensor> {
+    specs
+        .iter()
+        .zip(mats)
+        .map(|(s, m)| HostTensor::f32(s.shape.clone(), m.data))
+        .collect()
+}
+
+fn rows_block(m: &Mat, start: usize, len: usize) -> Mat {
+    Mat::from_vec(len, m.cols, m.data[start * m.cols..(start + len) * m.cols].to_vec())
+}
+
+fn set_rows_block(dst: &mut Mat, start: usize, src: &Mat) {
+    let n = src.cols;
+    dst.data[start * n..(start + src.rows) * n].copy_from_slice(&src.data);
+}
+
+fn map1(a: &Mat, f: impl Fn(f32) -> f32) -> Mat {
+    Mat::from_vec(a.rows, a.cols, a.data.iter().map(|&x| f(x)).collect())
+}
+
+fn map2(a: &Mat, b: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Mat::from_vec(a.rows, a.cols, data)
+}
+
+fn map3(a: &Mat, b: &Mat, c: &Mat, f: impl Fn(f32, f32, f32) -> f32) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    assert_eq!((a.rows, a.cols), (c.rows, c.cols));
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .zip(&c.data)
+        .map(|((&x, &y), &z)| f(x, y, z))
+        .collect();
+    Mat::from_vec(a.rows, a.cols, data)
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+// ------------------------------------------------------------------
+// Quantized linear (forward caches the used operands for STE backward)
+// ------------------------------------------------------------------
+
+/// Forward result + the operands the backward pass replays (STE). On the
+/// BF16 path `xu`/`wu` are plain copies — the clone is what keeps the
+/// activation alive for backward; at these model sizes (<= 64x256 f32)
+/// the copy is noise next to the GEMM.
+struct LinOut {
+    y: Mat,
+    /// activation operand actually fed to the GEMM (quantized or not)
+    xu: Mat,
+    /// weight operand actually fed to the GEMM
+    wu: Mat,
+    oq: OpQuant,
+}
+
+fn linear(x: &Mat, w: &Mat, oq: &OpQuant) -> LinOut {
+    match oq.mode {
+        QuantKind::Bf16 => LinOut {
+            y: matmul(x, w),
+            xu: x.clone(),
+            wu: w.clone(),
+            oq: oq.clone(),
+        },
+        QuantKind::Fp8 => {
+            let xu = Mat::from_vec(x.rows, x.cols, fp8_fake_quant(&x.data));
+            let wu = Mat::from_vec(w.rows, w.cols, fp8_fake_quant(&w.data));
+            LinOut { y: matmul(&xu, &wu), xu, wu, oq: oq.clone() }
+        }
+        QuantKind::Nvfp4 => {
+            let xu = nvfp4::fake_quant_mat(x);
+            let wu = if oq.scaling_2d {
+                nvfp4::fake_quant_mat_2d(w, 16)
+            } else {
+                nvfp4::fake_quant_mat(w)
+            };
+            let mut y = matmul(&xu, &wu);
+            if oq.hcp_frac > 0.0 {
+                // HCP O2-B compensation over the top-k hot channels
+                let dx = x.sub(&xu);
+                let dw = w.sub(&wu);
+                let k = ((oq.hcp_frac * x.cols as f64).ceil() as usize).max(1);
+                let idx = hcp::top_k(&hcp::scores(&dx, &dw), k);
+                matmul_into(&dx.gather_cols(&idx), &wu.gather_rows(&idx), &mut y, true);
+                matmul_into(&xu.gather_cols(&idx), &dw.gather_rows(&idx), &mut y, true);
+            }
+            LinOut { y, xu, wu, oq: oq.clone() }
+        }
+    }
+}
+
+/// Wgrad with the backward recipe: optional RHT over the token
+/// (contraction) dim, then NVFP4 fake-quant of both operands — SR on the
+/// gradient side when the recipe asks for it.
+fn wgrad_quantized(c: &LinOut, dy: &Mat, rng: &mut Rng) -> Mat {
+    let rows = c.xu.rows;
+    let (xt, dyt) = if c.oq.rht && rows.is_power_of_two() {
+        let signs = rht::random_signs(rows, rng);
+        (rht::rht(&c.xu.transpose(), &signs), rht::rht(&dy.transpose(), &signs))
+    } else {
+        (c.xu.transpose(), dy.transpose())
+    };
+    let quant = |m: &Mat, sr: bool, rng: &mut Rng| -> Mat {
+        if m.data.len() % nvfp4::BLOCK != 0 {
+            return m.clone();
+        }
+        let rounding = if sr { nvfp4::Rounding::Sr } else { nvfp4::Rounding::Rtn };
+        Mat::from_vec(m.rows, m.cols, nvfp4::fake_quant(&m.data, rounding, Some(rng)))
+    };
+    let xq = quant(&xt, false, rng);
+    let dyq = quant(&dyt, c.oq.sr, rng);
+    // dw = X^T dY == (H X)^T (H dY): xq is (d_in, rows), dyq is (d_out, rows)
+    matmul(&xq, &dyq.transpose())
+}
+
+/// STE backward of one linear: returns (dx, dw).
+fn linear_bwd(c: &LinOut, dy: &Mat, rng: &mut Rng) -> (Mat, Mat) {
+    let dx = matmul(dy, &c.wu.transpose());
+    let dw = if c.oq.mode == QuantKind::Nvfp4 {
+        wgrad_quantized(c, dy, rng)
+    } else {
+        matmul(&c.xu.transpose(), dy)
+    };
+    (dx, dw)
+}
+
+// ------------------------------------------------------------------
+// Norms + losses
+// ------------------------------------------------------------------
+
+const RMS_EPS: f64 = 1e-6;
+
+fn rmsnorm(x: &Mat, gamma: &Mat) -> (Mat, Vec<f32>) {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    let mut rs = Vec::with_capacity(x.rows);
+    let g = gamma.row(0).to_vec();
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f64 =
+            row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.cols as f64;
+        let r = (ms + RMS_EPS).sqrt() as f32;
+        let dst = out.row_mut(i);
+        for (j, &v) in row.iter().enumerate() {
+            dst[j] = v / r * g[j];
+        }
+        rs.push(r);
+    }
+    (out, rs)
+}
+
+fn rmsnorm_bwd(
+    x: &Mat,
+    gamma: &Mat,
+    rs: &[f32],
+    dy: &Mat,
+    dgamma: &mut Mat,
+) -> Mat {
+    let d = x.cols as f32;
+    let mut dx = Mat::zeros(x.rows, x.cols);
+    let g = gamma.row(0).to_vec();
+    for i in 0..x.rows {
+        let r = rs[i];
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let mut dot = 0.0f64;
+        for j in 0..x.cols {
+            dot += (dyr[j] * g[j]) as f64 * xr[j] as f64;
+        }
+        let coeff = dot as f32 / (d * r * r * r);
+        let dgr = dgamma.row_mut(0);
+        for j in 0..x.cols {
+            dgr[j] += dyr[j] * xr[j] / r;
+        }
+        let dxr = dx.row_mut(i);
+        for j in 0..x.cols {
+            dxr[j] = dyr[j] * g[j] / r - xr[j] * coeff;
+        }
+    }
+    dx
+}
+
+/// Cross entropy over rows; returns (loss, accuracy, dlogits).
+fn cross_entropy(logits: &Mat, targets: &[i32]) -> (f32, f32, Mat) {
+    let (n, v) = (logits.rows, logits.cols);
+    assert_eq!(targets.len(), n);
+    let mut dl = Mat::zeros(n, v);
+    let mut loss = 0.0f64;
+    let mut hits = 0usize;
+    for i in 0..n {
+        let row = logits.row(i);
+        let t = (targets[i] as usize) % v;
+        let mut mx = f32::NEG_INFINITY;
+        let mut argmax = 0;
+        for (j, &x) in row.iter().enumerate() {
+            if x > mx {
+                mx = x;
+                argmax = j;
+            }
+        }
+        if argmax == t {
+            hits += 1;
+        }
+        let mut z = 0.0f64;
+        for &x in row {
+            z += ((x - mx) as f64).exp();
+        }
+        let logz = z.ln() + mx as f64;
+        loss -= row[t] as f64 - logz;
+        let drow = dl.row_mut(i);
+        for j in 0..v {
+            let p = ((row[j] as f64 - logz).exp()) as f32;
+            drow[j] = (p - if j == t { 1.0 } else { 0.0 }) / n as f32;
+        }
+    }
+    (loss as f32 / n as f32, hits as f32 / n as f32, dl)
+}
+
+// ------------------------------------------------------------------
+// Forward pass with caches
+// ------------------------------------------------------------------
+
+struct LayerCache {
+    x_in: Mat,
+    r1: Vec<f32>,
+    lq: LinOut,
+    lk: LinOut,
+    lv: LinOut,
+    lgk: Option<LinOut>,
+    lg: Option<LinOut>,
+    sgk: Option<Mat>,
+    sg: Option<Mat>,
+    /// modulated key (GLA) or the raw key (SA)
+    kp: Mat,
+    /// per-batch attention weight matrices (masked+scaled / softmaxed)
+    att: Vec<Mat>,
+    /// masked pre-softmax scores, flattened (SA diagnostics only)
+    presoftmax: Vec<f32>,
+    ao: Mat,
+    /// input to W_o (gated context for GLA, context for SA)
+    o: Mat,
+    lo: LinOut,
+    x_mid: Mat,
+    r2: Vec<f32>,
+    lup: LinOut,
+    lgate: LinOut,
+    sg2: Mat,
+    silu: Mat,
+    act: Mat,
+    ldown: LinOut,
+}
+
+struct FwdCache {
+    token_ids: Vec<usize>,
+    layers: Vec<LayerCache>,
+    xf: Mat,
+    rf: Vec<f32>,
+    lhead: LinOut,
+}
+
+fn forward_cache(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params: &[Mat],
+    tokens: &[i32],
+) -> FwdCache {
+    let (d, bt) = (cfg.d, tokens.len());
+    let seq = cfg.seq;
+    assert_eq!(bt % seq, 0, "token count {bt} not a multiple of seq {seq}");
+    let nb = bt / seq;
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+
+    let embed = &params[0];
+    let token_ids: Vec<usize> =
+        tokens.iter().map(|&t| (t as usize) % cfg.vocab).collect();
+    let mut x = Mat::zeros(bt, d);
+    for (i, &t) in token_ids.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(embed.row(t));
+    }
+
+    let mut layers = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        let oq = |op: &str| op_quant(rec, cfg.arch, l, cfg.layers, op);
+        let p = |slot: &str| &params[pidx(cfg, l, slot)];
+
+        let x_in = x.clone();
+        let (h, r1) = rmsnorm(&x_in, p("attn_norm"));
+        let lq = linear(&h, p("wq"), &oq("attn.q"));
+        let lk = linear(&h, p("wk"), &oq("attn.k"));
+        let lv = linear(&h, p("wv"), &oq("attn.v"));
+
+        let (lgk, lg, sgk, sg, kp);
+        match cfg.arch {
+            Arch::Gla => {
+                let gk = linear(&h, p("wgk"), &oq("attn.gk"));
+                let g = linear(&h, p("wg"), &oq("attn.g"));
+                let sgk_m = map1(&gk.y, sigmoid);
+                let sg_m = map1(&g.y, sigmoid);
+                kp = map2(&lk.y, &sgk_m, |k, s| k * s);
+                lgk = Some(gk);
+                lg = Some(g);
+                sgk = Some(sgk_m);
+                sg = Some(sg_m);
+            }
+            Arch::Sa => {
+                kp = lk.y.clone();
+                lgk = None;
+                lg = None;
+                sgk = None;
+                sg = None;
+            }
+        }
+
+        let mut ao = Mat::zeros(bt, d);
+        let mut att = Vec::with_capacity(nb);
+        let mut presoftmax = Vec::new();
+        for b in 0..nb {
+            let s0 = b * seq;
+            let qb = rows_block(&lq.y, s0, seq);
+            let kb = rows_block(&kp, s0, seq);
+            let vb = rows_block(&lv.y, s0, seq);
+            let mut w_att = matmul(&qb, &kb.transpose());
+            match cfg.arch {
+                Arch::Gla => {
+                    // causal mask + 1/((t+1) sqrt(d)) row normalization
+                    for t in 0..seq {
+                        let ct = inv_sqrt_d / (t as f32 + 1.0);
+                        let row = w_att.row_mut(t);
+                        for (s, val) in row.iter_mut().enumerate() {
+                            *val = if s <= t { *val * ct } else { 0.0 };
+                        }
+                    }
+                }
+                Arch::Sa => {
+                    // causal softmax over s <= t
+                    for t in 0..seq {
+                        let row = w_att.row_mut(t);
+                        let mut mx = f32::NEG_INFINITY;
+                        for (s, val) in row.iter_mut().enumerate().take(t + 1) {
+                            *val *= inv_sqrt_d;
+                            presoftmax.push(*val);
+                            mx = mx.max(*val);
+                            let _ = s;
+                        }
+                        let mut z = 0.0f32;
+                        for val in row.iter_mut().take(t + 1) {
+                            *val = (*val - mx).exp();
+                            z += *val;
+                        }
+                        for (s, val) in row.iter_mut().enumerate() {
+                            *val = if s <= t { *val / z } else { 0.0 };
+                        }
+                    }
+                }
+            }
+            set_rows_block(&mut ao, s0, &matmul(&w_att, &vb));
+            att.push(w_att);
+        }
+
+        let o = match &sg {
+            Some(sg_m) => map2(&ao, sg_m, |a, s| a * s),
+            None => ao.clone(),
+        };
+        let lo = linear(&o, p("wo"), &oq("attn.o"));
+        let mut x_mid = x_in.clone();
+        x_mid.add_assign(&lo.y);
+
+        let (h2, r2) = rmsnorm(&x_mid, p("mlp_norm"));
+        let lup = linear(&h2, p("w_up"), &oq("mlp.up"));
+        let lgate = linear(&h2, p("w_gate"), &oq("mlp.gate"));
+        let sg2 = map1(&lgate.y, sigmoid);
+        let silu = map2(&lgate.y, &sg2, |z, s| z * s);
+        let act = map2(&lup.y, &silu, |u, s| u * s);
+        let ldown = linear(&act, p("w_down"), &oq("mlp.down"));
+        let mut x_out = x_mid.clone();
+        x_out.add_assign(&ldown.y);
+        x = x_out;
+
+        layers.push(LayerCache {
+            x_in,
+            r1,
+            lq,
+            lk,
+            lv,
+            lgk,
+            lg,
+            sgk,
+            sg,
+            kp,
+            att,
+            presoftmax,
+            ao,
+            o,
+            lo,
+            x_mid,
+            r2,
+            lup,
+            lgate,
+            sg2,
+            silu,
+            act,
+            ldown,
+        });
+    }
+
+    let (hf, rf) = rmsnorm(&x, &params[final_norm_idx(cfg)]);
+    let lhead = linear(&hf, &params[lm_head_idx(cfg)], &crate::runtime::native::recipe::BF16_OP);
+    FwdCache { token_ids, layers, xf: x, rf, lhead }
+}
+
+// ------------------------------------------------------------------
+// Backward pass
+// ------------------------------------------------------------------
+
+fn backward(
+    cfg: &ModelCfg,
+    params: &[Mat],
+    cache: &FwdCache,
+    dlogits: &Mat,
+    rng: &mut Rng,
+) -> Vec<Mat> {
+    let seq = cfg.seq;
+    let inv_sqrt_d = 1.0 / (cfg.d as f32).sqrt();
+    let mut grads: Vec<Mat> =
+        params.iter().map(|p| Mat::zeros(p.rows, p.cols)).collect();
+
+    // lm_head + final norm
+    let (dhf, dw_head) = linear_bwd(&cache.lhead, dlogits, rng);
+    grads[lm_head_idx(cfg)].add_assign(&dw_head);
+    let mut dgf = Mat::zeros(1, cfg.d);
+    let mut dx = rmsnorm_bwd(&cache.xf, &params[final_norm_idx(cfg)], &cache.rf, &dhf, &mut dgf);
+    grads[final_norm_idx(cfg)].add_assign(&dgf);
+
+    for l in (0..cfg.layers).rev() {
+        let c = &cache.layers[l];
+        let gi = |slot: &str| pidx(cfg, l, slot);
+
+        // MLP block: x_out = x_mid + down(act)
+        let (dact, dw_down) = linear_bwd(&c.ldown, &dx, rng);
+        grads[gi("w_down")].add_assign(&dw_down);
+        let dup = map2(&dact, &c.silu, |a, s| a * s);
+        let dgate = {
+            // d silu(z) = sig(z) (1 + z (1 - sig(z)))
+            let dsilu = map2(&c.lgate.y, &c.sg2, |z, s| s * (1.0 + z * (1.0 - s)));
+            map3(&dact, &c.lup.y, &dsilu, |a, u, ds| a * u * ds)
+        };
+        let (dh2a, dw_up) = linear_bwd(&c.lup, &dup, rng);
+        grads[gi("w_up")].add_assign(&dw_up);
+        let (dh2b, dw_gate) = linear_bwd(&c.lgate, &dgate, rng);
+        grads[gi("w_gate")].add_assign(&dw_gate);
+        let mut dh2 = dh2a;
+        dh2.add_assign(&dh2b);
+        let mut dgn = Mat::zeros(1, cfg.d);
+        let dxm = rmsnorm_bwd(&c.x_mid, &params[gi("mlp_norm")], &c.r2, &dh2, &mut dgn);
+        grads[gi("mlp_norm")].add_assign(&dgn);
+        dx.add_assign(&dxm);
+
+        // Attention block: x_mid = x_in + wo(o)
+        let (do_, dw_o) = linear_bwd(&c.lo, &dx, rng);
+        grads[gi("wo")].add_assign(&dw_o);
+        let (dao, dg_pre) = match (&c.sg, &c.lg) {
+            (Some(sg), Some(_)) => {
+                let dao = map2(&do_, sg, |g, s| g * s);
+                let dg = map3(&do_, &c.ao, sg, |g, a, s| g * a * s * (1.0 - s));
+                (dao, Some(dg))
+            }
+            _ => (do_, None),
+        };
+
+        let bt = c.lq.y.rows;
+        let nb = bt / seq;
+        let mut dq = Mat::zeros(bt, cfg.d);
+        let mut dkp = Mat::zeros(bt, cfg.d);
+        let mut dv = Mat::zeros(bt, cfg.d);
+        for b in 0..nb {
+            let s0 = b * seq;
+            let daob = rows_block(&dao, s0, seq);
+            let qb = rows_block(&c.lq.y, s0, seq);
+            let kb = rows_block(&c.kp, s0, seq);
+            let vb = rows_block(&c.lv.y, s0, seq);
+            let w_att = &c.att[b];
+            let dw_att = matmul(&daob, &vb.transpose());
+            set_rows_block(&mut dv, s0, &matmul(&w_att.transpose(), &daob));
+            let mut ds = dw_att;
+            match cfg.arch {
+                Arch::Gla => {
+                    for t in 0..seq {
+                        let ct = inv_sqrt_d / (t as f32 + 1.0);
+                        let row = ds.row_mut(t);
+                        for (s, val) in row.iter_mut().enumerate() {
+                            *val = if s <= t { *val * ct } else { 0.0 };
+                        }
+                    }
+                }
+                Arch::Sa => {
+                    // softmax backward: dS = P (dP - <dP, P>), then 1/sqrt(d)
+                    for t in 0..seq {
+                        let p_row = w_att.row(t).to_vec();
+                        let row = ds.row_mut(t);
+                        let mut dot = 0.0f64;
+                        for s in 0..seq {
+                            dot += (row[s] * p_row[s]) as f64;
+                        }
+                        for s in 0..seq {
+                            row[s] =
+                                p_row[s] * (row[s] - dot as f32) * inv_sqrt_d;
+                        }
+                    }
+                }
+            }
+            set_rows_block(&mut dq, s0, &matmul(&ds, &kb));
+            set_rows_block(&mut dkp, s0, &matmul(&ds.transpose(), &qb));
+        }
+
+        let (dk, dgk_pre) = match (&c.sgk, &c.lgk) {
+            (Some(sgk), Some(_)) => {
+                let dk = map2(&dkp, sgk, |g, s| g * s);
+                let dgk = map3(&dkp, &c.lk.y, sgk, |g, k, s| g * k * s * (1.0 - s));
+                (dk, Some(dgk))
+            }
+            _ => (dkp, None),
+        };
+
+        let (mut dh, dw_q) = linear_bwd(&c.lq, &dq, rng);
+        grads[gi("wq")].add_assign(&dw_q);
+        let (dhk, dw_k) = linear_bwd(&c.lk, &dk, rng);
+        grads[gi("wk")].add_assign(&dw_k);
+        dh.add_assign(&dhk);
+        let (dhv, dw_v) = linear_bwd(&c.lv, &dv, rng);
+        grads[gi("wv")].add_assign(&dw_v);
+        dh.add_assign(&dhv);
+        if let (Some(dgk), Some(lgk)) = (&dgk_pre, &c.lgk) {
+            let (dhgk, dw_gk) = linear_bwd(lgk, dgk, rng);
+            grads[gi("wgk")].add_assign(&dw_gk);
+            dh.add_assign(&dhgk);
+        }
+        if let (Some(dg), Some(lg)) = (&dg_pre, &c.lg) {
+            let (dhg, dw_g) = linear_bwd(lg, dg, rng);
+            grads[gi("wg")].add_assign(&dw_g);
+            dh.add_assign(&dhg);
+        }
+
+        let mut dga = Mat::zeros(1, cfg.d);
+        let dxi = rmsnorm_bwd(&c.x_in, &params[gi("attn_norm")], &c.r1, &dh, &mut dga);
+        grads[gi("attn_norm")].add_assign(&dga);
+        dx.add_assign(&dxi);
+    }
+
+    // embedding scatter-add
+    for (i, &t) in cache.token_ids.iter().enumerate() {
+        let src = dx.row(i).to_vec();
+        let dst = grads[0].row_mut(t);
+        for (a, b) in dst.iter_mut().zip(&src) {
+            *a += b;
+        }
+    }
+    grads
+}
+
+// ------------------------------------------------------------------
+// Optimizer + schedule
+// ------------------------------------------------------------------
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const BASE_LR: f32 = 3e-3;
+const WARMUP_STEPS: f32 = 10.0;
+const GRAD_CLIP: f64 = 1.0;
+
+/// Warmup + cosine decay to 10% of base over `total` steps.
+///
+/// `total` is the model's baked `total_steps` horizon — the same
+/// semantics as the AOT artifacts, whose lowered schedule is fixed at
+/// trace time. `--steps` changes only how many steps the trainer loops;
+/// running past the horizon holds the 10% floor.
+pub fn lr_at(step: usize, total: usize) -> f32 {
+    let w = ((step as f32 + 1.0) / WARMUP_STEPS).min(1.0);
+    let prog = (step as f32 / total.max(1) as f32).min(1.0);
+    let cos = 0.1 + 0.9 * 0.5 * (1.0 + (std::f32::consts::PI * prog).cos());
+    BASE_LR * w * cos
+}
+
+/// In-place Adam with global-norm clipping; returns the pre-clip norm.
+fn adam_update(
+    params: &mut [Mat],
+    m: &mut [Mat],
+    v: &mut [Mat],
+    grads: &[Mat],
+    step: usize,
+    lr: f32,
+) -> f32 {
+    let mut norm_sq = 0.0f64;
+    for g in grads {
+        norm_sq += g.frob_sq();
+    }
+    let gnorm = norm_sq.sqrt();
+    let clip = (GRAD_CLIP / gnorm.max(1e-12)).min(1.0) as f32;
+    let t = (step + 1) as i32;
+    let bc1 = 1.0 - ADAM_B1.powi(t);
+    let bc2 = 1.0 - ADAM_B2.powi(t);
+    for (((p, mm), vv), g) in
+        params.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(grads)
+    {
+        for i in 0..p.data.len() {
+            let gi = g.data[i] * clip;
+            mm.data[i] = ADAM_B1 * mm.data[i] + (1.0 - ADAM_B1) * gi;
+            vv.data[i] = ADAM_B2 * vv.data[i] + (1.0 - ADAM_B2) * gi * gi;
+            let mh = mm.data[i] / bc1;
+            let vh = vv.data[i] / bc2;
+            p.data[i] -= lr * mh / (vh.sqrt() + ADAM_EPS);
+        }
+    }
+    gnorm as f32
+}
+
+// ------------------------------------------------------------------
+// The executable entry points
+// ------------------------------------------------------------------
+
+/// One optimizer step. Returns (params', m', v', loss, grad_norm, lr).
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params_in: &[HostTensor],
+    m_in: &[HostTensor],
+    v_in: &[HostTensor],
+    step: usize,
+    tokens: &[i32],
+    targets: &[i32],
+    seed: u64,
+) -> (Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>, f32, f32, f32) {
+    let specs = param_specs(cfg);
+    let mut params = params_to_mats(params_in);
+    let mut m = params_to_mats(m_in);
+    let mut v = params_to_mats(v_in);
+    // per-(seed, step) stream so SR is deterministic and reproducible
+    let mut rng = Rng::new(seed ^ 0x5EED_0001).fold_in(step as u64);
+
+    let cache = forward_cache(cfg, rec, &params, tokens);
+    let (loss, _acc, dlogits) = cross_entropy(&cache.lhead.y, targets);
+    let grads = backward(cfg, &params, &cache, &dlogits, &mut rng);
+    let lr = lr_at(step, cfg.total_steps);
+    let gnorm = adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
+
+    (
+        mats_to_tensors(&specs, params),
+        mats_to_tensors(&specs, m),
+        mats_to_tensors(&specs, v),
+        loss,
+        gnorm,
+        lr,
+    )
+}
+
+/// Held-out loss + accuracy under the recipe's forward quantization.
+pub fn eval_step(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params_in: &[HostTensor],
+    tokens: &[i32],
+    targets: &[i32],
+) -> (f32, f32) {
+    let params = params_to_mats(params_in);
+    let cache = forward_cache(cfg, rec, &params, tokens);
+    let (loss, acc, _) = cross_entropy(&cache.lhead.y, targets);
+    (loss, acc)
+}
+
+/// Forward logits (batch*seq, vocab), row-major.
+pub fn forward_logits(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params_in: &[HostTensor],
+    tokens: &[i32],
+) -> Mat {
+    let params = params_to_mats(params_in);
+    forward_cache(cfg, rec, &params, tokens).lhead.y
+}
+
+/// Diagnosed components per layer, in metric order.
+fn diag_components(arch: Arch) -> &'static [(&'static str, &'static str)] {
+    // (component tag, backing weight slot)
+    match arch {
+        Arch::Gla => &[
+            ("attn.q", "wq"),
+            ("attn.k", "wk"),
+            ("attn.v", "wv"),
+            ("attn.gk", "wgk"),
+            ("attn.g", "wg"),
+            ("attn.o", "wo"),
+            ("mlp.up", "w_up"),
+            ("mlp.gate", "w_gate"),
+            ("mlp.down", "w_down"),
+        ],
+        Arch::Sa => &[
+            ("attn.q", "wq"),
+            ("attn.k", "wk"),
+            ("attn.v", "wv"),
+            ("attn.o", "wo"),
+            ("mlp.up", "w_up"),
+            ("mlp.gate", "w_gate"),
+            ("mlp.down", "w_down"),
+        ],
+    }
+}
+
+const ACT_METRICS: [&str; 8] = [
+    "act.kurt", "act.top1", "act.top3", "act.ftz", "act.qmse", "act.bkmin",
+    "act.bkavg", "act.bkmax",
+];
+const WT_METRICS: [&str; 3] = ["wt.kurt", "wt.ftz", "wt.qmse"];
+
+/// The diag artifact's metric slot names, in output order.
+pub fn metric_names(cfg: &ModelCfg) -> Vec<String> {
+    let mut names = Vec::new();
+    for l in 0..cfg.layers {
+        for (comp, _) in diag_components(cfg.arch) {
+            for m in ACT_METRICS {
+                names.push(format!("L{l}.{comp}.{m}"));
+            }
+            for m in WT_METRICS {
+                names.push(format!("L{l}.{comp}.{m}"));
+            }
+        }
+        names.push(format!("L{l}.mlp.alignment"));
+        if cfg.arch == Arch::Sa {
+            names.push(format!("L{l}.attn.presoftmax.kurt"));
+            names.push(format!("L{l}.attn.presoftmax.max"));
+            names.push(format!("L{l}.attn.postsoftmax.entropy"));
+        }
+    }
+    names
+}
+
+/// Channel-map components (tag, channel count) for the diag outputs.
+pub fn diag_map_shapes(cfg: &ModelCfg) -> Vec<(&'static str, usize)> {
+    match cfg.arch {
+        Arch::Gla => {
+            vec![("attn_o", cfg.d), ("mlp_up", cfg.ff), ("attn_gk", cfg.d)]
+        }
+        Arch::Sa => vec![("attn_o", cfg.d), ("mlp_up", cfg.ff)],
+    }
+}
+
+fn act_metric_values(x: &Mat, out: &mut Vec<f32>) {
+    out.push(diagnostics::kurtosis(&x.data) as f32);
+    let top = diagnostics::topk_magnitude(&x.data, 3);
+    out.push(top.first().copied().unwrap_or(0.0));
+    out.push(top.get(2).copied().unwrap_or(0.0));
+    out.push(diagnostics::ftz(&x.data) as f32);
+    out.push(diagnostics::quant_mse(&x.data) as f32);
+    let bk = diagnostics::block_kurtosis(x, 16, 16);
+    let s = diagnostics::summarize(&bk);
+    out.push(s.min as f32);
+    out.push(s.avg as f32);
+    out.push(s.max as f32);
+}
+
+fn wt_metric_values(w: &Mat, out: &mut Vec<f32>) {
+    out.push(diagnostics::kurtosis(&w.data) as f32);
+    out.push(diagnostics::ftz(&w.data) as f32);
+    out.push(diagnostics::quant_mse(&w.data) as f32);
+}
+
+/// Run the diagnostics probe: metric vector + per-layer channel maps.
+pub fn diag_step(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params_in: &[HostTensor],
+    tokens: &[i32],
+) -> (Vec<f32>, Vec<Mat>) {
+    let params = params_to_mats(params_in);
+    let cache = forward_cache(cfg, rec, &params, tokens);
+
+    let mut values = Vec::new();
+    let map_shapes = diag_map_shapes(cfg);
+    let mut maps: Vec<Mat> = map_shapes
+        .iter()
+        .map(|&(_, chans)| Mat::zeros(cfg.layers, chans))
+        .collect();
+
+    for (l, c) in cache.layers.iter().enumerate() {
+        for (comp, wslot) in diag_components(cfg.arch) {
+            let act: &Mat = match *comp {
+                "attn.q" => &c.lq.y,
+                "attn.k" => &c.lk.y,
+                "attn.v" => &c.lv.y,
+                "attn.gk" => &c.lgk.as_ref().unwrap().y,
+                "attn.g" => &c.lg.as_ref().unwrap().y,
+                "attn.o" => &c.o,
+                "mlp.up" => &c.lup.y,
+                "mlp.gate" => &c.lgate.y,
+                "mlp.down" => &c.act,
+                other => panic!("no activation for {other}"),
+            };
+            act_metric_values(act, &mut values);
+            wt_metric_values(&params[pidx(cfg, l, wslot)], &mut values);
+        }
+        values.push(diagnostics::cosine_alignment(
+            &params[pidx(cfg, l, "w_up")].transpose(),
+            &params[pidx(cfg, l, "w_gate")].transpose(),
+        ) as f32);
+        if cfg.arch == Arch::Sa {
+            values.push(diagnostics::kurtosis(&c.presoftmax) as f32);
+            let mx = c.presoftmax.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            values.push(mx);
+            // entropy of the causal softmax rows (zero-prob tail skipped)
+            let mut h = 0.0f64;
+            let mut rows = 0usize;
+            for att in &c.att {
+                for t in 0..att.rows {
+                    let mut ent = 0.0f64;
+                    for &p in &att.row(t)[..=t] {
+                        if p > 0.0 {
+                            ent -= (p as f64) * (p as f64).ln();
+                        }
+                    }
+                    h += ent;
+                    rows += 1;
+                }
+            }
+            values.push((h / rows.max(1) as f64) as f32);
+        }
+
+        // channel maps
+        for (mi, &(tag, _)) in map_shapes.iter().enumerate() {
+            let src: Option<&Mat> = match tag {
+                "attn_o" => Some(&c.o),
+                "mlp_up" => Some(&c.lup.y),
+                "attn_gk" => c.lgk.as_ref().map(|lin| &lin.y),
+                _ => None,
+            };
+            if let Some(src) = src {
+                let cm = diagnostics::channel_max(src);
+                maps[mi].row_mut(l).copy_from_slice(&cm);
+            }
+        }
+    }
+    assert_eq!(values.len(), metric_names(cfg).len(), "diag schema drift");
+    (values, maps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::recipe::recipe;
+
+    fn toy_batch(cfg: &ModelCfg, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let n = cfg.batch * cfg.seq;
+        let toks: Vec<i32> = (0..n + 1)
+            .map(|_| (rng.below(24) as i32) + 97) // ascii letters
+            .collect();
+        (toks[..n].to_vec(), toks[1..].to_vec())
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let a = init_params(&cfg, 0);
+        let b = init_params(&cfg, 0);
+        let c = init_params(&cfg, 1);
+        assert_eq!(a.len(), param_specs(&cfg).len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.f32_data, y.f32_data);
+        }
+        assert!(a.iter().zip(&c).any(|(x, y)| x.f32_data != y.f32_data));
+    }
+
+    #[test]
+    fn train_step_descends_on_repeated_batch() {
+        // one repeated batch must be fit quickly: loss strictly decreases
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let rec = recipe("bf16").unwrap();
+        let mut params = init_params(&cfg, 0);
+        let mut m: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
+            .collect();
+        let mut v = m.clone();
+        let (toks, tgts) = toy_batch(&cfg, 3);
+        let mut losses = Vec::new();
+        for step in 0..12 {
+            let (p2, m2, v2, loss, gnorm, lr) =
+                train_step(&cfg, &rec, &params, &m, &v, step, &toks, &tgts, 0);
+            assert!(loss.is_finite() && gnorm.is_finite() && lr > 0.0);
+            params = p2;
+            m = m2;
+            v = v2;
+            losses.push(loss);
+        }
+        assert!(
+            losses[11] < losses[0] - 0.5,
+            "no descent: {} -> {}",
+            losses[0],
+            losses[11]
+        );
+    }
+
+    #[test]
+    fn train_step_is_bit_deterministic() {
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let rec = recipe("chon").unwrap(); // exercises SR + RHT + HCP
+        let params = init_params(&cfg, 7);
+        let m: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
+            .collect();
+        let v = m.clone();
+        let (toks, tgts) = toy_batch(&cfg, 5);
+        let a = train_step(&cfg, &rec, &params, &m, &v, 0, &toks, &tgts, 7);
+        let b = train_step(&cfg, &rec, &params, &m, &v, 0, &toks, &tgts, 7);
+        for (x, y) in a.0.iter().zip(&b.0) {
+            assert_eq!(x.f32_data, y.f32_data, "same (seed, step) must agree");
+        }
+        assert_eq!(a.3, b.3);
+    }
+
+    #[test]
+    fn sa_forward_and_step_finite() {
+        let cfg = model_cfg("tiny_sa").unwrap();
+        let rec = recipe("nvfp4").unwrap();
+        let params = init_params(&cfg, 1);
+        let m: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros(p.dtype, p.shape.clone()))
+            .collect();
+        let v = m.clone();
+        let (toks, tgts) = toy_batch(&cfg, 9);
+        let (_, _, _, loss, gnorm, _) =
+            train_step(&cfg, &rec, &params, &m, &v, 0, &toks, &tgts, 1);
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert!(gnorm.is_finite());
+    }
+
+    #[test]
+    fn diag_schema_matches_names() {
+        for model in ["tiny_gla", "tiny_sa"] {
+            let cfg = model_cfg(model).unwrap();
+            let rec = recipe("bf16").unwrap();
+            let params = init_params(&cfg, 2);
+            let (toks, _) = toy_batch(&cfg, 1);
+            let (values, maps) = diag_step(&cfg, &rec, &params, &toks);
+            assert_eq!(values.len(), metric_names(&cfg).len());
+            assert!(values.iter().all(|v| v.is_finite()));
+            assert_eq!(maps.len(), diag_map_shapes(&cfg).len());
+            for (map, &(_, chans)) in maps.iter().zip(&diag_map_shapes(&cfg)) {
+                assert_eq!((map.rows, map.cols), (cfg.layers, chans));
+                assert!(map.data.iter().any(|&v| v > 0.0), "empty channel map");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let rec = recipe("chon").unwrap();
+        let params = init_params(&cfg, 3);
+        let (toks, tgts) = toy_batch(&cfg, 2);
+        let logits = forward_logits(&cfg, &rec, &params, &toks);
+        assert_eq!((logits.rows, logits.cols), (cfg.batch * cfg.seq, cfg.vocab));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        let (loss, acc) = eval_step(&cfg, &rec, &params, &toks, &tgts);
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn lr_schedule_warms_up_and_decays() {
+        assert!(lr_at(0, 200) < lr_at(9, 200));
+        assert!(lr_at(199, 200) < lr_at(50, 200));
+        assert!(lr_at(1000, 200) > 0.0); // clamps, never hits zero
+    }
+}

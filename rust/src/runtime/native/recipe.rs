@@ -1,0 +1,271 @@
+//! Native recipe table — the Rust mirror of python/compile/recipe.py.
+//!
+//! A recipe is the Tab. 2 ablation unit; `op_quant` resolves the effective
+//! per-operator quantization (last-N-layer protection, CHON post-QK
+//! protection, SR/RHT/2D toggles, HCP channel fraction) exactly like the
+//! Python side so the native engine runs the same ablation grid.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::native::model::Arch;
+
+/// HCP patched-channel fraction (App. C.1: 9.09%).
+pub const HCP_FRAC: f64 = 0.0909;
+
+/// Element format of one GEMM operand pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantKind {
+    Bf16,
+    Fp8,
+    Nvfp4,
+}
+
+/// One training recipe (the Tab. 2 row).
+#[derive(Clone, Debug)]
+pub struct NativeRecipe {
+    pub name: String,
+    pub mode: QuantKind,
+    /// stochastic rounding on the backward (Wgrad) quantization
+    pub sr: bool,
+    /// randomized Hadamard transform on the Wgrad contraction dim
+    pub rht: bool,
+    /// 2D (16x16) weight block scaling instead of 1x16
+    pub scaling_2d: bool,
+    /// HCP patched-channel fraction (0 disables HCP)
+    pub hcp_frac: f64,
+    /// keep the last N layers fully BF16
+    pub protect_last: usize,
+    /// CHON post-QK protection (W_o + W_gk for LA, W_v for SA)
+    pub post_qk: bool,
+    /// Tab. 3 sensitivity mode: quantize exactly this op, all else BF16
+    pub only_op: Option<String>,
+}
+
+impl NativeRecipe {
+    fn base(name: &str) -> NativeRecipe {
+        NativeRecipe {
+            name: name.to_string(),
+            mode: QuantKind::Nvfp4,
+            sr: true,
+            rht: true,
+            scaling_2d: true,
+            hcp_frac: 0.0,
+            protect_last: 1,
+            post_qk: false,
+            only_op: None,
+        }
+    }
+}
+
+/// Resolve a recipe by name (mirrors recipe.py::recipes + only_<op>).
+pub fn recipe(name: &str) -> Result<NativeRecipe> {
+    let b = NativeRecipe::base(name);
+    let r = match name {
+        "bf16" => NativeRecipe { mode: QuantKind::Bf16, protect_last: 0, ..b },
+        "fp8" => NativeRecipe { mode: QuantKind::Fp8, protect_last: 0, ..b },
+        "nvfp4" => b,
+        "chon" => NativeRecipe { hcp_frac: HCP_FRAC, post_qk: true, ..b },
+        "chon_no_sr" => {
+            NativeRecipe { sr: false, hcp_frac: HCP_FRAC, post_qk: true, ..b }
+        }
+        "chon_no_rht" => {
+            NativeRecipe { rht: false, hcp_frac: HCP_FRAC, post_qk: true, ..b }
+        }
+        "chon_no_2d" => NativeRecipe {
+            scaling_2d: false,
+            hcp_frac: HCP_FRAC,
+            post_qk: true,
+            ..b
+        },
+        "chon_no_sr_rht" => NativeRecipe {
+            sr: false,
+            rht: false,
+            hcp_frac: HCP_FRAC,
+            post_qk: true,
+            ..b
+        },
+        "chon_no_last4" => NativeRecipe {
+            hcp_frac: HCP_FRAC,
+            protect_last: 0,
+            post_qk: true,
+            ..b
+        },
+        "hcp_no_postqk_rht" => {
+            NativeRecipe { rht: false, hcp_frac: HCP_FRAC, ..b }
+        }
+        "nvfp4_hcp" => NativeRecipe { hcp_frac: HCP_FRAC, ..b },
+        other => {
+            let Some(tag) = other.strip_prefix("only_") else {
+                bail!("unknown recipe {other:?}");
+            };
+            // "only_attn_q" -> op "attn.q" (first '_' splits the group)
+            let op = tag.replacen('_', ".", 1);
+            NativeRecipe { protect_last: 0, only_op: Some(op), ..b }
+        }
+    };
+    Ok(r)
+}
+
+/// The recipes the native backend ships, bf16 first (ablation ordering).
+pub fn available_recipes() -> Vec<String> {
+    [
+        "bf16",
+        "fp8",
+        "nvfp4",
+        "chon",
+        "chon_no_sr",
+        "chon_no_rht",
+        "chon_no_2d",
+        "chon_no_sr_rht",
+        "chon_no_last4",
+        "hcp_no_postqk_rht",
+        "nvfp4_hcp",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Tab. 3 operator list for one architecture.
+pub fn sensitivity_ops(arch: Arch) -> Vec<String> {
+    let base = ["attn.q", "attn.k", "attn.v", "attn.o"];
+    let gla = ["attn.gk", "attn.g"];
+    let mlp = ["mlp.up", "mlp.gate", "mlp.down"];
+    let mut ops: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    if arch == Arch::Gla {
+        ops.extend(gla.iter().map(|s| s.to_string()));
+    }
+    ops.extend(mlp.iter().map(|s| s.to_string()));
+    ops.sort();
+    ops
+}
+
+/// Effective quantization of one operator in one layer.
+#[derive(Clone, Debug)]
+pub struct OpQuant {
+    pub mode: QuantKind,
+    pub scaling_2d: bool,
+    pub sr: bool,
+    pub rht: bool,
+    pub hcp_frac: f64,
+}
+
+pub const BF16_OP: OpQuant = OpQuant {
+    mode: QuantKind::Bf16,
+    scaling_2d: false,
+    sr: false,
+    rht: false,
+    hcp_frac: 0.0,
+};
+
+/// Post-QK sensitive operators per architecture (Tab. 3 / Fig. 2).
+fn post_qk_protected(arch: Arch, op: &str) -> bool {
+    match arch {
+        Arch::Gla => op == "attn.o" || op == "attn.gk",
+        Arch::Sa => op == "attn.v",
+    }
+}
+
+/// Resolve the OpQuant for one linear operator (recipe.py::op_quant).
+pub fn op_quant(
+    r: &NativeRecipe,
+    arch: Arch,
+    layer: usize,
+    n_layers: usize,
+    op: &str,
+) -> OpQuant {
+    if let Some(target) = &r.only_op {
+        // Tab. 3 sensitivity mode: exactly one quantized operator.
+        if op != target {
+            return BF16_OP;
+        }
+        return OpQuant {
+            mode: r.mode,
+            scaling_2d: r.scaling_2d,
+            sr: r.sr,
+            rht: r.rht,
+            hcp_frac: r.hcp_frac,
+        };
+    }
+    if r.mode == QuantKind::Bf16 {
+        return BF16_OP;
+    }
+    if r.protect_last > 0 && layer + r.protect_last >= n_layers {
+        return BF16_OP;
+    }
+    if r.post_qk && post_qk_protected(arch, op) {
+        return BF16_OP;
+    }
+    OpQuant {
+        mode: r.mode,
+        scaling_2d: r.scaling_2d,
+        sr: r.sr,
+        rht: r.rht,
+        hcp_frac: r.hcp_frac,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_recipes_resolve() {
+        for name in available_recipes() {
+            let r = recipe(&name).unwrap();
+            assert_eq!(r.name, name);
+        }
+        assert!(recipe("nope").is_err());
+    }
+
+    #[test]
+    fn only_op_parses() {
+        let r = recipe("only_attn_gk").unwrap();
+        assert_eq!(r.only_op.as_deref(), Some("attn.gk"));
+        let r = recipe("only_mlp_up").unwrap();
+        assert_eq!(r.only_op.as_deref(), Some("mlp.up"));
+    }
+
+    #[test]
+    fn chon_protects_post_qk_and_last_layer() {
+        let r = recipe("chon").unwrap();
+        // last layer protected
+        let q = op_quant(&r, Arch::Gla, 1, 2, "mlp.up");
+        assert_eq!(q.mode, QuantKind::Bf16);
+        // post-QK ops protected even in quantized layers
+        let q = op_quant(&r, Arch::Gla, 0, 2, "attn.gk");
+        assert_eq!(q.mode, QuantKind::Bf16);
+        let q = op_quant(&r, Arch::Sa, 0, 2, "attn.v");
+        assert_eq!(q.mode, QuantKind::Bf16);
+        // everything else NVFP4 + HCP
+        let q = op_quant(&r, Arch::Gla, 0, 2, "mlp.up");
+        assert_eq!(q.mode, QuantKind::Nvfp4);
+        assert!(q.hcp_frac > 0.0);
+    }
+
+    #[test]
+    fn nvfp4_quantizes_post_qk() {
+        let r = recipe("nvfp4").unwrap();
+        let q = op_quant(&r, Arch::Gla, 0, 2, "attn.gk");
+        assert_eq!(q.mode, QuantKind::Nvfp4);
+        assert_eq!(q.hcp_frac, 0.0);
+    }
+
+    #[test]
+    fn only_op_quantizes_exactly_one() {
+        let r = recipe("only_attn_q").unwrap();
+        assert_eq!(op_quant(&r, Arch::Gla, 0, 2, "attn.q").mode, QuantKind::Nvfp4);
+        assert_eq!(op_quant(&r, Arch::Gla, 1, 2, "attn.q").mode, QuantKind::Nvfp4);
+        assert_eq!(op_quant(&r, Arch::Gla, 0, 2, "attn.k").mode, QuantKind::Bf16);
+    }
+
+    #[test]
+    fn sensitivity_ops_cover_arches() {
+        let gla = sensitivity_ops(Arch::Gla);
+        assert!(gla.contains(&"attn.gk".to_string()));
+        assert_eq!(gla.len(), 9);
+        let sa = sensitivity_ops(Arch::Sa);
+        assert!(!sa.contains(&"attn.gk".to_string()));
+        assert_eq!(sa.len(), 7);
+    }
+}

@@ -1,5 +1,6 @@
-//! Host tensors + conversion to/from xla::Literal, and the checkpoint
-//! binary format (magic + dtype + shape + raw data per tensor).
+//! Host tensors and the checkpoint binary format (magic + dtype + shape +
+//! raw data per tensor). The xla::Literal conversions are gated behind
+//! the `pjrt` feature — the default offline build never touches XLA.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -64,6 +65,7 @@ impl HostTensor {
     }
 
     /// Convert into an xla Literal (reshaped to the tensor's shape).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match self.dtype {
@@ -79,6 +81,7 @@ impl HostTensor {
     }
 
     /// Read a Literal back into a host tensor.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

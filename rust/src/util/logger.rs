@@ -1,54 +1,114 @@
-//! Minimal stderr logger backing the `log` facade (env_logger substitute).
-//! Level via CHON_LOG=error|warn|info|debug|trace (default info).
+//! Minimal stderr logger (the `log` + `env_logger` substitute — neither
+//! crate is in the offline vendor set). Level via
+//! CHON_LOG=error|warn|info|debug|trace (default info).
+//!
+//! Call sites use the crate-level `error!` / `warn!` / `info!` /
+//! `debug!` / `trace!` macros, which mirror the `log` facade's
+//! formatting surface.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let tag = match record.level() {
-            Level::Error => "E",
-            Level::Warn => "W",
-            Level::Info => "I",
-            Level::Debug => "D",
-            Level::Trace => "T",
-        };
-        eprintln!("[{tag}] {}", record.args());
-    }
-
-    fn flush(&self) {}
+/// Log severity, ascending verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
-/// Install the logger (idempotent).
+/// Set the maximum level that will be emitted.
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether `level` would currently be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the macros; callable directly too).
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Error => "E",
+        Level::Warn => "W",
+        Level::Info => "I",
+        Level::Debug => "D",
+        Level::Trace => "T",
+    };
+    eprintln!("[{tag}] {args}");
+}
+
+/// Install the level from CHON_LOG (idempotent; default info).
 pub fn init() {
     let level = match std::env::var("CHON_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
-    }
+    set_level(level);
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Trace, format_args!($($arg)*))
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // One combined test: MAX_LEVEL is process-global, so splitting these
+    // into parallel #[test]s would race on it, and asserting the level
+    // after init() would depend on the CHON_LOG env var.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke");
+    fn init_and_level_gating() {
+        init();
+        init(); // idempotent
+        crate::info!("logger smoke {}", 1);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore the default
+        assert!(enabled(Level::Info));
     }
 }

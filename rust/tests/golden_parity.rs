@@ -1,6 +1,11 @@
 //! Cross-language parity: the Rust quant substrate must match the Python
-//! oracle (python/compile/kernels/ref.py) on golden fixtures dumped by
-//! `python -m compile.golden` (part of `make artifacts`).
+//! oracle (python/compile/kernels/ref.py) on golden fixtures.
+//!
+//! The fixture is CHECKED IN at tests/fixtures/golden_quant.txt (generated
+//! once via `python -m compile.golden --out rust/tests/fixtures`), so this
+//! test always runs — no artifacts build required. A freshly regenerated
+//! artifacts/golden_quant.txt (from `make artifacts`) takes precedence as
+//! an override, which keeps the fixture honest against oracle drift.
 
 use std::path::{Path, PathBuf};
 
@@ -8,14 +13,16 @@ use chon::diagnostics;
 use chon::quant::{e2m1, e4m3, mxfp4, nvfp4, rht};
 use chon::util::ndarray::Mat;
 
-fn fixtures() -> Option<PathBuf> {
+/// Fixture resolution: artifacts override first, then the checked-in copy.
+fn fixture_path() -> PathBuf {
     for base in ["artifacts", "../artifacts"] {
         let p = Path::new(base).join("golden_quant.txt");
         if p.exists() {
-            return Some(p);
+            return p;
         }
     }
-    None
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/golden_quant.txt")
 }
 
 struct Case {
@@ -58,11 +65,9 @@ fn assert_close(name: &str, got: &[f32], want: &[f32], atol: f32, rtol: f32) {
 
 #[test]
 fn golden_parity_with_python_oracle() {
-    let Some(path) = fixtures() else {
-        eprintln!("SKIP: no golden fixtures (run `make artifacts`)");
-        return;
-    };
-    let text = std::fs::read_to_string(path).unwrap();
+    let path = fixture_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {}: {e}", path.display()));
     let cases = parse_cases(&text);
     assert!(cases.len() >= 8, "expected >= 8 golden cases");
     for c in &cases {
@@ -105,4 +110,21 @@ fn golden_parity_with_python_oracle() {
         }
     }
     println!("golden parity: {} cases OK", cases.len());
+}
+
+#[test]
+fn checked_in_fixture_is_present_and_complete() {
+    // The committed fixture itself (not an artifacts override) must parse
+    // and cover every case family — a green run can't mask zero coverage.
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden_quant.txt");
+    let text = std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("checked-in fixture missing at {}: {e}", p.display()));
+    let cases = parse_cases(&text);
+    assert!(cases.len() >= 8, "fixture has only {} cases", cases.len());
+    for family in ["e2m1_rtn", "e4m3_rtn", "nvfp4", "nvfp4_2d", "mxfp4", "fwht", "kurtosis"] {
+        assert!(
+            cases.iter().any(|c| c.name.starts_with(family)),
+            "fixture missing case family {family}"
+        );
+    }
 }

@@ -1,9 +1,19 @@
 //! Integration tests over the PJRT runtime + coordinator, driven against
 //! the real AOT artifacts in artifacts/ (built by `make artifacts`).
 //!
-//! These tests skip (pass trivially with a note) when artifacts are not
-//! present, so `cargo test` stays green on a fresh checkout; `make test`
-//! always builds artifacts first.
+//! Requirements (documented, not silently skipped):
+//!   * build with `--features pjrt` (otherwise the whole file is compiled
+//!     out — the native-engine coverage lives in native_backend.rs); the
+//!     feature additionally needs the `xla` dependency uncommented in
+//!     Cargo.toml plus libxla installed — see rust/README.md;
+//!   * an artifacts/ directory (run `make artifacts` first).
+//!
+//! Every test is `#[ignore]`d so a plain `cargo test` run can't report
+//! green while executing zero of them; run explicitly with
+//! `cargo test --features pjrt -- --ignored`. Missing artifacts then FAIL
+//! loudly instead of masking zero coverage.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
@@ -18,31 +28,20 @@ fn fast_compile_flags() {
     }
 }
 
-fn artifacts_dir() -> Option<PathBuf> {
+fn artifacts_dir() -> PathBuf {
     fast_compile_flags();
     for base in ["artifacts", "../artifacts", "../../artifacts"] {
         let p = Path::new(base);
         if p.join("index.txt").exists() {
-            return Some(p.to_path_buf());
+            return p.to_path_buf();
         }
     }
-    None
-}
-
-macro_rules! require_artifacts {
-    () => {
-        match artifacts_dir() {
-            Some(d) => d,
-            None => {
-                eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
-                return;
-            }
-        }
-    };
+    panic!("artifacts/ required for --ignored pjrt tests: run `make artifacts`");
 }
 
 fn run_cfg(dir: &Path, recipe: &str) -> RunConfig {
     let mut cfg = RunConfig::default();
+    cfg.backend = "pjrt".into();
     cfg.artifacts = dir.to_path_buf();
     cfg.model = "tiny_gla".into();
     cfg.recipe = recipe.into();
@@ -54,8 +53,9 @@ fn run_cfg(dir: &Path, recipe: &str) -> RunConfig {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn manifest_parses_for_every_artifact() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let index = std::fs::read_to_string(dir.join("index.txt")).unwrap();
     let mut checked = 0;
     for name in index.lines().filter(|l| !l.is_empty()) {
@@ -69,8 +69,9 @@ fn manifest_parses_for_every_artifact() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn init_artifact_is_deterministic_and_seed_sensitive() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let init = LoadedArtifact::load(&dir, "init_tiny_gla").unwrap();
     let a = init.run(&[HostTensor::scalar_i32(0)]).unwrap();
     let b = init.run(&[HostTensor::scalar_i32(0)]).unwrap();
@@ -87,8 +88,9 @@ fn init_artifact_is_deterministic_and_seed_sensitive() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn fwd_artifact_produces_finite_logits() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let init = LoadedArtifact::load(&dir, "init_tiny_gla").unwrap();
     let fwd = LoadedArtifact::load(&dir, "fwd_tiny_gla").unwrap();
     let params = init.run(&[HostTensor::scalar_i32(7)]).unwrap();
@@ -107,8 +109,9 @@ fn fwd_artifact_produces_finite_logits() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn shape_mismatch_is_reported_not_crashed() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let fwd = LoadedArtifact::load(&dir, "fwd_tiny_gla").unwrap();
     let bad = vec![HostTensor::scalar_i32(0)];
     let err = fwd.run(&bad).unwrap_err().to_string();
@@ -116,8 +119,9 @@ fn shape_mismatch_is_reported_not_crashed() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn training_decreases_loss_bf16() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let mut tr = Trainer::new(run_cfg(&dir, "bf16")).unwrap();
     tr.train(25).unwrap();
     let first = tr.log.records[0].loss;
@@ -130,8 +134,9 @@ fn training_decreases_loss_bf16() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn training_quantized_tracks_bf16_early() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let mut a = Trainer::new(run_cfg(&dir, "bf16")).unwrap();
     let mut b = Trainer::new(run_cfg(&dir, "nvfp4")).unwrap();
     a.train(10).unwrap();
@@ -142,8 +147,9 @@ fn training_quantized_tracks_bf16_early() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn diag_and_monitor_roundtrip() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let mut cfg = run_cfg(&dir, "chon");
     cfg.diag_every = 2;
     let mut tr = Trainer::new(cfg).unwrap();
@@ -163,8 +169,9 @@ fn diag_and_monitor_roundtrip() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn checkpoint_roundtrip_through_trainer() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let mut tr = Trainer::new(run_cfg(&dir, "bf16")).unwrap();
     tr.train(3).unwrap();
     let ckpt_dir = std::env::temp_dir().join("chon_it_ckpt");
@@ -177,8 +184,9 @@ fn checkpoint_roundtrip_through_trainer() {
 }
 
 #[test]
+#[ignore = "needs pjrt artifacts (make artifacts)"]
 fn eval_artifact_consistent_with_train_loss() {
-    let dir = require_artifacts!();
+    let dir = artifacts_dir();
     let mut cfg = run_cfg(&dir, "bf16");
     cfg.eval_every = 0;
     let mut tr = Trainer::new(cfg).unwrap();

@@ -1,0 +1,135 @@
+//! Integration smoke tests for the native pure-Rust backend: the whole
+//! coordinator stack (trainer, monitor, eval, checkpointing) must run on
+//! a fresh offline checkout — no artifacts/ directory, no libxla — and be
+//! bit-reproducible for a fixed seed.
+
+use std::path::PathBuf;
+
+use chon::config::RunConfig;
+use chon::coordinator::evalsuite;
+use chon::coordinator::Trainer;
+use chon::runtime::{backend_for, HostTensor};
+
+/// A run config pointing at a deliberately nonexistent artifacts dir —
+/// the native backend must never touch it.
+fn native_cfg(model: &str, recipe: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = model.into();
+    cfg.recipe = recipe.into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.out_dir = std::env::temp_dir().join("chon_native_it_runs");
+    cfg
+}
+
+/// The paper's transient->persistent hot-channel claim gets a regression
+/// guard: train tiny_gla with the chon recipe for 50 steps and require a
+/// decreasing loss plus non-empty hot-channel persistence series.
+#[test]
+fn chon_training_decreases_loss_and_tracks_hot_channels() {
+    let mut cfg = native_cfg("tiny_gla", "chon");
+    cfg.diag_every = 10;
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.train(50).unwrap();
+
+    let first = tr.log.records[0].loss;
+    let last = tr.log.final_loss().unwrap();
+    assert!(tr.log.records.iter().all(|r| r.loss.is_finite()));
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(last < first - 0.5, "descent too weak: {first} -> {last}");
+
+    assert_eq!(tr.monitor.records.len(), 5, "one probe per 10 steps");
+    assert!(!tr.monitor.names.is_empty());
+    let persistence = tr.monitor.hot_channel_persistence(8);
+    assert!(!persistence.is_empty(), "no hot-channel series");
+    for (comp, series) in &persistence {
+        assert!(!series.is_empty(), "{comp}: empty series");
+        for &(_, j) in series {
+            assert!((0.0..=1.0).contains(&j), "{comp}: jaccard {j}");
+        }
+    }
+    // GLA exposes the gk map — the paper's headline component
+    assert!(persistence.iter().any(|(c, _)| c == "attn_gk"));
+    // kurtosis series exists for a known metric slot
+    assert!(tr.monitor.series("L0.attn.gk.act.kurt").is_some());
+}
+
+#[test]
+fn fixed_seed_is_bit_reproducible_and_seed_sensitive() {
+    let mk = |seed: u64| {
+        let mut cfg = native_cfg("tiny_gla", "chon");
+        cfg.seed = seed;
+        let mut tr = Trainer::new(cfg).unwrap();
+        tr.train(6).unwrap();
+        tr
+    };
+    let a = mk(3);
+    let b = mk(3);
+    let c = mk(4);
+    for (x, y) in a.log.records.iter().zip(&b.log.records) {
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "loss must be bitwise equal");
+    }
+    for (p, q) in a.state.params.iter().zip(&b.state.params) {
+        assert_eq!(p.f32_data, q.f32_data, "params must be bitwise equal");
+    }
+    assert_ne!(
+        a.log.final_loss().unwrap().to_bits(),
+        c.log.final_loss().unwrap().to_bits(),
+        "different seed must change the run"
+    );
+}
+
+#[test]
+fn eval_and_checkpoint_roundtrip() {
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "bf16")).unwrap();
+    tr.train(5).unwrap();
+    let (loss, acc) = tr.evaluate(2).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+
+    let ckpt_dir = std::env::temp_dir().join("chon_native_it_ckpt");
+    let path = tr.save_checkpoint_to(&ckpt_dir).unwrap();
+    let before: Vec<f32> = tr.state.params[0].f32_data.clone();
+    tr.train(2).unwrap();
+    assert_ne!(tr.state.params[0].f32_data, before);
+    tr.load_params(&path).unwrap();
+    assert_eq!(tr.state.params[0].f32_data, before);
+}
+
+#[test]
+fn sensitivity_recipe_trains() {
+    // Tab. 3 mode: exactly one quantized operator
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "only_attn_q")).unwrap();
+    tr.train(3).unwrap();
+    assert!(tr.log.final_loss().unwrap().is_finite());
+}
+
+#[test]
+fn softmax_attention_model_trains() {
+    let mut tr = Trainer::new(native_cfg("tiny_sa", "nvfp4")).unwrap();
+    tr.train(12).unwrap();
+    let first = tr.log.records[0].loss;
+    let last = tr.log.final_loss().unwrap();
+    assert!(last < first - 0.2, "tiny_sa no descent: {first} -> {last}");
+}
+
+#[test]
+fn fwd_executable_supports_cloze_eval() {
+    // the eval-suite path (fwd logits + cloze scoring) works natively
+    let backend = backend_for("native").unwrap();
+    let dir = PathBuf::from("/nonexistent/chon_artifacts");
+    let init = backend.load(&dir, "init_tiny_gla").unwrap();
+    let params = init.run(&[HostTensor::scalar_i32(0)]).unwrap();
+    let fwd = backend.load(&dir, "fwd_tiny_gla").unwrap();
+    let acc = evalsuite::cloze_accuracy(fwd.as_ref(), &params, 0).unwrap();
+    assert!((0.0..=1.0).contains(&acc), "cloze accuracy {acc}");
+}
+
+#[test]
+fn unknown_model_or_recipe_fails_loudly() {
+    assert!(Trainer::new(native_cfg("tiny_mamba", "chon")).is_err());
+    assert!(Trainer::new(native_cfg("tiny_gla", "fp2")).is_err());
+}

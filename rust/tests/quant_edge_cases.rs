@@ -1,0 +1,148 @@
+//! Edge-case unit tests for the quant substrate: exhaustive E4M3 codec
+//! coverage, ragged 2D weight scaling, and top-k tie determinism.
+
+use chon::hcp;
+use chon::quant::{e2m1, e4m3, nvfp4};
+use chon::util::ndarray::Mat;
+use chon::util::prng::Rng;
+
+/// Exhaustive roundtrip over all 256 E4M3 codes. The two saturating codes
+/// (|value| = 480 in the plain-E4M3 reading; NaN in the fn variant) must
+/// clamp to ±448; -0 normalizes to +0; every other code is a fixed point
+/// of encode∘decode at the value level.
+#[test]
+fn e4m3_all_256_codes_roundtrip() {
+    let mut exact = 0;
+    for code in 0u8..=255 {
+        let v = e4m3::decode(code);
+        assert!(v.is_finite(), "code {code:#x} decoded to {v}");
+        let back = e4m3::decode(e4m3::encode(v));
+        if v.abs() > e4m3::E4M3_MAX {
+            // 0x7f / 0xff: the fn-variant NaN slot, saturates on re-encode
+            assert_eq!(back.abs(), e4m3::E4M3_MAX, "code {code:#x}");
+            assert_eq!(back.signum(), v.signum(), "code {code:#x}");
+        } else if v == 0.0 {
+            // +0 and -0 both normalize to the +0 code
+            assert_eq!(back, 0.0, "code {code:#x}");
+        } else {
+            assert_eq!(back, v, "code {code:#x}: {v} -> {back}");
+            // value-level fixed point: rtn must not move a lattice point
+            assert_eq!(e4m3::rtn(v), v, "code {code:#x} not an rtn fixed point");
+            exact += 1;
+        }
+    }
+    // 256 codes minus {+0, -0, +480, -480}
+    assert_eq!(exact, 252, "unexpected number of exact roundtrips");
+}
+
+/// Every encode output must be one of the 256 codes that decodes back to
+/// the rtn of the input (encode is total over finite f32).
+#[test]
+fn e4m3_encode_matches_rtn_on_random_inputs() {
+    let mut rng = Rng::new(11);
+    for _ in 0..5000 {
+        let v = (rng.uniform() - 0.5) * 1200.0;
+        let q = e4m3::rtn(v);
+        assert_eq!(e4m3::decode(e4m3::encode(v)), q, "v={v}");
+    }
+}
+
+/// 2D weight scaling with a ragged last band (rows % tile != 0): the last
+/// band shares scales across fewer rows but must still be exact w.r.t. a
+/// direct per-brick reference computation.
+#[test]
+fn fake_quant_2d_handles_ragged_last_band() {
+    let (rows, cols, tile) = (37usize, 48usize, 16usize); // 37 = 2*16 + 5
+    let mut rng = Rng::new(7);
+    let w = Mat::from_fn(rows, cols, |_, _| rng.normal() * 2.0);
+    let got = nvfp4::fake_quant_mat_2d(&w, tile);
+    assert_eq!((got.rows, got.cols), (rows, cols));
+
+    // reference: quantize each (band x 16) brick independently with the
+    // same global scale
+    let amax = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let s_enc = nvfp4::global_enc_scale(amax);
+    let s_dec = 1.0 / s_enc;
+    for band0 in (0..rows).step_by(tile) {
+        let band_end = (band0 + tile).min(rows);
+        for b in 0..cols / nvfp4::BLOCK {
+            let mut amax_b = 0.0f32;
+            for r in band0..band_end {
+                for c in b * nvfp4::BLOCK..(b + 1) * nvfp4::BLOCK {
+                    amax_b = amax_b.max(w.at(r, c).abs());
+                }
+            }
+            let s_e4m3 = e4m3::rtn(amax_b / e2m1::E2M1_MAX * s_enc);
+            let denom = s_e4m3 * s_dec;
+            let s_enc_b = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+            for r in band0..band_end {
+                for c in b * nvfp4::BLOCK..(b + 1) * nvfp4::BLOCK {
+                    let want = e2m1::rtn(w.at(r, c) * s_enc_b) * s_e4m3 * s_dec;
+                    assert_eq!(got.at(r, c), want, "({r},{c})");
+                }
+            }
+        }
+    }
+
+    // the ragged band (rows 32..37) must NOT share scales with rows 16..32:
+    // plant a spike in the ragged band and check containment
+    let mut w2 = w.clone();
+    *w2.at_mut(rows - 1, 0) = 1000.0;
+    let q2 = nvfp4::fake_quant_mat_2d(&w2, tile);
+    // a full-tile row far above is quantized identically in its brick
+    // unless the global amax changed its scale — compare error magnitude
+    let err_top: f32 = (0..tile)
+        .map(|r| (q2.at(r, 0) - w2.at(r, 0)).abs())
+        .fold(0.0, f32::max);
+    assert!(
+        err_top < 1000.0 / e2m1::E2M1_MAX,
+        "spike in ragged band leaked a huge error into the first band"
+    );
+}
+
+/// rows < tile: a single partial band must behave like tile = rows.
+#[test]
+fn fake_quant_2d_single_partial_band() {
+    let mut rng = Rng::new(9);
+    let w = Mat::from_fn(5, 32, |_, _| rng.normal());
+    let a = nvfp4::fake_quant_mat_2d(&w, 16);
+    let b = nvfp4::fake_quant_mat_2d(&w, 5);
+    assert_eq!(a.data, b.data, "partial band != explicit tile");
+}
+
+/// top_k under tied scores: deterministic, lower index first, and stable
+/// across repeated calls.
+#[test]
+fn top_k_deterministic_under_ties() {
+    let scores = vec![2.0f64, 5.0, 5.0, 1.0, 5.0, 0.0, 2.0];
+    let a = hcp::top_k(&scores, 4);
+    assert_eq!(a, vec![1, 2, 4, 0], "ties must break toward lower index");
+    for _ in 0..100 {
+        assert_eq!(hcp::top_k(&scores, 4), a, "top_k not deterministic");
+    }
+    // all-equal scores: identity prefix
+    let flat = vec![3.0f64; 8];
+    assert_eq!(hcp::top_k(&flat, 3), vec![0, 1, 2]);
+    // k > len truncates without panic
+    assert_eq!(hcp::top_k(&flat, 99).len(), 8);
+    // NaN-free scores with infinities still order
+    let inf = vec![f64::INFINITY, 1.0, f64::INFINITY];
+    assert_eq!(hcp::top_k(&inf, 2), vec![0, 2]);
+}
+
+/// e2m1 exhaustive: every 4-bit code decodes to a lattice fixed point and
+/// pack/unpack is lossless at odd lengths.
+#[test]
+fn e2m1_codes_and_odd_packing() {
+    for code in 0u8..16 {
+        let v = e2m1::decode(code);
+        assert_eq!(e2m1::rtn(v), v, "code {code} not a fixed point");
+        assert!(v.abs() <= e2m1::E2M1_MAX);
+    }
+    for n in [1usize, 2, 15, 16, 17, 31] {
+        let codes: Vec<u8> = (0..n).map(|i| (i % 16) as u8).collect();
+        let packed = e2m1::pack(&codes);
+        assert_eq!(packed.len(), n.div_ceil(2));
+        assert_eq!(e2m1::unpack(&packed, n), codes, "n={n}");
+    }
+}
