@@ -27,7 +27,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use chon::bench::{time_auto, Table};
+use chon::bench::{time_auto, BenchEntry, Table};
 use chon::config::RunConfig;
 use chon::coordinator::{ablation, evalsuite, Monitor, Trainer};
 use chon::diagnostics;
@@ -664,15 +664,23 @@ fn formats() -> Result<()> {
 }
 
 /// Perf microbenches for EXPERIMENTS.md §Perf (L3 substrate hot paths).
+/// Also persists the medians as a versioned JSON report
+/// (runs/bench/perf.json) — CI diffs it against the checked-in baseline
+/// via `chon bench-diff` and fails on >25% regressions.
 fn perf() -> Result<()> {
     println!("\n== L3 perf microbenches ==");
     let mut table = Table::new(&["kernel", "size", "median ms", "throughput"]);
+    let mut entries: Vec<BenchEntry> = Vec::new();
+    let mut record = |name: &str, median_ms: f64| {
+        entries.push(BenchEntry { name: name.into(), median_ms });
+    };
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..1 << 20).map(|_| rng.normal()).collect();
 
     let t = time_auto(400.0, || {
         std::hint::black_box(nvfp4::fake_quant(&x, nvfp4::Rounding::Rtn, None));
     });
+    record("nvfp4_fake_quant_1m", t.median_ms);
     table.row(&[
         "nvfp4 fake_quant".into(),
         "1M f32".into(),
@@ -683,6 +691,7 @@ fn perf() -> Result<()> {
     let t = time_auto(400.0, || {
         std::hint::black_box(nvfp4::quantize(&x, nvfp4::Rounding::Rtn, None));
     });
+    record("nvfp4_quantize_pack_1m", t.median_ms);
     table.row(&[
         "nvfp4 quantize(pack)".into(),
         "1M f32".into(),
@@ -693,6 +702,7 @@ fn perf() -> Result<()> {
     let t = time_auto(400.0, || {
         std::hint::black_box(diagnostics::kurtosis(&x));
     });
+    record("kurtosis_1m", t.median_ms);
     table.row(&[
         "kurtosis".into(),
         "1M f32".into(),
@@ -705,6 +715,7 @@ fn perf() -> Result<()> {
     let t = time_auto(400.0, || {
         std::hint::black_box(rht::rht(&mat, &signs));
     });
+    record("rht_1024", t.median_ms);
     table.row(&[
         "rht 1024".into(),
         "1024x1024".into(),
@@ -718,6 +729,7 @@ fn perf() -> Result<()> {
     let t = time_auto(400.0, || {
         std::hint::black_box(matmul_par(&a, &b, threads));
     });
+    record("matmul_par_512", t.median_ms);
     let flops = 2.0 * 512f64.powi(3);
     table.row(&[
         format!("matmul_par x{threads}"),
@@ -731,18 +743,54 @@ fn perf() -> Result<()> {
         for recipe in ["bf16", "chon"] {
             let mut tr = Trainer::new(run_cfg("tiny_gla", recipe))?;
             tr.train(12)?;
+            // median over post-warmup steps — the gate diffs median_ms, and
+            // a mean would let one cold/hiccuped step fail CI spuriously
+            let mut walls: Vec<f64> =
+                tr.log.records.iter().skip(1).map(|r| r.wall_ms).collect();
+            walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = walls[walls.len() / 2];
+            record(&format!("train_step_{recipe}"), med);
             table.row(&[
                 format!("train step ({recipe})"),
                 "tiny_gla".into(),
-                format!("{:.1}", tr.log.mean_step_ms()),
+                format!("{med:.1}"),
                 format!(
                     "{:.0} tok/s",
-                    (tr.batch * tr.seq_len) as f64 / tr.log.mean_step_ms() * 1e3
+                    (tr.batch * tr.seq_len) as f64 / med * 1e3
                 ),
+            ]);
+        }
+        // decode throughput of the serve engine (batch 1 vs max batch)
+        for batch in [1usize, 8] {
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let mut sessions: Vec<chon::serve::Session> =
+                (0..batch).map(|_| eng.new_session()).collect();
+            let toks: Vec<u32> = (0..batch as u32).map(|i| 97 + i).collect();
+            let t = time_auto(300.0, || {
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                std::hint::black_box(eng.decode_step(&mut refs, &toks));
+            });
+            record(&format!("serve_decode_b{batch}"), t.median_ms);
+            table.row(&[
+                format!("serve decode (b={batch})"),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
             ]);
         }
     }
     table.print();
+    let json_path = out_dir().join("perf.json");
+    chon::bench::write_report(&json_path, "perf", &entries)?;
+    println!("perf report written to {}", json_path.display());
     Ok(())
 }
 

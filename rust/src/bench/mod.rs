@@ -1,8 +1,15 @@
 //! Bench harness utilities (criterion substitute — DESIGN.md
 //! §Substitutions): warmup + repeated timing with median/mean/min stats,
-//! and a tiny table printer shared by the per-figure benches.
+//! a tiny table printer shared by the per-figure benches, and the
+//! versioned JSON result format the CI regression gate diffs
+//! (`cargo bench -- perf` writes it, `chon bench-diff` compares it).
 
+use std::path::Path;
 use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
 
 /// Timing statistics over repeated runs.
 #[derive(Clone, Copy, Debug)]
@@ -83,6 +90,133 @@ impl Table {
     }
 }
 
+// ------------------------------------------------------------------
+// Versioned JSON bench reports (the CI perf-regression contract)
+// ------------------------------------------------------------------
+
+/// Bumped on incompatible report layout changes.
+pub const REPORT_SCHEMA_VERSION: usize = 1;
+
+/// One benched hot path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    pub name: String,
+    pub median_ms: f64,
+}
+
+/// Render a report document.
+pub fn report_json(bench: &str, entries: &[BenchEntry]) -> Json {
+    Json::Obj(vec![
+        ("schema_version".into(), Json::Num(REPORT_SCHEMA_VERSION as f64)),
+        ("bench".into(), Json::Str(bench.into())),
+        (
+            "results".into(),
+            Json::Arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::Str(e.name.clone())),
+                            ("median_ms".into(), Json::Num(e.median_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write a report file (pretty-printed: it gets checked in as a baseline).
+pub fn write_report(path: &Path, bench: &str, entries: &[BenchEntry]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, report_json(bench, entries).render_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Read + schema-validate a report file.
+pub fn read_report(path: &Path) -> Result<Vec<BenchEntry>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench report {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+    let ver = doc
+        .get("schema_version")
+        .and_then(|v| v.as_f64())
+        .map(|v| v as usize);
+    if ver != Some(REPORT_SCHEMA_VERSION) {
+        bail!(
+            "{} has schema_version {ver:?} (this build reads {REPORT_SCHEMA_VERSION})",
+            path.display()
+        );
+    }
+    let mut out = Vec::new();
+    for item in doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .context("report has no results array")?
+    {
+        let name = item
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("result entry missing name")?
+            .to_string();
+        let median_ms = item
+            .get("median_ms")
+            .and_then(|v| v.as_f64())
+            .context("result entry missing median_ms")?;
+        out.push(BenchEntry { name, median_ms });
+    }
+    Ok(out)
+}
+
+/// Compare a run against a baseline. Returns the regressed entry names;
+/// prints one line per entry. An entry counts as regressed when its
+/// median exceeds the baseline by more than `tol_pct` percent; entries
+/// missing from the current run regress too (a hot path silently dropped
+/// from the bench is exactly what the gate exists to catch).
+pub fn diff_reports(
+    baseline: &[BenchEntry],
+    current: &[BenchEntry],
+    tol_pct: f64,
+) -> Vec<String> {
+    let mut regressed = Vec::new();
+    for b in baseline {
+        match current.iter().find(|c| c.name == b.name) {
+            None => {
+                println!("{:<28} MISSING from current run", b.name);
+                regressed.push(b.name.clone());
+            }
+            Some(c) => {
+                let delta = (c.median_ms / b.median_ms.max(1e-9) - 1.0) * 100.0;
+                let bad = delta > tol_pct;
+                println!(
+                    "{:<28} base {:>8.2} ms  now {:>8.2} ms  {:>+7.1}% {}",
+                    b.name,
+                    b.median_ms,
+                    c.median_ms,
+                    delta,
+                    if bad { "REGRESSED" } else { "ok" }
+                );
+                if bad {
+                    regressed.push(b.name.clone());
+                }
+            }
+        }
+    }
+    for c in current {
+        if !baseline.iter().any(|b| b.name == c.name) {
+            println!(
+                "{:<28} new entry ({:.2} ms) — refresh the baseline to track it",
+                c.name, c.median_ms
+            );
+        }
+    }
+    regressed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +244,41 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         t.print();
+    }
+
+    #[test]
+    fn report_roundtrip_and_diff() {
+        let dir = std::env::temp_dir().join("chon_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("perf.json");
+        let entries = vec![
+            BenchEntry { name: "matmul".into(), median_ms: 2.0 },
+            BenchEntry { name: "quant".into(), median_ms: 1.0 },
+        ];
+        write_report(&p, "perf", &entries).unwrap();
+        let back = read_report(&p).unwrap();
+        assert_eq!(back, entries);
+
+        // within tolerance
+        let cur = vec![
+            BenchEntry { name: "matmul".into(), median_ms: 2.2 },
+            BenchEntry { name: "quant".into(), median_ms: 0.9 },
+        ];
+        assert!(diff_reports(&entries, &cur, 25.0).is_empty());
+        // one regression + one missing entry
+        let cur = vec![BenchEntry { name: "matmul".into(), median_ms: 3.0 }];
+        let bad = diff_reports(&entries, &cur, 25.0);
+        assert_eq!(bad, vec!["matmul".to_string(), "quant".to_string()]);
+    }
+
+    #[test]
+    fn report_rejects_wrong_schema() {
+        let dir = std::env::temp_dir().join("chon_bench_report_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, "{\"schema_version\": 99, \"results\": []}").unwrap();
+        assert!(read_report(&p).is_err());
+        std::fs::write(&p, "not json").unwrap();
+        assert!(read_report(&p).is_err());
     }
 }

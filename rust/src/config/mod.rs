@@ -35,6 +35,26 @@ pub struct RunConfig {
     pub threads: usize,
     /// log training loss every N steps
     pub log_every: usize,
+    /// serve/client: TCP host
+    pub host: String,
+    /// serve/client: TCP port (serve accepts 0 = ephemeral)
+    pub port: u16,
+    /// serve: max sessions coalesced into one decode batch
+    pub max_batch: usize,
+    /// serve: how long a fresh batch waits for companions (microseconds)
+    pub max_wait_us: u64,
+    /// client: total requests in load mode (0 = single-shot)
+    pub requests: usize,
+    /// client: concurrent load threads
+    pub concurrency: usize,
+    /// serve/client: per-request generation budget
+    pub max_tokens: usize,
+    /// client: sampling temperature (0 = greedy)
+    pub temp: f32,
+    /// client: prompt text
+    pub prompt: String,
+    /// client: send SHUTDOWN instead of generating
+    pub shutdown: bool,
 }
 
 impl Default for RunConfig {
@@ -54,6 +74,16 @@ impl Default for RunConfig {
                 .map(|n| n.get())
                 .unwrap_or(4),
             log_every: 10,
+            host: "127.0.0.1".into(),
+            port: 7411,
+            max_batch: 8,
+            max_wait_us: 2000,
+            requests: 0,
+            concurrency: 4,
+            max_tokens: 32,
+            temp: 0.0,
+            prompt: "the ".into(),
+            shutdown: false,
         }
     }
 }
@@ -120,7 +150,21 @@ impl RunConfig {
                 "out-dir" => self.out_dir = PathBuf::from(next()?),
                 "threads" => self.threads = next()?.parse()?,
                 "log-every" => self.log_every = next()?.parse()?,
-                "checkpoint-dir" => self.checkpoint_dir = Some(PathBuf::from(next()?)),
+                // --checkpoint is the serve-side spelling of the same dir
+                "checkpoint-dir" | "checkpoint" => {
+                    self.checkpoint_dir = Some(PathBuf::from(next()?))
+                }
+                "host" => self.host = next()?,
+                "port" => self.port = next()?.parse()?,
+                "max-batch" => self.max_batch = next()?.parse()?,
+                "max-wait-us" => self.max_wait_us = next()?.parse()?,
+                "requests" => self.requests = next()?.parse()?,
+                "concurrency" => self.concurrency = next()?.parse()?,
+                "max-tokens" => self.max_tokens = next()?.parse()?,
+                "temp" => self.temp = next()?.parse()?,
+                "prompt" => self.prompt = next()?,
+                // value-less flag: nothing to consume
+                "shutdown" => self.shutdown = true,
                 "config" => {
                     let loaded = RunConfig::from_file(&PathBuf::from(next()?))?;
                     *self = loaded;
@@ -166,6 +210,37 @@ mod tests {
         assert_eq!(c.model, "tiny_sa");
         assert_eq!(c.steps, 123);
         assert_eq!(c.recipe, "nvfp4");
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let mut c = RunConfig::default();
+        c.apply_args(&[
+            "--checkpoint".into(),
+            "ckpts".into(),
+            "--port".into(),
+            "0".into(),
+            "--max-batch".into(),
+            "16".into(),
+            "--max-wait-us".into(),
+            "500".into(),
+            "--requests".into(),
+            "32".into(),
+            "--concurrency".into(),
+            "8".into(),
+            "--temp".into(),
+            "0.7".into(),
+            "--shutdown".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some(std::path::Path::new("ckpts")));
+        assert_eq!(c.port, 0);
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.max_wait_us, 500);
+        assert_eq!(c.requests, 32);
+        assert_eq!(c.concurrency, 8);
+        assert_eq!(c.temp, 0.7);
+        assert!(c.shutdown);
     }
 
     #[test]

@@ -16,7 +16,8 @@ use crate::data::batcher::{Batch, Batcher, Prefetcher};
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::tokenizer::Tokenizer;
 use crate::info;
-use crate::runtime::{backend_for, save_checkpoint, Backend, DType, Executable, HostTensor};
+use crate::runtime::ckptdir::{self, CheckpointMeta};
+use crate::runtime::{backend_for, Backend, DType, Executable, HostTensor};
 
 /// Model + optimizer state in manifest order.
 pub struct TrainState {
@@ -41,6 +42,8 @@ pub struct Trainer {
     pub state: TrainState,
     pub log: MetricLog,
     pub monitor: Monitor,
+    /// the tokenizer the data pipeline runs (persisted into checkpoints)
+    pub tokenizer: Tokenizer,
     prefetch: Prefetcher,
     /// (batch, seq_len) from the artifact meta
     pub batch: usize,
@@ -129,7 +132,7 @@ impl Trainer {
         } else {
             Tokenizer::byte_level()
         };
-        let batcher = Batcher::new(corpus, tokenizer, batch, seq_len, vocab);
+        let batcher = Batcher::new(corpus, tokenizer.clone(), batch, seq_len, vocab);
         let prefetch = Prefetcher::spawn(batcher, 4);
 
         // metric names come from the (cheap) manifest, not the executable
@@ -148,6 +151,7 @@ impl Trainer {
             state,
             log: MetricLog::default(),
             monitor: Monitor::new(metric_names),
+            tokenizer,
             prefetch,
             batch,
             seq_len,
@@ -304,13 +308,32 @@ impl Trainer {
         Ok(())
     }
 
-    /// Persist params (+ metadata) to `<dir>/<model>_<recipe>_<step>.ckpt`.
+    /// The (name, shape) layout restores must match.
+    fn param_layout(&self) -> Vec<(String, Vec<usize>)> {
+        self.state
+            .names
+            .iter()
+            .cloned()
+            .zip(self.state.params.iter().map(|t| t.shape.clone()))
+            .collect()
+    }
+
+    /// Persist the full run state to a checkpoint *directory*
+    /// `<dir>/<model>_<recipe>_<step>/` — params, optimizer state,
+    /// tokenizer vocab and run metadata (see `runtime::ckptdir`).
     pub fn save_checkpoint_to(&self, dir: &Path) -> Result<PathBuf> {
-        std::fs::create_dir_all(dir)?;
         let path = dir.join(format!(
-            "{}_{}_{:05}.ckpt",
+            "{}_{}_{:05}",
             self.cfg.model, self.cfg.recipe, self.state.step
         ));
+        let meta = CheckpointMeta {
+            format_version: ckptdir::FORMAT_VERSION,
+            model: self.cfg.model.clone(),
+            recipe: self.cfg.recipe.clone(),
+            seed: self.cfg.seed,
+            step: self.state.step,
+            vocab: self.tokenizer.vocab,
+        };
         let tensors: Vec<(String, HostTensor)> = self
             .state
             .names
@@ -318,13 +341,27 @@ impl Trainer {
             .cloned()
             .zip(self.state.params.iter().cloned())
             .collect();
-        save_checkpoint(&path, &tensors)?;
+        ckptdir::save_dir(
+            &path,
+            &meta,
+            &tensors,
+            Some((self.state.m.as_slice(), self.state.v.as_slice(), self.state.step)),
+            &self.tokenizer,
+        )?;
         Ok(path)
     }
 
-    /// Restore params from a checkpoint (optimizer state resets).
+    /// Restore *params only* from a checkpoint dir (or a legacy single
+    /// `.ckpt` file). Optimizer state and step are untouched — use
+    /// `restore` for a full resume. Tensor names and shapes must match
+    /// this trainer's model; the checkpoint's recipe may differ (the
+    /// finetune flow trains a bf16 checkpoint under quantized recipes).
     pub fn load_params(&mut self, path: &Path) -> Result<()> {
-        let tensors = crate::runtime::load_checkpoint(path)?;
+        let tensors = if path.is_dir() {
+            ckptdir::load_dir(&ckptdir::resolve(path)?, &self.param_layout())?.params
+        } else {
+            crate::runtime::load_checkpoint(path)?
+        };
         if tensors.len() != self.state.params.len() {
             bail!(
                 "checkpoint has {} tensors, expected {}",
@@ -339,6 +376,49 @@ impl Trainer {
             let _ = t;
         }
         self.state.params = tensors.into_iter().map(|(_, t)| t).collect();
+        Ok(())
+    }
+
+    /// Full resume from a checkpoint dir: params + Adam m/v + step. The
+    /// checkpoint must have been written for this (model, recipe) pair —
+    /// silently resetting the optimizer was the old behavior and is now an
+    /// explicit error instead.
+    ///
+    /// Known limitation: the data pipeline restarts from the stream head
+    /// (its position is not checkpointed), so a resumed run revisits the
+    /// batches the original run already consumed — loss trajectories of
+    /// resumed vs uninterrupted runs differ. Fast-forwarding the stream is
+    /// a ROADMAP follow-up.
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        let dir = ckptdir::resolve(path)?;
+        let loaded = ckptdir::load_dir(&dir, &self.param_layout())?;
+        if loaded.meta.model != self.cfg.model {
+            bail!(
+                "checkpoint {} was trained on model {:?}, trainer runs {:?}",
+                dir.display(),
+                loaded.meta.model,
+                self.cfg.model
+            );
+        }
+        if loaded.meta.recipe != self.cfg.recipe {
+            bail!(
+                "checkpoint {} was trained with recipe {:?}, trainer runs {:?} \
+                 (use load_params to transplant params across recipes)",
+                dir.display(),
+                loaded.meta.recipe,
+                self.cfg.recipe
+            );
+        }
+        let Some(optim) = loaded.optim else {
+            bail!(
+                "checkpoint {} has no optimizer state (inference-only copy?)",
+                dir.display()
+            );
+        };
+        self.state.params = loaded.params.into_iter().map(|(_, t)| t).collect();
+        self.state.m = optim.m;
+        self.state.v = optim.v;
+        self.state.step = optim.step;
         Ok(())
     }
 

@@ -65,11 +65,19 @@ impl Tokenizer {
     }
 
     pub fn decode(&self, toks: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(toks)).into_owned()
+    }
+
+    /// Lossless byte-level decode — the streaming path uses this so a
+    /// multi-byte character split across tokens survives intact (the
+    /// UTF-8-lossy conversion must happen once over the full sequence,
+    /// never per token).
+    pub fn decode_bytes(&self, toks: &[u32]) -> Vec<u8> {
         let mut bytes = Vec::with_capacity(toks.len() * 2);
         for &t in toks {
             self.expand(t, &mut bytes);
         }
-        String::from_utf8_lossy(&bytes).into_owned()
+        bytes
     }
 
     fn expand(&self, t: u32, out: &mut Vec<u8>) {
@@ -85,6 +93,59 @@ impl Tokenizer {
     /// Fast path when no merge applies to the pair.
     pub fn has_merge(&self, a: u32, b: u32) -> bool {
         self.rank.contains_key(&(a, b))
+    }
+
+    /// Serialize to the checkpoint text format: a header line with the
+    /// vocab size, then one `left right` pair per merge in rank order.
+    pub fn to_text(&self) -> String {
+        let mut out = format!("chon-tokenizer v1 vocab={}\n", self.vocab);
+        for &(a, b) in &self.merges {
+            out.push_str(&format!("{a} {b}\n"));
+        }
+        out
+    }
+
+    /// Parse the checkpoint text format back into a tokenizer.
+    pub fn from_text(text: &str) -> Result<Tokenizer, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty tokenizer file")?;
+        let vocab: usize = header
+            .strip_prefix("chon-tokenizer v1 vocab=")
+            .ok_or_else(|| format!("bad tokenizer header {header:?}"))?
+            .trim()
+            .parse()
+            .map_err(|e| format!("bad vocab in tokenizer header: {e}"))?;
+        let mut merges = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let parse = |tok: Option<&str>| -> Result<u32, String> {
+                tok.ok_or_else(|| format!("short merge line {}", i + 2))?
+                    .parse()
+                    .map_err(|e| format!("bad merge line {}: {e}", i + 2))
+            };
+            let pair = (parse(it.next())?, parse(it.next())?);
+            // merges only reference bytes or previously defined merges
+            let limit = 256 + merges.len() as u32;
+            if pair.0 >= limit || pair.1 >= limit {
+                return Err(format!("merge line {} references undefined token", i + 2));
+            }
+            merges.push(pair);
+        }
+        if vocab < 256 + merges.len() {
+            return Err(format!(
+                "tokenizer vocab {vocab} smaller than 256 + {} merges",
+                merges.len()
+            ));
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, 256 + i as u32))
+            .collect();
+        Ok(Tokenizer { vocab, merges, rank })
     }
 }
 
@@ -141,6 +202,36 @@ mod tests {
             text.len()
         );
         assert!(toks.iter().all(|&x| (x as usize) < t.vocab));
+    }
+
+    #[test]
+    fn text_serialization_roundtrip() {
+        let c = Corpus::new(CorpusConfig::default());
+        let t = Tokenizer::train(&c.generate(10_000, 0), 320);
+        let back = Tokenizer::from_text(&t.to_text()).unwrap();
+        assert_eq!(back.vocab, t.vocab);
+        assert_eq!(back.merges, t.merges);
+        let s = c.generate(2_000, 7);
+        assert_eq!(back.encode(&s), t.encode(&s));
+
+        let byte = Tokenizer::byte_level();
+        let back = Tokenizer::from_text(&byte.to_text()).unwrap();
+        assert_eq!(back.vocab, 256);
+        assert!(back.merges.is_empty());
+    }
+
+    #[test]
+    fn malformed_tokenizer_text_rejected() {
+        assert!(Tokenizer::from_text("").is_err());
+        assert!(Tokenizer::from_text("bogus header\n1 2\n").is_err());
+        // merge referencing a not-yet-defined token id
+        assert!(
+            Tokenizer::from_text("chon-tokenizer v1 vocab=300\n900 1\n").is_err()
+        );
+        // vocab too small for the merge list
+        assert!(
+            Tokenizer::from_text("chon-tokenizer v1 vocab=256\n97 98\n").is_err()
+        );
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! as a three-layer Rust + JAX + Pallas system:
 //!
 //! * L3 (this crate): training coordinator, pluggable execution backends,
-//!   diagnostics monitor, HCP engine, synthetic-data pipeline, benches.
+//!   diagnostics monitor, HCP engine, synthetic-data pipeline, benches,
+//!   and the batched inference server (`serve`, the train→checkpoint→
+//!   serve path).
 //! * L2 (python/compile): JAX GLA / Softmax-Attention models with the CHON
 //!   quantized-training recipe, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * L1 (python/compile/kernels): Pallas kernels (NVFP4 quantizer, fused
@@ -38,4 +40,5 @@ pub mod diagnostics;
 pub mod hcp;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;

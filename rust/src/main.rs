@@ -6,15 +6,21 @@
 //!   ablate-table3   the Tab. 3 operator sensitivity study
 //!   eval-suite      the Tab. 1 downstream eval substitute
 //!   diag            longitudinal diagnostics run (high probe frequency)
+//!   serve           checkpoint-backed inference server (request batching)
+//!   client          protocol client / load generator
+//!   bench-diff      gate bench JSON against the checked-in baseline
 //!   info            list available models/recipes (or pjrt artifacts)
 //!
 //! Flags are `--key value`; see `chon help`.
+
+use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use chon::config::RunConfig;
 use chon::coordinator::{ablation, evalsuite, Trainer};
 use chon::runtime::native;
+use chon::serve::{client, ClientOpts, Engine, ServeOpts, Server};
 
 const HELP: &str = "\
 chon — CHON/NVFP4 training coordinator
@@ -28,6 +34,9 @@ COMMANDS:
   eval-suite     train bf16/fp8/nvfp4/chon and report downstream scores
   finetune       post-training gap study (Fig. 15c substitute)
   diag           longitudinal diagnostics (diag every 10 steps)
+  serve          serve a checkpoint over TCP with request batching
+  client         talk to a server; --requests N turns it into a load gen
+  bench-diff     diff a bench JSON report against the checked-in baseline
   info           list models/recipes (native) or artifacts (pjrt)
   help           this text
 
@@ -38,9 +47,23 @@ COMMON FLAGS:
   --seed N          --out-dir DIR         --diag-every N --eval-every N
   --log-every N     --checkpoint-dir DIR  --config FILE.toml
 
+SERVE/CLIENT FLAGS:
+  --checkpoint DIR  checkpoint dir (or parent; highest step wins)
+  --host H          (default 127.0.0.1)   --port P       (default 7411; 0=any)
+  --max-batch N     (default 8)           --max-wait-us U (default 2000)
+  --requests N      client load mode      --concurrency C (default 4)
+  --max-tokens N    (default 32)          --temp T       (default 0 = greedy)
+  --prompt TEXT     --shutdown            (ask the server to drain + stop)
+
+BENCH-DIFF FLAGS:
+  --baseline FILE   (default benches/baseline/perf_baseline.json)
+  --current FILE    (default runs/bench/perf.json)
+  --tolerance PCT   (default 25; fail on >PCT% median regression)
+
 The native backend runs the tiny GLA/SA training step in pure Rust — no
 artifacts directory and no libxla needed; runs are bit-reproducible for a
-fixed --seed.
+fixed --seed. Wire protocol: `GEN <max_tokens> <temp>\\t<prompt>` in,
+streamed `TOK <piece>` lines + `DONE <n> <ms>` out (see rust/README.md).
 ";
 
 fn is_native(cfg: &RunConfig) -> bool {
@@ -92,6 +115,45 @@ fn sensitivity_ops(cfg: &RunConfig) -> Result<Vec<String>> {
     Ok(ops)
 }
 
+/// `bench-diff` takes its own flags (file paths, not run config).
+fn bench_diff(args: &[String]) -> Result<()> {
+    let mut baseline = PathBuf::from("benches/baseline/perf_baseline.json");
+    let mut current = PathBuf::from("runs/bench/perf.json");
+    let mut tolerance = 25.0f64;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        let mut next = || {
+            it.next()
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("{arg} needs a value"))
+        };
+        match arg.as_str() {
+            "--baseline" => baseline = PathBuf::from(next()?),
+            "--current" => current = PathBuf::from(next()?),
+            "--tolerance" => tolerance = next()?.parse()?,
+            other => bail!("unknown bench-diff flag {other:?}"),
+        }
+    }
+    let base = chon::bench::read_report(&baseline)?;
+    let cur = chon::bench::read_report(&current)?;
+    println!(
+        "bench-diff: {} vs {} (tolerance {tolerance}%)",
+        current.display(),
+        baseline.display()
+    );
+    let regressed = chon::bench::diff_reports(&base, &cur, tolerance);
+    if !regressed.is_empty() {
+        bail!(
+            "{} hot path(s) regressed >{}%: {}",
+            regressed.len(),
+            tolerance,
+            regressed.join(", ")
+        );
+    }
+    println!("no regressions beyond {tolerance}%");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     chon::util::logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -99,6 +161,9 @@ fn main() -> Result<()> {
         print!("{HELP}");
         return Ok(());
     };
+    if cmd == "bench-diff" {
+        return bench_diff(&args[1..]);
+    }
     let mut cfg = RunConfig::default();
     cfg.apply_args(&args[1..])?;
 
@@ -132,6 +197,14 @@ fn main() -> Result<()> {
                 println!("final eval: loss {l:.4} acc {a:.3}");
             }
             let dir = tr.write_outputs()?;
+            // leave a final checkpoint unless the in-loop cadence (every
+            // 100 steps) already wrote this exact step
+            if let Some(ckpt_dir) = tr.cfg.checkpoint_dir.clone() {
+                if tr.state.step % 100 != 0 {
+                    let p = tr.save_checkpoint_to(&ckpt_dir)?;
+                    println!("checkpoint written to {}", p.display());
+                }
+            }
             println!(
                 "trained {} steps; final loss {:.4}; mean step {:.0} ms; outputs in {}",
                 n,
@@ -139,6 +212,74 @@ fn main() -> Result<()> {
                 tr.log.mean_step_ms(),
                 dir.display()
             );
+        }
+        "serve" => {
+            let Some(dir) = cfg.checkpoint_dir.clone() else {
+                bail!("serve needs --checkpoint DIR (a dir written by `chon train --checkpoint-dir`)");
+            };
+            let engine = Engine::load(&dir)
+                .with_context(|| format!("loading checkpoint {}", dir.display()))?;
+            println!(
+                "loaded {} / {} @ step {} ({} params, vocab {})",
+                engine.meta.model,
+                engine.meta.recipe,
+                engine.meta.step,
+                engine.param_count(),
+                engine.tokenizer.vocab
+            );
+            let opts = ServeOpts {
+                host: cfg.host.clone(),
+                port: cfg.port,
+                max_batch: cfg.max_batch,
+                max_wait_us: cfg.max_wait_us,
+                // pool floor of 8: a worker is pinned per live connection,
+                // so 1-2 core boxes must still take concurrent clients
+                workers: cfg.threads.clamp(8, 32),
+                seed: cfg.seed,
+            };
+            let server = Server::bind(engine, &opts)?;
+            println!("listening on {}:{}", opts.host, server.port());
+            let stats = server.run()?;
+            println!("final stats: {stats}");
+        }
+        "client" => {
+            if cfg.shutdown {
+                client::send_shutdown(&cfg.host, cfg.port)?;
+                println!("shutdown sent to {}:{}", cfg.host, cfg.port);
+            } else if cfg.requests == 0 {
+                let (text, n, ms) = client::generate_once(
+                    &cfg.host,
+                    cfg.port,
+                    &cfg.prompt,
+                    cfg.max_tokens,
+                    cfg.temp,
+                )?;
+                println!("{text}");
+                println!("[{n} tokens in {ms:.1} ms]");
+            } else {
+                let opts = ClientOpts {
+                    host: cfg.host.clone(),
+                    port: cfg.port,
+                    requests: cfg.requests,
+                    concurrency: cfg.concurrency,
+                    max_tokens: cfg.max_tokens,
+                    temp: cfg.temp,
+                    prompt: cfg.prompt.clone(),
+                };
+                let report = client::run_load(&opts)?;
+                client::print_report(&opts, &report);
+                if report.requests_ok() == 0
+                    || report.failures > 0
+                    || report.empty_responses > 0
+                {
+                    bail!(
+                        "load run unhealthy: {} ok, {} empty, {} failed threads",
+                        report.requests_ok(),
+                        report.empty_responses,
+                        report.failures
+                    );
+                }
+            }
         }
         "diag" => {
             cfg.diag_every = if cfg.diag_every == 0 { 10 } else { cfg.diag_every };

@@ -1,0 +1,374 @@
+//! Checkpoint *directories* — the durable train→serve interchange format.
+//!
+//! A checkpoint dir holds everything needed to reload a run without the
+//! original config:
+//!
+//! ```text
+//! <dir>/
+//!   meta.toml      model/recipe/seed/step/vocab + format version
+//!   params.ckpt    named parameter tensors (CHONCKPT binary format)
+//!   optim.ckpt     Adam m/v tensors + step (optional for inference)
+//!   tokenizer.txt  the tokenizer vocab (byte level or learned merges)
+//! ```
+//!
+//! Loading validates the metadata against the named model/recipe tables
+//! and every tensor name + shape against the model's parameter layout,
+//! so a mismatched or corrupted checkpoint fails loudly instead of
+//! producing garbage generations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml;
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::tensor::{load_checkpoint, save_checkpoint, HostTensor};
+
+/// Bumped on incompatible layout changes.
+pub const FORMAT_VERSION: usize = 1;
+
+pub const META_FILE: &str = "meta.toml";
+pub const PARAMS_FILE: &str = "params.ckpt";
+pub const OPTIM_FILE: &str = "optim.ckpt";
+pub const TOKENIZER_FILE: &str = "tokenizer.txt";
+
+/// The identity of a checkpoint (meta.toml contents).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    pub format_version: usize,
+    pub model: String,
+    pub recipe: String,
+    pub seed: u64,
+    pub step: usize,
+    pub vocab: usize,
+}
+
+impl CheckpointMeta {
+    fn to_toml(&self) -> String {
+        format!(
+            "# chon checkpoint metadata (written by Trainer::save_checkpoint_to)\n\
+             format_version = {}\nmodel = \"{}\"\nrecipe = \"{}\"\n\
+             seed = {}\nstep = {}\nvocab = {}\n",
+            self.format_version, self.model, self.recipe, self.seed, self.step,
+            self.vocab
+        )
+    }
+
+    fn from_toml(text: &str) -> Result<CheckpointMeta> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let need_str = |key: &str| -> Result<String> {
+            let v = doc.str_or("", key, "");
+            if v.is_empty() {
+                bail!("checkpoint meta missing {key:?}");
+            }
+            Ok(v.to_string())
+        };
+        let need_int = |key: &str| -> Result<i64> {
+            if doc.get("", key).is_none() {
+                bail!("checkpoint meta missing {key:?}");
+            }
+            Ok(doc.int_or("", key, 0))
+        };
+        Ok(CheckpointMeta {
+            format_version: need_int("format_version")? as usize,
+            model: need_str("model")?,
+            recipe: need_str("recipe")?,
+            seed: need_int("seed")? as u64,
+            step: need_int("step")? as usize,
+            vocab: need_int("vocab")? as usize,
+        })
+    }
+}
+
+/// Optimizer state as stored in optim.ckpt.
+pub struct OptimState {
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: usize,
+}
+
+/// Everything a checkpoint dir contains.
+pub struct LoadedCheckpoint {
+    pub meta: CheckpointMeta,
+    /// (name, tensor) pairs in parameter-slot order
+    pub params: Vec<(String, HostTensor)>,
+    /// absent when optim.ckpt is missing (inference-only copies)
+    pub optim: Option<OptimState>,
+    pub tokenizer: Tokenizer,
+}
+
+/// Write a complete checkpoint directory (params + optimizer + tokenizer
+/// + metadata). `dir` is created; existing files are overwritten.
+pub fn save_dir(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    params: &[(String, HostTensor)],
+    optim: Option<(&[HostTensor], &[HostTensor], usize)>,
+    tokenizer: &Tokenizer,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    std::fs::write(dir.join(META_FILE), meta.to_toml())?;
+    std::fs::write(dir.join(TOKENIZER_FILE), tokenizer.to_text())?;
+    save_checkpoint(&dir.join(PARAMS_FILE), params)?;
+    if let Some((m, v, step)) = optim {
+        let mut tensors: Vec<(String, HostTensor)> = Vec::new();
+        for (i, t) in m.iter().enumerate() {
+            tensors.push((format!("m[{i}]"), t.clone()));
+        }
+        for (i, t) in v.iter().enumerate() {
+            tensors.push((format!("v[{i}]"), t.clone()));
+        }
+        tensors.push(("step".into(), HostTensor::scalar_i32(step as i32)));
+        save_checkpoint(&dir.join(OPTIM_FILE), &tensors)?;
+    }
+    Ok(())
+}
+
+/// Read and validate just the metadata of a checkpoint dir (cheap probe
+/// used to decide which model/recipe tables to validate against).
+pub fn load_meta(dir: &Path) -> Result<CheckpointMeta> {
+    let meta_path = dir.join(META_FILE);
+    let meta_text = std::fs::read_to_string(&meta_path).with_context(|| {
+        format!(
+            "{} is not a checkpoint dir (missing {META_FILE})",
+            dir.display()
+        )
+    })?;
+    let meta = CheckpointMeta::from_toml(&meta_text)
+        .with_context(|| format!("parsing {}", meta_path.display()))?;
+    if meta.format_version != FORMAT_VERSION {
+        bail!(
+            "checkpoint {} has format_version {} (this build reads {})",
+            dir.display(),
+            meta.format_version,
+            FORMAT_VERSION
+        );
+    }
+    Ok(meta)
+}
+
+/// Load and validate a checkpoint directory.
+///
+/// `expect_specs` is the (name, shape) layout the caller's model demands;
+/// any mismatch (count, name or shape) is a hard error naming the first
+/// offending tensor.
+pub fn load_dir(
+    dir: &Path,
+    expect_specs: &[(String, Vec<usize>)],
+) -> Result<LoadedCheckpoint> {
+    let meta = load_meta(dir)?;
+
+    let tok_path = dir.join(TOKENIZER_FILE);
+    let tok_text = std::fs::read_to_string(&tok_path)
+        .with_context(|| format!("reading {}", tok_path.display()))?;
+    let tokenizer = Tokenizer::from_text(&tok_text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", tok_path.display()))?;
+
+    let params = load_checkpoint(&dir.join(PARAMS_FILE))
+        .with_context(|| format!("reading params of {}", dir.display()))?;
+    if params.len() != expect_specs.len() {
+        bail!(
+            "checkpoint {} has {} parameter tensors, model {} expects {}",
+            dir.display(),
+            params.len(),
+            meta.model,
+            expect_specs.len()
+        );
+    }
+    for ((name, t), (want_name, want_shape)) in params.iter().zip(expect_specs) {
+        if name != want_name {
+            bail!(
+                "checkpoint tensor {name:?} does not match expected slot \
+                 {want_name:?} (model mismatch?)"
+            );
+        }
+        if &t.shape != want_shape {
+            bail!(
+                "checkpoint tensor {name} has shape {:?}, model {} expects {:?}",
+                t.shape,
+                meta.model,
+                want_shape
+            );
+        }
+    }
+
+    let optim_path = dir.join(OPTIM_FILE);
+    let optim = if optim_path.exists() {
+        let tensors = load_checkpoint(&optim_path)
+            .with_context(|| format!("reading optimizer state of {}", dir.display()))?;
+        let k = expect_specs.len();
+        if tensors.len() != 2 * k + 1 {
+            bail!(
+                "optimizer state has {} tensors, expected {} (2k + step)",
+                tensors.len(),
+                2 * k + 1
+            );
+        }
+        let m: Vec<HostTensor> = tensors[..k].iter().map(|(_, t)| t.clone()).collect();
+        let v: Vec<HostTensor> =
+            tensors[k..2 * k].iter().map(|(_, t)| t.clone()).collect();
+        let (ref sname, ref stensor) = tensors[2 * k];
+        if sname != "step" {
+            bail!("optimizer state missing the step scalar");
+        }
+        Some(OptimState { m, v, step: stensor.i32_data[0] as usize })
+    } else {
+        None
+    };
+
+    Ok(LoadedCheckpoint { meta, params, optim, tokenizer })
+}
+
+/// Resolve a user-supplied path to one checkpoint dir: either the dir
+/// itself (contains meta.toml) or a parent holding several checkpoints,
+/// in which case the one with the highest step wins — ties broken by
+/// directory name, so the choice never depends on read_dir order.
+pub fn resolve(path: &Path) -> Result<PathBuf> {
+    if path.join(META_FILE).exists() {
+        return Ok(path.to_path_buf());
+    }
+    let rd = std::fs::read_dir(path)
+        .with_context(|| format!("reading checkpoint dir {}", path.display()))?;
+    let mut best: Option<(usize, PathBuf)> = None;
+    for e in rd.flatten() {
+        let sub = e.path();
+        let meta_path = sub.join(META_FILE);
+        if !meta_path.exists() {
+            continue;
+        }
+        let step = std::fs::read_to_string(&meta_path)
+            .ok()
+            .and_then(|t| CheckpointMeta::from_toml(&t).ok())
+            .map(|m| m.step)
+            .unwrap_or(0);
+        let better = match &best {
+            None => true,
+            Some((s, p)) => step > *s || (step == *s && sub > *p),
+        };
+        if better {
+            best = Some((step, sub));
+        }
+    }
+    match best {
+        Some((_, dir)) => Ok(dir),
+        None => bail!(
+            "{} contains no checkpoint (no {META_FILE} in it or any subdirectory)",
+            path.display()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("chon_ckptdir_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo_params() -> Vec<(String, HostTensor)> {
+        vec![
+            ("params['a']".into(), HostTensor::f32(vec![2, 2], vec![1., 2., 3., 4.])),
+            ("params['b']".into(), HostTensor::f32(vec![3], vec![5., 6., 7.])),
+        ]
+    }
+
+    fn demo_meta() -> CheckpointMeta {
+        CheckpointMeta {
+            format_version: FORMAT_VERSION,
+            model: "tiny_gla".into(),
+            recipe: "chon".into(),
+            seed: 3,
+            step: 20,
+            vocab: 256,
+        }
+    }
+
+    fn specs_of(params: &[(String, HostTensor)]) -> Vec<(String, Vec<usize>)> {
+        params.iter().map(|(n, t)| (n.clone(), t.shape.clone())).collect()
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_optimizer() {
+        let dir = tmpdir("roundtrip");
+        let params = demo_params();
+        let m: Vec<HostTensor> = params.iter().map(|(_, t)| t.clone()).collect();
+        let v = m.clone();
+        save_dir(
+            &dir,
+            &demo_meta(),
+            &params,
+            Some((m.as_slice(), v.as_slice(), 20)),
+            &Tokenizer::byte_level(),
+        )
+        .unwrap();
+        let back = load_dir(&dir, &specs_of(&params)).unwrap();
+        assert_eq!(back.meta, demo_meta());
+        assert_eq!(back.params[0].1.f32_data, params[0].1.f32_data);
+        let optim = back.optim.unwrap();
+        assert_eq!(optim.step, 20);
+        assert_eq!(optim.m.len(), 2);
+        assert_eq!(back.tokenizer.vocab, 256);
+        // resolve() accepts both the dir and its parent
+        assert_eq!(resolve(&dir).unwrap(), dir);
+    }
+
+    #[test]
+    fn resolve_picks_highest_step() {
+        let parent = tmpdir("resolve");
+        let params = demo_params();
+        for step in [10usize, 30, 20] {
+            let mut meta = demo_meta();
+            meta.step = step;
+            let d = parent.join(format!("ck_{step:05}"));
+            save_dir(&d, &meta, &params, None, &Tokenizer::byte_level()).unwrap();
+        }
+        let got = resolve(&parent).unwrap();
+        assert!(got.ends_with("ck_00030"), "{}", got.display());
+        assert!(resolve(&tmpdir("resolve_empty")).is_err());
+    }
+
+    #[test]
+    fn shape_and_name_mismatches_rejected() {
+        let dir = tmpdir("mismatch");
+        let params = demo_params();
+        save_dir(&dir, &demo_meta(), &params, None, &Tokenizer::byte_level()).unwrap();
+
+        let mut wrong_shape = specs_of(&params);
+        wrong_shape[1].1 = vec![4];
+        let err = load_dir(&dir, &wrong_shape).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+
+        let mut wrong_name = specs_of(&params);
+        wrong_name[0].0 = "params['z']".into();
+        let err = load_dir(&dir, &wrong_name).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+
+        let short = &specs_of(&params)[..1];
+        let err = load_dir(&dir, short).unwrap_err().to_string();
+        assert!(err.contains("parameter tensors"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_files_fail_loudly() {
+        let dir = tmpdir("corrupt");
+        let params = demo_params();
+        save_dir(&dir, &demo_meta(), &params, None, &Tokenizer::byte_level()).unwrap();
+        // truncate params.ckpt mid-tensor
+        let p = dir.join(PARAMS_FILE);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_dir(&dir, &specs_of(&params)).is_err());
+        // garbage magic
+        std::fs::write(&p, b"NOTACKPT").unwrap();
+        assert!(load_dir(&dir, &specs_of(&params)).is_err());
+        // missing meta entirely
+        std::fs::remove_file(dir.join(META_FILE)).unwrap();
+        let err = load_dir(&dir, &specs_of(&params)).unwrap_err().to_string();
+        assert!(err.contains("not a checkpoint dir"), "{err}");
+    }
+}

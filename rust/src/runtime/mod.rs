@@ -2,6 +2,8 @@
 //! execution engines behind the coordinator.
 //!
 //! * `backend` — the `Backend`/`Executable` traits + `backend_for` factory.
+//! * `ckptdir` — checkpoint directories (params + optimizer + tokenizer +
+//!   metadata), the train→serve interchange format.
 //! * `native` — pure-Rust engine (default; offline, deterministic).
 //! * `executable` — the PJRT/XLA engine (`--features pjrt`): HLO *text* is
 //!   the interchange format (`HloModuleProto::from_text_file` ->
@@ -11,12 +13,14 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod ckptdir;
 #[cfg(feature = "pjrt")]
 pub mod executable;
 pub mod native;
 pub mod tensor;
 
 pub use artifact::Manifest;
+pub use ckptdir::{CheckpointMeta, LoadedCheckpoint};
 pub use backend::{backend_for, check_inputs, Backend, Executable};
 #[cfg(feature = "pjrt")]
 pub use executable::{client, LoadedArtifact, PjrtBackend};

@@ -69,7 +69,7 @@ pub fn model_cfg(name: &str) -> Result<ModelCfg> {
 }
 
 /// Per-layer weight slots, in parameter order.
-fn layer_slots(arch: Arch) -> &'static [&'static str] {
+pub(crate) fn layer_slots(arch: Arch) -> &'static [&'static str] {
     match arch {
         Arch::Gla => &[
             "attn_norm", "wq", "wk", "wv", "wgk", "wg", "wo", "mlp_norm",
@@ -122,7 +122,7 @@ pub fn param_specs(cfg: &ModelCfg) -> Vec<ParamSpec> {
 }
 
 /// Index of a per-layer slot in the parameter list.
-fn pidx(cfg: &ModelCfg, layer: usize, slot: &str) -> usize {
+pub(crate) fn pidx(cfg: &ModelCfg, layer: usize, slot: &str) -> usize {
     let slots = layer_slots(cfg.arch);
     let off = slots
         .iter()
@@ -131,11 +131,11 @@ fn pidx(cfg: &ModelCfg, layer: usize, slot: &str) -> usize {
     1 + layer * slots.len() + off
 }
 
-fn final_norm_idx(cfg: &ModelCfg) -> usize {
+pub(crate) fn final_norm_idx(cfg: &ModelCfg) -> usize {
     1 + cfg.layers * layer_slots(cfg.arch).len()
 }
 
-fn lm_head_idx(cfg: &ModelCfg) -> usize {
+pub(crate) fn lm_head_idx(cfg: &ModelCfg) -> usize {
     final_norm_idx(cfg) + 1
 }
 
@@ -172,7 +172,7 @@ pub fn init_params(cfg: &ModelCfg, seed: u64) -> Vec<HostTensor> {
 // Tensor plumbing
 // ------------------------------------------------------------------
 
-fn to_mat(t: &HostTensor) -> Mat {
+pub(crate) fn to_mat(t: &HostTensor) -> Mat {
     match t.shape.len() {
         1 => Mat::from_vec(1, t.shape[0], t.f32_data.clone()),
         2 => Mat::from_vec(t.shape[0], t.shape[1], t.f32_data.clone()),
@@ -180,7 +180,7 @@ fn to_mat(t: &HostTensor) -> Mat {
     }
 }
 
-fn params_to_mats(params: &[HostTensor]) -> Vec<Mat> {
+pub(crate) fn params_to_mats(params: &[HostTensor]) -> Vec<Mat> {
     params.iter().map(to_mat).collect()
 }
 
@@ -224,7 +224,7 @@ fn map3(a: &Mat, b: &Mat, c: &Mat, f: impl Fn(f32, f32, f32) -> f32) -> Mat {
     Mat::from_vec(a.rows, a.cols, data)
 }
 
-fn sigmoid(z: f32) -> f32 {
+pub(crate) fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
 
@@ -280,6 +280,119 @@ fn linear(x: &Mat, w: &Mat, oq: &OpQuant) -> LinOut {
     }
 }
 
+/// Forward-only quantized linear for the serving path.
+///
+/// Matches `linear`'s forward math with one deliberate difference:
+/// everything batch-shaped happens *per activation row*. Training
+/// quantizes the whole (batch*seq, d) activation as one tensor — the
+/// global NVFP4/FP8 encode scale and the HCP hot-channel selection both
+/// span the batch, so a request's output would depend on whichever other
+/// requests share its decode batch. Here each token row gets its own
+/// encode scale, its own 1x16 blocks (every native width — d=32, ff=64 —
+/// is a multiple of the 16-element block) and its own hot-channel
+/// selection, which keeps greedy generations bit-identical at any batch
+/// size (the serve contract). Weights quantize whole, as in training:
+/// they are batch-independent by construction.
+/// A weight pre-processed for serving: the quantized operand the GEMM
+/// actually consumes, plus (on the HCP path) the residual and the
+/// per-channel weight-score term. Weights are frozen at inference time,
+/// so `Engine` computes this once per parameter at load instead of
+/// re-quantizing every layer op on every decode step.
+pub(crate) struct PreparedWeight {
+    /// the operand fed to the GEMM (identity copy on the BF16 path)
+    pub wu: Mat,
+    /// W - Wq, present only when HCP compensation is on
+    pub dw: Option<Mat>,
+    /// mean |dW_j,:| per channel (the row-independent score term)
+    pub wscore: Option<Vec<f64>>,
+}
+
+/// Quantize one weight per the op's forward recipe (serving path).
+pub(crate) fn prepare_weight(w: &Mat, oq: &OpQuant) -> PreparedWeight {
+    match oq.mode {
+        QuantKind::Bf16 => {
+            PreparedWeight { wu: w.clone(), dw: None, wscore: None }
+        }
+        QuantKind::Fp8 => PreparedWeight {
+            wu: Mat::from_vec(w.rows, w.cols, fp8_fake_quant(&w.data)),
+            dw: None,
+            wscore: None,
+        },
+        QuantKind::Nvfp4 => {
+            let wu = if oq.scaling_2d {
+                nvfp4::fake_quant_mat_2d(w, 16)
+            } else {
+                nvfp4::fake_quant_mat(w)
+            };
+            if oq.hcp_frac > 0.0 {
+                let dw = w.sub(&wu);
+                let wscore: Vec<f64> = (0..dw.rows)
+                    .map(|j| {
+                        dw.row(j).iter().map(|&v| v.abs() as f64).sum::<f64>()
+                            / dw.cols as f64
+                    })
+                    .collect();
+                PreparedWeight { wu, dw: Some(dw), wscore: Some(wscore) }
+            } else {
+                PreparedWeight { wu, dw: None, wscore: None }
+            }
+        }
+    }
+}
+
+/// Forward quantized linear over a pre-processed weight.
+pub(crate) fn infer_linear_prepared(x: &Mat, pw: &PreparedWeight, oq: &OpQuant) -> Mat {
+    let per_row = |f: &dyn Fn(&[f32]) -> Vec<f32>| -> Mat {
+        let mut data = Vec::with_capacity(x.data.len());
+        for i in 0..x.rows {
+            data.extend(f(x.row(i)));
+        }
+        Mat::from_vec(x.rows, x.cols, data)
+    };
+    match oq.mode {
+        QuantKind::Bf16 => matmul(x, &pw.wu),
+        QuantKind::Fp8 => {
+            let xu = per_row(&|r| fp8_fake_quant(r));
+            matmul(&xu, &pw.wu)
+        }
+        QuantKind::Nvfp4 => {
+            let xu = per_row(&|r| nvfp4::fake_quant(r, nvfp4::Rounding::Rtn, None));
+            let mut y = matmul(&xu, &pw.wu);
+            if let (Some(dw), Some(wscore)) = (&pw.dw, &pw.wscore) {
+                let k = ((oq.hcp_frac * x.cols as f64).ceil() as usize).max(1);
+                for i in 0..x.rows {
+                    let xr = x.row(i);
+                    let xur = xu.row(i);
+                    let scores: Vec<f64> = (0..x.cols)
+                        .map(|j| (xr[j] - xur[j]).abs() as f64 + wscore[j])
+                        .collect();
+                    let idx = hcp::top_k(&scores, k);
+                    for &j in &idx {
+                        let dxj = xr[j] - xur[j];
+                        let xuj = xur[j];
+                        let wur = pw.wu.row(j);
+                        let dwr = dw.row(j);
+                        let yr = y.row_mut(i);
+                        for c in 0..yr.len() {
+                            // dx·Wq + Xq·dw over the hot channels (O2-B)
+                            yr[c] += dxj * wur[c] + xuj * dwr[c];
+                        }
+                    }
+                }
+            }
+            y
+        }
+    }
+}
+
+/// One-shot convenience wrapper (tests / non-hot callers): prepare the
+/// weight and apply it. The serve engine prepares once and calls
+/// `infer_linear_prepared` directly.
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn infer_linear(x: &Mat, w: &Mat, oq: &OpQuant) -> Mat {
+    infer_linear_prepared(x, &prepare_weight(w, oq), oq)
+}
+
 /// Wgrad with the backward recipe: optional RHT over the token
 /// (contraction) dim, then NVFP4 fake-quant of both operands — SR on the
 /// gradient side when the recipe asks for it.
@@ -321,7 +434,7 @@ fn linear_bwd(c: &LinOut, dy: &Mat, rng: &mut Rng) -> (Mat, Mat) {
 
 const RMS_EPS: f64 = 1e-6;
 
-fn rmsnorm(x: &Mat, gamma: &Mat) -> (Mat, Vec<f32>) {
+pub(crate) fn rmsnorm(x: &Mat, gamma: &Mat) -> (Mat, Vec<f32>) {
     let mut out = Mat::zeros(x.rows, x.cols);
     let mut rs = Vec::with_capacity(x.rows);
     let g = gamma.row(0).to_vec();
@@ -1155,6 +1268,39 @@ mod tests {
         let (loss, acc) = eval_step(&cfg, &rec, &params, &toks, &tgts);
         assert!(loss.is_finite());
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn infer_linear_is_batch_invariant() {
+        // the serve contract: row i of a batched call is bit-identical to
+        // a batch-of-one call with that row, for every forward mode
+        let mut rng = Rng::new(11);
+        let x = Mat::from_fn(8, 32, |_, _| rng.normal());
+        let w = Mat::from_fn(32, 32, |_, _| rng.normal() * 0.3);
+        for oq in [
+            crate::runtime::native::recipe::BF16_OP,
+            OpQuant {
+                mode: QuantKind::Fp8,
+                scaling_2d: false,
+                sr: false,
+                rht: false,
+                hcp_frac: 0.0,
+            },
+            OpQuant {
+                mode: QuantKind::Nvfp4,
+                scaling_2d: true,
+                sr: true,
+                rht: true,
+                hcp_frac: 0.0909,
+            },
+        ] {
+            let full = infer_linear(&x, &w, &oq);
+            for i in 0..x.rows {
+                let one = Mat::from_vec(1, x.cols, x.row(i).to_vec());
+                let y1 = infer_linear(&one, &w, &oq);
+                assert_eq!(full.row(i), y1.row(0), "row {i} mode {:?}", oq.mode);
+            }
+        }
     }
 
     #[test]

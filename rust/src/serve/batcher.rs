@@ -1,0 +1,344 @@
+//! Request batching: coalesce concurrent generation requests into one
+//! decode batch and fan the streamed tokens back out per request.
+//!
+//! A single engine thread owns the model. Incoming requests queue on a
+//! channel; the loop admits up to `max_batch` of them (waiting at most
+//! `max_wait` to fill a fresh batch — the WIND-style latency/throughput
+//! knob), prefills each prompt, then steps all active sessions together.
+//! Sessions join and leave the batch independently (continuous batching),
+//! so one long generation never blocks short ones behind it. Because the
+//! engine's forward path is batch-invariant, coalescing is purely a
+//! throughput optimization — it never changes any request's output.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::serve::engine::{Engine, Session};
+use crate::util::prng::Rng;
+
+/// One queued generation request.
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temp: f32,
+    /// streamed token pieces + terminal event go back through here
+    pub reply: Sender<TokenEvent>,
+}
+
+/// Events fanned back to the submitting connection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokenEvent {
+    /// one decoded token piece as raw bytes, in generation order. Bytes,
+    /// not String: a multi-byte character split across byte-level tokens
+    /// must reach the client intact, and UTF-8-lossy conversion is only
+    /// valid once over the fully assembled sequence.
+    Token(Vec<u8>),
+    Done {
+        n_tokens: usize,
+        gen_ms: f64,
+    },
+    Error(String),
+}
+
+/// Lock-free serve counters (read by the STATS command).
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    /// decode steps that ran with more than one session
+    pub batched_steps: AtomicU64,
+    /// Σ batch size over decode steps (mean = batch_sum / decode_steps)
+    pub batch_sum: AtomicU64,
+    pub max_batch: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.batch_sum.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// The one-line STATS payload.
+    pub fn snapshot_line(&self) -> String {
+        format!(
+            "requests={} tokens={} decode_steps={} batched_steps={} \
+             mean_batch={:.3} max_batch={}",
+            self.requests.load(Ordering::Relaxed),
+            self.tokens.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.batched_steps.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.max_batch.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One in-flight generation inside the engine loop.
+struct Active {
+    sess: Session,
+    req: GenRequest,
+    last: u32,
+    produced: usize,
+    rng: Rng,
+    t0: Instant,
+}
+
+/// The engine thread + its submission handle.
+pub struct RequestBatcher {
+    tx: Sender<GenRequest>,
+    pub stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RequestBatcher {
+    /// Spawn the engine loop. `max_wait` bounds how long a fresh batch
+    /// waits for companions before decoding starts; `seed` drives
+    /// temperature sampling (greedy requests ignore it).
+    pub fn spawn(
+        engine: Engine,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+    ) -> RequestBatcher {
+        let (tx, rx) = channel::<GenRequest>();
+        let stats = Arc::new(ServeStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (stats2, shutdown2) = (stats.clone(), shutdown.clone());
+        let handle = std::thread::spawn(move || {
+            engine_loop(engine, rx, stats2, shutdown2, max_batch.max(1), max_wait, seed);
+        });
+        RequestBatcher { tx, stats, shutdown, handle: Some(handle) }
+    }
+
+    /// A cloneable submission handle for connection threads.
+    pub fn submitter(&self) -> Sender<GenRequest> {
+        self.tx.clone()
+    }
+
+    /// Signal shutdown and wait for in-flight generations to finish.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // drop our sender so the loop's queue can disconnect
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn engine_loop(
+    engine: Engine,
+    rx: Receiver<GenRequest>,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    max_batch: usize,
+    max_wait: Duration,
+    seed: u64,
+) {
+    let mut active: Vec<Active> = Vec::new();
+    let mut next_id: u64 = 0;
+
+    let admit = |active: &mut Vec<Active>, req: GenRequest, next_id: &mut u64| {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let toks = engine.tokenizer.encode(&req.prompt);
+        if toks.is_empty() {
+            let _ = req.reply.send(TokenEvent::Error("empty prompt".into()));
+            return;
+        }
+        let t0 = Instant::now();
+        let mut sess = engine.new_session();
+        let logits = engine.prefill(&mut sess, &toks);
+        let mut rng = Rng::new(seed ^ 0x5E2E).fold_in(*next_id);
+        *next_id += 1;
+        let first = engine.sample(&logits, req.temp, &mut rng);
+        let mut a = Active { sess, req, last: first, produced: 0, rng, t0 };
+        emit_token(&engine, &stats, &mut a);
+        if a.produced < a.req.max_tokens {
+            active.push(a);
+        } else {
+            finish(a);
+        }
+    };
+
+    loop {
+        // ---- admission ----
+        if shutdown.load(Ordering::SeqCst) {
+            // drain the queue: reject newcomers, finish what is active
+            while let Ok(req) = rx.try_recv() {
+                let _ = req
+                    .reply
+                    .send(TokenEvent::Error("server shutting down".into()));
+            }
+            if active.is_empty() {
+                break;
+            }
+        } else if active.is_empty() {
+            // idle: block (with a poll tick so shutdown is noticed), then
+            // hold the batch open for up to max_wait to coalesce arrivals
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(req) => {
+                    admit(&mut active, req, &mut next_id);
+                    let deadline = Instant::now() + max_wait;
+                    while active.len() < max_batch {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Ok(req) => admit(&mut active, req, &mut next_id),
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    if active.is_empty() {
+                        break;
+                    }
+                }
+            }
+        } else {
+            // continuous batching: top up free slots without waiting
+            while active.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(req) => admit(&mut active, req, &mut next_id),
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+                        break
+                    }
+                }
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // ---- one decode step over the whole batch ----
+        let n = active.len() as u64;
+        stats.decode_steps.fetch_add(1, Ordering::Relaxed);
+        stats.batch_sum.fetch_add(n, Ordering::Relaxed);
+        stats.max_batch.fetch_max(n, Ordering::Relaxed);
+        if n > 1 {
+            stats.batched_steps.fetch_add(1, Ordering::Relaxed);
+        }
+        let tokens: Vec<u32> = active.iter().map(|a| a.last).collect();
+        let logits = {
+            let mut refs: Vec<&mut Session> =
+                active.iter_mut().map(|a| &mut a.sess).collect();
+            engine.decode_step(&mut refs, &tokens)
+        };
+        for (i, a) in active.iter_mut().enumerate() {
+            a.last = engine.sample(logits.row(i), a.req.temp, &mut a.rng);
+            emit_token(&engine, &stats, a);
+        }
+        // retire finished sessions (swap_remove without advancing i)
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].produced >= active[i].req.max_tokens {
+                let a = active.swap_remove(i);
+                finish(a);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Send `a.last` to the requester (drops silently if it hung up).
+fn emit_token(engine: &Engine, stats: &Arc<ServeStats>, a: &mut Active) {
+    let piece = engine.tokenizer.decode_bytes(&[a.last]);
+    a.produced += 1;
+    stats.tokens.fetch_add(1, Ordering::Relaxed);
+    if a.req.reply.send(TokenEvent::Token(piece)).is_err() {
+        // requester gone: cut the generation short
+        a.produced = a.req.max_tokens;
+    }
+}
+
+fn finish(a: Active) {
+    let _ = a.req.reply.send(TokenEvent::Done {
+        n_tokens: a.produced,
+        gen_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::Tokenizer;
+    use crate::runtime::native::model::{init_params, model_cfg};
+    use crate::runtime::native::recipe::recipe;
+
+    fn test_engine() -> Engine {
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let params = init_params(&cfg, 3);
+        Engine::from_parts(cfg, recipe("chon").unwrap(), Tokenizer::byte_level(), &params)
+    }
+
+    fn collect(rx: &Receiver<TokenEvent>) -> (Vec<u8>, usize) {
+        let mut bytes = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("event") {
+                TokenEvent::Token(p) => bytes.extend(p),
+                TokenEvent::Done { n_tokens, .. } => return (bytes, n_tokens),
+                TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let b = RequestBatcher::spawn(
+            test_engine(),
+            4,
+            Duration::from_micros(500),
+            0,
+        );
+        let (tx, rx) = channel();
+        b.submitter()
+            .send(GenRequest {
+                prompt: "hello".into(),
+                max_tokens: 8,
+                temp: 0.0,
+                reply: tx,
+            })
+            .unwrap();
+        let (bytes, n) = collect(&rx);
+        assert_eq!(n, 8);
+        assert_eq!(bytes.len(), 8, "byte-level tokens are one byte each");
+        b.shutdown();
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected() {
+        let b = RequestBatcher::spawn(
+            test_engine(),
+            4,
+            Duration::from_micros(500),
+            0,
+        );
+        let (tx, rx) = channel();
+        b.submitter()
+            .send(GenRequest {
+                prompt: String::new(),
+                max_tokens: 4,
+                temp: 0.0,
+                reply: tx,
+            })
+            .unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            TokenEvent::Error(e) => assert!(e.contains("empty"), "{e}"),
+            other => panic!("expected error, got {other:?}"),
+        }
+        b.shutdown();
+    }
+}

@@ -1,0 +1,261 @@
+//! `chon client` — a protocol client doubling as a load generator.
+//!
+//! One-shot mode sends a single GEN and prints the generation; load mode
+//! spreads `requests` across `concurrency` threads (one connection per
+//! thread, requests pipelined sequentially on it) and reports throughput
+//! plus latency percentiles, then the server's own batching stats.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::protocol;
+
+/// Load-generator knobs (CLI flags of `chon client`).
+#[derive(Clone, Debug)]
+pub struct ClientOpts {
+    pub host: String,
+    pub port: u16,
+    pub requests: usize,
+    pub concurrency: usize,
+    pub max_tokens: usize,
+    pub temp: f32,
+    pub prompt: String,
+}
+
+impl Default for ClientOpts {
+    fn default() -> Self {
+        ClientOpts {
+            host: "127.0.0.1".into(),
+            port: 7411,
+            requests: 0,
+            concurrency: 4,
+            max_tokens: 32,
+            temp: 0.0,
+            prompt: "the ".into(),
+        }
+    }
+}
+
+fn connect(host: &str, port: u16) -> Result<TcpStream> {
+    let addr = format!("{host}:{port}");
+    let s = TcpStream::connect(&addr).with_context(|| format!("connecting {addr}"))?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    Ok(s)
+}
+
+/// Run one GEN on an open connection; returns (text, n_tokens, latency_ms).
+pub fn generate_on(
+    stream: &mut TcpStream,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let t0 = Instant::now();
+    stream.write_all(protocol::format_gen(max_tokens, temp, prompt).as_bytes())?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // assemble raw bytes; UTF-8-lossy conversion happens once at the end
+    // so characters split across streamed tokens survive
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection mid-generation");
+        }
+        let l = line.trim_end_matches(['\r', '\n']);
+        if let Some(piece) = l.strip_prefix("TOK ") {
+            bytes.extend(
+                protocol::unescape_bytes(piece).map_err(|e| anyhow::anyhow!("{e}"))?,
+            );
+        } else if let Some(done) = l.strip_prefix("DONE ") {
+            // strict: a garbled terminator is a protocol error, not a
+            // zero-token success
+            let mut it = done.split_whitespace();
+            let n: usize = it
+                .next()
+                .context("DONE missing token count")?
+                .parse()
+                .with_context(|| format!("bad DONE line {l:?}"))?;
+            let _ms: f64 = it
+                .next()
+                .context("DONE missing gen_ms")?
+                .parse()
+                .with_context(|| format!("bad DONE line {l:?}"))?;
+            let text = String::from_utf8_lossy(&bytes).into_owned();
+            return Ok((text, n, t0.elapsed().as_secs_f64() * 1e3));
+        } else if let Some(err) = l.strip_prefix("ERR ") {
+            bail!("server error: {}", protocol::unescape(err).unwrap_or_else(|_| err.into()));
+        } else {
+            bail!("unexpected response line {l:?}");
+        }
+    }
+}
+
+/// One-shot generation over a fresh connection.
+pub fn generate_once(
+    host: &str,
+    port: u16,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let mut s = connect(host, port)?;
+    generate_on(&mut s, prompt, max_tokens, temp)
+}
+
+/// Fetch the server's STATS snapshot line.
+pub fn fetch_stats(host: &str, port: u16) -> Result<String> {
+    let mut s = connect(host, port)?;
+    s.write_all(b"STATS\n")?;
+    let mut reader = BufReader::new(s.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let l = line.trim_end_matches(['\r', '\n']);
+    match l.strip_prefix("STATS ") {
+        Some(rest) => Ok(rest.to_string()),
+        None => bail!("unexpected STATS response {l:?}"),
+    }
+}
+
+/// Ask the server to drain and stop.
+pub fn send_shutdown(host: &str, port: u16) -> Result<()> {
+    let mut s = connect(host, port)?;
+    s.write_all(b"SHUTDOWN\n")?;
+    let mut reader = BufReader::new(s.try_clone()?);
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    Ok(())
+}
+
+/// Aggregate results of a load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// per-request latency in ms, sorted ascending
+    pub latencies_ms: Vec<f64>,
+    pub tokens: usize,
+    pub failures: usize,
+    pub empty_responses: usize,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.latencies_ms.len();
+        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+        self.latencies_ms[idx]
+    }
+
+    pub fn requests_ok(&self) -> usize {
+        self.latencies_ms.len()
+    }
+}
+
+/// Fire `opts.requests` GENs from `opts.concurrency` threads.
+pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
+    if opts.requests == 0 {
+        bail!("load mode needs --requests > 0");
+    }
+    let c = opts.concurrency.clamp(1, opts.requests);
+    let t0 = Instant::now();
+    let mut results: Vec<Result<Vec<(usize, f64)>>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for ti in 0..c {
+            // spread the remainder over the first threads
+            let share = opts.requests / c + usize::from(ti < opts.requests % c);
+            let opts = opts.clone();
+            handles.push(s.spawn(move || -> Result<Vec<(usize, f64)>> {
+                let mut stream = connect(&opts.host, opts.port)?;
+                let mut out = Vec::with_capacity(share);
+                for ri in 0..share {
+                    // vary prompts a little so batches are not degenerate
+                    let prompt = format!("{}{ti} {ri} ", opts.prompt);
+                    let (text, n, ms) =
+                        generate_on(&mut stream, &prompt, opts.max_tokens, opts.temp)?;
+                    out.push((if text.is_empty() { 0 } else { n.max(1) }, ms));
+                }
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("load thread panicked"));
+        }
+    });
+
+    let mut report = LoadReport { wall_s: t0.elapsed().as_secs_f64(), ..Default::default() };
+    for r in results {
+        match r {
+            Ok(list) => {
+                for (n, ms) in list {
+                    if n == 0 {
+                        report.empty_responses += 1;
+                    } else {
+                        report.tokens += n;
+                        report.latencies_ms.push(ms);
+                    }
+                }
+            }
+            Err(e) => {
+                crate::warn!("load thread failed: {e:#}");
+                report.failures += 1;
+            }
+        }
+    }
+    report.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(report)
+}
+
+/// Human-readable load summary (+ the server's own view of batching).
+pub fn print_report(opts: &ClientOpts, report: &LoadReport) {
+    println!(
+        "requests {} ok / {} empty / {} failed threads  wall {:.2}s",
+        report.requests_ok(),
+        report.empty_responses,
+        report.failures,
+        report.wall_s
+    );
+    if report.requests_ok() > 0 {
+        println!(
+            "throughput {:.1} req/s  {:.0} tok/s",
+            report.requests_ok() as f64 / report.wall_s,
+            report.tokens as f64 / report.wall_s
+        );
+        println!(
+            "latency ms  p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
+            report.percentile(0.50),
+            report.percentile(0.90),
+            report.percentile(0.99),
+            report.latencies_ms.last().copied().unwrap_or(f64::NAN)
+        );
+    }
+    match fetch_stats(&opts.host, opts.port) {
+        Ok(stats) => println!("server stats: {stats}"),
+        Err(e) => println!("server stats unavailable: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_index_correctly() {
+        let r = LoadReport {
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0],
+            ..Default::default()
+        };
+        assert_eq!(r.percentile(0.5), 5.0);
+        assert_eq!(r.percentile(0.9), 9.0);
+        assert_eq!(r.percentile(0.99), 10.0);
+        assert_eq!(r.percentile(1.0), 10.0);
+        let empty = LoadReport::default();
+        assert!(empty.percentile(0.5).is_nan());
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving layer: checkpoint-backed inference with request batching
+//! — the first production-shaped workload on top of the native backend.
+//!
+//! * `engine` — decode-only forward path over a loaded checkpoint:
+//!   per-session recurrent state (GLA) / KV cache (SA), greedy +
+//!   temperature sampling, quant recipe applied batch-invariantly.
+//! * `batcher` — coalesces concurrent requests into decode batches
+//!   (max-batch-size + max-wait knobs) and fans tokens back out.
+//! * `protocol` — the line-delimited TCP wire format.
+//! * `server` — `std::net` listener + worker-thread pool + graceful
+//!   shutdown (`chon serve`).
+//! * `client` — protocol client / load generator with latency
+//!   percentiles (`chon client`).
+
+pub mod batcher;
+pub mod client;
+pub mod engine;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
+pub use client::{ClientOpts, LoadReport};
+pub use engine::{Engine, Session};
+pub use server::{ServeOpts, Server};

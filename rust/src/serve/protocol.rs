@@ -1,0 +1,243 @@
+//! The line-delimited serve wire protocol.
+//!
+//! Requests (one line each, LF-terminated):
+//!
+//! ```text
+//! GEN <max_tokens> <temp>\t<escaped prompt>   generate; streams tokens back
+//! STATS                                       one-line server statistics
+//! PING                                        liveness probe
+//! SHUTDOWN                                    drain + stop the server
+//! ```
+//!
+//! Responses:
+//!
+//! ```text
+//! TOK <escaped piece>            one decoded token (streamed, in order)
+//! DONE <n_tokens> <gen_ms>       generation finished
+//! STATS <k>=<v> ...              statistics snapshot
+//! PONG | BYE                     ping / shutdown acks
+//! ERR <message>                  request-level failure
+//! ```
+//!
+//! Prompt and token text travel escaped so the protocol stays strictly
+//! line-delimited: `\\`, `\n`, `\r`, `\t` plus `\xNN` for every other
+//! byte outside printable ASCII. Escaped text is pure ASCII; unescaping
+//! restores the exact original byte sequence.
+
+/// Hard caps enforced server-side (the tiny models trained at seq 32
+/// have no use for book-length contexts; the caps bound per-session
+/// KV-state growth).
+pub const MAX_PROMPT_BYTES: usize = 4096;
+pub const MAX_GEN_TOKENS: usize = 256;
+pub const MAX_TEMP: f32 = 10.0;
+
+/// Escape arbitrary bytes into a single-line ASCII token. Byte-exact:
+/// `unescape_bytes(escape_bytes(b)) == b` for any input, so streamed
+/// token pieces survive even when a multi-byte character is split
+/// across tokens.
+pub fn escape_bytes(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len());
+    for &b in bytes {
+        match b {
+            b'\\' => out.push_str("\\\\"),
+            b'\n' => out.push_str("\\n"),
+            b'\r' => out.push_str("\\r"),
+            b'\t' => out.push_str("\\t"),
+            0x20..=0x7e => out.push(b as char),
+            _ => out.push_str(&format!("\\x{b:02x}")),
+        }
+    }
+    out
+}
+
+/// Escape arbitrary text into a single-line ASCII token.
+pub fn escape(s: &str) -> String {
+    escape_bytes(s.as_bytes())
+}
+
+/// Invert `escape_bytes`. Unknown escapes are an error (a garbled line
+/// must not silently decode to something else).
+pub fn unescape_bytes(s: &str) -> Result<Vec<u8>, String> {
+    let b = s.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'\\' {
+            out.push(b[i]);
+            i += 1;
+            continue;
+        }
+        let Some(&e) = b.get(i + 1) else {
+            return Err("dangling backslash".into());
+        };
+        match e {
+            b'\\' => out.push(b'\\'),
+            b'n' => out.push(b'\n'),
+            b'r' => out.push(b'\r'),
+            b't' => out.push(b'\t'),
+            b'x' => {
+                let hex = b
+                    .get(i + 2..i + 4)
+                    .and_then(|h| std::str::from_utf8(h).ok())
+                    .ok_or("truncated \\x escape")?;
+                let v = u8::from_str_radix(hex, 16)
+                    .map_err(|_| format!("bad \\x escape {hex:?}"))?;
+                out.push(v);
+                i += 2;
+            }
+            other => return Err(format!("unknown escape \\{}", other as char)),
+        }
+        i += 2;
+    }
+    Ok(out)
+}
+
+/// Invert `escape` for text payloads (prompts), which must be UTF-8.
+pub fn unescape(s: &str) -> Result<String, String> {
+    String::from_utf8(unescape_bytes(s)?)
+        .map_err(|_| "unescaped text is not UTF-8".into())
+}
+
+/// One parsed client request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Gen { max_tokens: usize, temp: f32, prompt: String },
+    Stats,
+    Ping,
+    Shutdown,
+}
+
+/// Parse one request line (without the trailing newline).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let line = line.trim_end_matches(['\r', '\n']);
+    match line {
+        "STATS" => return Ok(Request::Stats),
+        "PING" => return Ok(Request::Ping),
+        "SHUTDOWN" => return Ok(Request::Shutdown),
+        _ => {}
+    }
+    let Some(rest) = line.strip_prefix("GEN ") else {
+        return Err(format!(
+            "unknown command {:?} (expected GEN/STATS/PING/SHUTDOWN)",
+            line.split_whitespace().next().unwrap_or("")
+        ));
+    };
+    let (head, prompt_esc) = rest
+        .split_once('\t')
+        .ok_or("GEN needs a tab between the header and the prompt")?;
+    let mut it = head.split_whitespace();
+    let max_tokens: usize = it
+        .next()
+        .ok_or("GEN missing <max_tokens>")?
+        .parse()
+        .map_err(|e| format!("bad max_tokens: {e}"))?;
+    let temp: f32 = it
+        .next()
+        .ok_or("GEN missing <temp>")?
+        .parse()
+        .map_err(|e| format!("bad temp: {e}"))?;
+    if it.next().is_some() {
+        return Err("GEN header has trailing fields".into());
+    }
+    if max_tokens == 0 || max_tokens > MAX_GEN_TOKENS {
+        return Err(format!("max_tokens must be in 1..={MAX_GEN_TOKENS}"));
+    }
+    if !(0.0..=MAX_TEMP).contains(&temp) {
+        return Err(format!("temp must be in 0..={MAX_TEMP}"));
+    }
+    let prompt = unescape(prompt_esc)?;
+    if prompt.len() > MAX_PROMPT_BYTES {
+        return Err(format!(
+            "prompt is {} bytes (limit {MAX_PROMPT_BYTES})",
+            prompt.len()
+        ));
+    }
+    Ok(Request::Gen { max_tokens, temp, prompt })
+}
+
+/// Render a GEN request line (client side).
+pub fn format_gen(max_tokens: usize, temp: f32, prompt: &str) -> String {
+    format!("GEN {max_tokens} {temp}\t{}\n", escape(prompt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn escape_roundtrips_arbitrary_text() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let n = rng.below(64);
+            let s: String = (0..n)
+                .map(|_| {
+                    char::from_u32(rng.below(0x2500) as u32).unwrap_or('\t')
+                })
+                .collect();
+            let e = escape(&s);
+            assert!(e.bytes().all(|b| (0x20..=0x7e).contains(&b)), "{e:?}");
+            assert!(!e.contains('\n'));
+            assert_eq!(unescape(&e).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn byte_escape_roundtrips_split_utf8() {
+        // a multi-byte char split across two token pieces must survive:
+        // é = 0xC3 0xA9 streamed as two single-byte pieces
+        let parts: Vec<Vec<u8>> = vec![vec![0xC3], vec![0xA9]];
+        let mut reassembled = Vec::new();
+        for p in &parts {
+            let line = escape_bytes(p);
+            assert!(line.bytes().all(|b| (0x20..=0x7e).contains(&b)));
+            reassembled.extend(unescape_bytes(&line).unwrap());
+        }
+        assert_eq!(String::from_utf8(reassembled).unwrap(), "é");
+        // and arbitrary non-UTF-8 bytes round-trip exactly
+        let junk = vec![0xFF, 0x00, 0x80, b'\\', b'\n'];
+        assert_eq!(unescape_bytes(&escape_bytes(&junk)).unwrap(), junk);
+    }
+
+    #[test]
+    fn gen_line_roundtrips() {
+        let line = format_gen(16, 0.5, "hello\tworld\nüber");
+        let req = parse_request(line.trim_end()).unwrap();
+        assert_eq!(
+            req,
+            Request::Gen {
+                max_tokens: 16,
+                temp: 0.5,
+                prompt: "hello\tworld\nüber".into()
+            }
+        );
+    }
+
+    #[test]
+    fn control_commands_parse() {
+        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("PING\r\n").unwrap(), Request::Ping);
+        assert_eq!(parse_request("SHUTDOWN").unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        for bad in [
+            "",
+            "NOPE x",
+            "GEN",
+            "GEN 5",
+            "GEN 5 0.0", // no tab
+            "GEN 0 0.0\thi",
+            "GEN 99999 0.0\thi",
+            "GEN 5 -1\thi",
+            "GEN 5 99\thi",
+            "GEN 5 0.0 extra\thi",
+            "GEN 5 0.0\tbad \\q escape",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} should fail");
+        }
+        let huge = format!("GEN 5 0.0\t{}", "a".repeat(MAX_PROMPT_BYTES + 1));
+        assert!(parse_request(&huge).is_err());
+    }
+}

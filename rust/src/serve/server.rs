@@ -1,0 +1,243 @@
+//! The TCP front end: a `std::net` listener, a worker-thread pool for
+//! connection handling, and graceful shutdown.
+//!
+//! Connections speak the line protocol of `serve::protocol`. Generation
+//! requests are forwarded to the `RequestBatcher`; token events stream
+//! back as `TOK` lines as they are produced, so a slow consumer only
+//! delays itself. `SHUTDOWN` (from any connection) stops accepting, lets
+//! in-flight generations finish, joins the pool and prints final stats.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::info;
+use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
+use crate::serve::engine::Engine;
+use crate::serve::protocol::{self, Request};
+
+/// Server knobs (CLI flags of `chon serve`).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub host: String,
+    /// 0 = pick an ephemeral port (tests); `port()` reports the real one
+    pub port: u16,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    /// connection-handler threads
+    pub workers: usize,
+    /// temperature-sampling seed
+    pub seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            host: "127.0.0.1".into(),
+            port: 7411,
+            max_batch: 8,
+            max_wait_us: 2000,
+            workers: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// A bound server, ready to `run`.
+pub struct Server {
+    listener: TcpListener,
+    batcher: RequestBatcher,
+    shutdown: Arc<AtomicBool>,
+    workers: usize,
+}
+
+impl Server {
+    /// Bind the listener and spawn the engine thread.
+    pub fn bind(engine: Engine, opts: &ServeOpts) -> Result<Server> {
+        let addr = format!("{}:{}", opts.host, opts.port);
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+        let batcher = RequestBatcher::spawn(
+            engine,
+            opts.max_batch,
+            Duration::from_micros(opts.max_wait_us),
+            opts.seed,
+        );
+        Ok(Server {
+            listener,
+            batcher,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            workers: opts.workers.max(1),
+        })
+    }
+
+    /// The actually-bound port (differs from the request when asking for 0).
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// A handle that makes `run` return (used by tests and signal glue).
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until a `SHUTDOWN` command (or the shutdown flag) arrives.
+    /// Returns the final stats snapshot line.
+    pub fn run(self) -> Result<String> {
+        self.listener.set_nonblocking(true)?;
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let mut pool = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let rx = conn_rx.clone();
+            let submit = self.batcher.submitter();
+            let stats = self.batcher.stats.clone();
+            let stop = self.shutdown.clone();
+            pool.push(std::thread::spawn(move || loop {
+                let stream = {
+                    let guard = rx.lock().expect("conn queue poisoned");
+                    guard.recv()
+                };
+                match stream {
+                    Ok(s) => handle_conn(s, &submit, &stats, &stop),
+                    Err(_) => break, // accept loop gone: drain done
+                }
+            }));
+        }
+
+        info!("serving on port {} ({} workers)", self.port(), self.workers);
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = conn_tx.send(stream);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    info!("accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+
+        // stop feeding the pool, let handlers finish, then drain the engine
+        drop(conn_tx);
+        for h in pool {
+            let _ = h.join();
+        }
+        let line = self.batcher.stats.snapshot_line();
+        self.batcher.shutdown();
+        info!("shutdown complete: {line}");
+        Ok(line)
+    }
+}
+
+/// Serve one connection until EOF, error, or shutdown.
+fn handle_conn(
+    stream: TcpStream,
+    submit: &Sender<GenRequest>,
+    stats: &Arc<ServeStats>,
+    stop: &Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    // poll tick: idle readers notice shutdown instead of pinning the pool
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    // a pooled worker is pinned for the connection's lifetime, so idle
+    // connections are evicted after this many consecutive timeout ticks
+    // (~60 s) instead of starving the pool forever
+    const IDLE_TICKS: u32 = 300;
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut idle_ticks = 0u32;
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => idle_ticks = 0,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                // timeout mid-line: bytes read so far stay in `line`;
+                // keep accumulating unless shutting down or idled out
+                idle_ticks += 1;
+                if stop.load(Ordering::SeqCst) || idle_ticks >= IDLE_TICKS {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        let parsed = protocol::parse_request(&line);
+        line.clear();
+        let reply = match parsed {
+            Err(e) => format!("ERR {}\n", protocol::escape(&e)),
+            Ok(Request::Ping) => "PONG\n".into(),
+            Ok(Request::Stats) => format!("STATS {}\n", stats.snapshot_line()),
+            Ok(Request::Shutdown) => {
+                let _ = writer.write_all(b"BYE\n");
+                stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            Ok(Request::Gen { max_tokens, temp, prompt }) => {
+                stream_generation(&mut writer, submit, max_tokens, temp, prompt);
+                continue;
+            }
+        };
+        if writer.write_all(reply.as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Submit one GEN request and stream its events back.
+fn stream_generation(
+    writer: &mut TcpStream,
+    submit: &Sender<GenRequest>,
+    max_tokens: usize,
+    temp: f32,
+    prompt: String,
+) {
+    let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
+    if submit
+        .send(GenRequest { prompt, max_tokens, temp, reply: tx })
+        .is_err()
+    {
+        let _ = writer.write_all(b"ERR server stopped\n");
+        return;
+    }
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(TokenEvent::Token(piece)) => {
+                let line = format!("TOK {}\n", protocol::escape_bytes(&piece));
+                if writer.write_all(line.as_bytes()).is_err() {
+                    return; // client gone; engine notices on next send
+                }
+            }
+            Ok(TokenEvent::Done { n_tokens, gen_ms }) => {
+                let _ = writer
+                    .write_all(format!("DONE {n_tokens} {gen_ms:.3}\n").as_bytes());
+                return;
+            }
+            Ok(TokenEvent::Error(e)) => {
+                let _ = writer
+                    .write_all(format!("ERR {}\n", protocol::escape(&e)).as_bytes());
+                return;
+            }
+            Err(_) => {
+                let _ = writer.write_all(b"ERR generation timed out\n");
+                return;
+            }
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! logging. These replace crates absent from the offline vendor set
 //! (DESIGN.md §Substitutions).
 
+pub mod json;
 pub mod logger;
 pub mod ndarray;
 pub mod prng;

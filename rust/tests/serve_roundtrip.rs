@@ -1,0 +1,199 @@
+//! End-to-end train → checkpoint → serve tests: a short native training
+//! run writes a checkpoint dir, `Engine::load` validates it, a `Server`
+//! answers generation requests over loopback TCP, and greedy outputs are
+//! deterministic — independent of how requests are batched.
+
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::serve::{client, Engine, ServeOpts, Server};
+
+fn native_cfg(model: &str, recipe: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = model.into();
+    cfg.recipe = recipe.into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = 7;
+    cfg.out_dir = std::env::temp_dir().join("chon_serve_it_runs");
+    cfg
+}
+
+/// Train `steps` steps and write a checkpoint dir under a per-test root.
+fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("chon_serve_ckpt_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "chon")).unwrap();
+    tr.train(steps).unwrap();
+    tr.save_checkpoint_to(&root).unwrap()
+}
+
+fn start_server(ckpt: &PathBuf, max_batch: usize) -> (u16, JoinHandle<String>) {
+    let engine = Engine::load(ckpt).expect("engine load");
+    let opts = ServeOpts {
+        host: "127.0.0.1".into(),
+        port: 0, // ephemeral
+        max_batch,
+        max_wait_us: 3000,
+        workers: 8,
+        seed: 0,
+    };
+    let server = Server::bind(engine, &opts).expect("bind");
+    let port = server.port();
+    let h = std::thread::spawn(move || server.run().expect("server run"));
+    (port, h)
+}
+
+#[test]
+fn train_serve_roundtrip_is_deterministic() {
+    let ckpt = train_checkpoint("roundtrip", 20);
+    let (port, h) = start_server(&ckpt, 4);
+
+    let (a, n, _) =
+        client::generate_once("127.0.0.1", port, "the quick ", 12, 0.0).unwrap();
+    let (b, _, _) =
+        client::generate_once("127.0.0.1", port, "the quick ", 12, 0.0).unwrap();
+    assert_eq!(n, 12);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "greedy generation must be deterministic");
+
+    // a third request on a different prompt also completes cleanly (a
+    // barely-trained byte model may legitimately converge to the same
+    // continuation, so only determinism is asserted above)
+    let (c, nc, _) =
+        client::generate_once("127.0.0.1", port, "zqx jw vv ", 12, 0.0).unwrap();
+    assert_eq!(nc, 12);
+    assert!(!c.is_empty());
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    let stats = h.join().unwrap();
+    assert!(stats.contains("requests=3"), "{stats}");
+}
+
+#[test]
+fn greedy_output_identical_at_batch_1_and_8() {
+    let ckpt = train_checkpoint("batch", 20);
+
+    // batch size 1: a dedicated server that can never coalesce
+    let (port1, h1) = start_server(&ckpt, 1);
+    let (solo, _, _) =
+        client::generate_once("127.0.0.1", port1, "hello worl", 16, 0.0).unwrap();
+    client::send_shutdown("127.0.0.1", port1).unwrap();
+    h1.join().unwrap();
+
+    // batch size 8: fire 8 identical requests concurrently
+    let (port8, h8) = start_server(&ckpt, 8);
+    let mut outs: Vec<String> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                s.spawn(move || {
+                    client::generate_once("127.0.0.1", port8, "hello worl", 16, 0.0)
+                        .unwrap()
+                        .0
+                })
+            })
+            .collect();
+        for hh in handles {
+            outs.push(hh.join().unwrap());
+        }
+    });
+    let stats = client::fetch_stats("127.0.0.1", port8).unwrap();
+    client::send_shutdown("127.0.0.1", port8).unwrap();
+    h8.join().unwrap();
+
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o, &solo, "batched output {i} diverged from batch-1 output");
+    }
+    assert!(stats.contains("requests=8"), "{stats}");
+}
+
+#[test]
+fn serve_works_without_optimizer_state() {
+    // an inference-only checkpoint copy (optim.ckpt deleted) still serves
+    let ckpt = train_checkpoint("nooptim", 6);
+    std::fs::remove_file(ckpt.join("optim.ckpt")).unwrap();
+    let eng = Engine::load(&ckpt).unwrap();
+    assert_eq!(eng.meta.step, 6);
+    // ... but a Trainer resume must fail loudly instead of resetting Adam
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "chon")).unwrap();
+    let err = tr.restore(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("optimizer state"), "{err}");
+}
+
+#[test]
+fn corrupt_and_mismatched_checkpoints_fail_loudly() {
+    let ckpt = train_checkpoint("corrupt", 4);
+
+    // sanity: pristine dir loads
+    Engine::load(&ckpt).unwrap();
+
+    // truncated params file
+    let params = ckpt.join("params.ckpt");
+    let bytes = std::fs::read(&params).unwrap();
+    std::fs::write(&params, &bytes[..bytes.len() / 3]).unwrap();
+    assert!(Engine::load(&ckpt).is_err(), "truncated params must not load");
+    std::fs::write(&params, &bytes).unwrap();
+
+    // metadata claiming a different model -> layout validation trips
+    // (tiny_sa has fewer parameter tensors than the stored tiny_gla set)
+    let meta = ckpt.join("meta.toml");
+    let text = std::fs::read_to_string(&meta).unwrap();
+    std::fs::write(&meta, text.replace("tiny_gla", "tiny_sa")).unwrap();
+    let err = Engine::load(&ckpt).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("parameter tensors"),
+        "wrong-model load must name the mismatch: {err:#}"
+    );
+    std::fs::write(&meta, &text).unwrap();
+
+    // metadata claiming an unknown recipe
+    std::fs::write(&meta, text.replace("recipe = \"chon\"", "recipe = \"fp2\"")).unwrap();
+    let err = Engine::load(&ckpt).unwrap_err();
+    assert!(format!("{err:#}").contains("recipe"), "{err:#}");
+    std::fs::write(&meta, &text).unwrap();
+
+    // garbage magic
+    std::fs::write(&params, b"NOTACKPTxxxxxxxx").unwrap();
+    assert!(Engine::load(&ckpt).is_err());
+    std::fs::write(&params, &bytes).unwrap();
+
+    // missing tokenizer
+    let tok = ckpt.join("tokenizer.txt");
+    let tok_text = std::fs::read_to_string(&tok).unwrap();
+    std::fs::remove_file(&tok).unwrap();
+    assert!(Engine::load(&ckpt).is_err(), "missing tokenizer must not load");
+    std::fs::write(&tok, tok_text).unwrap();
+
+    // after all restorations the dir loads again
+    Engine::load(&ckpt).unwrap();
+}
+
+#[test]
+fn trainer_restore_resumes_optimizer_and_step() {
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "chon")).unwrap();
+    tr.train(8).unwrap();
+    let root = std::env::temp_dir().join("chon_serve_ckpt_resume");
+    let _ = std::fs::remove_dir_all(&root);
+    let ckpt = tr.save_checkpoint_to(&root).unwrap();
+    let m_before = tr.state.m[1].f32_data.clone();
+
+    let mut tr2 = Trainer::new(native_cfg("tiny_gla", "chon")).unwrap();
+    tr2.restore(&ckpt).unwrap();
+    assert_eq!(tr2.state.step, 8);
+    assert_eq!(tr2.state.m[1].f32_data, m_before, "Adam m must survive");
+    assert_eq!(tr2.state.params[0].f32_data, tr.state.params[0].f32_data);
+
+    // recipe mismatch is an explicit error (not a silent reset)
+    let mut tr3 = Trainer::new(native_cfg("tiny_gla", "bf16")).unwrap();
+    let err = tr3.restore(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("recipe"), "{err}");
+    // ...while param-only transplants stay allowed across recipes
+    tr3.load_params(&ckpt).unwrap();
+    assert_eq!(tr3.state.params[0].f32_data, tr.state.params[0].f32_data);
+}
