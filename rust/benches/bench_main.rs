@@ -137,6 +137,17 @@ fn tab2() -> Result<()> {
     let rows = ablation::table2(&base, &recipes, steps, 10)?;
     ablation::print_table2(&rows);
     ablation::write_table2(&rows, &out_dir().join("table2.csv"))?;
+    let entries: Vec<BenchEntry> = rows
+        .iter()
+        .map(|r| {
+            BenchEntry::val(
+                format!("tab2/{}/final_loss", r.recipe),
+                r.final_loss as f64,
+                "loss",
+            )
+        })
+        .collect();
+    chon::bench::write_report(&out_dir().join("table2.json"), "tab2", &entries)?;
     Ok(())
 }
 
@@ -171,6 +182,21 @@ fn tab3() -> Result<()> {
         let rows = ablation::table3(&base, &ops, steps, 10)?;
         ablation::print_table3(&rows);
         ablation::write_table3(&rows, &out_dir().join(format!("table3_{model}.csv")))?;
+        let entries: Vec<BenchEntry> = rows
+            .iter()
+            .map(|r| {
+                BenchEntry::val(
+                    format!("tab3/{model}/{}/delta_loss", r.op),
+                    r.delta_loss,
+                    "loss",
+                )
+            })
+            .collect();
+        chon::bench::write_report(
+            &out_dir().join(format!("table3_{model}.json")),
+            "tab3",
+            &entries,
+        )?;
     }
     Ok(())
 }
@@ -194,6 +220,21 @@ fn tab1() -> Result<()> {
             r.recipe, r.cloze_acc, r.heldout_loss, r.heldout_acc
         )?;
     }
+    let mut entries = Vec::new();
+    for r in &rows {
+        entries.push(BenchEntry::val(
+            format!("tab1/{}/heldout_loss", r.recipe),
+            r.heldout_loss as f64,
+            "loss",
+        ));
+        // stored as error so every report value stays lower-is-better
+        entries.push(BenchEntry::val(
+            format!("tab1/{}/cloze_err", r.recipe),
+            1.0 - r.cloze_acc,
+            "err",
+        ));
+    }
+    chon::bench::write_report(&out_dir().join("table1.json"), "tab1", &entries)?;
     Ok(())
 }
 
@@ -212,6 +253,7 @@ fn tab5() -> Result<()> {
         csv,
         "k,n,fprop_ms,deq_ms,gthr_ms,resid_ms,cat_ms,sum_ms,fused_ms,prefuse_pct,postfuse_pct"
     )?;
+    let mut entries = Vec::new();
     for (kdim, n) in shapes {
         let mut rng = Rng::new(kdim as u64 ^ n as u64);
         let x = Mat::from_fn(m, kdim, |_, _| rng.normal());
@@ -269,9 +311,13 @@ fn tab5() -> Result<()> {
             "{kdim},{n},{:.3},{deq:.3},{gth:.3},{res:.3},{cat:.3},{sum:.3},{fused:.3},{pre_pct:.2},{post_pct:.2}",
             t_gemm.median_ms
         )?;
+        entries.push(BenchEntry::ms(format!("tab5/{kdim}x{n}/fprop"), t_gemm.median_ms));
+        entries.push(BenchEntry::ms(format!("tab5/{kdim}x{n}/prefuse"), sum));
+        entries.push(BenchEntry::ms(format!("tab5/{kdim}x{n}/fused"), fused));
     }
     println!("\n== Tab. 5: HCP kernel overhead (pre-fuse vs post-fuse) ==");
     table.print();
+    chon::bench::write_report(&out_dir().join("table5.json"), "tab5", &entries)?;
     Ok(())
 }
 
@@ -488,6 +534,7 @@ fn fig11() -> Result<()> {
     println!("\n== Fig. 11: HCP config MSE vs patched columns ==");
     let mut csv = std::fs::File::create(out_dir().join("fig11.csv"))?;
     writeln!(csv, "prior,hidden,config,k,mse,base_mse")?;
+    let mut entries = Vec::new();
     for prior in ["gaussian", "laplace"] {
         for hidden in [512usize, 1024] {
             let m = 64;
@@ -508,11 +555,17 @@ fn fig11() -> Result<()> {
                 let mse = apply(cfg, &q, &order[..k]).mse(&truth);
                 print!(" {name} {:.1}%", (mse / base - 1.0) * 100.0);
                 writeln!(csv, "{prior},{hidden},{name},{k},{mse:.6e},{base:.6e}")?;
+                entries.push(BenchEntry::val(
+                    format!("fig11/{prior}_{hidden}/{name}"),
+                    mse,
+                    "mse",
+                ));
             }
             println!();
         }
     }
     println!("(expected shape: O2-B lowest, W/A single-sided in between, all < baseline)");
+    chon::bench::write_report(&out_dir().join("fig11.json"), "fig11", &entries)?;
     Ok(())
 }
 
@@ -672,7 +725,7 @@ fn perf() -> Result<()> {
     let mut table = Table::new(&["kernel", "size", "median ms", "throughput"]);
     let mut entries: Vec<BenchEntry> = Vec::new();
     let mut record = |name: &str, median_ms: f64| {
-        entries.push(BenchEntry { name: name.into(), median_ms });
+        entries.push(BenchEntry::ms(name, median_ms));
     };
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..1 << 20).map(|_| rng.normal()).collect();
@@ -726,16 +779,58 @@ fn perf() -> Result<()> {
     let a = Mat::from_fn(512, 512, |_, _| rng.normal());
     let b = Mat::from_fn(512, 512, |_, _| rng.normal());
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let flops = 2.0 * 512f64.powi(3);
+
+    // packed microkernel, single lane
+    let t = time_auto(400.0, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    record("matmul_512", t.median_ms);
+    table.row(&[
+        "matmul (packed)".into(),
+        "512^3".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
+    ]);
+
+    // same kernel over row bands on the persistent pool
     let t = time_auto(400.0, || {
         std::hint::black_box(matmul_par(&a, &b, threads));
     });
     record("matmul_par_512", t.median_ms);
-    let flops = 2.0 * 512f64.powi(3);
     table.row(&[
         format!("matmul_par x{threads}"),
         "512^3".into(),
         format!("{:.2}", t.median_ms),
         format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
+    ]);
+
+    // blocked transpose (every backward GEMM transposes an operand)
+    let t = time_auto(300.0, || {
+        std::hint::black_box(mat.transpose());
+    });
+    record("transpose_1024", t.median_ms);
+    table.row(&[
+        "transpose".into(),
+        "1024x1024".into(),
+        format!("{:.2}", t.median_ms),
+        format!("{:.2} GB/s", 4.0 * mat.data.len() as f64 / t.median_ms / 1e6),
+    ]);
+
+    // pool dispatch overhead: 256 empty tasks through the worker pool —
+    // the per-call cost matmul_par no longer pays as thread spawns
+    let pool = chon::util::pool::global();
+    let t = time_auto(100.0, || {
+        pool.run(256, |i| {
+            std::hint::black_box(i);
+        });
+    });
+    record("pool_fanout_256", t.median_ms);
+    table.row(&[
+        format!("pool fanout x{}", pool.lanes()),
+        "256 tasks".into(),
+        format!("{:.3}", t.median_ms),
+        format!("{:.1} µs/task", t.median_ms * 1e3 / 256.0),
     ]);
 
     // end-to-end train-step timing on the selected backend
@@ -760,6 +855,25 @@ fn perf() -> Result<()> {
                 ),
             ]);
         }
+        // data-parallel scaling: same step, batch sharded over the pool
+        if bench_backend() == "native" {
+            let mut cfg = run_cfg("tiny_gla", "chon");
+            cfg.shards = 4;
+            let mut tr = Trainer::new(cfg)?;
+            tr.train(12)?;
+            let mut walls: Vec<f64> =
+                tr.log.records.iter().skip(1).map(|r| r.wall_ms).collect();
+            walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = walls[walls.len() / 2];
+            record("train_step_chon_shards4", med);
+            table.row(&[
+                "train step (chon, 4 shards)".into(),
+                "tiny_gla".into(),
+                format!("{med:.1}"),
+                format!("{:.0} tok/s", (tr.batch * tr.seq_len) as f64 / med * 1e3),
+            ]);
+        }
+
         // decode throughput of the serve engine (batch 1 vs max batch)
         for batch in [1usize, 8] {
             let cfg = chon::runtime::native::model_cfg("tiny_gla")?;

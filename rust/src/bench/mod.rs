@@ -94,14 +94,31 @@ impl Table {
 // Versioned JSON bench reports (the CI perf-regression contract)
 // ------------------------------------------------------------------
 
-/// Bumped on incompatible report layout changes.
-pub const REPORT_SCHEMA_VERSION: usize = 1;
+/// Bumped on incompatible report layout changes. v2 generalized entries
+/// from `{name, median_ms}` to `{name, value, unit}` so the table/figure
+/// benches (losses, percentages, MSEs) share the same versioned format
+/// as the timing microbenches.
+pub const REPORT_SCHEMA_VERSION: usize = 2;
 
-/// One benched hot path.
+/// One benched quantity. `value` is lower-is-better for every unit this
+/// crate emits (ms, loss, pct, mse) — the regression gate relies on it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchEntry {
     pub name: String,
-    pub median_ms: f64,
+    pub value: f64,
+    pub unit: String,
+}
+
+impl BenchEntry {
+    /// A timing entry (the common case).
+    pub fn ms(name: impl Into<String>, median_ms: f64) -> BenchEntry {
+        BenchEntry { name: name.into(), value: median_ms, unit: "ms".into() }
+    }
+
+    /// A non-timing entry (loss / pct / mse / ...).
+    pub fn val(name: impl Into<String>, value: f64, unit: &str) -> BenchEntry {
+        BenchEntry { name: name.into(), value, unit: unit.into() }
+    }
 }
 
 /// Render a report document.
@@ -117,7 +134,8 @@ pub fn report_json(bench: &str, entries: &[BenchEntry]) -> Json {
                     .map(|e| {
                         Json::Obj(vec![
                             ("name".into(), Json::Str(e.name.clone())),
-                            ("median_ms".into(), Json::Num(e.median_ms)),
+                            ("value".into(), Json::Num(e.value)),
+                            ("unit".into(), Json::Str(e.unit.clone())),
                         ])
                     })
                     .collect(),
@@ -163,11 +181,16 @@ pub fn read_report(path: &Path) -> Result<Vec<BenchEntry>> {
             .and_then(|v| v.as_str())
             .context("result entry missing name")?
             .to_string();
-        let median_ms = item
-            .get("median_ms")
+        let value = item
+            .get("value")
             .and_then(|v| v.as_f64())
-            .context("result entry missing median_ms")?;
-        out.push(BenchEntry { name, median_ms });
+            .context("result entry missing value")?;
+        let unit = item
+            .get("unit")
+            .and_then(|v| v.as_str())
+            .unwrap_or("ms")
+            .to_string();
+        out.push(BenchEntry { name, value, unit });
     }
     Ok(out)
 }
@@ -189,16 +212,24 @@ pub fn diff_reports(
                 println!("{:<28} MISSING from current run", b.name);
                 regressed.push(b.name.clone());
             }
+            Some(c) if c.unit != b.unit => {
+                println!(
+                    "{:<28} unit changed ({} -> {}) — refresh the baseline",
+                    b.name, b.unit, c.unit
+                );
+                regressed.push(b.name.clone());
+            }
             Some(c) => {
-                let delta = (c.median_ms / b.median_ms.max(1e-9) - 1.0) * 100.0;
+                let delta = (c.value / b.value.max(1e-9) - 1.0) * 100.0;
                 let bad = delta > tol_pct;
                 println!(
-                    "{:<28} base {:>8.2} ms  now {:>8.2} ms  {:>+7.1}% {}",
+                    "{:<28} base {:>8.2} {u}  now {:>8.2} {u}  {:>+7.1}% {}",
                     b.name,
-                    b.median_ms,
-                    c.median_ms,
+                    b.value,
+                    c.value,
                     delta,
-                    if bad { "REGRESSED" } else { "ok" }
+                    if bad { "REGRESSED" } else { "ok" },
+                    u = b.unit,
                 );
                 if bad {
                     regressed.push(b.name.clone());
@@ -209,8 +240,8 @@ pub fn diff_reports(
     for c in current {
         if !baseline.iter().any(|b| b.name == c.name) {
             println!(
-                "{:<28} new entry ({:.2} ms) — refresh the baseline to track it",
-                c.name, c.median_ms
+                "{:<28} new entry ({:.2} {}) — refresh the baseline to track it",
+                c.name, c.value, c.unit
             );
         }
     }
@@ -252,23 +283,36 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("perf.json");
         let entries = vec![
-            BenchEntry { name: "matmul".into(), median_ms: 2.0 },
-            BenchEntry { name: "quant".into(), median_ms: 1.0 },
+            BenchEntry::ms("matmul", 2.0),
+            BenchEntry::ms("quant", 1.0),
+            BenchEntry::val("tab2/chon/final_loss", 2.5, "loss"),
         ];
         write_report(&p, "perf", &entries).unwrap();
         let back = read_report(&p).unwrap();
         assert_eq!(back, entries);
 
-        // within tolerance
+        // within tolerance (non-ms entries diff the same way)
         let cur = vec![
-            BenchEntry { name: "matmul".into(), median_ms: 2.2 },
-            BenchEntry { name: "quant".into(), median_ms: 0.9 },
+            BenchEntry::ms("matmul", 2.2),
+            BenchEntry::ms("quant", 0.9),
+            BenchEntry::val("tab2/chon/final_loss", 2.6, "loss"),
         ];
         assert!(diff_reports(&entries, &cur, 25.0).is_empty());
-        // one regression + one missing entry
-        let cur = vec![BenchEntry { name: "matmul".into(), median_ms: 3.0 }];
+        // one regression + two missing entries
+        let cur = vec![BenchEntry::ms("matmul", 3.0)];
         let bad = diff_reports(&entries, &cur, 25.0);
-        assert_eq!(bad, vec!["matmul".to_string(), "quant".to_string()]);
+        assert_eq!(
+            bad,
+            vec![
+                "matmul".to_string(),
+                "quant".to_string(),
+                "tab2/chon/final_loss".to_string()
+            ]
+        );
+        // a unit change is never silently compared
+        let cur = vec![BenchEntry::val("matmul", 2.0, "loss")];
+        let bad = diff_reports(&entries[..1], &cur, 25.0);
+        assert_eq!(bad, vec!["matmul".to_string()]);
     }
 
     #[test]
@@ -277,6 +321,14 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("bad.json");
         std::fs::write(&p, "{\"schema_version\": 99, \"results\": []}").unwrap();
+        assert!(read_report(&p).is_err());
+        // v1 reports (median_ms, no value field) are rejected, not
+        // misread — the baseline refresh path covers migration
+        std::fs::write(
+            &p,
+            "{\"schema_version\": 1, \"results\": [{\"name\": \"m\", \"median_ms\": 2}]}",
+        )
+        .unwrap();
         assert!(read_report(&p).is_err());
         std::fs::write(&p, "not json").unwrap();
         assert!(read_report(&p).is_err());

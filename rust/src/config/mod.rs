@@ -31,8 +31,14 @@ pub struct RunConfig {
     pub seed: u64,
     /// output directory for metric CSVs
     pub out_dir: PathBuf,
-    /// worker threads for rust-side compute
+    /// worker threads for rust-side compute (sizes the global pool)
     pub threads: usize,
+    /// data-parallel shards for native training (clamped to the batch
+    /// size; every value produces bit-identical trajectories)
+    pub shards: usize,
+    /// resume a full training state (params + Adam + step) from this
+    /// checkpoint dir before training
+    pub resume: Option<PathBuf>,
     /// log training loss every N steps
     pub log_every: usize,
     /// serve/client: TCP host
@@ -73,6 +79,8 @@ impl Default for RunConfig {
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
+            shards: 1,
+            resume: None,
             log_every: 10,
             host: "127.0.0.1".into(),
             port: 7411,
@@ -116,11 +124,15 @@ impl RunConfig {
                 cfg.out_dir.to_str().unwrap(),
             ));
             cfg.threads = doc.int_or(section, "threads", cfg.threads as i64) as usize;
+            cfg.shards = doc.int_or(section, "shards", cfg.shards as i64) as usize;
             cfg.log_every =
                 doc.int_or(section, "log_every", cfg.log_every as i64) as usize;
             if let Some(v) = doc.get(section, "checkpoint_dir").and_then(|v| v.as_str())
             {
                 cfg.checkpoint_dir = Some(PathBuf::from(v));
+            }
+            if let Some(v) = doc.get(section, "resume").and_then(|v| v.as_str()) {
+                cfg.resume = Some(PathBuf::from(v));
             }
         }
         Ok(cfg)
@@ -149,6 +161,8 @@ impl RunConfig {
                 "seed" => self.seed = next()?.parse()?,
                 "out-dir" => self.out_dir = PathBuf::from(next()?),
                 "threads" => self.threads = next()?.parse()?,
+                "shards" => self.shards = next()?.parse()?,
+                "resume" => self.resume = Some(PathBuf::from(next()?)),
                 "log-every" => self.log_every = next()?.parse()?,
                 // --checkpoint is the serve-side spelling of the same dir
                 "checkpoint-dir" | "checkpoint" => {
@@ -241,6 +255,21 @@ mod tests {
         assert_eq!(c.concurrency, 8);
         assert_eq!(c.temp, 0.7);
         assert!(c.shutdown);
+    }
+
+    #[test]
+    fn shards_and_resume_flags_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.shards, 1);
+        c.apply_args(&[
+            "--shards".into(),
+            "4".into(),
+            "--resume".into(),
+            "ckpts/run".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.resume.as_deref(), Some(std::path::Path::new("ckpts/run")));
     }
 
     #[test]

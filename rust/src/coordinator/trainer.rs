@@ -83,9 +83,27 @@ impl Trainer {
         let backend = backend_for(&cfg.backend)?;
         let dir = cfg.artifacts.clone();
         let train_name = format!("train_{}_{}", cfg.model, cfg.recipe);
-        let train_exe = backend
-            .load(&dir, &train_name)
-            .with_context(|| format!("loading {train_name} ({} backend)", backend.name()))?;
+        // native training always runs through the data-parallel shard
+        // engine (default --shards 1): the per-sequence grad + fixed-tree
+        // allreduce math is identical for every shard count, so N is a
+        // pure scheduling knob (see runtime::native::shard)
+        let train_exe: Rc<dyn Executable> = if backend.name() == "native" {
+            Rc::new(
+                crate::runtime::native::ShardExec::new(&train_name, cfg.shards)
+                    .with_context(|| format!("loading {train_name} (native backend)"))?,
+            )
+        } else {
+            if cfg.shards > 1 {
+                bail!(
+                    "--shards {} needs the native backend, not {:?}",
+                    cfg.shards,
+                    cfg.backend
+                );
+            }
+            backend.load(&dir, &train_name).with_context(|| {
+                format!("loading {train_name} ({} backend)", backend.name())
+            })?
+        };
         let man = train_exe.manifest();
         let vocab = man.meta_usize("vocab")?;
         let batch = man.meta_usize("batch")?;

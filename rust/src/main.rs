@@ -46,6 +46,11 @@ COMMON FLAGS:
   --recipe NAME     (default chon)        --steps N      (default: artifact)
   --seed N          --out-dir DIR         --diag-every N --eval-every N
   --log-every N     --checkpoint-dir DIR  --config FILE.toml
+  --threads N       worker-pool lanes (default: all cores; CHON_THREADS wins)
+  --shards N        data-parallel shards, native train only (default 1;
+                    bit-identical trajectories for every N)
+  --resume DIR      resume params+Adam+step from a checkpoint dir (errors
+                    on model/recipe mismatch)
 
 SERVE/CLIENT FLAGS:
   --checkpoint DIR  checkpoint dir (or parent; highest step wins)
@@ -166,6 +171,8 @@ fn main() -> Result<()> {
     }
     let mut cfg = RunConfig::default();
     cfg.apply_args(&args[1..])?;
+    // size the persistent worker pool before the first parallel kernel
+    chon::util::pool::configure_threads(cfg.threads);
 
     match cmd.as_str() {
         "help" | "--help" | "-h" => print!("{HELP}"),
@@ -190,6 +197,14 @@ fn main() -> Result<()> {
         "train" => {
             let steps = cfg.steps;
             let mut tr = Trainer::new(cfg)?;
+            if let Some(ckpt) = tr.cfg.resume.clone() {
+                tr.restore(&ckpt)
+                    .with_context(|| format!("resuming from {}", ckpt.display()))?;
+                println!(
+                    "resumed {}/{} at step {}",
+                    tr.cfg.model, tr.cfg.recipe, tr.state.step
+                );
+            }
             let n = if steps > 0 { steps } else { tr.total_steps };
             tr.train(n)?;
             if tr.ensure_eval().is_some() {

@@ -8,6 +8,7 @@
 
 pub mod model;
 pub mod recipe;
+pub mod shard;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -21,6 +22,7 @@ use crate::runtime::tensor::{DType, HostTensor};
 
 pub use model::{model_cfg, Arch, ModelCfg, ParamSpec};
 pub use recipe::{available_recipes, NativeRecipe};
+pub use shard::ShardExec;
 
 /// The models the native engine ships.
 pub fn available_models() -> Vec<&'static str> {
@@ -34,7 +36,7 @@ pub fn sensitivity_ops_for(model: &str) -> Result<Vec<String>> {
 
 /// Artifact kinds the engine understands.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Kind {
+pub(crate) enum Kind {
     Init,
     Train,
     Eval,
@@ -43,7 +45,7 @@ enum Kind {
 }
 
 /// Split an artifact name into (kind, model, recipe).
-fn parse_name(name: &str) -> Result<(Kind, String, Option<String>)> {
+pub(crate) fn parse_name(name: &str) -> Result<(Kind, String, Option<String>)> {
     let cases: [(&str, Kind, bool); 5] = [
         ("init_", Kind::Init, false),
         ("train_", Kind::Train, true),
@@ -86,7 +88,7 @@ fn base_meta(cfg: &ModelCfg, kind: &str, recipe_name: Option<&str>) -> BTreeMap<
     meta
 }
 
-fn build_manifest(
+pub(crate) fn build_manifest(
     name: &str,
     kind: Kind,
     cfg: &ModelCfg,
@@ -196,6 +198,12 @@ pub struct NativeExec {
     cfg: ModelCfg,
     recipe: Option<NativeRecipe>,
     manifest: Manifest,
+    /// Train artifacts delegate to the shard engine at shards = 1, so the
+    /// raw `Backend::load` path produces the exact bits `chon train`
+    /// does (one per-sequence grad decomposition, not two divergent
+    /// train-step implementations). `model::train_step` stays as the
+    /// fused reference for its own unit tests.
+    train_impl: Option<shard::ShardExec>,
 }
 
 impl NativeExec {
@@ -207,7 +215,11 @@ impl NativeExec {
             None => None,
         };
         let manifest = build_manifest(name, kind, &cfg, recipe_name.as_deref());
-        Ok(NativeExec { kind, cfg, recipe: rec, manifest })
+        let train_impl = match kind {
+            Kind::Train => Some(shard::ShardExec::new(name, 1)?),
+            _ => None,
+        };
+        Ok(NativeExec { kind, cfg, recipe: rec, manifest, train_impl })
     }
 
     fn bf16(&self) -> NativeRecipe {
@@ -228,31 +240,11 @@ impl Executable for NativeExec {
                 let seed = inputs[0].i32_data[0] as u64;
                 Ok(model::init_params(&self.cfg, seed))
             }
-            Kind::Train => {
-                let rec = self.recipe.clone().unwrap_or_else(|| self.bf16());
-                let step = inputs[3 * k].i32_data[0] as usize;
-                let tokens = &inputs[3 * k + 1].i32_data;
-                let targets = &inputs[3 * k + 2].i32_data;
-                let seed = inputs[3 * k + 3].i32_data[0] as u64;
-                let (p2, m2, v2, loss, gnorm, lr) = model::train_step(
-                    &self.cfg,
-                    &rec,
-                    &inputs[..k],
-                    &inputs[k..2 * k],
-                    &inputs[2 * k..3 * k],
-                    step,
-                    tokens,
-                    targets,
-                    seed,
-                );
-                let mut out = p2;
-                out.extend(m2);
-                out.extend(v2);
-                out.push(HostTensor::scalar_f32(loss));
-                out.push(HostTensor::scalar_f32(gnorm));
-                out.push(HostTensor::scalar_f32(lr));
-                Ok(out)
-            }
+            Kind::Train => self
+                .train_impl
+                .as_ref()
+                .expect("train artifact built its shard impl")
+                .run(inputs),
             Kind::Eval => {
                 let rec = self.recipe.clone().unwrap_or_else(|| self.bf16());
                 let (loss, acc) = model::eval_step(

@@ -885,7 +885,9 @@ pub fn lr_at(step: usize, total: usize) -> f32 {
 }
 
 /// In-place Adam with global-norm clipping; returns the pre-clip norm.
-fn adam_update(
+/// `pub(crate)` so the shard engine can apply the identical update to the
+/// allreduced gradient.
+pub(crate) fn adam_update(
     params: &mut [Mat],
     m: &mut [Mat],
     v: &mut [Mat],
@@ -921,6 +923,25 @@ fn adam_update(
 // The executable entry points
 // ------------------------------------------------------------------
 
+/// Forward + backward only: the recipe's quantized loss and parameter
+/// gradients for one token window, no optimizer state touched. This is
+/// the per-shard unit of the data-parallel engine — each shard runs it
+/// over its own rows with its own RNG stream, and the allreduced result
+/// feeds a single `adam_update`.
+pub(crate) fn loss_and_grads(
+    cfg: &ModelCfg,
+    rec: &NativeRecipe,
+    params: &[Mat],
+    tokens: &[i32],
+    targets: &[i32],
+    rng: &mut Rng,
+) -> (f32, Vec<Mat>) {
+    let cache = forward_cache(cfg, rec, params, tokens);
+    let (loss, _acc, dlogits) = cross_entropy(&cache.lhead.y, targets);
+    let grads = backward(cfg, params, &cache, &dlogits, rng);
+    (loss, grads)
+}
+
 /// One optimizer step. Returns (params', m', v', loss, grad_norm, lr).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
@@ -941,9 +962,7 @@ pub fn train_step(
     // per-(seed, step) stream so SR is deterministic and reproducible
     let mut rng = Rng::new(seed ^ 0x5EED_0001).fold_in(step as u64);
 
-    let cache = forward_cache(cfg, rec, &params, tokens);
-    let (loss, _acc, dlogits) = cross_entropy(&cache.lhead.y, targets);
-    let grads = backward(cfg, &params, &cache, &dlogits, &mut rng);
+    let (loss, grads) = loss_and_grads(cfg, rec, &params, tokens, targets, &mut rng);
     let lr = lr_at(step, cfg.total_steps);
     let gnorm = adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
 

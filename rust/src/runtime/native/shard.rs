@@ -1,0 +1,248 @@
+//! Data-parallel native training: shard the batch over the persistent
+//! worker pool, run forward/backward per shard, allreduce gradients, then
+//! apply one Adam update on the master copy.
+//!
+//! The decomposition is chosen so the *math* never depends on the shard
+//! count: the reduction unit is one batch row (one sequence), whatever
+//! `--shards N` says. Each unit runs `model::loss_and_grads` over its own
+//! rows with its own RNG stream (`fold_in(unit)`), and unit results are
+//! combined by a fixed-shape pairwise tree (stride doubling over unit
+//! indices) — the same additions in the same order for every N. N only
+//! decides how units are distributed across pool workers, so
+//! `--shards 8` and `--shards 1` produce bit-identical loss trajectories
+//! (the property `tests/shard_train.rs` pins down).
+//!
+//! This is also why the per-unit quantization scope differs from the
+//! fused `model::train_step`: NVFP4 encode scaling is row-local either
+//! way, but HCP hot-channel selection and RHT sign draws see one sequence
+//! instead of the whole batch. That is a deliberate contract change —
+//! batch-global quantization state is exactly what cannot be sharded
+//! without making results depend on N.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::backend::{check_inputs, Executable};
+use crate::runtime::native::model::{self, ModelCfg};
+use crate::runtime::native::recipe::{self, NativeRecipe};
+use crate::runtime::native::{build_manifest, parse_name, Kind};
+use crate::runtime::tensor::HostTensor;
+use crate::util::ndarray::Mat;
+use crate::util::pool;
+use crate::util::prng::Rng;
+
+/// A train executable that runs the step data-parallel over the pool.
+/// Speaks the exact train-artifact protocol of `NativeExec`, so the
+/// `Trainer` drives it unchanged.
+pub struct ShardExec {
+    cfg: ModelCfg,
+    recipe: NativeRecipe,
+    manifest: Manifest,
+    shards: usize,
+}
+
+impl ShardExec {
+    /// `name` must be a `train_<model>_<recipe>` artifact name. `shards`
+    /// is clamped to [1, batch] at run time (a shard needs at least one
+    /// batch row).
+    pub fn new(name: &str, shards: usize) -> Result<ShardExec> {
+        let (kind, model_name, recipe_name) = parse_name(name)?;
+        if kind != Kind::Train {
+            bail!("ShardExec wraps train artifacts, got {name:?}");
+        }
+        let cfg = model::model_cfg(&model_name)?;
+        let recipe_name =
+            recipe_name.ok_or_else(|| anyhow::anyhow!("{name:?} names no recipe"))?;
+        let rec = recipe::recipe(&recipe_name)?;
+        let manifest = build_manifest(name, Kind::Train, &cfg, Some(&recipe_name));
+        Ok(ShardExec { cfg, recipe: rec, manifest, shards: shards.max(1) })
+    }
+}
+
+/// Fixed-shape pairwise tree reduction over per-unit (loss, grads):
+/// stride doubling over unit indices, so the addition order is a function
+/// of the unit count alone — never of the shard count or scheduling.
+fn tree_reduce(mut slots: Vec<Option<(f32, Vec<Mat>)>>) -> (f32, Vec<Mat>) {
+    let n = slots.len();
+    assert!(n > 0);
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let rhs = slots[i + stride].take().expect("tree slot consumed twice");
+            let lhs = slots[i].as_mut().expect("tree slot missing");
+            lhs.0 += rhs.0;
+            for (g, r) in lhs.1.iter_mut().zip(&rhs.1) {
+                g.add_assign(r);
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    slots[0].take().expect("tree root missing")
+}
+
+impl Executable for ShardExec {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        check_inputs(&self.manifest, inputs)?;
+        let specs = model::param_specs(&self.cfg);
+        let k = specs.len();
+        let step = inputs[3 * k].i32_data[0] as usize;
+        let tokens = &inputs[3 * k + 1].i32_data;
+        let targets = &inputs[3 * k + 2].i32_data;
+        let seed = inputs[3 * k + 3].i32_data[0] as u64;
+        let mut params = model::params_to_mats(&inputs[..k]);
+        let mut m = model::params_to_mats(&inputs[k..2 * k]);
+        let mut v = model::params_to_mats(&inputs[2 * k..3 * k]);
+
+        let seq = self.cfg.seq;
+        let units = tokens.len() / seq;
+        debug_assert_eq!(tokens.len() % seq, 0);
+        let shards = self.shards.clamp(1, units);
+        let per = units.div_ceil(shards);
+
+        // per-shard: forward/backward each owned unit at batch 1. The
+        // unit math is shard-layout-independent; only scheduling varies.
+        let cfg = &self.cfg;
+        let rec = &self.recipe;
+        let params_ref = &params;
+        let shard_results: Vec<Vec<(f32, Vec<Mat>)>> =
+            pool::global().map(shards, |s| {
+                let u0 = s * per;
+                let u1 = ((s + 1) * per).min(units);
+                (u0..u1)
+                    .map(|u| {
+                        let toks = &tokens[u * seq..(u + 1) * seq];
+                        let tgts = &targets[u * seq..(u + 1) * seq];
+                        let mut rng = Rng::new(seed ^ 0x5EED_0001)
+                            .fold_in(step as u64)
+                            .fold_in(u as u64);
+                        model::loss_and_grads(cfg, rec, params_ref, toks, tgts, &mut rng)
+                    })
+                    .collect()
+            });
+
+        // deterministic allreduce: units in index order, fixed tree shape.
+        // Peak memory holds one grad set per unit before the fold — fine
+        // at tiny-model scale; eager folding of finished subtree pairs
+        // would cut that without changing the bits if models grow.
+        let slots: Vec<Option<(f32, Vec<Mat>)>> = shard_results
+            .into_iter()
+            .flatten()
+            .map(Some)
+            .collect();
+        debug_assert_eq!(slots.len(), units);
+        let (loss_sum, mut grads) = tree_reduce(slots);
+        let inv = 1.0f32 / units as f32;
+        for g in grads.iter_mut() {
+            for x in g.data.iter_mut() {
+                *x *= inv;
+            }
+        }
+        let loss = loss_sum * inv;
+
+        let lr = model::lr_at(step, self.cfg.total_steps);
+        let gnorm = model::adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
+
+        let to_tensors = |mats: Vec<Mat>| -> Vec<HostTensor> {
+            specs
+                .iter()
+                .zip(mats)
+                .map(|(s, mat)| HostTensor::f32(s.shape.clone(), mat.data))
+                .collect()
+        };
+        let mut out = to_tensors(params);
+        out.extend(to_tensors(m));
+        out.extend(to_tensors(v));
+        out.push(HostTensor::scalar_f32(loss));
+        out.push(HostTensor::scalar_f32(gnorm));
+        out.push(HostTensor::scalar_f32(lr));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn train_inputs(cfg: &ModelCfg, seed: u64) -> Vec<HostTensor> {
+        let params = model::init_params(cfg, seed);
+        let k = params.len();
+        let mut inputs = params.clone();
+        for p in &params {
+            inputs.push(HostTensor::zeros(p.dtype, p.shape.clone()));
+        }
+        for p in &params {
+            inputs.push(HostTensor::zeros(p.dtype, p.shape.clone()));
+        }
+        inputs.push(HostTensor::scalar_i32(0));
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        let toks: Vec<i32> = (0..b * s + 1).map(|_| (rng.below(24) as i32) + 97).collect();
+        inputs.push(HostTensor::i32(vec![b, s], toks[..b * s].to_vec()));
+        inputs.push(HostTensor::i32(vec![b, s], toks[1..].to_vec()));
+        inputs.push(HostTensor::scalar_i32(seed as i32));
+        assert_eq!(inputs.len(), 3 * k + 4);
+        inputs
+    }
+
+    #[test]
+    fn shard_count_does_not_change_the_bits() {
+        // the acceptance property at the executable level: any N in
+        // [1, batch] (and beyond — clamped) produces identical outputs,
+        // including under the full chon recipe (SR + RHT + HCP)
+        let cfg = model::model_cfg("tiny_gla").unwrap();
+        let inputs = train_inputs(&cfg, 11);
+        let base = ShardExec::new("train_tiny_gla_chon", 1)
+            .unwrap()
+            .run(&inputs)
+            .unwrap();
+        for shards in [2, 3, 4, 16] {
+            let out = ShardExec::new("train_tiny_gla_chon", shards)
+                .unwrap()
+                .run(&inputs)
+                .unwrap();
+            assert_eq!(base.len(), out.len());
+            for (a, b) in base.iter().zip(&out) {
+                assert_eq!(a.f32_data, b.f32_data, "shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_step_descends_like_any_train_step() {
+        let cfg = model::model_cfg("tiny_gla").unwrap();
+        let exe = ShardExec::new("train_tiny_gla_bf16", 2).unwrap();
+        let k = model::param_specs(&cfg).len();
+        let mut inputs = train_inputs(&cfg, 5);
+        let mut losses = Vec::new();
+        for step in 0..12 {
+            inputs[3 * k] = HostTensor::scalar_i32(step);
+            let out = exe.run(&inputs).unwrap();
+            losses.push(out[3 * k].f32_data[0]);
+            // thread state (params, m, v) back in for the next step
+            for (slot, t) in out.into_iter().take(3 * k).enumerate() {
+                inputs[slot] = t;
+            }
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert!(
+            losses[11] < losses[0] - 0.5,
+            "no descent: {} -> {}",
+            losses[0],
+            losses[11]
+        );
+    }
+
+    #[test]
+    fn rejects_non_train_artifacts() {
+        assert!(ShardExec::new("init_tiny_gla", 2).is_err());
+        assert!(ShardExec::new("diag_tiny_gla_chon", 2).is_err());
+        assert!(ShardExec::new("train_tiny_gla_nope", 2).is_err());
+    }
+}

@@ -251,11 +251,15 @@ impl Engine {
                 Arch::Sa => (None, None),
             };
 
-            // per-session attention with recurrent/cached state
+            // per-session attention with recurrent/cached state. Sessions
+            // are independent (disjoint state, disjoint output rows), so
+            // a batched step fans them out over the persistent worker
+            // pool — the same pool the training shards use — instead of
+            // walking them serially; per-session math is untouched, so
+            // batch-invariance and greedy determinism are preserved.
             let mut o = Mat::zeros(b, d);
-            for (i, sess) in sessions.iter_mut().enumerate() {
+            let step_session = |i: usize, sess: &mut Session, orow: &mut [f32]| {
                 let t = sess.pos; // 0-based position of this token
-                let orow = o.row_mut(i);
                 match &mut sess.layers[l] {
                     LayerState::Gla { s } => {
                         let (gkr, gr) =
@@ -316,6 +320,21 @@ impl Engine {
                             }
                         }
                     }
+                }
+            };
+            if b >= 2 {
+                let mut work: Vec<(&mut Session, &mut [f32])> = sessions
+                    .iter_mut()
+                    .map(|s| &mut **s)
+                    .zip(o.data.chunks_mut(d))
+                    .collect();
+                crate::util::pool::global()
+                    .for_each_mut(&mut work, |i, item| {
+                        step_session(i, &mut *item.0, &mut *item.1)
+                    });
+            } else {
+                for (i, sess) in sessions.iter_mut().enumerate() {
+                    step_session(i, &mut **sess, o.row_mut(i));
                 }
             }
 

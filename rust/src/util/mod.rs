@@ -5,5 +5,6 @@
 pub mod json;
 pub mod logger;
 pub mod ndarray;
+pub mod pool;
 pub mod prng;
 pub mod proptest;

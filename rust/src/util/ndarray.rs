@@ -1,10 +1,22 @@
-//! Minimal dense 2-D f32 tensor + cache-blocked matmul.
+//! Minimal dense 2-D f32 tensor + packed SIMD-friendly matmul.
 //!
 //! The offline vendor set has no ndarray/nalgebra/rayon; this is the small
-//! substrate the HCP pipeline, diagnostics and benches run on. Parallelism
-//! uses std::thread::scope over row bands.
+//! substrate the HCP pipeline, diagnostics and benches run on.
+//!
+//! The GEMM is a BLIS-style packed microkernel: B is packed once per call
+//! into NR-wide, KC-blocked panels (reused across the whole k loop and
+//! shared read-only across threads), the A row band is packed tile-major,
+//! and an MR×NR register-tiled inner kernel accumulates over the full
+//! contraction in fixed-size arrays the compiler autovectorizes. Each
+//! output row's accumulation chain runs over k in ascending order and
+//! touches only that row's operands, so results are bit-identical however
+//! rows are tiled or banded — which is what lets `matmul_par` (row bands
+//! on the persistent `util::pool` workers, no per-call spawn) promise
+//! bitwise equality with `matmul` at every thread count.
 
 use std::fmt;
+
+use crate::util::pool;
 
 /// Row-major (rows x cols) f32 matrix.
 #[derive(Clone, PartialEq)]
@@ -60,11 +72,23 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Cache-blocked transpose (TB×TB tiles): every backward GEMM in the
+    /// native model transposes an operand, and the naive strided scatter
+    /// missed cache on one side for any matrix wider than a cache line.
     pub fn transpose(&self) -> Mat {
-        let mut out = Mat::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        const TB: usize = 32;
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = Mat::zeros(cols, rows);
+        for rb in (0..rows).step_by(TB) {
+            let rend = (rb + TB).min(rows);
+            for cb in (0..cols).step_by(TB) {
+                let cend = (cb + TB).min(cols);
+                for r in rb..rend {
+                    let src = &self.data[r * cols..r * cols + cols];
+                    for c in cb..cend {
+                        out.data[c * rows + r] = src[c];
+                    }
+                }
             }
         }
         out
@@ -147,8 +171,151 @@ impl Mat {
     }
 }
 
-/// Cache-blocked single-threaded matmul: out = a (m x k) * b (k x n).
-/// The k-inner / n-innermost loop autovectorizes under -O.
+// ------------------------------------------------------------------
+// Packed GEMM microkernel
+// ------------------------------------------------------------------
+
+/// Register-tile rows of the microkernel.
+const MR: usize = 4;
+/// Register-tile columns (two 8-lane f32 vectors on AVX2).
+const NR: usize = 16;
+/// Contraction block: one packed B panel block (KC×NR) stays L1-resident.
+const KC: usize = 256;
+/// Row count below which the unpacked fallback wins (packing B costs
+/// O(k·n), amortized over m rows — serve's batch-row GEMMs sit here).
+const SMALL_M: usize = 8;
+
+/// One KC-slice of the packed B operand.
+struct PackedBlock {
+    /// first contraction index of the slice
+    k0: usize,
+    /// slice depth (== KC except the ragged tail)
+    kc: usize,
+    /// offset of the slice's panels in `PackedB::data`
+    off: usize,
+}
+
+/// B packed panel-wise: for each KC block, `npanels` panels of `kc` rows ×
+/// NR columns, zero-padded to NR on the ragged right edge. Packed once per
+/// GEMM and shared read-only by every row-band task.
+struct PackedB {
+    n: usize,
+    npanels: usize,
+    blocks: Vec<PackedBlock>,
+    data: Vec<f32>,
+}
+
+fn pack_b(b: &Mat) -> PackedB {
+    let (k, n) = (b.rows, b.cols);
+    let npanels = n.div_ceil(NR);
+    let mut data = vec![0.0f32; k * npanels * NR];
+    let mut blocks = Vec::with_capacity(k.div_ceil(KC.max(1)).max(1));
+    let mut off = 0usize;
+    for k0 in (0..k).step_by(KC) {
+        let kc = (k - k0).min(KC);
+        for p in 0..npanels {
+            let c0 = p * NR;
+            let ncols = (n - c0).min(NR);
+            let pbase = off + p * kc * NR;
+            for kk in 0..kc {
+                let src = &b.data[(k0 + kk) * n + c0..(k0 + kk) * n + c0 + ncols];
+                data[pbase + kk * NR..pbase + kk * NR + ncols].copy_from_slice(src);
+            }
+        }
+        blocks.push(PackedBlock { k0, kc, off });
+        off += kc * npanels * NR;
+    }
+    PackedB { n, npanels, blocks, data }
+}
+
+/// Compute rows `r0..r0+nrows` of `a * packed-B` into `chunk` (row-major,
+/// `packed.n` columns). The A band is packed tile-major first so the
+/// inner loop reads both operands at unit stride; the MR×NR accumulator
+/// lives in fixed-size arrays the compiler keeps in vector registers.
+fn kernel_rows(
+    a: &Mat,
+    packed: &PackedB,
+    r0: usize,
+    nrows: usize,
+    chunk: &mut [f32],
+    accumulate: bool,
+) {
+    let k = a.cols;
+    let n = packed.n;
+    debug_assert_eq!(chunk.len(), nrows * n);
+    let ntiles = nrows.div_ceil(MR);
+    // A band, tile-major: apk[tile*k*MR + kk*MR + r] = a[r0+tile*MR+r, kk]
+    // (rows past the edge stay zero — they add 0 to the accumulator and
+    // are masked out of the write-back)
+    let mut apk = vec![0.0f32; ntiles * k * MR];
+    for t in 0..ntiles {
+        let tbase = t * k * MR;
+        let mr = (nrows - t * MR).min(MR);
+        for r in 0..mr {
+            let arow = a.row(r0 + t * MR + r);
+            for (kk, &v) in arow.iter().enumerate() {
+                apk[tbase + kk * MR + r] = v;
+            }
+        }
+    }
+    for t in 0..ntiles {
+        let tbase = t * k * MR;
+        let mr = (nrows - t * MR).min(MR);
+        for p in 0..packed.npanels {
+            let mut acc = [[0.0f32; NR]; MR];
+            for blk in &packed.blocks {
+                let at = &apk[tbase + blk.k0 * MR..tbase + (blk.k0 + blk.kc) * MR];
+                let pb = blk.off + p * blk.kc * NR;
+                let bp = &packed.data[pb..pb + blk.kc * NR];
+                for kk in 0..blk.kc {
+                    let av = &at[kk * MR..kk * MR + MR];
+                    let bv = &bp[kk * NR..kk * NR + NR];
+                    for r in 0..MR {
+                        let ar = av[r];
+                        let accr = &mut acc[r];
+                        for j in 0..NR {
+                            accr[j] += ar * bv[j];
+                        }
+                    }
+                }
+            }
+            let c0 = p * NR;
+            let ncols = (n - c0).min(NR);
+            for r in 0..mr {
+                let obase = (t * MR + r) * n + c0;
+                let orow = &mut chunk[obase..obase + ncols];
+                if accumulate {
+                    for j in 0..ncols {
+                        orow[j] += acc[r][j];
+                    }
+                } else {
+                    orow[..ncols].copy_from_slice(&acc[r][..ncols]);
+                }
+            }
+        }
+    }
+}
+
+/// Unpacked fallback for short A (serve decode batches, vector-matrix):
+/// k-inner loop over full B rows, n-innermost autovectorized.
+fn matmul_small(a: &Mat, b: &Mat, out: &mut Mat, accumulate: bool) {
+    let n = b.cols;
+    if !accumulate {
+        out.data.fill(0.0);
+    }
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Packed single-threaded matmul: out = a (m x k) * b (k x n).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows);
     let mut out = Mat::zeros(a.rows, b.cols);
@@ -160,63 +327,53 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat, accumulate: bool) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((out.rows, out.cols), (a.rows, b.cols));
-    if !accumulate {
-        out.data.fill(0.0);
+    if a.rows == 0 || b.cols == 0 {
+        return;
     }
-    const KC: usize = 256;
-    let n = b.cols;
-    for kb in (0..a.cols).step_by(KC) {
-        let kend = (kb + KC).min(a.cols);
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += av * brow[j];
-                }
-            }
+    if a.cols == 0 {
+        if !accumulate {
+            out.data.fill(0.0);
         }
+        return;
     }
+    if a.rows < SMALL_M {
+        matmul_small(a, b, out, accumulate);
+        return;
+    }
+    let packed = pack_b(b);
+    kernel_rows(a, &packed, 0, a.rows, &mut out.data, accumulate);
 }
 
-/// Multi-threaded matmul over row bands (std::thread::scope).
+/// Multi-threaded matmul: MR-aligned row bands on the persistent worker
+/// pool (`util::pool`) — no per-call thread spawn. Bit-identical to
+/// `matmul` at every `threads` value: a band boundary never changes any
+/// single row's accumulation chain.
 pub fn matmul_par(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows);
     let t = threads.max(1).min(a.rows.max(1));
-    if t <= 1 || a.rows < 16 {
+    // same threshold as matmul_into's small-m dispatch, so the serial and
+    // parallel entry points always agree on which kernel a shape takes
+    if t <= 1 || a.rows < SMALL_M {
         return matmul(a, b);
     }
     let n = b.cols;
     let mut out = Mat::zeros(a.rows, n);
-    let band = a.rows.div_ceil(t);
-    let chunks: Vec<&mut [f32]> = out.data.chunks_mut(band * n).collect();
-    std::thread::scope(|s| {
-        for (ti, chunk) in chunks.into_iter().enumerate() {
-            let r0 = ti * band;
-            let rows = chunk.len() / n;
-            let a_ref = &a;
-            let b_ref = &b;
-            s.spawn(move || {
-                for i in 0..rows {
-                    let arow = a_ref.row(r0 + i);
-                    let orow = &mut chunk[i * n..(i + 1) * n];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b_ref.data[kk * n..(kk + 1) * n];
-                        for j in 0..n {
-                            orow[j] += av * brow[j];
-                        }
-                    }
-                }
-            });
-        }
+    if n == 0 || a.cols == 0 {
+        return out;
+    }
+    let packed = pack_b(b);
+    // MR-aligned bands so tiles never straddle a task boundary
+    let band = a.rows.div_ceil(t).div_ceil(MR) * MR;
+    let mut tasks: Vec<(usize, &mut [f32])> = out
+        .data
+        .chunks_mut(band * n)
+        .enumerate()
+        .map(|(i, c)| (i * band, c))
+        .collect();
+    let packed_ref = &packed;
+    pool::global().for_each_mut(&mut tasks, |_, task| {
+        let (r0, chunk) = (task.0, &mut *task.1);
+        kernel_rows(a, packed_ref, r0, chunk.len() / n, chunk, false);
     });
     out
 }
@@ -246,26 +403,91 @@ mod tests {
         assert_eq!(matmul(&a, &b).data, vec![3.0, 3.0, 7.0, 7.0]);
     }
 
+    /// Naive triple loop, f64 accumulation — the reference the packed
+    /// kernel is checked against (tolerance, since the chain order and
+    /// precision differ).
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f64;
+                for kk in 0..a.cols {
+                    acc += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+                }
+                *out.at_mut(i, j) = acc as f32;
+            }
+        }
+        out
+    }
+
     #[test]
-    fn matmul_par_matches_serial() {
+    fn matmul_par_is_bit_identical_to_serial() {
+        // the packed kernel's per-row chains are banding-independent, so
+        // every thread count must agree bitwise (not just within an eps)
         let a = rand_mat(33, 47, 2);
         let b = rand_mat(47, 29, 3);
         let s = matmul(&a, &b);
-        let p = matmul_par(&a, &b, 4);
-        for (x, y) in s.data.iter().zip(&p.data) {
-            assert!((x - y).abs() < 1e-4);
+        for t in [1, 2, 3, 4, 7, 16] {
+            let p = matmul_par(&a, &b, t);
+            assert_eq!(s.data, p.data, "threads={t}");
         }
     }
 
     #[test]
+    fn packed_kernel_matches_naive_on_ragged_shapes() {
+        // shapes straddling every MR/NR/KC edge, incl. the small-m path
+        for (i, &(m, k, n)) in [
+            (8, 16, 16),
+            (9, 17, 17),
+            (8, 300, 33),
+            (13, 257, 31),
+            (64, 64, 1),
+            (1, 64, 64),
+            (33, 1, 33),
+            (12, 512, 48),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let a = rand_mat(m, k, 100 + i as u64);
+            let b = rand_mat(k, n, 200 + i as u64);
+            let got = matmul(&a, &b);
+            let want = matmul_naive(&a, &b);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert!(
+                    (x - y).abs() <= 1e-3 * (1.0 + y.abs()),
+                    "{m}x{k}x{n}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_handled() {
+        let a = Mat::zeros(0, 5);
+        let b = rand_mat(5, 4, 1);
+        assert_eq!(matmul(&a, &b).data.len(), 0);
+        let a = rand_mat(9, 0, 1);
+        let b = Mat::zeros(0, 4);
+        assert!(matmul(&a, &b).data.iter().all(|&v| v == 0.0));
+        let a = rand_mat(9, 5, 1);
+        let b = Mat::zeros(5, 0);
+        assert_eq!(matmul(&a, &b).data.len(), 0);
+        assert_eq!(matmul_par(&a, &b, 4).data.len(), 0);
+    }
+
+    #[test]
     fn matmul_into_accumulates() {
-        let a = rand_mat(4, 4, 4);
-        let b = rand_mat(4, 4, 5);
-        let mut out = matmul(&a, &b);
-        matmul_into(&a, &b, &mut out, true);
-        let double = matmul(&a, &b);
-        for (x, y) in out.data.iter().zip(&double.data) {
-            assert!((x - 2.0 * y).abs() < 1e-4);
+        // both the small-m path and the packed path honor `accumulate`
+        for (m, k, n) in [(4, 4, 4), (16, 40, 24)] {
+            let a = rand_mat(m, k, 4);
+            let b = rand_mat(k, n, 5);
+            let mut out = matmul(&a, &b);
+            matmul_into(&a, &b, &mut out, true);
+            let double = matmul(&a, &b);
+            for (x, y) in out.data.iter().zip(&double.data) {
+                assert!((x - 2.0 * y).abs() < 1e-3, "{m}x{k}x{n}");
+            }
         }
     }
 
@@ -285,7 +507,17 @@ mod tests {
 
     #[test]
     fn transpose_roundtrip() {
-        let a = rand_mat(6, 9, 6);
-        assert_eq!(a.transpose().transpose().data, a.data);
+        // sizes straddling the TB=32 tile edge
+        for (r, c) in [(6, 9), (32, 32), (33, 65), (100, 31)] {
+            let a = rand_mat(r, c, (r * c) as u64);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.at(j, i), a.at(i, j));
+                }
+            }
+            assert_eq!(t.transpose().data, a.data);
+        }
     }
 }

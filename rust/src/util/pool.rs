@@ -1,0 +1,469 @@
+//! Persistent worker pool: parked `std::thread` workers with scoped task
+//! submission — the per-call `std::thread::scope` spawn that used to sit
+//! on the matmul hot path is gone; workers are created once and reused by
+//! every `matmul_par` call, the data-parallel shard engine, and the serve
+//! decode batch.
+//!
+//! Model: one job at a time, claim-based participation. A job is a task
+//! counter plus a borrowed closure; the submitter posts it with a claim
+//! budget of `min(workers, tasks - 1)` and wakes that many workers, each
+//! of which *claims* a slot under the lock before touching the job, then
+//! races on an atomic index until the counter is exhausted. The
+//! submitting thread participates too (so a pool of W workers runs W+1
+//! lanes, and `threads == 1` degrades to plain serial execution with no
+//! synchronization at all), and it drains the queue regardless of how
+//! many workers actually wake — a lost wakeup or a shut-down pool only
+//! costs helpers, never completion. The submitter blocks until the claim
+//! window is closed and every *claimed* worker has left the job (not
+//! until the whole pool has cycled — a 4-task job on a 64-lane pool
+//! wakes 3 workers and waits on at most 3), which is what makes
+//! borrowing non-'static closures sound: the lifetime is erased for the
+//! trip through the worker threads, but the borrow provably outlives the
+//! job because `run` does not return (even on panic — a drop guard
+//! closes the claim window and waits) while any worker can still touch
+//! it.
+//!
+//! Determinism: the pool assigns *which thread* runs a task dynamically,
+//! but callers only ever hand it tasks that write disjoint outputs and
+//! whose per-task math is scheduling-independent. Every consumer in this
+//! crate (row bands of the packed matmul, per-sequence grad shards, per-
+//! session decode states) has that shape, so results are bit-identical at
+//! any pool size — the property the `matmul_par == matmul` and
+//! `--shards N == --shards 1` tests pin down.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Highest worker count the global pool will start (sanity clamp for
+/// absurd CHON_THREADS values; the workers park when idle, but each one
+/// still costs a stack).
+const MAX_THREADS: usize = 256;
+
+/// A lifetime-erased view of one submitted job. The pointers borrow from
+/// the `run` call frame; the claim window being closed with
+/// `State::inflight` at zero is the proof that no worker still holds (or
+/// can still obtain) them.
+#[derive(Clone, Copy)]
+struct Job {
+    /// the task closure, as a raw wide pointer to `dyn Fn(usize) + Sync`
+    f: *const (dyn Fn(usize) + Sync),
+    /// next task index to claim
+    next: *const AtomicUsize,
+    /// total number of tasks in the job
+    total: usize,
+}
+
+// Job only crosses threads while `run` blocks on the same-frame borrow.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    /// bumped once per submitted job so a worker never re-enters a job it
+    /// already finished
+    epoch: u64,
+    /// how many more workers may still join the current job. Workers
+    /// *claim* participation under the lock; the submitter never waits on
+    /// workers that did not claim, so a lost wakeup (or a pool that was
+    /// shut down) just means fewer helpers — the submitter drains the
+    /// task queue itself either way.
+    claim_left: usize,
+    /// workers that claimed and have not finished yet
+    inflight: usize,
+    /// a worker task panicked (re-raised on the submitting thread)
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here waiting for a new epoch
+    work_cv: Condvar,
+    /// the submitter parks here waiting for `inflight == 0`
+    done_cv: Condvar,
+    /// serializes submitters: the pool broadcasts one job at a time, and
+    /// e.g. `cargo test`'s parallel test threads all share the global
+    /// pool. Nested submissions never touch this lock (they run inline).
+    submit: Mutex<()>,
+}
+
+/// The persistent pool. One global instance (`global()`) serves the whole
+/// process; tests construct private ones.
+pub struct ThreadPool {
+    shared: &'static Shared,
+    workers: usize,
+}
+
+thread_local! {
+    /// Set while this thread is executing pool tasks (worker or
+    /// participating submitter). A nested `run` from inside a task would
+    /// deadlock waiting for workers that are busy running *us*, so nested
+    /// calls execute serially instead — same math, same bits.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Closes the claim window and waits for in-flight workers on drop, so
+/// neither a normal return nor a panic on the submitting thread can free
+/// the borrowed closure while a worker still runs (or could still claim)
+/// it.
+struct WaitGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        // no new claims: a worker waking late finds no job and re-parks
+        st.claim_left = 0;
+        st.job = None;
+        while st.inflight > 0 {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.job {
+                    if st.epoch != seen_epoch && st.claim_left > 0 {
+                        // claim participation (atomically with the job
+                        // read — the submitter's wait covers exactly the
+                        // claimed workers)
+                        seen_epoch = st.epoch;
+                        st.claim_left -= 1;
+                        st.inflight += 1;
+                        break j;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            IN_POOL_TASK.with(|f| f.set(true));
+            let func = unsafe { &*job.f };
+            let next = unsafe { &*job.next };
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= job.total {
+                    break;
+                }
+                func(i);
+            }
+        }));
+        IN_POOL_TASK.with(|f| f.set(false));
+        let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.inflight -= 1;
+        if st.inflight == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Start a pool running `threads` lanes total (`threads - 1` parked
+    /// workers; the submitter is the extra lane). `threads <= 1` builds a
+    /// pool with no workers that runs everything inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let workers = threads - 1;
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                claim_left: 0,
+                inflight: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        }));
+        for _ in 0..workers {
+            std::thread::Builder::new()
+                .name("chon-pool".into())
+                .spawn(move || worker_loop(shared))
+                .expect("spawning pool worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    /// Total parallel lanes (workers + the participating submitter).
+    pub fn lanes(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Run `total` tasks, `f(i)` for each `i in 0..total`, across the
+    /// pool + the calling thread. Blocks until every task has finished.
+    /// Tasks must write disjoint data; the index→thread assignment is
+    /// dynamic. Panics (on this thread) if any task panicked.
+    pub fn run<F: Fn(usize) + Sync>(&self, total: usize, f: F) {
+        if total == 0 {
+            return;
+        }
+        // no workers, a single task, or a nested call from inside a pool
+        // task: execute inline (nested submission would deadlock on the
+        // busy workers, and the math is scheduling-independent anyway)
+        if self.workers == 0 || total == 1 || IN_POOL_TASK.with(|c| c.get()) {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        // one job at a time; declared first so it drops after the
+        // panicked-flag read below
+        let _submit = self
+            .shared
+            .submit
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let next = AtomicUsize::new(0);
+        let f_obj: &(dyn Fn(usize) + Sync) = &f;
+        // erase the borrow's lifetime for the trip through the workers;
+        // WaitGuard keeps this frame alive until every worker has left
+        // the job, so the 'static claim is never acted on after free
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+        let job = Job {
+            f: f_static as *const (dyn Fn(usize) + Sync),
+            next: &next as *const AtomicUsize,
+            total,
+        };
+        // wake at most as many workers as there are tasks beyond the
+        // submitter's own lane — a tiny job on a big pool must not pay a
+        // full-pool wakeup-and-barrier round trip
+        let helpers = self.workers.min(total - 1);
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            if st.shutdown {
+                // workers are gone; degrade to inline instead of waiting
+                // on claims that can never come
+                drop(st);
+                for i in 0..total {
+                    f(i);
+                }
+                return;
+            }
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.claim_left = helpers;
+            st.inflight = 0;
+            st.panicked = false;
+        }
+        // notify_one per wanted helper: a lost wakeup only costs a helper
+        // (the submitter drains the queue regardless), never correctness
+        for _ in 0..helpers {
+            self.shared.work_cv.notify_one();
+        }
+        let guard = WaitGuard { shared: self.shared };
+        // participate: the submitting thread is one of the lanes
+        IN_POOL_TASK.with(|c| c.set(true));
+        let res = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= total {
+                break;
+            }
+            f(i);
+        }));
+        IN_POOL_TASK.with(|c| c.set(false));
+        drop(guard); // waits for the workers
+        let panicked = {
+            let st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.panicked
+        };
+        if let Err(p) = res {
+            std::panic::resume_unwind(p);
+        }
+        if panicked {
+            panic!("a pool task panicked");
+        }
+    }
+
+    /// `f(i, &mut items[i])` in parallel — disjoint `&mut` access to the
+    /// slice elements without locks.
+    pub fn for_each_mut<T: Send, F: Fn(usize, &mut T) + Sync>(
+        &self,
+        items: &mut [T],
+        f: F,
+    ) {
+        struct SendPtr<T>(*mut T);
+        unsafe impl<T> Send for SendPtr<T> {}
+        unsafe impl<T> Sync for SendPtr<T> {}
+        let base = SendPtr(items.as_mut_ptr());
+        let n = items.len();
+        self.run(n, move |i| {
+            // each index visited exactly once -> disjoint &mut
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        });
+    }
+
+    /// Collect `f(i)` for `i in 0..n`, in index order.
+    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, n: usize, f: F) -> Vec<T> {
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        self.for_each_mut(&mut slots, |i, slot| {
+            *slot = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("pool task did not fill its slot"))
+            .collect()
+    }
+
+    /// Ask the workers to exit (tests; the global pool never shuts down).
+    pub fn shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.shutdown = true;
+        self.shared.work_cv.notify_all();
+    }
+}
+
+// ------------------------------------------------------------------
+// The global pool
+// ------------------------------------------------------------------
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the lane count the global pool will start with. Must run before
+/// the first `global()` call to take effect (main wires `--threads` here
+/// before any compute); later calls are ignored. `CHON_THREADS` overrides
+/// both.
+pub fn configure_threads(threads: usize) {
+    CONFIGURED.store(threads, Ordering::Relaxed);
+}
+
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("CHON_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    let hint = CONFIGURED.load(Ordering::Relaxed);
+    if hint > 0 {
+        return hint;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// The process-wide pool, started on first use.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(16, |i| {
+                sum.fetch_add(round + i as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..50u64).map(|r| 16 * r + 120).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), expect);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn map_returns_in_index_order() {
+        let pool = ThreadPool::new(4);
+        let v = pool.map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn for_each_mut_gives_disjoint_access() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<usize> = vec![0; 257];
+        pool.for_each_mut(&mut items, |i, x| *x = i + 1);
+        assert!(items.iter().enumerate().all(|(i, &x)| x == i + 1));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.lanes(), 1);
+        let v = pool.map(10, |i| i);
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_run_from_a_task_completes() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            // would deadlock without the nested-serial fallback
+            global().run(4, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn run_after_shutdown_degrades_to_inline() {
+        let pool = ThreadPool::new(4);
+        pool.shutdown();
+        // workers are gone; the submitter must drain everything itself
+        // and return (this used to be a deadlock shape)
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(64, |i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must reach the submitter");
+        // the pool must still work afterwards
+        let v = pool.map(8, |i| i + 1);
+        assert_eq!(v, (1..=8).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,168 @@
+//! Property tests for the packed matmul microkernel: random (possibly
+//! ragged) shapes against a naive f64 triple-loop reference, bitwise
+//! serial/parallel identity at every thread count, and the degenerate
+//! shapes (1×N, N×1, empty) the tiling edges must survive.
+
+use chon::util::ndarray::{matmul, matmul_into, matmul_par, Mat};
+use chon::util::prng::Rng;
+use chon::util::proptest::{check, Gen};
+
+/// Random GEMM problem: shapes land on and around the MR=4 / NR=16 /
+/// KC=256 tile edges, including the small-m fallback path.
+#[derive(Clone, Debug)]
+struct Problem {
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+}
+
+struct ProblemGen;
+
+impl Gen for ProblemGen {
+    type Value = Problem;
+
+    fn generate(&self, rng: &mut Rng) -> Problem {
+        // mix exact tile multiples with off-by-one raggedness: b-1..=b+1
+        let edge = |rng: &mut Rng, bases: &[usize]| {
+            let b = bases[rng.below(bases.len())];
+            (b + rng.below(3)).saturating_sub(1).max(1)
+        };
+        Problem {
+            m: edge(rng, &[1, 4, 8, 9, 16, 33]),
+            k: edge(rng, &[1, 15, 16, 64, 255, 256, 300]),
+            n: edge(rng, &[1, 15, 16, 17, 32, 48]),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &Problem) -> Vec<Problem> {
+        let mut out = Vec::new();
+        for (m, k, n) in [
+            (v.m / 2, v.k, v.n),
+            (v.m, v.k / 2, v.n),
+            (v.m, v.k, v.n / 2),
+        ] {
+            if m >= 1 && k >= 1 && n >= 1 && (m, k, n) != (v.m, v.k, v.n) {
+                out.push(Problem { m, k, n, seed: v.seed });
+            }
+        }
+        out
+    }
+}
+
+fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn naive(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0f64;
+            for kk in 0..a.cols {
+                acc += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+            }
+            *out.at_mut(i, j) = acc as f32;
+        }
+    }
+    out
+}
+
+fn close(got: &Mat, want: &Mat, k: usize) -> bool {
+    // f32 chains vs an f64 reference: error grows with the chain length
+    let tol = 1e-5 * (k as f32).sqrt().max(1.0) * 8.0;
+    got.data
+        .iter()
+        .zip(&want.data)
+        .all(|(x, y)| (x - y).abs() <= tol * (1.0 + y.abs()))
+}
+
+#[test]
+fn packed_kernel_matches_naive_reference() {
+    check("matmul vs naive", 0xA1, 60, &ProblemGen, |p| {
+        let a = rand_mat(p.m, p.k, p.seed ^ 1);
+        let b = rand_mat(p.k, p.n, p.seed ^ 2);
+        close(&matmul(&a, &b), &naive(&a, &b), p.k)
+    });
+}
+
+#[test]
+fn parallel_is_bit_identical_to_serial_at_every_thread_count() {
+    check("matmul_par == matmul", 0xB2, 40, &ProblemGen, |p| {
+        let a = rand_mat(p.m, p.k, p.seed ^ 3);
+        let b = rand_mat(p.k, p.n, p.seed ^ 4);
+        let s = matmul(&a, &b);
+        (1..=8).all(|t| matmul_par(&a, &b, t).data == s.data)
+    });
+}
+
+#[test]
+fn accumulate_adds_on_top_of_existing_contents() {
+    check("matmul_into accumulate", 0xC3, 40, &ProblemGen, |p| {
+        let a = rand_mat(p.m, p.k, p.seed ^ 5);
+        let b = rand_mat(p.k, p.n, p.seed ^ 6);
+        let once = matmul(&a, &b);
+        let mut out = once.clone();
+        matmul_into(&a, &b, &mut out, true);
+        out.data
+            .iter()
+            .zip(&once.data)
+            .all(|(x, y)| (x - 2.0 * y).abs() <= 1e-3 * (1.0 + y.abs()))
+    });
+}
+
+#[test]
+fn vector_shapes_and_empty_dims() {
+    // 1×N (vector-matrix), N×1 (matrix-vector), both at once
+    let a = rand_mat(1, 64, 1);
+    let b = rand_mat(64, 48, 2);
+    assert!(close(&matmul(&a, &b), &naive(&a, &b), 64));
+    let a = rand_mat(48, 64, 3);
+    let b = rand_mat(64, 1, 4);
+    assert!(close(&matmul(&a, &b), &naive(&a, &b), 64));
+    let a = rand_mat(1, 16, 5);
+    let b = rand_mat(16, 1, 6);
+    assert!(close(&matmul(&a, &b), &naive(&a, &b), 16));
+
+    // empty on every axis: no panics, correct (possibly empty) output
+    let a = Mat::zeros(0, 7);
+    let b = rand_mat(7, 5, 7);
+    assert_eq!(matmul(&a, &b).data.len(), 0);
+    let a = rand_mat(9, 0, 8);
+    let b = Mat::zeros(0, 5);
+    let out = matmul(&a, &b);
+    assert_eq!((out.rows, out.cols), (9, 5));
+    assert!(out.data.iter().all(|&v| v == 0.0));
+    let a = rand_mat(9, 7, 9);
+    let b = Mat::zeros(7, 0);
+    assert_eq!(matmul(&a, &b).data.len(), 0);
+    assert_eq!(matmul_par(&a, &b, 4).data.len(), 0);
+
+    // accumulate over k == 0 must leave the output untouched
+    let a = rand_mat(9, 0, 10);
+    let b = Mat::zeros(0, 5);
+    let mut out = rand_mat(9, 5, 11);
+    let before = out.data.clone();
+    matmul_into(&a, &b, &mut out, true);
+    assert_eq!(out.data, before);
+}
+
+#[test]
+fn transpose_matches_reference_on_ragged_tiles() {
+    check(
+        "blocked transpose",
+        0xD4,
+        40,
+        &ProblemGen,
+        |p| {
+            let a = rand_mat(p.m.max(1), p.k.max(1), p.seed ^ 7);
+            let t = a.transpose();
+            if (t.rows, t.cols) != (a.cols, a.rows) {
+                return false;
+            }
+            (0..a.rows).all(|r| (0..a.cols).all(|c| t.at(c, r) == a.at(r, c)))
+        },
+    );
+}
