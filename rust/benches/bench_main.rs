@@ -27,7 +27,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use chon::bench::{time_auto, BenchEntry, Table};
+use chon::bench::{time_auto, time_fn, BenchEntry, Table};
 use chon::config::RunConfig;
 use chon::coordinator::{ablation, evalsuite, Monitor, Trainer};
 use chon::diagnostics;
@@ -896,6 +896,75 @@ fn perf() -> Result<()> {
             table.row(&[
                 format!("serve decode (b={batch})"),
                 "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
+            ]);
+        }
+
+        // cross-session batched prefill: 8 ragged prompts in one pass
+        {
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let prompts: Vec<Vec<u32>> = (0..8usize)
+                .map(|i| {
+                    (0..10 + i).map(|j| 97 + ((i + j) % 24) as u32).collect()
+                })
+                .collect();
+            let n_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+            let t = time_auto(300.0, || {
+                let mut sessions: Vec<chon::serve::Session> =
+                    (0..prompts.len()).map(|_| eng.new_session()).collect();
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                let ps: Vec<&[u32]> =
+                    prompts.iter().map(|p| p.as_slice()).collect();
+                std::hint::black_box(eng.prefill_batch(&mut refs, &ps));
+            });
+            record("serve_prefill_batch8", t.median_ms);
+            table.row(&[
+                "serve prefill (8 prompts)".into(),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", n_tokens as f64 / t.median_ms * 1e3),
+            ]);
+        }
+
+        // paged long-context decode: SA sessions deep into their KV pages
+        {
+            let cfg = chon::runtime::native::model_cfg("tiny_sa")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let long: Vec<u32> =
+                (0..256).map(|i| 97 + (i % 24) as u32).collect();
+            let batch = 4usize;
+            let mut sessions: Vec<chon::serve::Session> =
+                (0..batch).map(|_| eng.new_session()).collect();
+            for s in sessions.iter_mut() {
+                eng.prefill(s, &long);
+            }
+            let toks: Vec<u32> = (0..batch as u32).map(|i| 97 + i).collect();
+            // fixed iteration count: each step grows the cache, so an
+            // adaptive budget would time a moving target
+            let t = time_fn(2, 30, || {
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                std::hint::black_box(eng.decode_step(&mut refs, &toks));
+            });
+            record("serve_decode_paged", t.median_ms);
+            table.row(&[
+                format!("serve decode paged (b={batch}, ctx 256)"),
+                "tiny_sa/chon".into(),
                 format!("{:.2}", t.median_ms),
                 format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
             ]);

@@ -49,6 +49,16 @@ pub struct RunConfig {
     pub max_batch: usize,
     /// serve: how long a fresh batch waits for companions (microseconds)
     pub max_wait_us: u64,
+    /// serve: HTTP front-end port (0 = ephemeral; None = HTTP disabled)
+    pub http_port: Option<u16>,
+    /// serve: max idle named sessions kept in memory (0 = unlimited)
+    pub max_resident_sessions: usize,
+    /// serve: max KV positions resident across idle sessions (0 = unlimited)
+    pub max_kv_tokens: usize,
+    /// serve: directory evicted sessions spill to (None = temp dir)
+    pub spill_dir: Option<PathBuf>,
+    /// client: named-session id for one-shot requests (SGEN)
+    pub session: Option<String>,
     /// client: total requests in load mode (0 = single-shot)
     pub requests: usize,
     /// client: concurrent load threads
@@ -86,6 +96,11 @@ impl Default for RunConfig {
             port: 7411,
             max_batch: 8,
             max_wait_us: 2000,
+            http_port: Some(7412),
+            max_resident_sessions: 0,
+            max_kv_tokens: 0,
+            spill_dir: None,
+            session: None,
             requests: 0,
             concurrency: 4,
             max_tokens: 32,
@@ -172,6 +187,20 @@ impl RunConfig {
                 "port" => self.port = next()?.parse()?,
                 "max-batch" => self.max_batch = next()?.parse()?,
                 "max-wait-us" => self.max_wait_us = next()?.parse()?,
+                // "off"/"none" disables the HTTP front end entirely
+                "http-port" => {
+                    let v = next()?;
+                    self.http_port = match v.as_str() {
+                        "off" | "none" => None,
+                        p => Some(p.parse()?),
+                    };
+                }
+                "max-resident-sessions" => {
+                    self.max_resident_sessions = next()?.parse()?
+                }
+                "max-kv-tokens" => self.max_kv_tokens = next()?.parse()?,
+                "spill-dir" => self.spill_dir = Some(PathBuf::from(next()?)),
+                "session" => self.session = Some(next()?),
                 "requests" => self.requests = next()?.parse()?,
                 "concurrency" => self.concurrency = next()?.parse()?,
                 "max-tokens" => self.max_tokens = next()?.parse()?,
@@ -255,6 +284,32 @@ mod tests {
         assert_eq!(c.concurrency, 8);
         assert_eq!(c.temp, 0.7);
         assert!(c.shutdown);
+    }
+
+    #[test]
+    fn serve_v2_flags_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.http_port, Some(7412));
+        c.apply_args(&[
+            "--http-port".into(),
+            "0".into(),
+            "--max-resident-sessions".into(),
+            "2".into(),
+            "--max-kv-tokens".into(),
+            "4096".into(),
+            "--spill-dir".into(),
+            "/tmp/spill".into(),
+            "--session".into(),
+            "conv1".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.http_port, Some(0));
+        assert_eq!(c.max_resident_sessions, 2);
+        assert_eq!(c.max_kv_tokens, 4096);
+        assert_eq!(c.spill_dir.as_deref(), Some(std::path::Path::new("/tmp/spill")));
+        assert_eq!(c.session.as_deref(), Some("conv1"));
+        c.apply_args(&["--http-port".into(), "off".into()]).unwrap();
+        assert_eq!(c.http_port, None);
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct Trainer {
     /// the tokenizer the data pipeline runs (persisted into checkpoints)
     pub tokenizer: Tokenizer,
     prefetch: Prefetcher,
+    /// batches pulled from the data pipeline so far (training steps plus
+    /// diag/eval probes) — checkpointed as the stream position so a
+    /// resumed run fast-forwards past already-consumed batches
+    batches_consumed: u64,
     /// (batch, seq_len) from the artifact meta
     pub batch: usize,
     pub seq_len: usize,
@@ -171,6 +175,7 @@ impl Trainer {
             monitor: Monitor::new(metric_names),
             tokenizer,
             prefetch,
+            batches_consumed: 0,
             batch,
             seq_len,
             total_steps,
@@ -184,9 +189,15 @@ impl Trainer {
         )
     }
 
+    /// Pull the next batch, advancing the checkpointable stream position.
+    fn next_data_batch(&mut self) -> Batch {
+        self.batches_consumed += 1;
+        self.prefetch.next()
+    }
+
     /// Run one training step; returns its metrics.
     pub fn step(&mut self) -> Result<StepMetrics> {
-        let b = self.prefetch.next();
+        let b = self.next_data_batch();
         let (tokens, targets) = self.batch_tensors(&b);
         let t0 = Instant::now();
         let k = self.state.params.len();
@@ -251,7 +262,7 @@ impl Trainer {
             return Ok(());
         }
         let diag = self.diag_exe.as_ref().unwrap().clone();
-        let b = self.prefetch.next();
+        let b = self.next_data_batch();
         let (tokens, _) = self.batch_tensors(&b);
         let mut inputs = self.state.params.clone();
         inputs.push(tokens);
@@ -285,7 +296,7 @@ impl Trainer {
         let mut loss = 0.0f32;
         let mut acc = 0.0f32;
         for _ in 0..n_batches {
-            let b = self.prefetch.next();
+            let b = self.next_data_batch();
             let (tokens, targets) = self.batch_tensors(&b);
             let mut inputs = self.state.params.clone();
             inputs.push(tokens);
@@ -351,6 +362,7 @@ impl Trainer {
             seed: self.cfg.seed,
             step: self.state.step,
             vocab: self.tokenizer.vocab,
+            data_batches: self.batches_consumed,
         };
         let tensors: Vec<(String, HostTensor)> = self
             .state
@@ -402,11 +414,12 @@ impl Trainer {
     /// silently resetting the optimizer was the old behavior and is now an
     /// explicit error instead.
     ///
-    /// Known limitation: the data pipeline restarts from the stream head
-    /// (its position is not checkpointed), so a resumed run revisits the
-    /// batches the original run already consumed — loss trajectories of
-    /// resumed vs uninterrupted runs differ. Fast-forwarding the stream is
-    /// a ROADMAP follow-up.
+    /// The data-stream position (`meta.data_batches`) is restored by
+    /// fast-forwarding the deterministic pipeline past the batches the
+    /// original run already consumed, so a resumed run's per-step losses
+    /// are bit-identical to an uninterrupted run's
+    /// (`tests/serve_invariants.rs`). Pre-v2 checkpoints carry no
+    /// position (0): legacy behavior, the stream restarts from its head.
     pub fn restore(&mut self, path: &Path) -> Result<()> {
         let dir = ckptdir::resolve(path)?;
         let loaded = ckptdir::load_dir(&dir, &self.param_layout())?;
@@ -437,6 +450,12 @@ impl Trainer {
         self.state.m = optim.m;
         self.state.v = optim.v;
         self.state.step = optim.step;
+        // fast-forward the (deterministic) data stream to the position
+        // the checkpoint was written at; batches are discarded in order,
+        // so the next pull sees exactly what the original run would have
+        while self.batches_consumed < loaded.meta.data_batches {
+            let _ = self.next_data_batch();
+        }
         Ok(())
     }
 

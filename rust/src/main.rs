@@ -34,7 +34,7 @@ COMMANDS:
   eval-suite     train bf16/fp8/nvfp4/chon and report downstream scores
   finetune       post-training gap study (Fig. 15c substitute)
   diag           longitudinal diagnostics (diag every 10 steps)
-  serve          serve a checkpoint over TCP with request batching
+  serve          serve a checkpoint over TCP + HTTP with request batching
   client         talk to a server; --requests N turns it into a load gen
   bench-diff     diff a bench JSON report against the checked-in baseline
   info           list models/recipes (native) or artifacts (pjrt)
@@ -55,10 +55,15 @@ COMMON FLAGS:
 SERVE/CLIENT FLAGS:
   --checkpoint DIR  checkpoint dir (or parent; highest step wins)
   --host H          (default 127.0.0.1)   --port P       (default 7411; 0=any)
+  --http-port P     HTTP front end (default 7412; 0=any; off=disabled)
   --max-batch N     (default 8)           --max-wait-us U (default 2000)
+  --max-resident-sessions N  idle named sessions kept in RAM (0=unlimited)
+  --max-kv-tokens N          resident idle KV positions cap (0=unlimited)
+  --spill-dir DIR            where evicted sessions go (default: temp dir)
   --requests N      client load mode      --concurrency C (default 4)
   --max-tokens N    (default 32)          --temp T       (default 0 = greedy)
-  --prompt TEXT     --shutdown            (ask the server to drain + stop)
+  --prompt TEXT     --session ID          (continue a named session, SGEN)
+  --shutdown        (ask the server to drain + stop)
 
 BENCH-DIFF FLAGS:
   --baseline FILE   (default benches/baseline/perf_baseline.json)
@@ -67,8 +72,10 @@ BENCH-DIFF FLAGS:
 
 The native backend runs the tiny GLA/SA training step in pure Rust — no
 artifacts directory and no libxla needed; runs are bit-reproducible for a
-fixed --seed. Wire protocol: `GEN <max_tokens> <temp>\\t<prompt>` in,
-streamed `TOK <piece>` lines + `DONE <n> <ms>` out (see rust/README.md).
+fixed --seed. Wire protocol: `GEN <max_tokens> <temp>\\t<prompt>` (or
+`SGEN <session> ...` to continue a named session) in, streamed `TOK
+<piece>` lines + `DONE <n> <ms>` out; HTTP: POST /generate, GET /stats,
+POST /shutdown (see rust/README.md).
 ";
 
 fn is_native(cfg: &RunConfig) -> bool {
@@ -245,15 +252,22 @@ fn main() -> Result<()> {
             let opts = ServeOpts {
                 host: cfg.host.clone(),
                 port: cfg.port,
+                http_port: cfg.http_port,
                 max_batch: cfg.max_batch,
                 max_wait_us: cfg.max_wait_us,
                 // pool floor of 8: a worker is pinned per live connection,
                 // so 1-2 core boxes must still take concurrent clients
                 workers: cfg.threads.clamp(8, 32),
                 seed: cfg.seed,
+                max_resident_sessions: cfg.max_resident_sessions,
+                max_kv_tokens: cfg.max_kv_tokens,
+                spill_dir: cfg.spill_dir.clone(),
             };
             let server = Server::bind(engine, &opts)?;
             println!("listening on {}:{}", opts.host, server.port());
+            if let Some(hp) = server.http_port() {
+                println!("http front end on {}:{}", opts.host, hp);
+            }
             let stats = server.run()?;
             println!("final stats: {stats}");
         }
@@ -262,16 +276,32 @@ fn main() -> Result<()> {
                 client::send_shutdown(&cfg.host, cfg.port)?;
                 println!("shutdown sent to {}:{}", cfg.host, cfg.port);
             } else if cfg.requests == 0 {
-                let (text, n, ms) = client::generate_once(
-                    &cfg.host,
-                    cfg.port,
-                    &cfg.prompt,
-                    cfg.max_tokens,
-                    cfg.temp,
-                )?;
+                let (text, n, ms) = match &cfg.session {
+                    Some(sid) => client::generate_session_once(
+                        &cfg.host,
+                        cfg.port,
+                        sid,
+                        &cfg.prompt,
+                        cfg.max_tokens,
+                        cfg.temp,
+                    )?,
+                    None => client::generate_once(
+                        &cfg.host,
+                        cfg.port,
+                        &cfg.prompt,
+                        cfg.max_tokens,
+                        cfg.temp,
+                    )?,
+                };
                 println!("{text}");
                 println!("[{n} tokens in {ms:.1} ms]");
             } else {
+                if cfg.session.is_some() {
+                    bail!(
+                        "--session applies to one-shot requests only; load \
+                         mode (--requests N) always sends ephemeral GENs"
+                    );
+                }
                 let opts = ClientOpts {
                     host: cfg.host.clone(),
                     port: cfg.port,

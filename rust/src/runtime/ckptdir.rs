@@ -41,6 +41,13 @@ pub struct CheckpointMeta {
     pub seed: u64,
     pub step: usize,
     pub vocab: usize,
+    /// how many batches the data pipeline had emitted when this
+    /// checkpoint was written (training steps + diag/eval probes).
+    /// `Trainer::restore` fast-forwards the stream past them so a
+    /// resumed run sees exactly the batches an uninterrupted run would.
+    /// Optional on read (0 for pre-v2 checkpoints: legacy behavior,
+    /// stream restarts from its head).
+    pub data_batches: u64,
 }
 
 impl CheckpointMeta {
@@ -48,9 +55,9 @@ impl CheckpointMeta {
         format!(
             "# chon checkpoint metadata (written by Trainer::save_checkpoint_to)\n\
              format_version = {}\nmodel = \"{}\"\nrecipe = \"{}\"\n\
-             seed = {}\nstep = {}\nvocab = {}\n",
+             seed = {}\nstep = {}\nvocab = {}\ndata_batches = {}\n",
             self.format_version, self.model, self.recipe, self.seed, self.step,
-            self.vocab
+            self.vocab, self.data_batches
         )
     }
 
@@ -69,6 +76,13 @@ impl CheckpointMeta {
             }
             Ok(doc.int_or("", key, 0))
         };
+        // optional: older checkpoints predate the stream position. A
+        // negative value (corruption / hand edit) must not wrap to ~2^64
+        // — restore() fast-forwards the stream this many batches.
+        let data_batches = doc.int_or("", "data_batches", 0);
+        if data_batches < 0 {
+            bail!("checkpoint meta has negative data_batches {data_batches}");
+        }
         Ok(CheckpointMeta {
             format_version: need_int("format_version")? as usize,
             model: need_str("model")?,
@@ -76,6 +90,7 @@ impl CheckpointMeta {
             seed: need_int("seed")? as u64,
             step: need_int("step")? as usize,
             vocab: need_int("vocab")? as usize,
+            data_batches: data_batches as u64,
         })
     }
 }
@@ -285,6 +300,7 @@ mod tests {
             seed: 3,
             step: 20,
             vocab: 256,
+            data_batches: 22,
         }
     }
 
@@ -315,6 +331,18 @@ mod tests {
         assert_eq!(back.tokenizer.vocab, 256);
         // resolve() accepts both the dir and its parent
         assert_eq!(resolve(&dir).unwrap(), dir);
+    }
+
+    #[test]
+    fn legacy_meta_without_data_batches_loads() {
+        let dir = tmpdir("legacy_meta");
+        let mut meta = demo_meta();
+        meta.data_batches = 0;
+        let text = meta.to_toml().replace("data_batches = 0\n", "");
+        assert!(!text.contains("data_batches"));
+        std::fs::write(dir.join(META_FILE), text).unwrap();
+        let back = load_meta(&dir).unwrap();
+        assert_eq!(back, meta, "missing data_batches must default to 0");
     }
 
     #[test]

@@ -1,14 +1,23 @@
 //! Request batching: coalesce concurrent generation requests into one
 //! decode batch and fan the streamed tokens back out per request.
 //!
-//! A single engine thread owns the model. Incoming requests queue on a
-//! channel; the loop admits up to `max_batch` of them (waiting at most
-//! `max_wait` to fill a fresh batch — the WIND-style latency/throughput
-//! knob), prefills each prompt, then steps all active sessions together.
-//! Sessions join and leave the batch independently (continuous batching),
-//! so one long generation never blocks short ones behind it. Because the
-//! engine's forward path is batch-invariant, coalescing is purely a
-//! throughput optimization — it never changes any request's output.
+//! A single engine thread owns the model and the named-session cache.
+//! Incoming requests queue on a channel; the loop admits up to
+//! `max_batch` of them (waiting at most `max_wait` to fill a fresh batch
+//! — the WIND-style latency/throughput knob), prefills the whole admitted
+//! group in ONE cross-session batched pass (`Engine::prefill_batch`:
+//! token-step t advances every waiting prompt at once, so N new requests
+//! cost ~one prefill instead of N), then steps all active sessions
+//! together. Sessions join and leave the batch independently (continuous
+//! batching), so one long generation never blocks short ones behind it.
+//! Because the engine's forward path is batch-invariant, coalescing is
+//! purely a throughput optimization — it never changes any request's
+//! output.
+//!
+//! Named sessions (`GenRequest::session`) persist across requests in a
+//! `SessionStore`: checked out while generating, checked back in when
+//! done, LRU-evicted to disk past `--max-resident-sessions` /
+//! `--max-kv-tokens` and reloaded bit-exactly on their next request.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -16,7 +25,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use crate::serve::engine::{Engine, Session};
+use crate::serve::pages::{SessionStore, StoreOpts};
+use crate::serve::protocol::MAX_SESSION_TOKENS;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 
 /// One queued generation request.
@@ -24,6 +38,9 @@ pub struct GenRequest {
     pub prompt: String,
     pub max_tokens: usize,
     pub temp: f32,
+    /// named-session id: state persists across requests under this key
+    /// (None = ephemeral, state dropped when the generation finishes)
+    pub session: Option<String>,
     /// streamed token pieces + terminal event go back through here
     pub reply: Sender<TokenEvent>,
 }
@@ -43,7 +60,7 @@ pub enum TokenEvent {
     Error(String),
 }
 
-/// Lock-free serve counters (read by the STATS command).
+/// Lock-free serve counters (read by STATS and `GET /stats`).
 #[derive(Default)]
 pub struct ServeStats {
     pub requests: AtomicU64,
@@ -54,6 +71,22 @@ pub struct ServeStats {
     /// Σ batch size over decode steps (mean = batch_sum / decode_steps)
     pub batch_sum: AtomicU64,
     pub max_batch: AtomicU64,
+    /// prefill token-steps (one forward pass each, any batch size)
+    pub prefill_steps: AtomicU64,
+    /// prefill token-steps that advanced 2+ prompts at once
+    pub prefill_batched_steps: AtomicU64,
+    /// prompt tokens consumed by prefill
+    pub prefill_tokens: AtomicU64,
+    /// cumulative sessions spilled to disk
+    pub evictions: AtomicU64,
+    /// cumulative sessions reloaded from disk
+    pub reloads: AtomicU64,
+    /// gauge: idle named sessions currently in memory
+    pub resident_sessions: AtomicU64,
+    /// gauge: idle named sessions currently on disk
+    pub spilled_sessions: AtomicU64,
+    /// gauge: KV positions held by resident idle sessions
+    pub resident_kv_tokens: AtomicU64,
 }
 
 impl ServeStats {
@@ -67,16 +100,49 @@ impl ServeStats {
 
     /// The one-line STATS payload.
     pub fn snapshot_line(&self) -> String {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
         format!(
             "requests={} tokens={} decode_steps={} batched_steps={} \
-             mean_batch={:.3} max_batch={}",
-            self.requests.load(Ordering::Relaxed),
-            self.tokens.load(Ordering::Relaxed),
-            self.decode_steps.load(Ordering::Relaxed),
-            self.batched_steps.load(Ordering::Relaxed),
+             mean_batch={:.3} max_batch={} prefill_steps={} \
+             prefill_batched_steps={} prefill_tokens={} evictions={} \
+             reloads={} resident_sessions={} spilled_sessions={} \
+             resident_kv_tokens={}",
+            g(&self.requests),
+            g(&self.tokens),
+            g(&self.decode_steps),
+            g(&self.batched_steps),
             self.mean_batch(),
-            self.max_batch.load(Ordering::Relaxed),
+            g(&self.max_batch),
+            g(&self.prefill_steps),
+            g(&self.prefill_batched_steps),
+            g(&self.prefill_tokens),
+            g(&self.evictions),
+            g(&self.reloads),
+            g(&self.resident_sessions),
+            g(&self.spilled_sessions),
+            g(&self.resident_kv_tokens),
         )
+    }
+
+    /// The `GET /stats` payload.
+    pub fn snapshot_json(&self) -> Json {
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::Obj(vec![
+            ("requests".into(), n(&self.requests)),
+            ("tokens".into(), n(&self.tokens)),
+            ("decode_steps".into(), n(&self.decode_steps)),
+            ("batched_steps".into(), n(&self.batched_steps)),
+            ("mean_batch".into(), Json::Num(self.mean_batch())),
+            ("max_batch".into(), n(&self.max_batch)),
+            ("prefill_steps".into(), n(&self.prefill_steps)),
+            ("prefill_batched_steps".into(), n(&self.prefill_batched_steps)),
+            ("prefill_tokens".into(), n(&self.prefill_tokens)),
+            ("evictions".into(), n(&self.evictions)),
+            ("reloads".into(), n(&self.reloads)),
+            ("resident_sessions".into(), n(&self.resident_sessions)),
+            ("spilled_sessions".into(), n(&self.spilled_sessions)),
+            ("resident_kv_tokens".into(), n(&self.resident_kv_tokens)),
+        ])
     }
 }
 
@@ -90,6 +156,13 @@ struct Active {
     t0: Instant,
 }
 
+/// Engine-loop knobs bundled so the loop signature stays readable.
+struct LoopCfg {
+    max_batch: usize,
+    max_wait: Duration,
+    seed: u64,
+}
+
 /// The engine thread + its submission handle.
 pub struct RequestBatcher {
     tx: Sender<GenRequest>,
@@ -101,21 +174,26 @@ pub struct RequestBatcher {
 impl RequestBatcher {
     /// Spawn the engine loop. `max_wait` bounds how long a fresh batch
     /// waits for companions before decoding starts; `seed` drives
-    /// temperature sampling (greedy requests ignore it).
+    /// temperature sampling (greedy requests ignore it); `store_opts`
+    /// configures the named-session cache (residency limits + spill dir
+    /// — creating the spill dir is the only fallible step).
     pub fn spawn(
         engine: Engine,
         max_batch: usize,
         max_wait: Duration,
         seed: u64,
-    ) -> RequestBatcher {
+        store_opts: StoreOpts,
+    ) -> Result<RequestBatcher> {
+        let store = SessionStore::new(store_opts)?;
         let (tx, rx) = channel::<GenRequest>();
         let stats = Arc::new(ServeStats::default());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (stats2, shutdown2) = (stats.clone(), shutdown.clone());
+        let cfg = LoopCfg { max_batch: max_batch.max(1), max_wait, seed };
         let handle = std::thread::spawn(move || {
-            engine_loop(engine, rx, stats2, shutdown2, max_batch.max(1), max_wait, seed);
+            engine_loop(engine, rx, stats2, shutdown2, cfg, store);
         });
-        RequestBatcher { tx, stats, shutdown, handle: Some(handle) }
+        Ok(RequestBatcher { tx, stats, shutdown, handle: Some(handle) })
     }
 
     /// A cloneable submission handle for connection threads.
@@ -140,37 +218,15 @@ fn engine_loop(
     rx: Receiver<GenRequest>,
     stats: Arc<ServeStats>,
     shutdown: Arc<AtomicBool>,
-    max_batch: usize,
-    max_wait: Duration,
-    seed: u64,
+    cfg: LoopCfg,
+    mut store: SessionStore,
 ) {
     let mut active: Vec<Active> = Vec::new();
     let mut next_id: u64 = 0;
 
-    let admit = |active: &mut Vec<Active>, req: GenRequest, next_id: &mut u64| {
-        stats.requests.fetch_add(1, Ordering::Relaxed);
-        let toks = engine.tokenizer.encode(&req.prompt);
-        if toks.is_empty() {
-            let _ = req.reply.send(TokenEvent::Error("empty prompt".into()));
-            return;
-        }
-        let t0 = Instant::now();
-        let mut sess = engine.new_session();
-        let logits = engine.prefill(&mut sess, &toks);
-        let mut rng = Rng::new(seed ^ 0x5E2E).fold_in(*next_id);
-        *next_id += 1;
-        let first = engine.sample(&logits, req.temp, &mut rng);
-        let mut a = Active { sess, req, last: first, produced: 0, rng, t0 };
-        emit_token(&engine, &stats, &mut a);
-        if a.produced < a.req.max_tokens {
-            active.push(a);
-        } else {
-            finish(a);
-        }
-    };
-
     loop {
-        // ---- admission ----
+        // ---- collect a group of newly arrived requests ----
+        let mut group: Vec<GenRequest> = Vec::new();
         if shutdown.load(Ordering::SeqCst) {
             // drain the queue: reject newcomers, finish what is active
             while let Ok(req) = rx.try_recv() {
@@ -186,15 +242,15 @@ fn engine_loop(
             // hold the batch open for up to max_wait to coalesce arrivals
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(req) => {
-                    admit(&mut active, req, &mut next_id);
-                    let deadline = Instant::now() + max_wait;
-                    while active.len() < max_batch {
+                    group.push(req);
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while group.len() < cfg.max_batch {
                         let left = deadline.saturating_duration_since(Instant::now());
                         if left.is_zero() {
                             break;
                         }
                         match rx.recv_timeout(left) {
-                            Ok(req) => admit(&mut active, req, &mut next_id),
+                            Ok(req) => group.push(req),
                             Err(RecvTimeoutError::Timeout) => break,
                             Err(RecvTimeoutError::Disconnected) => break,
                         }
@@ -209,14 +265,26 @@ fn engine_loop(
             }
         } else {
             // continuous batching: top up free slots without waiting
-            while active.len() < max_batch {
+            while active.len() + group.len() < cfg.max_batch {
                 match rx.try_recv() {
-                    Ok(req) => admit(&mut active, req, &mut next_id),
+                    Ok(req) => group.push(req),
                     Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
                         break
                     }
                 }
             }
+        }
+        if !group.is_empty() {
+            admit_group(
+                &engine,
+                &stats,
+                &mut store,
+                &mut active,
+                group,
+                &mut next_id,
+                cfg.seed,
+            );
+            sync_gauges(&stats, &store);
         }
         if active.is_empty() {
             continue;
@@ -242,15 +310,134 @@ fn engine_loop(
         }
         // retire finished sessions (swap_remove without advancing i)
         let mut i = 0;
+        let mut retired = false;
         while i < active.len() {
             if active[i].produced >= active[i].req.max_tokens {
                 let a = active.swap_remove(i);
-                finish(a);
+                finish(&engine, &mut store, a);
+                retired = true;
             } else {
                 i += 1;
             }
         }
+        if retired {
+            sync_gauges(&stats, &store);
+        }
     }
+}
+
+/// Validate, check out session state and batch-prefill one admitted
+/// group, pushing the survivors onto the active list.
+fn admit_group(
+    engine: &Engine,
+    stats: &Arc<ServeStats>,
+    store: &mut SessionStore,
+    active: &mut Vec<Active>,
+    group: Vec<GenRequest>,
+    next_id: &mut u64,
+    seed: u64,
+) {
+    let mut reqs: Vec<GenRequest> = Vec::new();
+    let mut prompts: Vec<Vec<u32>> = Vec::new();
+    let mut sessions: Vec<Session> = Vec::new();
+    for req in group {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let toks = engine.tokenizer.encode(&req.prompt);
+        if toks.is_empty() {
+            let _ = req.reply.send(TokenEvent::Error("empty prompt".into()));
+            continue;
+        }
+        let sess = match &req.session {
+            Some(id) => {
+                let busy = active
+                    .iter()
+                    .any(|a| a.req.session.as_deref() == Some(id.as_str()))
+                    || reqs
+                        .iter()
+                        .any(|r| r.session.as_deref() == Some(id.as_str()));
+                if busy {
+                    let _ = req.reply.send(TokenEvent::Error(format!(
+                        "session {id} is busy"
+                    )));
+                    continue;
+                }
+                match store.take(id, engine) {
+                    Ok(Some(s)) => s,
+                    Ok(None) => engine.new_session(),
+                    Err(e) => {
+                        let _ = req.reply.send(TokenEvent::Error(format!(
+                            "session {id}: {e:#}"
+                        )));
+                        continue;
+                    }
+                }
+            }
+            None => engine.new_session(),
+        };
+        if sess.pos + toks.len() + req.max_tokens > MAX_SESSION_TOKENS {
+            // hand a named session back untouched before rejecting
+            if let Some(id) = &req.session {
+                let _ = store.put(id, sess, engine);
+            }
+            let _ = req.reply.send(TokenEvent::Error(format!(
+                "session context would exceed {MAX_SESSION_TOKENS} tokens"
+            )));
+            continue;
+        }
+        reqs.push(req);
+        prompts.push(toks);
+        sessions.push(sess);
+    }
+    if reqs.is_empty() {
+        return;
+    }
+
+    // prefill accounting: step t advances every prompt longer than t
+    let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+    for t in 0..max_len {
+        let width = prompts.iter().filter(|p| p.len() > t).count();
+        stats.prefill_steps.fetch_add(1, Ordering::Relaxed);
+        if width >= 2 {
+            stats.prefill_batched_steps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let total: u64 = prompts.iter().map(|p| p.len() as u64).sum();
+    stats.prefill_tokens.fetch_add(total, Ordering::Relaxed);
+
+    // one cross-session batched prefill pass over the admitted group
+    let t0 = Instant::now();
+    let logits = {
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        let ps: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        engine.prefill_batch(&mut refs, &ps)
+    };
+    for ((req, sess), lg) in reqs.into_iter().zip(sessions).zip(logits) {
+        let mut rng = Rng::new(seed ^ 0x5E2E).fold_in(*next_id);
+        *next_id += 1;
+        let first = engine.sample(&lg, req.temp, &mut rng);
+        let mut a = Active { sess, req, last: first, produced: 0, rng, t0 };
+        emit_token(engine, stats, &mut a);
+        if a.produced < a.req.max_tokens {
+            active.push(a);
+        } else {
+            finish(engine, store, a);
+        }
+    }
+}
+
+/// Mirror the store's counters/gauges into the lock-free stats.
+fn sync_gauges(stats: &ServeStats, store: &SessionStore) {
+    stats.evictions.store(store.evictions, Ordering::Relaxed);
+    stats.reloads.store(store.reloads, Ordering::Relaxed);
+    stats
+        .resident_sessions
+        .store(store.resident_len() as u64, Ordering::Relaxed);
+    stats
+        .spilled_sessions
+        .store(store.spilled_len() as u64, Ordering::Relaxed);
+    stats
+        .resident_kv_tokens
+        .store(store.resident_kv_tokens() as u64, Ordering::Relaxed);
 }
 
 /// Send `a.last` to the requester (drops silently if it hung up).
@@ -264,10 +451,18 @@ fn emit_token(engine: &Engine, stats: &Arc<ServeStats>, a: &mut Active) {
     }
 }
 
-fn finish(a: Active) {
-    let _ = a.req.reply.send(TokenEvent::Done {
-        n_tokens: a.produced,
-        gen_ms: a.t0.elapsed().as_secs_f64() * 1e3,
+/// Retire one generation: named sessions go back into the store (where
+/// the LRU limits may spill them), ephemeral state is dropped.
+fn finish(engine: &Engine, store: &mut SessionStore, a: Active) {
+    let Active { sess, req, produced, t0, .. } = a;
+    if let Some(id) = &req.session {
+        if let Err(e) = store.put(id, sess, engine) {
+            crate::warn!("failed to retain session {id}: {e:#}");
+        }
+    }
+    let _ = req.reply.send(TokenEvent::Done {
+        n_tokens: produced,
+        gen_ms: t0.elapsed().as_secs_f64() * 1e3,
     });
 }
 
@@ -284,6 +479,31 @@ mod tests {
         Engine::from_parts(cfg, recipe("chon").unwrap(), Tokenizer::byte_level(), &params)
     }
 
+    fn spawn_batcher(max_batch: usize) -> RequestBatcher {
+        RequestBatcher::spawn(
+            test_engine(),
+            max_batch,
+            Duration::from_micros(500),
+            0,
+            StoreOpts::default(),
+        )
+        .unwrap()
+    }
+
+    fn gen_req(prompt: &str, max_tokens: usize, session: Option<&str>) -> (GenRequest, Receiver<TokenEvent>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                prompt: prompt.into(),
+                max_tokens,
+                temp: 0.0,
+                session: session.map(|s| s.to_string()),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
     fn collect(rx: &Receiver<TokenEvent>) -> (Vec<u8>, usize) {
         let mut bytes = Vec::new();
         loop {
@@ -297,21 +517,9 @@ mod tests {
 
     #[test]
     fn single_request_completes() {
-        let b = RequestBatcher::spawn(
-            test_engine(),
-            4,
-            Duration::from_micros(500),
-            0,
-        );
-        let (tx, rx) = channel();
-        b.submitter()
-            .send(GenRequest {
-                prompt: "hello".into(),
-                max_tokens: 8,
-                temp: 0.0,
-                reply: tx,
-            })
-            .unwrap();
+        let b = spawn_batcher(4);
+        let (req, rx) = gen_req("hello", 8, None);
+        b.submitter().send(req).unwrap();
         let (bytes, n) = collect(&rx);
         assert_eq!(n, 8);
         assert_eq!(bytes.len(), 8, "byte-level tokens are one byte each");
@@ -320,25 +528,70 @@ mod tests {
 
     #[test]
     fn empty_prompt_is_rejected() {
-        let b = RequestBatcher::spawn(
-            test_engine(),
-            4,
-            Duration::from_micros(500),
-            0,
-        );
-        let (tx, rx) = channel();
-        b.submitter()
-            .send(GenRequest {
-                prompt: String::new(),
-                max_tokens: 4,
-                temp: 0.0,
-                reply: tx,
-            })
-            .unwrap();
+        let b = spawn_batcher(4);
+        let (req, rx) = gen_req("", 4, None);
+        b.submitter().send(req).unwrap();
         match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
             TokenEvent::Error(e) => assert!(e.contains("empty"), "{e}"),
             other => panic!("expected error, got {other:?}"),
         }
+        b.shutdown();
+    }
+
+    /// A named session continues where it left off: two one-turn requests
+    /// against the same id reproduce one two-turn reference generation.
+    #[test]
+    fn named_session_continues_context() {
+        let eng = test_engine();
+        // reference: prefill both prompts into one session back to back
+        let p1 = "hello wor";
+        let p2 = "ld again ";
+        let n = 6usize;
+        let reference = {
+            let mut sess = eng.new_session();
+            let toks1 = eng.tokenizer.encode(p1);
+            let logits = eng.prefill(&mut sess, &toks1);
+            let mut rng = Rng::new(0);
+            let mut last = eng.sample(&logits, 0.0, &mut rng);
+            let mut out1 = eng.tokenizer.decode_bytes(&[last]);
+            for _ in 1..n {
+                let l = eng.decode_step(&mut [&mut sess], &[last]);
+                last = eng.sample(l.row(0), 0.0, &mut rng);
+                out1.extend(eng.tokenizer.decode_bytes(&[last]));
+            }
+            let toks2 = eng.tokenizer.encode(p2);
+            let logits = eng.prefill(&mut sess, &toks2);
+            let mut last = eng.sample(&logits, 0.0, &mut rng);
+            let mut out2 = eng.tokenizer.decode_bytes(&[last]);
+            for _ in 1..n {
+                let l = eng.decode_step(&mut [&mut sess], &[last]);
+                last = eng.sample(l.row(0), 0.0, &mut rng);
+                out2.extend(eng.tokenizer.decode_bytes(&[last]));
+            }
+            (out1, out2)
+        };
+
+        let b = spawn_batcher(4);
+        let (r1, rx1) = gen_req(p1, n, Some("conv"));
+        b.submitter().send(r1).unwrap();
+        let (out1, _) = collect(&rx1);
+        let (r2, rx2) = gen_req(p2, n, Some("conv"));
+        b.submitter().send(r2).unwrap();
+        let (out2, _) = collect(&rx2);
+        assert_eq!(out1, reference.0, "first turn diverged");
+        assert_eq!(out2, reference.1, "second turn lost session context");
+        // the gauge is synced just after the Done event — poll briefly
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.stats.resident_sessions.load(Ordering::Relaxed) != 1
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            b.stats.resident_sessions.load(Ordering::Relaxed),
+            1,
+            "named session should stay resident"
+        );
         b.shutdown();
     }
 }

@@ -54,8 +54,30 @@ pub fn generate_on(
     max_tokens: usize,
     temp: f32,
 ) -> Result<(String, usize, f64)> {
+    let line = protocol::format_gen(max_tokens, temp, prompt);
+    generate_line_on(stream, &line)
+}
+
+/// Run one SGEN (named-session) request on an open connection; the
+/// server keeps the session's decode state under `session` so the next
+/// request with the same id continues the context.
+pub fn generate_session_on(
+    stream: &mut TcpStream,
+    session: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let line = protocol::format_sgen(session, max_tokens, temp, prompt);
+    generate_line_on(stream, &line)
+}
+
+fn generate_line_on(
+    stream: &mut TcpStream,
+    request_line: &str,
+) -> Result<(String, usize, f64)> {
     let t0 = Instant::now();
-    stream.write_all(protocol::format_gen(max_tokens, temp, prompt).as_bytes())?;
+    stream.write_all(request_line.as_bytes())?;
     let mut reader = BufReader::new(stream.try_clone()?);
     // assemble raw bytes; UTF-8-lossy conversion happens once at the end
     // so characters split across streamed tokens survive
@@ -105,6 +127,19 @@ pub fn generate_once(
 ) -> Result<(String, usize, f64)> {
     let mut s = connect(host, port)?;
     generate_on(&mut s, prompt, max_tokens, temp)
+}
+
+/// One-shot named-session generation over a fresh connection.
+pub fn generate_session_once(
+    host: &str,
+    port: u16,
+    session: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let mut s = connect(host, port)?;
+    generate_session_on(&mut s, session, prompt, max_tokens, temp)
 }
 
 /// Fetch the server's STATS snapshot line.

@@ -31,22 +31,41 @@ use crate::runtime::native::model::{
     PreparedWeight,
 };
 use crate::runtime::native::recipe::{op_quant, recipe, NativeRecipe, BF16_OP};
+use crate::serve::pages::KvPages;
 use crate::util::ndarray::Mat;
 use crate::util::prng::Rng;
+
+/// Magic + version prefix of the serialized session format.
+const SESSION_MAGIC: &[u8; 8] = b"CHONSES1";
 
 /// Per-layer decode state of one session.
 enum LayerState {
     /// GLA: the running outer-product sum S = Σ k'_s v_sᵀ (d × d).
     Gla { s: Mat },
-    /// SA: the grown key/value caches, one row per past position.
-    Sa { k: Vec<f32>, v: Vec<f32> },
+    /// SA: the key/value cache, paged in fixed-size blocks of positions.
+    Sa { kv: KvPages },
 }
 
-/// One generation session (a single request's recurrent state).
+/// One generation session (the recurrent state behind one request — or,
+/// for named sessions, behind a whole multi-request conversation).
 pub struct Session {
     /// tokens consumed so far (prompt + generated)
     pub pos: usize,
     layers: Vec<LayerState>,
+}
+
+impl Session {
+    /// Resident-memory cost in KV-position units: an SA session holds
+    /// `pos` cached positions per layer; a GLA session's d×d state is
+    /// charged as d positions (its memory is d rows of d floats no
+    /// matter how long the context grew).
+    pub fn kv_cost_tokens(&self) -> usize {
+        match self.layers.first() {
+            Some(LayerState::Gla { s }) => s.rows,
+            Some(LayerState::Sa { kv }) => kv.rows(),
+            None => 0,
+        }
+    }
 }
 
 /// A loaded, validated model ready to decode.
@@ -181,6 +200,7 @@ impl Engine {
             seed: 0,
             step: 0,
             vocab: tokenizer.vocab,
+            data_batches: 0,
         };
         let params = model::params_to_mats(params);
         let n_params = params.iter().map(|m| m.data.len()).sum();
@@ -195,7 +215,7 @@ impl Engine {
         let layers = (0..self.cfg.layers)
             .map(|_| match self.cfg.arch {
                 Arch::Gla => LayerState::Gla { s: Mat::zeros(d, d) },
-                Arch::Sa => LayerState::Sa { k: Vec::new(), v: Vec::new() },
+                Arch::Sa => LayerState::Sa { kv: KvPages::new(d) },
             })
             .collect();
         Session { pos: 0, layers }
@@ -205,13 +225,50 @@ impl Engine {
     /// caller's use of the return value: the logits after the *last*
     /// prompt token, i.e. the distribution of the first generated token).
     pub fn prefill(&self, sess: &mut Session, tokens: &[u32]) -> Vec<f32> {
-        assert!(!tokens.is_empty(), "prefill needs at least one token");
-        let mut logits = Vec::new();
-        for &t in tokens {
-            let out = self.decode_step(&mut [&mut *sess], &[t]);
-            logits = out.row(0).to_vec();
+        let mut out = self.prefill_batch(&mut [sess], &[tokens]);
+        out.pop().unwrap()
+    }
+
+    /// Cross-session prefill: feed `prompts[i]` through `sessions[i]`
+    /// with token-steps batched across sessions — step t advances every
+    /// prompt that still has a token at position t, so N waiting prompts
+    /// cost ~one prefill pass instead of N. Returns, per session, the
+    /// logits after its *last* prompt token. Because `decode_step` is
+    /// batch-invariant, the returned logits and all session state are
+    /// bit-identical to prefilling each session alone.
+    pub fn prefill_batch(
+        &self,
+        sessions: &mut [&mut Session],
+        prompts: &[&[u32]],
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(sessions.len(), prompts.len());
+        assert!(
+            prompts.iter().all(|p| !p.is_empty()),
+            "prefill needs at least one token per prompt"
+        );
+        // longest-first (stable) order makes each step's active set a
+        // prefix of the permuted session list
+        let mut order: Vec<usize> = (0..prompts.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(prompts[i].len()));
+        let mut slots: Vec<Option<&mut Session>> =
+            sessions.iter_mut().map(|s| Some(&mut **s)).collect();
+        let mut perm: Vec<&mut Session> =
+            order.iter().map(|&i| slots[i].take().unwrap()).collect();
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); prompts.len()];
+        for t in 0..max_len {
+            let active =
+                order.iter().take_while(|&&i| t < prompts[i].len()).count();
+            let tokens: Vec<u32> =
+                order[..active].iter().map(|&i| prompts[i][t]).collect();
+            let logits = self.decode_step(&mut perm[..active], &tokens);
+            for (row, &i) in order[..active].iter().enumerate() {
+                if t + 1 == prompts[i].len() {
+                    out[i] = logits.row(row).to_vec();
+                }
+            }
         }
-        logits
+        out
     }
 
     /// One decode step for a batch of sessions: feed `tokens[i]` to
@@ -289,16 +346,17 @@ impl Engine {
                             orow[c] *= ct * sigmoid(gr[c]);
                         }
                     }
-                    LayerState::Sa { k: kc, v: vc } => {
-                        kc.extend_from_slice(k.row(i));
-                        vc.extend_from_slice(v.row(i));
+                    LayerState::Sa { kv } => {
+                        kv.push(k.row(i), v.row(i));
                         let qr = q.row(i);
-                        // causal softmax over the cached positions
+                        // causal softmax over the cached positions; pages
+                        // iterate in append order, so every accumulation
+                        // chain is the one a flat cache would build
                         let n = t + 1;
+                        debug_assert_eq!(kv.rows(), n);
                         let mut scores = Vec::with_capacity(n);
                         let mut mx = f32::NEG_INFINITY;
-                        for s in 0..n {
-                            let krow = &kc[s * d..(s + 1) * d];
+                        kv.for_each_row(|krow, _| {
                             let mut dot = 0.0f32;
                             for j in 0..d {
                                 dot += qr[j] * krow[j];
@@ -306,19 +364,20 @@ impl Engine {
                             let sc = dot * inv_sqrt_d;
                             mx = mx.max(sc);
                             scores.push(sc);
-                        }
+                        });
                         let mut z = 0.0f32;
                         for sc in scores.iter_mut() {
                             *sc = (*sc - mx).exp();
                             z += *sc;
                         }
-                        for (s, sc) in scores.iter().enumerate() {
-                            let w = sc / z;
-                            let vrow = &vc[s * d..(s + 1) * d];
+                        let mut s = 0usize;
+                        kv.for_each_row(|_, vrow| {
+                            let w = scores[s] / z;
                             for c in 0..d {
                                 orow[c] += w * vrow[c];
                             }
-                        }
+                            s += 1;
+                        });
                     }
                 }
             };
@@ -398,6 +457,130 @@ impl Engine {
     pub fn param_count(&self) -> usize {
         self.n_params
     }
+
+    /// Serialize a session's full decode state. Bit-exact: every f32 is
+    /// stored as its little-endian bit pattern, so
+    /// `restore_session(serialize_session(s))` reproduces `s` exactly
+    /// and an evicted-then-reloaded session decodes bitwise identically
+    /// to one that stayed resident.
+    pub fn serialize_session(&self, sess: &Session) -> Vec<u8> {
+        let cfg = &self.cfg;
+        let mut out = Vec::new();
+        out.extend_from_slice(SESSION_MAGIC);
+        out.push(arch_tag(cfg.arch));
+        out.extend_from_slice(&(cfg.layers as u32).to_le_bytes());
+        out.extend_from_slice(&(cfg.d as u32).to_le_bytes());
+        out.extend_from_slice(&(sess.pos as u64).to_le_bytes());
+        for ls in &sess.layers {
+            match ls {
+                LayerState::Gla { s } => put_f32s(&mut out, &s.data),
+                LayerState::Sa { kv } => {
+                    put_f32s(&mut out, &kv.flat_k());
+                    put_f32s(&mut out, &kv.flat_v());
+                }
+            }
+        }
+        out
+    }
+
+    /// Invert `serialize_session`, validating the header against this
+    /// engine's model (arch, layer count, width) and the payload length
+    /// against the stored position count.
+    pub fn restore_session(&self, bytes: &[u8]) -> Result<Session> {
+        let cfg = &self.cfg;
+        let d = cfg.d;
+        if bytes.len() < SESSION_MAGIC.len() || &bytes[..8] != SESSION_MAGIC {
+            bail!("not a serialized session (bad magic)");
+        }
+        let mut at = 8usize;
+        let Some(&tag) = bytes.get(at) else {
+            bail!("truncated serialized session");
+        };
+        at += 1;
+        if tag != arch_tag(cfg.arch) {
+            bail!("session arch tag {tag} does not match the loaded model");
+        }
+        let layers = get_u32(bytes, &mut at)? as usize;
+        let dd = get_u32(bytes, &mut at)? as usize;
+        if layers != cfg.layers || dd != d {
+            bail!(
+                "session shape (layers {layers}, d {dd}) does not match \
+                 model ({}, {})",
+                cfg.layers,
+                d
+            );
+        }
+        let pos64 = get_u64(bytes, &mut at)?;
+        // sanity cap so a corrupt header cannot drive pos*d arithmetic
+        // into overflow or a giant allocation before the length checks
+        if pos64 > (1 << 24) {
+            bail!("serialized session claims an absurd position {pos64}");
+        }
+        let pos = pos64 as usize;
+        let mut states = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            let ls = match cfg.arch {
+                Arch::Gla => {
+                    let data = get_f32s(bytes, d * d, &mut at)?;
+                    LayerState::Gla { s: Mat::from_vec(d, d, data) }
+                }
+                Arch::Sa => {
+                    let k = get_f32s(bytes, pos * d, &mut at)?;
+                    let v = get_f32s(bytes, pos * d, &mut at)?;
+                    LayerState::Sa { kv: KvPages::from_flat(d, &k, &v) }
+                }
+            };
+            states.push(ls);
+        }
+        if at != bytes.len() {
+            bail!(
+                "serialized session has {} trailing bytes",
+                bytes.len() - at
+            );
+        }
+        Ok(Session { pos, layers: states })
+    }
+}
+
+fn arch_tag(arch: Arch) -> u8 {
+    match arch {
+        Arch::Gla => 0,
+        Arch::Sa => 1,
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_u32(b: &[u8], at: &mut usize) -> Result<u32> {
+    let Some(chunk) = b.get(*at..*at + 4) else {
+        bail!("truncated serialized session");
+    };
+    *at += 4;
+    Ok(u32::from_le_bytes(chunk.try_into().unwrap()))
+}
+
+fn get_u64(b: &[u8], at: &mut usize) -> Result<u64> {
+    let Some(chunk) = b.get(*at..*at + 8) else {
+        bail!("truncated serialized session");
+    };
+    *at += 8;
+    Ok(u64::from_le_bytes(chunk.try_into().unwrap()))
+}
+
+fn get_f32s(b: &[u8], n: usize, at: &mut usize) -> Result<Vec<f32>> {
+    let Some(raw) = b.get(*at..*at + 4 * n) else {
+        bail!("truncated serialized session payload");
+    };
+    *at += 4 * n;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
 }
 
 #[cfg(test)]
@@ -535,6 +718,90 @@ mod tests {
             }
             assert_eq!(solo_out, batched_out, "recipe {rec_name}");
         }
+    }
+
+    /// Batched prefill must be bit-identical to serial prefill for every
+    /// recipe, including ragged prompt lengths (the batcher admits mixed
+    /// groups).
+    #[test]
+    fn prefill_batch_is_bit_identical_to_serial() {
+        for model in ["tiny_gla", "tiny_sa"] {
+            for rec_name in ["bf16", "chon"] {
+                let eng = engine(model, rec_name);
+                let prompts: Vec<Vec<u32>> = (0..5)
+                    .map(|i| {
+                        (0..3 + i * 2).map(|j| 97 + ((i * 11 + j) % 23)).collect()
+                    })
+                    .collect();
+                // serial reference
+                let mut ref_logits = Vec::new();
+                let mut ref_sessions = Vec::new();
+                for p in &prompts {
+                    let mut s = eng.new_session();
+                    ref_logits.push(eng.prefill(&mut s, p));
+                    ref_sessions.push(s);
+                }
+                // batched
+                let mut sessions: Vec<Session> =
+                    prompts.iter().map(|_| eng.new_session()).collect();
+                let logits = {
+                    let mut refs: Vec<&mut Session> =
+                        sessions.iter_mut().collect();
+                    let ps: Vec<&[u32]> =
+                        prompts.iter().map(|p| p.as_slice()).collect();
+                    eng.prefill_batch(&mut refs, &ps)
+                };
+                assert_eq!(logits, ref_logits, "{model}/{rec_name}");
+                // the *state* also matches: one more decode step agrees
+                for (a, b) in sessions.iter_mut().zip(ref_sessions.iter_mut())
+                {
+                    assert_eq!(a.pos, b.pos);
+                    let la = eng.decode_step(&mut [a], &[101]);
+                    let lb = eng.decode_step(&mut [b], &[101]);
+                    assert_eq!(la.data, lb.data, "{model}/{rec_name}");
+                }
+            }
+        }
+    }
+
+    /// Serialize → restore reproduces decode state bit-exactly, for both
+    /// architectures, across page boundaries.
+    #[test]
+    fn session_serialization_roundtrips_bit_exactly() {
+        for model in ["tiny_gla", "tiny_sa"] {
+            let eng = engine(model, "chon");
+            let long: Vec<u32> = (0..70).map(|i| 97 + (i % 19)).collect();
+            let mut sess = eng.new_session();
+            eng.prefill(&mut sess, &long);
+            let bytes = eng.serialize_session(&sess);
+            let mut back = eng.restore_session(&bytes).unwrap();
+            assert_eq!(back.pos, sess.pos);
+            assert_eq!(back.kv_cost_tokens(), sess.kv_cost_tokens());
+            // identical continuation, bit for bit
+            let la = eng.decode_step(&mut [&mut sess], &[104]);
+            let lb = eng.decode_step(&mut [&mut back], &[104]);
+            assert_eq!(la.data, lb.data, "{model}");
+            // and the serialized form is stable under a second round-trip
+            let again = eng.restore_session(&bytes).unwrap();
+            assert_eq!(bytes, eng.serialize_session(&again));
+        }
+    }
+
+    /// Corrupt session blobs are rejected, not misread.
+    #[test]
+    fn corrupt_session_blobs_rejected() {
+        let eng = engine("tiny_sa", "bf16");
+        let mut sess = eng.new_session();
+        eng.prefill(&mut sess, &[97, 98, 99]);
+        let bytes = eng.serialize_session(&sess);
+        assert!(eng.restore_session(&bytes[..bytes.len() - 3]).is_err());
+        assert!(eng.restore_session(b"NOTASESS").is_err());
+        let mut wrong_arch = bytes.clone();
+        wrong_arch[8] ^= 1;
+        assert!(eng.restore_session(&wrong_arch).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(eng.restore_session(&trailing).is_err());
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! A hand-rolled HTTP/1.1 front end layer: request parsing + response
+//! writing, no dependencies beyond std.
+//!
+//! The parser is *incremental*: `parse_request(buf)` inspects however
+//! many bytes have arrived so far and either produces a complete request
+//! (plus how many bytes it consumed, so pipelined requests keep working),
+//! asks for more data, or rejects the stream. It survives partial reads
+//! split at any byte boundary — `tests/serve_protocol_fuzz.rs` feeds it
+//! every split point and random garbage.
+//!
+//! Scope (all the serve front end needs, nothing more):
+//! * methods GET / POST / HEAD; request-URI up to `MAX_TARGET_BYTES`
+//! * headers up to `MAX_HEAD_BYTES` total; `Content-Length` bodies up to
+//!   `MAX_BODY_BYTES` (chunked *request* bodies are rejected with 501)
+//! * responses: fixed-length or `Transfer-Encoding: chunked` streaming
+//!   (the `POST /generate` token stream)
+
+use std::io::Write;
+use std::net::TcpStream;
+
+/// Total cap on the request line + headers.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Cap on the request-URI.
+pub const MAX_TARGET_BYTES: usize = 1024;
+/// Cap on a request body (`POST /generate` JSON is tiny).
+pub const MAX_BODY_BYTES: usize = 64 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    /// the raw request-target (path + optional query), e.g. "/stats"
+    pub target: String,
+    /// true for HTTP/1.0 requests — those cannot receive chunked
+    /// responses, so streaming endpoints must reject them
+    pub http10: bool,
+    /// header (name, value) pairs; names lower-cased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First value of a header (names are stored lower-cased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// True when the client asked to close the connection.
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Outcome of one incremental parse attempt.
+pub enum Parsed {
+    /// A complete request and the number of bytes it consumed from the
+    /// front of the buffer (drain them before the next attempt).
+    Complete(HttpRequest, usize),
+    /// Not enough bytes yet — read more and retry.
+    Partial,
+}
+
+/// HTTP-level rejection: status + message (the handler answers it and
+/// closes the connection).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+fn err(status: u16, message: impl Into<String>) -> HttpError {
+    HttpError { status, message: message.into() }
+}
+
+/// Find the end of the header section. Accepts CRLFCRLF (HTTP) and bare
+/// LFLF (hand-typed clients); returns (headers_end, body_start).
+fn find_head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some((i, i + 2));
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some((i, i + 3));
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn is_token_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric()
+        || matches!(
+            b,
+            b'!' | b'#'
+                | b'$'
+                | b'%'
+                | b'&'
+                | b'\''
+                | b'*'
+                | b'+'
+                | b'-'
+                | b'.'
+                | b'^'
+                | b'_'
+                | b'`'
+                | b'|'
+                | b'~'
+        )
+}
+
+/// Incrementally parse one request from the front of `buf`.
+pub fn parse_request(buf: &[u8]) -> Result<Parsed, HttpError> {
+    let Some((head_end, body_start)) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(err(431, "request head too large"));
+        }
+        return Ok(Parsed::Partial);
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Err(err(431, "request head too large"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| err(400, "request head is not valid UTF-8"))?;
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ').filter(|p| !p.is_empty());
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if parts.next().is_some() {
+        return Err(err(400, "malformed request line"));
+    }
+    if method.is_empty() || !method.bytes().all(is_token_byte) {
+        return Err(err(400, "malformed method"));
+    }
+    if !matches!(method.as_str(), "GET" | "POST" | "HEAD") {
+        return Err(err(405, format!("method {method} not supported")));
+    }
+    if target.is_empty() || !target.starts_with('/') {
+        return Err(err(400, "malformed request target"));
+    }
+    if target.len() > MAX_TARGET_BYTES {
+        return Err(err(414, "request target too long"));
+    }
+    if !matches!(version, "HTTP/1.1" | "HTTP/1.0") {
+        return Err(err(505, format!("unsupported version {version:?}")));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(err(400, format!("malformed header line {line:?}")));
+        };
+        let name = name.trim();
+        if name.is_empty() || !name.bytes().all(is_token_byte) {
+            return Err(err(400, format!("malformed header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+        return Err(err(501, "chunked request bodies not supported"));
+    }
+    let content_length = match headers.iter().find(|(n, _)| n == "content-length")
+    {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| err(400, format!("bad Content-Length {v:?}")))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(err(413, "request body too large"));
+    }
+    if buf.len() < body_start + content_length {
+        return Ok(Parsed::Partial);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    let http10 = version == "HTTP/1.0";
+    Ok(Parsed::Complete(
+        HttpRequest { method, target, http10, headers, body },
+        body_start + content_length,
+    ))
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+/// Write a complete fixed-length response. `head_only` (HEAD requests)
+/// sends the headers with the real Content-Length but no body.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    head_only: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    if !head_only {
+        stream.write_all(body)?;
+    }
+    stream.flush()
+}
+
+/// Start a chunked streaming response (the `POST /generate` token feed).
+pub fn write_chunked_head(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// Emit one chunk (empty input is skipped — a zero-size chunk would
+/// terminate the stream).
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(stream, "{:x}\r\n", data.len())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunks(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_full(raw: &[u8]) -> HttpRequest {
+        match parse_request(raw).unwrap() {
+            Parsed::Complete(req, consumed) => {
+                assert_eq!(consumed, raw.len());
+                req
+            }
+            Parsed::Partial => panic!("expected a complete request"),
+        }
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let req = parse_full(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/stats");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.http10);
+
+        let raw =
+            b"POST /generate HTTP/1.1\r\nContent-Length: 4\r\n\r\n{\"a\"";
+        let req = parse_full(raw);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"a\"");
+    }
+
+    #[test]
+    fn tolerates_bare_lf_heads() {
+        let req = parse_full(b"GET / HTTP/1.0\nHost: y\n\n");
+        assert_eq!(req.target, "/");
+        assert_eq!(req.header("host"), Some("y"));
+        assert!(req.http10, "1.0 must be flagged for streaming endpoints");
+    }
+
+    #[test]
+    fn partial_until_complete() {
+        let raw = b"POST /g HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        for cut in 0..raw.len() {
+            match parse_request(&raw[..cut]) {
+                Ok(Parsed::Partial) => {}
+                other => panic!(
+                    "prefix of {cut} bytes should be partial, got {:?}",
+                    other.err()
+                ),
+            }
+        }
+        let req = parse_full(raw);
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn pipelined_requests_consume_exactly_one() {
+        let one = b"GET /a HTTP/1.1\r\n\r\n".to_vec();
+        let mut two = one.clone();
+        two.extend_from_slice(b"GET /b HTTP/1.1\r\n\r\n");
+        match parse_request(&two).unwrap() {
+            Parsed::Complete(req, consumed) => {
+                assert_eq!(req.target, "/a");
+                assert_eq!(consumed, one.len());
+                match parse_request(&two[consumed..]).unwrap() {
+                    Parsed::Complete(req2, c2) => {
+                        assert_eq!(req2.target, "/b");
+                        assert_eq!(consumed + c2, two.len());
+                    }
+                    Parsed::Partial => panic!("second request lost"),
+                }
+            }
+            Parsed::Partial => panic!("first request lost"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        let cases: Vec<(Vec<u8>, u16)> = vec![
+            (b"BREW /pot HTTP/1.1\r\n\r\n".to_vec(), 405),
+            (b"GET stats HTTP/1.1\r\n\r\n".to_vec(), 400),
+            (b"GET /x SPDY/9\r\n\r\n".to_vec(), 505),
+            (b"GET / HTTP/1.1 extra\r\n\r\n".to_vec(), 400),
+            (b"GET / HTTP/1.1\r\nBad Header\r\n\r\n".to_vec(), 400),
+            (
+                b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(),
+                400,
+            ),
+            (
+                b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+                    .to_vec(),
+                501,
+            ),
+            (
+                format!(
+                    "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                    MAX_BODY_BYTES + 1
+                )
+                .into_bytes(),
+                413,
+            ),
+            (
+                format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_TARGET_BYTES))
+                    .into_bytes(),
+                414,
+            ),
+        ];
+        for (raw, want) in cases {
+            match parse_request(&raw) {
+                Err(e) => assert_eq!(
+                    e.status,
+                    want,
+                    "{:?} -> {}",
+                    String::from_utf8_lossy(&raw[..raw.len().min(40)]),
+                    e.message
+                ),
+                Ok(_) => panic!(
+                    "{:?} should be rejected",
+                    String::from_utf8_lossy(&raw[..raw.len().min(40)])
+                ),
+            }
+        }
+        // an endless header section trips the size cap instead of hanging
+        let mut huge = b"GET / HTTP/1.1\r\n".to_vec();
+        while huge.len() <= MAX_HEAD_BYTES {
+            huge.extend_from_slice(b"X-Pad: yada yada yada\r\n");
+        }
+        assert_eq!(parse_request(&huge).unwrap_err().status, 431);
+    }
+}

@@ -2,12 +2,18 @@
 //! — the first production-shaped workload on top of the native backend.
 //!
 //! * `engine` — decode-only forward path over a loaded checkpoint:
-//!   per-session recurrent state (GLA) / KV cache (SA), greedy +
-//!   temperature sampling, quant recipe applied batch-invariantly.
-//! * `batcher` — coalesces concurrent requests into decode batches
-//!   (max-batch-size + max-wait knobs) and fans tokens back out.
-//! * `protocol` — the line-delimited TCP wire format.
-//! * `server` — `std::net` listener + worker-thread pool + graceful
+//!   per-session recurrent state (GLA) / paged KV cache (SA), greedy +
+//!   temperature sampling, quant recipe applied batch-invariantly,
+//!   cross-session batched prefill, bit-exact session serialization.
+//! * `pages` — fixed-size KV pages + the LRU named-session cache with
+//!   spill-to-disk eviction (`--max-resident-sessions`,
+//!   `--max-kv-tokens`).
+//! * `batcher` — coalesces concurrent requests into prefill + decode
+//!   batches (max-batch-size + max-wait knobs) and fans tokens back out.
+//! * `protocol` — the line-delimited TCP wire format (GEN/SGEN/...).
+//! * `http` — the hand-rolled HTTP/1.1 layer (`POST /generate` chunked
+//!   streaming, `GET /stats`, `POST /shutdown`).
+//! * `server` — `std::net` listeners + worker-thread pool + graceful
 //!   shutdown (`chon serve`).
 //! * `client` — protocol client / load generator with latency
 //!   percentiles (`chon client`).
@@ -15,10 +21,13 @@
 pub mod batcher;
 pub mod client;
 pub mod engine;
+pub mod http;
+pub mod pages;
 pub mod protocol;
 pub mod server;
 
 pub use batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
 pub use client::{ClientOpts, LoadReport};
 pub use engine::{Engine, Session};
+pub use pages::{KvPages, SessionStore, StoreOpts, PAGE_TOKENS};
 pub use server::{ServeOpts, Server};

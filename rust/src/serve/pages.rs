@@ -1,0 +1,338 @@
+//! Paged session-state storage + the LRU session cache behind serve v2.
+//!
+//! * `KvPages` — an SA layer's K/V cache split into fixed-size pages of
+//!   `PAGE_TOKENS` positions each, so a growing context never reallocates
+//!   (and never memmoves) the whole cache; positions keep their exact
+//!   append order, so iterating pages front-to-back visits the same f32
+//!   sequence a flat buffer would — paged attention is *bitwise* the
+//!   math of unpaged attention.
+//! * `SessionStore` — keeps idle named sessions resident up to
+//!   `--max-resident-sessions` / `--max-kv-tokens`, evicting
+//!   least-recently-used sessions to a spill directory (bit-exact
+//!   little-endian f32 serialization, see `Session::serialize`) and
+//!   reloading them transparently on the session's next request.
+//!
+//! Eviction and reload are invisible to generation output: the serialized
+//! form round-trips every f32 bit-exactly, and the invariant suite
+//! (`tests/serve_invariants.rs`) pins greedy outputs across
+//! resident/evicted/reloaded histories.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::serve::engine::{Engine, Session};
+
+/// Positions per KV page. Small enough that short sessions stay cheap,
+/// large enough that the per-page bookkeeping is negligible next to the
+/// d-wide dot products over its rows.
+pub const PAGE_TOKENS: usize = 32;
+
+/// One SA layer's K/V cache as fixed-capacity pages.
+pub struct KvPages {
+    /// row width (the model d)
+    d: usize,
+    /// each page holds up to PAGE_TOKENS rows of k and v (row-major)
+    pages: Vec<Page>,
+    /// total rows stored across pages
+    rows: usize,
+}
+
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvPages {
+    pub fn new(d: usize) -> KvPages {
+        KvPages { d, pages: Vec::new(), rows: 0 }
+    }
+
+    /// Number of cached positions.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Append one position's k/v rows (each exactly `d` floats).
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let need_new = match self.pages.last() {
+            Some(p) => p.k.len() == PAGE_TOKENS * self.d,
+            None => true,
+        };
+        if need_new {
+            let cap = PAGE_TOKENS * self.d;
+            self.pages.push(Page {
+                k: Vec::with_capacity(cap),
+                v: Vec::with_capacity(cap),
+            });
+        }
+        let p = self.pages.last_mut().unwrap();
+        p.k.extend_from_slice(k_row);
+        p.v.extend_from_slice(v_row);
+        self.rows += 1;
+    }
+
+    /// Visit every cached position in append order as (k_row, v_row).
+    /// The iteration order (and therefore every accumulation chain built
+    /// over it) is identical to a flat buffer's.
+    pub fn for_each_row(&self, mut f: impl FnMut(&[f32], &[f32])) {
+        let d = self.d;
+        for p in &self.pages {
+            let n = p.k.len() / d;
+            for r in 0..n {
+                f(&p.k[r * d..(r + 1) * d], &p.v[r * d..(r + 1) * d]);
+            }
+        }
+    }
+
+    /// Flatten the k rows (serialization only — the hot path never does
+    /// this).
+    pub fn flat_k(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.d);
+        for p in &self.pages {
+            out.extend_from_slice(&p.k);
+        }
+        out
+    }
+
+    /// Flatten the v rows (serialization only).
+    pub fn flat_v(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.d);
+        for p in &self.pages {
+            out.extend_from_slice(&p.v);
+        }
+        out
+    }
+
+    /// Rebuild from flat rows (deserialization). Page boundaries are a
+    /// pure function of the row count, so an evict→reload cycle
+    /// reconstructs the identical page layout.
+    pub fn from_flat(d: usize, k: &[f32], v: &[f32]) -> KvPages {
+        assert_eq!(k.len(), v.len());
+        assert_eq!(k.len() % d.max(1), 0);
+        let mut pages = KvPages::new(d);
+        let rows = if d == 0 { 0 } else { k.len() / d };
+        for r in 0..rows {
+            pages.push(&k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d]);
+        }
+        pages
+    }
+}
+
+/// Resident/spill policy knobs of the session cache.
+#[derive(Clone, Debug, Default)]
+pub struct StoreOpts {
+    /// max idle sessions kept in memory (0 = unlimited)
+    pub max_resident_sessions: usize,
+    /// max total KV positions resident across idle sessions (0 = unlimited)
+    pub max_kv_tokens: usize,
+    /// spill directory; None = a per-process temp dir, removed on drop
+    pub spill_dir: Option<PathBuf>,
+}
+
+/// The named-session cache: resident map + spill directory + LRU clock.
+pub struct SessionStore {
+    opts: StoreOpts,
+    dir: PathBuf,
+    /// true when `dir` was auto-created under temp and should be removed
+    own_dir: bool,
+    resident: HashMap<String, (Session, u64)>,
+    /// ids currently spilled to disk
+    spilled: HashSet<String>,
+    /// running Σ kv_cost_tokens over `resident` — kept incrementally so
+    /// budget checks and gauge reads stay O(1) at thousands of sessions
+    resident_kv: usize,
+    clock: u64,
+    /// cumulative counters (mirrored into ServeStats by the engine loop)
+    pub evictions: u64,
+    pub reloads: u64,
+}
+
+impl SessionStore {
+    pub fn new(opts: StoreOpts) -> Result<SessionStore> {
+        // auto spill dirs are unique per store instance (pid + counter),
+        // so concurrent servers in one process never share or delete
+        // each other's spill files
+        static STORE_SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let (dir, own_dir) = match &opts.spill_dir {
+            Some(d) => (d.clone(), false),
+            None => {
+                let seq = STORE_SEQ
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                (
+                    std::env::temp_dir().join(format!(
+                        "chon_spill_{}_{seq}",
+                        std::process::id()
+                    )),
+                    true,
+                )
+            }
+        };
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        Ok(SessionStore {
+            opts,
+            dir,
+            own_dir,
+            resident: HashMap::new(),
+            spilled: HashSet::new(),
+            resident_kv: 0,
+            clock: 0,
+            evictions: 0,
+            reloads: 0,
+        })
+    }
+
+    fn spill_path(&self, id: &str) -> PathBuf {
+        // ids are protocol-validated ([A-Za-z0-9._-], no leading dot), so
+        // the join cannot escape the spill dir
+        self.dir.join(format!("{id}.sess"))
+    }
+
+    /// Check a session out for decoding. Resident sessions are removed
+    /// from the cache (the engine loop owns them while active); spilled
+    /// ones are reloaded bit-exactly from disk. Unknown ids return None
+    /// (the caller starts a fresh session).
+    pub fn take(&mut self, id: &str, engine: &Engine) -> Result<Option<Session>> {
+        if let Some((sess, _)) = self.resident.remove(id) {
+            self.resident_kv -= sess.kv_cost_tokens();
+            return Ok(Some(sess));
+        }
+        if self.spilled.contains(id) {
+            // the spill record and file survive until the restore has
+            // fully succeeded — a transient read/validation failure must
+            // not silently turn the next request into a fresh session
+            let path = self.spill_path(id);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading spilled session {}", path.display()))?;
+            let sess = engine.restore_session(&bytes).with_context(|| {
+                format!("restoring spilled session {}", path.display())
+            })?;
+            self.spilled.remove(id);
+            let _ = std::fs::remove_file(&path);
+            self.reloads += 1;
+            return Ok(Some(sess));
+        }
+        Ok(None)
+    }
+
+    /// Check a session back in after its request finished, then enforce
+    /// the residency limits (evicting LRU sessions to disk).
+    pub fn put(&mut self, id: &str, sess: Session, engine: &Engine) -> Result<()> {
+        self.clock += 1;
+        self.resident_kv += sess.kv_cost_tokens();
+        if let Some((old, _)) =
+            self.resident.insert(id.to_string(), (sess, self.clock))
+        {
+            // same id checked in twice without a take — cannot happen via
+            // the batcher (busy-session rejection), but keep the counter
+            // honest anyway
+            self.resident_kv -= old.kv_cost_tokens();
+        }
+        self.enforce(engine)
+    }
+
+    fn over_budget(&self) -> bool {
+        (self.opts.max_resident_sessions > 0
+            && self.resident.len() > self.opts.max_resident_sessions)
+            || (self.opts.max_kv_tokens > 0
+                && self.resident_kv > self.opts.max_kv_tokens)
+    }
+
+    fn enforce(&mut self, engine: &Engine) -> Result<()> {
+        while !self.resident.is_empty() && self.over_budget() {
+            // LRU victim = smallest clock stamp (ties impossible: the
+            // clock is strictly increasing). The scan is O(resident),
+            // which the residency limit itself bounds.
+            let victim = self
+                .resident
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(id, _)| id.clone())
+                .expect("non-empty resident map");
+            let (sess, stamp) = self.resident.remove(&victim).unwrap();
+            self.resident_kv -= sess.kv_cost_tokens();
+            let bytes = engine.serialize_session(&sess);
+            let path = self.spill_path(&victim);
+            if let Err(e) = std::fs::write(&path, bytes) {
+                // spill failed (full/lost disk): put the victim back so
+                // its state is NOT silently destroyed, and stop evicting
+                // — staying over budget beats losing a conversation
+                self.resident_kv += sess.kv_cost_tokens();
+                self.resident.insert(victim.clone(), (sess, stamp));
+                return Err(e).with_context(|| {
+                    format!("spilling session {victim} to {}", path.display())
+                });
+            }
+            self.spilled.insert(victim);
+            self.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Idle sessions currently held in memory.
+    pub fn resident_len(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Idle sessions currently spilled to disk.
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Total KV positions held by resident idle sessions (O(1): kept as
+    /// a running counter).
+    pub fn resident_kv_tokens(&self) -> usize {
+        self.resident_kv
+    }
+}
+
+impl Drop for SessionStore {
+    fn drop(&mut self) {
+        if self.own_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        } else {
+            // leave a user-chosen spill dir in place but drop our files
+            for id in self.spilled.iter() {
+                let _ = std::fs::remove_file(self.dir.join(format!("{id}.sess")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_preserve_append_order_and_layout() {
+        let d = 3;
+        let mut pg = KvPages::new(d);
+        let rows = PAGE_TOKENS * 2 + 5; // spans three pages
+        for r in 0..rows {
+            let k: Vec<f32> = (0..d).map(|j| (r * d + j) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            pg.push(&k, &v);
+        }
+        assert_eq!(pg.rows(), rows);
+        let mut seen = 0usize;
+        pg.for_each_row(|k, v| {
+            assert_eq!(k[0], (seen * d) as f32);
+            assert_eq!(v[0], -((seen * d) as f32));
+            seen += 1;
+        });
+        assert_eq!(seen, rows);
+        // flat round-trip rebuilds the identical page layout
+        let back = KvPages::from_flat(d, &pg.flat_k(), &pg.flat_v());
+        assert_eq!(back.rows(), rows);
+        assert_eq!(back.pages.len(), pg.pages.len());
+        for (a, b) in back.pages.iter().zip(&pg.pages) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.v, b.v);
+        }
+    }
+}

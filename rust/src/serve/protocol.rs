@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! GEN <max_tokens> <temp>\t<escaped prompt>   generate; streams tokens back
+//! SGEN <sid> <max_tokens> <temp>\t<prompt>    generate in named session <sid>
 //! STATS                                       one-line server statistics
 //! PING                                        liveness probe
 //! SHUTDOWN                                    drain + stop the server
@@ -26,10 +27,60 @@
 
 /// Hard caps enforced server-side (the tiny models trained at seq 32
 /// have no use for book-length contexts; the caps bound per-session
-/// KV-state growth).
+/// KV-state growth). Shared by the TCP line protocol and the HTTP front
+/// end so both surfaces reject identically.
 pub const MAX_PROMPT_BYTES: usize = 4096;
 pub const MAX_GEN_TOKENS: usize = 256;
 pub const MAX_TEMP: f32 = 10.0;
+/// Total context cap of one named session (prompts + generations across
+/// all its requests) — the paged KV cache grows to at most this many
+/// positions per session.
+pub const MAX_SESSION_TOKENS: usize = 8192;
+/// Length cap of a named-session id.
+pub const MAX_SESSION_ID_LEN: usize = 64;
+
+/// Named-session ids double as spill file names, so the charset is
+/// restricted: 1..=64 of [A-Za-z0-9._-], not starting with '.' or '-'.
+pub fn valid_session_id(id: &str) -> bool {
+    if id.is_empty() || id.len() > MAX_SESSION_ID_LEN {
+        return false;
+    }
+    if id.starts_with('.') || id.starts_with('-') {
+        return false;
+    }
+    id.bytes()
+        .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// The GEN/SGEN request caps, shared with the HTTP front end.
+pub fn validate_gen(
+    max_tokens: usize,
+    temp: f32,
+    prompt: &str,
+    session: Option<&str>,
+) -> Result<(), String> {
+    if max_tokens == 0 || max_tokens > MAX_GEN_TOKENS {
+        return Err(format!("max_tokens must be in 1..={MAX_GEN_TOKENS}"));
+    }
+    if !(0.0..=MAX_TEMP).contains(&temp) {
+        return Err(format!("temp must be in 0..={MAX_TEMP}"));
+    }
+    if prompt.len() > MAX_PROMPT_BYTES {
+        return Err(format!(
+            "prompt is {} bytes (limit {MAX_PROMPT_BYTES})",
+            prompt.len()
+        ));
+    }
+    if let Some(id) = session {
+        if !valid_session_id(id) {
+            return Err(format!(
+                "bad session id {id:?} (want 1..={MAX_SESSION_ID_LEN} of \
+                 [A-Za-z0-9._-], not starting with '.' or '-')"
+            ));
+        }
+    }
+    Ok(())
+}
 
 /// Escape arbitrary bytes into a single-line ASCII token. Byte-exact:
 /// `unescape_bytes(escape_bytes(b)) == b` for any input, so streamed
@@ -101,7 +152,13 @@ pub fn unescape(s: &str) -> Result<String, String> {
 /// One parsed client request line.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Gen { max_tokens: usize, temp: f32, prompt: String },
+    Gen {
+        max_tokens: usize,
+        temp: f32,
+        prompt: String,
+        /// named-session id (SGEN); None for one-shot GEN requests
+        session: Option<String>,
+    },
     Stats,
     Ping,
     Shutdown,
@@ -116,9 +173,16 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "SHUTDOWN" => return Ok(Request::Shutdown),
         _ => {}
     }
-    let Some(rest) = line.strip_prefix("GEN ") else {
+    let (session, rest) = if let Some(r) = line.strip_prefix("SGEN ") {
+        let (sid, r2) = r
+            .split_once(' ')
+            .ok_or("SGEN needs <session> <max_tokens> <temp>\\t<prompt>")?;
+        (Some(sid.to_string()), r2)
+    } else if let Some(r) = line.strip_prefix("GEN ") {
+        (None, r)
+    } else {
         return Err(format!(
-            "unknown command {:?} (expected GEN/STATS/PING/SHUTDOWN)",
+            "unknown command {:?} (expected GEN/SGEN/STATS/PING/SHUTDOWN)",
             line.split_whitespace().next().unwrap_or("")
         ));
     };
@@ -139,25 +203,24 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     if it.next().is_some() {
         return Err("GEN header has trailing fields".into());
     }
-    if max_tokens == 0 || max_tokens > MAX_GEN_TOKENS {
-        return Err(format!("max_tokens must be in 1..={MAX_GEN_TOKENS}"));
-    }
-    if !(0.0..=MAX_TEMP).contains(&temp) {
-        return Err(format!("temp must be in 0..={MAX_TEMP}"));
-    }
     let prompt = unescape(prompt_esc)?;
-    if prompt.len() > MAX_PROMPT_BYTES {
-        return Err(format!(
-            "prompt is {} bytes (limit {MAX_PROMPT_BYTES})",
-            prompt.len()
-        ));
-    }
-    Ok(Request::Gen { max_tokens, temp, prompt })
+    validate_gen(max_tokens, temp, &prompt, session.as_deref())?;
+    Ok(Request::Gen { max_tokens, temp, prompt, session })
 }
 
 /// Render a GEN request line (client side).
 pub fn format_gen(max_tokens: usize, temp: f32, prompt: &str) -> String {
     format!("GEN {max_tokens} {temp}\t{}\n", escape(prompt))
+}
+
+/// Render an SGEN (named-session) request line (client side).
+pub fn format_sgen(
+    session: &str,
+    max_tokens: usize,
+    temp: f32,
+    prompt: &str,
+) -> String {
+    format!("SGEN {session} {max_tokens} {temp}\t{}\n", escape(prompt))
 }
 
 #[cfg(test)]
@@ -208,9 +271,46 @@ mod tests {
             Request::Gen {
                 max_tokens: 16,
                 temp: 0.5,
-                prompt: "hello\tworld\nüber".into()
+                prompt: "hello\tworld\nüber".into(),
+                session: None,
             }
         );
+    }
+
+    #[test]
+    fn sgen_line_roundtrips() {
+        let line = format_sgen("conv-7.a", 8, 0.0, "hi there");
+        let req = parse_request(line.trim_end()).unwrap();
+        assert_eq!(
+            req,
+            Request::Gen {
+                max_tokens: 8,
+                temp: 0.0,
+                prompt: "hi there".into(),
+                session: Some("conv-7.a".into()),
+            }
+        );
+    }
+
+    #[test]
+    fn session_ids_validated() {
+        assert!(valid_session_id("a"));
+        assert!(valid_session_id("conv_7.B-2"));
+        assert!(!valid_session_id(""));
+        assert!(!valid_session_id(".hidden"));
+        assert!(!valid_session_id("-dash"));
+        assert!(!valid_session_id("has space"));
+        assert!(!valid_session_id("slash/y"));
+        assert!(!valid_session_id("dots/../up"));
+        assert!(!valid_session_id(&"x".repeat(MAX_SESSION_ID_LEN + 1)));
+        for bad in [
+            "SGEN 5 0.0\thi",               // missing sid → "0.0\thi" is no header
+            "SGEN ../x 5 0.0\thi",          // path-escape id
+            "SGEN  5 0.0\thi",              // empty sid
+            "SGEN aa\t5 0.0 hi",            // tab before header
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} should fail");
+        }
     }
 
     #[test]

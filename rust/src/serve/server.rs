@@ -1,14 +1,22 @@
-//! The TCP front end: a `std::net` listener, a worker-thread pool for
-//! connection handling, and graceful shutdown.
+//! The network front ends: a `std::net` line-protocol listener, an
+//! optional HTTP/1.1 listener, a shared worker-thread pool for connection
+//! handling, and graceful shutdown.
 //!
-//! Connections speak the line protocol of `serve::protocol`. Generation
-//! requests are forwarded to the `RequestBatcher`; token events stream
-//! back as `TOK` lines as they are produced, so a slow consumer only
-//! delays itself. `SHUTDOWN` (from any connection) stops accepting, lets
+//! Both front ends feed the same `RequestBatcher` (and therefore the same
+//! cross-session prefill batching, paged session cache and drain logic):
+//!
+//! * line protocol (`serve::protocol`): `GEN`/`SGEN` stream `TOK` lines
+//!   back as tokens are produced, so a slow consumer only delays itself.
+//! * HTTP (`serve::http`): `POST /generate` streams newline-delimited
+//!   JSON over chunked transfer encoding; `GET /stats` returns the
+//!   counters as JSON; `POST /shutdown` drains and stops.
+//!
+//! `SHUTDOWN` (line) or `POST /shutdown` (HTTP) stops accepting, lets
 //! in-flight generations finish, joins the pool and prints final stats.
 
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -19,7 +27,10 @@ use anyhow::{Context, Result};
 use crate::info;
 use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
 use crate::serve::engine::Engine;
+use crate::serve::http::{self, HttpRequest, Parsed};
+use crate::serve::pages::StoreOpts;
 use crate::serve::protocol::{self, Request};
+use crate::util::json::Json;
 
 /// Server knobs (CLI flags of `chon serve`).
 #[derive(Clone, Debug)]
@@ -27,12 +38,20 @@ pub struct ServeOpts {
     pub host: String,
     /// 0 = pick an ephemeral port (tests); `port()` reports the real one
     pub port: u16,
+    /// HTTP front-end port (0 = ephemeral); None disables HTTP entirely
+    pub http_port: Option<u16>,
     pub max_batch: usize,
     pub max_wait_us: u64,
     /// connection-handler threads
     pub workers: usize,
     /// temperature-sampling seed
     pub seed: u64,
+    /// max idle named sessions kept in memory (0 = unlimited)
+    pub max_resident_sessions: usize,
+    /// max KV positions resident across idle sessions (0 = unlimited)
+    pub max_kv_tokens: usize,
+    /// where evicted sessions spill (None = per-process temp dir)
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -40,36 +59,65 @@ impl Default for ServeOpts {
         ServeOpts {
             host: "127.0.0.1".into(),
             port: 7411,
+            http_port: Some(7412),
             max_batch: 8,
             max_wait_us: 2000,
             workers: 4,
             seed: 0,
+            max_resident_sessions: 0,
+            max_kv_tokens: 0,
+            spill_dir: None,
         }
     }
+}
+
+/// Which wire format a pooled connection speaks.
+#[derive(Clone, Copy, Debug)]
+enum ConnKind {
+    Line,
+    Http,
 }
 
 /// A bound server, ready to `run`.
 pub struct Server {
     listener: TcpListener,
+    http_listener: Option<TcpListener>,
     batcher: RequestBatcher,
     shutdown: Arc<AtomicBool>,
     workers: usize,
 }
 
 impl Server {
-    /// Bind the listener and spawn the engine thread.
+    /// Bind the listener(s) and spawn the engine thread.
     pub fn bind(engine: Engine, opts: &ServeOpts) -> Result<Server> {
         let addr = format!("{}:{}", opts.host, opts.port);
         let listener =
             TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+        let http_listener = match opts.http_port {
+            Some(p) => {
+                let haddr = format!("{}:{}", opts.host, p);
+                Some(
+                    TcpListener::bind(&haddr)
+                        .with_context(|| format!("binding HTTP {haddr}"))?,
+                )
+            }
+            None => None,
+        };
+        let store_opts = StoreOpts {
+            max_resident_sessions: opts.max_resident_sessions,
+            max_kv_tokens: opts.max_kv_tokens,
+            spill_dir: opts.spill_dir.clone(),
+        };
         let batcher = RequestBatcher::spawn(
             engine,
             opts.max_batch,
             Duration::from_micros(opts.max_wait_us),
             opts.seed,
-        );
+            store_opts,
+        )?;
         Ok(Server {
             listener,
+            http_listener,
             batcher,
             shutdown: Arc::new(AtomicBool::new(false)),
             workers: opts.workers.max(1),
@@ -81,16 +129,27 @@ impl Server {
         self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
     }
 
+    /// The actually-bound HTTP port (None when HTTP is disabled).
+    pub fn http_port(&self) -> Option<u16> {
+        self.http_listener
+            .as_ref()
+            .and_then(|l| l.local_addr().ok())
+            .map(|a| a.port())
+    }
+
     /// A handle that makes `run` return (used by tests and signal glue).
     pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
         self.shutdown.clone()
     }
 
-    /// Serve until a `SHUTDOWN` command (or the shutdown flag) arrives.
+    /// Serve until a shutdown command (or the shutdown flag) arrives.
     /// Returns the final stats snapshot line.
     pub fn run(self) -> Result<String> {
         self.listener.set_nonblocking(true)?;
-        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        if let Some(hl) = &self.http_listener {
+            hl.set_nonblocking(true)?;
+        }
+        let (conn_tx, conn_rx) = channel::<(TcpStream, ConnKind)>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
 
         let mut pool = Vec::with_capacity(self.workers);
@@ -105,25 +164,51 @@ impl Server {
                     guard.recv()
                 };
                 match stream {
-                    Ok(s) => handle_conn(s, &submit, &stats, &stop),
+                    Ok((s, ConnKind::Line)) => {
+                        handle_conn(s, &submit, &stats, &stop)
+                    }
+                    Ok((s, ConnKind::Http)) => {
+                        handle_http_conn(s, &submit, &stats, &stop)
+                    }
                     Err(_) => break, // accept loop gone: drain done
                 }
             }));
         }
 
-        info!("serving on port {} ({} workers)", self.port(), self.workers);
+        info!(
+            "serving on port {} (http {:?}, {} workers)",
+            self.port(),
+            self.http_port(),
+            self.workers
+        );
         while !self.shutdown.load(Ordering::SeqCst) {
+            let mut accepted = false;
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    let _ = conn_tx.send(stream);
+                    accepted = true;
+                    let _ = conn_tx.send((stream, ConnKind::Line));
                 }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
                 Err(e) => {
                     info!("accept error: {e}");
                     std::thread::sleep(Duration::from_millis(20));
                 }
+            }
+            if let Some(hl) = &self.http_listener {
+                match hl.accept() {
+                    Ok((stream, _)) => {
+                        accepted = true;
+                        let _ = conn_tx.send((stream, ConnKind::Http));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                    Err(e) => {
+                        info!("http accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            if !accepted {
+                std::thread::sleep(Duration::from_millis(5));
             }
         }
 
@@ -139,7 +224,11 @@ impl Server {
     }
 }
 
-/// Serve one connection until EOF, error, or shutdown.
+/// Idle eviction: a pooled worker is pinned per live connection, so idle
+/// connections are dropped after this many 200 ms timeout ticks (~60 s).
+const IDLE_TICKS: u32 = 300;
+
+/// Serve one line-protocol connection until EOF, error, or shutdown.
 fn handle_conn(
     stream: TcpStream,
     submit: &Sender<GenRequest>,
@@ -149,10 +238,6 @@ fn handle_conn(
     let _ = stream.set_nodelay(true);
     // poll tick: idle readers notice shutdown instead of pinning the pool
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    // a pooled worker is pinned for the connection's lifetime, so idle
-    // connections are evicted after this many consecutive timeout ticks
-    // (~60 s) instead of starving the pool forever
-    const IDLE_TICKS: u32 = 300;
     let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
@@ -189,8 +274,15 @@ fn handle_conn(
                 stop.store(true, Ordering::SeqCst);
                 return;
             }
-            Ok(Request::Gen { max_tokens, temp, prompt }) => {
-                stream_generation(&mut writer, submit, max_tokens, temp, prompt);
+            Ok(Request::Gen { max_tokens, temp, prompt, session }) => {
+                stream_generation(
+                    &mut writer,
+                    submit,
+                    max_tokens,
+                    temp,
+                    prompt,
+                    session,
+                );
                 continue;
             }
         };
@@ -200,17 +292,18 @@ fn handle_conn(
     }
 }
 
-/// Submit one GEN request and stream its events back.
+/// Submit one GEN/SGEN request and stream its events back.
 fn stream_generation(
     writer: &mut TcpStream,
     submit: &Sender<GenRequest>,
     max_tokens: usize,
     temp: f32,
     prompt: String,
+    session: Option<String>,
 ) {
     let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
     if submit
-        .send(GenRequest { prompt, max_tokens, temp, reply: tx })
+        .send(GenRequest { prompt, max_tokens, temp, session, reply: tx })
         .is_err()
     {
         let _ = writer.write_all(b"ERR server stopped\n");
@@ -238,6 +331,259 @@ fn stream_generation(
                 let _ = writer.write_all(b"ERR generation timed out\n");
                 return;
             }
+        }
+    }
+}
+
+/// Serve one HTTP connection (keep-alive) until EOF, error, `Connection:
+/// close`, or shutdown.
+fn handle_http_conn(
+    mut stream: TcpStream,
+    submit: &Sender<GenRequest>,
+    stats: &Arc<ServeStats>,
+    stop: &Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut idle_ticks = 0u32;
+    loop {
+        match http::parse_request(&buf) {
+            Ok(Parsed::Complete(req, consumed)) => {
+                buf.drain(..consumed);
+                let close = req.wants_close();
+                let keep =
+                    handle_http_request(&mut stream, req, submit, stats, stop);
+                if !keep || close {
+                    return;
+                }
+                idle_ticks = 0;
+                continue;
+            }
+            Ok(Parsed::Partial) => {}
+            Err(e) => {
+                let _ = http::write_response(
+                    &mut stream,
+                    e.status,
+                    "application/json",
+                    &json_error(&e.message),
+                    false,
+                );
+                return;
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return, // EOF
+            Ok(n) => {
+                buf.extend_from_slice(&tmp[..n]);
+                idle_ticks = 0;
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                idle_ticks += 1;
+                if stop.load(Ordering::SeqCst) || idle_ticks >= IDLE_TICKS {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn json_error(msg: &str) -> Vec<u8> {
+    Json::Obj(vec![("error".into(), Json::Str(msg.to_string()))])
+        .render()
+        .into_bytes()
+}
+
+/// Dispatch one parsed HTTP request. Returns false when the connection
+/// must close (write failure or shutdown).
+fn handle_http_request(
+    stream: &mut TcpStream,
+    req: HttpRequest,
+    submit: &Sender<GenRequest>,
+    stats: &Arc<ServeStats>,
+    stop: &Arc<AtomicBool>,
+) -> bool {
+    let path = req.target.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET" | "HEAD", "/stats") => {
+            let body = stats.snapshot_json().render_pretty();
+            http::write_response(
+                stream,
+                200,
+                "application/json",
+                body.as_bytes(),
+                req.method == "HEAD",
+            )
+            .is_ok()
+        }
+        ("POST", "/shutdown") => {
+            let body = Json::Obj(vec![("ok".into(), Json::Bool(true))]).render();
+            let _ = http::write_response(
+                stream,
+                200,
+                "application/json",
+                body.as_bytes(),
+                false,
+            );
+            stop.store(true, Ordering::SeqCst);
+            false
+        }
+        ("POST", "/generate") => http_generate(stream, &req, submit),
+        (_, "/stats" | "/shutdown" | "/generate") => http::write_response(
+            stream,
+            405,
+            "application/json",
+            &json_error("method not allowed for this path"),
+            req.method == "HEAD",
+        )
+        .is_ok(),
+        _ => http::write_response(
+            stream,
+            404,
+            "application/json",
+            &json_error("no such path (want /generate, /stats, /shutdown)"),
+            req.method == "HEAD",
+        )
+        .is_ok(),
+    }
+}
+
+/// `POST /generate`: body `{"prompt": "...", "max_tokens"?, "temp"?,
+/// "session"?}`. Streams newline-delimited JSON via chunked transfer
+/// encoding: one `{"piece": "<escaped>"}` object per token (piece is
+/// `protocol::escape_bytes`-escaped so split multi-byte characters
+/// survive JSON), then `{"done": true, "n_tokens": N, "gen_ms": T}`.
+fn http_generate(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    submit: &Sender<GenRequest>,
+) -> bool {
+    let bad = |stream: &mut TcpStream, status: u16, msg: &str| {
+        http::write_response(
+            stream,
+            status,
+            "application/json",
+            &json_error(msg),
+            false,
+        )
+        .is_ok()
+    };
+    if req.http10 {
+        // chunked transfer encoding does not exist in HTTP/1.0 — a 1.0
+        // client would read the chunk framing as body bytes
+        return bad(stream, 505, "/generate streams chunked; use HTTP/1.1");
+    }
+    let Ok(body) = std::str::from_utf8(&req.body) else {
+        return bad(stream, 400, "body is not UTF-8");
+    };
+    let doc = match Json::parse(body) {
+        Ok(d) => d,
+        Err(e) => return bad(stream, 400, &format!("body is not JSON: {e}")),
+    };
+    let Some(prompt) = doc.get("prompt").and_then(|v| v.as_str()) else {
+        return bad(stream, 400, "missing string field \"prompt\"");
+    };
+    let max_tokens = match doc.get("max_tokens") {
+        None => 32usize,
+        Some(v) => match v.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => n as usize,
+            _ => return bad(stream, 400, "max_tokens must be an integer"),
+        },
+    };
+    let temp = match doc.get("temp") {
+        None => 0.0f32,
+        Some(v) => match v.as_f64() {
+            Some(n) => n as f32,
+            None => return bad(stream, 400, "temp must be a number"),
+        },
+    };
+    let session = match doc.get("session") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some(s) => Some(s.to_string()),
+            None => return bad(stream, 400, "session must be a string"),
+        },
+    };
+    if let Err(e) =
+        protocol::validate_gen(max_tokens, temp, prompt, session.as_deref())
+    {
+        return bad(stream, 400, &e);
+    }
+
+    let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
+    if submit
+        .send(GenRequest {
+            prompt: prompt.to_string(),
+            max_tokens,
+            temp,
+            session,
+            reply: tx,
+        })
+        .is_err()
+    {
+        return bad(stream, 503, "server stopped");
+    }
+
+    // hold the status line until the first event so request-level errors
+    // (busy session, context overflow) become a clean 4xx
+    let first = match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(ev) => ev,
+        Err(_) => return bad(stream, 503, "generation timed out"),
+    };
+    let mut pending = match first {
+        TokenEvent::Error(e) => return bad(stream, 400, &e),
+        ev => Some(ev),
+    };
+    if http::write_chunked_head(stream, 200, "application/x-ndjson").is_err() {
+        return false;
+    }
+    loop {
+        let ev = match pending.take() {
+            Some(ev) => ev,
+            None => match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(ev) => ev,
+                Err(_) => {
+                    let mut line = json_error("generation timed out");
+                    line.push(b'\n');
+                    let _ = http::write_chunk(stream, &line);
+                    let _ = http::finish_chunks(stream);
+                    return false;
+                }
+            },
+        };
+        let (line, done) = match ev {
+            TokenEvent::Token(piece) => (
+                Json::Obj(vec![(
+                    "piece".into(),
+                    Json::Str(protocol::escape_bytes(&piece)),
+                )])
+                .render(),
+                false,
+            ),
+            TokenEvent::Done { n_tokens, gen_ms } => (
+                Json::Obj(vec![
+                    ("done".into(), Json::Bool(true)),
+                    ("n_tokens".into(), Json::Num(n_tokens as f64)),
+                    ("gen_ms".into(), Json::Num(gen_ms)),
+                ])
+                .render(),
+                true,
+            ),
+            TokenEvent::Error(e) => (
+                Json::Obj(vec![("error".into(), Json::Str(e))]).render(),
+                true,
+            ),
+        };
+        if http::write_chunk(stream, format!("{line}\n").as_bytes()).is_err() {
+            return false;
+        }
+        if done {
+            return http::finish_chunks(stream).is_ok();
         }
     }
 }

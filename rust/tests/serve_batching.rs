@@ -10,7 +10,7 @@ use chon::data::tokenizer::Tokenizer;
 use chon::runtime::native::model::init_params;
 use chon::runtime::native::model_cfg;
 use chon::runtime::native::recipe::recipe;
-use chon::serve::{Engine, GenRequest, RequestBatcher, TokenEvent};
+use chon::serve::{Engine, GenRequest, RequestBatcher, StoreOpts, TokenEvent};
 use chon::util::prng::Rng;
 use chon::util::proptest::{check, Gen};
 
@@ -80,7 +80,9 @@ fn concurrent_clients_get_their_own_completion() {
         4,
         Duration::from_micros(2000),
         0,
-    );
+        StoreOpts::default(),
+    )
+    .unwrap();
     let mut receivers = Vec::new();
     for p in &prompts {
         let (tx, rx) = channel();
@@ -90,6 +92,7 @@ fn concurrent_clients_get_their_own_completion() {
                 prompt: p.clone(),
                 max_tokens,
                 temp: 0.0,
+                session: None,
                 reply: tx,
             })
             .unwrap();

@@ -1,0 +1,493 @@
+//! Serve v2 invariant suite: every scale feature must be *bitwise*
+//! invisible in greedy outputs.
+//!
+//! * cross-session prefill batching: a max-batch-8 server with 8
+//!   concurrent ragged prompts produces, per prompt, exactly the bytes a
+//!   max-batch-1 server produces for it alone.
+//! * paged session cache + LRU eviction: a named session's generations
+//!   are identical whether its pages stayed resident, were evicted to
+//!   disk and reloaded, or the whole server ran with
+//!   `--max-resident-sessions 1`.
+//! * HTTP front end: `POST /generate` streams the same tokens the line
+//!   protocol streams, through the same batcher; `GET /stats` works.
+//! * data-stream checkpointing: a resumed training run's per-step losses
+//!   are bit-identical to an uninterrupted run's.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::data::tokenizer::Tokenizer;
+use chon::runtime::native::model::init_params;
+use chon::runtime::native::model_cfg;
+use chon::runtime::native::recipe::recipe;
+use chon::serve::{
+    client, protocol, Engine, GenRequest, RequestBatcher, ServeOpts, Server,
+    SessionStore, StoreOpts, TokenEvent,
+};
+use chon::util::json::Json;
+use chon::util::prng::Rng;
+
+fn native_cfg(model: &str, recipe: &str, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = model.into();
+    cfg.recipe = recipe.into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = seed;
+    cfg.out_dir = std::env::temp_dir().join("chon_serve_inv_runs");
+    cfg
+}
+
+/// Train `steps` steps and write a checkpoint dir under a per-test root.
+fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("chon_serve_inv_ckpt_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut tr = Trainer::new(native_cfg("tiny_gla", "chon", 7)).unwrap();
+    tr.train(steps).unwrap();
+    tr.save_checkpoint_to(&root).unwrap()
+}
+
+fn start_server(ckpt: &Path, opts_in: ServeOpts) -> (Server, u16) {
+    let engine = Engine::load(ckpt).expect("engine load");
+    let server = Server::bind(engine, &opts_in).expect("bind");
+    let port = server.port();
+    (server, port)
+}
+
+fn run_server(server: Server) -> JoinHandle<String> {
+    std::thread::spawn(move || server.run().expect("server run"))
+}
+
+fn serve_opts(max_batch: usize, max_resident: usize) -> ServeOpts {
+    ServeOpts {
+        port: 0,
+        http_port: Some(0),
+        max_batch,
+        max_wait_us: 5000,
+        workers: 10,
+        max_resident_sessions: max_resident,
+        ..ServeOpts::default()
+    }
+}
+
+// ---------------------------------------------------------------- prefill
+
+/// 8 concurrent ragged prompts on a max-batch-8 server reproduce, byte
+/// for byte, what a max-batch-1 server produces for each prompt alone —
+/// prefill batching and decode batching change nothing but throughput.
+#[test]
+fn prefill_batched_server_is_bit_identical_at_batch_1_and_8() {
+    let ckpt = train_checkpoint("prefill", 20);
+    let prompts: Vec<String> = (0..8)
+        .map(|i| format!("{} prompt number {i} ", "pad ".repeat(i)))
+        .collect();
+
+    // batch-1 server: nothing can coalesce
+    let (srv1, port1) = start_server(&ckpt, serve_opts(1, 0));
+    let h1 = run_server(srv1);
+    let solo: Vec<String> = prompts
+        .iter()
+        .map(|p| {
+            client::generate_once("127.0.0.1", port1, p, 12, 0.0).unwrap().0
+        })
+        .collect();
+    client::send_shutdown("127.0.0.1", port1).unwrap();
+    h1.join().unwrap();
+
+    // batch-8 server: fire all prompts concurrently so prefill coalesces
+    let (srv8, port8) = start_server(&ckpt, serve_opts(8, 0));
+    let h8 = run_server(srv8);
+    let mut outs: Vec<(usize, String)> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                s.spawn(move || {
+                    let out =
+                        client::generate_once("127.0.0.1", port8, p, 12, 0.0)
+                            .unwrap()
+                            .0;
+                    (i, out)
+                })
+            })
+            .collect();
+        for h in handles {
+            outs.push(h.join().unwrap());
+        }
+    });
+    let stats = client::fetch_stats("127.0.0.1", port8).unwrap();
+    client::send_shutdown("127.0.0.1", port8).unwrap();
+    h8.join().unwrap();
+
+    for (i, out) in outs {
+        assert_eq!(
+            out, solo[i],
+            "prompt {i} diverged between batch-1 and batch-8 servers"
+        );
+    }
+    // the batched server must actually have coalesced prefill steps
+    let batched: u64 = stats
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("prefill_batched_steps="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(batched > 0, "no prefill steps coalesced: {stats}");
+}
+
+// --------------------------------------------------------------- eviction
+
+fn test_engine() -> Engine {
+    let cfg = model_cfg("tiny_gla").unwrap();
+    let mut params = init_params(&cfg, 9);
+    // init_params zeroes lm_head (uniform logits); random head weight
+    // makes prompts actually diverge
+    let mut rng = Rng::new(77);
+    let head = params.last_mut().unwrap();
+    rng.fill_normal(&mut head.f32_data, 0.3);
+    Engine::from_parts(cfg, recipe("chon").unwrap(), Tokenizer::byte_level(), &params)
+}
+
+fn drain(rx: &Receiver<TokenEvent>) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)).expect("token event") {
+            TokenEvent::Token(p) => bytes.extend(p),
+            TokenEvent::Done { .. } => return bytes,
+            TokenEvent::Error(e) => panic!("generation failed: {e}"),
+        }
+    }
+}
+
+/// One sequential turn against a named session; waits for completion.
+fn session_turn(b: &RequestBatcher, sid: &str, prompt: &str, n: usize) -> Vec<u8> {
+    let (tx, rx) = channel();
+    b.submitter()
+        .send(GenRequest {
+            prompt: prompt.into(),
+            max_tokens: n,
+            temp: 0.0,
+            session: Some(sid.into()),
+            reply: tx,
+        })
+        .unwrap();
+    drain(&rx)
+}
+
+/// Greedy outputs of interleaved named sessions are bit-identical whether
+/// their state stayed resident (unlimited store) or was evicted to disk
+/// and reloaded between every turn (max_resident_sessions = 1).
+#[test]
+fn evict_then_reload_is_bit_identical_to_resident() {
+    let turns: Vec<(&str, String)> = (0..6)
+        .map(|t| {
+            let sid = if t % 2 == 0 { "alpha" } else { "beta" };
+            (sid, format!("turn {t} text "))
+        })
+        .collect();
+
+    let run = |opts: StoreOpts| -> Vec<Vec<u8>> {
+        let b = RequestBatcher::spawn(
+            test_engine(),
+            4,
+            Duration::from_micros(500),
+            0,
+            opts,
+        )
+        .unwrap();
+        let outs: Vec<Vec<u8>> = turns
+            .iter()
+            .map(|(sid, prompt)| session_turn(&b, sid, prompt, 8))
+            .collect();
+        b.shutdown();
+        outs
+    };
+
+    let resident = run(StoreOpts::default());
+    let evicting = run(StoreOpts {
+        max_resident_sessions: 1,
+        ..StoreOpts::default()
+    });
+    assert_eq!(
+        resident, evicting,
+        "evict+reload changed a greedy generation"
+    );
+
+    // and the evicting run must actually have spilled and reloaded
+    let b = RequestBatcher::spawn(
+        test_engine(),
+        4,
+        Duration::from_micros(500),
+        0,
+        StoreOpts { max_resident_sessions: 1, ..StoreOpts::default() },
+    )
+    .unwrap();
+    for (sid, prompt) in &turns {
+        session_turn(&b, sid, prompt, 8);
+    }
+    let ev = b.stats.evictions.load(std::sync::atomic::Ordering::Relaxed);
+    let rl = b.stats.reloads.load(std::sync::atomic::Ordering::Relaxed);
+    b.shutdown();
+    assert!(ev >= 2, "expected evictions under max_resident=1, got {ev}");
+    assert!(rl >= 2, "expected reloads under max_resident=1, got {rl}");
+}
+
+/// A failed reload (corrupt spill file) surfaces as an error on every
+/// attempt — it must never silently turn the next request into a fresh
+/// empty session — and the session recovers once the bytes are back.
+#[test]
+fn failed_spill_reload_does_not_silently_reset_the_session() {
+    let eng = test_engine();
+    let dir = std::env::temp_dir().join("chon_inv_spill_dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = SessionStore::new(StoreOpts {
+        max_resident_sessions: 1,
+        max_kv_tokens: 0,
+        spill_dir: Some(dir.clone()),
+    })
+    .unwrap();
+    let mut a = eng.new_session();
+    eng.prefill(&mut a, &[97, 98, 99]);
+    store.put("a", a, &eng).unwrap();
+    store.put("b", eng.new_session(), &eng).unwrap(); // evicts "a"
+    let spill = dir.join("a.sess");
+    let orig = std::fs::read(&spill).unwrap();
+    let mut corrupt = orig.clone();
+    corrupt.push(0);
+    std::fs::write(&spill, &corrupt).unwrap();
+    assert!(store.take("a", &eng).is_err(), "corrupt blob must error");
+    assert!(
+        store.take("a", &eng).is_err(),
+        "the id must stay tracked after a failed reload, not become None"
+    );
+    std::fs::write(&spill, &orig).unwrap();
+    let back = store.take("a", &eng).unwrap().expect("session recovered");
+    assert_eq!(back.pos, 3, "recovered session kept its context");
+}
+
+/// Same invariant through the full TCP server: a whole server running
+/// with --max-resident-sessions 1 answers named-session traffic
+/// identically to an unlimited one.
+#[test]
+fn server_with_max_resident_1_matches_unlimited() {
+    let ckpt = train_checkpoint("evict_srv", 20);
+    let transcript = |max_resident: usize| -> (Vec<String>, String) {
+        let (srv, port) = start_server(&ckpt, serve_opts(4, max_resident));
+        let h = run_server(srv);
+        let mut outs = Vec::new();
+        for t in 0..6 {
+            let sid = if t % 2 == 0 { "sess_x" } else { "sess_y" };
+            let prompt = format!("hello {t} ");
+            let (text, n, _) = client::generate_session_once(
+                "127.0.0.1",
+                port,
+                sid,
+                &prompt,
+                10,
+                0.0,
+            )
+            .unwrap();
+            assert_eq!(n, 10);
+            outs.push(text);
+        }
+        let stats = client::fetch_stats("127.0.0.1", port).unwrap();
+        client::send_shutdown("127.0.0.1", port).unwrap();
+        h.join().unwrap();
+        (outs, stats)
+    };
+
+    let (unlimited, _) = transcript(0);
+    let (constrained, stats) = transcript(1);
+    assert_eq!(
+        unlimited, constrained,
+        "--max-resident-sessions 1 changed greedy outputs"
+    );
+    let evictions: u64 = stats
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("evictions="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    assert!(evictions > 0, "constrained server never evicted: {stats}");
+}
+
+// ------------------------------------------------------------------- http
+
+/// Minimal HTTP client: one request, Connection: close, returns
+/// (status, body-after-dechunking-if-chunked).
+fn http_request(port: u16, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("no header terminator");
+    let head = String::from_utf8_lossy(&raw[..head_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let chunked = head.to_ascii_lowercase().contains("transfer-encoding: chunked");
+    let mut body_bytes = raw[head_end + 4..].to_vec();
+    if chunked {
+        body_bytes = dechunk(&body_bytes);
+    }
+    (status, body_bytes)
+}
+
+fn dechunk(mut b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let Some(eol) = b.windows(2).position(|w| w == b"\r\n") else {
+            panic!("chunk size line missing");
+        };
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&b[..eol]).unwrap().trim(),
+            16,
+        )
+        .unwrap();
+        b = &b[eol + 2..];
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&b[..size]);
+        b = &b[size + 2..]; // skip chunk + CRLF
+    }
+}
+
+/// The HTTP front end streams the same tokens as the line protocol (same
+/// batcher, same engine), and /stats + /shutdown work.
+#[test]
+fn http_generate_matches_line_protocol() {
+    let ckpt = train_checkpoint("http", 20);
+    let (srv, port) = start_server(&ckpt, serve_opts(4, 0));
+    let http_port = srv.http_port().expect("http enabled");
+    let h = run_server(srv);
+
+    let (line_text, n, _) =
+        client::generate_once("127.0.0.1", port, "the quick ", 12, 0.0).unwrap();
+    assert_eq!(n, 12);
+
+    let (status, body) = http_request(
+        http_port,
+        "POST",
+        "/generate",
+        r#"{"prompt": "the quick ", "max_tokens": 12}"#,
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    // NDJSON: {"piece": "<escaped>"} per token then {"done": ...}
+    let mut bytes = Vec::new();
+    let mut done = false;
+    let mut n_tokens = 0u64;
+    for line in String::from_utf8(body).unwrap().lines() {
+        let doc = Json::parse(line).unwrap();
+        if let Some(piece) = doc.get("piece").and_then(|v| v.as_str()) {
+            bytes.extend(protocol::unescape_bytes(piece).unwrap());
+        } else {
+            assert!(doc.get("done").is_some(), "unexpected line {line}");
+            n_tokens =
+                doc.get("n_tokens").and_then(|v| v.as_f64()).unwrap() as u64;
+            done = true;
+        }
+    }
+    assert!(done, "stream never finished");
+    assert_eq!(n_tokens, 12);
+    assert_eq!(
+        String::from_utf8_lossy(&bytes),
+        line_text,
+        "HTTP and line protocol produced different tokens"
+    );
+
+    // named sessions work over HTTP too and share the store
+    let (s1, b1) = http_request(
+        http_port,
+        "POST",
+        "/generate",
+        r#"{"prompt": "hi ", "max_tokens": 4, "session": "web1"}"#,
+    );
+    assert_eq!(s1, 200, "{}", String::from_utf8_lossy(&b1));
+
+    // stats: JSON with the batching counters
+    let (status, body) = http_request(http_port, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(doc.get("requests").and_then(|v| v.as_f64()).unwrap() >= 3.0);
+    assert!(doc.get("prefill_tokens").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert_eq!(
+        doc.get("resident_sessions").and_then(|v| v.as_f64()),
+        Some(1.0),
+        "web1 should be resident"
+    );
+
+    // request-level errors are clean 4xx JSON
+    let (status, _) = http_request(http_port, "POST", "/generate", "{}");
+    assert_eq!(status, 400);
+    let (status, _) = http_request(http_port, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    let (status, _) = http_request(http_port, "PUT", "/generate", "");
+    assert_eq!(status, 405);
+
+    // graceful drain over HTTP
+    let (status, _) = http_request(http_port, "POST", "/shutdown", "");
+    assert_eq!(status, 200);
+    h.join().unwrap();
+}
+
+// ----------------------------------------------------------------- resume
+
+/// A resumed run's per-step losses are bit-identical to an uninterrupted
+/// run's: the data-stream position checkpoint fast-forwards the pipeline
+/// past already-consumed batches.
+#[test]
+fn resumed_run_losses_bit_identical_to_uninterrupted() {
+    let total = 10usize;
+    let split = 6usize;
+
+    // uninterrupted reference
+    let mut full = Trainer::new(native_cfg("tiny_gla", "chon", 11)).unwrap();
+    full.train(total).unwrap();
+    let full_losses: Vec<u32> =
+        full.log.records.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(full_losses.len(), total);
+
+    // interrupted at `split`, checkpointed, resumed in a fresh process
+    // image (fresh Trainer), trained to `total`
+    let root = std::env::temp_dir().join("chon_serve_inv_resume");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut first = Trainer::new(native_cfg("tiny_gla", "chon", 11)).unwrap();
+    first.train(split).unwrap();
+    let ckpt = first.save_checkpoint_to(&root).unwrap();
+    let first_losses: Vec<u32> =
+        first.log.records.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(&first_losses[..], &full_losses[..split], "prefix diverged");
+
+    let mut resumed = Trainer::new(native_cfg("tiny_gla", "chon", 11)).unwrap();
+    resumed.restore(&ckpt).unwrap();
+    assert_eq!(resumed.state.step, split);
+    resumed.train(total - split).unwrap();
+    let resumed_losses: Vec<u32> =
+        resumed.log.records.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(
+        &resumed_losses[..],
+        &full_losses[split..],
+        "resumed losses diverged from the uninterrupted run \
+         (data-stream fast-forward broken?)"
+    );
+}

@@ -1,0 +1,331 @@
+//! Property/fuzz tests for the serve wire surfaces: the TCP line
+//! protocol (escaping, request parsing) and the hand-rolled HTTP/1.1
+//! request parser. The parsers sit on the untrusted side of the server,
+//! so the properties are blunt: never panic on garbage, reject rather
+//! than misread truncated/oversized frames, and round-trip every valid
+//! frame exactly — including frames split at arbitrary byte boundaries.
+
+use chon::serve::http::{self, Parsed};
+use chon::serve::protocol::{self, Request};
+use chon::util::prng::Rng;
+
+// ------------------------------------------------------------- escaping
+
+/// Arbitrary byte vectors survive escape → unescape exactly, and the
+/// escaped form is always single-line printable ASCII.
+#[test]
+fn escape_roundtrips_arbitrary_bytes() {
+    let mut rng = Rng::new(0xE5C);
+    for _ in 0..500 {
+        let n = rng.below(200);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let esc = protocol::escape_bytes(&bytes);
+        assert!(
+            esc.bytes().all(|b| (0x20..=0x7e).contains(&b)),
+            "escape produced non-printable output for {bytes:?}"
+        );
+        assert_eq!(
+            protocol::unescape_bytes(&esc).unwrap(),
+            bytes,
+            "round-trip mismatch"
+        );
+    }
+}
+
+/// Unescaping random printable garbage (heavy on backslashes) never
+/// panics; truncating a valid escaped string mid-escape errors rather
+/// than silently decoding to something else.
+#[test]
+fn unescape_survives_garbage_and_truncation() {
+    let mut rng = Rng::new(0xBAD);
+    for _ in 0..500 {
+        let n = rng.below(64);
+        let s: String = (0..n)
+            .map(|_| {
+                if rng.below(3) == 0 {
+                    '\\'
+                } else {
+                    (0x20 + rng.below(0x5f) as u8) as char
+                }
+            })
+            .collect();
+        // must not panic; Ok or Err both acceptable
+        let _ = protocol::unescape_bytes(&s);
+    }
+    // truncations of a valid escape stream: every prefix is Ok or Err,
+    // and a prefix ending inside an escape sequence is an error
+    let full = protocol::escape_bytes(&[0x00, 0xFF, b'\\', b'\n', 0x07]);
+    for cut in 0..full.len() {
+        let prefix = &full[..cut];
+        let res = protocol::unescape_bytes(prefix);
+        if prefix.ends_with('\\') {
+            assert!(res.is_err(), "dangling backslash accepted: {prefix:?}");
+        }
+        if let Ok(bytes) = res {
+            // whatever decoded must re-encode to the same prefix
+            assert_eq!(protocol::escape_bytes(&bytes), prefix);
+        }
+    }
+}
+
+// ------------------------------------------------------ line requests
+
+fn random_prompt(rng: &mut Rng, max_chars: usize) -> String {
+    let n = 1 + rng.below(max_chars);
+    (0..n)
+        .map(|_| match rng.below(6) {
+            0 => char::from_u32(rng.below(0x20) as u32).unwrap(),
+            1 => char::from_u32(0xA0 + rng.below(0x500) as u32).unwrap_or('ß'),
+            2 => '\u{1F600}',
+            _ => (0x20 + rng.below(0x5f) as u8) as char,
+        })
+        .collect()
+}
+
+fn random_sid(rng: &mut Rng) -> String {
+    const OK: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789._-";
+    let n = 1 + rng.below(protocol::MAX_SESSION_ID_LEN);
+    let mut s = String::new();
+    // first char alphanumeric (ids may not start with '.' or '-')
+    s.push(OK[rng.below(62)] as char);
+    for _ in 1..n {
+        s.push(OK[rng.below(OK.len())] as char);
+    }
+    s
+}
+
+/// Every rendered GEN/SGEN line parses back to exactly the request that
+/// produced it.
+#[test]
+fn random_valid_gen_lines_roundtrip() {
+    let mut rng = Rng::new(0x6E2);
+    for _ in 0..400 {
+        let max_tokens = 1 + rng.below(protocol::MAX_GEN_TOKENS);
+        let temp = if rng.below(2) == 0 {
+            0.0
+        } else {
+            rng.uniform() * protocol::MAX_TEMP
+        };
+        let prompt = random_prompt(&mut rng, 80);
+        let (line, want_session) = if rng.below(2) == 0 {
+            (protocol::format_gen(max_tokens, temp, &prompt), None)
+        } else {
+            let sid = random_sid(&mut rng);
+            (
+                protocol::format_sgen(&sid, max_tokens, temp, &prompt),
+                Some(sid),
+            )
+        };
+        match protocol::parse_request(line.trim_end()) {
+            Ok(Request::Gen {
+                max_tokens: mt,
+                temp: t,
+                prompt: p,
+                session,
+            }) => {
+                assert_eq!(mt, max_tokens);
+                assert_eq!(t.to_bits(), temp.to_bits(), "temp drifted");
+                assert_eq!(p, prompt);
+                assert_eq!(session, want_session);
+            }
+            other => panic!("valid line {line:?} parsed to {other:?}"),
+        }
+    }
+}
+
+/// Random mutations (truncation, byte splices, doubled frames) of valid
+/// request lines never panic the parser, and oversized frames always
+/// reject.
+#[test]
+fn mutated_and_oversized_lines_never_panic() {
+    let mut rng = Rng::new(0x517);
+    for _ in 0..600 {
+        let base = match rng.below(4) {
+            0 => protocol::format_gen(8, 0.5, &random_prompt(&mut rng, 40)),
+            1 => protocol::format_sgen(
+                &random_sid(&mut rng),
+                8,
+                0.0,
+                &random_prompt(&mut rng, 40),
+            ),
+            2 => "STATS\n".to_string(),
+            _ => "PING\n".to_string(),
+        };
+        let mut bytes = base.into_bytes();
+        match rng.below(3) {
+            0 => {
+                // truncate
+                let cut = rng.below(bytes.len() + 1);
+                bytes.truncate(cut);
+            }
+            1 => {
+                // splice random bytes (keep it valid UTF-8 by using ASCII)
+                for _ in 0..1 + rng.below(4) {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    let at = rng.below(bytes.len());
+                    bytes[at] = rng.below(0x80) as u8;
+                }
+            }
+            _ => {
+                // duplicate the frame into itself
+                let copy = bytes.clone();
+                let at = rng.below(bytes.len() + 1);
+                bytes.splice(at..at, copy);
+            }
+        }
+        if let Ok(s) = String::from_utf8(bytes) {
+            // must not panic; the Result content is unconstrained
+            let _ = protocol::parse_request(s.trim_end_matches('\n'));
+        }
+    }
+    // oversized prompt: over the cap even when every byte is benign
+    let huge = format!(
+        "GEN 5 0.0\t{}",
+        "a".repeat(protocol::MAX_PROMPT_BYTES + 1)
+    );
+    assert!(protocol::parse_request(&huge).is_err());
+    // oversized max_tokens / bad numbers
+    assert!(protocol::parse_request("GEN 100000 0.0\thi").is_err());
+    assert!(protocol::parse_request("GEN 5 1e99\thi").is_err());
+    assert!(protocol::parse_request("GEN 18446744073709551617 0\thi").is_err());
+}
+
+// -------------------------------------------------------------- http
+
+fn random_http_request(rng: &mut Rng) -> (Vec<u8>, String, String, Vec<u8>) {
+    let method = ["GET", "POST", "HEAD"][rng.below(3)].to_string();
+    let path = format!(
+        "/{}",
+        (0..rng.below(30))
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect::<String>()
+    );
+    let n_headers = rng.below(5);
+    let mut head = format!("{method} {path} HTTP/1.1\r\n");
+    for i in 0..n_headers {
+        head.push_str(&format!("X-H{i}: v{}\r\n", rng.below(1000)));
+    }
+    let body: Vec<u8> = if method == "POST" {
+        (0..rng.below(200)).map(|_| rng.below(256) as u8).collect()
+    } else {
+        Vec::new()
+    };
+    if !body.is_empty() {
+        head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    }
+    head.push_str("\r\n");
+    let mut raw = head.into_bytes();
+    raw.extend_from_slice(&body);
+    (raw, method, path, body)
+}
+
+/// A valid request fed one byte at a time is Partial at every proper
+/// prefix and parses completely (with the exact consumed count) at the
+/// end — the incremental parser survives any read-boundary split.
+#[test]
+fn http_parser_handles_any_split_boundary() {
+    let mut rng = Rng::new(0x477);
+    for _ in 0..60 {
+        let (raw, method, path, body) = random_http_request(&mut rng);
+        for cut in 0..raw.len() {
+            match http::parse_request(&raw[..cut]) {
+                Ok(Parsed::Partial) => {}
+                Ok(Parsed::Complete(..)) => {
+                    panic!("complete on a proper prefix of {method} {path}")
+                }
+                Err(e) => panic!(
+                    "prefix {cut} of valid {method} {path} rejected: {}",
+                    e.message
+                ),
+            }
+        }
+        match http::parse_request(&raw) {
+            Ok(Parsed::Complete(req, consumed)) => {
+                assert_eq!(consumed, raw.len());
+                assert_eq!(req.method, method);
+                assert_eq!(req.target, path);
+                assert_eq!(req.body, body);
+            }
+            _ => panic!("full valid request did not parse"),
+        }
+    }
+}
+
+/// Two concatenated (pipelined) requests parse one at a time with exact
+/// consumed offsets.
+#[test]
+fn http_pipelined_requests_parse_in_sequence() {
+    let mut rng = Rng::new(0x999);
+    for _ in 0..40 {
+        let (a, am, ap, ab) = random_http_request(&mut rng);
+        let (b, bm, bp, bb) = random_http_request(&mut rng);
+        let mut both = a.clone();
+        both.extend_from_slice(&b);
+        let Ok(Parsed::Complete(ra, ca)) = http::parse_request(&both) else {
+            panic!("first pipelined request lost");
+        };
+        assert_eq!(ca, a.len());
+        assert_eq!((ra.method, ra.target, ra.body), (am, ap, ab));
+        let Ok(Parsed::Complete(rb, cb)) = http::parse_request(&both[ca..])
+        else {
+            panic!("second pipelined request lost");
+        };
+        assert_eq!(ca + cb, both.len());
+        assert_eq!((rb.method, rb.target, rb.body), (bm, bp, bb));
+    }
+}
+
+/// Random byte soup never panics the HTTP parser, and unbounded header
+/// sections / bodies are rejected instead of buffered forever.
+#[test]
+fn http_parser_survives_garbage_and_enforces_caps() {
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..400 {
+        let n = rng.below(300);
+        let soup: Vec<u8> = (0..n)
+            .map(|_| match rng.below(8) {
+                0 => b'\r',
+                1 => b'\n',
+                2 => b' ',
+                3 => b':',
+                _ => rng.below(256) as u8,
+            })
+            .collect();
+        // must not panic; any of Partial/Complete/Err is acceptable
+        let _ = http::parse_request(&soup);
+    }
+    // header section growing without a terminator trips the cap
+    let mut endless = b"GET / HTTP/1.1\r\n".to_vec();
+    while endless.len() <= http::MAX_HEAD_BYTES {
+        endless.extend_from_slice(b"X-Pad: aaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+    }
+    assert!(http::parse_request(&endless).is_err());
+    // a declared body over the cap rejects before any body bytes arrive
+    let big = format!(
+        "POST /g HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        http::MAX_BODY_BYTES + 1
+    );
+    assert!(http::parse_request(big.as_bytes()).is_err());
+    // mutations of a valid head: truncate/splice, never panic
+    for _ in 0..300 {
+        let (mut raw, ..) = random_http_request(&mut rng);
+        match rng.below(2) {
+            0 => {
+                let cut = rng.below(raw.len() + 1);
+                raw.truncate(cut);
+            }
+            _ => {
+                for _ in 0..1 + rng.below(6) {
+                    if raw.is_empty() {
+                        break;
+                    }
+                    let at = rng.below(raw.len());
+                    raw[at] = rng.below(256) as u8;
+                }
+            }
+        }
+        let _ = http::parse_request(&raw);
+    }
+}

@@ -36,12 +36,12 @@ fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
 fn start_server(ckpt: &PathBuf, max_batch: usize) -> (u16, JoinHandle<String>) {
     let engine = Engine::load(ckpt).expect("engine load");
     let opts = ServeOpts {
-        host: "127.0.0.1".into(),
-        port: 0, // ephemeral
+        port: 0,             // ephemeral
+        http_port: Some(0),  // ephemeral
         max_batch,
         max_wait_us: 3000,
         workers: 8,
-        seed: 0,
+        ..ServeOpts::default()
     };
     let server = Server::bind(engine, &opts).expect("bind");
     let port = server.port();
