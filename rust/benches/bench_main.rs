@@ -935,6 +935,94 @@ fn perf() -> Result<()> {
             ]);
         }
 
+        // packed-weight-cache decode: the engine's per-load PackedMat
+        // panels feed every GEMM here (bitwise identical to unpacked —
+        // this entry tracks the speed of the cached path specifically)
+        {
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let batch = 4usize;
+            let mut sessions: Vec<chon::serve::Session> =
+                (0..batch).map(|_| eng.new_session()).collect();
+            let toks: Vec<u32> = (0..batch as u32).map(|i| 97 + i).collect();
+            let t = time_auto(300.0, || {
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                std::hint::black_box(eng.decode_step(&mut refs, &toks));
+            });
+            record("serve_decode_packed_weights", t.median_ms);
+            table.row(&[
+                format!("serve decode packed-W (b={batch})"),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
+            ]);
+        }
+
+        // two-model registry: one greedy request per model per iteration
+        // through the full submit→batcher→reply path
+        {
+            use std::sync::atomic::AtomicBool;
+            use std::sync::mpsc::channel;
+            use std::sync::Arc;
+            let mk = |seed: u64| -> Result<chon::serve::Engine> {
+                let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+                let params =
+                    chon::runtime::native::model::init_params(&cfg, seed);
+                Ok(chon::serve::Engine::from_parts(
+                    cfg,
+                    chon::runtime::native::recipe::recipe("chon")?,
+                    chon::data::tokenizer::Tokenizer::byte_level(),
+                    &params,
+                ))
+            };
+            let mut reg = chon::serve::ModelRegistry::new(
+                chon::serve::RegistryOpts::default(),
+            );
+            reg.register_engine("a", mk(1)?)?;
+            reg.register_engine("b", mk(2)?)?;
+            let one = |model: &str| {
+                let (tx, rx) = channel();
+                reg.submit(
+                    Some(model),
+                    chon::serve::GenRequest {
+                        prompt: "the quick ".into(),
+                        max_tokens: 8,
+                        temp: 0.0,
+                        session: None,
+                        reply: tx,
+                        cancel: Arc::new(AtomicBool::new(false)),
+                    },
+                )
+                .expect("submit");
+                loop {
+                    match rx.recv().expect("reply") {
+                        chon::serve::TokenEvent::Done { .. } => break,
+                        chon::serve::TokenEvent::Error(e) => panic!("{e}"),
+                        chon::serve::TokenEvent::Token(_) => {}
+                    }
+                }
+            };
+            let t = time_auto(300.0, || {
+                one("a");
+                one("b");
+            });
+            record("serve_two_models", t.median_ms);
+            table.row(&[
+                "serve 2 models (8 tok each)".into(),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", 16.0 / t.median_ms * 1e3),
+            ]);
+            reg.shutdown();
+        }
+
         // paged long-context decode: SA sessions deep into their KV pages
         {
             let cfg = chon::runtime::native::model_cfg("tiny_sa")?;

@@ -237,13 +237,28 @@ pub fn diff_reports(
             }
         }
     }
+    // new entries never fail the gate, but they must be *visible* in the
+    // same per-entry delta format as everything else: a baseline refresh
+    // (or a bench that started emitting a new name) should be auditable
+    // from the CI log, not silently skipped
+    let mut fresh = 0usize;
     for c in current {
         if !baseline.iter().any(|b| b.name == c.name) {
+            fresh += 1;
             println!(
-                "{:<28} new entry ({:.2} {}) — refresh the baseline to track it",
-                c.name, c.value, c.unit
+                "{:<28} baseline missing (new)   now {:>8.2} {u}  ok",
+                c.name,
+                c.value,
+                u = c.unit,
             );
         }
+    }
+    if fresh > 0 {
+        println!(
+            "{fresh} entr{} without a baseline — refresh it to start \
+             gating them",
+            if fresh == 1 { "y" } else { "ies" }
+        );
     }
     regressed
 }
@@ -313,6 +328,10 @@ mod tests {
         let cur = vec![BenchEntry::val("matmul", 2.0, "loss")];
         let bad = diff_reports(&entries[..1], &cur, 25.0);
         assert_eq!(bad, vec!["matmul".to_string()]);
+        // entries new in the current run are reported ("baseline
+        // missing") but never regress the gate
+        let cur = vec![BenchEntry::ms("matmul", 2.0), BenchEntry::ms("brand_new", 9.0)];
+        assert!(diff_reports(&entries[..1], &cur, 25.0).is_empty());
     }
 
     #[test]

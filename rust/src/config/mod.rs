@@ -57,6 +57,15 @@ pub struct RunConfig {
     pub max_kv_tokens: usize,
     /// serve: directory evicted sessions spill to (None = temp dir)
     pub spill_dir: Option<PathBuf>,
+    /// serve: registry entries from repeated `--model NAME=DIR` flags
+    pub serve_models: Vec<(String, PathBuf)>,
+    /// serve: max models with a loaded engine at once (0 = unlimited)
+    pub max_resident_models: usize,
+    /// serve: min ms between checkpoint generation probes per model
+    pub reload_poll_ms: u64,
+    /// client: registry model names from `--model NAME[,NAME...]` (load
+    /// mode sprays across them; one-shot uses the first)
+    pub client_models: Vec<String>,
     /// client: named-session id for one-shot requests (SGEN)
     pub session: Option<String>,
     /// client: total requests in load mode (0 = single-shot)
@@ -100,6 +109,10 @@ impl Default for RunConfig {
             max_resident_sessions: 0,
             max_kv_tokens: 0,
             spill_dir: None,
+            serve_models: Vec::new(),
+            max_resident_models: 0,
+            reload_poll_ms: 500,
+            client_models: Vec::new(),
             session: None,
             requests: 0,
             concurrency: 4,
@@ -168,7 +181,44 @@ impl RunConfig {
             match key {
                 "backend" => self.backend = next()?,
                 "artifacts" => self.artifacts = PathBuf::from(next()?),
-                "model" => self.model = next()?,
+                // --model is overloaded by subcommand: `NAME=DIR`
+                // registers a serve model; a plain value is the train
+                // model-config name and doubles as the client's routing
+                // name list (comma-separated for load-mode spraying)
+                "model" => {
+                    let v = next()?;
+                    if let Some((name, dir)) = v.split_once('=') {
+                        if name.is_empty() || dir.is_empty() {
+                            bail!("--model NAME=DIR needs both parts, got {v:?}");
+                        }
+                        if !crate::serve::protocol::valid_model_name(name) {
+                            bail!(
+                                "bad model name {name:?} in --model (want \
+                                 1..=64 of [A-Za-z0-9._-], not starting \
+                                 with '.' or '-')"
+                            );
+                        }
+                        self.serve_models
+                            .push((name.to_string(), PathBuf::from(dir)));
+                    } else {
+                        // a typo like "alpha," or "a,,b" would otherwise
+                        // spray requests at an empty model name and only
+                        // surface as per-request failures server-side
+                        let names: Vec<String> =
+                            v.split(',').map(|s| s.to_string()).collect();
+                        for n in &names {
+                            if !crate::serve::protocol::valid_model_name(n) {
+                                bail!(
+                                    "bad model name {n:?} in --model {v:?} \
+                                     (empty entries and [^A-Za-z0-9._-] are \
+                                     rejected)"
+                                );
+                            }
+                        }
+                        self.model = v.clone();
+                        self.client_models = names;
+                    }
+                }
                 "recipe" => self.recipe = next()?,
                 "steps" => self.steps = next()?.parse()?,
                 "diag-every" => self.diag_every = next()?.parse()?,
@@ -200,6 +250,10 @@ impl RunConfig {
                 }
                 "max-kv-tokens" => self.max_kv_tokens = next()?.parse()?,
                 "spill-dir" => self.spill_dir = Some(PathBuf::from(next()?)),
+                "max-resident-models" => {
+                    self.max_resident_models = next()?.parse()?
+                }
+                "reload-poll-ms" => self.reload_poll_ms = next()?.parse()?,
                 "session" => self.session = Some(next()?),
                 "requests" => self.requests = next()?.parse()?,
                 "concurrency" => self.concurrency = next()?.parse()?,
@@ -310,6 +364,46 @@ mod tests {
         assert_eq!(c.session.as_deref(), Some("conv1"));
         c.apply_args(&["--http-port".into(), "off".into()]).unwrap();
         assert_eq!(c.http_port, None);
+    }
+
+    #[test]
+    fn registry_flags_parse() {
+        let mut c = RunConfig::default();
+        c.apply_args(&[
+            "--model".into(),
+            "alpha=/ckpts/a".into(),
+            "--model".into(),
+            "beta=/ckpts/b".into(),
+            "--max-resident-models".into(),
+            "1".into(),
+            "--reload-poll-ms".into(),
+            "0".into(),
+        ])
+        .unwrap();
+        assert_eq!(
+            c.serve_models,
+            vec![
+                ("alpha".to_string(), PathBuf::from("/ckpts/a")),
+                ("beta".to_string(), PathBuf::from("/ckpts/b")),
+            ]
+        );
+        assert_eq!(c.max_resident_models, 1);
+        assert_eq!(c.reload_poll_ms, 0);
+        // train-style plain value still lands in cfg.model, and doubles
+        // as the client's (comma-separated) routing list
+        assert_eq!(c.model, "tiny_gla");
+        c.apply_args(&["--model".into(), "alpha,beta".into()]).unwrap();
+        assert_eq!(c.model, "alpha,beta");
+        assert_eq!(c.client_models, vec!["alpha", "beta"]);
+        // both halves of NAME=DIR are required
+        assert!(c.apply_args(&["--model".into(), "=dir".into()]).is_err());
+        assert!(c.apply_args(&["--model".into(), "name=".into()]).is_err());
+        // names are validated at parse time: a trailing comma (empty
+        // entry) or a path-unsafe registry name is an immediate CLI
+        // error, not a fraction of failed requests later
+        assert!(c.apply_args(&["--model".into(), "alpha,".into()]).is_err());
+        assert!(c.apply_args(&["--model".into(), "a,,b".into()]).is_err());
+        assert!(c.apply_args(&["--model".into(), "bad/name=/x".into()]).is_err());
     }
 
     #[test]

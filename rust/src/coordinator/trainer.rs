@@ -349,7 +349,11 @@ impl Trainer {
 
     /// Persist the full run state to a checkpoint *directory*
     /// `<dir>/<model>_<recipe>_<step>/` — params, optimizer state,
-    /// tokenizer vocab and run metadata (see `runtime::ckptdir`).
+    /// tokenizer vocab and run metadata (see `runtime::ckptdir`). Every
+    /// save stamps `meta.toml` with a monotonically increasing
+    /// `generation` (scanned from what is already under `dir`), which is
+    /// what lets a live `chon serve` registry hot-reload republished
+    /// checkpoints without a restart.
     pub fn save_checkpoint_to(&self, dir: &Path) -> Result<PathBuf> {
         let path = dir.join(format!(
             "{}_{}_{:05}",
@@ -363,6 +367,7 @@ impl Trainer {
             step: self.state.step,
             vocab: self.tokenizer.vocab,
             data_batches: self.batches_consumed,
+            generation: ckptdir::next_generation(dir),
         };
         let tensors: Vec<(String, HostTensor)> = self
             .state

@@ -20,7 +20,9 @@ use anyhow::{bail, Context, Result};
 use chon::config::RunConfig;
 use chon::coordinator::{ablation, evalsuite, Trainer};
 use chon::runtime::native;
-use chon::serve::{client, ClientOpts, Engine, ServeOpts, Server};
+use chon::serve::{
+    client, ClientOpts, ModelRegistry, RegistryOpts, ServeOpts, Server, StoreOpts,
+};
 
 const HELP: &str = "\
 chon — CHON/NVFP4 training coordinator
@@ -53,14 +55,24 @@ COMMON FLAGS:
                     on model/recipe mismatch)
 
 SERVE/CLIENT FLAGS:
-  --checkpoint DIR  checkpoint dir (or parent; highest step wins)
+  --checkpoint DIR  checkpoint dir (or parent; highest step wins);
+                    registered as model "default"
+  --model NAME=DIR  register a named model (repeatable; first registered
+                    is the default route). serve only — a plain --model
+                    NAME[,NAME] is the client-side routing list
+  --max-resident-models N  models with a loaded engine at once (0=unlim.;
+                    LRU models unload, sessions park, reload on demand)
+  --reload-poll-ms MS  min interval between checkpoint generation probes
+                    (default 500; a republished checkpoint hot-reloads)
   --host H          (default 127.0.0.1)   --port P       (default 7411; 0=any)
   --http-port P     HTTP front end (default 7412; 0=any; off=disabled)
   --max-batch N     (default 8)           --max-wait-us U (default 2000)
   --max-resident-sessions N  idle named sessions kept in RAM (0=unlimited)
   --max-kv-tokens N          resident idle KV positions cap (0=unlimited)
   --spill-dir DIR            where evicted sessions go (default: temp dir)
-  --requests N      client load mode      --concurrency C (default 4)
+  --requests N      client load mode (sprays across --model names,
+                    per-model latency percentiles)
+  --concurrency C   (default 4)
   --max-tokens N    (default 32)          --temp T       (default 0 = greedy)
   --prompt TEXT     --session ID          (continue a named session, SGEN)
   --shutdown        (ask the server to drain + stop)
@@ -73,9 +85,10 @@ BENCH-DIFF FLAGS:
 The native backend runs the tiny GLA/SA training step in pure Rust — no
 artifacts directory and no libxla needed; runs are bit-reproducible for a
 fixed --seed. Wire protocol: `GEN <max_tokens> <temp>\\t<prompt>` (or
-`SGEN <session> ...` to continue a named session) in, streamed `TOK
-<piece>` lines + `DONE <n> <ms>` out; HTTP: POST /generate, GET /stats,
-POST /shutdown (see rust/README.md).
+`SGEN <session> ...` to continue a named session, either behind a
+`MODEL <name>` routing prefix) in, streamed `TOK <piece>` lines +
+`DONE <n> <ms>` out; HTTP: POST /generate (optional \"model\" key),
+GET /stats, POST /shutdown (see rust/README.md).
 ";
 
 fn is_native(cfg: &RunConfig) -> bool {
@@ -178,6 +191,21 @@ fn main() -> Result<()> {
     }
     let mut cfg = RunConfig::default();
     cfg.apply_args(&args[1..])?;
+    // --model is subcommand-overloaded (serve: NAME=DIR registry entry;
+    // train: model-config name; client: routing name list) — reject the
+    // wrong spelling early instead of silently ignoring it
+    if !cfg.serve_models.is_empty() && cmd != "serve" {
+        bail!(
+            "--model NAME=DIR registers a serve model; `chon {cmd}` takes \
+             a plain --model value"
+        );
+    }
+    if cmd == "serve" && !cfg.client_models.is_empty() {
+        bail!(
+            "`chon serve` takes --model NAME=DIR (plain --model NAME is \
+             the client-side routing flag)"
+        );
+    }
     // size the persistent worker pool before the first parallel kernel
     chon::util::pool::configure_threads(cfg.threads);
 
@@ -236,34 +264,45 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
-            let Some(dir) = cfg.checkpoint_dir.clone() else {
-                bail!("serve needs --checkpoint DIR (a dir written by `chon train --checkpoint-dir`)");
+            // --checkpoint registers "default"; --model NAME=DIR adds
+            // named models (first registered is the default route)
+            let mut entries: Vec<(String, std::path::PathBuf)> = Vec::new();
+            if let Some(dir) = cfg.checkpoint_dir.clone() {
+                entries.push(("default".to_string(), dir));
+            }
+            entries.extend(cfg.serve_models.iter().cloned());
+            if entries.is_empty() {
+                bail!(
+                    "serve needs --checkpoint DIR and/or --model NAME=DIR \
+                     (dirs written by `chon train --checkpoint-dir`)"
+                );
+            }
+            let reg_opts = RegistryOpts {
+                max_batch: cfg.max_batch,
+                max_wait_us: cfg.max_wait_us,
+                seed: cfg.seed,
+                store_opts: StoreOpts {
+                    max_resident_sessions: cfg.max_resident_sessions,
+                    max_kv_tokens: cfg.max_kv_tokens,
+                    spill_dir: cfg.spill_dir.clone(),
+                },
+                max_resident_models: cfg.max_resident_models,
+                reload_poll_ms: cfg.reload_poll_ms,
             };
-            let engine = Engine::load(&dir)
-                .with_context(|| format!("loading checkpoint {}", dir.display()))?;
-            println!(
-                "loaded {} / {} @ step {} ({} params, vocab {})",
-                engine.meta.model,
-                engine.meta.recipe,
-                engine.meta.step,
-                engine.param_count(),
-                engine.tokenizer.vocab
-            );
+            let mut registry = ModelRegistry::new(reg_opts);
+            for (name, dir) in &entries {
+                registry.register(name, dir)?;
+                println!("registered model {name} -> {}", dir.display());
+            }
             let opts = ServeOpts {
                 host: cfg.host.clone(),
                 port: cfg.port,
                 http_port: cfg.http_port,
-                max_batch: cfg.max_batch,
-                max_wait_us: cfg.max_wait_us,
                 // pool floor of 8: a worker is pinned per live connection,
                 // so 1-2 core boxes must still take concurrent clients
                 workers: cfg.threads.clamp(8, 32),
-                seed: cfg.seed,
-                max_resident_sessions: cfg.max_resident_sessions,
-                max_kv_tokens: cfg.max_kv_tokens,
-                spill_dir: cfg.spill_dir.clone(),
             };
-            let server = Server::bind(engine, &opts)?;
+            let server = Server::bind(registry, &opts)?;
             println!("listening on {}:{}", opts.host, server.port());
             if let Some(hp) = server.http_port() {
                 println!("http front end on {}:{}", opts.host, hp);
@@ -272,22 +311,25 @@ fn main() -> Result<()> {
             println!("final stats: {stats}");
         }
         "client" => {
+            let model = cfg.client_models.first().map(|s| s.as_str());
             if cfg.shutdown {
                 client::send_shutdown(&cfg.host, cfg.port)?;
                 println!("shutdown sent to {}:{}", cfg.host, cfg.port);
             } else if cfg.requests == 0 {
                 let (text, n, ms) = match &cfg.session {
-                    Some(sid) => client::generate_session_once(
+                    Some(sid) => client::generate_session_once_for(
                         &cfg.host,
                         cfg.port,
+                        model,
                         sid,
                         &cfg.prompt,
                         cfg.max_tokens,
                         cfg.temp,
                     )?,
-                    None => client::generate_once(
+                    None => client::generate_once_for(
                         &cfg.host,
                         cfg.port,
+                        model,
                         &cfg.prompt,
                         cfg.max_tokens,
                         cfg.temp,
@@ -310,6 +352,7 @@ fn main() -> Result<()> {
                     max_tokens: cfg.max_tokens,
                     temp: cfg.temp,
                     prompt: cfg.prompt.clone(),
+                    models: cfg.client_models.clone(),
                 };
                 let report = client::run_load(&opts)?;
                 client::print_report(&opts, &report);

@@ -48,6 +48,12 @@ pub struct CheckpointMeta {
     /// Optional on read (0 for pre-v2 checkpoints: legacy behavior,
     /// stream restarts from its head).
     pub data_batches: u64,
+    /// monotonic *publication* stamp: every `Trainer` save into a
+    /// checkpoint parent writes `max(existing generations) + 1` (see
+    /// `next_generation`), so a serving registry can detect a republished
+    /// checkpoint — even at the same step — by comparing generations and
+    /// hot-reload the model. Optional on read (0 for older checkpoints).
+    pub generation: u64,
 }
 
 impl CheckpointMeta {
@@ -55,9 +61,10 @@ impl CheckpointMeta {
         format!(
             "# chon checkpoint metadata (written by Trainer::save_checkpoint_to)\n\
              format_version = {}\nmodel = \"{}\"\nrecipe = \"{}\"\n\
-             seed = {}\nstep = {}\nvocab = {}\ndata_batches = {}\n",
+             seed = {}\nstep = {}\nvocab = {}\ndata_batches = {}\n\
+             generation = {}\n",
             self.format_version, self.model, self.recipe, self.seed, self.step,
-            self.vocab, self.data_batches
+            self.vocab, self.data_batches, self.generation
         )
     }
 
@@ -83,6 +90,12 @@ impl CheckpointMeta {
         if data_batches < 0 {
             bail!("checkpoint meta has negative data_batches {data_batches}");
         }
+        // optional for the same reason: pre-registry checkpoints carry no
+        // publication stamp and read as generation 0
+        let generation = doc.int_or("", "generation", 0);
+        if generation < 0 {
+            bail!("checkpoint meta has negative generation {generation}");
+        }
         Ok(CheckpointMeta {
             format_version: need_int("format_version")? as usize,
             model: need_str("model")?,
@@ -91,6 +104,7 @@ impl CheckpointMeta {
             step: need_int("step")? as usize,
             vocab: need_int("vocab")? as usize,
             data_batches: data_batches as u64,
+            generation: generation as u64,
         })
     }
 }
@@ -112,8 +126,29 @@ pub struct LoadedCheckpoint {
     pub tokenizer: Tokenizer,
 }
 
+/// Atomically replace `dir/<name>` by writing `dir/<name>.tmp` first and
+/// renaming it into place (same-directory rename: atomic on POSIX). A
+/// concurrent reader sees either the complete old file or the complete
+/// new one, never a truncated in-progress write.
+fn publish_file(dir: &Path, name: &str, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
+    let tmp = dir.join(format!("{name}.tmp"));
+    write(&tmp)?;
+    std::fs::rename(&tmp, dir.join(name))
+        .with_context(|| format!("publishing {name} into {}", dir.display()))?;
+    Ok(())
+}
+
 /// Write a complete checkpoint directory (params + optimizer + tokenizer
 /// + metadata). `dir` is created; existing files are overwritten.
+///
+/// Every file lands via tmp-file + atomic rename, and `meta.toml` is
+/// written LAST: its presence — and its `generation` stamp — is what
+/// publishes a checkpoint to `resolve` and to a live serving registry's
+/// hot-reload probe. A brand-new step directory is invisible until it is
+/// complete, and a same-step republish never exposes a truncated tensor
+/// file to a concurrent `Engine::load` — the worst case mid-republish is
+/// new weights briefly read under the old generation stamp, which the
+/// next probe corrects (the weights themselves are never torn).
 pub fn save_dir(
     dir: &Path,
     meta: &CheckpointMeta,
@@ -123,9 +158,10 @@ pub fn save_dir(
 ) -> Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-    std::fs::write(dir.join(META_FILE), meta.to_toml())?;
-    std::fs::write(dir.join(TOKENIZER_FILE), tokenizer.to_text())?;
-    save_checkpoint(&dir.join(PARAMS_FILE), params)?;
+    publish_file(dir, TOKENIZER_FILE, |p| {
+        std::fs::write(p, tokenizer.to_text()).map_err(Into::into)
+    })?;
+    publish_file(dir, PARAMS_FILE, |p| save_checkpoint(p, params))?;
     if let Some((m, v, step)) = optim {
         let mut tensors: Vec<(String, HostTensor)> = Vec::new();
         for (i, t) in m.iter().enumerate() {
@@ -135,8 +171,11 @@ pub fn save_dir(
             tensors.push((format!("v[{i}]"), t.clone()));
         }
         tensors.push(("step".into(), HostTensor::scalar_i32(step as i32)));
-        save_checkpoint(&dir.join(OPTIM_FILE), &tensors)?;
+        publish_file(dir, OPTIM_FILE, |p| save_checkpoint(p, &tensors))?;
     }
+    publish_file(dir, META_FILE, |p| {
+        std::fs::write(p, meta.to_toml()).map_err(Into::into)
+    })?;
     Ok(())
 }
 
@@ -274,6 +313,31 @@ pub fn resolve(path: &Path) -> Result<PathBuf> {
     }
 }
 
+/// The publication stamp the *next* save into `parent` must carry: one
+/// past the highest generation of any checkpoint already under `parent`
+/// (the dir itself or an immediate subdirectory — the same set `resolve`
+/// scans). Scanning the disk instead of keeping an in-process counter
+/// makes the stamp monotonic across separate `chon train` invocations
+/// republishing into the same directory, which is the train→serve
+/// continuous-deployment contract. Unreadable metas count as 0 rather
+/// than failing — a save must not be blocked by one corrupt sibling.
+pub fn next_generation(parent: &Path) -> u64 {
+    let gen_of = |dir: &Path| -> u64 {
+        std::fs::read_to_string(dir.join(META_FILE))
+            .ok()
+            .and_then(|t| CheckpointMeta::from_toml(&t).ok())
+            .map(|m| m.generation)
+            .unwrap_or(0)
+    };
+    let mut best = gen_of(parent);
+    if let Ok(rd) = std::fs::read_dir(parent) {
+        for e in rd.flatten() {
+            best = best.max(gen_of(&e.path()));
+        }
+    }
+    best + 1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +365,7 @@ mod tests {
             step: 20,
             vocab: 256,
             data_batches: 22,
+            generation: 4,
         }
     }
 
@@ -343,6 +408,41 @@ mod tests {
         std::fs::write(dir.join(META_FILE), text).unwrap();
         let back = load_meta(&dir).unwrap();
         assert_eq!(back, meta, "missing data_batches must default to 0");
+    }
+
+    #[test]
+    fn legacy_meta_without_generation_loads_as_zero() {
+        let dir = tmpdir("legacy_gen");
+        let mut meta = demo_meta();
+        meta.generation = 0;
+        let text = meta.to_toml().replace("generation = 0\n", "");
+        assert!(!text.contains("generation"));
+        std::fs::write(dir.join(META_FILE), text).unwrap();
+        let back = load_meta(&dir).unwrap();
+        assert_eq!(back, meta, "missing generation must default to 0");
+        let neg = meta.to_toml().replace("generation = 0", "generation = -2");
+        std::fs::write(dir.join(META_FILE), neg).unwrap();
+        assert!(load_meta(&dir).is_err(), "negative generation must fail");
+    }
+
+    #[test]
+    fn next_generation_scans_parent_and_children() {
+        let parent = tmpdir("nextgen");
+        assert_eq!(next_generation(&parent), 1, "empty dir starts at 1");
+        let params = demo_params();
+        for (step, generation) in [(10usize, 1u64), (20, 5), (30, 3)] {
+            let mut meta = demo_meta();
+            meta.step = step;
+            meta.generation = generation;
+            let d = parent.join(format!("ck_{step:05}"));
+            save_dir(&d, &meta, &params, None, &Tokenizer::byte_level()).unwrap();
+        }
+        assert_eq!(next_generation(&parent), 6, "max child generation + 1");
+        // a checkpoint directly at the parent counts too
+        let mut meta = demo_meta();
+        meta.generation = 9;
+        std::fs::write(parent.join(META_FILE), meta.to_toml()).unwrap();
+        assert_eq!(next_generation(&parent), 10);
     }
 
     #[test]

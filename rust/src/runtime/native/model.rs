@@ -24,7 +24,7 @@ use crate::hcp;
 use crate::quant::{fp8_fake_quant, nvfp4, rht};
 use crate::runtime::native::recipe::{op_quant, NativeRecipe, OpQuant, QuantKind};
 use crate::runtime::tensor::HostTensor;
-use crate::util::ndarray::{matmul, matmul_into, Mat};
+use crate::util::ndarray::{matmul, matmul_into, matmul_packed, Mat, PackedMat};
 use crate::util::prng::Rng;
 
 /// Attention family.
@@ -301,6 +301,12 @@ fn linear(x: &Mat, w: &Mat, oq: &OpQuant) -> LinOut {
 pub(crate) struct PreparedWeight {
     /// the operand fed to the GEMM (identity copy on the BF16 path)
     pub wu: Mat,
+    /// `wu` pre-packed into the GEMM's B-panel layout — the packed-weight
+    /// cache. Frozen serve weights set this once at model load so no
+    /// decode/prefill GEMM ever re-packs them; `matmul_packed` is bitwise
+    /// identical to `matmul`, so the cache is invisible in outputs. None
+    /// on the one-shot paths that prepare a weight per call.
+    pub wu_panels: Option<PackedMat>,
     /// W - Wq, present only when HCP compensation is on
     pub dw: Option<Mat>,
     /// mean |dW_j,:| per channel (the row-independent score term)
@@ -311,10 +317,11 @@ pub(crate) struct PreparedWeight {
 pub(crate) fn prepare_weight(w: &Mat, oq: &OpQuant) -> PreparedWeight {
     match oq.mode {
         QuantKind::Bf16 => {
-            PreparedWeight { wu: w.clone(), dw: None, wscore: None }
+            PreparedWeight { wu: w.clone(), wu_panels: None, dw: None, wscore: None }
         }
         QuantKind::Fp8 => PreparedWeight {
             wu: Mat::from_vec(w.rows, w.cols, fp8_fake_quant(&w.data)),
+            wu_panels: None,
             dw: None,
             wscore: None,
         },
@@ -332,11 +339,38 @@ pub(crate) fn prepare_weight(w: &Mat, oq: &OpQuant) -> PreparedWeight {
                             / dw.cols as f64
                     })
                     .collect();
-                PreparedWeight { wu, dw: Some(dw), wscore: Some(wscore) }
+                PreparedWeight { wu, wu_panels: None, dw: Some(dw), wscore: Some(wscore) }
             } else {
-                PreparedWeight { wu, dw: None, wscore: None }
+                PreparedWeight { wu, wu_panels: None, dw: None, wscore: None }
             }
         }
+    }
+}
+
+/// `prepare_weight` plus the packed-weight cache: the quantized operand
+/// is additionally packed into B panels once, so every subsequent GEMM
+/// over this weight skips the per-call pack. Used by the serve engine at
+/// model-load time (weights are frozen there). Once the panels exist the
+/// row-major `wu` has exactly one remaining reader — the HCP
+/// compensation loop (which needs `dw` alongside it) — so on non-HCP ops
+/// the duplicate is freed instead of doubling resident weight memory for
+/// the engine's lifetime.
+pub(crate) fn prepare_weight_cached(w: &Mat, oq: &OpQuant) -> PreparedWeight {
+    let mut pw = prepare_weight(w, oq);
+    pw.wu_panels = Some(PackedMat::pack(&pw.wu));
+    if pw.dw.is_none() {
+        pw.wu = Mat::from_vec(0, 0, Vec::new());
+    }
+    pw
+}
+
+/// The GEMM over a prepared weight: through the packed-panel cache when
+/// present, else packing per call as before. Both are bitwise the same
+/// product.
+fn gemm_prepared(x: &Mat, pw: &PreparedWeight) -> Mat {
+    match &pw.wu_panels {
+        Some(panels) => matmul_packed(x, panels),
+        None => matmul(x, &pw.wu),
     }
 }
 
@@ -350,14 +384,14 @@ pub(crate) fn infer_linear_prepared(x: &Mat, pw: &PreparedWeight, oq: &OpQuant) 
         Mat::from_vec(x.rows, x.cols, data)
     };
     match oq.mode {
-        QuantKind::Bf16 => matmul(x, &pw.wu),
+        QuantKind::Bf16 => gemm_prepared(x, pw),
         QuantKind::Fp8 => {
             let xu = per_row(&|r| fp8_fake_quant(r));
-            matmul(&xu, &pw.wu)
+            gemm_prepared(&xu, pw)
         }
         QuantKind::Nvfp4 => {
             let xu = per_row(&|r| nvfp4::fake_quant(r, nvfp4::Rounding::Rtn, None));
-            let mut y = matmul(&xu, &pw.wu);
+            let mut y = gemm_prepared(&xu, pw);
             if let (Some(dw), Some(wscore)) = (&pw.dw, &pw.wscore) {
                 let k = ((oq.hcp_frac * x.cols as f64).ceil() as usize).max(1);
                 for i in 0..x.rows {
@@ -1176,6 +1210,42 @@ mod tests {
             .map(|_| (rng.below(24) as i32) + 97) // ascii letters
             .collect();
         (toks[..n].to_vec(), toks[1..].to_vec())
+    }
+
+    /// The packed-weight cache (`prepare_weight_cached`) must be bitwise
+    /// invisible: for every quant mode and activation batch shape on both
+    /// sides of the GEMM's small-m dispatch edge, the packed and unpacked
+    /// prepared forms produce identical output bits.
+    #[test]
+    fn cached_prepared_weight_is_bit_identical_to_uncached() {
+        for rec_name in ["bf16", "fp8", "nvfp4", "chon"] {
+            let rec = recipe(rec_name).unwrap();
+            for op in ["attn.q", "mlp.up", "mlp.down"] {
+                let oq = op_quant(&rec, Arch::Gla, 0, 2, op);
+                let (k, n) = if op == "mlp.down" { (64, 32) } else { (32, 64) };
+                let mut rng = Rng::new(17);
+                let w = Mat::from_fn(k, n, |_, _| rng.normal() * 0.3);
+                let plain = prepare_weight(&w, &oq);
+                let cached = prepare_weight_cached(&w, &oq);
+                assert!(cached.wu_panels.is_some());
+                if cached.dw.is_some() {
+                    // HCP compensation still reads wu rows — kept intact
+                    assert_eq!(plain.wu.data, cached.wu.data);
+                } else {
+                    // no remaining reader: the duplicate must be freed
+                    assert!(cached.wu.data.is_empty());
+                }
+                for rows in [1usize, 3, 8, 13] {
+                    let x = Mat::from_fn(rows, k, |_, _| rng.normal());
+                    let a = infer_linear_prepared(&x, &plain, &oq);
+                    let b = infer_linear_prepared(&x, &cached, &oq);
+                    assert_eq!(
+                        a.data, b.data,
+                        "{rec_name}/{op} rows={rows}: packed cache changed bits"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -43,6 +43,14 @@ pub struct GenRequest {
     pub session: Option<String>,
     /// streamed token pieces + terminal event go back through here
     pub reply: Sender<TokenEvent>,
+    /// set by the submitting connection when the client gave up (reply
+    /// timeout or a failed write back to the socket). A queued request
+    /// whose flag is set is *dropped* before admission instead of
+    /// executed — so an abandoned request can no longer advance a named
+    /// session behind its client's back (counted in `ServeStats::
+    /// cancelled`). std's `Sender` cannot probe for a hung-up `Receiver`
+    /// without sending, hence the explicit flag.
+    pub cancel: Arc<AtomicBool>,
 }
 
 /// Events fanned back to the submitting connection.
@@ -87,6 +95,9 @@ pub struct ServeStats {
     pub spilled_sessions: AtomicU64,
     /// gauge: KV positions held by resident idle sessions
     pub resident_kv_tokens: AtomicU64,
+    /// queued requests dropped before admission because the client had
+    /// already given up (see `GenRequest::cancel`)
+    pub cancelled: AtomicU64,
 }
 
 impl ServeStats {
@@ -106,7 +117,7 @@ impl ServeStats {
              mean_batch={:.3} max_batch={} prefill_steps={} \
              prefill_batched_steps={} prefill_tokens={} evictions={} \
              reloads={} resident_sessions={} spilled_sessions={} \
-             resident_kv_tokens={}",
+             resident_kv_tokens={} cancelled={}",
             g(&self.requests),
             g(&self.tokens),
             g(&self.decode_steps),
@@ -121,6 +132,7 @@ impl ServeStats {
             g(&self.resident_sessions),
             g(&self.spilled_sessions),
             g(&self.resident_kv_tokens),
+            g(&self.cancelled),
         )
     }
 
@@ -142,7 +154,39 @@ impl ServeStats {
             ("resident_sessions".into(), n(&self.resident_sessions)),
             ("spilled_sessions".into(), n(&self.spilled_sessions)),
             ("resident_kv_tokens".into(), n(&self.resident_kv_tokens)),
+            ("cancelled".into(), n(&self.cancelled)),
         ])
+    }
+
+    /// Sum a set of per-model counters into one aggregate view (gauges
+    /// sum; `max_batch` takes the max; `mean_batch` falls out of the
+    /// summed numerator/denominator). The registry uses this to keep the
+    /// one-line `STATS` payload and the top-level `/stats` fields stable
+    /// across the single-model → multi-model transition.
+    pub fn merged<'a>(all: impl IntoIterator<Item = &'a ServeStats>) -> ServeStats {
+        let m = ServeStats::default();
+        for s in all {
+            let add = |dst: &AtomicU64, src: &AtomicU64| {
+                dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+            };
+            add(&m.requests, &s.requests);
+            add(&m.tokens, &s.tokens);
+            add(&m.decode_steps, &s.decode_steps);
+            add(&m.batched_steps, &s.batched_steps);
+            add(&m.batch_sum, &s.batch_sum);
+            m.max_batch
+                .fetch_max(s.max_batch.load(Ordering::Relaxed), Ordering::Relaxed);
+            add(&m.prefill_steps, &s.prefill_steps);
+            add(&m.prefill_batched_steps, &s.prefill_batched_steps);
+            add(&m.prefill_tokens, &s.prefill_tokens);
+            add(&m.evictions, &s.evictions);
+            add(&m.reloads, &s.reloads);
+            add(&m.resident_sessions, &s.resident_sessions);
+            add(&m.spilled_sessions, &s.spilled_sessions);
+            add(&m.resident_kv_tokens, &s.resident_kv_tokens);
+            add(&m.cancelled, &s.cancelled);
+        }
+        m
     }
 }
 
@@ -168,7 +212,7 @@ pub struct RequestBatcher {
     tx: Sender<GenRequest>,
     pub stats: Arc<ServeStats>,
     shutdown: Arc<AtomicBool>,
-    handle: Option<JoinHandle<()>>,
+    handle: Option<JoinHandle<(SessionStore, Vec<GenRequest>)>>,
 }
 
 impl RequestBatcher {
@@ -185,15 +229,36 @@ impl RequestBatcher {
         store_opts: StoreOpts,
     ) -> Result<RequestBatcher> {
         let store = SessionStore::new(store_opts)?;
+        Ok(Self::spawn_with(
+            engine,
+            max_batch,
+            max_wait,
+            seed,
+            store,
+            Arc::new(ServeStats::default()),
+        ))
+    }
+
+    /// Spawn with a caller-owned session store and counter set — the
+    /// registry's engine-swap path: the store (and its spilled sessions)
+    /// and the cumulative stats both survive a model unload/hot-reload,
+    /// only the engine thread is replaced.
+    pub fn spawn_with(
+        engine: Engine,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+        store: SessionStore,
+        stats: Arc<ServeStats>,
+    ) -> RequestBatcher {
         let (tx, rx) = channel::<GenRequest>();
-        let stats = Arc::new(ServeStats::default());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (stats2, shutdown2) = (stats.clone(), shutdown.clone());
         let cfg = LoopCfg { max_batch: max_batch.max(1), max_wait, seed };
         let handle = std::thread::spawn(move || {
-            engine_loop(engine, rx, stats2, shutdown2, cfg, store);
+            engine_loop(engine, rx, stats2, shutdown2, cfg, store)
         });
-        Ok(RequestBatcher { tx, stats, shutdown, handle: Some(handle) })
+        RequestBatcher { tx, stats, shutdown, handle: Some(handle) }
     }
 
     /// A cloneable submission handle for connection threads.
@@ -201,14 +266,20 @@ impl RequestBatcher {
         self.tx.clone()
     }
 
-    /// Signal shutdown and wait for in-flight generations to finish.
-    pub fn shutdown(mut self) {
+    /// Signal shutdown, wait for in-flight generations to finish, and
+    /// hand back the session store plus any requests that were still
+    /// queued (never admitted). The caller decides their fate: a final
+    /// server drain rejects them with an error; a registry hot-reload
+    /// re-submits them to the replacement engine (they had not started,
+    /// so "new admissions get the new weights" applies to them too).
+    pub fn shutdown(mut self) -> (Option<SessionStore>, Vec<GenRequest>) {
         self.shutdown.store(true, Ordering::SeqCst);
         // drop our sender so the loop's queue can disconnect
         let (dead_tx, _) = channel();
         self.tx = dead_tx;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok((store, leftovers))) => (Some(store), leftovers),
+            _ => (None, Vec::new()),
         }
     }
 }
@@ -220,19 +291,19 @@ fn engine_loop(
     shutdown: Arc<AtomicBool>,
     cfg: LoopCfg,
     mut store: SessionStore,
-) {
+) -> (SessionStore, Vec<GenRequest>) {
     let mut active: Vec<Active> = Vec::new();
+    let mut leftovers: Vec<GenRequest> = Vec::new();
     let mut next_id: u64 = 0;
 
     loop {
         // ---- collect a group of newly arrived requests ----
         let mut group: Vec<GenRequest> = Vec::new();
         if shutdown.load(Ordering::SeqCst) {
-            // drain the queue: reject newcomers, finish what is active
+            // drain: stop admitting, finish what is active, return the
+            // still-queued requests to whoever asked us to stop
             while let Ok(req) = rx.try_recv() {
-                let _ = req
-                    .reply
-                    .send(TokenEvent::Error("server shutting down".into()));
+                leftovers.push(req);
             }
             if active.is_empty() {
                 break;
@@ -324,6 +395,7 @@ fn engine_loop(
             sync_gauges(&stats, &store);
         }
     }
+    (store, leftovers)
 }
 
 /// Validate, check out session state and batch-prefill one admitted
@@ -341,6 +413,13 @@ fn admit_group(
     let mut prompts: Vec<Vec<u32>> = Vec::new();
     let mut sessions: Vec<Session> = Vec::new();
     for req in group {
+        if req.cancel.load(Ordering::Relaxed) {
+            // the client already gave up (timeout / dropped connection):
+            // executing would burn a decode slot and — worse — advance a
+            // named session nobody is reading. Drop before admission.
+            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
         stats.requests.fetch_add(1, Ordering::Relaxed);
         let toks = engine.tokenizer.encode(&req.prompt);
         if toks.is_empty() {
@@ -499,6 +578,7 @@ mod tests {
                 temp: 0.0,
                 session: session.map(|s| s.to_string()),
                 reply: tx,
+                cancel: Arc::new(AtomicBool::new(false)),
             },
             rx,
         )
@@ -535,6 +615,54 @@ mod tests {
             TokenEvent::Error(e) => assert!(e.contains("empty"), "{e}"),
             other => panic!("expected error, got {other:?}"),
         }
+        b.shutdown();
+    }
+
+    /// A queued request whose client has given up (cancel flag set, reply
+    /// receiver dropped) is dropped *before* admission: it never advances
+    /// the named session it targeted, so the next real request sees the
+    /// session exactly as the abandoning client left it.
+    #[test]
+    fn cancelled_queued_request_never_advances_a_session() {
+        let eng = test_engine();
+        // reference: the session's first (and only) turn, computed direct
+        let prompt = "hello wor";
+        let n = 6usize;
+        let reference = {
+            let mut sess = eng.new_session();
+            let toks = eng.tokenizer.encode(prompt);
+            let logits = eng.prefill(&mut sess, &toks);
+            let mut rng = Rng::new(0);
+            let mut last = eng.sample(&logits, 0.0, &mut rng);
+            let mut out = eng.tokenizer.decode_bytes(&[last]);
+            for _ in 1..n {
+                let l = eng.decode_step(&mut [&mut sess], &[last]);
+                last = eng.sample(l.row(0), 0.0, &mut rng);
+                out.extend(eng.tokenizer.decode_bytes(&[last]));
+            }
+            out
+        };
+
+        let b = spawn_batcher(1);
+        // keep the engine busy so the next two submissions queue up
+        let (busy, busy_rx) = gen_req("padding text ", 32, None);
+        b.submitter().send(busy).unwrap();
+        // an abandoned request against session "conv": flag set, rx gone
+        let (dead, dead_rx) = gen_req("poison text ", 8, Some("conv"));
+        dead.cancel.store(true, Ordering::Relaxed);
+        drop(dead_rx);
+        b.submitter().send(dead).unwrap();
+        // the real first turn of "conv", queued behind the dead one
+        let (real, real_rx) = gen_req(prompt, n, Some("conv"));
+        b.submitter().send(real).unwrap();
+
+        let (out, _) = collect(&real_rx);
+        assert_eq!(
+            out, reference,
+            "cancelled request advanced the session before being dropped"
+        );
+        collect(&busy_rx);
+        assert_eq!(b.stats.cancelled.load(Ordering::Relaxed), 1);
         b.shutdown();
     }
 

@@ -4,7 +4,11 @@
 //! spreads `requests` across `concurrency` threads (one connection per
 //! thread, requests pipelined sequentially on it) and reports throughput
 //! plus latency percentiles, then the server's own batching stats.
+//! `--model NAME` routes to a registry model; load mode accepts several
+//! names (`--model a,b`) and sprays requests across them round-robin,
+//! reporting latency percentiles per model on top of the aggregate.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -23,6 +27,8 @@ pub struct ClientOpts {
     pub max_tokens: usize,
     pub temp: f32,
     pub prompt: String,
+    /// registry model names to spray across (empty = the server default)
+    pub models: Vec<String>,
 }
 
 impl Default for ClientOpts {
@@ -35,6 +41,7 @@ impl Default for ClientOpts {
             max_tokens: 32,
             temp: 0.0,
             prompt: "the ".into(),
+            models: Vec::new(),
         }
     }
 }
@@ -54,7 +61,18 @@ pub fn generate_on(
     max_tokens: usize,
     temp: f32,
 ) -> Result<(String, usize, f64)> {
-    let line = protocol::format_gen(max_tokens, temp, prompt);
+    generate_on_for(stream, None, prompt, max_tokens, temp)
+}
+
+/// `generate_on` routed to a registry model (None = server default).
+pub fn generate_on_for(
+    stream: &mut TcpStream,
+    model: Option<&str>,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let line = protocol::format_gen_for(model, max_tokens, temp, prompt);
     generate_line_on(stream, &line)
 }
 
@@ -68,7 +86,19 @@ pub fn generate_session_on(
     max_tokens: usize,
     temp: f32,
 ) -> Result<(String, usize, f64)> {
-    let line = protocol::format_sgen(session, max_tokens, temp, prompt);
+    generate_session_on_for(stream, None, session, prompt, max_tokens, temp)
+}
+
+/// `generate_session_on` routed to a registry model.
+pub fn generate_session_on_for(
+    stream: &mut TcpStream,
+    model: Option<&str>,
+    session: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
+    let line = protocol::format_sgen_for(model, session, max_tokens, temp, prompt);
     generate_line_on(stream, &line)
 }
 
@@ -125,8 +155,20 @@ pub fn generate_once(
     max_tokens: usize,
     temp: f32,
 ) -> Result<(String, usize, f64)> {
+    generate_once_for(host, port, None, prompt, max_tokens, temp)
+}
+
+/// One-shot generation routed to a registry model.
+pub fn generate_once_for(
+    host: &str,
+    port: u16,
+    model: Option<&str>,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
     let mut s = connect(host, port)?;
-    generate_on(&mut s, prompt, max_tokens, temp)
+    generate_on_for(&mut s, model, prompt, max_tokens, temp)
 }
 
 /// One-shot named-session generation over a fresh connection.
@@ -138,8 +180,21 @@ pub fn generate_session_once(
     max_tokens: usize,
     temp: f32,
 ) -> Result<(String, usize, f64)> {
+    generate_session_once_for(host, port, None, session, prompt, max_tokens, temp)
+}
+
+/// One-shot named-session generation routed to a registry model.
+pub fn generate_session_once_for(
+    host: &str,
+    port: u16,
+    model: Option<&str>,
+    session: &str,
+    prompt: &str,
+    max_tokens: usize,
+    temp: f32,
+) -> Result<(String, usize, f64)> {
     let mut s = connect(host, port)?;
-    generate_session_on(&mut s, session, prompt, max_tokens, temp)
+    generate_session_on_for(&mut s, model, session, prompt, max_tokens, temp)
 }
 
 /// Fetch the server's STATS snapshot line.
@@ -171,20 +226,28 @@ pub fn send_shutdown(host: &str, port: u16) -> Result<()> {
 pub struct LoadReport {
     /// per-request latency in ms, sorted ascending
     pub latencies_ms: Vec<f64>,
+    /// per-model latency in ms, sorted ascending (only populated when
+    /// the run sprayed across explicit `--model` names)
+    pub by_model: BTreeMap<String, Vec<f64>>,
     pub tokens: usize,
     pub failures: usize,
     pub empty_responses: usize,
     pub wall_s: f64,
 }
 
+/// p-th percentile of an ascending-sorted latency list.
+fn percentile_of(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+    sorted[idx]
+}
+
 impl LoadReport {
     pub fn percentile(&self, q: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return f64::NAN;
-        }
-        let n = self.latencies_ms.len();
-        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
-        self.latencies_ms[idx]
+        percentile_of(&self.latencies_ms, q)
     }
 
     pub fn requests_ok(&self) -> usize {
@@ -192,29 +255,45 @@ impl LoadReport {
     }
 }
 
-/// Fire `opts.requests` GENs from `opts.concurrency` threads.
+/// Fire `opts.requests` GENs from `opts.concurrency` threads. With
+/// several `opts.models`, requests are sprayed across them round-robin
+/// by global request index, so every model sees an even share even when
+/// the thread count does not divide the request count.
 pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
     if opts.requests == 0 {
         bail!("load mode needs --requests > 0");
     }
     let c = opts.concurrency.clamp(1, opts.requests);
     let t0 = Instant::now();
-    let mut results: Vec<Result<Vec<(usize, f64)>>> = Vec::new();
+    // (tokens, latency_ms, model index or usize::MAX for default)
+    let mut results: Vec<Result<Vec<(usize, f64, usize)>>> = Vec::new();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for ti in 0..c {
             // spread the remainder over the first threads
             let share = opts.requests / c + usize::from(ti < opts.requests % c);
+            let base = ti * (opts.requests / c) + ti.min(opts.requests % c);
             let opts = opts.clone();
-            handles.push(s.spawn(move || -> Result<Vec<(usize, f64)>> {
+            handles.push(s.spawn(move || -> Result<Vec<(usize, f64, usize)>> {
                 let mut stream = connect(&opts.host, opts.port)?;
                 let mut out = Vec::with_capacity(share);
                 for ri in 0..share {
+                    let mi = if opts.models.is_empty() {
+                        usize::MAX
+                    } else {
+                        (base + ri) % opts.models.len()
+                    };
+                    let model = opts.models.get(mi).map(|m| m.as_str());
                     // vary prompts a little so batches are not degenerate
                     let prompt = format!("{}{ti} {ri} ", opts.prompt);
-                    let (text, n, ms) =
-                        generate_on(&mut stream, &prompt, opts.max_tokens, opts.temp)?;
-                    out.push((if text.is_empty() { 0 } else { n.max(1) }, ms));
+                    let (text, n, ms) = generate_on_for(
+                        &mut stream,
+                        model,
+                        &prompt,
+                        opts.max_tokens,
+                        opts.temp,
+                    )?;
+                    out.push((if text.is_empty() { 0 } else { n.max(1) }, ms, mi));
                 }
                 Ok(out)
             }));
@@ -228,12 +307,19 @@ pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
     for r in results {
         match r {
             Ok(list) => {
-                for (n, ms) in list {
+                for (n, ms, mi) in list {
                     if n == 0 {
                         report.empty_responses += 1;
                     } else {
                         report.tokens += n;
                         report.latencies_ms.push(ms);
+                        if let Some(model) = opts.models.get(mi) {
+                            report
+                                .by_model
+                                .entry(model.clone())
+                                .or_default()
+                                .push(ms);
+                        }
                     }
                 }
             }
@@ -244,6 +330,9 @@ pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
         }
     }
     report.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for lats in report.by_model.values_mut() {
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
     Ok(report)
 }
 
@@ -269,6 +358,15 @@ pub fn print_report(opts: &ClientOpts, report: &LoadReport) {
             report.percentile(0.99),
             report.latencies_ms.last().copied().unwrap_or(f64::NAN)
         );
+        for (model, lats) in &report.by_model {
+            println!(
+                "  model {model:<16} {} ok  p50 {:.1}  p90 {:.1}  p99 {:.1}",
+                lats.len(),
+                percentile_of(lats, 0.50),
+                percentile_of(lats, 0.90),
+                percentile_of(lats, 0.99),
+            );
+        }
     }
     match fetch_stats(&opts.host, opts.port) {
         Ok(stats) => println!("server stats: {stats}"),
@@ -292,5 +390,26 @@ mod tests {
         assert_eq!(r.percentile(1.0), 10.0);
         let empty = LoadReport::default();
         assert!(empty.percentile(0.5).is_nan());
+    }
+
+    /// The per-thread (base + ri) % models indexing partitions the global
+    /// request range, so every model gets an even share (±1) regardless
+    /// of how requests divide over threads.
+    #[test]
+    fn model_spray_is_even() {
+        for (requests, c, m) in [(32usize, 4usize, 2usize), (10, 3, 3), (7, 4, 2), (9, 8, 4)] {
+            let mut counts = vec![0usize; m];
+            for ti in 0..c {
+                let share = requests / c + usize::from(ti < requests % c);
+                let base = ti * (requests / c) + ti.min(requests % c);
+                for ri in 0..share {
+                    counts[(base + ri) % m] += 1;
+                }
+            }
+            assert_eq!(counts.iter().sum::<usize>(), requests);
+            let max = counts.iter().max().unwrap();
+            let min = counts.iter().min().unwrap();
+            assert!(max - min <= 1, "{requests}/{c}/{m}: {counts:?}");
+        }
     }
 }

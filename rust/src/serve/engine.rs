@@ -27,7 +27,7 @@ use crate::data::tokenizer::Tokenizer;
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::runtime::native::model::{
     self, final_norm_idx, infer_linear_prepared, layer_slots, lm_head_idx,
-    model_cfg, pidx, prepare_weight, rmsnorm, sigmoid, Arch, ModelCfg,
+    model_cfg, pidx, prepare_weight_cached, rmsnorm, sigmoid, Arch, ModelCfg,
     PreparedWeight,
 };
 use crate::runtime::native::recipe::{op_quant, recipe, NativeRecipe, BF16_OP};
@@ -103,7 +103,11 @@ fn slot_op(slot: &str) -> Option<&'static str> {
     })
 }
 
-/// Pre-quantize every linear weight per the recipe's forward config.
+/// Pre-quantize every linear weight per the recipe's forward config, and
+/// pack each quantized operand into GEMM B panels once (the packed-weight
+/// cache): serve weights are frozen, so no decode or prefill GEMM ever
+/// re-packs them. `matmul_packed` is bitwise `matmul`, so this is purely
+/// a load-time-for-runtime trade.
 fn prepare_all(
     cfg: &ModelCfg,
     rec: &NativeRecipe,
@@ -115,12 +119,12 @@ fn prepare_all(
             if let Some(op) = slot_op(slot) {
                 let idx = pidx(cfg, l, slot);
                 let oq = op_quant(rec, cfg.arch, l, cfg.layers, op);
-                out[idx] = Some(prepare_weight(&params[idx], &oq));
+                out[idx] = Some(prepare_weight_cached(&params[idx], &oq));
             }
         }
     }
     let hi = lm_head_idx(cfg);
-    out[hi] = Some(prepare_weight(&params[hi], &BF16_OP));
+    out[hi] = Some(prepare_weight_cached(&params[hi], &BF16_OP));
     out
 }
 
@@ -201,6 +205,7 @@ impl Engine {
             step: 0,
             vocab: tokenizer.vocab,
             data_batches: 0,
+            generation: 0,
         };
         let params = model::params_to_mats(params);
         let n_params = params.iter().map(|m| m.data.len()).sum();

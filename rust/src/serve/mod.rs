@@ -1,21 +1,30 @@
 //! The serving layer: checkpoint-backed inference with request batching
-//! — the first production-shaped workload on top of the native backend.
+//! and a multi-model registry — the production-shaped workload on top of
+//! the native backend.
 //!
 //! * `engine` — decode-only forward path over a loaded checkpoint:
 //!   per-session recurrent state (GLA) / paged KV cache (SA), greedy +
 //!   temperature sampling, quant recipe applied batch-invariantly,
-//!   cross-session batched prefill, bit-exact session serialization.
+//!   cross-session batched prefill, bit-exact session serialization,
+//!   weights quantized once and packed once into GEMM B panels at load
+//!   (the packed-weight cache).
 //! * `pages` — fixed-size KV pages + the LRU named-session cache with
 //!   spill-to-disk eviction (`--max-resident-sessions`,
 //!   `--max-kv-tokens`).
 //! * `batcher` — coalesces concurrent requests into prefill + decode
-//!   batches (max-batch-size + max-wait knobs) and fans tokens back out.
-//! * `protocol` — the line-delimited TCP wire format (GEN/SGEN/...).
+//!   batches (max-batch-size + max-wait knobs) and fans tokens back out;
+//!   drops queued requests whose client already gave up.
+//! * `registry` — many named checkpoints behind one endpoint: lazy load,
+//!   LRU unload under `--max-resident-models`, hot reload on a
+//!   republished checkpoint's `generation` bump, per-model stats
+//!   (`chon serve --model NAME=DIR ...`).
+//! * `protocol` — the line-delimited TCP wire format
+//!   (GEN/SGEN/`MODEL <name>` routing/...).
 //! * `http` — the hand-rolled HTTP/1.1 layer (`POST /generate` chunked
-//!   streaming, `GET /stats`, `POST /shutdown`).
+//!   streaming with a `"model"` key, `GET /stats`, `POST /shutdown`).
 //! * `server` — `std::net` listeners + worker-thread pool + graceful
 //!   shutdown (`chon serve`).
-//! * `client` — protocol client / load generator with latency
+//! * `client` — protocol client / load generator with per-model latency
 //!   percentiles (`chon client`).
 
 pub mod batcher;
@@ -24,10 +33,12 @@ pub mod engine;
 pub mod http;
 pub mod pages;
 pub mod protocol;
+pub mod registry;
 pub mod server;
 
 pub use batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
 pub use client::{ClientOpts, LoadReport};
 pub use engine::{Engine, Session};
 pub use pages::{KvPages, SessionStore, StoreOpts, PAGE_TOKENS};
+pub use registry::{ModelRegistry, RegistryOpts, SubmitError};
 pub use server::{ServeOpts, Server};

@@ -5,6 +5,8 @@
 //! ```text
 //! GEN <max_tokens> <temp>\t<escaped prompt>   generate; streams tokens back
 //! SGEN <sid> <max_tokens> <temp>\t<prompt>    generate in named session <sid>
+//! MODEL <name> GEN|SGEN ...                   route to a registered model
+//!                                             (absent = the default model)
 //! STATS                                       one-line server statistics
 //! PING                                        liveness probe
 //! SHUTDOWN                                    drain + stop the server
@@ -50,6 +52,13 @@ pub fn valid_session_id(id: &str) -> bool {
     }
     id.bytes()
         .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// Registry model names share the session-id rule: they appear as spill
+/// subdirectory names and in single-token protocol fields, so the same
+/// path-safe single-word charset applies.
+pub fn valid_model_name(name: &str) -> bool {
+    valid_session_id(name)
 }
 
 /// The GEN/SGEN request caps, shared with the HTTP front end.
@@ -158,6 +167,9 @@ pub enum Request {
         prompt: String,
         /// named-session id (SGEN); None for one-shot GEN requests
         session: Option<String>,
+        /// registry model name (`MODEL <name>` prefix); None routes to
+        /// the server's default model
+        model: Option<String>,
     },
     Stats,
     Ping,
@@ -173,6 +185,23 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "SHUTDOWN" => return Ok(Request::Shutdown),
         _ => {}
     }
+    let (model, line) = if let Some(r) = line.strip_prefix("MODEL ") {
+        let (name, rest) = r
+            .split_once(' ')
+            .ok_or("MODEL needs <name> followed by a GEN/SGEN request")?;
+        if !valid_model_name(name) {
+            return Err(format!(
+                "bad model name {name:?} (want 1..={MAX_SESSION_ID_LEN} of \
+                 [A-Za-z0-9._-], not starting with '.' or '-')"
+            ));
+        }
+        if !rest.starts_with("GEN ") && !rest.starts_with("SGEN ") {
+            return Err("MODEL prefixes a GEN/SGEN request".into());
+        }
+        (Some(name.to_string()), rest)
+    } else {
+        (None, line)
+    };
     let (session, rest) = if let Some(r) = line.strip_prefix("SGEN ") {
         let (sid, r2) = r
             .split_once(' ')
@@ -182,7 +211,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         (None, r)
     } else {
         return Err(format!(
-            "unknown command {:?} (expected GEN/SGEN/STATS/PING/SHUTDOWN)",
+            "unknown command {:?} (expected GEN/SGEN/STATS/PING/SHUTDOWN, \
+             optionally behind MODEL <name>)",
             line.split_whitespace().next().unwrap_or("")
         ));
     };
@@ -205,12 +235,34 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     }
     let prompt = unescape(prompt_esc)?;
     validate_gen(max_tokens, temp, &prompt, session.as_deref())?;
-    Ok(Request::Gen { max_tokens, temp, prompt, session })
+    Ok(Request::Gen { max_tokens, temp, prompt, session, model })
+}
+
+/// The `MODEL <name> ` routing prefix (empty for the default model).
+fn model_prefix(model: Option<&str>) -> String {
+    match model {
+        Some(m) => format!("MODEL {m} "),
+        None => String::new(),
+    }
 }
 
 /// Render a GEN request line (client side).
 pub fn format_gen(max_tokens: usize, temp: f32, prompt: &str) -> String {
-    format!("GEN {max_tokens} {temp}\t{}\n", escape(prompt))
+    format_gen_for(None, max_tokens, temp, prompt)
+}
+
+/// Render a GEN request line routed to a registry model.
+pub fn format_gen_for(
+    model: Option<&str>,
+    max_tokens: usize,
+    temp: f32,
+    prompt: &str,
+) -> String {
+    format!(
+        "{}GEN {max_tokens} {temp}\t{}\n",
+        model_prefix(model),
+        escape(prompt)
+    )
 }
 
 /// Render an SGEN (named-session) request line (client side).
@@ -220,7 +272,22 @@ pub fn format_sgen(
     temp: f32,
     prompt: &str,
 ) -> String {
-    format!("SGEN {session} {max_tokens} {temp}\t{}\n", escape(prompt))
+    format_sgen_for(None, session, max_tokens, temp, prompt)
+}
+
+/// Render an SGEN request line routed to a registry model.
+pub fn format_sgen_for(
+    model: Option<&str>,
+    session: &str,
+    max_tokens: usize,
+    temp: f32,
+    prompt: &str,
+) -> String {
+    format!(
+        "{}SGEN {session} {max_tokens} {temp}\t{}\n",
+        model_prefix(model),
+        escape(prompt)
+    )
 }
 
 #[cfg(test)]
@@ -273,6 +340,7 @@ mod tests {
                 temp: 0.5,
                 prompt: "hello\tworld\nüber".into(),
                 session: None,
+                model: None,
             }
         );
     }
@@ -288,8 +356,52 @@ mod tests {
                 temp: 0.0,
                 prompt: "hi there".into(),
                 session: Some("conv-7.a".into()),
+                model: None,
             }
         );
+    }
+
+    #[test]
+    fn model_prefix_roundtrips_and_validates() {
+        let line = format_gen_for(Some("alpha"), 4, 0.0, "hi");
+        assert!(line.starts_with("MODEL alpha GEN "));
+        let req = parse_request(line.trim_end()).unwrap();
+        assert_eq!(
+            req,
+            Request::Gen {
+                max_tokens: 4,
+                temp: 0.0,
+                prompt: "hi".into(),
+                session: None,
+                model: Some("alpha".into()),
+            }
+        );
+        let line = format_sgen_for(Some("m.2"), "conv", 4, 0.0, "hi");
+        let req = parse_request(line.trim_end()).unwrap();
+        assert_eq!(
+            req,
+            Request::Gen {
+                max_tokens: 4,
+                temp: 0.0,
+                prompt: "hi".into(),
+                session: Some("conv".into()),
+                model: Some("m.2".into()),
+            }
+        );
+        for bad in [
+            "MODEL",                       // bare
+            "MODEL x",                     // nothing after the name
+            "MODEL ../up GEN 4 0.0\thi",   // path-escape name
+            "MODEL has space GEN 4 0.0\thi",
+            "MODEL x STATS",               // MODEL only prefixes GEN/SGEN
+            "MODEL x PING",
+            "MODEL x MODEL y GEN 4 0.0\thi",
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} should fail");
+        }
+        assert!(valid_model_name("alpha"));
+        assert!(!valid_model_name("a/b"));
+        assert!(!valid_model_name(""));
     }
 
     #[test]

@@ -1,0 +1,713 @@
+//! The model registry: many named checkpoints behind one server.
+//!
+//! `chon serve --model NAME=CKPT_DIR ...` registers any number of models;
+//! each resident model owns its own engine thread (`RequestBatcher`) and
+//! its own named-session store, so prefill/decode batching never mixes
+//! models and session ids are namespaced per model. On top of that the
+//! registry adds three lifecycle behaviors:
+//!
+//! * **Lazy loading + LRU unload** — engines load on a model's first
+//!   request; past `--max-resident-models`, the least-recently-used
+//!   resident model is unloaded (its engine thread drained and dropped,
+//!   its idle sessions parked in their store — resident or spilled — so
+//!   a later reload continues every conversation bit-exactly).
+//! * **Hot reload** — every `Trainer` save stamps `meta.toml` with a
+//!   monotonic `generation`; the registry re-probes a model's checkpoint
+//!   directory (at most every `reload_poll_ms`) on admission, and when
+//!   the resolved directory or its generation changes it loads the new
+//!   weights *first*, then drains the old engine. In-flight generations
+//!   finish on the old weights; everything not yet admitted (including
+//!   requests still queued at swap time) runs on the new ones. That is
+//!   the train→serve continuous-deployment loop: `chon train` republishes
+//!   into the watched directory and a live server picks it up without a
+//!   restart.
+//! * **Per-model + aggregate stats** — each model keeps a cumulative
+//!   `ServeStats` that survives unload/reload; `STATS` (line) stays the
+//!   aggregate one-liner, `GET /stats` adds a per-model breakdown with
+//!   residency, step and generation.
+//!
+//! Concurrency model: one mutex around the whole slot table. Submits are
+//! cheap under it (a channel send); loads, unloads and hot reloads run
+//! under it too, which serializes them against all routing — simple and
+//! correct, at the cost of head-of-line blocking while an engine swaps.
+//! Known limitation (see ROADMAP): requests still queued on a model when
+//! it is chosen as an LRU *unload* victim are rejected with a retryable
+//! error (a hot reload re-submits them instead, since the replacement
+//! engine exists).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ckptdir::{self, CheckpointMeta};
+use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
+use crate::serve::engine::Engine;
+use crate::serve::pages::{SessionStore, StoreOpts};
+use crate::serve::protocol::valid_model_name;
+use crate::util::json::Json;
+use crate::{info, warn};
+
+/// Registry knobs (`chon serve` flags that are per-model rather than
+/// per-listener).
+#[derive(Clone, Debug)]
+pub struct RegistryOpts {
+    /// max sessions coalesced into one decode batch (per model)
+    pub max_batch: usize,
+    /// how long a fresh batch waits for companions (microseconds)
+    pub max_wait_us: u64,
+    /// temperature-sampling seed
+    pub seed: u64,
+    /// session-cache template; a user-chosen `spill_dir` gets a
+    /// `<dir>/<model>` subdirectory per model so session ids cannot
+    /// collide across models (the auto temp dir is unique per store)
+    pub store_opts: StoreOpts,
+    /// max models resident (engine loaded) at once; 0 = unlimited
+    pub max_resident_models: usize,
+    /// min milliseconds between checkpoint-dir generation probes per
+    /// model (0 = probe on every admission; tests use this)
+    pub reload_poll_ms: u64,
+}
+
+impl Default for RegistryOpts {
+    fn default() -> Self {
+        RegistryOpts {
+            max_batch: 8,
+            max_wait_us: 2000,
+            seed: 0,
+            store_opts: StoreOpts::default(),
+            max_resident_models: 0,
+            reload_poll_ms: 500,
+        }
+    }
+}
+
+/// Why a submission could not be routed. The front ends map these to
+/// distinct wire errors (unknown model is the client's fault — 404/ERR;
+/// a load failure or stopped registry is the server's — 5xx/ERR).
+#[derive(Debug)]
+pub enum SubmitError {
+    UnknownModel(String),
+    Load(anyhow::Error),
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(name) => {
+                write!(f, "unknown model {name:?}")
+            }
+            SubmitError::Load(e) => write!(f, "model failed to load: {e:#}"),
+            SubmitError::Stopped => write!(f, "server stopped"),
+        }
+    }
+}
+
+/// Identity of the engine a slot currently (or last) served.
+#[derive(Clone, Debug, PartialEq)]
+struct LoadedFrom {
+    /// the concrete checkpoint dir `resolve` picked inside the watched
+    /// path (a republish at a higher step changes this)
+    resolved: PathBuf,
+    generation: u64,
+}
+
+struct Slot {
+    name: String,
+    /// the watched checkpoint path as registered (dir or parent of
+    /// dirs); None for preloaded in-memory engines, which therefore can
+    /// be neither reloaded nor unloaded (pinned resident)
+    dir: Option<PathBuf>,
+    batcher: Option<RequestBatcher>,
+    /// session store parked across unloads so conversations survive
+    parked: Option<SessionStore>,
+    /// cumulative counters, surviving unload/reload
+    stats: std::sync::Arc<ServeStats>,
+    /// identity of the currently/last loaded engine
+    loaded: Option<LoadedFrom>,
+    /// checkpoint metadata snapshot (refreshed on every load/probe)
+    meta: CheckpointMeta,
+    /// LRU stamp (registry clock value of the last routed request)
+    last_used: u64,
+    /// earliest next generation probe (hot-reload poll throttle; doubles
+    /// as the retry throttle after a failed load when `load_failed`)
+    next_probe: Instant,
+    /// the last load attempt failed — gates the cheap fast-fail below so
+    /// a broken checkpoint is re-read at most once per poll window
+    /// instead of on every submit (each retry holds the registry lock)
+    load_failed: bool,
+}
+
+impl Slot {
+    fn resident(&self) -> bool {
+        self.batcher.is_some()
+    }
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    clock: u64,
+    model_loads: u64,
+    model_unloads: u64,
+    model_reloads: u64,
+    stopped: bool,
+}
+
+/// The registry itself. Built (and populated via `register*`) before the
+/// server starts, then shared behind an `Arc` by every connection
+/// handler.
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+    opts: RegistryOpts,
+}
+
+/// Resolve a watched path to its concrete checkpoint dir + metadata.
+fn probe(dir: &Path) -> Result<(PathBuf, CheckpointMeta)> {
+    let resolved = ckptdir::resolve(dir)?;
+    let meta = ckptdir::load_meta(&resolved)?;
+    Ok((resolved, meta))
+}
+
+impl ModelRegistry {
+    pub fn new(opts: RegistryOpts) -> ModelRegistry {
+        ModelRegistry {
+            inner: Mutex::new(Inner {
+                slots: Vec::new(),
+                clock: 0,
+                model_loads: 0,
+                model_unloads: 0,
+                model_reloads: 0,
+                stopped: false,
+            }),
+            opts,
+        }
+    }
+
+    /// Per-model session-store options: a shared user spill dir gets a
+    /// per-model subdirectory so spill files never collide across models.
+    fn store_opts_for(&self, name: &str) -> StoreOpts {
+        let mut so = self.opts.store_opts.clone();
+        if let Some(dir) = so.spill_dir.take() {
+            so.spill_dir = Some(dir.join(name));
+        }
+        so
+    }
+
+    /// The one place an engine thread is spawned from `RegistryOpts` —
+    /// initial load, LRU reload and hot reload must all batch identically.
+    fn spawn_batcher(
+        &self,
+        engine: Engine,
+        store: SessionStore,
+        stats: std::sync::Arc<ServeStats>,
+    ) -> RequestBatcher {
+        RequestBatcher::spawn_with(
+            engine,
+            self.opts.max_batch,
+            Duration::from_micros(self.opts.max_wait_us),
+            self.opts.seed,
+            store,
+            stats,
+        )
+    }
+
+    /// Register a named checkpoint directory. Engines stay lazily loaded
+    /// (nothing is kept resident here), but registration validates the
+    /// FULL checkpoint — `Engine::load` is run once and dropped — so a
+    /// truncated params file, tensor-shape mismatch or vocab drift fails
+    /// the `chon serve` startup with a non-zero exit instead of starting
+    /// a "healthy" server that 500s every request (the pre-registry
+    /// bind-time guard, preserved). Peak memory stays one model: the
+    /// validation engines are loaded sequentially and freed.
+    pub fn register(&mut self, name: &str, dir: &Path) -> Result<()> {
+        if !valid_model_name(name) {
+            bail!(
+                "bad model name {name:?} (want 1..=64 of [A-Za-z0-9._-], \
+                 not starting with '.' or '-')"
+            );
+        }
+        let inner = self.inner.get_mut().expect("registry poisoned");
+        if inner.slots.iter().any(|s| s.name == name) {
+            bail!("model {name:?} registered twice");
+        }
+        let (resolved, meta) = probe(dir)
+            .with_context(|| format!("registering model {name:?} from {}", dir.display()))?;
+        drop(Engine::load(&resolved).with_context(|| {
+            format!("validating model {name:?} from {}", resolved.display())
+        })?);
+        inner.slots.push(Slot {
+            name: name.to_string(),
+            dir: Some(dir.to_path_buf()),
+            batcher: None,
+            parked: None,
+            stats: std::sync::Arc::new(ServeStats::default()),
+            loaded: None,
+            meta,
+            last_used: 0,
+            next_probe: Instant::now(),
+            load_failed: false,
+        });
+        Ok(())
+    }
+
+    /// Register an already-built in-memory engine (tests, embedding).
+    /// Pinned resident: with no backing directory it can be neither
+    /// hot-reloaded nor unloaded.
+    pub fn register_engine(&mut self, name: &str, engine: Engine) -> Result<()> {
+        if !valid_model_name(name) {
+            bail!("bad model name {name:?}");
+        }
+        let store = SessionStore::new(self.store_opts_for(name))?;
+        let inner = self.inner.get_mut().expect("registry poisoned");
+        if inner.slots.iter().any(|s| s.name == name) {
+            bail!("model {name:?} registered twice");
+        }
+        let meta = engine.meta.clone();
+        let stats = std::sync::Arc::new(ServeStats::default());
+        let batcher = self.spawn_batcher(engine, store, stats.clone());
+        inner.model_loads += 1;
+        inner.slots.push(Slot {
+            name: name.to_string(),
+            dir: None,
+            batcher: Some(batcher),
+            parked: None,
+            stats,
+            loaded: Some(LoadedFrom {
+                resolved: PathBuf::new(),
+                generation: meta.generation,
+            }),
+            meta,
+            last_used: 0,
+            next_probe: Instant::now(),
+            load_failed: false,
+        });
+        Ok(())
+    }
+
+    /// Names in registration order (index 0 is the default model).
+    pub fn model_names(&self) -> Vec<String> {
+        let g = self.inner.lock().expect("registry poisoned");
+        g.slots.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// The generation of a model's currently-loaded engine (None when
+    /// unknown name or never loaded). Tests and `/stats` use this.
+    pub fn loaded_generation(&self, name: &str) -> Option<u64> {
+        let g = self.inner.lock().expect("registry poisoned");
+        g.slots
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.loaded.as_ref())
+            .map(|l| l.generation)
+    }
+
+    /// Route one request: resolve the model name (None = default = first
+    /// registered), hot-reload if its checkpoint was republished, load it
+    /// if not resident (evicting the LRU model past the budget), and hand
+    /// the request to its engine thread.
+    pub fn submit(
+        &self,
+        model: Option<&str>,
+        req: GenRequest,
+    ) -> std::result::Result<(), SubmitError> {
+        let mut g = self.inner.lock().expect("registry poisoned");
+        if g.stopped {
+            return Err(SubmitError::Stopped);
+        }
+        let idx = match model {
+            Some(name) => g
+                .slots
+                .iter()
+                .position(|s| s.name == name)
+                .ok_or_else(|| SubmitError::UnknownModel(name.to_string()))?,
+            None => {
+                if g.slots.is_empty() {
+                    return Err(SubmitError::UnknownModel("<default>".into()));
+                }
+                0
+            }
+        };
+        g.clock += 1;
+        let clock = g.clock;
+        g.slots[idx].last_used = clock;
+        self.maybe_hot_reload(&mut g, idx);
+        self.ensure_resident(&mut g, idx).map_err(SubmitError::Load)?;
+        let batcher = g.slots[idx].batcher.as_ref().expect("resident after load");
+        batcher
+            .submitter()
+            .send(req)
+            .map_err(|_| SubmitError::Stopped)
+    }
+
+    /// Probe the slot's checkpoint dir (throttled) and swap engines when
+    /// its generation moved. Load-the-new-first ordering: a failed load
+    /// keeps serving the old weights (warned, retried at the next probe
+    /// window) instead of leaving the model down.
+    fn maybe_hot_reload(&self, g: &mut Inner, idx: usize) {
+        let now = Instant::now();
+        let poll = Duration::from_millis(self.opts.reload_poll_ms);
+        {
+            let slot = &g.slots[idx];
+            if slot.batcher.is_none() || slot.dir.is_none() || now < slot.next_probe {
+                return;
+            }
+        }
+        g.slots[idx].next_probe = now + poll;
+        let dir = g.slots[idx].dir.clone().expect("checked above");
+        let (resolved, meta) = match probe(&dir) {
+            Ok(p) => p,
+            Err(e) => {
+                warn!(
+                    "model {}: checkpoint probe failed ({e:#}); serving \
+                     current weights",
+                    g.slots[idx].name
+                );
+                return;
+            }
+        };
+        let current = LoadedFrom { resolved: resolved.clone(), generation: meta.generation };
+        if g.slots[idx].loaded.as_ref() == Some(&current) {
+            return;
+        }
+        let engine = match Engine::load(&resolved) {
+            Ok(e) => e,
+            Err(e) => {
+                warn!(
+                    "model {}: republished checkpoint {} failed to load \
+                     ({e:#}); serving previous generation",
+                    g.slots[idx].name,
+                    resolved.display()
+                );
+                return;
+            }
+        };
+        // drain the old engine (in-flight generations finish on the old
+        // weights), then move its session store under the new one
+        let name = g.slots[idx].name.clone();
+        let (store, leftovers) = g.slots[idx]
+            .batcher
+            .take()
+            .expect("resident checked above")
+            .shutdown();
+        let store = match store {
+            Some(s) => s,
+            None => match SessionStore::new(self.store_opts_for(&name)) {
+                Ok(s) => s,
+                Err(e) => {
+                    warn!("model {name}: session store lost in reload: {e:#}");
+                    g.slots[idx].loaded = None;
+                    for req in leftovers {
+                        let _ = req
+                            .reply
+                            .send(TokenEvent::Error("model reload failed".into()));
+                    }
+                    return;
+                }
+            },
+        };
+        let batcher =
+            self.spawn_batcher(engine, store, g.slots[idx].stats.clone());
+        // queued-but-unadmitted requests continue on the new weights
+        for req in leftovers {
+            let _ = batcher.submitter().send(req);
+        }
+        info!(
+            "model {name}: hot-reloaded {} (generation {} -> {}, step {})",
+            resolved.display(),
+            g.slots[idx].loaded.as_ref().map(|l| l.generation).unwrap_or(0),
+            meta.generation,
+            meta.step
+        );
+        g.slots[idx].batcher = Some(batcher);
+        g.slots[idx].loaded = Some(current);
+        g.slots[idx].meta = meta;
+        g.model_reloads += 1;
+    }
+
+    /// Load the slot's engine if it is not resident, unloading LRU
+    /// victims while over the `max_resident_models` budget. Ordering and
+    /// failure behavior: the new engine is loaded *before* any victim is
+    /// evicted (a broken checkpoint never churns a healthy model out of
+    /// residency), and a failed load arms a fast-fail window of
+    /// `reload_poll_ms` so retries hit the disk at most once per window
+    /// instead of on every submit (each attempt holds the registry lock).
+    fn ensure_resident(&self, g: &mut Inner, idx: usize) -> Result<()> {
+        if g.slots[idx].resident() {
+            return Ok(());
+        }
+        let name = g.slots[idx].name.clone();
+        if g.slots[idx].load_failed && Instant::now() < g.slots[idx].next_probe {
+            bail!(
+                "model {name:?} failed to load recently; retrying after \
+                 the probe window"
+            );
+        }
+        let dir = g.slots[idx]
+            .dir
+            .clone()
+            .expect("non-resident slots have a dir");
+        let loaded = probe(&dir).and_then(|(resolved, meta)| {
+            let engine = Engine::load(&resolved)?;
+            Ok((resolved, meta, engine))
+        });
+        let (resolved, meta, engine) = match loaded {
+            Ok(l) => l,
+            Err(e) => {
+                g.slots[idx].load_failed = true;
+                g.slots[idx].next_probe = Instant::now()
+                    + Duration::from_millis(self.opts.reload_poll_ms);
+                return Err(e)
+                    .with_context(|| format!("loading model {name:?}"));
+            }
+        };
+        if self.opts.max_resident_models > 0 {
+            while g.slots.iter().filter(|s| s.resident()).count()
+                >= self.opts.max_resident_models
+            {
+                // victim: least-recently-used resident model that *can*
+                // be reloaded later (has a backing dir) and is not the
+                // one we are loading
+                let victim = g
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, s)| *i != idx && s.resident() && s.dir.is_some())
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(i, _)| i);
+                let Some(v) = victim else {
+                    break; // everything resident is pinned; stay over budget
+                };
+                self.unload(g, v);
+            }
+        }
+        let store = match g.slots[idx].parked.take() {
+            Some(s) => s,
+            None => SessionStore::new(self.store_opts_for(&name))?,
+        };
+        let batcher =
+            self.spawn_batcher(engine, store, g.slots[idx].stats.clone());
+        info!(
+            "model {name}: loaded {} (generation {}, step {})",
+            resolved.display(),
+            meta.generation,
+            meta.step
+        );
+        g.slots[idx].batcher = Some(batcher);
+        g.slots[idx].loaded =
+            Some(LoadedFrom { resolved, generation: meta.generation });
+        g.slots[idx].meta = meta;
+        g.slots[idx].next_probe =
+            Instant::now() + Duration::from_millis(self.opts.reload_poll_ms);
+        g.slots[idx].load_failed = false;
+        g.model_loads += 1;
+        Ok(())
+    }
+
+    /// Drain and drop one resident engine, parking its session store.
+    fn unload(&self, g: &mut Inner, idx: usize) {
+        let Some(batcher) = g.slots[idx].batcher.take() else {
+            return;
+        };
+        let (store, leftovers) = batcher.shutdown();
+        g.slots[idx].parked = store;
+        for req in leftovers {
+            // no replacement engine exists to take these (unlike a hot
+            // reload); reject retryably rather than resurrect the model
+            // we were asked to evict
+            let _ = req.reply.send(TokenEvent::Error(format!(
+                "model {} was unloaded under --max-resident-models; retry",
+                g.slots[idx].name
+            )));
+        }
+        info!("model {}: unloaded (LRU)", g.slots[idx].name);
+        g.model_unloads += 1;
+    }
+
+    /// Drain every engine and reject everything still queued. Idempotent.
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().expect("registry poisoned");
+        g.stopped = true;
+        for i in 0..g.slots.len() {
+            if let Some(batcher) = g.slots[i].batcher.take() {
+                let (store, leftovers) = batcher.shutdown();
+                g.slots[i].parked = store;
+                for req in leftovers {
+                    let _ = req
+                        .reply
+                        .send(TokenEvent::Error("server shutting down".into()));
+                }
+            }
+        }
+    }
+
+    /// The one-line aggregate STATS payload (all models summed, plus the
+    /// registry's own lifecycle counters).
+    pub fn stats_line(&self) -> String {
+        let g = self.inner.lock().expect("registry poisoned");
+        let merged = ServeStats::merged(g.slots.iter().map(|s| s.stats.as_ref()));
+        format!(
+            "{} models={} resident_models={} model_loads={} \
+             model_unloads={} model_reloads={}",
+            merged.snapshot_line(),
+            g.slots.len(),
+            g.slots.iter().filter(|s| s.resident()).count(),
+            g.model_loads,
+            g.model_unloads,
+            g.model_reloads,
+        )
+    }
+
+    /// The `GET /stats` payload: the aggregate counters at the top level
+    /// (field-compatible with the single-model servers of PR 2–4), plus
+    /// registry counters (`models` is the registered count) and a
+    /// per-model breakdown under `"per_model"`.
+    pub fn stats_json(&self) -> Json {
+        let g = self.inner.lock().expect("registry poisoned");
+        let merged = ServeStats::merged(g.slots.iter().map(|s| s.stats.as_ref()));
+        let Json::Obj(mut fields) = merged.snapshot_json() else {
+            unreachable!("snapshot_json is an object");
+        };
+        let n = |v: u64| Json::Num(v as f64);
+        fields.push(("models".into(), n(g.slots.len() as u64)));
+        fields.push((
+            "resident_models".into(),
+            n(g.slots.iter().filter(|s| s.resident()).count() as u64),
+        ));
+        fields.push(("model_loads".into(), n(g.model_loads)));
+        fields.push(("model_unloads".into(), n(g.model_unloads)));
+        fields.push(("model_reloads".into(), n(g.model_reloads)));
+        let per_model: Vec<(String, Json)> = g
+            .slots
+            .iter()
+            .map(|s| {
+                let Json::Obj(mut mf) = s.stats.snapshot_json() else {
+                    unreachable!()
+                };
+                mf.push(("resident".into(), Json::Bool(s.resident())));
+                mf.push(("model".into(), Json::Str(s.meta.model.clone())));
+                mf.push(("recipe".into(), Json::Str(s.meta.recipe.clone())));
+                mf.push(("step".into(), n(s.meta.step as u64)));
+                mf.push((
+                    "generation".into(),
+                    n(s.loaded
+                        .as_ref()
+                        .map(|l| l.generation)
+                        .unwrap_or(s.meta.generation)),
+                ));
+                (s.name.clone(), Json::Obj(mf))
+            })
+            .collect();
+        fields.push(("per_model".into(), Json::Obj(per_model)));
+        Json::Obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::Tokenizer;
+    use crate::runtime::native::model::{init_params, model_cfg};
+    use crate::runtime::native::recipe::recipe;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn test_engine(seed: u64) -> Engine {
+        let cfg = model_cfg("tiny_gla").unwrap();
+        let params = init_params(&cfg, seed);
+        Engine::from_parts(
+            cfg,
+            recipe("chon").unwrap(),
+            Tokenizer::byte_level(),
+            &params,
+        )
+    }
+
+    fn greedy(reg: &ModelRegistry, model: Option<&str>, prompt: &str) -> Vec<u8> {
+        let (tx, rx) = channel();
+        reg.submit(
+            model,
+            GenRequest {
+                prompt: prompt.into(),
+                max_tokens: 6,
+                temp: 0.0,
+                session: None,
+                reply: tx,
+                cancel: Arc::new(AtomicBool::new(false)),
+            },
+        )
+        .unwrap();
+        let mut bytes = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(30)).expect("event") {
+                TokenEvent::Token(p) => bytes.extend(p),
+                TokenEvent::Done { .. } => return bytes,
+                TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn preloaded_engines_route_by_name_and_reject_unknown() {
+        let mut reg = ModelRegistry::new(RegistryOpts::default());
+        reg.register_engine("alpha", test_engine(3)).unwrap();
+        reg.register_engine("beta", test_engine(4)).unwrap();
+        assert_eq!(reg.model_names(), vec!["alpha", "beta"]);
+
+        let a = greedy(&reg, Some("alpha"), "hello ");
+        let d = greedy(&reg, None, "hello ");
+        assert_eq!(a, d, "default must route to the first registered model");
+
+        let (tx, _rx) = channel();
+        let err = reg
+            .submit(
+                Some("nope"),
+                GenRequest {
+                    prompt: "x".into(),
+                    max_tokens: 1,
+                    temp: 0.0,
+                    session: None,
+                    reply: tx,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::UnknownModel(_)), "{err}");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn duplicate_and_invalid_names_rejected() {
+        let mut reg = ModelRegistry::new(RegistryOpts::default());
+        reg.register_engine("a", test_engine(1)).unwrap();
+        assert!(reg.register_engine("a", test_engine(2)).is_err());
+        assert!(reg
+            .register("bad/name", Path::new("/nonexistent"))
+            .is_err());
+        assert!(reg.register("ok", Path::new("/nonexistent")).is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn stats_line_aggregates_models() {
+        let mut reg = ModelRegistry::new(RegistryOpts::default());
+        reg.register_engine("a", test_engine(1)).unwrap();
+        reg.register_engine("b", test_engine(2)).unwrap();
+        greedy(&reg, Some("a"), "one ");
+        greedy(&reg, Some("b"), "two ");
+        // counters are synced by the engine threads after Done; both
+        // requests completed, so requests= must already read 2
+        let line = reg.stats_line();
+        assert!(line.contains("requests=2"), "{line}");
+        assert!(line.contains("models=2"), "{line}");
+        assert!(line.contains("resident_models=2"), "{line}");
+        let json = reg.stats_json();
+        let per = json.get("per_model").expect("per_model present");
+        assert!(per.get("a").is_some(), "{}", json.render());
+        assert!(per.get("b").is_some(), "{}", json.render());
+        assert_eq!(json.get("models").and_then(|v| v.as_f64()), Some(2.0));
+        reg.shutdown();
+    }
+}

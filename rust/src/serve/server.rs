@@ -2,21 +2,31 @@
 //! optional HTTP/1.1 listener, a shared worker-thread pool for connection
 //! handling, and graceful shutdown.
 //!
-//! Both front ends feed the same `RequestBatcher` (and therefore the same
-//! cross-session prefill batching, paged session cache and drain logic):
+//! Both front ends route through the same `ModelRegistry` (and therefore
+//! the same per-model request batchers, prefill batching, paged session
+//! caches, lazy load / LRU unload / hot reload and drain logic):
 //!
 //! * line protocol (`serve::protocol`): `GEN`/`SGEN` stream `TOK` lines
-//!   back as tokens are produced, so a slow consumer only delays itself.
+//!   back as tokens are produced, so a slow consumer only delays itself;
+//!   a `MODEL <name>` prefix routes to a registered model (absent = the
+//!   default model).
 //! * HTTP (`serve::http`): `POST /generate` streams newline-delimited
-//!   JSON over chunked transfer encoding; `GET /stats` returns the
-//!   counters as JSON; `POST /shutdown` drains and stops.
+//!   JSON over chunked transfer encoding (optional `"model"` key routes
+//!   like the MODEL prefix); `GET /stats` returns the aggregate counters
+//!   plus a per-model breakdown as JSON; `POST /shutdown` drains and
+//!   stops.
 //!
 //! `SHUTDOWN` (line) or `POST /shutdown` (HTTP) stops accepting, lets
 //! in-flight generations finish, joins the pool and prints final stats.
+//!
+//! When a client gives up on a generation (60 s reply timeout, or its
+//! socket write fails), the handler flags the request as cancelled so a
+//! still-queued request is dropped instead of executed — an abandoned
+//! request can no longer advance a named session behind its client's
+//! back.
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -25,14 +35,15 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::info;
-use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
-use crate::serve::engine::Engine;
+use crate::serve::batcher::{GenRequest, TokenEvent};
 use crate::serve::http::{self, HttpRequest, Parsed};
-use crate::serve::pages::StoreOpts;
 use crate::serve::protocol::{self, Request};
+use crate::serve::registry::{ModelRegistry, SubmitError};
 use crate::util::json::Json;
 
-/// Server knobs (CLI flags of `chon serve`).
+/// Server knobs (the listener-level CLI flags of `chon serve`; the
+/// per-model knobs — batching, session cache, residency, reload poll —
+/// live in `registry::RegistryOpts`).
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
     pub host: String,
@@ -40,18 +51,8 @@ pub struct ServeOpts {
     pub port: u16,
     /// HTTP front-end port (0 = ephemeral); None disables HTTP entirely
     pub http_port: Option<u16>,
-    pub max_batch: usize,
-    pub max_wait_us: u64,
     /// connection-handler threads
     pub workers: usize,
-    /// temperature-sampling seed
-    pub seed: u64,
-    /// max idle named sessions kept in memory (0 = unlimited)
-    pub max_resident_sessions: usize,
-    /// max KV positions resident across idle sessions (0 = unlimited)
-    pub max_kv_tokens: usize,
-    /// where evicted sessions spill (None = per-process temp dir)
-    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -60,13 +61,7 @@ impl Default for ServeOpts {
             host: "127.0.0.1".into(),
             port: 7411,
             http_port: Some(7412),
-            max_batch: 8,
-            max_wait_us: 2000,
             workers: 4,
-            seed: 0,
-            max_resident_sessions: 0,
-            max_kv_tokens: 0,
-            spill_dir: None,
         }
     }
 }
@@ -82,14 +77,14 @@ enum ConnKind {
 pub struct Server {
     listener: TcpListener,
     http_listener: Option<TcpListener>,
-    batcher: RequestBatcher,
+    registry: Arc<ModelRegistry>,
     shutdown: Arc<AtomicBool>,
     workers: usize,
 }
 
 impl Server {
-    /// Bind the listener(s) and spawn the engine thread.
-    pub fn bind(engine: Engine, opts: &ServeOpts) -> Result<Server> {
+    /// Bind the listener(s) over a populated model registry.
+    pub fn bind(registry: ModelRegistry, opts: &ServeOpts) -> Result<Server> {
         let addr = format!("{}:{}", opts.host, opts.port);
         let listener =
             TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
@@ -103,22 +98,10 @@ impl Server {
             }
             None => None,
         };
-        let store_opts = StoreOpts {
-            max_resident_sessions: opts.max_resident_sessions,
-            max_kv_tokens: opts.max_kv_tokens,
-            spill_dir: opts.spill_dir.clone(),
-        };
-        let batcher = RequestBatcher::spawn(
-            engine,
-            opts.max_batch,
-            Duration::from_micros(opts.max_wait_us),
-            opts.seed,
-            store_opts,
-        )?;
         Ok(Server {
             listener,
             http_listener,
-            batcher,
+            registry: Arc::new(registry),
             shutdown: Arc::new(AtomicBool::new(false)),
             workers: opts.workers.max(1),
         })
@@ -142,6 +125,12 @@ impl Server {
         self.shutdown.clone()
     }
 
+    /// The model registry behind this server (tests poke generations and
+    /// per-model stats through this).
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        self.registry.clone()
+    }
+
     /// Serve until a shutdown command (or the shutdown flag) arrives.
     /// Returns the final stats snapshot line.
     pub fn run(self) -> Result<String> {
@@ -155,8 +144,7 @@ impl Server {
         let mut pool = Vec::with_capacity(self.workers);
         for _ in 0..self.workers {
             let rx = conn_rx.clone();
-            let submit = self.batcher.submitter();
-            let stats = self.batcher.stats.clone();
+            let registry = self.registry.clone();
             let stop = self.shutdown.clone();
             pool.push(std::thread::spawn(move || loop {
                 let stream = {
@@ -164,11 +152,9 @@ impl Server {
                     guard.recv()
                 };
                 match stream {
-                    Ok((s, ConnKind::Line)) => {
-                        handle_conn(s, &submit, &stats, &stop)
-                    }
+                    Ok((s, ConnKind::Line)) => handle_conn(s, &registry, &stop),
                     Ok((s, ConnKind::Http)) => {
-                        handle_http_conn(s, &submit, &stats, &stop)
+                        handle_http_conn(s, &registry, &stop)
                     }
                     Err(_) => break, // accept loop gone: drain done
                 }
@@ -176,7 +162,8 @@ impl Server {
         }
 
         info!(
-            "serving on port {} (http {:?}, {} workers)",
+            "serving {} model(s) on port {} (http {:?}, {} workers)",
+            self.registry.model_names().len(),
             self.port(),
             self.http_port(),
             self.workers
@@ -212,13 +199,13 @@ impl Server {
             }
         }
 
-        // stop feeding the pool, let handlers finish, then drain the engine
+        // stop feeding the pool, let handlers finish, then drain engines
         drop(conn_tx);
         for h in pool {
             let _ = h.join();
         }
-        let line = self.batcher.stats.snapshot_line();
-        self.batcher.shutdown();
+        let line = self.registry.stats_line();
+        self.registry.shutdown();
         info!("shutdown complete: {line}");
         Ok(line)
     }
@@ -231,8 +218,7 @@ const IDLE_TICKS: u32 = 300;
 /// Serve one line-protocol connection until EOF, error, or shutdown.
 fn handle_conn(
     stream: TcpStream,
-    submit: &Sender<GenRequest>,
-    stats: &Arc<ServeStats>,
+    registry: &Arc<ModelRegistry>,
     stop: &Arc<AtomicBool>,
 ) {
     let _ = stream.set_nodelay(true);
@@ -268,16 +254,19 @@ fn handle_conn(
         let reply = match parsed {
             Err(e) => format!("ERR {}\n", protocol::escape(&e)),
             Ok(Request::Ping) => "PONG\n".into(),
-            Ok(Request::Stats) => format!("STATS {}\n", stats.snapshot_line()),
+            Ok(Request::Stats) => {
+                format!("STATS {}\n", registry.stats_line())
+            }
             Ok(Request::Shutdown) => {
                 let _ = writer.write_all(b"BYE\n");
                 stop.store(true, Ordering::SeqCst);
                 return;
             }
-            Ok(Request::Gen { max_tokens, temp, prompt, session }) => {
+            Ok(Request::Gen { max_tokens, temp, prompt, session, model }) => {
                 stream_generation(
                     &mut writer,
-                    submit,
+                    registry,
+                    model,
                     max_tokens,
                     temp,
                     prompt,
@@ -292,21 +281,32 @@ fn handle_conn(
     }
 }
 
-/// Submit one GEN/SGEN request and stream its events back.
+/// Submit one GEN/SGEN request to the registry and stream its events
+/// back. The cancel flag is raised whenever this handler stops reading
+/// events (timeout or a dead client socket), so the batcher can drop the
+/// request if it had not started yet.
 fn stream_generation(
     writer: &mut TcpStream,
-    submit: &Sender<GenRequest>,
+    registry: &Arc<ModelRegistry>,
+    model: Option<String>,
     max_tokens: usize,
     temp: f32,
     prompt: String,
     session: Option<String>,
 ) {
     let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
-    if submit
-        .send(GenRequest { prompt, max_tokens, temp, session, reply: tx })
-        .is_err()
-    {
-        let _ = writer.write_all(b"ERR server stopped\n");
+    let cancel = Arc::new(AtomicBool::new(false));
+    let req = GenRequest {
+        prompt,
+        max_tokens,
+        temp,
+        session,
+        reply: tx,
+        cancel: cancel.clone(),
+    };
+    if let Err(e) = registry.submit(model.as_deref(), req) {
+        let _ = writer
+            .write_all(format!("ERR {}\n", protocol::escape(&e.to_string())).as_bytes());
         return;
     }
     loop {
@@ -314,7 +314,11 @@ fn stream_generation(
             Ok(TokenEvent::Token(piece)) => {
                 let line = format!("TOK {}\n", protocol::escape_bytes(&piece));
                 if writer.write_all(line.as_bytes()).is_err() {
-                    return; // client gone; engine notices on next send
+                    // client gone; if the generation is still queued the
+                    // flag drops it, and a running one is cut short on
+                    // the engine's next send
+                    cancel.store(true, Ordering::Relaxed);
+                    return;
                 }
             }
             Ok(TokenEvent::Done { n_tokens, gen_ms }) => {
@@ -328,6 +332,7 @@ fn stream_generation(
                 return;
             }
             Err(_) => {
+                cancel.store(true, Ordering::Relaxed);
                 let _ = writer.write_all(b"ERR generation timed out\n");
                 return;
             }
@@ -339,8 +344,7 @@ fn stream_generation(
 /// close`, or shutdown.
 fn handle_http_conn(
     mut stream: TcpStream,
-    submit: &Sender<GenRequest>,
-    stats: &Arc<ServeStats>,
+    registry: &Arc<ModelRegistry>,
     stop: &Arc<AtomicBool>,
 ) {
     let _ = stream.set_nodelay(true);
@@ -353,8 +357,7 @@ fn handle_http_conn(
             Ok(Parsed::Complete(req, consumed)) => {
                 buf.drain(..consumed);
                 let close = req.wants_close();
-                let keep =
-                    handle_http_request(&mut stream, req, submit, stats, stop);
+                let keep = handle_http_request(&mut stream, req, registry, stop);
                 if !keep || close {
                     return;
                 }
@@ -404,14 +407,13 @@ fn json_error(msg: &str) -> Vec<u8> {
 fn handle_http_request(
     stream: &mut TcpStream,
     req: HttpRequest,
-    submit: &Sender<GenRequest>,
-    stats: &Arc<ServeStats>,
+    registry: &Arc<ModelRegistry>,
     stop: &Arc<AtomicBool>,
 ) -> bool {
     let path = req.target.split('?').next().unwrap_or("");
     match (req.method.as_str(), path) {
         ("GET" | "HEAD", "/stats") => {
-            let body = stats.snapshot_json().render_pretty();
+            let body = registry.stats_json().render_pretty();
             http::write_response(
                 stream,
                 200,
@@ -433,7 +435,7 @@ fn handle_http_request(
             stop.store(true, Ordering::SeqCst);
             false
         }
-        ("POST", "/generate") => http_generate(stream, &req, submit),
+        ("POST", "/generate") => http_generate(stream, &req, registry),
         (_, "/stats" | "/shutdown" | "/generate") => http::write_response(
             stream,
             405,
@@ -454,14 +456,15 @@ fn handle_http_request(
 }
 
 /// `POST /generate`: body `{"prompt": "...", "max_tokens"?, "temp"?,
-/// "session"?}`. Streams newline-delimited JSON via chunked transfer
-/// encoding: one `{"piece": "<escaped>"}` object per token (piece is
-/// `protocol::escape_bytes`-escaped so split multi-byte characters
-/// survive JSON), then `{"done": true, "n_tokens": N, "gen_ms": T}`.
+/// "session"?, "model"?}`. Streams newline-delimited JSON via chunked
+/// transfer encoding: one `{"piece": "<escaped>"}` object per token
+/// (piece is `protocol::escape_bytes`-escaped so split multi-byte
+/// characters survive JSON), then `{"done": true, "n_tokens": N,
+/// "gen_ms": T}`. An unknown `"model"` is a clean 404.
 fn http_generate(
     stream: &mut TcpStream,
     req: &HttpRequest,
-    submit: &Sender<GenRequest>,
+    registry: &Arc<ModelRegistry>,
 ) -> bool {
     let bad = |stream: &mut TcpStream, status: u16, msg: &str| {
         http::write_response(
@@ -509,6 +512,14 @@ fn http_generate(
             None => return bad(stream, 400, "session must be a string"),
         },
     };
+    let model = match doc.get("model") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some(m) if protocol::valid_model_name(m) => Some(m.to_string()),
+            Some(_) => return bad(stream, 400, "bad model name"),
+            None => return bad(stream, 400, "model must be a string"),
+        },
+    };
     if let Err(e) =
         protocol::validate_gen(max_tokens, temp, prompt, session.as_deref())
     {
@@ -516,30 +527,47 @@ fn http_generate(
     }
 
     let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
-    if submit
-        .send(GenRequest {
-            prompt: prompt.to_string(),
-            max_tokens,
-            temp,
-            session,
-            reply: tx,
-        })
-        .is_err()
-    {
-        return bad(stream, 503, "server stopped");
+    let cancel = Arc::new(AtomicBool::new(false));
+    let gen_req = GenRequest {
+        prompt: prompt.to_string(),
+        max_tokens,
+        temp,
+        session,
+        reply: tx,
+        cancel: cancel.clone(),
+    };
+    if let Err(e) = registry.submit(model.as_deref(), gen_req) {
+        let status = match e {
+            SubmitError::UnknownModel(_) => 404,
+            SubmitError::Load(_) => 500,
+            SubmitError::Stopped => 503,
+        };
+        return bad(stream, status, &e.to_string());
     }
 
     // hold the status line until the first event so request-level errors
     // (busy session, context overflow) become a clean 4xx
     let first = match rx.recv_timeout(Duration::from_secs(60)) {
         Ok(ev) => ev,
-        Err(_) => return bad(stream, 503, "generation timed out"),
+        Err(_) => {
+            cancel.store(true, Ordering::Relaxed);
+            return bad(stream, 503, "generation timed out");
+        }
     };
     let mut pending = match first {
-        TokenEvent::Error(e) => return bad(stream, 400, &e),
+        TokenEvent::Error(e) => {
+            // most request-level failures are the client's (bad session,
+            // context overflow) — but a drain or an LRU model unload is
+            // server-initiated and explicitly retryable, so it must not
+            // come back as a don't-retry 4xx
+            let retryable =
+                e.contains("shutting down") || e.contains("unloaded under");
+            return bad(stream, if retryable { 503 } else { 400 }, &e);
+        }
         ev => Some(ev),
     };
     if http::write_chunked_head(stream, 200, "application/x-ndjson").is_err() {
+        cancel.store(true, Ordering::Relaxed);
         return false;
     }
     loop {
@@ -548,6 +576,7 @@ fn http_generate(
             None => match rx.recv_timeout(Duration::from_secs(60)) {
                 Ok(ev) => ev,
                 Err(_) => {
+                    cancel.store(true, Ordering::Relaxed);
                     let mut line = json_error("generation timed out");
                     line.push(b'\n');
                     let _ = http::write_chunk(stream, &line);
@@ -580,6 +609,7 @@ fn http_generate(
             ),
         };
         if http::write_chunk(stream, format!("{line}\n").as_bytes()).is_err() {
+            cancel.store(true, Ordering::Relaxed);
             return false;
         }
         if done {

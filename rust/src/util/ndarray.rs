@@ -315,6 +315,99 @@ fn matmul_small(a: &Mat, b: &Mat, out: &mut Mat, accumulate: bool) {
     }
 }
 
+/// A `Mat` pre-packed into the GEMM's B-panel layout, reusable across
+/// any number of `matmul_packed` calls — the B-panel cache for weights
+/// that never change between GEMMs (frozen serve weights). Packing is
+/// the exact `pack_b` every `matmul` call runs internally, so consuming
+/// a `PackedMat` is **bitwise identical** to multiplying the original
+/// matrix: each output element's accumulation chain still runs over k in
+/// ascending order with the same operand values (`tests/matmul_kernel.rs`
+/// pins this across the small-m and packed-kernel regimes).
+pub struct PackedMat {
+    /// contraction depth (rows of the original B)
+    k: usize,
+    pb: PackedB,
+}
+
+impl fmt::Debug for PackedMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PackedMat({}x{})", self.k, self.pb.n)
+    }
+}
+
+impl PackedMat {
+    /// Pack `b` once for repeated use as a GEMM right-hand side.
+    pub fn pack(b: &Mat) -> PackedMat {
+        PackedMat { k: b.rows, pb: pack_b(b) }
+    }
+
+    /// Rows of the original matrix (the contraction depth).
+    pub fn rows(&self) -> usize {
+        self.k
+    }
+
+    /// Columns of the original matrix.
+    pub fn cols(&self) -> usize {
+        self.pb.n
+    }
+
+    /// Packed storage footprint in f32 elements (reporting).
+    pub fn packed_len(&self) -> usize {
+        self.pb.data.len()
+    }
+}
+
+/// Small-m kernel over pre-packed B panels: per output row, panels are
+/// walked with an NR-wide register accumulator. Every output element's
+/// chain adds `a[i,kk] * b[kk,j]` for kk ascending (blocks are ascending,
+/// kk ascending within a block), which is exactly `matmul_small`'s chain
+/// — so this path is bitwise identical to the unpacked fallback while
+/// reading B from the panel cache instead of re-walking the row-major
+/// matrix.
+fn kernel_rows_prepacked_small(a: &Mat, packed: &PackedB, out: &mut [f32]) {
+    let n = packed.n;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..packed.npanels {
+            let c0 = p * NR;
+            let ncols = (n - c0).min(NR);
+            let mut acc = [0.0f32; NR];
+            for blk in &packed.blocks {
+                let pbase = blk.off + p * blk.kc * NR;
+                let bp = &packed.data[pbase..pbase + blk.kc * NR];
+                for kk in 0..blk.kc {
+                    let av = arow[blk.k0 + kk];
+                    let bv = &bp[kk * NR..kk * NR + NR];
+                    for j in 0..NR {
+                        acc[j] += av * bv[j];
+                    }
+                }
+            }
+            orow[c0..c0 + ncols].copy_from_slice(&acc[..ncols]);
+        }
+    }
+}
+
+/// out = a (m x k) * packed-B (k x n), skipping the per-call `pack_b`.
+/// Dispatches on the same `SMALL_M` threshold as `matmul`, and both
+/// regimes build identical per-element accumulation chains, so the
+/// result is bitwise equal to `matmul(a, b)` for the `b` that was
+/// packed.
+pub fn matmul_packed(a: &Mat, b: &PackedMat) -> Mat {
+    assert_eq!(a.cols, b.k);
+    let mut out = Mat::zeros(a.rows, b.pb.n);
+    if a.rows == 0 || b.pb.n == 0 || a.cols == 0 {
+        return out;
+    }
+    if a.rows < SMALL_M {
+        kernel_rows_prepacked_small(a, &b.pb, &mut out.data);
+    } else {
+        kernel_rows(a, &b.pb, 0, a.rows, &mut out.data, false);
+    }
+    out
+}
+
 /// Packed single-threaded matmul: out = a (m x k) * b (k x n).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows);
@@ -474,6 +567,49 @@ mod tests {
         let b = Mat::zeros(5, 0);
         assert_eq!(matmul(&a, &b).data.len(), 0);
         assert_eq!(matmul_par(&a, &b, 4).data.len(), 0);
+    }
+
+    #[test]
+    fn packed_mat_is_bit_identical_to_matmul() {
+        // shapes straddling the SMALL_M dispatch edge plus NR/KC edges:
+        // the packed-B cache must be invisible in the bits either way
+        for (i, &(m, k, n)) in [
+            (1, 16, 16),
+            (1, 300, 33),
+            (3, 257, 31),
+            (7, 512, 48),
+            (8, 300, 33),
+            (9, 64, 17),
+            (33, 129, 65),
+            (4, 1, 5),
+            (5, 16, 1),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let a = rand_mat(m, k, 300 + i as u64);
+            let b = rand_mat(k, n, 400 + i as u64);
+            let pb = PackedMat::pack(&b);
+            assert_eq!((pb.rows(), pb.cols()), (k, n));
+            let got = matmul_packed(&a, &pb);
+            let want = matmul(&a, &b);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n}");
+            // and a second consumer of the same panels agrees too
+            let a2 = rand_mat(m, k, 500 + i as u64);
+            assert_eq!(matmul_packed(&a2, &pb).data, matmul(&a2, &b).data);
+        }
+    }
+
+    #[test]
+    fn packed_mat_degenerate_shapes() {
+        let b = rand_mat(5, 4, 1);
+        let pb = PackedMat::pack(&b);
+        assert_eq!(matmul_packed(&Mat::zeros(0, 5), &pb).data.len(), 0);
+        let empty_k = PackedMat::pack(&Mat::zeros(0, 4));
+        let out = matmul_packed(&rand_mat(3, 0, 2), &empty_k);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        let empty_n = PackedMat::pack(&Mat::zeros(5, 0));
+        assert_eq!(matmul_packed(&rand_mat(3, 5, 2), &empty_n).data.len(), 0);
     }
 
     #[test]

@@ -1,0 +1,59 @@
+//! Shared integration-test glue (Cargo's `tests/common/mod.rs` pattern —
+//! each test crate pulls this in with `mod common;`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Minimal HTTP client: one request, Connection: close, returns
+/// (status, body-after-dechunking-if-chunked). Deliberately independent
+/// of `serve::http` so the tests exercise the server's framing with a
+/// second implementation.
+pub fn http_request(port: u16, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("no header terminator");
+    let head = String::from_utf8_lossy(&raw[..head_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let chunked = head.to_ascii_lowercase().contains("transfer-encoding: chunked");
+    let mut body_bytes = raw[head_end + 4..].to_vec();
+    if chunked {
+        body_bytes = dechunk(&body_bytes);
+    }
+    (status, body_bytes)
+}
+
+fn dechunk(mut b: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let Some(eol) = b.windows(2).position(|w| w == b"\r\n") else {
+            panic!("chunk size line missing");
+        };
+        let size = usize::from_str_radix(
+            std::str::from_utf8(&b[..eol]).unwrap().trim(),
+            16,
+        )
+        .unwrap();
+        b = &b[eol + 2..];
+        if size == 0 {
+            return out;
+        }
+        out.extend_from_slice(&b[..size]);
+        b = &b[size + 2..]; // skip chunk + CRLF
+    }
+}

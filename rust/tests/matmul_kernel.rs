@@ -3,7 +3,7 @@
 //! serial/parallel identity at every thread count, and the degenerate
 //! shapes (1×N, N×1, empty) the tiling edges must survive.
 
-use chon::util::ndarray::{matmul, matmul_into, matmul_par, Mat};
+use chon::util::ndarray::{matmul, matmul_into, matmul_packed, matmul_par, Mat, PackedMat};
 use chon::util::prng::Rng;
 use chon::util::proptest::{check, Gen};
 
@@ -96,6 +96,38 @@ fn parallel_is_bit_identical_to_serial_at_every_thread_count() {
         let s = matmul(&a, &b);
         (1..=8).all(|t| matmul_par(&a, &b, t).data == s.data)
     });
+}
+
+/// The packed-weight cache contract: consuming a `PackedMat` must be
+/// *bitwise* `matmul` for every ragged shape — on both sides of the
+/// small-m dispatch edge — and the panels must be reusable across many
+/// left-hand sides (that reuse is the whole point of the cache).
+#[test]
+fn prepacked_b_is_bit_identical_to_matmul() {
+    check("matmul_packed == matmul", 0xE5, 60, &ProblemGen, |p| {
+        let b = rand_mat(p.k, p.n, p.seed ^ 8);
+        let pb = PackedMat::pack(&b);
+        if (pb.rows(), pb.cols()) != (p.k, p.n) {
+            return false;
+        }
+        (0..3).all(|i| {
+            let a = rand_mat(p.m, p.k, p.seed ^ (9 + i));
+            matmul_packed(&a, &pb).data == matmul(&a, &b).data
+        })
+    });
+}
+
+#[test]
+fn prepacked_b_degenerate_shapes() {
+    let b = rand_mat(7, 5, 20);
+    let pb = PackedMat::pack(&b);
+    assert_eq!(matmul_packed(&Mat::zeros(0, 7), &pb).data.len(), 0);
+    let pb0 = PackedMat::pack(&Mat::zeros(0, 5));
+    let out = matmul_packed(&rand_mat(9, 0, 21), &pb0);
+    assert_eq!((out.rows, out.cols), (9, 5));
+    assert!(out.data.iter().all(|&v| v == 0.0));
+    let pbn = PackedMat::pack(&Mat::zeros(7, 0));
+    assert_eq!(matmul_packed(&rand_mat(9, 7, 22), &pbn).data.len(), 0);
 }
 
 #[test]

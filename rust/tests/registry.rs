@@ -1,0 +1,338 @@
+//! Model-registry invariants: multi-model serving must be *bitwise*
+//! invisible per model, across both front ends and the whole model
+//! lifecycle.
+//!
+//! * isolation: a server with several resident models answers each model
+//!   exactly like a dedicated single-model server, the same checkpoint
+//!   registered under two names answers identically under both, and the
+//!   default route is the first registered model.
+//! * LRU unload→reload: with `--max-resident-models 1`, alternating
+//!   traffic (including a named session that survives its model being
+//!   unloaded in between turns) matches dedicated servers byte for byte.
+//! * hot reload: republishing a checkpoint (higher step, bumped
+//!   `generation` in meta.toml) is picked up mid-serve without a
+//!   restart; the served bytes match a server freshly bound to the
+//!   republished checkpoint.
+//! * unknown models are clean errors: `ERR unknown model` on the line
+//!   protocol, 404 on HTTP.
+
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::serve::{client, ModelRegistry, RegistryOpts, ServeOpts, Server};
+use chon::util::json::Json;
+
+mod common;
+use common::http_request;
+
+fn native_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = "tiny_gla".into();
+    cfg.recipe = "chon".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = seed;
+    cfg.out_dir = std::env::temp_dir().join("chon_registry_runs");
+    cfg
+}
+
+/// Train `steps` steps with `seed` and publish a checkpoint under a
+/// fresh per-tag parent dir. Returns (parent, concrete checkpoint dir).
+fn train_checkpoint(tag: &str, steps: usize, seed: u64) -> (PathBuf, PathBuf) {
+    let root = std::env::temp_dir().join(format!("chon_registry_ckpt_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut tr = Trainer::new(native_cfg(seed)).unwrap();
+    tr.train(steps).unwrap();
+    let ckpt = tr.save_checkpoint_to(&root).unwrap();
+    (root, ckpt)
+}
+
+fn start_server(
+    entries: &[(&str, &Path)],
+    reg_opts: RegistryOpts,
+) -> (u16, u16, JoinHandle<String>) {
+    let mut registry = ModelRegistry::new(reg_opts);
+    for (name, dir) in entries {
+        registry.register(name, dir).expect("register model");
+    }
+    let opts = ServeOpts {
+        port: 0,
+        http_port: Some(0),
+        workers: 10,
+        ..ServeOpts::default()
+    };
+    let server = Server::bind(registry, &opts).expect("bind");
+    let port = server.port();
+    let http_port = server.http_port().expect("http enabled");
+    let h = std::thread::spawn(move || server.run().expect("server run"));
+    (port, http_port, h)
+}
+
+fn stop(port: u16, h: JoinHandle<String>) -> String {
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap()
+}
+
+/// One counter value out of a `k=v ...` stats line.
+fn stat_of(line: &str, key: &str) -> u64 {
+    line.split_whitespace()
+        .find_map(|kv| kv.strip_prefix(&format!("{key}=")))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no {key}= in {line:?}"))
+}
+
+// ------------------------------------------------------------- http glue
+
+/// Generate over HTTP with an optional model key; returns the assembled
+/// text of a 200-status NDJSON stream.
+fn http_generate(http_port: u16, model: Option<&str>, prompt: &str, n: usize) -> String {
+    let model_field = match model {
+        Some(m) => format!(", \"model\": \"{m}\""),
+        None => String::new(),
+    };
+    let body = format!(
+        "{{\"prompt\": \"{prompt}\", \"max_tokens\": {n}{model_field}}}"
+    );
+    let (status, raw) = http_request(http_port, "POST", "/generate", &body);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&raw));
+    let mut bytes = Vec::new();
+    for line in String::from_utf8(raw).unwrap().lines() {
+        let doc = Json::parse(line).unwrap();
+        if let Some(piece) = doc.get("piece").and_then(|v| v.as_str()) {
+            bytes.extend(
+                chon::serve::protocol::unescape_bytes(piece).unwrap(),
+            );
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// The per-model generation counter out of `GET /stats`.
+fn model_generation(http_port: u16, name: &str) -> u64 {
+    let (status, body) = http_request(http_port, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    doc.get("per_model")
+        .and_then(|m| m.get(name))
+        .and_then(|m| m.get("generation"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("no per_model.{name}.generation in stats")) as u64
+}
+
+// ------------------------------------------------------------ isolation
+
+/// A ≥2-resident-model server answers each model bitwise like a
+/// dedicated single-model server — across TCP and HTTP, under aliasing
+/// (same checkpoint twice), with interleaved traffic, and via the
+/// default route. Unknown models fail clean on both front ends.
+#[test]
+fn multi_model_serving_is_bitwise_isolated() {
+    let (_root_a, ckpt_a) = train_checkpoint("iso_a", 20, 7);
+    let (_root_b, ckpt_b) = train_checkpoint("iso_b", 20, 13);
+    let prompts = ["the quick ", "hello worl", "zqx jw vv "];
+
+    // dedicated single-model references
+    let mut ref_a = Vec::new();
+    let mut ref_b = Vec::new();
+    {
+        let (port, _, h) = start_server(
+            &[("default", ckpt_a.as_path())],
+            RegistryOpts::default(),
+        );
+        for p in &prompts {
+            ref_a.push(client::generate_once("127.0.0.1", port, p, 12, 0.0).unwrap().0);
+        }
+        stop(port, h);
+        let (port, _, h) = start_server(
+            &[("default", ckpt_b.as_path())],
+            RegistryOpts::default(),
+        );
+        for p in &prompts {
+            ref_b.push(client::generate_once("127.0.0.1", port, p, 12, 0.0).unwrap().0);
+        }
+        stop(port, h);
+    }
+
+    // one server, three names over two checkpoints (alias shares ckpt_a)
+    let (port, http_port, h) = start_server(
+        &[
+            ("alpha", ckpt_a.as_path()),
+            ("beta", ckpt_b.as_path()),
+            ("alias", ckpt_a.as_path()),
+        ],
+        RegistryOpts::default(),
+    );
+    for (i, p) in prompts.iter().enumerate() {
+        // interleave models so both stay resident and traffic mixes
+        let a =
+            client::generate_once_for("127.0.0.1", port, Some("alpha"), p, 12, 0.0)
+                .unwrap()
+                .0;
+        let b =
+            client::generate_once_for("127.0.0.1", port, Some("beta"), p, 12, 0.0)
+                .unwrap()
+                .0;
+        let ali =
+            client::generate_once_for("127.0.0.1", port, Some("alias"), p, 12, 0.0)
+                .unwrap()
+                .0;
+        let def = client::generate_once("127.0.0.1", port, p, 12, 0.0).unwrap().0;
+        assert_eq!(a, ref_a[i], "alpha diverged from its dedicated server");
+        assert_eq!(b, ref_b[i], "beta diverged from its dedicated server");
+        assert_eq!(ali, ref_a[i], "alias of the same checkpoint diverged");
+        assert_eq!(def, ref_a[i], "default route must hit the first model");
+        // HTTP routes through the same registry
+        assert_eq!(http_generate(http_port, Some("beta"), p, 12), ref_b[i]);
+        assert_eq!(http_generate(http_port, Some("alpha"), p, 12), ref_a[i]);
+    }
+
+    // unknown model: ERR on the line protocol, 404 on HTTP
+    let err = client::generate_once_for("127.0.0.1", port, Some("nope"), "hi ", 4, 0.0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown model"), "{err}");
+    let (status, body) = http_request(
+        http_port,
+        "POST",
+        "/generate",
+        r#"{"prompt": "hi ", "max_tokens": 4, "model": "nope"}"#,
+    );
+    assert_eq!(status, 404, "{}", String::from_utf8_lossy(&body));
+
+    let stats = stop(port, h);
+    assert_eq!(stat_of(&stats, "models"), 3);
+}
+
+// ------------------------------------------------------- LRU unload/load
+
+/// With a one-model residency budget, alternating traffic forces an
+/// unload+reload per turn — outputs (including a named session whose
+/// model is unloaded between its turns) stay bitwise those of dedicated
+/// servers, and the lifecycle counters prove the churn really happened.
+#[test]
+fn lru_unload_reload_is_bitwise_identical() {
+    let (_root_a, ckpt_a) = train_checkpoint("lru_a", 20, 7);
+    let (_root_b, ckpt_b) = train_checkpoint("lru_b", 20, 13);
+    let turns = ["turn zero ", "turn one ", "turn two "];
+
+    // dedicated reference: one server per model, a named session on A
+    let mut ref_sess = Vec::new();
+    let mut ref_b = Vec::new();
+    {
+        let (port, _, h) = start_server(
+            &[("default", ckpt_a.as_path())],
+            RegistryOpts::default(),
+        );
+        for p in &turns {
+            ref_sess.push(
+                client::generate_session_once("127.0.0.1", port, "conv", p, 8, 0.0)
+                    .unwrap()
+                    .0,
+            );
+        }
+        stop(port, h);
+        let (port, _, h) = start_server(
+            &[("default", ckpt_b.as_path())],
+            RegistryOpts::default(),
+        );
+        for p in &turns {
+            ref_b.push(client::generate_once("127.0.0.1", port, p, 8, 0.0).unwrap().0);
+        }
+        stop(port, h);
+    }
+
+    let (port, _, h) = start_server(
+        &[("alpha", ckpt_a.as_path()), ("beta", ckpt_b.as_path())],
+        RegistryOpts { max_resident_models: 1, ..RegistryOpts::default() },
+    );
+    for (i, p) in turns.iter().enumerate() {
+        // session turn on alpha, then a beta request that evicts alpha
+        let s = client::generate_session_once_for(
+            "127.0.0.1",
+            port,
+            Some("alpha"),
+            "conv",
+            p,
+            8,
+            0.0,
+        )
+        .unwrap()
+        .0;
+        assert_eq!(
+            s, ref_sess[i],
+            "alpha session lost context across an LRU unload"
+        );
+        let b =
+            client::generate_once_for("127.0.0.1", port, Some("beta"), p, 8, 0.0)
+                .unwrap()
+                .0;
+        assert_eq!(b, ref_b[i], "beta diverged under the residency budget");
+    }
+    let stats = stop(port, h);
+    assert_eq!(stat_of(&stats, "resident_models"), 1, "{stats}");
+    assert!(
+        stat_of(&stats, "model_unloads") >= 4,
+        "alternating traffic under max_resident_models=1 must unload: {stats}"
+    );
+    assert!(stat_of(&stats, "model_loads") >= 5, "{stats}");
+}
+
+// ------------------------------------------------------------ hot reload
+
+/// A live server picks up a republished checkpoint (new generation in
+/// meta.toml) on the next admission: the served bytes match a server
+/// freshly bound to the republished directory, and the per-model
+/// generation in /stats moves.
+#[test]
+fn hot_reload_picks_up_republished_checkpoint() {
+    let (root, ckpt1) = train_checkpoint("reload", 8, 11);
+    let prompt = "the quick ";
+
+    // watch the *parent*: that is what a deployment points serve at
+    let (port, http_port, h) = start_server(
+        &[("live", root.as_path())],
+        RegistryOpts { reload_poll_ms: 0, ..RegistryOpts::default() },
+    );
+    let out_old =
+        client::generate_once_for("127.0.0.1", port, Some("live"), prompt, 12, 0.0)
+            .unwrap()
+            .0;
+    assert!(!out_old.is_empty());
+    assert_eq!(model_generation(http_port, "live"), 1);
+
+    // republish: resume the run, train further, save into the same parent
+    let mut tr = Trainer::new(native_cfg(11)).unwrap();
+    tr.restore(&ckpt1).unwrap();
+    tr.train(6).unwrap();
+    let ckpt2 = tr.save_checkpoint_to(&root).unwrap();
+    assert_ne!(ckpt1, ckpt2, "republish should land at a new step dir");
+
+    // next admission serves the new weights — no restart
+    let out_new =
+        client::generate_once_for("127.0.0.1", port, Some("live"), prompt, 12, 0.0)
+            .unwrap()
+            .0;
+    assert_eq!(model_generation(http_port, "live"), 2);
+
+    // reference: a fresh server bound after the republish
+    let (port2, _, h2) = start_server(
+        &[("default", root.as_path())],
+        RegistryOpts::default(),
+    );
+    let ref_new = client::generate_once("127.0.0.1", port2, prompt, 12, 0.0)
+        .unwrap()
+        .0;
+    stop(port2, h2);
+    assert_eq!(
+        out_new, ref_new,
+        "hot reload served different bytes than a fresh bind"
+    );
+
+    let stats = stop(port, h);
+    assert!(stat_of(&stats, "model_reloads") >= 1, "{stats}");
+}

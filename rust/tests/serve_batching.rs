@@ -2,7 +2,9 @@
 //! completion, batching never changes outputs) and tokenizer round-trip
 //! properties.
 
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::time::Duration;
 
 use chon::data::corpus::{Corpus, CorpusConfig};
@@ -94,6 +96,7 @@ fn concurrent_clients_get_their_own_completion() {
                 temp: 0.0,
                 session: None,
                 reply: tx,
+                cancel: Arc::new(AtomicBool::new(false)),
             })
             .unwrap();
         receivers.push(rx);

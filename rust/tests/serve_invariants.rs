@@ -13,10 +13,10 @@
 //! * data-stream checkpointing: a resumed training run's per-step losses
 //!   are bit-identical to an uninterrupted run's.
 
-use std::io::{Read, Write};
-use std::net::TcpStream;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -27,11 +27,14 @@ use chon::runtime::native::model::init_params;
 use chon::runtime::native::model_cfg;
 use chon::runtime::native::recipe::recipe;
 use chon::serve::{
-    client, protocol, Engine, GenRequest, RequestBatcher, ServeOpts, Server,
-    SessionStore, StoreOpts, TokenEvent,
+    client, protocol, Engine, GenRequest, ModelRegistry, RegistryOpts,
+    RequestBatcher, ServeOpts, Server, SessionStore, StoreOpts, TokenEvent,
 };
 use chon::util::json::Json;
 use chon::util::prng::Rng;
+
+mod common;
+use common::http_request;
 
 fn native_cfg(model: &str, recipe: &str, seed: u64) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -56,9 +59,13 @@ fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
     tr.save_checkpoint_to(&root).unwrap()
 }
 
-fn start_server(ckpt: &Path, opts_in: ServeOpts) -> (Server, u16) {
-    let engine = Engine::load(ckpt).expect("engine load");
-    let server = Server::bind(engine, &opts_in).expect("bind");
+fn start_server(
+    ckpt: &Path,
+    (opts_in, reg_opts): (ServeOpts, RegistryOpts),
+) -> (Server, u16) {
+    let mut registry = ModelRegistry::new(reg_opts);
+    registry.register("default", ckpt).expect("register checkpoint");
+    let server = Server::bind(registry, &opts_in).expect("bind");
     let port = server.port();
     (server, port)
 }
@@ -67,16 +74,24 @@ fn run_server(server: Server) -> JoinHandle<String> {
     std::thread::spawn(move || server.run().expect("server run"))
 }
 
-fn serve_opts(max_batch: usize, max_resident: usize) -> ServeOpts {
-    ServeOpts {
-        port: 0,
-        http_port: Some(0),
-        max_batch,
-        max_wait_us: 5000,
-        workers: 10,
-        max_resident_sessions: max_resident,
-        ..ServeOpts::default()
-    }
+fn serve_opts(max_batch: usize, max_resident: usize) -> (ServeOpts, RegistryOpts) {
+    (
+        ServeOpts {
+            port: 0,
+            http_port: Some(0),
+            workers: 10,
+            ..ServeOpts::default()
+        },
+        RegistryOpts {
+            max_batch,
+            max_wait_us: 5000,
+            store_opts: StoreOpts {
+                max_resident_sessions: max_resident,
+                ..StoreOpts::default()
+            },
+            ..RegistryOpts::default()
+        },
+    )
 }
 
 // ---------------------------------------------------------------- prefill
@@ -178,6 +193,7 @@ fn session_turn(b: &RequestBatcher, sid: &str, prompt: &str, n: usize) -> Vec<u8
             temp: 0.0,
             session: Some(sid.into()),
             reply: tx,
+            cancel: Arc::new(AtomicBool::new(false)),
         })
         .unwrap();
     drain(&rx)
@@ -320,57 +336,6 @@ fn server_with_max_resident_1_matches_unlimited() {
 }
 
 // ------------------------------------------------------------------- http
-
-/// Minimal HTTP client: one request, Connection: close, returns
-/// (status, body-after-dechunking-if-chunked).
-fn http_request(port: u16, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
-    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
-    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
-         Content-Length: {}\r\n\r\n{body}",
-        body.len()
-    );
-    s.write_all(req.as_bytes()).unwrap();
-    let mut raw = Vec::new();
-    s.read_to_end(&mut raw).unwrap();
-    let head_end = raw
-        .windows(4)
-        .position(|w| w == b"\r\n\r\n")
-        .expect("no header terminator");
-    let head = String::from_utf8_lossy(&raw[..head_end]).to_string();
-    let status: u16 = head
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .expect("status code");
-    let chunked = head.to_ascii_lowercase().contains("transfer-encoding: chunked");
-    let mut body_bytes = raw[head_end + 4..].to_vec();
-    if chunked {
-        body_bytes = dechunk(&body_bytes);
-    }
-    (status, body_bytes)
-}
-
-fn dechunk(mut b: &[u8]) -> Vec<u8> {
-    let mut out = Vec::new();
-    loop {
-        let Some(eol) = b.windows(2).position(|w| w == b"\r\n") else {
-            panic!("chunk size line missing");
-        };
-        let size = usize::from_str_radix(
-            std::str::from_utf8(&b[..eol]).unwrap().trim(),
-            16,
-        )
-        .unwrap();
-        b = &b[eol + 2..];
-        if size == 0 {
-            return out;
-        }
-        out.extend_from_slice(&b[..size]);
-        b = &b[size + 2..]; // skip chunk + CRLF
-    }
-}
 
 /// The HTTP front end streams the same tokens as the line protocol (same
 /// batcher, same engine), and /stats + /shutdown work.

@@ -107,12 +107,33 @@ fn random_valid_gen_lines_roundtrip() {
             rng.uniform() * protocol::MAX_TEMP
         };
         let prompt = random_prompt(&mut rng, 80);
+        // a third of the lines carry a MODEL routing prefix (model names
+        // share the session-id grammar)
+        let want_model = if rng.below(3) == 0 {
+            Some(random_sid(&mut rng))
+        } else {
+            None
+        };
         let (line, want_session) = if rng.below(2) == 0 {
-            (protocol::format_gen(max_tokens, temp, &prompt), None)
+            (
+                protocol::format_gen_for(
+                    want_model.as_deref(),
+                    max_tokens,
+                    temp,
+                    &prompt,
+                ),
+                None,
+            )
         } else {
             let sid = random_sid(&mut rng);
             (
-                protocol::format_sgen(&sid, max_tokens, temp, &prompt),
+                protocol::format_sgen_for(
+                    want_model.as_deref(),
+                    &sid,
+                    max_tokens,
+                    temp,
+                    &prompt,
+                ),
                 Some(sid),
             )
         };
@@ -122,11 +143,13 @@ fn random_valid_gen_lines_roundtrip() {
                 temp: t,
                 prompt: p,
                 session,
+                model,
             }) => {
                 assert_eq!(mt, max_tokens);
                 assert_eq!(t.to_bits(), temp.to_bits(), "temp drifted");
                 assert_eq!(p, prompt);
                 assert_eq!(session, want_session);
+                assert_eq!(model, want_model);
             }
             other => panic!("valid line {line:?} parsed to {other:?}"),
         }

@@ -8,7 +8,7 @@ use std::thread::JoinHandle;
 
 use chon::config::RunConfig;
 use chon::coordinator::Trainer;
-use chon::serve::{client, Engine, ServeOpts, Server};
+use chon::serve::{client, Engine, ModelRegistry, RegistryOpts, ServeOpts, Server};
 
 fn native_cfg(model: &str, recipe: &str) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -34,16 +34,19 @@ fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
 }
 
 fn start_server(ckpt: &PathBuf, max_batch: usize) -> (u16, JoinHandle<String>) {
-    let engine = Engine::load(ckpt).expect("engine load");
-    let opts = ServeOpts {
-        port: 0,             // ephemeral
-        http_port: Some(0),  // ephemeral
+    let mut registry = ModelRegistry::new(RegistryOpts {
         max_batch,
         max_wait_us: 3000,
+        ..RegistryOpts::default()
+    });
+    registry.register("default", ckpt).expect("register checkpoint");
+    let opts = ServeOpts {
+        port: 0,            // ephemeral
+        http_port: Some(0), // ephemeral
         workers: 8,
         ..ServeOpts::default()
     };
-    let server = Server::bind(engine, &opts).expect("bind");
+    let server = Server::bind(registry, &opts).expect("bind");
     let port = server.port();
     let h = std::thread::spawn(move || server.run().expect("server run"));
     (port, h)
