@@ -996,7 +996,7 @@ fn perf() -> Result<()> {
                         max_tokens: 8,
                         temp: 0.0,
                         session: None,
-                        reply: tx,
+                        reply: chon::serve::ReplySink::channel(tx),
                         cancel: Arc::new(AtomicBool::new(false)),
                     },
                 )
@@ -1005,6 +1005,7 @@ fn perf() -> Result<()> {
                     match rx.recv().expect("reply") {
                         chon::serve::TokenEvent::Done { .. } => break,
                         chon::serve::TokenEvent::Error(e) => panic!("{e}"),
+                        chon::serve::TokenEvent::Retry(e) => panic!("retry: {e}"),
                         chon::serve::TokenEvent::Token(_) => {}
                     }
                 }
@@ -1056,6 +1057,99 @@ fn perf() -> Result<()> {
                 format!("{:.2}", t.median_ms),
                 format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
             ]);
+        }
+
+        // the epoll reactor front end under connection load: (a) full
+        // round-trip generation latency with ~1k idle connections parked
+        // on the event loop (idle conns must cost ~nothing), (b) eight
+        // generations pipelined on one keep-alive HTTP connection
+        {
+            use std::io::{Read as _, Write as _};
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let mut reg = chon::serve::ModelRegistry::new(
+                chon::serve::RegistryOpts::default(),
+            );
+            reg.register_engine("default", eng)?;
+            let opts = chon::serve::ServeOpts {
+                port: 0,
+                http_port: Some(0),
+                ..chon::serve::ServeOpts::default()
+            };
+            let server = chon::serve::Server::bind(reg, &opts)?;
+            let port = server.port();
+            let http_port = server.http_port().expect("http enabled");
+            let h = std::thread::spawn(move || server.run());
+
+            // (a) park an idle fleet, then time full TCP round trips
+            let limit =
+                chon::serve::reactor::raise_nofile_limit(4096).unwrap_or(1024);
+            let n = ((limit.saturating_sub(256) / 2) as usize).min(1000);
+            let fleet = chon::serve::client::IdleFleet::open("127.0.0.1", port, n)?;
+            let t = time_fn(2, 20, || {
+                chon::serve::client::generate_once(
+                    "127.0.0.1",
+                    port,
+                    "the quick ",
+                    8,
+                    0.0,
+                )
+                .expect("generate");
+            });
+            record("serve_idle_1k_conns", t.median_ms);
+            table.row(&[
+                format!("serve gen ({n} idle conns)"),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", 8.0 / t.median_ms * 1e3),
+            ]);
+            drop(fleet);
+
+            // (b) 8 generations pipelined on one keep-alive connection
+            let body = r#"{"prompt": "the quick ", "max_tokens": 8}"#;
+            let req = format!(
+                "POST /generate HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let t = time_fn(1, 10, || {
+                let mut s = std::net::TcpStream::connect(("127.0.0.1", http_port))
+                    .expect("connect");
+                s.set_nodelay(true).ok();
+                for _ in 0..8 {
+                    s.write_all(req.as_bytes()).expect("write");
+                }
+                // each chunked response ends with the 0-length terminator
+                let mut buf = Vec::new();
+                let mut tmp = [0u8; 4096];
+                loop {
+                    let done = buf
+                        .windows(7)
+                        .filter(|&w| w == b"\r\n0\r\n\r\n")
+                        .count();
+                    if done >= 8 {
+                        break;
+                    }
+                    let k = s.read(&mut tmp).expect("read");
+                    assert!(k > 0, "server closed keep-alive connection");
+                    buf.extend_from_slice(&tmp[..k]);
+                }
+            });
+            record("serve_keepalive_pipeline8", t.median_ms);
+            table.row(&[
+                "serve keep-alive pipeline (8 gens)".into(),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", 64.0 / t.median_ms * 1e3),
+            ]);
+
+            chon::serve::client::send_shutdown("127.0.0.1", port)?;
+            let _ = h.join();
         }
     }
     table.print();

@@ -63,6 +63,12 @@ pub struct RunConfig {
     pub max_resident_models: usize,
     /// serve: min ms between checkpoint generation probes per model
     pub reload_poll_ms: u64,
+    /// serve: drop connections idle longer than this (0 = never)
+    pub idle_timeout_ms: u64,
+    /// serve: cap on concurrently open connections (0 = unlimited)
+    pub max_conns: usize,
+    /// client: park this many idle connections during a load run
+    pub idle_conns: usize,
     /// client: registry model names from `--model NAME[,NAME...]` (load
     /// mode sprays across them; one-shot uses the first)
     pub client_models: Vec<String>,
@@ -112,6 +118,9 @@ impl Default for RunConfig {
             serve_models: Vec::new(),
             max_resident_models: 0,
             reload_poll_ms: 500,
+            idle_timeout_ms: 60_000,
+            max_conns: 0,
+            idle_conns: 0,
             client_models: Vec::new(),
             session: None,
             requests: 0,
@@ -254,6 +263,9 @@ impl RunConfig {
                     self.max_resident_models = next()?.parse()?
                 }
                 "reload-poll-ms" => self.reload_poll_ms = next()?.parse()?,
+                "idle-timeout-ms" => self.idle_timeout_ms = next()?.parse()?,
+                "max-conns" => self.max_conns = next()?.parse()?,
+                "idle-conns" => self.idle_conns = next()?.parse()?,
                 "session" => self.session = Some(next()?),
                 "requests" => self.requests = next()?.parse()?,
                 "concurrency" => self.concurrency = next()?.parse()?,
@@ -404,6 +416,26 @@ mod tests {
         assert!(c.apply_args(&["--model".into(), "alpha,".into()]).is_err());
         assert!(c.apply_args(&["--model".into(), "a,,b".into()]).is_err());
         assert!(c.apply_args(&["--model".into(), "bad/name=/x".into()]).is_err());
+    }
+
+    #[test]
+    fn reactor_flags_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.idle_timeout_ms, 60_000);
+        assert_eq!(c.max_conns, 0);
+        assert_eq!(c.idle_conns, 0);
+        c.apply_args(&[
+            "--idle-timeout-ms".into(),
+            "5000".into(),
+            "--max-conns".into(),
+            "2048".into(),
+            "--idle-conns".into(),
+            "1000".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.idle_timeout_ms, 5000);
+        assert_eq!(c.max_conns, 2048);
+        assert_eq!(c.idle_conns, 1000);
     }
 
     #[test]

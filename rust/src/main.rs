@@ -66,6 +66,9 @@ SERVE/CLIENT FLAGS:
                     (default 500; a republished checkpoint hot-reloads)
   --host H          (default 127.0.0.1)   --port P       (default 7411; 0=any)
   --http-port P     HTTP front end (default 7412; 0=any; off=disabled)
+  --idle-timeout-ms MS  drop connections idle this long (default 60000;
+                    0=never; the epoll reactor holds 10k+ idle conns free)
+  --max-conns N     cap on open connections (default 0 = unlimited)
   --max-batch N     (default 8)           --max-wait-us U (default 2000)
   --max-resident-sessions N  idle named sessions kept in RAM (0=unlimited)
   --max-kv-tokens N          resident idle KV positions cap (0=unlimited)
@@ -73,6 +76,8 @@ SERVE/CLIENT FLAGS:
   --requests N      client load mode (sprays across --model names,
                     per-model latency percentiles)
   --concurrency C   (default 4)
+  --idle-conns N    park N idle connections during the load run and verify
+                    they all survive (connection-scaling smoke)
   --max-tokens N    (default 32)          --temp T       (default 0 = greedy)
   --prompt TEXT     --session ID          (continue a named session, SGEN)
   --shutdown        (ask the server to drain + stop)
@@ -288,6 +293,7 @@ fn main() -> Result<()> {
                 },
                 max_resident_models: cfg.max_resident_models,
                 reload_poll_ms: cfg.reload_poll_ms,
+                load_delay_ms: 0,
             };
             let mut registry = ModelRegistry::new(reg_opts);
             for (name, dir) in &entries {
@@ -298,9 +304,8 @@ fn main() -> Result<()> {
                 host: cfg.host.clone(),
                 port: cfg.port,
                 http_port: cfg.http_port,
-                // pool floor of 8: a worker is pinned per live connection,
-                // so 1-2 core boxes must still take concurrent clients
-                workers: cfg.threads.clamp(8, 32),
+                idle_timeout_ms: cfg.idle_timeout_ms,
+                max_conns: cfg.max_conns,
             };
             let server = Server::bind(registry, &opts)?;
             println!("listening on {}:{}", opts.host, server.port());
@@ -353,18 +358,23 @@ fn main() -> Result<()> {
                     temp: cfg.temp,
                     prompt: cfg.prompt.clone(),
                     models: cfg.client_models.clone(),
+                    idle_conns: cfg.idle_conns,
                 };
                 let report = client::run_load(&opts)?;
                 client::print_report(&opts, &report);
                 if report.requests_ok() == 0
                     || report.failures > 0
                     || report.empty_responses > 0
+                    || report.idle_alive < report.idle_opened
                 {
                     bail!(
-                        "load run unhealthy: {} ok, {} empty, {} failed threads",
+                        "load run unhealthy: {} ok, {} empty, {} failed \
+                         threads, {}/{} idle conns alive",
                         report.requests_ok(),
                         report.empty_responses,
-                        report.failures
+                        report.failures,
+                        report.idle_alive,
+                        report.idle_opened
                     );
                 }
             }

@@ -33,6 +33,46 @@ use crate::serve::protocol::MAX_SESSION_TOKENS;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 
+/// Receives streamed generation events. The blocking front ends hand
+/// each request its own mpsc channel; the epoll reactor shares one
+/// mailbox object across every connection (the sink carries the
+/// connection/generation ids internally). `Err(())` from `send` means
+/// the receiver is gone — the engine loop cuts the generation short,
+/// exactly as it does for a hung-up channel.
+pub trait EventSink: Send + Sync {
+    fn send(&self, ev: TokenEvent) -> Result<(), ()>;
+}
+
+/// How a generation's events travel back to whoever submitted it.
+#[derive(Clone)]
+pub struct ReplySink(SinkImpl);
+
+#[derive(Clone)]
+enum SinkImpl {
+    Channel(Sender<TokenEvent>),
+    Shared(Arc<dyn EventSink>),
+}
+
+impl ReplySink {
+    /// One dedicated channel per request (blocking front ends, tests).
+    pub fn channel(tx: Sender<TokenEvent>) -> ReplySink {
+        ReplySink(SinkImpl::Channel(tx))
+    }
+
+    /// A shared sink that multiplexes many generations (the reactor's
+    /// mailbox): the sink itself knows which generation it belongs to.
+    pub fn shared(sink: Arc<dyn EventSink>) -> ReplySink {
+        ReplySink(SinkImpl::Shared(sink))
+    }
+
+    pub fn send(&self, ev: TokenEvent) -> Result<(), ()> {
+        match &self.0 {
+            SinkImpl::Channel(tx) => tx.send(ev).map_err(|_| ()),
+            SinkImpl::Shared(s) => s.send(ev),
+        }
+    }
+}
+
 /// One queued generation request.
 pub struct GenRequest {
     pub prompt: String,
@@ -42,7 +82,7 @@ pub struct GenRequest {
     /// (None = ephemeral, state dropped when the generation finishes)
     pub session: Option<String>,
     /// streamed token pieces + terminal event go back through here
-    pub reply: Sender<TokenEvent>,
+    pub reply: ReplySink,
     /// set by the submitting connection when the client gave up (reply
     /// timeout or a failed write back to the socket). A queued request
     /// whose flag is set is *dropped* before admission instead of
@@ -66,6 +106,11 @@ pub enum TokenEvent {
         gen_ms: f64,
     },
     Error(String),
+    /// server-initiated retryable rejection: the request was queued but
+    /// its model went away before admission (LRU unload, reload race,
+    /// shutdown drain). The request never ran, so resubmitting is always
+    /// safe — wire contract is `ERR retry: ...` on TCP and HTTP 503.
+    Retry(String),
 }
 
 /// Lock-free serve counters (read by STATS and `GET /stats`).
@@ -98,6 +143,10 @@ pub struct ServeStats {
     /// queued requests dropped before admission because the client had
     /// already given up (see `GenRequest::cancel`)
     pub cancelled: AtomicU64,
+    /// queued requests completed with `TokenEvent::Retry` because their
+    /// model was unloaded / reloaded / drained before admission — they
+    /// never ran and are safe to resubmit
+    pub retry_rejects: AtomicU64,
 }
 
 impl ServeStats {
@@ -117,7 +166,7 @@ impl ServeStats {
              mean_batch={:.3} max_batch={} prefill_steps={} \
              prefill_batched_steps={} prefill_tokens={} evictions={} \
              reloads={} resident_sessions={} spilled_sessions={} \
-             resident_kv_tokens={} cancelled={}",
+             resident_kv_tokens={} cancelled={} retry_rejects={}",
             g(&self.requests),
             g(&self.tokens),
             g(&self.decode_steps),
@@ -133,6 +182,7 @@ impl ServeStats {
             g(&self.spilled_sessions),
             g(&self.resident_kv_tokens),
             g(&self.cancelled),
+            g(&self.retry_rejects),
         )
     }
 
@@ -155,6 +205,7 @@ impl ServeStats {
             ("spilled_sessions".into(), n(&self.spilled_sessions)),
             ("resident_kv_tokens".into(), n(&self.resident_kv_tokens)),
             ("cancelled".into(), n(&self.cancelled)),
+            ("retry_rejects".into(), n(&self.retry_rejects)),
         ])
     }
 
@@ -185,6 +236,7 @@ impl ServeStats {
             add(&m.spilled_sessions, &s.spilled_sessions);
             add(&m.resident_kv_tokens, &s.resident_kv_tokens);
             add(&m.cancelled, &s.cancelled);
+            add(&m.retry_rejects, &s.retry_rejects);
         }
         m
     }
@@ -577,7 +629,7 @@ mod tests {
                 max_tokens,
                 temp: 0.0,
                 session: session.map(|s| s.to_string()),
-                reply: tx,
+                reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
             },
             rx,
@@ -591,6 +643,7 @@ mod tests {
                 TokenEvent::Token(p) => bytes.extend(p),
                 TokenEvent::Done { n_tokens, .. } => return (bytes, n_tokens),
                 TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+                TokenEvent::Retry(e) => panic!("unexpected retry: {e}"),
             }
         }
     }

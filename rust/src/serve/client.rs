@@ -7,11 +7,15 @@
 //! `--model NAME` routes to a registry model; load mode accepts several
 //! names (`--model a,b`) and sprays requests across them round-robin,
 //! reporting latency percentiles per model on top of the aggregate.
+//! `--idle-conns N` additionally parks N idle connections on the server
+//! for the whole run (the connection-scaling mode): with the epoll
+//! reactor they must all survive a concurrent load run untouched, which
+//! the report verifies with a PING round-trip per parked connection.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -29,6 +33,9 @@ pub struct ClientOpts {
     pub prompt: String,
     /// registry model names to spray across (empty = the server default)
     pub models: Vec<String>,
+    /// park this many idle connections for the duration of the load run
+    /// (0 = none): exercises the server's connection scaling
+    pub idle_conns: usize,
 }
 
 impl Default for ClientOpts {
@@ -42,16 +49,72 @@ impl Default for ClientOpts {
             temp: 0.0,
             prompt: "the ".into(),
             models: Vec::new(),
+            idle_conns: 0,
         }
     }
 }
 
+/// Dead-socket detection is the server's job now: the reactor closes a
+/// connection it gives up on, which surfaces here as EOF mid-read. No
+/// client-side read timeout — the old 200 ms-granularity timeout loop
+/// existed to paper over the thread-per-connection server's busy-poll.
 fn connect(host: &str, port: u16) -> Result<TcpStream> {
     let addr = format!("{host}:{port}");
     let s = TcpStream::connect(&addr).with_context(|| format!("connecting {addr}"))?;
     s.set_nodelay(true).ok();
-    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
     Ok(s)
+}
+
+/// A fleet of parked idle connections (the connection-scaling mode).
+/// The server must keep every one of them open at zero cost while other
+/// connections run generations.
+pub struct IdleFleet {
+    conns: Vec<TcpStream>,
+}
+
+impl IdleFleet {
+    /// Open `n` connections and leave them idle.
+    pub fn open(host: &str, port: u16, n: usize) -> Result<IdleFleet> {
+        let mut conns = Vec::with_capacity(n);
+        for i in 0..n {
+            conns.push(
+                connect(host, port).with_context(|| format!("idle conn {i}"))?,
+            );
+        }
+        Ok(IdleFleet { conns })
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    /// PING every parked connection; returns how many answered PONG
+    /// (i.e. survived being idle — were not evicted or leaked).
+    pub fn check_alive(&mut self) -> usize {
+        let mut alive = 0;
+        for s in &mut self.conns {
+            if ping(s).is_ok() {
+                alive += 1;
+            }
+        }
+        alive
+    }
+}
+
+/// One PING/PONG round-trip on an open connection.
+pub fn ping(stream: &mut TcpStream) -> Result<()> {
+    stream.write_all(b"PING\n")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim_end_matches(['\r', '\n']) != "PONG" {
+        bail!("unexpected PING response {line:?}");
+    }
+    Ok(())
 }
 
 /// Run one GEN on an open connection; returns (text, n_tokens, latency_ms).
@@ -233,6 +296,10 @@ pub struct LoadReport {
     pub failures: usize,
     pub empty_responses: usize,
     pub wall_s: f64,
+    /// idle connections parked for the run (connection-scaling mode)
+    pub idle_opened: usize,
+    /// how many of them still answered PING after the run
+    pub idle_alive: usize,
 }
 
 /// p-th percentile of an ascending-sorted latency list.
@@ -264,6 +331,11 @@ pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
         bail!("load mode needs --requests > 0");
     }
     let c = opts.concurrency.clamp(1, opts.requests);
+    let mut fleet = if opts.idle_conns > 0 {
+        Some(IdleFleet::open(&opts.host, opts.port, opts.idle_conns)?)
+    } else {
+        None
+    };
     let t0 = Instant::now();
     // (tokens, latency_ms, model index or usize::MAX for default)
     let mut results: Vec<Result<Vec<(usize, f64, usize)>>> = Vec::new();
@@ -304,6 +376,10 @@ pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
     });
 
     let mut report = LoadReport { wall_s: t0.elapsed().as_secs_f64(), ..Default::default() };
+    if let Some(fleet) = fleet.as_mut() {
+        report.idle_opened = fleet.len();
+        report.idle_alive = fleet.check_alive();
+    }
     for r in results {
         match r {
             Ok(list) => {
@@ -367,6 +443,12 @@ pub fn print_report(opts: &ClientOpts, report: &LoadReport) {
                 percentile_of(lats, 0.99),
             );
         }
+    }
+    if report.idle_opened > 0 {
+        println!(
+            "idle connections: {}/{} still alive after the run",
+            report.idle_alive, report.idle_opened
+        );
     }
     match fetch_stats(&opts.host, opts.port) {
         Ok(stats) => println!("server stats: {stats}"),

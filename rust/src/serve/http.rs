@@ -16,7 +16,6 @@
 //!   (the `POST /generate` token stream)
 
 use std::io::Write;
-use std::net::TcpStream;
 
 /// Total cap on the request line + headers.
 pub const MAX_HEAD_BYTES: usize = 8 * 1024;
@@ -214,9 +213,12 @@ fn status_reason(status: u16) -> &'static str {
 }
 
 /// Write a complete fixed-length response. `head_only` (HEAD requests)
-/// sends the headers with the real Content-Length but no body.
-pub fn write_response(
-    stream: &mut TcpStream,
+/// sends the headers with the real Content-Length but no body. Generic
+/// over the sink: the threaded front end wrote straight to a
+/// `TcpStream`; the epoll reactor renders into a connection's
+/// in-memory out-buffer and lets readiness events drain it.
+pub fn write_response<W: Write>(
+    stream: &mut W,
     status: u16,
     content_type: &str,
     body: &[u8],
@@ -237,8 +239,8 @@ pub fn write_response(
 }
 
 /// Start a chunked streaming response (the `POST /generate` token feed).
-pub fn write_chunked_head(
-    stream: &mut TcpStream,
+pub fn write_chunked_head<W: Write>(
+    stream: &mut W,
     status: u16,
     content_type: &str,
 ) -> std::io::Result<()> {
@@ -254,7 +256,7 @@ pub fn write_chunked_head(
 
 /// Emit one chunk (empty input is skipped — a zero-size chunk would
 /// terminate the stream).
-pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+pub fn write_chunk<W: Write>(stream: &mut W, data: &[u8]) -> std::io::Result<()> {
     if data.is_empty() {
         return Ok(());
     }
@@ -265,7 +267,7 @@ pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
 }
 
 /// Terminate a chunked response.
-pub fn finish_chunks(stream: &mut TcpStream) -> std::io::Result<()> {
+pub fn finish_chunks<W: Write>(stream: &mut W) -> std::io::Result<()> {
     stream.write_all(b"0\r\n\r\n")?;
     stream.flush()
 }

@@ -22,10 +22,15 @@
 //!   (GEN/SGEN/`MODEL <name>` routing/...).
 //! * `http` — the hand-rolled HTTP/1.1 layer (`POST /generate` chunked
 //!   streaming with a `"model"` key, `GET /stats`, `POST /shutdown`).
-//! * `server` — `std::net` listeners + worker-thread pool + graceful
-//!   shutdown (`chon serve`).
+//! * `reactor` — thin epoll/eventfd/timerfd-free wrappers over raw
+//!   syscalls: `Poller`, `WakeFd`, a coarse timer wheel, and the
+//!   RLIMIT_NOFILE raiser the connection-scaling paths need.
+//! * `server` — the single-threaded epoll reactor front end: every
+//!   socket non-blocking under one event loop, incremental line/HTTP
+//!   parsing, keep-alive pipelining, idle eviction off the timer wheel,
+//!   graceful shutdown (`chon serve`).
 //! * `client` — protocol client / load generator with per-model latency
-//!   percentiles (`chon client`).
+//!   percentiles and an idle-connection scaling mode (`chon client`).
 
 pub mod batcher;
 pub mod client;
@@ -33,10 +38,11 @@ pub mod engine;
 pub mod http;
 pub mod pages;
 pub mod protocol;
+pub mod reactor;
 pub mod registry;
 pub mod server;
 
-pub use batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
+pub use batcher::{EventSink, GenRequest, ReplySink, RequestBatcher, ServeStats, TokenEvent};
 pub use client::{ClientOpts, LoadReport};
 pub use engine::{Engine, Session};
 pub use pages::{KvPages, SessionStore, StoreOpts, PAGE_TOKENS};

@@ -20,6 +20,10 @@
 //! STATS <k>=<v> ...              statistics snapshot
 //! PONG | BYE                     ping / shutdown acks
 //! ERR <message>                  request-level failure
+//! ERR retry: <reason>            retryable server-side rejection: the
+//!                                request never ran (model unloaded /
+//!                                reloading / server draining) and can
+//!                                be resubmitted verbatim (HTTP: 503)
 //! ```
 //!
 //! Prompt and token text travel escaped so the protocol stays strictly
@@ -40,6 +44,14 @@ pub const MAX_TEMP: f32 = 10.0;
 pub const MAX_SESSION_TOKENS: usize = 8192;
 /// Length cap of a named-session id.
 pub const MAX_SESSION_ID_LEN: usize = 64;
+
+/// Marker prefixed to retryable `ERR` lines (`TokenEvent::Retry`): the
+/// request never ran, so a client or router may resubmit it verbatim.
+/// The HTTP front end maps the same events to status 503. Reasons are
+/// plain printable ASCII, so the marker survives line-escaping intact.
+pub const RETRY_PREFIX: &str = "retry: ";
+/// Canonical retry reason used when a server drain rejects queued work.
+pub const RETRY_SHUTDOWN: &str = "server shutting down";
 
 /// Named-session ids double as spill file names, so the charset is
 /// restricted: 1..=64 of [A-Za-z0-9._-], not starting with '.' or '-'.

@@ -10,42 +10,49 @@
 //!   request; past `--max-resident-models`, the least-recently-used
 //!   resident model is unloaded (its engine thread drained and dropped,
 //!   its idle sessions parked in their store — resident or spilled — so
-//!   a later reload continues every conversation bit-exactly).
+//!   a later reload continues every conversation bit-exactly). Requests
+//!   still queued on the victim complete with `TokenEvent::Retry`
+//!   (counted in `ServeStats::retry_rejects`) — never silently dropped.
 //! * **Hot reload** — every `Trainer` save stamps `meta.toml` with a
 //!   monotonic `generation`; the registry re-probes a model's checkpoint
-//!   directory (at most every `reload_poll_ms`) on admission, and when
-//!   the resolved directory or its generation changes it loads the new
-//!   weights *first*, then drains the old engine. In-flight generations
-//!   finish on the old weights; everything not yet admitted (including
-//!   requests still queued at swap time) runs on the new ones. That is
-//!   the train→serve continuous-deployment loop: `chon train` republishes
-//!   into the watched directory and a live server picks it up without a
-//!   restart.
+//!   directory (at most every `reload_poll_ms`) on admission *and* from
+//!   the server's timer tick ([`ModelRegistry::poll_reloads`]), so an
+//!   idle model notices a republish without traffic. When the resolved
+//!   directory or its generation changes the lifecycle thread loads the
+//!   new weights *first*, then drains the old engine. In-flight
+//!   generations finish on the old weights; everything not yet admitted
+//!   (including requests queued during the swap) runs on the new ones.
 //! * **Per-model + aggregate stats** — each model keeps a cumulative
 //!   `ServeStats` that survives unload/reload; `STATS` (line) stays the
 //!   aggregate one-liner, `GET /stats` adds a per-model breakdown with
 //!   residency, step and generation.
 //!
-//! Concurrency model: one mutex around the whole slot table. Submits are
-//! cheap under it (a channel send); loads, unloads and hot reloads run
-//! under it too, which serializes them against all routing — simple and
-//! correct, at the cost of head-of-line blocking while an engine swaps.
-//! Known limitation (see ROADMAP): requests still queued on a model when
-//! it is chosen as an LRU *unload* victim are rejected with a retryable
-//! error (a hot reload re-submits them instead, since the replacement
-//! engine exists).
+//! Concurrency model (the head-of-line-blocking fix): routing reads an
+//! immutable snapshot — an `Arc<Vec<Arc<ModelEntry>>>` swapped wholesale
+//! on registration — so `submit` never takes a registry-wide lock. Each
+//! entry carries a tiny [`Route`] mutex held only for a channel send or
+//! a queue push. Every slow operation (`Engine::load`, engine drains,
+//! LRU eviction) runs on one background *lifecycle* thread that owns
+//! every `RequestBatcher` handle; a submit that finds its model cold
+//! queues on the entry (`Route::Loading`) and nudges the lifecycle
+//! thread, so a multi-second model load never stalls requests routed to
+//! models that are already resident.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
 use crate::serve::engine::Engine;
 use crate::serve::pages::{SessionStore, StoreOpts};
-use crate::serve::protocol::valid_model_name;
+use crate::serve::protocol::{valid_model_name, RETRY_SHUTDOWN};
 use crate::util::json::Json;
 use crate::{info, warn};
 
@@ -68,6 +75,10 @@ pub struct RegistryOpts {
     /// min milliseconds between checkpoint-dir generation probes per
     /// model (0 = probe on every admission; tests use this)
     pub reload_poll_ms: u64,
+    /// test hook: artificial delay injected before every `Engine::load`
+    /// on the lifecycle thread, to pin that a slow load never stalls
+    /// routing to resident models (0 = off)
+    pub load_delay_ms: u64,
 }
 
 impl Default for RegistryOpts {
@@ -79,6 +90,7 @@ impl Default for RegistryOpts {
             store_opts: StoreOpts::default(),
             max_resident_models: 0,
             reload_poll_ms: 500,
+            load_delay_ms: 0,
         }
     }
 }
@@ -114,53 +126,86 @@ struct LoadedFrom {
     generation: u64,
 }
 
-struct Slot {
+/// Where requests for a model go right now. Held under a per-entry
+/// mutex for a channel send / queue push only — never across IO.
+enum Route {
+    /// engine thread is up: hand the request straight to its queue
+    Resident(Sender<GenRequest>),
+    /// the lifecycle thread is loading (or swapping) this model's
+    /// engine; requests park here and are flushed to the new engine the
+    /// moment it is up — so they run on the *new* weights
+    Loading(Vec<GenRequest>),
+    /// last load failed; fast-fail submits until the retry window opens
+    Failed { until: Instant, error: String },
+    /// registered but not resident (never loaded, or LRU-unloaded)
+    Cold,
+}
+
+/// Probe/identity state, mutated only behind its own small mutex.
+struct MetaState {
+    /// identity of the currently/last loaded engine (None = never)
+    loaded: Option<LoadedFrom>,
+    /// checkpoint metadata snapshot (refreshed on every load/probe)
+    meta: CheckpointMeta,
+    /// earliest next generation probe (hot-reload poll throttle)
+    next_probe: Instant,
+}
+
+/// One registered model in the immutable routing snapshot. The entry
+/// itself never moves or reorders; all mutable state is interior.
+struct ModelEntry {
     name: String,
     /// the watched checkpoint path as registered (dir or parent of
     /// dirs); None for preloaded in-memory engines, which therefore can
     /// be neither reloaded nor unloaded (pinned resident)
     dir: Option<PathBuf>,
-    batcher: Option<RequestBatcher>,
-    /// session store parked across unloads so conversations survive
-    parked: Option<SessionStore>,
     /// cumulative counters, surviving unload/reload
-    stats: std::sync::Arc<ServeStats>,
-    /// identity of the currently/last loaded engine
-    loaded: Option<LoadedFrom>,
-    /// checkpoint metadata snapshot (refreshed on every load/probe)
-    meta: CheckpointMeta,
+    stats: Arc<ServeStats>,
+    route: Mutex<Route>,
     /// LRU stamp (registry clock value of the last routed request)
-    last_used: u64,
-    /// earliest next generation probe (hot-reload poll throttle; doubles
-    /// as the retry throttle after a failed load when `load_failed`)
-    next_probe: Instant,
-    /// the last load attempt failed — gates the cheap fast-fail below so
-    /// a broken checkpoint is re-read at most once per poll window
-    /// instead of on every submit (each retry holds the registry lock)
-    load_failed: bool,
+    last_used: AtomicU64,
+    meta: Mutex<MetaState>,
 }
 
-impl Slot {
-    fn resident(&self) -> bool {
-        self.batcher.is_some()
-    }
+type Snapshot = Arc<Vec<Arc<ModelEntry>>>;
+
+/// State shared between the routing front and the lifecycle thread.
+struct Shared {
+    /// the Arc-swapped routing snapshot: readers clone the Arc under a
+    /// momentary read lock; only registration writes (build-aside+swap)
+    snapshot: RwLock<Snapshot>,
+    opts: RegistryOpts,
+    clock: AtomicU64,
+    model_loads: AtomicU64,
+    model_unloads: AtomicU64,
+    model_reloads: AtomicU64,
+    stopped: AtomicBool,
 }
 
-struct Inner {
-    slots: Vec<Slot>,
-    clock: u64,
-    model_loads: u64,
-    model_unloads: u64,
-    model_reloads: u64,
-    stopped: bool,
+/// Lifecycle-thread work items. Every `Route::Loading` transition sends
+/// exactly one `Load`/`Reload`, and its handler always resolves the
+/// route back out of `Loading` — the invariant that keeps queued
+/// requests from being stranded.
+enum Cmd {
+    /// load a cold/failed model and flush its queued requests
+    Load(usize),
+    /// swap in a republished checkpoint (entry already set to Loading)
+    Reload(usize),
+    /// adopt ownership of a preregistered engine's batcher handle
+    Adopt(usize, RequestBatcher),
+    /// probe every resident watched model for a republish
+    Tick,
+    /// drain every engine and exit
+    Stop,
 }
 
 /// The registry itself. Built (and populated via `register*`) before the
 /// server starts, then shared behind an `Arc` by every connection
 /// handler.
 pub struct ModelRegistry {
-    inner: Mutex<Inner>,
-    opts: RegistryOpts,
+    shared: Arc<Shared>,
+    lifecycle_tx: Sender<Cmd>,
+    lifecycle: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// Resolve a watched path to its concrete checkpoint dir + metadata.
@@ -170,47 +215,48 @@ fn probe(dir: &Path) -> Result<(PathBuf, CheckpointMeta)> {
     Ok((resolved, meta))
 }
 
+/// Reject one parked request retryably and count it.
+fn reject_retry(stats: &ServeStats, req: &GenRequest, why: &str) {
+    stats.retry_rejects.fetch_add(1, Ordering::Relaxed);
+    let _ = req.reply.send(TokenEvent::Retry(why.to_string()));
+}
+
 impl ModelRegistry {
     pub fn new(opts: RegistryOpts) -> ModelRegistry {
-        ModelRegistry {
-            inner: Mutex::new(Inner {
-                slots: Vec::new(),
-                clock: 0,
-                model_loads: 0,
-                model_unloads: 0,
-                model_reloads: 0,
-                stopped: false,
-            }),
+        let shared = Arc::new(Shared {
+            snapshot: RwLock::new(Arc::new(Vec::new())),
             opts,
+            clock: AtomicU64::new(0),
+            model_loads: AtomicU64::new(0),
+            model_unloads: AtomicU64::new(0),
+            model_reloads: AtomicU64::new(0),
+            stopped: AtomicBool::new(false),
+        });
+        let (tx, rx) = channel();
+        let shared2 = shared.clone();
+        let handle = std::thread::spawn(move || lifecycle_loop(shared2, rx));
+        ModelRegistry {
+            shared,
+            lifecycle_tx: tx,
+            lifecycle: Mutex::new(Some(handle)),
         }
     }
 
-    /// Per-model session-store options: a shared user spill dir gets a
-    /// per-model subdirectory so spill files never collide across models.
-    fn store_opts_for(&self, name: &str) -> StoreOpts {
-        let mut so = self.opts.store_opts.clone();
-        if let Some(dir) = so.spill_dir.take() {
-            so.spill_dir = Some(dir.join(name));
-        }
-        so
+    fn snapshot(&self) -> Snapshot {
+        self.shared.snapshot.read().expect("registry poisoned").clone()
     }
 
-    /// The one place an engine thread is spawned from `RegistryOpts` —
-    /// initial load, LRU reload and hot reload must all batch identically.
-    fn spawn_batcher(
-        &self,
-        engine: Engine,
-        store: SessionStore,
-        stats: std::sync::Arc<ServeStats>,
-    ) -> RequestBatcher {
-        RequestBatcher::spawn_with(
-            engine,
-            self.opts.max_batch,
-            Duration::from_micros(self.opts.max_wait_us),
-            self.opts.seed,
-            store,
-            stats,
-        )
+    /// Append one entry to the routing snapshot (build aside + swap).
+    fn push_entry(&self, entry: ModelEntry) -> Result<usize> {
+        let mut g = self.shared.snapshot.write().expect("registry poisoned");
+        if g.iter().any(|e| e.name == entry.name) {
+            bail!("model {:?} registered twice", entry.name);
+        }
+        let mut next: Vec<Arc<ModelEntry>> = g.as_ref().clone();
+        next.push(Arc::new(entry));
+        let idx = next.len() - 1;
+        *g = Arc::new(next);
+        Ok(idx)
     }
 
     /// Register a named checkpoint directory. Engines stay lazily loaded
@@ -228,27 +274,23 @@ impl ModelRegistry {
                  not starting with '.' or '-')"
             );
         }
-        let inner = self.inner.get_mut().expect("registry poisoned");
-        if inner.slots.iter().any(|s| s.name == name) {
-            bail!("model {name:?} registered twice");
-        }
         let (resolved, meta) = probe(dir)
             .with_context(|| format!("registering model {name:?} from {}", dir.display()))?;
         drop(Engine::load(&resolved).with_context(|| {
             format!("validating model {name:?} from {}", resolved.display())
         })?);
-        inner.slots.push(Slot {
+        self.push_entry(ModelEntry {
             name: name.to_string(),
             dir: Some(dir.to_path_buf()),
-            batcher: None,
-            parked: None,
-            stats: std::sync::Arc::new(ServeStats::default()),
-            loaded: None,
-            meta,
-            last_used: 0,
-            next_probe: Instant::now(),
-            load_failed: false,
-        });
+            stats: Arc::new(ServeStats::default()),
+            route: Mutex::new(Route::Cold),
+            last_used: AtomicU64::new(0),
+            meta: Mutex::new(MetaState {
+                loaded: None,
+                meta,
+                next_probe: Instant::now(),
+            }),
+        })?;
         Ok(())
     }
 
@@ -259,284 +301,203 @@ impl ModelRegistry {
         if !valid_model_name(name) {
             bail!("bad model name {name:?}");
         }
-        let store = SessionStore::new(self.store_opts_for(name))?;
-        let inner = self.inner.get_mut().expect("registry poisoned");
-        if inner.slots.iter().any(|s| s.name == name) {
-            bail!("model {name:?} registered twice");
-        }
+        let store = SessionStore::new(store_opts_for(&self.shared.opts, name))?;
         let meta = engine.meta.clone();
-        let stats = std::sync::Arc::new(ServeStats::default());
-        let batcher = self.spawn_batcher(engine, store, stats.clone());
-        inner.model_loads += 1;
-        inner.slots.push(Slot {
+        let stats = Arc::new(ServeStats::default());
+        let batcher = spawn_batcher(&self.shared.opts, engine, store, stats.clone());
+        let idx = self.push_entry(ModelEntry {
             name: name.to_string(),
             dir: None,
-            batcher: Some(batcher),
-            parked: None,
             stats,
-            loaded: Some(LoadedFrom {
-                resolved: PathBuf::new(),
-                generation: meta.generation,
+            route: Mutex::new(Route::Resident(batcher.submitter())),
+            last_used: AtomicU64::new(0),
+            meta: Mutex::new(MetaState {
+                loaded: Some(LoadedFrom {
+                    resolved: PathBuf::new(),
+                    generation: meta.generation,
+                }),
+                meta,
+                next_probe: Instant::now(),
             }),
-            meta,
-            last_used: 0,
-            next_probe: Instant::now(),
-            load_failed: false,
-        });
+        })?;
+        self.shared.model_loads.fetch_add(1, Ordering::Relaxed);
+        // the lifecycle thread owns every engine handle (registration
+        // happens before serving, so the channel cannot be closed yet)
+        self.lifecycle_tx
+            .send(Cmd::Adopt(idx, batcher))
+            .map_err(|_| anyhow!("registry lifecycle thread is gone"))?;
         Ok(())
     }
 
     /// Names in registration order (index 0 is the default model).
     pub fn model_names(&self) -> Vec<String> {
-        let g = self.inner.lock().expect("registry poisoned");
-        g.slots.iter().map(|s| s.name.clone()).collect()
+        self.snapshot().iter().map(|e| e.name.clone()).collect()
     }
 
     /// The generation of a model's currently-loaded engine (None when
     /// unknown name or never loaded). Tests and `/stats` use this.
     pub fn loaded_generation(&self, name: &str) -> Option<u64> {
-        let g = self.inner.lock().expect("registry poisoned");
-        g.slots
+        self.snapshot()
             .iter()
-            .find(|s| s.name == name)
-            .and_then(|s| s.loaded.as_ref())
-            .map(|l| l.generation)
+            .find(|e| e.name == name)
+            .and_then(|e| {
+                e.meta
+                    .lock()
+                    .expect("registry poisoned")
+                    .loaded
+                    .as_ref()
+                    .map(|l| l.generation)
+            })
+    }
+
+    /// Nudge the lifecycle thread to probe every resident watched model
+    /// for a republished checkpoint. The server calls this from its
+    /// timer tick and on `GET /stats`, so generation bumps surface even
+    /// with zero traffic. Never blocks.
+    pub fn poll_reloads(&self) {
+        let _ = self.lifecycle_tx.send(Cmd::Tick);
     }
 
     /// Route one request: resolve the model name (None = default = first
-    /// registered), hot-reload if its checkpoint was republished, load it
-    /// if not resident (evicting the LRU model past the budget), and hand
-    /// the request to its engine thread.
+    /// registered), detect a republished checkpoint, and hand the
+    /// request to its engine thread — or queue it on the entry while the
+    /// lifecycle thread brings the engine up. Never loads an engine and
+    /// never blocks on another model's lifecycle: the whole path is a
+    /// snapshot read plus one per-entry mutex held for a send/push.
     pub fn submit(
         &self,
         model: Option<&str>,
         req: GenRequest,
     ) -> std::result::Result<(), SubmitError> {
-        let mut g = self.inner.lock().expect("registry poisoned");
-        if g.stopped {
+        if self.shared.stopped.load(Ordering::SeqCst) {
             return Err(SubmitError::Stopped);
         }
+        let snap = self.snapshot();
         let idx = match model {
-            Some(name) => g
-                .slots
+            Some(name) => snap
                 .iter()
-                .position(|s| s.name == name)
+                .position(|e| e.name == name)
                 .ok_or_else(|| SubmitError::UnknownModel(name.to_string()))?,
             None => {
-                if g.slots.is_empty() {
+                if snap.is_empty() {
                     return Err(SubmitError::UnknownModel("<default>".into()));
                 }
                 0
             }
         };
-        g.clock += 1;
-        let clock = g.clock;
-        g.slots[idx].last_used = clock;
-        self.maybe_hot_reload(&mut g, idx);
-        self.ensure_resident(&mut g, idx).map_err(SubmitError::Load)?;
-        let batcher = g.slots[idx].batcher.as_ref().expect("resident after load");
-        batcher
-            .submitter()
-            .send(req)
-            .map_err(|_| SubmitError::Stopped)
-    }
+        let entry = &snap[idx];
+        let stamp = self.shared.clock.fetch_add(1, Ordering::SeqCst) + 1;
+        entry.last_used.store(stamp, Ordering::SeqCst);
+        self.maybe_trigger_reload(idx, entry);
 
-    /// Probe the slot's checkpoint dir (throttled) and swap engines when
-    /// its generation moved. Load-the-new-first ordering: a failed load
-    /// keeps serving the old weights (warned, retried at the next probe
-    /// window) instead of leaving the model down.
-    fn maybe_hot_reload(&self, g: &mut Inner, idx: usize) {
-        let now = Instant::now();
-        let poll = Duration::from_millis(self.opts.reload_poll_ms);
-        {
-            let slot = &g.slots[idx];
-            if slot.batcher.is_none() || slot.dir.is_none() || now < slot.next_probe {
-                return;
+        let mut route = entry.route.lock().expect("registry poisoned");
+        match &mut *route {
+            Route::Resident(tx) => {
+                tx.send(req).map_err(|_| SubmitError::Stopped)?;
+            }
+            Route::Loading(q) => q.push(req),
+            Route::Failed { until, error } if Instant::now() < *until => {
+                let (name, error) = (entry.name.clone(), error.clone());
+                return Err(SubmitError::Load(anyhow!(
+                    "model {name:?}: {error} (retrying after the probe window)"
+                )));
+            }
+            state => {
+                // Cold, or Failed past its window: queue and ask the
+                // lifecycle thread to bring the engine up
+                *state = Route::Loading(vec![req]);
+                drop(route);
+                if self.lifecycle_tx.send(Cmd::Load(idx)).is_err() {
+                    // lifecycle thread already gone (shutdown race):
+                    // resolve everything queued retryably, including our
+                    // own request — its terminal event has been sent
+                    let mut route =
+                        entry.route.lock().expect("registry poisoned");
+                    if let Route::Loading(q) =
+                        std::mem::replace(&mut *route, Route::Cold)
+                    {
+                        for r in q {
+                            reject_retry(&entry.stats, &r, RETRY_SHUTDOWN);
+                        }
+                    }
+                }
             }
         }
-        g.slots[idx].next_probe = now + poll;
-        let dir = g.slots[idx].dir.clone().expect("checked above");
-        let (resolved, meta) = match probe(&dir) {
+        Ok(())
+    }
+
+    /// Throttled checkpoint probe on the submit path: when the watched
+    /// dir resolves to a new generation, flip the route to `Loading` (so
+    /// this and subsequent requests run on the NEW weights) and hand the
+    /// actual engine swap to the lifecycle thread.
+    fn maybe_trigger_reload(&self, idx: usize, entry: &Arc<ModelEntry>) {
+        if entry.dir.is_none() {
+            return;
+        }
+        let now = Instant::now();
+        let poll = Duration::from_millis(self.shared.opts.reload_poll_ms);
+        let loaded = {
+            let mut ms = entry.meta.lock().expect("registry poisoned");
+            if now < ms.next_probe {
+                return;
+            }
+            ms.next_probe = now + poll;
+            match &ms.loaded {
+                Some(l) => l.clone(),
+                None => return, // cold: the load path reads the newest anyway
+            }
+        };
+        let dir = entry.dir.as_ref().expect("checked above");
+        let (resolved, meta) = match probe(dir) {
             Ok(p) => p,
             Err(e) => {
                 warn!(
                     "model {}: checkpoint probe failed ({e:#}); serving \
                      current weights",
-                    g.slots[idx].name
+                    entry.name
                 );
                 return;
             }
         };
-        let current = LoadedFrom { resolved: resolved.clone(), generation: meta.generation };
-        if g.slots[idx].loaded.as_ref() == Some(&current) {
+        if (LoadedFrom { resolved, generation: meta.generation }) == loaded {
             return;
         }
-        let engine = match Engine::load(&resolved) {
-            Ok(e) => e,
-            Err(e) => {
-                warn!(
-                    "model {}: republished checkpoint {} failed to load \
-                     ({e:#}); serving previous generation",
-                    g.slots[idx].name,
-                    resolved.display()
-                );
-                return;
-            }
-        };
-        // drain the old engine (in-flight generations finish on the old
-        // weights), then move its session store under the new one
-        let name = g.slots[idx].name.clone();
-        let (store, leftovers) = g.slots[idx]
-            .batcher
-            .take()
-            .expect("resident checked above")
-            .shutdown();
-        let store = match store {
-            Some(s) => s,
-            None => match SessionStore::new(self.store_opts_for(&name)) {
-                Ok(s) => s,
-                Err(e) => {
-                    warn!("model {name}: session store lost in reload: {e:#}");
-                    g.slots[idx].loaded = None;
-                    for req in leftovers {
-                        let _ = req
-                            .reply
-                            .send(TokenEvent::Error("model reload failed".into()));
+        let mut route = entry.route.lock().expect("registry poisoned");
+        if let Route::Resident(tx) = &*route {
+            let old = tx.clone();
+            *route = Route::Loading(Vec::new());
+            drop(route);
+            if self.lifecycle_tx.send(Cmd::Reload(idx)).is_err() {
+                // shutdown race: put the old engine back
+                let mut route = entry.route.lock().expect("registry poisoned");
+                if let Route::Loading(q) =
+                    std::mem::replace(&mut *route, Route::Resident(old.clone()))
+                {
+                    for r in q {
+                        let _ = old.send(r);
                     }
-                    return;
                 }
-            },
-        };
-        let batcher =
-            self.spawn_batcher(engine, store, g.slots[idx].stats.clone());
-        // queued-but-unadmitted requests continue on the new weights
-        for req in leftovers {
-            let _ = batcher.submitter().send(req);
-        }
-        info!(
-            "model {name}: hot-reloaded {} (generation {} -> {}, step {})",
-            resolved.display(),
-            g.slots[idx].loaded.as_ref().map(|l| l.generation).unwrap_or(0),
-            meta.generation,
-            meta.step
-        );
-        g.slots[idx].batcher = Some(batcher);
-        g.slots[idx].loaded = Some(current);
-        g.slots[idx].meta = meta;
-        g.model_reloads += 1;
-    }
-
-    /// Load the slot's engine if it is not resident, unloading LRU
-    /// victims while over the `max_resident_models` budget. Ordering and
-    /// failure behavior: the new engine is loaded *before* any victim is
-    /// evicted (a broken checkpoint never churns a healthy model out of
-    /// residency), and a failed load arms a fast-fail window of
-    /// `reload_poll_ms` so retries hit the disk at most once per window
-    /// instead of on every submit (each attempt holds the registry lock).
-    fn ensure_resident(&self, g: &mut Inner, idx: usize) -> Result<()> {
-        if g.slots[idx].resident() {
-            return Ok(());
-        }
-        let name = g.slots[idx].name.clone();
-        if g.slots[idx].load_failed && Instant::now() < g.slots[idx].next_probe {
-            bail!(
-                "model {name:?} failed to load recently; retrying after \
-                 the probe window"
-            );
-        }
-        let dir = g.slots[idx]
-            .dir
-            .clone()
-            .expect("non-resident slots have a dir");
-        let loaded = probe(&dir).and_then(|(resolved, meta)| {
-            let engine = Engine::load(&resolved)?;
-            Ok((resolved, meta, engine))
-        });
-        let (resolved, meta, engine) = match loaded {
-            Ok(l) => l,
-            Err(e) => {
-                g.slots[idx].load_failed = true;
-                g.slots[idx].next_probe = Instant::now()
-                    + Duration::from_millis(self.opts.reload_poll_ms);
-                return Err(e)
-                    .with_context(|| format!("loading model {name:?}"));
-            }
-        };
-        if self.opts.max_resident_models > 0 {
-            while g.slots.iter().filter(|s| s.resident()).count()
-                >= self.opts.max_resident_models
-            {
-                // victim: least-recently-used resident model that *can*
-                // be reloaded later (has a backing dir) and is not the
-                // one we are loading
-                let victim = g
-                    .slots
-                    .iter()
-                    .enumerate()
-                    .filter(|(i, s)| *i != idx && s.resident() && s.dir.is_some())
-                    .min_by_key(|(_, s)| s.last_used)
-                    .map(|(i, _)| i);
-                let Some(v) = victim else {
-                    break; // everything resident is pinned; stay over budget
-                };
-                self.unload(g, v);
             }
         }
-        let store = match g.slots[idx].parked.take() {
-            Some(s) => s,
-            None => SessionStore::new(self.store_opts_for(&name))?,
-        };
-        let batcher =
-            self.spawn_batcher(engine, store, g.slots[idx].stats.clone());
-        info!(
-            "model {name}: loaded {} (generation {}, step {})",
-            resolved.display(),
-            meta.generation,
-            meta.step
-        );
-        g.slots[idx].batcher = Some(batcher);
-        g.slots[idx].loaded =
-            Some(LoadedFrom { resolved, generation: meta.generation });
-        g.slots[idx].meta = meta;
-        g.slots[idx].next_probe =
-            Instant::now() + Duration::from_millis(self.opts.reload_poll_ms);
-        g.slots[idx].load_failed = false;
-        g.model_loads += 1;
-        Ok(())
+        // Loading/Failed/Cold: a lifecycle pass is already pending (or
+        // the next load will read the republished checkpoint itself)
     }
 
-    /// Drain and drop one resident engine, parking its session store.
-    fn unload(&self, g: &mut Inner, idx: usize) {
-        let Some(batcher) = g.slots[idx].batcher.take() else {
-            return;
-        };
-        let (store, leftovers) = batcher.shutdown();
-        g.slots[idx].parked = store;
-        for req in leftovers {
-            // no replacement engine exists to take these (unlike a hot
-            // reload); reject retryably rather than resurrect the model
-            // we were asked to evict
-            let _ = req.reply.send(TokenEvent::Error(format!(
-                "model {} was unloaded under --max-resident-models; retry",
-                g.slots[idx].name
-            )));
-        }
-        info!("model {}: unloaded (LRU)", g.slots[idx].name);
-        g.model_unloads += 1;
-    }
-
-    /// Drain every engine and reject everything still queued. Idempotent.
+    /// Drain every engine and reject everything still queued (with the
+    /// retryable contract — nothing is silently dropped). Idempotent.
     pub fn shutdown(&self) {
-        let mut g = self.inner.lock().expect("registry poisoned");
-        g.stopped = true;
-        for i in 0..g.slots.len() {
-            if let Some(batcher) = g.slots[i].batcher.take() {
-                let (store, leftovers) = batcher.shutdown();
-                g.slots[i].parked = store;
-                for req in leftovers {
-                    let _ = req
-                        .reply
-                        .send(TokenEvent::Error("server shutting down".into()));
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        let _ = self.lifecycle_tx.send(Cmd::Stop);
+        if let Some(h) = self.lifecycle.lock().expect("registry poisoned").take() {
+            let _ = h.join();
+        }
+        // post-join sweep: anything that raced into a Loading queue
+        // after the lifecycle thread drained it gets resolved here
+        for entry in self.snapshot().iter() {
+            let mut route = entry.route.lock().expect("registry poisoned");
+            if let Route::Loading(q) = std::mem::replace(&mut *route, Route::Cold) {
+                for r in q {
+                    reject_retry(&entry.stats, &r, RETRY_SHUTDOWN);
                 }
             }
         }
@@ -545,17 +506,17 @@ impl ModelRegistry {
     /// The one-line aggregate STATS payload (all models summed, plus the
     /// registry's own lifecycle counters).
     pub fn stats_line(&self) -> String {
-        let g = self.inner.lock().expect("registry poisoned");
-        let merged = ServeStats::merged(g.slots.iter().map(|s| s.stats.as_ref()));
+        let snap = self.snapshot();
+        let merged = ServeStats::merged(snap.iter().map(|e| e.stats.as_ref()));
         format!(
             "{} models={} resident_models={} model_loads={} \
              model_unloads={} model_reloads={}",
             merged.snapshot_line(),
-            g.slots.len(),
-            g.slots.iter().filter(|s| s.resident()).count(),
-            g.model_loads,
-            g.model_unloads,
-            g.model_reloads,
+            snap.len(),
+            snap.iter().filter(|e| e.resident()).count(),
+            self.shared.model_loads.load(Ordering::Relaxed),
+            self.shared.model_unloads.load(Ordering::Relaxed),
+            self.shared.model_reloads.load(Ordering::Relaxed),
         )
     }
 
@@ -564,43 +525,434 @@ impl ModelRegistry {
     /// registry counters (`models` is the registered count) and a
     /// per-model breakdown under `"per_model"`.
     pub fn stats_json(&self) -> Json {
-        let g = self.inner.lock().expect("registry poisoned");
-        let merged = ServeStats::merged(g.slots.iter().map(|s| s.stats.as_ref()));
+        let snap = self.snapshot();
+        let merged = ServeStats::merged(snap.iter().map(|e| e.stats.as_ref()));
         let Json::Obj(mut fields) = merged.snapshot_json() else {
             unreachable!("snapshot_json is an object");
         };
         let n = |v: u64| Json::Num(v as f64);
-        fields.push(("models".into(), n(g.slots.len() as u64)));
+        fields.push(("models".into(), n(snap.len() as u64)));
         fields.push((
             "resident_models".into(),
-            n(g.slots.iter().filter(|s| s.resident()).count() as u64),
+            n(snap.iter().filter(|e| e.resident()).count() as u64),
         ));
-        fields.push(("model_loads".into(), n(g.model_loads)));
-        fields.push(("model_unloads".into(), n(g.model_unloads)));
-        fields.push(("model_reloads".into(), n(g.model_reloads)));
-        let per_model: Vec<(String, Json)> = g
-            .slots
+        fields.push((
+            "model_loads".into(),
+            n(self.shared.model_loads.load(Ordering::Relaxed)),
+        ));
+        fields.push((
+            "model_unloads".into(),
+            n(self.shared.model_unloads.load(Ordering::Relaxed)),
+        ));
+        fields.push((
+            "model_reloads".into(),
+            n(self.shared.model_reloads.load(Ordering::Relaxed)),
+        ));
+        let per_model: Vec<(String, Json)> = snap
             .iter()
-            .map(|s| {
-                let Json::Obj(mut mf) = s.stats.snapshot_json() else {
+            .map(|e| {
+                let Json::Obj(mut mf) = e.stats.snapshot_json() else {
                     unreachable!()
                 };
-                mf.push(("resident".into(), Json::Bool(s.resident())));
-                mf.push(("model".into(), Json::Str(s.meta.model.clone())));
-                mf.push(("recipe".into(), Json::Str(s.meta.recipe.clone())));
-                mf.push(("step".into(), n(s.meta.step as u64)));
+                let ms = e.meta.lock().expect("registry poisoned");
+                mf.push(("resident".into(), Json::Bool(e.resident())));
+                mf.push(("model".into(), Json::Str(ms.meta.model.clone())));
+                mf.push(("recipe".into(), Json::Str(ms.meta.recipe.clone())));
+                mf.push(("step".into(), n(ms.meta.step as u64)));
                 mf.push((
                     "generation".into(),
-                    n(s.loaded
+                    n(ms.loaded
                         .as_ref()
                         .map(|l| l.generation)
-                        .unwrap_or(s.meta.generation)),
+                        .unwrap_or(ms.meta.generation)),
                 ));
-                (s.name.clone(), Json::Obj(mf))
+                (e.name.clone(), Json::Obj(mf))
             })
             .collect();
         fields.push(("per_model".into(), Json::Obj(per_model)));
         Json::Obj(fields)
+    }
+}
+
+impl ModelEntry {
+    fn resident(&self) -> bool {
+        matches!(
+            *self.route.lock().expect("registry poisoned"),
+            Route::Resident(_)
+        )
+    }
+}
+
+/// Per-model session-store options: a shared user spill dir gets a
+/// per-model subdirectory so spill files never collide across models.
+fn store_opts_for(opts: &RegistryOpts, name: &str) -> StoreOpts {
+    let mut so = opts.store_opts.clone();
+    if let Some(dir) = so.spill_dir.take() {
+        so.spill_dir = Some(dir.join(name));
+    }
+    so
+}
+
+/// The one place an engine thread is spawned from `RegistryOpts` —
+/// initial load, LRU reload and hot reload must all batch identically.
+fn spawn_batcher(
+    opts: &RegistryOpts,
+    engine: Engine,
+    store: SessionStore,
+    stats: Arc<ServeStats>,
+) -> RequestBatcher {
+    RequestBatcher::spawn_with(
+        engine,
+        opts.max_batch,
+        Duration::from_micros(opts.max_wait_us),
+        opts.seed,
+        store,
+        stats,
+    )
+}
+
+/// The lifecycle thread: single owner of every `RequestBatcher` handle
+/// and every parked `SessionStore`. All `Engine::load`s, drains, LRU
+/// evictions and hot reloads run here, strictly off the routing path.
+struct Lifecycle {
+    shared: Arc<Shared>,
+    /// entry index -> the resident engine's handle
+    batchers: HashMap<usize, RequestBatcher>,
+    /// entry index -> session store parked across an unload
+    parked: HashMap<usize, SessionStore>,
+}
+
+fn lifecycle_loop(shared: Arc<Shared>, rx: Receiver<Cmd>) {
+    let mut lc = Lifecycle {
+        shared,
+        batchers: HashMap::new(),
+        parked: HashMap::new(),
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Adopt(idx, batcher) => {
+                lc.batchers.insert(idx, batcher);
+            }
+            Cmd::Load(idx) => lc.load(idx),
+            Cmd::Reload(idx) => lc.reload(idx),
+            Cmd::Tick => lc.tick(),
+            Cmd::Stop => break,
+        }
+    }
+    lc.drain_all();
+}
+
+impl Lifecycle {
+    fn entry(&self, idx: usize) -> Arc<ModelEntry> {
+        self.shared.snapshot.read().expect("registry poisoned")[idx].clone()
+    }
+
+    fn load_delay(&self) {
+        let ms = self.shared.opts.load_delay_ms;
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+
+    /// Resolve a `Loading` route after a failed load: flush the queue to
+    /// `fallback` when an engine still exists (reload keeps serving the
+    /// old weights), otherwise fast-fail the queue and arm the window.
+    fn fail_loading(
+        &self,
+        entry: &ModelEntry,
+        fallback: Option<Sender<GenRequest>>,
+        error: String,
+    ) {
+        let until =
+            Instant::now() + Duration::from_millis(self.shared.opts.reload_poll_ms);
+        let mut route = entry.route.lock().expect("registry poisoned");
+        let next = match &fallback {
+            Some(tx) => Route::Resident(tx.clone()),
+            None => Route::Failed { until, error: error.clone() },
+        };
+        if let Route::Loading(q) = std::mem::replace(&mut *route, next) {
+            for r in q {
+                match &fallback {
+                    Some(tx) => {
+                        let _ = tx.send(r);
+                    }
+                    None => reject_retry(
+                        &entry.stats,
+                        &r,
+                        &format!("model failed to load: {error}"),
+                    ),
+                }
+            }
+        }
+    }
+
+    /// Bring a cold model's engine up and flush its queued requests.
+    fn load(&mut self, idx: usize) {
+        let entry = self.entry(idx);
+        let name = entry.name.clone();
+        let dir = match &entry.dir {
+            Some(d) => d.clone(),
+            None => return, // pinned engines are adopted, never loaded
+        };
+        self.load_delay();
+        let loaded = probe(&dir).and_then(|(resolved, meta)| {
+            let engine = Engine::load(&resolved)?;
+            Ok((resolved, meta, engine))
+        });
+        let (resolved, meta, engine) = match loaded {
+            Ok(l) => l,
+            Err(e) => {
+                warn!("model {name}: load failed: {e:#}");
+                self.fail_loading(&entry, None, format!("{e:#}"));
+                return;
+            }
+        };
+        self.evict_over_budget(idx);
+        let store = match self.parked.remove(&idx) {
+            Some(s) => s,
+            None => match SessionStore::new(store_opts_for(&self.shared.opts, &name)) {
+                Ok(s) => s,
+                Err(e) => {
+                    warn!("model {name}: session store failed: {e:#}");
+                    self.fail_loading(&entry, None, format!("{e:#}"));
+                    return;
+                }
+            },
+        };
+        let batcher =
+            spawn_batcher(&self.shared.opts, engine, store, entry.stats.clone());
+        info!(
+            "model {name}: loaded {} (generation {}, step {})",
+            resolved.display(),
+            meta.generation,
+            meta.step
+        );
+        self.install(idx, &entry, batcher, resolved, meta);
+        self.shared.model_loads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Swap a resident model onto a republished checkpoint. Load-the-
+    /// new-first ordering: a failed load keeps serving the old weights
+    /// (warned, retried at the next probe window) instead of leaving
+    /// the model down.
+    fn reload(&mut self, idx: usize) {
+        let entry = self.entry(idx);
+        let name = entry.name.clone();
+        let Some(old) = self.batchers.get(&idx).map(|b| b.submitter()) else {
+            // engine went away since the probe (evicted): plain load
+            self.load(idx);
+            return;
+        };
+        let dir = entry.dir.clone().expect("reloads require a watched dir");
+        self.load_delay();
+        let loaded = probe(&dir).and_then(|(resolved, meta)| {
+            let engine = Engine::load(&resolved)?;
+            Ok((resolved, meta, engine))
+        });
+        let (resolved, meta, engine) = match loaded {
+            Ok(l) => l,
+            Err(e) => {
+                warn!(
+                    "model {name}: republished checkpoint failed to load \
+                     ({e:#}); serving previous generation"
+                );
+                self.fail_loading(&entry, Some(old), format!("{e:#}"));
+                return;
+            }
+        };
+        // drain the old engine (in-flight generations finish on the old
+        // weights), then move its session store under the new one
+        let (store, leftovers) = self
+            .batchers
+            .remove(&idx)
+            .expect("submitter probed above")
+            .shutdown();
+        let store = match store {
+            Some(s) => s,
+            None => match SessionStore::new(store_opts_for(&self.shared.opts, &name)) {
+                Ok(s) => s,
+                Err(e) => {
+                    warn!("model {name}: session store lost in reload: {e:#}");
+                    for r in leftovers {
+                        reject_retry(&entry.stats, &r, "model reload failed");
+                    }
+                    self.fail_loading(&entry, None, format!("{e:#}"));
+                    return;
+                }
+            },
+        };
+        let batcher =
+            spawn_batcher(&self.shared.opts, engine, store, entry.stats.clone());
+        // queued-but-unadmitted requests continue on the new weights,
+        // ahead of anything that queued during the swap
+        for r in leftovers {
+            let _ = batcher.submitter().send(r);
+        }
+        let prev = {
+            let ms = entry.meta.lock().expect("registry poisoned");
+            ms.loaded.as_ref().map(|l| l.generation).unwrap_or(0)
+        };
+        info!(
+            "model {name}: hot-reloaded {} (generation {} -> {}, step {})",
+            resolved.display(),
+            prev,
+            meta.generation,
+            meta.step
+        );
+        self.install(idx, &entry, batcher, resolved, meta);
+        self.shared.model_reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish a freshly spawned engine: update identity, take ownership
+    /// of the handle, and flush everything queued while it came up.
+    fn install(
+        &mut self,
+        idx: usize,
+        entry: &ModelEntry,
+        batcher: RequestBatcher,
+        resolved: PathBuf,
+        meta: CheckpointMeta,
+    ) {
+        {
+            let mut ms = entry.meta.lock().expect("registry poisoned");
+            ms.loaded =
+                Some(LoadedFrom { resolved, generation: meta.generation });
+            ms.meta = meta;
+            ms.next_probe = Instant::now()
+                + Duration::from_millis(self.shared.opts.reload_poll_ms);
+        }
+        let tx = batcher.submitter();
+        self.batchers.insert(idx, batcher);
+        let mut route = entry.route.lock().expect("registry poisoned");
+        if let Route::Loading(q) = std::mem::replace(&mut *route, Route::Resident(tx.clone()))
+        {
+            for r in q {
+                let _ = tx.send(r);
+            }
+        }
+    }
+
+    /// Unload LRU victims while over the `max_resident_models` budget
+    /// (called after a successful load, so a broken checkpoint never
+    /// churns a healthy model out of residency).
+    fn evict_over_budget(&mut self, keep: usize) {
+        let budget = self.shared.opts.max_resident_models;
+        if budget == 0 {
+            return;
+        }
+        while self.batchers.len() >= budget {
+            let snap = self.shared.snapshot.read().expect("registry poisoned").clone();
+            // victim: least-recently-used resident model that *can* be
+            // reloaded later (has a backing dir), is not mid-lifecycle
+            // (route must read Resident), and is not the one loading
+            let victim = self
+                .batchers
+                .keys()
+                .copied()
+                .filter(|&i| i != keep)
+                .filter(|&i| snap[i].dir.is_some() && snap[i].resident())
+                .min_by_key(|&i| snap[i].last_used.load(Ordering::SeqCst));
+            let Some(v) = victim else {
+                break; // everything resident is pinned; stay over budget
+            };
+            self.unload(v, &snap[v]);
+        }
+    }
+
+    /// Drain and drop one resident engine, parking its session store.
+    /// Requests still queued complete with the retryable contract — no
+    /// replacement engine exists to take them (unlike a hot reload), and
+    /// resurrecting the model we were asked to evict would thrash.
+    fn unload(&mut self, idx: usize, entry: &ModelEntry) {
+        {
+            // flip the route first so racing submits queue on the entry
+            // (next Load cmd) instead of into the dying channel; anything
+            // already in the channel comes back in `leftovers` below
+            let mut route = entry.route.lock().expect("registry poisoned");
+            *route = Route::Cold;
+        }
+        let Some(batcher) = self.batchers.remove(&idx) else {
+            return;
+        };
+        let (store, leftovers) = batcher.shutdown();
+        if let Some(s) = store {
+            self.parked.insert(idx, s);
+        }
+        for r in leftovers {
+            reject_retry(
+                &entry.stats,
+                &r,
+                &format!(
+                    "model {} was unloaded under --max-resident-models",
+                    entry.name
+                ),
+            );
+        }
+        info!("model {}: unloaded (LRU)", entry.name);
+        self.shared.model_unloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Timer-driven republish probe over every resident watched model —
+    /// the piece that lets an *idle* model pick up a new generation.
+    fn tick(&mut self) {
+        let snap = self.shared.snapshot.read().expect("registry poisoned").clone();
+        let now = Instant::now();
+        let poll = Duration::from_millis(self.shared.opts.reload_poll_ms);
+        for (idx, entry) in snap.iter().enumerate() {
+            if entry.dir.is_none() || !self.batchers.contains_key(&idx) {
+                continue;
+            }
+            let loaded = {
+                let mut ms = entry.meta.lock().expect("registry poisoned");
+                if now < ms.next_probe {
+                    continue;
+                }
+                ms.next_probe = now + poll;
+                match &ms.loaded {
+                    Some(l) => l.clone(),
+                    None => continue,
+                }
+            };
+            let dir = entry.dir.as_ref().expect("checked above");
+            let (resolved, meta) = match probe(dir) {
+                Ok(p) => p,
+                Err(e) => {
+                    warn!(
+                        "model {}: checkpoint probe failed ({e:#}); serving \
+                         current weights",
+                        entry.name
+                    );
+                    continue;
+                }
+            };
+            if (LoadedFrom { resolved, generation: meta.generation }) == loaded {
+                continue;
+            }
+            // flip to Loading so requests queue for the new weights,
+            // then swap inline (we ARE the lifecycle thread)
+            {
+                let mut route = entry.route.lock().expect("registry poisoned");
+                match &*route {
+                    Route::Resident(_) => *route = Route::Loading(Vec::new()),
+                    _ => continue, // already mid-lifecycle
+                }
+            }
+            self.reload(idx);
+        }
+    }
+
+    /// Final drain: every queued request resolves retryably.
+    fn drain_all(&mut self) {
+        let snap = self.shared.snapshot.read().expect("registry poisoned").clone();
+        let idxs: Vec<usize> = self.batchers.keys().copied().collect();
+        for idx in idxs {
+            if let Some(batcher) = self.batchers.remove(&idx) {
+                let (_store, leftovers) = batcher.shutdown();
+                for r in leftovers {
+                    reject_retry(&snap[idx].stats, &r, RETRY_SHUTDOWN);
+                }
+            }
+        }
     }
 }
 
@@ -610,6 +962,7 @@ mod tests {
     use crate::data::tokenizer::Tokenizer;
     use crate::runtime::native::model::{init_params, model_cfg};
     use crate::runtime::native::recipe::recipe;
+    use crate::serve::batcher::ReplySink;
     use std::sync::atomic::AtomicBool;
     use std::sync::mpsc::channel;
     use std::sync::Arc;
@@ -634,7 +987,7 @@ mod tests {
                 max_tokens: 6,
                 temp: 0.0,
                 session: None,
-                reply: tx,
+                reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
             },
         )
@@ -645,6 +998,7 @@ mod tests {
                 TokenEvent::Token(p) => bytes.extend(p),
                 TokenEvent::Done { .. } => return bytes,
                 TokenEvent::Error(e) => panic!("unexpected error: {e}"),
+                TokenEvent::Retry(e) => panic!("unexpected retry: {e}"),
             }
         }
     }
@@ -669,7 +1023,7 @@ mod tests {
                     max_tokens: 1,
                     temp: 0.0,
                     session: None,
-                    reply: tx,
+                    reply: ReplySink::channel(tx),
                     cancel: Arc::new(AtomicBool::new(false)),
                 },
             )

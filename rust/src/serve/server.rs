@@ -1,43 +1,59 @@
-//! The network front ends: a `std::net` line-protocol listener, an
-//! optional HTTP/1.1 listener, a shared worker-thread pool for connection
-//! handling, and graceful shutdown.
+//! The network front end: a single-threaded epoll reactor that owns
+//! every socket, speaking both the line protocol and HTTP/1.1.
 //!
-//! Both front ends route through the same `ModelRegistry` (and therefore
-//! the same per-model request batchers, prefill batching, paged session
-//! caches, lazy load / LRU unload / hot reload and drain logic):
+//! One acceptor/reactor thread (the `run` caller) holds all sockets in
+//! non-blocking mode behind an epoll instance (`serve::reactor`). It
+//! parses both wire formats incrementally off readiness events — the
+//! `serve::http` parser already survives any read split, and the line
+//! protocol accumulates until `\n` — and hands complete generation
+//! requests to the per-model engine threads via the `ModelRegistry`.
+//! Engine threads stream `TokenEvent`s back through a shared mailbox
+//! (`ReplySink::shared`) and nudge the reactor with an eventfd, so the
+//! reactor never blocks on a generation and a connection never pins a
+//! thread. Consequences the threaded front end could not offer:
 //!
-//! * line protocol (`serve::protocol`): `GEN`/`SGEN` stream `TOK` lines
-//!   back as tokens are produced, so a slow consumer only delays itself;
-//!   a `MODEL <name>` prefix routes to a registered model (absent = the
-//!   default model).
-//! * HTTP (`serve::http`): `POST /generate` streams newline-delimited
-//!   JSON over chunked transfer encoding (optional `"model"` key routes
-//!   like the MODEL prefix); `GET /stats` returns the aggregate counters
-//!   plus a per-model breakdown as JSON; `POST /shutdown` drains and
-//!   stops.
+//! * **Connection scaling**: 10k+ idle connections cost one epoll
+//!   registration each and zero CPU (no 200 ms read-timeout busy-poll
+//!   loops; idle eviction rides the reactor's timer wheel).
+//! * **Keep-alive pipelining**: an HTTP connection runs any number of
+//!   generations back to back; requests that arrive while one is in
+//!   flight wait in the connection's input buffer (strictly sequential
+//!   per connection, so responses never interleave).
+//! * **No head-of-line blocking across models**: routing is a snapshot
+//!   read (`registry::submit`); engine loads run on the registry's
+//!   lifecycle thread, so a multi-second load of one model never stalls
+//!   the reactor or traffic to resident models.
 //!
-//! `SHUTDOWN` (line) or `POST /shutdown` (HTTP) stops accepting, lets
-//! in-flight generations finish, joins the pool and prints final stats.
+//! Wire behavior is byte-for-byte that of the threaded front end: the
+//! same request grammar, response lines, HTTP statuses and JSON bodies
+//! (`tests/serve_invariants.rs` pins several of them bitwise). The
+//! retryable rejection contract surfaces as `ERR retry: <reason>` on
+//! the line protocol and 503 on HTTP (`TokenEvent::Retry`).
 //!
-//! When a client gives up on a generation (60 s reply timeout, or its
-//! socket write fails), the handler flags the request as cancelled so a
-//! still-queued request is dropped instead of executed — an abandoned
+//! When a client gives up on a generation (its socket dies or the 60 s
+//! stall deadline passes), the handler flags the request as cancelled so
+//! a still-queued request is dropped instead of executed — an abandoned
 //! request can no longer advance a named session behind its client's
-//! back.
+//! back; a running one is cut short on the engine's next send.
 
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::collections::{HashMap, HashSet};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::info;
-use crate::serve::batcher::{GenRequest, TokenEvent};
+use crate::serve::batcher::{EventSink, GenRequest, ReplySink, TokenEvent};
 use crate::serve::http::{self, HttpRequest, Parsed};
-use crate::serve::protocol::{self, Request};
+use crate::serve::protocol::{self, Request, RETRY_PREFIX};
+use crate::serve::reactor::{
+    self, EpollEvent, Poller, TimerWheel, WakeFd, EPOLLERR, EPOLLHUP, EPOLLIN,
+    EPOLLOUT,
+};
 use crate::serve::registry::{ModelRegistry, SubmitError};
 use crate::util::json::Json;
 
@@ -51,8 +67,11 @@ pub struct ServeOpts {
     pub port: u16,
     /// HTTP front-end port (0 = ephemeral); None disables HTTP entirely
     pub http_port: Option<u16>,
-    /// connection-handler threads
-    pub workers: usize,
+    /// drop connections idle longer than this (0 = never)
+    pub idle_timeout_ms: u64,
+    /// cap on concurrently open connections (0 = unlimited); excess
+    /// accepts are closed immediately
+    pub max_conns: usize,
 }
 
 impl Default for ServeOpts {
@@ -61,13 +80,14 @@ impl Default for ServeOpts {
             host: "127.0.0.1".into(),
             port: 7411,
             http_port: Some(7412),
-            workers: 4,
+            idle_timeout_ms: 60_000,
+            max_conns: 0,
         }
     }
 }
 
-/// Which wire format a pooled connection speaks.
-#[derive(Clone, Copy, Debug)]
+/// Which wire format a connection speaks.
+#[derive(Clone, Copy, Debug, PartialEq)]
 enum ConnKind {
     Line,
     Http,
@@ -79,7 +99,8 @@ pub struct Server {
     http_listener: Option<TcpListener>,
     registry: Arc<ModelRegistry>,
     shutdown: Arc<AtomicBool>,
-    workers: usize,
+    idle_timeout_ms: u64,
+    max_conns: usize,
 }
 
 impl Server {
@@ -103,7 +124,8 @@ impl Server {
             http_listener,
             registry: Arc::new(registry),
             shutdown: Arc::new(AtomicBool::new(false)),
-            workers: opts.workers.max(1),
+            idle_timeout_ms: opts.idle_timeout_ms,
+            max_conns: opts.max_conns,
         })
     }
 
@@ -134,76 +156,25 @@ impl Server {
     /// Serve until a shutdown command (or the shutdown flag) arrives.
     /// Returns the final stats snapshot line.
     pub fn run(self) -> Result<String> {
-        self.listener.set_nonblocking(true)?;
-        if let Some(hl) = &self.http_listener {
-            hl.set_nonblocking(true)?;
-        }
-        let (conn_tx, conn_rx) = channel::<(TcpStream, ConnKind)>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-
-        let mut pool = Vec::with_capacity(self.workers);
-        for _ in 0..self.workers {
-            let rx = conn_rx.clone();
-            let registry = self.registry.clone();
-            let stop = self.shutdown.clone();
-            pool.push(std::thread::spawn(move || loop {
-                let stream = {
-                    let guard = rx.lock().expect("conn queue poisoned");
-                    guard.recv()
-                };
-                match stream {
-                    Ok((s, ConnKind::Line)) => handle_conn(s, &registry, &stop),
-                    Ok((s, ConnKind::Http)) => {
-                        handle_http_conn(s, &registry, &stop)
-                    }
-                    Err(_) => break, // accept loop gone: drain done
-                }
-            }));
-        }
-
+        // best-effort fd headroom for the 1k+-connection scaling paths;
+        // a refusal (container policy) just keeps the inherited limit
+        let fds = reactor::raise_nofile_limit(16 * 1024).unwrap_or(0);
         info!(
-            "serving {} model(s) on port {} (http {:?}, {} workers)",
+            "serving {} model(s) on port {} (http {:?}, epoll reactor, \
+             nofile {fds})",
             self.registry.model_names().len(),
             self.port(),
             self.http_port(),
-            self.workers
         );
-        while !self.shutdown.load(Ordering::SeqCst) {
-            let mut accepted = false;
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    accepted = true;
-                    let _ = conn_tx.send((stream, ConnKind::Line));
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-                Err(e) => {
-                    info!("accept error: {e}");
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            }
-            if let Some(hl) = &self.http_listener {
-                match hl.accept() {
-                    Ok((stream, _)) => {
-                        accepted = true;
-                        let _ = conn_tx.send((stream, ConnKind::Http));
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => {}
-                    Err(e) => {
-                        info!("http accept error: {e}");
-                        std::thread::sleep(Duration::from_millis(20));
-                    }
-                }
-            }
-            if !accepted {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-
-        // stop feeding the pool, let handlers finish, then drain engines
-        drop(conn_tx);
-        for h in pool {
-            let _ = h.join();
-        }
+        let mut reactor = Reactor::new(
+            self.listener,
+            self.http_listener,
+            self.registry.clone(),
+            self.shutdown.clone(),
+            self.idle_timeout_ms,
+            self.max_conns,
+        )?;
+        reactor.run()?;
         let line = self.registry.stats_line();
         self.registry.shutdown();
         info!("shutdown complete: {line}");
@@ -211,380 +182,847 @@ impl Server {
     }
 }
 
-/// Idle eviction: a pooled worker is pinned per live connection, so idle
-/// connections are dropped after this many 200 ms timeout ticks (~60 s).
-const IDLE_TICKS: u32 = 300;
+/// A generation with no event for this long is abandoned (matches the
+/// threaded front end's 60 s `recv_timeout`).
+const GEN_STALL: Duration = Duration::from_secs(60);
+/// After a shutdown command, in-flight generations get this long to
+/// finish streaming before stragglers are cut.
+const DRAIN_CAP: Duration = Duration::from_secs(60);
+/// Input backlog cap per connection (pipelined requests + partial
+/// lines). Honest traffic stays far below this: prompts cap at 4 KiB
+/// pre-escaping and HTTP heads/bodies have their own parser caps.
+const MAX_INBUF: usize = 256 * 1024;
+/// Output backlog cap per connection: a consumer this far behind is
+/// treated as dead (the threaded front end applied backpressure by
+/// blocking a worker; the reactor must not buffer unboundedly).
+const MAX_OUTBUF: usize = 1024 * 1024;
 
-/// Serve one line-protocol connection until EOF, error, or shutdown.
-fn handle_conn(
+const TOK_LINE: u64 = 0;
+const TOK_HTTP: u64 = 1;
+const TOK_WAKE: u64 = 2;
+const FIRST_CONN_TOKEN: u64 = 3;
+
+/// Engine threads post generation events here; the reactor drains it
+/// after each eventfd wake. One mailbox serves every connection.
+struct GenMailbox {
+    queue: Mutex<Vec<(u64, u64, TokenEvent)>>,
+    wake: WakeFd,
+}
+
+/// Per-generation sink handed to the engine thread. Knows its
+/// connection + generation id, so events route through the shared
+/// mailbox; `closed` flips when the reactor abandons the generation,
+/// making `send` fail so the engine cuts the generation short.
+struct MailboxSink {
+    mailbox: Arc<GenMailbox>,
+    conn: u64,
+    gen: u64,
+    closed: Arc<AtomicBool>,
+}
+
+impl EventSink for MailboxSink {
+    fn send(&self, ev: TokenEvent) -> std::result::Result<(), ()> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(());
+        }
+        self.mailbox
+            .queue
+            .lock()
+            .expect("mailbox poisoned")
+            .push((self.conn, self.gen, ev));
+        self.mailbox.wake.wake();
+        Ok(())
+    }
+}
+
+/// One in-flight generation on a connection.
+struct Gen {
+    id: u64,
+    cancel: Arc<AtomicBool>,
+    closed: Arc<AtomicBool>,
+    /// HTTP: chunked head not yet written (status held for first event)
+    started: bool,
+    /// HTTP: client sent `Connection: close`
+    close_after: bool,
+    /// abandoned past this with no event (re-armed per event)
+    deadline: Instant,
+}
+
+/// Write sink that accumulates unflushed response bytes; drained by
+/// readiness events. `start` is a consume cursor compacted lazily.
+#[derive(Default)]
+struct OutBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl OutBuf {
+    fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+    fn is_empty(&self) -> bool {
+        self.start == self.buf.len()
+    }
+    fn pending(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+    fn consume(&mut self, n: usize) {
+        self.start += n;
+        if self.is_empty() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start > 64 * 1024 && self.start * 2 > self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+}
+
+impl Write for OutBuf {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        Ok(data.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One connection owned by the reactor.
+struct Conn {
     stream: TcpStream,
-    registry: &Arc<ModelRegistry>,
-    stop: &Arc<AtomicBool>,
-) {
-    let _ = stream.set_nodelay(true);
-    // poll tick: idle readers notice shutdown instead of pinning the pool
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut reader = match stream.try_clone() {
-        Ok(s) => BufReader::new(s),
-        Err(_) => return,
-    };
-    let mut writer = stream;
-    let mut line = String::new();
-    let mut idle_ticks = 0u32;
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // EOF
-            Ok(_) => idle_ticks = 0,
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut =>
+    kind: ConnKind,
+    inbuf: Vec<u8>,
+    outbuf: OutBuf,
+    gen: Option<Gen>,
+    /// epoll interest currently registered (avoid redundant epoll_ctl)
+    interest: u32,
+    /// peer sent EOF: no more requests, but responses may still flush
+    peer_closed: bool,
+    /// close once the out-buffer drains
+    closing: bool,
+    last_activity: Instant,
+}
+
+struct Reactor {
+    poller: Poller,
+    listener: Option<TcpListener>,
+    http_listener: Option<TcpListener>,
+    registry: Arc<ModelRegistry>,
+    stop: Arc<AtomicBool>,
+    mailbox: Arc<GenMailbox>,
+    conns: HashMap<u64, Conn>,
+    /// connection tokens with an in-flight generation (stall sweep set)
+    gens: HashSet<u64>,
+    wheel: TimerWheel,
+    next_token: u64,
+    next_gen_id: u64,
+    idle_timeout: Option<Duration>,
+    max_conns: usize,
+    draining: bool,
+    drain_deadline: Instant,
+}
+
+impl Reactor {
+    fn new(
+        listener: TcpListener,
+        http_listener: Option<TcpListener>,
+        registry: Arc<ModelRegistry>,
+        stop: Arc<AtomicBool>,
+        idle_timeout_ms: u64,
+        max_conns: usize,
+    ) -> Result<Reactor> {
+        let poller = Poller::new().context("creating epoll instance")?;
+        listener.set_nonblocking(true)?;
+        poller.add(listener.as_raw_fd(), TOK_LINE, EPOLLIN)?;
+        if let Some(hl) = &http_listener {
+            hl.set_nonblocking(true)?;
+            poller.add(hl.as_raw_fd(), TOK_HTTP, EPOLLIN)?;
+        }
+        let wake = WakeFd::new().context("creating wake eventfd")?;
+        poller.add(wake.raw(), TOK_WAKE, EPOLLIN)?;
+        let now = Instant::now();
+        Ok(Reactor {
+            poller,
+            listener: Some(listener),
+            http_listener,
+            registry,
+            stop,
+            mailbox: Arc::new(GenMailbox { queue: Mutex::new(Vec::new()), wake }),
+            conns: HashMap::new(),
+            gens: HashSet::new(),
+            wheel: TimerWheel::new(now),
+            next_token: FIRST_CONN_TOKEN,
+            next_gen_id: 0,
+            idle_timeout: (idle_timeout_ms > 0)
+                .then(|| Duration::from_millis(idle_timeout_ms)),
+            max_conns,
+            draining: false,
+            drain_deadline: now,
+        })
+    }
+
+    fn run(&mut self) -> Result<()> {
+        let mut events = [EpollEvent::default(); 256];
+        let mut next_tick = Instant::now() + Duration::from_secs(1);
+        loop {
+            if !self.draining && self.stop.load(Ordering::SeqCst) {
+                self.begin_drain();
+            }
+            if self.draining
+                && (self.conns.is_empty() || Instant::now() >= self.drain_deadline)
             {
-                // timeout mid-line: bytes read so far stay in `line`;
-                // keep accumulating unless shutting down or idled out
-                idle_ticks += 1;
-                if stop.load(Ordering::SeqCst) || idle_ticks >= IDLE_TICKS {
+                break;
+            }
+            let timeout = next_tick
+                .saturating_duration_since(Instant::now())
+                .as_millis()
+                .min(TimerWheel::tick_ms() as u128) as i32;
+            let n = self.poller.wait(&mut events, timeout)?;
+            for ev in &events[..n] {
+                let (token, bits) = (ev.data, ev.events);
+                match token {
+                    TOK_LINE => self.accept_ready(ConnKind::Line),
+                    TOK_HTTP => self.accept_ready(ConnKind::Http),
+                    TOK_WAKE => {
+                        self.mailbox.wake.drain();
+                        self.process_mailbox();
+                    }
+                    tok => self.conn_ready(tok, bits),
+                }
+            }
+            let now = Instant::now();
+            if now >= next_tick {
+                self.tick(now);
+                next_tick = now + Duration::from_secs(1);
+            }
+        }
+        // cut whatever is left (stragglers past the drain cap)
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in tokens {
+            self.close_conn(tok);
+        }
+        Ok(())
+    }
+
+    /// Shutdown observed: stop accepting, flush-and-close everything
+    /// idle, and let in-flight generations finish streaming.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_deadline = Instant::now() + DRAIN_CAP;
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.del(l.as_raw_fd());
+        }
+        if let Some(l) = self.http_listener.take() {
+            let _ = self.poller.del(l.as_raw_fd());
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in tokens {
+            let done = {
+                let conn = self.conns.get_mut(&tok).expect("token just listed");
+                conn.closing = true;
+                conn.gen.is_none() && conn.outbuf.is_empty()
+            };
+            if done {
+                self.close_conn(tok);
+            } else {
+                self.flush_conn(tok);
+            }
+        }
+    }
+
+    /// Once per second: expire idle connections, time out stalled
+    /// generations, and nudge the registry's hot-reload probe so a
+    /// republished checkpoint is noticed even with zero traffic.
+    fn tick(&mut self, now: Instant) {
+        for tok in self.wheel.expire(now) {
+            let Some(idle) = self.idle_timeout else { continue };
+            let Some((deadline, generating)) = self
+                .conns
+                .get(&tok)
+                .map(|c| (c.last_activity + idle, c.gen.is_some()))
+            else {
+                continue; // connection already gone; stale wheel entry
+            };
+            if now >= deadline && !generating {
+                self.close_conn(tok);
+            } else {
+                // still active (or mid-generation): re-arm
+                self.wheel.insert(tok, deadline.max(now + idle), now);
+            }
+        }
+        let stalled: Vec<u64> = self
+            .gens
+            .iter()
+            .copied()
+            .filter(|tok| {
+                self.conns
+                    .get(tok)
+                    .and_then(|c| c.gen.as_ref())
+                    .is_some_and(|g| now >= g.deadline)
+            })
+            .collect();
+        for tok in stalled {
+            self.timeout_generation(tok);
+        }
+        self.registry.poll_reloads();
+    }
+
+    // ---- accept path ----
+
+    fn accept_ready(&mut self, kind: ConnKind) {
+        loop {
+            let accepted = match kind {
+                ConnKind::Line => self.listener.as_ref().map(|l| l.accept()),
+                ConnKind::Http => self.http_listener.as_ref().map(|l| l.accept()),
+            };
+            let Some(res) = accepted else { return };
+            match res {
+                Ok((stream, _)) => {
+                    if self.max_conns > 0 && self.conns.len() >= self.max_conns {
+                        drop(stream); // over the cap: refuse by closing
+                        continue;
+                    }
+                    self.adopt(stream, kind);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    info!("accept error: {e}");
                     return;
                 }
-                continue;
             }
-            Err(_) => return,
         }
-        let parsed = protocol::parse_request(&line);
-        line.clear();
-        let reply = match parsed {
+    }
+
+    fn adopt(&mut self, stream: TcpStream, kind: ConnKind) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let tok = self.next_token;
+        self.next_token += 1;
+        if self.poller.add(stream.as_raw_fd(), tok, EPOLLIN).is_err() {
+            return;
+        }
+        let now = Instant::now();
+        self.conns.insert(
+            tok,
+            Conn {
+                stream,
+                kind,
+                inbuf: Vec::new(),
+                outbuf: OutBuf::default(),
+                gen: None,
+                interest: EPOLLIN,
+                peer_closed: false,
+                closing: false,
+                last_activity: now,
+            },
+        );
+        if let Some(idle) = self.idle_timeout {
+            self.wheel.insert(tok, now + idle, now);
+        }
+    }
+
+    // ---- readiness dispatch ----
+
+    fn conn_ready(&mut self, tok: u64, bits: u32) {
+        if !self.conns.contains_key(&tok) {
+            return; // closed earlier in this batch
+        }
+        if bits & (EPOLLERR | EPOLLHUP) != 0 {
+            self.close_conn(tok);
+            return;
+        }
+        if bits & EPOLLOUT != 0 && !self.flush_conn(tok) {
+            return;
+        }
+        if bits & EPOLLIN != 0 {
+            self.readable(tok);
+        }
+    }
+
+    fn readable(&mut self, tok: u64) {
+        enum ReadEnd {
+            Open,
+            Eof,
+            Dead,
+        }
+        let mut tmp = [0u8; 16 * 1024];
+        let end = {
+            let Some(conn) = self.conns.get_mut(&tok) else { return };
+            let mut end = ReadEnd::Open;
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        end = ReadEnd::Eof;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.inbuf.extend_from_slice(&tmp[..n]);
+                        conn.last_activity = Instant::now();
+                        if conn.inbuf.len() > MAX_INBUF {
+                            end = ReadEnd::Dead;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        end = ReadEnd::Dead;
+                        break;
+                    }
+                }
+            }
+            end
+        };
+        if matches!(end, ReadEnd::Dead) {
+            self.close_conn(tok);
+            return;
+        }
+        let saw_eof = matches!(end, ReadEnd::Eof);
+        self.advance(tok);
+        if saw_eof {
+            let done = {
+                let Some(conn) = self.conns.get_mut(&tok) else { return };
+                conn.peer_closed = true;
+                if conn.gen.is_none() && conn.outbuf.is_empty() {
+                    true
+                } else {
+                    // half-close: finish streaming the in-flight
+                    // response, then close (no more requests can arrive)
+                    conn.closing = true;
+                    false
+                }
+            };
+            if done {
+                self.close_conn(tok);
+            } else {
+                self.update_interest(tok);
+            }
+        }
+    }
+
+    /// Parse-and-dispatch loop: strictly one request at a time per
+    /// connection; pipelined requests wait in `inbuf` until the current
+    /// generation finishes.
+    fn advance(&mut self, tok: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&tok) else { return };
+            if conn.closing || conn.gen.is_some() {
+                break;
+            }
+            match conn.kind {
+                ConnKind::Line => {
+                    let Some(nl) = conn.inbuf.iter().position(|&b| b == b'\n')
+                    else {
+                        if conn.inbuf.len() > 16 * 1024 {
+                            // longest legal line is a fully escaped max
+                            // prompt (~16 KiB); anything bigger is abuse
+                            let _ = conn
+                                .outbuf
+                                .write_all(b"ERR request line too long\n");
+                            conn.closing = true;
+                        }
+                        break;
+                    };
+                    let line_bytes: Vec<u8> = conn.inbuf.drain(..=nl).collect();
+                    let Ok(line) = String::from_utf8(line_bytes) else {
+                        self.close_conn(tok); // matches read_line's Err
+                        return;
+                    };
+                    self.process_line(tok, &line);
+                }
+                ConnKind::Http => match http::parse_request(&conn.inbuf) {
+                    Ok(Parsed::Complete(req, consumed)) => {
+                        conn.inbuf.drain(..consumed);
+                        self.process_http(tok, req);
+                    }
+                    Ok(Parsed::Partial) => break,
+                    Err(e) => {
+                        let _ = http::write_response(
+                            &mut conn.outbuf,
+                            e.status,
+                            "application/json",
+                            &json_error(&e.message),
+                            false,
+                        );
+                        conn.closing = true;
+                        break;
+                    }
+                },
+            }
+        }
+        self.flush_conn(tok);
+        self.update_interest(tok);
+    }
+
+    // ---- line protocol ----
+
+    fn process_line(&mut self, tok: u64, line: &str) {
+        let reply = match protocol::parse_request(line) {
             Err(e) => format!("ERR {}\n", protocol::escape(&e)),
             Ok(Request::Ping) => "PONG\n".into(),
             Ok(Request::Stats) => {
-                format!("STATS {}\n", registry.stats_line())
+                self.registry.poll_reloads();
+                format!("STATS {}\n", self.registry.stats_line())
             }
             Ok(Request::Shutdown) => {
-                let _ = writer.write_all(b"BYE\n");
-                stop.store(true, Ordering::SeqCst);
+                self.stop.store(true, Ordering::SeqCst);
+                if let Some(conn) = self.conns.get_mut(&tok) {
+                    let _ = conn.outbuf.write_all(b"BYE\n");
+                    conn.closing = true;
+                }
                 return;
             }
             Ok(Request::Gen { max_tokens, temp, prompt, session, model }) => {
-                stream_generation(
-                    &mut writer,
-                    registry,
-                    model,
-                    max_tokens,
-                    temp,
-                    prompt,
-                    session,
+                self.submit_generation(
+                    tok, model, max_tokens, temp, prompt, session, None,
                 );
-                continue;
+                return;
             }
         };
-        if writer.write_all(reply.as_bytes()).is_err() {
-            return;
+        if let Some(conn) = self.conns.get_mut(&tok) {
+            let _ = conn.outbuf.write_all(reply.as_bytes());
         }
     }
-}
 
-/// Submit one GEN/SGEN request to the registry and stream its events
-/// back. The cancel flag is raised whenever this handler stops reading
-/// events (timeout or a dead client socket), so the batcher can drop the
-/// request if it had not started yet.
-fn stream_generation(
-    writer: &mut TcpStream,
-    registry: &Arc<ModelRegistry>,
-    model: Option<String>,
-    max_tokens: usize,
-    temp: f32,
-    prompt: String,
-    session: Option<String>,
-) {
-    let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
-    let cancel = Arc::new(AtomicBool::new(false));
-    let req = GenRequest {
-        prompt,
-        max_tokens,
-        temp,
-        session,
-        reply: tx,
-        cancel: cancel.clone(),
-    };
-    if let Err(e) = registry.submit(model.as_deref(), req) {
-        let _ = writer
-            .write_all(format!("ERR {}\n", protocol::escape(&e.to_string())).as_bytes());
-        return;
-    }
-    loop {
-        match rx.recv_timeout(Duration::from_secs(60)) {
-            Ok(TokenEvent::Token(piece)) => {
-                let line = format!("TOK {}\n", protocol::escape_bytes(&piece));
-                if writer.write_all(line.as_bytes()).is_err() {
-                    // client gone; if the generation is still queued the
-                    // flag drops it, and a running one is cut short on
-                    // the engine's next send
-                    cancel.store(true, Ordering::Relaxed);
-                    return;
-                }
-            }
-            Ok(TokenEvent::Done { n_tokens, gen_ms }) => {
-                let _ = writer
-                    .write_all(format!("DONE {n_tokens} {gen_ms:.3}\n").as_bytes());
-                return;
-            }
-            Ok(TokenEvent::Error(e)) => {
-                let _ = writer
-                    .write_all(format!("ERR {}\n", protocol::escape(&e)).as_bytes());
-                return;
-            }
-            Err(_) => {
-                cancel.store(true, Ordering::Relaxed);
-                let _ = writer.write_all(b"ERR generation timed out\n");
-                return;
-            }
-        }
-    }
-}
+    // ---- HTTP ----
 
-/// Serve one HTTP connection (keep-alive) until EOF, error, `Connection:
-/// close`, or shutdown.
-fn handle_http_conn(
-    mut stream: TcpStream,
-    registry: &Arc<ModelRegistry>,
-    stop: &Arc<AtomicBool>,
-) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut buf: Vec<u8> = Vec::new();
-    let mut tmp = [0u8; 4096];
-    let mut idle_ticks = 0u32;
-    loop {
-        match http::parse_request(&buf) {
-            Ok(Parsed::Complete(req, consumed)) => {
-                buf.drain(..consumed);
-                let close = req.wants_close();
-                let keep = handle_http_request(&mut stream, req, registry, stop);
-                if !keep || close {
-                    return;
-                }
-                idle_ticks = 0;
-                continue;
-            }
-            Ok(Parsed::Partial) => {}
-            Err(e) => {
-                let _ = http::write_response(
-                    &mut stream,
-                    e.status,
-                    "application/json",
-                    &json_error(&e.message),
-                    false,
+    fn process_http(&mut self, tok: u64, req: HttpRequest) {
+        let close = req.wants_close();
+        let path = req.target.split('?').next().unwrap_or("").to_string();
+        match (req.method.as_str(), path.as_str()) {
+            ("GET" | "HEAD", "/stats") => {
+                // a stats poll doubles as a hot-reload probe nudge, so a
+                // republished checkpoint surfaces even on an idle server
+                self.registry.poll_reloads();
+                let body = self.registry.stats_json().render_pretty();
+                self.respond(
+                    tok,
+                    200,
+                    body.as_bytes(),
+                    req.method == "HEAD",
+                    close,
                 );
-                return;
             }
-        }
-        match stream.read(&mut tmp) {
-            Ok(0) => return, // EOF
-            Ok(n) => {
-                buf.extend_from_slice(&tmp[..n]);
-                idle_ticks = 0;
+            ("POST", "/shutdown") => {
+                let body =
+                    Json::Obj(vec![("ok".into(), Json::Bool(true))]).render();
+                self.respond(tok, 200, body.as_bytes(), false, true);
+                self.stop.store(true, Ordering::SeqCst);
             }
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut =>
-            {
-                idle_ticks += 1;
-                if stop.load(Ordering::SeqCst) || idle_ticks >= IDLE_TICKS {
-                    return;
-                }
-            }
-            Err(_) => return,
-        }
-    }
-}
-
-fn json_error(msg: &str) -> Vec<u8> {
-    Json::Obj(vec![("error".into(), Json::Str(msg.to_string()))])
-        .render()
-        .into_bytes()
-}
-
-/// Dispatch one parsed HTTP request. Returns false when the connection
-/// must close (write failure or shutdown).
-fn handle_http_request(
-    stream: &mut TcpStream,
-    req: HttpRequest,
-    registry: &Arc<ModelRegistry>,
-    stop: &Arc<AtomicBool>,
-) -> bool {
-    let path = req.target.split('?').next().unwrap_or("");
-    match (req.method.as_str(), path) {
-        ("GET" | "HEAD", "/stats") => {
-            let body = registry.stats_json().render_pretty();
-            http::write_response(
-                stream,
-                200,
-                "application/json",
-                body.as_bytes(),
+            ("POST", "/generate") => self.http_generate(tok, &req),
+            (_, "/stats" | "/shutdown" | "/generate") => self.respond(
+                tok,
+                405,
+                &json_error("method not allowed for this path"),
                 req.method == "HEAD",
-            )
-            .is_ok()
+                close,
+            ),
+            _ => self.respond(
+                tok,
+                404,
+                &json_error("no such path (want /generate, /stats, /shutdown)"),
+                req.method == "HEAD",
+                close,
+            ),
         }
-        ("POST", "/shutdown") => {
-            let body = Json::Obj(vec![("ok".into(), Json::Bool(true))]).render();
-            let _ = http::write_response(
-                stream,
-                200,
-                "application/json",
-                body.as_bytes(),
-                false,
-            );
-            stop.store(true, Ordering::SeqCst);
-            false
-        }
-        ("POST", "/generate") => http_generate(stream, &req, registry),
-        (_, "/stats" | "/shutdown" | "/generate") => http::write_response(
-            stream,
-            405,
-            "application/json",
-            &json_error("method not allowed for this path"),
-            req.method == "HEAD",
-        )
-        .is_ok(),
-        _ => http::write_response(
-            stream,
-            404,
-            "application/json",
-            &json_error("no such path (want /generate, /stats, /shutdown)"),
-            req.method == "HEAD",
-        )
-        .is_ok(),
     }
-}
 
-/// `POST /generate`: body `{"prompt": "...", "max_tokens"?, "temp"?,
-/// "session"?, "model"?}`. Streams newline-delimited JSON via chunked
-/// transfer encoding: one `{"piece": "<escaped>"}` object per token
-/// (piece is `protocol::escape_bytes`-escaped so split multi-byte
-/// characters survive JSON), then `{"done": true, "n_tokens": N,
-/// "gen_ms": T}`. An unknown `"model"` is a clean 404.
-fn http_generate(
-    stream: &mut TcpStream,
-    req: &HttpRequest,
-    registry: &Arc<ModelRegistry>,
-) -> bool {
-    let bad = |stream: &mut TcpStream, status: u16, msg: &str| {
-        http::write_response(
-            stream,
+    /// Queue one fixed-length JSON response; `close` flushes then drops.
+    fn respond(&mut self, tok: u64, status: u16, body: &[u8], head_only: bool, close: bool) {
+        let Some(conn) = self.conns.get_mut(&tok) else { return };
+        let _ = http::write_response(
+            &mut conn.outbuf,
             status,
             "application/json",
-            &json_error(msg),
-            false,
-        )
-        .is_ok()
-    };
-    if req.http10 {
-        // chunked transfer encoding does not exist in HTTP/1.0 — a 1.0
-        // client would read the chunk framing as body bytes
-        return bad(stream, 505, "/generate streams chunked; use HTTP/1.1");
-    }
-    let Ok(body) = std::str::from_utf8(&req.body) else {
-        return bad(stream, 400, "body is not UTF-8");
-    };
-    let doc = match Json::parse(body) {
-        Ok(d) => d,
-        Err(e) => return bad(stream, 400, &format!("body is not JSON: {e}")),
-    };
-    let Some(prompt) = doc.get("prompt").and_then(|v| v.as_str()) else {
-        return bad(stream, 400, "missing string field \"prompt\"");
-    };
-    let max_tokens = match doc.get("max_tokens") {
-        None => 32usize,
-        Some(v) => match v.as_f64() {
-            Some(n) if n >= 0.0 && n.fract() == 0.0 => n as usize,
-            _ => return bad(stream, 400, "max_tokens must be an integer"),
-        },
-    };
-    let temp = match doc.get("temp") {
-        None => 0.0f32,
-        Some(v) => match v.as_f64() {
-            Some(n) => n as f32,
-            None => return bad(stream, 400, "temp must be a number"),
-        },
-    };
-    let session = match doc.get("session") {
-        None => None,
-        Some(v) => match v.as_str() {
-            Some(s) => Some(s.to_string()),
-            None => return bad(stream, 400, "session must be a string"),
-        },
-    };
-    let model = match doc.get("model") {
-        None => None,
-        Some(v) => match v.as_str() {
-            Some(m) if protocol::valid_model_name(m) => Some(m.to_string()),
-            Some(_) => return bad(stream, 400, "bad model name"),
-            None => return bad(stream, 400, "model must be a string"),
-        },
-    };
-    if let Err(e) =
-        protocol::validate_gen(max_tokens, temp, prompt, session.as_deref())
-    {
-        return bad(stream, 400, &e);
+            body,
+            head_only,
+        );
+        if close {
+            conn.closing = true;
+        }
     }
 
-    let (tx, rx): (Sender<TokenEvent>, Receiver<TokenEvent>) = channel();
-    let cancel = Arc::new(AtomicBool::new(false));
-    let gen_req = GenRequest {
-        prompt: prompt.to_string(),
-        max_tokens,
-        temp,
-        session,
-        reply: tx,
-        cancel: cancel.clone(),
-    };
-    if let Err(e) = registry.submit(model.as_deref(), gen_req) {
-        let status = match e {
-            SubmitError::UnknownModel(_) => 404,
-            SubmitError::Load(_) => 500,
-            SubmitError::Stopped => 503,
+    /// `POST /generate`: body `{"prompt": "...", "max_tokens"?, "temp"?,
+    /// "session"?, "model"?}`. Streams newline-delimited JSON via chunked
+    /// transfer encoding: one `{"piece": "<escaped>"}` object per token
+    /// (piece is `protocol::escape_bytes`-escaped so split multi-byte
+    /// characters survive JSON), then `{"done": true, "n_tokens": N,
+    /// "gen_ms": T}`. An unknown `"model"` is a clean 404. The status
+    /// line is held until the first engine event so request-level errors
+    /// (busy session, context overflow) become a clean 4xx and
+    /// retryable rejections a 503.
+    fn http_generate(&mut self, tok: u64, req: &HttpRequest) {
+        let close = req.wants_close();
+        macro_rules! bad {
+            ($status:expr, $msg:expr) => {{
+                self.respond(tok, $status, &json_error($msg), false, close);
+                return;
+            }};
+        }
+        if req.http10 {
+            // chunked transfer encoding does not exist in HTTP/1.0 — a
+            // 1.0 client would read the chunk framing as body bytes
+            bad!(505, "/generate streams chunked; use HTTP/1.1");
+        }
+        let Ok(body) = std::str::from_utf8(&req.body) else {
+            bad!(400, "body is not UTF-8");
         };
-        return bad(stream, status, &e.to_string());
-    }
-
-    // hold the status line until the first event so request-level errors
-    // (busy session, context overflow) become a clean 4xx
-    let first = match rx.recv_timeout(Duration::from_secs(60)) {
-        Ok(ev) => ev,
-        Err(_) => {
-            cancel.store(true, Ordering::Relaxed);
-            return bad(stream, 503, "generation timed out");
-        }
-    };
-    let mut pending = match first {
-        TokenEvent::Error(e) => {
-            // most request-level failures are the client's (bad session,
-            // context overflow) — but a drain or an LRU model unload is
-            // server-initiated and explicitly retryable, so it must not
-            // come back as a don't-retry 4xx
-            let retryable =
-                e.contains("shutting down") || e.contains("unloaded under");
-            return bad(stream, if retryable { 503 } else { 400 }, &e);
-        }
-        ev => Some(ev),
-    };
-    if http::write_chunked_head(stream, 200, "application/x-ndjson").is_err() {
-        cancel.store(true, Ordering::Relaxed);
-        return false;
-    }
-    loop {
-        let ev = match pending.take() {
-            Some(ev) => ev,
-            None => match rx.recv_timeout(Duration::from_secs(60)) {
-                Ok(ev) => ev,
-                Err(_) => {
-                    cancel.store(true, Ordering::Relaxed);
-                    let mut line = json_error("generation timed out");
-                    line.push(b'\n');
-                    let _ = http::write_chunk(stream, &line);
-                    let _ = http::finish_chunks(stream);
-                    return false;
-                }
+        let doc = match Json::parse(body) {
+            Ok(d) => d,
+            Err(e) => bad!(400, &format!("body is not JSON: {e}")),
+        };
+        let Some(prompt) = doc.get("prompt").and_then(|v| v.as_str()) else {
+            bad!(400, "missing string field \"prompt\"");
+        };
+        let max_tokens = match doc.get("max_tokens") {
+            None => 32usize,
+            Some(v) => match v.as_f64() {
+                Some(n) if n >= 0.0 && n.fract() == 0.0 => n as usize,
+                _ => bad!(400, "max_tokens must be an integer"),
             },
         };
+        let temp = match doc.get("temp") {
+            None => 0.0f32,
+            Some(v) => match v.as_f64() {
+                Some(n) => n as f32,
+                None => bad!(400, "temp must be a number"),
+            },
+        };
+        let session = match doc.get("session") {
+            None => None,
+            Some(v) => match v.as_str() {
+                Some(s) => Some(s.to_string()),
+                None => bad!(400, "session must be a string"),
+            },
+        };
+        let model = match doc.get("model") {
+            None => None,
+            Some(v) => match v.as_str() {
+                Some(m) if protocol::valid_model_name(m) => Some(m.to_string()),
+                Some(_) => bad!(400, "bad model name"),
+                None => bad!(400, "model must be a string"),
+            },
+        };
+        if let Err(e) =
+            protocol::validate_gen(max_tokens, temp, prompt, session.as_deref())
+        {
+            bad!(400, &e);
+        }
+        self.submit_generation(
+            tok,
+            model,
+            max_tokens,
+            temp,
+            prompt.to_string(),
+            session,
+            Some(close),
+        );
+    }
+
+    // ---- generation plumbing ----
+
+    /// Build the mailbox sink, submit to the registry, and park the
+    /// connection in "one generation in flight" state. `http` is None
+    /// for the line protocol, Some(wants_close) for `POST /generate`.
+    fn submit_generation(
+        &mut self,
+        tok: u64,
+        model: Option<String>,
+        max_tokens: usize,
+        temp: f32,
+        prompt: String,
+        session: Option<String>,
+        http: Option<bool>,
+    ) {
+        let gen_id = self.next_gen_id;
+        self.next_gen_id += 1;
+        let cancel = Arc::new(AtomicBool::new(false));
+        let closed = Arc::new(AtomicBool::new(false));
+        let sink = ReplySink::shared(Arc::new(MailboxSink {
+            mailbox: self.mailbox.clone(),
+            conn: tok,
+            gen: gen_id,
+            closed: closed.clone(),
+        }));
+        let req = GenRequest {
+            prompt,
+            max_tokens,
+            temp,
+            session,
+            reply: sink,
+            cancel: cancel.clone(),
+        };
+        if let Err(e) = self.registry.submit(model.as_deref(), req) {
+            match http {
+                None => {
+                    if let Some(conn) = self.conns.get_mut(&tok) {
+                        let _ = conn.outbuf.write_all(
+                            format!(
+                                "ERR {}\n",
+                                protocol::escape(&e.to_string())
+                            )
+                            .as_bytes(),
+                        );
+                    }
+                }
+                Some(close) => {
+                    let status = match &e {
+                        SubmitError::UnknownModel(_) => 404,
+                        SubmitError::Load(_) => 500,
+                        SubmitError::Stopped => 503,
+                    };
+                    self.respond(
+                        tok,
+                        status,
+                        &json_error(&e.to_string()),
+                        false,
+                        close,
+                    );
+                }
+            }
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&tok) else {
+            // connection died between parse and submit: abandon
+            cancel.store(true, Ordering::Relaxed);
+            closed.store(true, Ordering::Relaxed);
+            return;
+        };
+        conn.gen = Some(Gen {
+            id: gen_id,
+            cancel,
+            closed,
+            started: http.is_none(), // line protocol has no status hold
+            close_after: http.unwrap_or(false),
+            deadline: Instant::now() + GEN_STALL,
+        });
+        self.gens.insert(tok);
+    }
+
+    /// Deliver every queued engine event to its connection.
+    fn process_mailbox(&mut self) {
+        let batch: Vec<(u64, u64, TokenEvent)> = {
+            let mut q = self.mailbox.queue.lock().expect("mailbox poisoned");
+            std::mem::take(&mut *q)
+        };
+        let mut touched: HashSet<u64> = HashSet::new();
+        for (tok, gen_id, ev) in batch {
+            let stale = !self
+                .conns
+                .get(&tok)
+                .and_then(|c| c.gen.as_ref())
+                .is_some_and(|g| g.id == gen_id);
+            if stale {
+                continue; // connection or generation already gone
+            }
+            touched.insert(tok);
+            let finished = self.deliver_event(tok, ev);
+            if finished {
+                self.finish_generation(tok);
+            }
+            let over = self
+                .conns
+                .get(&tok)
+                .is_some_and(|c| c.outbuf.len() > MAX_OUTBUF);
+            if over {
+                // consumer hopelessly behind: treat as dead
+                self.close_conn(tok);
+                touched.remove(&tok);
+            }
+        }
+        for tok in touched {
+            self.flush_conn(tok);
+            self.update_interest(tok);
+        }
+    }
+
+    /// Render one engine event into the connection's out-buffer.
+    /// Returns true when the generation is over.
+    fn deliver_event(&mut self, tok: u64, ev: TokenEvent) -> bool {
+        let kind = self.conns.get(&tok).map(|c| c.kind);
+        match kind {
+            Some(ConnKind::Line) => self.deliver_line_event(tok, ev),
+            Some(ConnKind::Http) => self.deliver_http_event(tok, ev),
+            None => true,
+        }
+    }
+
+    fn deliver_line_event(&mut self, tok: u64, ev: TokenEvent) -> bool {
+        let Some(conn) = self.conns.get_mut(&tok) else { return true };
+        let g = conn.gen.as_mut().expect("checked by caller");
+        g.deadline = Instant::now() + GEN_STALL;
+        conn.last_activity = Instant::now();
+        let (line, done) = match ev {
+            TokenEvent::Token(piece) => {
+                (format!("TOK {}\n", protocol::escape_bytes(&piece)), false)
+            }
+            TokenEvent::Done { n_tokens, gen_ms } => {
+                (format!("DONE {n_tokens} {gen_ms:.3}\n"), true)
+            }
+            TokenEvent::Error(e) => {
+                (format!("ERR {}\n", protocol::escape(&e)), true)
+            }
+            TokenEvent::Retry(e) => (
+                format!("ERR {RETRY_PREFIX}{}\n", protocol::escape(&e)),
+                true,
+            ),
+        };
+        let _ = conn.outbuf.write_all(line.as_bytes());
+        done
+    }
+
+    fn deliver_http_event(&mut self, tok: u64, ev: TokenEvent) -> bool {
+        let Some(conn) = self.conns.get_mut(&tok) else { return true };
+        let g = conn.gen.as_mut().expect("checked by caller");
+        g.deadline = Instant::now() + GEN_STALL;
+        conn.last_activity = Instant::now();
+        if !g.started {
+            // status hold: the first event decides between a clean
+            // status response and the 200 chunked stream
+            match &ev {
+                TokenEvent::Error(e) => {
+                    let (e, close) = (e.clone(), g.close_after);
+                    let _ = http::write_response(
+                        &mut conn.outbuf,
+                        400,
+                        "application/json",
+                        &json_error(&e),
+                        false,
+                    );
+                    if close {
+                        conn.closing = true;
+                    }
+                    return true;
+                }
+                TokenEvent::Retry(e) => {
+                    // server-initiated and explicitly retryable (drain,
+                    // LRU unload): must not come back as don't-retry 4xx
+                    let (e, close) = (e.clone(), g.close_after);
+                    let _ = http::write_response(
+                        &mut conn.outbuf,
+                        503,
+                        "application/json",
+                        &json_error(&e),
+                        false,
+                    );
+                    if close {
+                        conn.closing = true;
+                    }
+                    return true;
+                }
+                _ => {
+                    g.started = true;
+                    let _ = http::write_chunked_head(
+                        &mut conn.outbuf,
+                        200,
+                        "application/x-ndjson",
+                    );
+                }
+            }
+        }
         let (line, done) = match ev {
             TokenEvent::Token(piece) => (
                 Json::Obj(vec![(
@@ -607,13 +1045,150 @@ fn http_generate(
                 Json::Obj(vec![("error".into(), Json::Str(e))]).render(),
                 true,
             ),
+            TokenEvent::Retry(e) => (
+                Json::Obj(vec![(
+                    "error".into(),
+                    Json::Str(format!("{RETRY_PREFIX}{e}")),
+                )])
+                .render(),
+                true,
+            ),
         };
-        if http::write_chunk(stream, format!("{line}\n").as_bytes()).is_err() {
-            cancel.store(true, Ordering::Relaxed);
+        let _ = http::write_chunk(&mut conn.outbuf, format!("{line}\n").as_bytes());
+        if done {
+            let _ = http::finish_chunks(&mut conn.outbuf);
+            if g.close_after {
+                conn.closing = true;
+            }
+        }
+        done
+    }
+
+    /// The in-flight generation reached a terminal event: release the
+    /// connection for its next pipelined request (or the drain).
+    fn finish_generation(&mut self, tok: u64) {
+        if let Some(conn) = self.conns.get_mut(&tok) {
+            conn.gen = None;
+            if self.draining {
+                conn.closing = true;
+            }
+        }
+        self.gens.remove(&tok);
+        self.advance(tok);
+    }
+
+    /// No engine event within `GEN_STALL`: abandon the generation the
+    /// same way the threaded front end's 60 s `recv_timeout` did.
+    fn timeout_generation(&mut self, tok: u64) {
+        let Some(conn) = self.conns.get_mut(&tok) else { return };
+        let Some(g) = conn.gen.take() else { return };
+        g.cancel.store(true, Ordering::Relaxed);
+        g.closed.store(true, Ordering::Relaxed);
+        self.gens.remove(&tok);
+        match conn.kind {
+            ConnKind::Line => {
+                let _ = conn.outbuf.write_all(b"ERR generation timed out\n");
+            }
+            ConnKind::Http if !g.started => {
+                let _ = http::write_response(
+                    &mut conn.outbuf,
+                    503,
+                    "application/json",
+                    &json_error("generation timed out"),
+                    false,
+                );
+                if g.close_after {
+                    conn.closing = true;
+                }
+            }
+            ConnKind::Http => {
+                // mid-stream: emit a terminal error object and close
+                // (the truncated chunk stream is not reusable)
+                let mut line = json_error("generation timed out");
+                line.push(b'\n');
+                let _ = http::write_chunk(&mut conn.outbuf, &line);
+                let _ = http::finish_chunks(&mut conn.outbuf);
+                conn.closing = true;
+            }
+        }
+        self.advance(tok);
+    }
+
+    // ---- socket plumbing ----
+
+    /// Drain the out-buffer to the socket as far as the kernel accepts.
+    /// Returns false when the connection died (and was closed).
+    fn flush_conn(&mut self, tok: u64) -> bool {
+        let dead = {
+            let Some(conn) = self.conns.get_mut(&tok) else { return false };
+            let mut dead = false;
+            while !conn.outbuf.is_empty() {
+                match conn.stream.write(conn.outbuf.pending()) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.outbuf.consume(n);
+                        conn.last_activity = Instant::now();
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            dead || (conn.outbuf.is_empty() && conn.closing)
+        };
+        if dead {
+            self.close_conn(tok);
             return false;
         }
-        if done {
-            return http::finish_chunks(stream).is_ok();
+        self.update_interest(tok);
+        true
+    }
+
+    /// Keep the epoll interest set in sync with what the connection can
+    /// actually use: EPOLLIN until the peer half-closed, EPOLLOUT only
+    /// while the out-buffer has pending bytes.
+    fn update_interest(&mut self, tok: u64) {
+        let Some(conn) = self.conns.get_mut(&tok) else { return };
+        let mut want = 0u32;
+        if !conn.peer_closed {
+            want |= EPOLLIN;
+        }
+        if !conn.outbuf.is_empty() {
+            want |= EPOLLOUT;
+        }
+        if want != conn.interest {
+            if self
+                .poller
+                .modify(conn.stream.as_raw_fd(), tok, want)
+                .is_ok()
+            {
+                conn.interest = want;
+            }
         }
     }
+
+    /// Drop a connection: abandon its generation (cancel if queued, cut
+    /// short if running) and deregister the socket.
+    fn close_conn(&mut self, tok: u64) {
+        let Some(conn) = self.conns.remove(&tok) else { return };
+        if let Some(g) = conn.gen {
+            g.cancel.store(true, Ordering::Relaxed);
+            g.closed.store(true, Ordering::Relaxed);
+            self.gens.remove(&tok);
+        }
+        let _ = self.poller.del(conn.stream.as_raw_fd());
+        // conn.stream drops here, closing the fd
+    }
+}
+
+fn json_error(msg: &str) -> Vec<u8> {
+    Json::Obj(vec![("error".into(), Json::Str(msg.to_string()))])
+        .render()
+        .into_bytes()
 }

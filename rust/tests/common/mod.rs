@@ -38,6 +38,121 @@ pub fn http_request(port: u16, method: &str, path: &str, body: &str) -> (u16, Ve
     (status, body_bytes)
 }
 
+/// A keep-alive HTTP/1.1 client: many requests on one connection, each
+/// response framed by Content-Length or the chunked terminator (never by
+/// EOF). Like `http_request`, deliberately independent of `serve::http`.
+pub struct KeepAliveClient {
+    s: TcpStream,
+    buf: Vec<u8>,
+}
+
+#[allow(dead_code)] // each test crate compiles common/ separately
+impl KeepAliveClient {
+    pub fn connect(port: u16) -> KeepAliveClient {
+        let s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+        KeepAliveClient { s, buf: Vec::new() }
+    }
+
+    fn send(&mut self, method: &str, path: &str, body: &str) {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.s.write_all(req.as_bytes()).unwrap();
+    }
+
+    /// One request-response round trip; the connection stays open.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+        self.send(method, path, body);
+        self.read_response()
+    }
+
+    /// True pipelining: write every request before reading any response;
+    /// responses come back in order on the same connection.
+    pub fn pipeline(
+        &mut self,
+        requests: &[(&str, &str, String)],
+    ) -> Vec<(u16, Vec<u8>)> {
+        for (method, path, body) in requests {
+            self.send(method, path, body);
+        }
+        requests.iter().map(|_| self.read_response()).collect()
+    }
+
+    fn fill(&mut self) {
+        let mut tmp = [0u8; 4096];
+        let n = self.s.read(&mut tmp).expect("read response");
+        assert!(n > 0, "server closed connection mid-response");
+        self.buf.extend_from_slice(&tmp[..n]);
+    }
+
+    fn read_response(&mut self) -> (u16, Vec<u8>) {
+        // read until the head is complete
+        let head_end = loop {
+            if let Some(p) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p;
+            }
+            self.fill();
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_string();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status code");
+        let lower = head.to_ascii_lowercase();
+        let chunked = lower.contains("transfer-encoding: chunked");
+        let body_start = head_end + 4;
+        if chunked {
+            // read until the whole chunk stream (0-chunk + CRLF) framed
+            let (body, consumed) = loop {
+                if let Some(r) = try_dechunk(&self.buf[body_start..]) {
+                    break r;
+                }
+                self.fill();
+            };
+            self.buf.drain(..body_start + consumed);
+            (status, body)
+        } else {
+            let len: usize = lower
+                .lines()
+                .find_map(|l| l.strip_prefix("content-length:"))
+                .map(|v| v.trim().parse().expect("content-length"))
+                .unwrap_or(0);
+            while self.buf.len() < body_start + len {
+                self.fill();
+            }
+            let body = self.buf[body_start..body_start + len].to_vec();
+            self.buf.drain(..body_start + len);
+            (status, body)
+        }
+    }
+}
+
+/// Dechunk a buffer that may be incomplete: Some((body, bytes_consumed))
+/// once the terminating 0-chunk is present, None to read more.
+#[allow(dead_code)]
+fn try_dechunk(b: &[u8]) -> Option<(Vec<u8>, usize)> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let eol = b[pos..].windows(2).position(|w| w == b"\r\n")? + pos;
+        let size =
+            usize::from_str_radix(std::str::from_utf8(&b[pos..eol]).ok()?.trim(), 16)
+                .ok()?;
+        let data = eol + 2;
+        if b.len() < data + size + 2 {
+            return None;
+        }
+        if size == 0 {
+            return Some((out, data + 2));
+        }
+        out.extend_from_slice(&b[data..data + size]);
+        pos = data + size + 2;
+    }
+}
+
 fn dechunk(mut b: &[u8]) -> Vec<u8> {
     let mut out = Vec::new();
     loop {

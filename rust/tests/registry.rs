@@ -15,13 +15,27 @@
 //!   republished checkpoint.
 //! * unknown models are clean errors: `ERR unknown model` on the line
 //!   protocol, 404 on HTTP.
+//! * no head-of-line blocking: a slow-loading model (injected load
+//!   delay) never stalls a resident model's requests — loads run on the
+//!   lifecycle thread, routing is a lock-free snapshot read.
+//! * no silent request loss: requests still queued when their model is
+//!   LRU-unloaded get an explicit retryable rejection (`TokenEvent::
+//!   Retry`, counted in `retry_rejects`), never dropped.
+//! * idle reload: a republished checkpoint is picked up with zero
+//!   generate traffic — the reactor timer tick drives the probe.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use chon::config::RunConfig;
 use chon::coordinator::Trainer;
-use chon::serve::{client, ModelRegistry, RegistryOpts, ServeOpts, Server};
+use chon::serve::{
+    client, GenRequest, ModelRegistry, RegistryOpts, ReplySink, ServeOpts, Server,
+    TokenEvent,
+};
 use chon::util::json::Json;
 
 mod common;
@@ -63,7 +77,6 @@ fn start_server(
     let opts = ServeOpts {
         port: 0,
         http_port: Some(0),
-        workers: 10,
         ..ServeOpts::default()
     };
     let server = Server::bind(registry, &opts).expect("bind");
@@ -335,4 +348,226 @@ fn hot_reload_picks_up_republished_checkpoint() {
 
     let stats = stop(port, h);
     assert!(stat_of(&stats, "model_reloads") >= 1, "{stats}");
+}
+
+// ------------------------------------------- concurrent-load isolation
+
+/// A slow-loading model must never stall a resident model. Loads run on
+/// the lifecycle thread and routing is a lock-free snapshot read, so
+/// with a 1.5 s load delay injected into the lifecycle thread, requests
+/// to the already-resident model complete in normal time *while* the
+/// cold model's load is in flight — and both models still answer
+/// bitwise like dedicated servers.
+#[test]
+fn slow_model_load_does_not_stall_resident_models() {
+    let (_root_a, ckpt_a) = train_checkpoint("stall_a", 20, 7);
+    let (_root_b, ckpt_b) = train_checkpoint("stall_b", 20, 13);
+    let prompt = "the quick ";
+
+    // dedicated references, no delay
+    let (port, _, h) =
+        start_server(&[("default", ckpt_a.as_path())], RegistryOpts::default());
+    let ref_a = client::generate_once("127.0.0.1", port, prompt, 12, 0.0).unwrap().0;
+    stop(port, h);
+    let (port, _, h) =
+        start_server(&[("default", ckpt_b.as_path())], RegistryOpts::default());
+    let ref_b = client::generate_once("127.0.0.1", port, prompt, 12, 0.0).unwrap().0;
+    stop(port, h);
+
+    const DELAY_MS: u64 = 1500;
+    let (port, _, h) = start_server(
+        &[("alpha", ckpt_a.as_path()), ("beta", ckpt_b.as_path())],
+        RegistryOpts { load_delay_ms: DELAY_MS, ..RegistryOpts::default() },
+    );
+    // warm alpha (its own lazy load pays the injected delay once)
+    let warm =
+        client::generate_once_for("127.0.0.1", port, Some("alpha"), prompt, 12, 0.0)
+            .unwrap()
+            .0;
+    assert_eq!(warm, ref_a);
+
+    // kick off beta: its load now sleeps DELAY_MS on the lifecycle thread
+    let t_beta = Instant::now();
+    let beta = std::thread::spawn(move || {
+        client::generate_once_for("127.0.0.1", port, Some("beta"), prompt, 12, 0.0)
+            .unwrap()
+            .0
+    });
+    std::thread::sleep(Duration::from_millis(150)); // let beta enter Loading
+
+    // alpha keeps answering at full speed while beta loads
+    let mut worst = Duration::ZERO;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let a = client::generate_once_for(
+            "127.0.0.1",
+            port,
+            Some("alpha"),
+            prompt,
+            12,
+            0.0,
+        )
+        .unwrap()
+        .0;
+        worst = worst.max(t0.elapsed());
+        assert_eq!(a, ref_a, "resident model corrupted by a concurrent load");
+    }
+    assert!(
+        worst < Duration::from_millis(DELAY_MS - 300),
+        "resident-model request took {worst:?} while another model loaded \
+         (head-of-line blocking)"
+    );
+
+    let out_b = beta.join().unwrap();
+    assert!(
+        t_beta.elapsed() >= Duration::from_millis(DELAY_MS),
+        "load delay hook did not fire"
+    );
+    assert_eq!(out_b, ref_b, "slow-loaded model served wrong bytes");
+    stop(port, h);
+}
+
+// ------------------------------------------------------- idle reload probe
+
+/// A republished checkpoint is picked up with *zero* generate traffic:
+/// the reactor's timer tick (plus the `GET /stats` nudge) drives the
+/// reload probe, so an idle model converges to the new generation on
+/// its own — no request needed to trigger it.
+#[test]
+fn reload_probe_fires_without_generate_traffic() {
+    let (root, ckpt1) = train_checkpoint("idle_reload", 8, 11);
+    let prompt = "the quick ";
+    let (port, http_port, h) = start_server(
+        &[("live", root.as_path())],
+        RegistryOpts { reload_poll_ms: 0, ..RegistryOpts::default() },
+    );
+    // make the model resident, then go quiet
+    let _ = client::generate_once_for("127.0.0.1", port, Some("live"), prompt, 8, 0.0)
+        .unwrap();
+    assert_eq!(model_generation(http_port, "live"), 1);
+
+    let mut tr = Trainer::new(native_cfg(11)).unwrap();
+    tr.restore(&ckpt1).unwrap();
+    tr.train(6).unwrap();
+    let ckpt2 = tr.save_checkpoint_to(&root).unwrap();
+    assert_ne!(ckpt1, ckpt2, "republish should land at a new step dir");
+
+    // no generate traffic from here on — only /stats reads
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while model_generation(http_port, "live") != 2 {
+        assert!(
+            Instant::now() < deadline,
+            "idle server never picked up the republish"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+
+    // and the reloaded weights are really what is served
+    let out =
+        client::generate_once_for("127.0.0.1", port, Some("live"), prompt, 12, 0.0)
+            .unwrap()
+            .0;
+    let (port2, _, h2) =
+        start_server(&[("default", root.as_path())], RegistryOpts::default());
+    let ref_new = client::generate_once("127.0.0.1", port2, prompt, 12, 0.0)
+        .unwrap()
+        .0;
+    stop(port2, h2);
+    assert_eq!(out, ref_new, "idle reload served stale bytes");
+
+    let stats = stop(port, h);
+    assert!(stat_of(&stats, "model_reloads") >= 1, "{stats}");
+}
+
+// ---------------------------------------------------- unload retry drain
+
+/// LRU unload must not drop still-queued requests on the floor: whatever
+/// is waiting in the victim's queue when it is evicted gets an explicit
+/// retryable rejection (`TokenEvent::Retry`, counted in
+/// `retry_rejects`) — never a hang, never silence. The in-flight
+/// generation still finishes normally.
+#[test]
+fn lru_unload_rejects_queued_requests_retryably() {
+    let (_root_a, ckpt_a) = train_checkpoint("retry_a", 8, 7);
+    let (_root_b, ckpt_b) = train_checkpoint("retry_b", 8, 13);
+
+    // max_batch 1 keeps requests behind the active one *queued* in the
+    // batcher channel; the injected load delay keeps alpha's queue alive
+    // until beta's load completes and evicts alpha.
+    let mut reg = ModelRegistry::new(RegistryOpts {
+        max_resident_models: 1,
+        max_batch: 1,
+        load_delay_ms: 400,
+        ..RegistryOpts::default()
+    });
+    reg.register("alpha", &ckpt_a).unwrap();
+    reg.register("beta", &ckpt_b).unwrap();
+
+    let request = |prompt: &str, n: usize| {
+        let (tx, rx) = mpsc::channel();
+        (
+            GenRequest {
+                prompt: prompt.into(),
+                max_tokens: n,
+                temp: 0.0,
+                session: None,
+                reply: ReplySink::channel(tx),
+                cancel: Arc::new(AtomicBool::new(false)),
+            },
+            rx,
+        )
+    };
+    // block until the terminal event on one receiver
+    let outcome = |rx: &mpsc::Receiver<TokenEvent>| loop {
+        match rx.recv_timeout(Duration::from_secs(120)).expect("reply hung") {
+            TokenEvent::Token(_) => continue,
+            ev => break ev,
+        }
+    };
+
+    // make alpha resident (its first load pays the injected delay)
+    let (req, rx) = request("warm ", 4);
+    reg.submit(Some("alpha"), req).unwrap();
+    assert!(matches!(outcome(&rx), TokenEvent::Done { .. }));
+
+    // a serial pile-up on alpha: one active, the rest queued behind it
+    let mut rxs = Vec::new();
+    for i in 0..6 {
+        let (req, rx) = request(&format!("busy {i} "), 256);
+        reg.submit(Some("alpha"), req).unwrap();
+        rxs.push(rx);
+    }
+    std::thread::sleep(Duration::from_millis(50)); // first request goes active
+
+    // beta's slow load evicts alpha under the residency budget while
+    // alpha's queue is still populated
+    let (req_b, rx_b) = request("beta ", 4);
+    reg.submit(Some("beta"), req_b).unwrap();
+
+    let mut done = 0u64;
+    let mut retried = 0u64;
+    for rx in &rxs {
+        match outcome(rx) {
+            TokenEvent::Done { .. } => done += 1,
+            TokenEvent::Retry(why) => {
+                assert!(why.contains("unloaded"), "unexpected retry reason: {why}");
+                retried += 1;
+            }
+            ev => panic!("unexpected terminal event: {ev:?}"),
+        }
+    }
+    assert!(done >= 1, "the in-flight generation must finish, not be dropped");
+    assert!(
+        retried >= 1,
+        "queued requests vanished silently across the LRU unload \
+         ({done} done, {retried} retried of 6)"
+    );
+    assert!(
+        matches!(outcome(&rx_b), TokenEvent::Done { .. }),
+        "beta request lost"
+    );
+
+    let line = reg.stats_line();
+    assert_eq!(stat_of(&line, "retry_rejects"), retried, "{line}");
+    reg.shutdown();
 }

@@ -12,7 +12,7 @@ use chon::data::tokenizer::Tokenizer;
 use chon::runtime::native::model::init_params;
 use chon::runtime::native::model_cfg;
 use chon::runtime::native::recipe::recipe;
-use chon::serve::{Engine, GenRequest, RequestBatcher, StoreOpts, TokenEvent};
+use chon::serve::{Engine, GenRequest, ReplySink, RequestBatcher, StoreOpts, TokenEvent};
 use chon::util::prng::Rng;
 use chon::util::proptest::{check, Gen};
 
@@ -51,6 +51,7 @@ fn drain(rx: &Receiver<TokenEvent>) -> (Vec<u8>, usize) {
             TokenEvent::Token(p) => bytes.extend(p),
             TokenEvent::Done { n_tokens, .. } => return (bytes, n_tokens),
             TokenEvent::Error(e) => panic!("generation failed: {e}"),
+            TokenEvent::Retry(e) => panic!("unexpected retry: {e}"),
         }
     }
 }
@@ -95,7 +96,7 @@ fn concurrent_clients_get_their_own_completion() {
                 max_tokens,
                 temp: 0.0,
                 session: None,
-                reply: tx,
+                reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
             })
             .unwrap();

@@ -28,13 +28,14 @@ use chon::runtime::native::model_cfg;
 use chon::runtime::native::recipe::recipe;
 use chon::serve::{
     client, protocol, Engine, GenRequest, ModelRegistry, RegistryOpts,
-    RequestBatcher, ServeOpts, Server, SessionStore, StoreOpts, TokenEvent,
+    ReplySink, RequestBatcher, ServeOpts, Server, SessionStore, StoreOpts,
+    TokenEvent,
 };
 use chon::util::json::Json;
 use chon::util::prng::Rng;
 
 mod common;
-use common::http_request;
+use common::{http_request, KeepAliveClient};
 
 fn native_cfg(model: &str, recipe: &str, seed: u64) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -79,7 +80,6 @@ fn serve_opts(max_batch: usize, max_resident: usize) -> (ServeOpts, RegistryOpts
         ServeOpts {
             port: 0,
             http_port: Some(0),
-            workers: 10,
             ..ServeOpts::default()
         },
         RegistryOpts {
@@ -179,6 +179,7 @@ fn drain(rx: &Receiver<TokenEvent>) -> Vec<u8> {
             TokenEvent::Token(p) => bytes.extend(p),
             TokenEvent::Done { .. } => return bytes,
             TokenEvent::Error(e) => panic!("generation failed: {e}"),
+            TokenEvent::Retry(e) => panic!("unexpected retry: {e}"),
         }
     }
 }
@@ -192,7 +193,7 @@ fn session_turn(b: &RequestBatcher, sid: &str, prompt: &str, n: usize) -> Vec<u8
             max_tokens: n,
             temp: 0.0,
             session: Some(sid.into()),
-            reply: tx,
+            reply: ReplySink::channel(tx),
             cancel: Arc::new(AtomicBool::new(false)),
         })
         .unwrap();
@@ -412,6 +413,168 @@ fn http_generate_matches_line_protocol() {
     // graceful drain over HTTP
     let (status, _) = http_request(http_port, "POST", "/shutdown", "");
     assert_eq!(status, 200);
+    h.join().unwrap();
+}
+
+// -------------------------------------------------------------- front end
+
+/// N generations pipelined on ONE keep-alive HTTP connection (mixed
+/// models) are byte-identical to the same N requests on N fresh
+/// Connection:close connections: the reactor's per-connection request
+/// queue changes scheduling, never bytes.
+#[test]
+fn http_keepalive_pipelining_matches_fresh_connections() {
+    let ckpt = train_checkpoint("keepalive", 20);
+    let (opts, reg_opts) = serve_opts(4, 0);
+    let mut registry = ModelRegistry::new(reg_opts);
+    registry.register("default", &ckpt).expect("register default");
+    registry.register("alt", &ckpt).expect("register alt");
+    let server = Server::bind(registry, &opts).expect("bind");
+    let port = server.port();
+    let http_port = server.http_port().expect("http enabled");
+    let h = run_server(server);
+
+    let reqs: Vec<(&str, &str, String)> = (0..6)
+        .map(|i| {
+            let model = if i % 2 == 0 { "default" } else { "alt" };
+            (
+                "POST",
+                "/generate",
+                format!(
+                    r#"{{"prompt": "pipe {i} ", "max_tokens": 6, "model": "{model}"}}"#
+                ),
+            )
+        })
+        .collect();
+
+    // reference: one fresh connection per request
+    let fresh: Vec<(u16, Vec<u8>)> = reqs
+        .iter()
+        .map(|(m, p, b)| http_request(http_port, m, p, b))
+        .collect();
+    for (status, body) in &fresh {
+        assert_eq!(*status, 200, "{}", String::from_utf8_lossy(body));
+    }
+
+    // all six requests written before any response is read
+    let mut pipelined_client = KeepAliveClient::connect(http_port);
+    let pipelined = pipelined_client.pipeline(&reqs);
+    assert_eq!(
+        pipelined, fresh,
+        "pipelined keep-alive responses diverged from fresh connections"
+    );
+
+    // and sequential keep-alive round trips match too
+    let mut seq_client = KeepAliveClient::connect(http_port);
+    for (i, (m, p, b)) in reqs.iter().enumerate() {
+        let got = seq_client.request(m, p, b);
+        assert_eq!(got, fresh[i], "keep-alive round trip {i} diverged");
+    }
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
+/// A line-protocol client dribbling its request byte by byte and an HTTP
+/// client parked mid-headers never stall other connections — and the
+/// dribbled request still completes bit-exactly once it arrives.
+#[test]
+fn slowloris_clients_do_not_stall_other_requests() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let ckpt = train_checkpoint("slowloris", 20);
+    let (srv, port) = start_server(&ckpt, serve_opts(4, 0));
+    let http_port = srv.http_port().expect("http enabled");
+    let h = run_server(srv);
+
+    let reference = client::generate_once("127.0.0.1", port, "slow drip ", 6, 0.0)
+        .unwrap()
+        .0;
+
+    // park an HTTP connection mid-header line for the whole test
+    let mut stuck = TcpStream::connect(("127.0.0.1", http_port)).unwrap();
+    stuck
+        .write_all(b"POST /generate HTTP/1.1\r\nHost: t\r\nContent-Le")
+        .unwrap();
+
+    // dribble the same GEN request a few bytes at a time, interleaving
+    // full-speed requests that must complete while the drip is partial
+    let mut slow = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let line = protocol::format_gen(6, 0.0, "slow drip ");
+    for (i, chunk) in line.as_bytes().chunks(3).enumerate() {
+        slow.write_all(chunk).unwrap();
+        slow.flush().unwrap();
+        if i % 3 == 0 {
+            let (text, n, _) =
+                client::generate_once("127.0.0.1", port, "slow drip ", 6, 0.0)
+                    .unwrap();
+            assert_eq!(n, 6);
+            assert_eq!(text, reference, "fast request diverged mid-drip");
+        }
+    }
+
+    // the dribbled request streams back the exact same bytes
+    let mut reader = BufReader::new(slow.try_clone().unwrap());
+    let mut bytes = Vec::new();
+    let mut resp = String::new();
+    loop {
+        resp.clear();
+        assert!(reader.read_line(&mut resp).unwrap() > 0, "connection died");
+        let l = resp.trim_end_matches(['\r', '\n']);
+        if let Some(piece) = l.strip_prefix("TOK ") {
+            bytes.extend(protocol::unescape_bytes(piece).unwrap());
+        } else if l.starts_with("DONE ") {
+            break;
+        } else {
+            panic!("unexpected response line {l:?}");
+        }
+    }
+    assert_eq!(
+        String::from_utf8_lossy(&bytes),
+        reference,
+        "dribbled request produced different bytes"
+    );
+
+    drop(stuck); // the half-sent HTTP request just goes away
+    let (status, _) = http_request(http_port, "GET", "/stats", "");
+    assert_eq!(status, 200);
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
+/// Soak: ~1k idle connections parked on the reactor change nothing —
+/// concurrent generations stay byte-identical and every idle connection
+/// survives the run.
+#[test]
+fn idle_connection_soak_leaves_serving_undisturbed() {
+    let ckpt = train_checkpoint("idle_soak", 20);
+    let (srv, port) = start_server(&ckpt, serve_opts(4, 0));
+    let h = run_server(srv);
+
+    let baseline = client::generate_once("127.0.0.1", port, "soak ", 8, 0.0)
+        .unwrap()
+        .0;
+
+    // both ends of every idle conn live in this test process (2 fds
+    // each); size the fleet to the limit we can actually get
+    let limit = chon::serve::reactor::raise_nofile_limit(8192).unwrap_or(1024);
+    let n = ((limit as usize).saturating_sub(256) / 2).min(1000);
+    assert!(n >= 64, "not enough fd headroom for the soak (limit {limit})");
+    let mut fleet =
+        client::IdleFleet::open("127.0.0.1", port, n).expect("open idle fleet");
+
+    for i in 0..3 {
+        let (text, ntok, _) =
+            client::generate_once("127.0.0.1", port, "soak ", 8, 0.0).unwrap();
+        assert_eq!(ntok, 8);
+        assert_eq!(text, baseline, "generation {i} diverged under {n} idle conns");
+    }
+    assert_eq!(fleet.check_alive(), n, "idle connections were dropped");
+    drop(fleet);
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
     h.join().unwrap();
 }
 

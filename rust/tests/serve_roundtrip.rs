@@ -43,7 +43,6 @@ fn start_server(ckpt: &PathBuf, max_batch: usize) -> (u16, JoinHandle<String>) {
     let opts = ServeOpts {
         port: 0,            // ephemeral
         http_port: Some(0), // ephemeral
-        workers: 8,
         ..ServeOpts::default()
     };
     let server = Server::bind(registry, &opts).expect("bind");
