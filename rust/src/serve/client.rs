@@ -15,7 +15,7 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -54,14 +54,20 @@ impl Default for ClientOpts {
     }
 }
 
-/// Dead-socket detection is the server's job now: the reactor closes a
-/// connection it gives up on, which surfaces here as EOF mid-read. No
-/// client-side read timeout — the old 200 ms-granularity timeout loop
-/// existed to paper over the thread-per-connection server's busy-poll.
+/// Liveness backstop for reads. Dead-socket detection is primarily the
+/// server's job now (the reactor closes a connection it gives up on,
+/// which surfaces here as EOF mid-read) — the old 200 ms-granularity
+/// busy-poll loop is gone — but a server hung without closing the
+/// socket (stuck reactor, network drop with no RST) must still fail the
+/// client instead of blocking it forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
 fn connect(host: &str, port: u16) -> Result<TcpStream> {
     let addr = format!("{host}:{port}");
     let s = TcpStream::connect(&addr).with_context(|| format!("connecting {addr}"))?;
     s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(READ_TIMEOUT))
+        .context("setting read timeout")?;
     Ok(s)
 }
 

@@ -869,7 +869,15 @@ impl Lifecycle {
             // (next Load cmd) instead of into the dying channel; anything
             // already in the channel comes back in `leftovers` below
             let mut route = entry.route.lock().expect("registry poisoned");
-            *route = Route::Cold;
+            match &*route {
+                // a racing submit's republish probe already flipped this
+                // entry to Loading and queued a Cmd::Reload: keep the
+                // queue — that pending pass finds no batcher, falls back
+                // to a plain load, and install() flushes the queue, so
+                // nothing queued is ever dropped
+                Route::Loading(_) => {}
+                _ => *route = Route::Cold,
+            }
         }
         let Some(batcher) = self.batchers.remove(&idx) else {
             return;

@@ -447,8 +447,11 @@ impl Reactor {
             if now >= deadline && !generating {
                 self.close_conn(tok);
             } else {
-                // still active (or mid-generation): re-arm
-                self.wheel.insert(tok, deadline.max(now + idle), now);
+                // still active (or mid-generation): re-arm at the actual
+                // deadline (clamped to the wheel granularity) so eviction
+                // fires within one tick of idle_timeout, not up to 2x it
+                let gran = Duration::from_millis(TimerWheel::tick_ms() as u64);
+                self.wheel.insert(tok, deadline.max(now + gran), now);
             }
         }
         let stalled: Vec<u64> = self
@@ -580,27 +583,15 @@ impl Reactor {
             self.close_conn(tok);
             return;
         }
-        let saw_eof = matches!(end, ReadEnd::Eof);
-        self.advance(tok);
-        if saw_eof {
-            let done = {
-                let Some(conn) = self.conns.get_mut(&tok) else { return };
-                conn.peer_closed = true;
-                if conn.gen.is_none() && conn.outbuf.is_empty() {
-                    true
-                } else {
-                    // half-close: finish streaming the in-flight
-                    // response, then close (no more requests can arrive)
-                    conn.closing = true;
-                    false
-                }
-            };
-            if done {
-                self.close_conn(tok);
-            } else {
-                self.update_interest(tok);
-            }
+        if matches!(end, ReadEnd::Eof) {
+            // half-close: every complete request already buffered still
+            // gets served (write-all-then-shutdown batch clients rely on
+            // it, matching the threaded front end's read_line loop);
+            // advance() flips `closing` once the backlog is drained
+            let Some(conn) = self.conns.get_mut(&tok) else { return };
+            conn.peer_closed = true;
         }
+        self.advance(tok);
     }
 
     /// Parse-and-dispatch loop: strictly one request at a time per
@@ -651,6 +642,14 @@ impl Reactor {
                         break;
                     }
                 },
+            }
+        }
+        // peer half-closed and nothing left in flight: the residual
+        // inbuf bytes (if any) can never complete into a request, so the
+        // connection is done once the outbuf drains
+        if let Some(conn) = self.conns.get_mut(&tok) {
+            if conn.peer_closed && conn.gen.is_none() {
+                conn.closing = true;
             }
         }
         self.flush_conn(tok);
@@ -1140,7 +1139,11 @@ impl Reactor {
                     }
                 }
             }
-            dead || (conn.outbuf.is_empty() && conn.closing)
+            // `closing` only takes effect once nothing is in flight:
+            // drain and half-close both let the current generation
+            // finish streaming (finish_generation/advance re-flush and
+            // close once `gen` clears)
+            dead || (conn.outbuf.is_empty() && conn.closing && conn.gen.is_none())
         };
         if dead {
             self.close_conn(tok);

@@ -544,6 +544,74 @@ fn slowloris_clients_do_not_stall_other_requests() {
     h.join().unwrap();
 }
 
+/// A write-all-then-shutdown batch client: every pipelined GEN line is
+/// written before the client half-closes, so the server sees EOF with
+/// the whole backlog still buffered. Every request must be served, in
+/// order and byte-identical to fresh connections, before the server
+/// closes — the half-close neither truncates the in-flight stream nor
+/// discards the buffered pipeline (the threaded front end's read_line
+/// loop served every line received before EOF).
+#[test]
+fn half_closed_batch_client_gets_every_buffered_response() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{Shutdown, TcpStream};
+
+    let ckpt = train_checkpoint("halfclose", 20);
+    let (srv, port) = start_server(&ckpt, serve_opts(4, 0));
+    let h = run_server(srv);
+
+    let prompts: Vec<String> =
+        (0..3).map(|i| format!("batch eof {i} ")).collect();
+    let solo: Vec<String> = prompts
+        .iter()
+        .map(|p| client::generate_once("127.0.0.1", port, p, 8, 0.0).unwrap().0)
+        .collect();
+
+    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let mut batch = String::new();
+    for p in &prompts {
+        batch.push_str(&protocol::format_gen(8, 0.0, p));
+    }
+    s.write_all(batch.as_bytes()).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+
+    // responses come back in request order, then a clean EOF
+    let mut reader = BufReader::new(s);
+    let mut outs: Vec<String> = Vec::new();
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut resp = String::new();
+    loop {
+        resp.clear();
+        if reader.read_line(&mut resp).unwrap() == 0 {
+            break; // server closed after draining the backlog
+        }
+        let l = resp.trim_end_matches(['\r', '\n']);
+        if let Some(piece) = l.strip_prefix("TOK ") {
+            bytes.extend(protocol::unescape_bytes(piece).unwrap());
+        } else if l.starts_with("DONE ") {
+            outs.push(String::from_utf8_lossy(&bytes).to_string());
+            bytes.clear();
+        } else {
+            panic!("unexpected response line {l:?}");
+        }
+    }
+    assert_eq!(
+        outs.len(),
+        prompts.len(),
+        "half-closed batch client lost responses: got {outs:?}"
+    );
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(
+            *out, solo[i],
+            "pipelined response {i} diverged from a fresh connection"
+        );
+    }
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
 /// Soak: ~1k idle connections parked on the reactor change nothing —
 /// concurrent generations stay byte-identical and every idle connection
 /// survives the run.
