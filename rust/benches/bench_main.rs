@@ -965,6 +965,44 @@ fn perf() -> Result<()> {
             ]);
         }
 
+        // observability overhead: the same b=8 decode with the full
+        // metrics path on — one stage-histogram record per step plus the
+        // --obs-outliers per-row HCP taps (hit counters + residual-energy
+        // sums inside the quantized GEMM). The baseline gate diffs this
+        // entry like any other: instrumentation must stay near-free
+        // relative to serve_decode_b8.
+        {
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let mut eng = chon::serve::Engine::from_parts(
+                cfg,
+                chon::runtime::native::recipe::recipe("chon")?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+            );
+            let taps = eng.build_outlier_obs();
+            eng.attach_outlier_obs(taps);
+            let mobs = chon::obs::ModelObs::default();
+            let batch = 8usize;
+            let mut sessions: Vec<chon::serve::Session> =
+                (0..batch).map(|_| eng.new_session()).collect();
+            let toks: Vec<u32> = (0..batch as u32).map(|i| 97 + i).collect();
+            let t = time_auto(300.0, || {
+                let t0 = std::time::Instant::now();
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                std::hint::black_box(eng.decode_step(&mut refs, &toks));
+                mobs.decode_token.record_elapsed(t0.elapsed());
+            });
+            record("serve_metrics_overhead", t.median_ms);
+            table.row(&[
+                format!("serve decode +metrics (b={batch})"),
+                "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
+            ]);
+        }
+
         // two-model registry: one greedy request per model per iteration
         // through the full submit→batcher→reply path
         {
@@ -998,6 +1036,7 @@ fn perf() -> Result<()> {
                         session: None,
                         reply: chon::serve::ReplySink::channel(tx),
                         cancel: Arc::new(AtomicBool::new(false)),
+                        queued_at: std::time::Instant::now(),
                     },
                 )
                 .expect("submit");

@@ -86,6 +86,12 @@ pub struct RunConfig {
     pub prompt: String,
     /// client: send SHUTDOWN instead of generating
     pub shutdown: bool,
+    /// serve: sample per-request HCP hot-channel hits and residual
+    /// energy into `/metrics` (small per-token overhead; off by default)
+    pub obs_outliers: bool,
+    /// client: scrape `GET /metrics` on this port before and after the
+    /// load run and assert key series exist and increase (0 = off)
+    pub metrics_port: u16,
 }
 
 impl Default for RunConfig {
@@ -129,6 +135,8 @@ impl Default for RunConfig {
             temp: 0.0,
             prompt: "the ".into(),
             shutdown: false,
+            obs_outliers: false,
+            metrics_port: 0,
         }
     }
 }
@@ -274,6 +282,9 @@ impl RunConfig {
                 "prompt" => self.prompt = next()?,
                 // value-less flag: nothing to consume
                 "shutdown" => self.shutdown = true,
+                // value-less flag: nothing to consume
+                "obs-outliers" => self.obs_outliers = true,
+                "metrics-port" => self.metrics_port = next()?.parse()?,
                 "config" => {
                     let loaded = RunConfig::from_file(&PathBuf::from(next()?))?;
                     *self = loaded;
@@ -451,6 +462,21 @@ mod tests {
         .unwrap();
         assert_eq!(c.shards, 4);
         assert_eq!(c.resume.as_deref(), Some(std::path::Path::new("ckpts/run")));
+    }
+
+    #[test]
+    fn obs_flags_parse() {
+        let mut c = RunConfig::default();
+        assert!(!c.obs_outliers);
+        assert_eq!(c.metrics_port, 0);
+        c.apply_args(&[
+            "--obs-outliers".into(),
+            "--metrics-port".into(),
+            "7412".into(),
+        ])
+        .unwrap();
+        assert!(c.obs_outliers);
+        assert_eq!(c.metrics_port, 7412);
     }
 
     #[test]

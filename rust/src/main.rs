@@ -81,6 +81,10 @@ SERVE/CLIENT FLAGS:
   --max-tokens N    (default 32)          --temp T       (default 0 = greedy)
   --prompt TEXT     --session ID          (continue a named session, SGEN)
   --shutdown        (ask the server to drain + stop)
+  --obs-outliers    serve: sample per-request HCP hot-channel hits and
+                    residual energy into GET /metrics (small decode cost)
+  --metrics-port P  client load mode: scrape /metrics on P before and after
+                    the run and assert key series exist and increase
 
 BENCH-DIFF FLAGS:
   --baseline FILE   (default benches/baseline/perf_baseline.json)
@@ -93,7 +97,8 @@ fixed --seed. Wire protocol: `GEN <max_tokens> <temp>\\t<prompt>` (or
 `SGEN <session> ...` to continue a named session, either behind a
 `MODEL <name>` routing prefix) in, streamed `TOK <piece>` lines +
 `DONE <n> <ms>` out; HTTP: POST /generate (optional \"model\" key),
-GET /stats, POST /shutdown (see rust/README.md).
+GET /stats, GET /metrics (Prometheus text), POST /shutdown (see
+rust/README.md).
 ";
 
 fn is_native(cfg: &RunConfig) -> bool {
@@ -294,6 +299,8 @@ fn main() -> Result<()> {
                 max_resident_models: cfg.max_resident_models,
                 reload_poll_ms: cfg.reload_poll_ms,
                 load_delay_ms: 0,
+                obs: chon::obs::global(),
+                obs_outliers: cfg.obs_outliers,
             };
             let mut registry = ModelRegistry::new(reg_opts);
             for (name, dir) in &entries {
@@ -360,8 +367,23 @@ fn main() -> Result<()> {
                     models: cfg.client_models.clone(),
                     idle_conns: cfg.idle_conns,
                 };
+                // scrape-and-assert mode: snapshot /metrics before the
+                // run so the post-run scrape can prove movement
+                let metrics_before = if cfg.metrics_port > 0 {
+                    Some(client::fetch_metrics(&cfg.host, cfg.metrics_port)?)
+                } else {
+                    None
+                };
                 let report = client::run_load(&opts)?;
                 client::print_report(&opts, &report);
+                if let Some(before) = &metrics_before {
+                    let after =
+                        client::fetch_metrics(&cfg.host, cfg.metrics_port)?;
+                    client::assert_metrics_progress(before, &after)?;
+                    println!(
+                        "metrics scrape OK: key series present and increasing"
+                    );
+                }
                 if report.requests_ok() == 0
                     || report.failures > 0
                     || report.empty_responses > 0

@@ -1,0 +1,202 @@
+//! Prometheus text-exposition writer (format version 0.0.4).
+//!
+//! Renders metric families into the plain-text scrape format:
+//! `# HELP` / `# TYPE` header lines once per family, then one sample
+//! line per label set. Histograms expand into cumulative `_bucket`
+//! series (`le` upper bounds, inclusive, ending in `+Inf`) plus `_sum`
+//! and `_count`, exactly as the histogram data model requires. Label
+//! values are escaped per the spec (`\` → `\\`, `"` → `\"`, newline →
+//! `\n`).
+//!
+//! Serve the result with content type `text/plain; version=0.0.4`
+//! ([`CONTENT_TYPE`]).
+
+use crate::obs::metrics::{bucket_bound, HistSnapshot, N_FINITE};
+
+/// The scrape response content type.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Escape one label *value* for the text format.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(out: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label(v));
+        out.push('"');
+    }
+    out.push('}');
+}
+
+/// Incremental builder for one scrape body.
+#[derive(Default)]
+pub struct Expo {
+    out: String,
+}
+
+impl Expo {
+    pub fn new() -> Expo {
+        Expo { out: String::new() }
+    }
+
+    /// Start a family: HELP + TYPE lines. Call once per metric name,
+    /// before any of its samples. `kind` is `counter`, `gauge` or
+    /// `histogram`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        // HELP text shares the label-value escape set minus the quote
+        self.out.push_str(&help.replace('\\', "\\\\").replace('\n', "\\n"));
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// One integer-valued sample line.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.out.push_str(name);
+        render_labels(&mut self.out, labels);
+        self.out.push(' ');
+        self.out.push_str(&value.to_string());
+        self.out.push('\n');
+    }
+
+    /// One float-valued sample line.
+    pub fn sample_f64(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.out.push_str(name);
+        render_labels(&mut self.out, labels);
+        self.out.push(' ');
+        self.out.push_str(&format!("{value}"));
+        self.out.push('\n');
+    }
+
+    /// A full histogram under one label set: cumulative `_bucket` lines
+    /// (each `le` counts observations `<=` that bound), `_sum`, `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        snap: &HistSnapshot,
+    ) {
+        let bucket_name = format!("{name}_bucket");
+        let mut cum = 0u64;
+        for (i, &b) in snap.buckets.iter().enumerate() {
+            cum += b;
+            let le = if i < N_FINITE {
+                bucket_bound(i).to_string()
+            } else {
+                "+Inf".to_string()
+            };
+            let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+            with_le.push(("le", le.as_str()));
+            self.sample(&bucket_name, &with_le, cum);
+        }
+        self.sample(&format!("{name}_sum"), labels, snap.sum);
+        self.sample(&format!("{name}_count"), labels, cum);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Histogram;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn counter_and_gauge_lines() {
+        let mut e = Expo::new();
+        e.family("chon_requests_total", "counter", "Requests admitted.");
+        e.sample("chon_requests_total", &[("model", "alpha")], 42);
+        e.family("chon_open_conns", "gauge", "Open connections.");
+        e.sample("chon_open_conns", &[], 3);
+        let text = e.finish();
+        assert!(text.contains("# HELP chon_requests_total Requests admitted.\n"));
+        assert!(text.contains("# TYPE chon_requests_total counter\n"));
+        assert!(text.contains("chon_requests_total{model=\"alpha\"} 42\n"));
+        assert!(text.contains("# TYPE chon_open_conns gauge\n"));
+        assert!(text.contains("chon_open_conns 3\n"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, value) = line.rsplit_once(' ').expect("sample line");
+            value.parse::<f64>().expect("numeric value");
+        }
+    }
+
+    #[test]
+    fn histogram_is_cumulative_and_consistent() {
+        let h = Histogram::new();
+        for v in [1u64, 3, 3, 100, 1 << 30] {
+            h.record(v);
+        }
+        let mut e = Expo::new();
+        e.family("chon_lat_us", "histogram", "demo");
+        e.histogram("chon_lat_us", &[("stage", "decode")], &h.snapshot());
+        let text = e.finish();
+        // cumulative buckets never decrease and end at the total count
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("chon_lat_us_bucket{") {
+                let v: u64 =
+                    rest.rsplit_once(' ').unwrap().1.parse().unwrap();
+                assert!(v >= last, "non-monotone cumulative bucket: {line}");
+                last = v;
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, crate::obs::metrics::N_BUCKETS);
+        assert!(text.contains("le=\"+Inf\"} 5\n"));
+        assert!(text.contains("chon_lat_us_count{stage=\"decode\"} 5\n"));
+        let sum = 1 + 3 + 3 + 100 + (1u64 << 30);
+        assert!(text.contains(&format!("chon_lat_us_sum{{stage=\"decode\"}} {sum}\n")));
+    }
+
+    #[test]
+    fn escaped_labels_round_trip_in_lines() {
+        let mut e = Expo::new();
+        e.family("m", "gauge", "help with \\ and\nnewline");
+        e.sample("m", &[("path", "a\"b\\c\nd")], 1);
+        let text = e.finish();
+        assert!(text.contains("# HELP m help with \\\\ and\\nnewline\n"));
+        assert!(text.contains("m{path=\"a\\\"b\\\\c\\nd\"} 1\n"));
+    }
+}

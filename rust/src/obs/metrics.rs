@@ -1,0 +1,257 @@
+//! Lock-free metric primitives: counters, gauges, and log₂-bucket
+//! latency histograms (the `prometheus`-crate substitute's core types —
+//! the crate itself is not in the offline vendor set, matching the
+//! `logger.rs`-instead-of-`log` convention).
+//!
+//! Everything here is a plain atomic or a fixed array of atomics:
+//! `record()` on the hot decode path is one relaxed `fetch_add` per
+//! bucket plus one for the sum, no locks, no allocation. Readers take a
+//! [`HistSnapshot`] (a plain value type) and derive counts, quantiles
+//! and Prometheus cumulative buckets from it; snapshots of live
+//! histograms are internally consistent enough for monitoring (each
+//! bucket is read once, the derived `count` is exactly the sum of the
+//! bucket reads, so `_count == Σ buckets` always holds in exposition).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of finite histogram buckets: upper bounds 2^0 .. 2^25 µs
+/// (1 µs .. ~33.5 s). Values above the last finite bound land in the
+/// implicit +Inf bucket at index `N_FINITE`.
+pub const N_FINITE: usize = 26;
+/// Total buckets including +Inf.
+pub const N_BUCKETS: usize = N_FINITE + 1;
+
+/// Upper bound (inclusive, µs) of finite bucket `i`.
+pub fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Index of the bucket a value falls in: the smallest `i` with
+/// `v <= 2^i`, clamped to the +Inf bucket. Zero lands in bucket 0
+/// (le="1") — sub-microsecond spans are real on the flush path.
+pub fn bucket_idx(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    let i = (64 - (v - 1).leading_zeros()) as usize;
+    i.min(N_FINITE)
+}
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can move both ways (set) or track a high-water
+/// mark (`record_max`).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log₂-spaced latency histogram over µs values.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    /// sum of recorded values (µs) — the Prometheus `_sum` series
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (µs). Lock-free: two relaxed adds.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_idx(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record an elapsed `Duration` in µs.
+    pub fn record_elapsed(&self, d: std::time::Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time copy of the bucket counts and sum.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A plain-value histogram state: what exposition and quantile math
+/// operate on. Obtainable from a live [`Histogram`] or by merging
+/// snapshots (per-shard histograms roll up by bucket-wise addition).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise merge (+= on every bucket and the sum).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// rank-`ceil(q·n)` observation. Because buckets are log₂-spaced the
+    /// estimate `u` of a true value `p >= 1` satisfies `p <= u < 2p` —
+    /// a factor-of-two latency resolution, which is what p50/p99/p999
+    /// dashboards need. Returns 0 on an empty histogram; observations in
+    /// the +Inf bucket report twice the last finite bound (saturated).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return if i < N_FINITE {
+                    bucket_bound(i)
+                } else {
+                    bucket_bound(N_FINITE - 1).saturating_mul(2)
+                };
+            }
+        }
+        bucket_bound(N_FINITE - 1).saturating_mul(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_idx(0), 0);
+        assert_eq!(bucket_idx(1), 0);
+        assert_eq!(bucket_idx(2), 1);
+        assert_eq!(bucket_idx(3), 2);
+        assert_eq!(bucket_idx(4), 2);
+        assert_eq!(bucket_idx(5), 3);
+        // every exact power of two sits in its own bucket (le inclusive)
+        for i in 0..N_FINITE {
+            assert_eq!(bucket_idx(bucket_bound(i)), i, "2^{i}");
+        }
+        // one past the last finite bound overflows to +Inf
+        assert_eq!(bucket_idx(bucket_bound(N_FINITE - 1) + 1), N_FINITE);
+        assert_eq!(bucket_idx(u64::MAX), N_FINITE);
+    }
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.record_max(3);
+        assert_eq!(g.get(), 7);
+        g.record_max(11);
+        assert_eq!(g.get(), 11);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn record_snapshot_merge() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum, 1_001_003);
+        let mut m = s.clone();
+        m.merge(&s);
+        assert_eq!(m.count(), 10);
+        assert_eq!(m.sum, 2 * s.sum);
+        for i in 0..N_BUCKETS {
+            assert_eq!(m.buckets[i], 2 * s.buckets[i]);
+        }
+    }
+
+    #[test]
+    fn quantile_empty_and_single() {
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+        let h = Histogram::new();
+        h.record(100);
+        let s = h.snapshot();
+        // a single sample is every quantile, within the 2x bucket bound
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let u = s.quantile(q);
+            assert!((100..200).contains(&u), "q{q} -> {u}");
+        }
+    }
+
+    #[test]
+    fn quantile_bounds_factor_two() {
+        // any recorded value p >= 1 reports an estimate u in [p, 2p)
+        let mut v = 1u64;
+        while v <= bucket_bound(N_FINITE - 1) {
+            let h = Histogram::new();
+            h.record(v);
+            let u = h.snapshot().quantile(0.5);
+            assert!(u >= v && u < 2 * v, "p={v} u={u}");
+            v = v * 3 + 1;
+        }
+    }
+}

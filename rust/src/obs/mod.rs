@@ -1,0 +1,332 @@
+//! Server-side observability: the zero-dependency metrics subsystem
+//! behind `GET /metrics`.
+//!
+//! Structure (the `prometheus`-crate substitute, matching the
+//! `logger.rs`-instead-of-`log` convention — no crates beyond std):
+//!
+//! * [`metrics`] — lock-free counters, gauges, and log₂-bucket latency
+//!   histograms with snapshot/merge/quantile.
+//! * [`expo`] — the Prometheus text-exposition writer (format 0.0.4).
+//! * [`outliers`] — per-op HCP hot-channel taps for `--obs-outliers`.
+//! * [`Registry`] — one server's metric tree: reactor-level spans and
+//!   health gauges plus per-model stage histograms, rendered into one
+//!   scrape body by [`Registry::render`].
+//!
+//! Stage spans cover the whole request path —
+//! accept → parse → queue-wait → prefill → decode-per-token →
+//! write-flush — so server-side p50/p99/p999 exist per stage and per
+//! model without client cooperation. The serve front end owns an
+//! `Arc<Registry>` (threaded through `RegistryOpts`, so in-process test
+//! servers stay isolated); [`global`] provides the process-wide instance
+//! the `chon serve` binary uses.
+
+pub mod expo;
+pub mod metrics;
+pub mod outliers;
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use metrics::{Gauge, Histogram};
+use outliers::OutlierObs;
+
+/// Request-path stage histograms of one served model. Recorded by the
+/// batcher (queue-wait, prefill, per-token decode) and the reactor
+/// (write-flush); all values in µs.
+#[derive(Default)]
+pub struct ModelObs {
+    /// submit → admission into a prefill group
+    pub queue_wait: Histogram,
+    /// one batched prefill pass over an admitted group
+    pub prefill: Histogram,
+    /// one batched decode step (= one token per active session)
+    pub decode_token: Histogram,
+    /// one reactor flush of this model's generation bytes to the socket
+    pub write_flush: Histogram,
+    /// HCP outlier taps, installed at engine load under `--obs-outliers`
+    pub outliers: OnceLock<Arc<OutlierObs>>,
+}
+
+/// Reactor/connection-level spans and health gauges (model-independent).
+#[derive(Default)]
+pub struct ServerObs {
+    /// accepting + registering one connection
+    pub accept: Histogram,
+    /// parsing bytes into one complete request
+    pub parse: Histogram,
+    /// how late the 1 Hz housekeeping tick fired (µs, last tick)
+    pub tick_lag_us: Gauge,
+    /// token events drained from the generation mailbox per wake (last)
+    pub mailbox_depth: Gauge,
+    /// currently open connections
+    pub open_conns: Gauge,
+    /// largest per-connection out-buffer observed (bytes, high-water)
+    pub outbuf_highwater: Gauge,
+}
+
+/// One server's metric tree.
+#[derive(Default)]
+pub struct Registry {
+    pub server: ServerObs,
+    models: Mutex<Vec<(String, Arc<ModelObs>)>>,
+}
+
+/// How many weight-score channels are exposed per op (cardinality cap;
+/// hit counters render only channels that actually fired).
+const WSCORE_TOP: usize = 8;
+
+// Registry rides inside `RegistryOpts` (which derives Debug); its metric
+// tree is not useful debug output, so summarize.
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.models.lock().map(|m| m.len()).unwrap_or(0);
+        write!(f, "obs::Registry({n} models)")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Arc<Registry> {
+        Arc::new(Registry::default())
+    }
+
+    /// Get-or-create the stage histograms of `model`.
+    pub fn model(&self, model: &str) -> Arc<ModelObs> {
+        let mut models = self.models.lock().unwrap();
+        if let Some((_, m)) = models.iter().find(|(n, _)| n == model) {
+            return m.clone();
+        }
+        let m = Arc::new(ModelObs::default());
+        models.push((model.to_string(), m.clone()));
+        m
+    }
+
+    /// Render every family owned by this registry into Prometheus text.
+    /// (The serve front end appends its `ServeStats`-derived counter
+    /// families to this body — see `ModelRegistry::metrics_text`.)
+    pub fn render(&self) -> String {
+        let mut e = expo::Expo::new();
+        let s = &self.server;
+        e.family(
+            "chon_conn_stage_us",
+            "histogram",
+            "Connection-stage latency in microseconds.",
+        );
+        e.histogram("chon_conn_stage_us", &[("stage", "accept")], &s.accept.snapshot());
+        e.histogram("chon_conn_stage_us", &[("stage", "parse")], &s.parse.snapshot());
+        e.family(
+            "chon_reactor_tick_lag_us",
+            "gauge",
+            "Lateness of the last 1 Hz reactor tick in microseconds.",
+        );
+        e.sample("chon_reactor_tick_lag_us", &[], s.tick_lag_us.get());
+        e.family(
+            "chon_reactor_mailbox_depth",
+            "gauge",
+            "Token events drained from the generation mailbox on the last wake.",
+        );
+        e.sample("chon_reactor_mailbox_depth", &[], s.mailbox_depth.get());
+        e.family(
+            "chon_reactor_open_conns",
+            "gauge",
+            "Currently open client connections.",
+        );
+        e.sample("chon_reactor_open_conns", &[], s.open_conns.get());
+        e.family(
+            "chon_reactor_outbuf_highwater_bytes",
+            "gauge",
+            "Largest per-connection out-buffer seen since start.",
+        );
+        e.sample(
+            "chon_reactor_outbuf_highwater_bytes",
+            &[],
+            s.outbuf_highwater.get(),
+        );
+
+        let mut models: Vec<(String, Arc<ModelObs>)> =
+            self.models.lock().unwrap().clone();
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+        e.family(
+            "chon_stage_latency_us",
+            "histogram",
+            "Request-path stage latency per model in microseconds.",
+        );
+        for (name, m) in &models {
+            for (stage, h) in [
+                ("queue_wait", &m.queue_wait),
+                ("prefill", &m.prefill),
+                ("decode_token", &m.decode_token),
+                ("write_flush", &m.write_flush),
+            ] {
+                e.histogram(
+                    "chon_stage_latency_us",
+                    &[("model", name), ("stage", stage)],
+                    &h.snapshot(),
+                );
+            }
+        }
+
+        if models.iter().any(|(_, m)| m.outliers.get().is_some()) {
+            self.render_outliers(&mut e, &models);
+        }
+        e.finish()
+    }
+
+    fn render_outliers(
+        &self,
+        e: &mut expo::Expo,
+        models: &[(String, Arc<ModelObs>)],
+    ) {
+        e.family(
+            "chon_hcp_rows_total",
+            "counter",
+            "Activation rows observed through each HCP-compensated op.",
+        );
+        for (name, m) in models {
+            let Some(obs) = m.outliers.get() else { continue };
+            for t in &obs.taps {
+                e.sample(
+                    "chon_hcp_rows_total",
+                    &[("model", name), ("op", t.op)],
+                    t.rows.get(),
+                );
+            }
+        }
+        e.family(
+            "chon_hcp_residual_energy_total",
+            "counter",
+            "Total activation quantization-residual energy (Frobenius, squared).",
+        );
+        for (name, m) in models {
+            let Some(obs) = m.outliers.get() else { continue };
+            for t in &obs.taps {
+                e.sample_f64(
+                    "chon_hcp_residual_energy_total",
+                    &[("model", name), ("op", t.op)],
+                    t.resid_energy.get(),
+                );
+            }
+        }
+        e.family(
+            "chon_hcp_hot_energy_total",
+            "counter",
+            "Residual energy carried by the per-row HCP hot channels.",
+        );
+        for (name, m) in models {
+            let Some(obs) = m.outliers.get() else { continue };
+            for t in &obs.taps {
+                e.sample_f64(
+                    "chon_hcp_hot_energy_total",
+                    &[("model", name), ("op", t.op)],
+                    t.hot_energy.get(),
+                );
+            }
+        }
+        e.family(
+            "chon_hcp_hot_channel_hits_total",
+            "counter",
+            "Rows on which a channel made the per-row HCP top-k (channels with hits only).",
+        );
+        for (name, m) in models {
+            let Some(obs) = m.outliers.get() else { continue };
+            for t in &obs.taps {
+                for (j, c) in t.hits.iter().enumerate() {
+                    let hits = c.get();
+                    if hits == 0 {
+                        continue;
+                    }
+                    let ch = j.to_string();
+                    e.sample(
+                        "chon_hcp_hot_channel_hits_total",
+                        &[("model", name), ("op", t.op), ("channel", &ch)],
+                        hits,
+                    );
+                }
+            }
+        }
+        e.family(
+            "chon_hcp_weight_score",
+            "gauge",
+            "Layer-mean per-channel weight score mean|dW| (top channels per op).",
+        );
+        for (name, m) in models {
+            let Some(obs) = m.outliers.get() else { continue };
+            for t in &obs.taps {
+                for j in OutlierObs::top_wscore(t, WSCORE_TOP) {
+                    let ch = j.to_string();
+                    e.sample_f64(
+                        "chon_hcp_weight_score",
+                        &[("model", name), ("op", t.op), ("channel", &ch)],
+                        t.wscore[j],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The process-wide registry used by the `chon serve` binary. Library
+/// embedders and in-process test servers should pass their own
+/// `Registry::new()` through `RegistryOpts` instead.
+pub fn global() -> Arc<Registry> {
+    static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_is_get_or_create() {
+        let r = Registry::new();
+        let a = r.model("alpha");
+        let b = r.model("alpha");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.queue_wait.record(5);
+        assert_eq!(r.model("alpha").queue_wait.snapshot().count(), 1);
+    }
+
+    #[test]
+    fn render_contains_all_families() {
+        let r = Registry::new();
+        let m = r.model("m1");
+        m.prefill.record(1000);
+        m.decode_token.record(250);
+        r.server.open_conns.set(2);
+        r.server.accept.record(10);
+        let text = r.render();
+        for family in [
+            "chon_conn_stage_us",
+            "chon_reactor_tick_lag_us",
+            "chon_reactor_mailbox_depth",
+            "chon_reactor_open_conns",
+            "chon_reactor_outbuf_highwater_bytes",
+            "chon_stage_latency_us",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family}")), "{family}");
+        }
+        assert!(text.contains("chon_reactor_open_conns 2\n"));
+        assert!(text
+            .contains("chon_stage_latency_us_count{model=\"m1\",stage=\"prefill\"} 1\n"));
+        // no outlier families unless taps are installed
+        assert!(!text.contains("chon_hcp_"));
+    }
+
+    #[test]
+    fn render_outlier_families_when_installed() {
+        let r = Registry::new();
+        let m = r.model("m1");
+        let obs = Arc::new(outliers::OutlierObs {
+            taps: vec![outliers::OpTap::new("attn.q", 4, vec![0.1, 0.9, 0.2, 0.3])],
+        });
+        obs.taps[0].record_row(&[1], 4.0, 3.0);
+        m.outliers.set(obs).ok().unwrap();
+        let text = r.render();
+        assert!(text.contains(
+            "chon_hcp_hot_channel_hits_total{model=\"m1\",op=\"attn.q\",channel=\"1\"} 1\n"
+        ));
+        assert!(text.contains("chon_hcp_residual_energy_total{model=\"m1\",op=\"attn.q\"} 4\n"));
+        assert!(text.contains("chon_hcp_weight_score{model=\"m1\",op=\"attn.q\",channel=\"1\"} 0.9\n"));
+        // zero-hit channels stay out of the scrape
+        assert!(!text.contains("channel=\"0\"} 0"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Live outlier telemetry for `chon serve --obs-outliers`.
+//!
+//! The paper's instrumentation (kurtosis, FTZ, hot-channel maps in
+//! `diagnostics/` + `coordinator/monitor.rs`) runs offline at training
+//! probes. This module closes the loop at serve time: every quantized
+//! linear on the HCP path already selects per-row hot channels
+//! (`model::infer_linear_prepared`) — with `--obs-outliers` those
+//! selections are sampled into per-op taps, so a `/metrics` scrape shows
+//! which channels are hot *under production traffic* and how much
+//! quantization-residual energy the HCP compensation is carrying.
+//!
+//! One [`OpTap`] per forward op (attn.q .. mlp.down), aggregated over
+//! layers: per-channel hit counters, activation rows observed, and the
+//! Frobenius energy of the activation residual `dx = x - quant(x)` split
+//! into its total and its hot-channel share. The per-channel
+//! weight-score term (`mean |dW_j,:|`, layer-mean) is frozen at engine
+//! load and exposed as a gauge — the static half of the HCP score the
+//! dynamic hits can be read against.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::metrics::Counter;
+
+/// Relaxed f64 accumulator over AtomicU64 bit patterns (adds are a CAS
+/// loop; this path runs once per quantized-linear call, not per row, so
+/// contention is nil).
+#[derive(Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Telemetry for one forward op (all layers pooled).
+pub struct OpTap {
+    /// forward-op name ("attn.q" .. "mlp.down")
+    pub op: &'static str,
+    /// hot-channel selections per input channel (counts of rows where
+    /// the channel made the per-row HCP top-k)
+    pub hits: Vec<Counter>,
+    /// activation rows observed through this op
+    pub rows: Counter,
+    /// Σ ‖x - quant(x)‖²_F over observed rows (total residual energy)
+    pub resid_energy: AtomicF64,
+    /// the share of `resid_energy` carried by the selected hot channels
+    pub hot_energy: AtomicF64,
+    /// layer-mean per-channel weight score `mean |dW_j,:|` (static)
+    pub wscore: Vec<f64>,
+}
+
+impl OpTap {
+    pub fn new(op: &'static str, channels: usize, wscore: Vec<f64>) -> OpTap {
+        OpTap {
+            op,
+            hits: (0..channels).map(|_| Counter::new()).collect(),
+            rows: Counter::new(),
+            resid_energy: AtomicF64::default(),
+            hot_energy: AtomicF64::default(),
+            wscore,
+        }
+    }
+
+    /// Record one activation row's HCP outcome: the selected hot-channel
+    /// indices plus the row's total and hot residual energy.
+    pub fn record_row(&self, hot: &[usize], resid: f64, hot_resid: f64) {
+        for &j in hot {
+            if let Some(c) = self.hits.get(j) {
+                c.inc();
+            }
+        }
+        self.rows.inc();
+        self.resid_energy.add(resid);
+        self.hot_energy.add(hot_resid);
+    }
+}
+
+/// All taps of one engine, looked up by forward-op name.
+#[derive(Default)]
+pub struct OutlierObs {
+    pub taps: Vec<OpTap>,
+}
+
+impl OutlierObs {
+    pub fn tap(&self, op: &str) -> Option<&OpTap> {
+        self.taps.iter().find(|t| t.op == op)
+    }
+
+    /// Channel indices of the `n` largest weight scores of `tap`,
+    /// descending (ties by lower index). Bounds the gauge cardinality
+    /// in exposition.
+    pub fn top_wscore(tap: &OpTap, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..tap.wscore.len()).collect();
+        idx.sort_by(|&a, &b| {
+            tap.wscore[b]
+                .partial_cmp(&tap.wscore[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_f64_accumulates() {
+        let a = AtomicF64::default();
+        a.add(1.5);
+        a.add(2.25);
+        assert_eq!(a.get(), 3.75);
+    }
+
+    #[test]
+    fn tap_records_hits_and_energy() {
+        let tap = OpTap::new("attn.q", 4, vec![0.1, 0.4, 0.2, 0.3]);
+        tap.record_row(&[1, 3], 10.0, 7.0);
+        tap.record_row(&[1], 2.0, 1.5);
+        assert_eq!(tap.rows.get(), 2);
+        let hits: Vec<u64> = tap.hits.iter().map(|c| c.get()).collect();
+        assert_eq!(hits, vec![0, 2, 0, 1]);
+        assert_eq!(tap.resid_energy.get(), 12.0);
+        assert_eq!(tap.hot_energy.get(), 8.5);
+        // out-of-range indices are ignored, not a panic
+        tap.record_row(&[9], 0.0, 0.0);
+        assert_eq!(tap.rows.get(), 3);
+    }
+
+    #[test]
+    fn top_wscore_orders_descending() {
+        let tap = OpTap::new("mlp.up", 4, vec![0.1, 0.4, 0.2, 0.4]);
+        assert_eq!(OutlierObs::top_wscore(&tap, 3), vec![1, 3, 2]);
+        assert_eq!(OutlierObs::top_wscore(&tap, 10).len(), 4);
+    }
+}

@@ -374,8 +374,27 @@ fn gemm_prepared(x: &Mat, pw: &PreparedWeight) -> Mat {
     }
 }
 
+/// Per-row HCP observer: called with (hot-channel indices, total residual
+/// energy ‖x - quant(x)‖², hot-channel residual energy) for every
+/// activation row an HCP-compensated op processes. The energies are
+/// computed only when an observer is attached, so the uninstrumented
+/// decode path pays nothing (`chon serve --obs-outliers` telemetry).
+pub(crate) type HcpRowObserver<'a> = &'a dyn Fn(&[usize], f64, f64);
+
 /// Forward quantized linear over a pre-processed weight.
 pub(crate) fn infer_linear_prepared(x: &Mat, pw: &PreparedWeight, oq: &OpQuant) -> Mat {
+    infer_linear_prepared_obs(x, pw, oq, None)
+}
+
+/// `infer_linear_prepared` with an optional per-row HCP observer. The
+/// forward math is bitwise identical with or without the observer — it
+/// only reads the residual the compensation loop already holds.
+pub(crate) fn infer_linear_prepared_obs(
+    x: &Mat,
+    pw: &PreparedWeight,
+    oq: &OpQuant,
+    obs: Option<HcpRowObserver<'_>>,
+) -> Mat {
     let per_row = |f: &dyn Fn(&[f32]) -> Vec<f32>| -> Mat {
         let mut data = Vec::with_capacity(x.data.len());
         for i in 0..x.rows {
@@ -401,6 +420,19 @@ pub(crate) fn infer_linear_prepared(x: &Mat, pw: &PreparedWeight, oq: &OpQuant) 
                         .map(|j| (xr[j] - xur[j]).abs() as f64 + wscore[j])
                         .collect();
                     let idx = hcp::top_k(&scores, k);
+                    if let Some(cb) = obs {
+                        let mut resid = 0.0f64;
+                        for j in 0..x.cols {
+                            let d = (xr[j] - xur[j]) as f64;
+                            resid += d * d;
+                        }
+                        let mut hot = 0.0f64;
+                        for &j in &idx {
+                            let d = (xr[j] - xur[j]) as f64;
+                            hot += d * d;
+                        }
+                        cb(&idx, resid, hot);
+                    }
                     for &j in &idx {
                         let dxj = xr[j] - xur[j];
                         let xuj = xur[j];

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs::ModelObs;
 use crate::serve::engine::{Engine, Session};
 use crate::serve::pages::{SessionStore, StoreOpts};
 use crate::serve::protocol::MAX_SESSION_TOKENS;
@@ -91,6 +92,11 @@ pub struct GenRequest {
     /// cancelled`). std's `Sender` cannot probe for a hung-up `Receiver`
     /// without sending, hence the explicit flag.
     pub cancel: Arc<AtomicBool>,
+    /// when the request entered the queue (stamped by the submitter) —
+    /// admission computes the queue-wait span from it. A request that
+    /// waits through a model load/reload correctly charges that wait to
+    /// queue time.
+    pub queued_at: Instant,
 }
 
 /// Events fanned back to the submitting connection.
@@ -147,6 +153,12 @@ pub struct ServeStats {
     /// model was unloaded / reloaded / drained before admission — they
     /// never ran and are safe to resubmit
     pub retry_rejects: AtomicU64,
+    /// Σ µs admitted requests spent queued before admission
+    /// (mean = queue_wait_us_total / requests)
+    pub queue_wait_us_total: AtomicU64,
+    /// Σ µs spent inside `Engine::decode_step`
+    /// (mean per step = decode_us_total / decode_steps)
+    pub decode_us_total: AtomicU64,
 }
 
 impl ServeStats {
@@ -158,6 +170,24 @@ impl ServeStats {
         self.batch_sum.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
+    /// Mean µs an admitted request waited in queue.
+    pub fn mean_queue_wait_us(&self) -> f64 {
+        let reqs = self.requests.load(Ordering::Relaxed);
+        if reqs == 0 {
+            return 0.0;
+        }
+        self.queue_wait_us_total.load(Ordering::Relaxed) as f64 / reqs as f64
+    }
+
+    /// Mean µs per decode step.
+    pub fn mean_decode_us(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.decode_us_total.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
     /// The one-line STATS payload.
     pub fn snapshot_line(&self) -> String {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
@@ -166,7 +196,8 @@ impl ServeStats {
              mean_batch={:.3} max_batch={} prefill_steps={} \
              prefill_batched_steps={} prefill_tokens={} evictions={} \
              reloads={} resident_sessions={} spilled_sessions={} \
-             resident_kv_tokens={} cancelled={} retry_rejects={}",
+             resident_kv_tokens={} cancelled={} retry_rejects={} \
+             queue_wait_us_total={} decode_us_total={}",
             g(&self.requests),
             g(&self.tokens),
             g(&self.decode_steps),
@@ -183,6 +214,8 @@ impl ServeStats {
             g(&self.resident_kv_tokens),
             g(&self.cancelled),
             g(&self.retry_rejects),
+            g(&self.queue_wait_us_total),
+            g(&self.decode_us_total),
         )
     }
 
@@ -206,6 +239,11 @@ impl ServeStats {
             ("resident_kv_tokens".into(), n(&self.resident_kv_tokens)),
             ("cancelled".into(), n(&self.cancelled)),
             ("retry_rejects".into(), n(&self.retry_rejects)),
+            // appended fields (existing fields above stay byte-stable)
+            ("queue_wait_us_total".into(), n(&self.queue_wait_us_total)),
+            ("decode_us_total".into(), n(&self.decode_us_total)),
+            ("queue_wait_us_mean".into(), Json::Num(self.mean_queue_wait_us())),
+            ("decode_us_mean".into(), Json::Num(self.mean_decode_us())),
         ])
     }
 
@@ -237,6 +275,8 @@ impl ServeStats {
             add(&m.resident_kv_tokens, &s.resident_kv_tokens);
             add(&m.cancelled, &s.cancelled);
             add(&m.retry_rejects, &s.retry_rejects);
+            add(&m.queue_wait_us_total, &s.queue_wait_us_total);
+            add(&m.decode_us_total, &s.decode_us_total);
         }
         m
     }
@@ -303,12 +343,28 @@ impl RequestBatcher {
         store: SessionStore,
         stats: Arc<ServeStats>,
     ) -> RequestBatcher {
+        Self::spawn_full(engine, max_batch, max_wait, seed, store, stats, None)
+    }
+
+    /// `spawn_with` plus the model's stage-latency histograms. `None`
+    /// runs the loop with metrics fully off — the off-leg of the
+    /// `serve_metrics_overhead` bench and the default for embedders that
+    /// never scrape.
+    pub fn spawn_full(
+        engine: Engine,
+        max_batch: usize,
+        max_wait: Duration,
+        seed: u64,
+        store: SessionStore,
+        stats: Arc<ServeStats>,
+        obs: Option<Arc<ModelObs>>,
+    ) -> RequestBatcher {
         let (tx, rx) = channel::<GenRequest>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let (stats2, shutdown2) = (stats.clone(), shutdown.clone());
         let cfg = LoopCfg { max_batch: max_batch.max(1), max_wait, seed };
         let handle = std::thread::spawn(move || {
-            engine_loop(engine, rx, stats2, shutdown2, cfg, store)
+            engine_loop(engine, rx, stats2, shutdown2, cfg, store, obs)
         });
         RequestBatcher { tx, stats, shutdown, handle: Some(handle) }
     }
@@ -343,6 +399,7 @@ fn engine_loop(
     shutdown: Arc<AtomicBool>,
     cfg: LoopCfg,
     mut store: SessionStore,
+    obs: Option<Arc<ModelObs>>,
 ) -> (SessionStore, Vec<GenRequest>) {
     let mut active: Vec<Active> = Vec::new();
     let mut leftovers: Vec<GenRequest> = Vec::new();
@@ -406,6 +463,7 @@ fn engine_loop(
                 group,
                 &mut next_id,
                 cfg.seed,
+                obs.as_deref(),
             );
             sync_gauges(&stats, &store);
         }
@@ -422,11 +480,17 @@ fn engine_loop(
             stats.batched_steps.fetch_add(1, Ordering::Relaxed);
         }
         let tokens: Vec<u32> = active.iter().map(|a| a.last).collect();
+        let step_t0 = Instant::now();
         let logits = {
             let mut refs: Vec<&mut Session> =
                 active.iter_mut().map(|a| &mut a.sess).collect();
             engine.decode_step(&mut refs, &tokens)
         };
+        let step_us = step_t0.elapsed().as_micros() as u64;
+        stats.decode_us_total.fetch_add(step_us, Ordering::Relaxed);
+        if let Some(o) = &obs {
+            o.decode_token.record(step_us);
+        }
         for (i, a) in active.iter_mut().enumerate() {
             a.last = engine.sample(logits.row(i), a.req.temp, &mut a.rng);
             emit_token(&engine, &stats, a);
@@ -460,10 +524,12 @@ fn admit_group(
     group: Vec<GenRequest>,
     next_id: &mut u64,
     seed: u64,
+    obs: Option<&ModelObs>,
 ) {
     let mut reqs: Vec<GenRequest> = Vec::new();
     let mut prompts: Vec<Vec<u32>> = Vec::new();
     let mut sessions: Vec<Session> = Vec::new();
+    let admit_now = Instant::now();
     for req in group {
         if req.cancel.load(Ordering::Relaxed) {
             // the client already gave up (timeout / dropped connection):
@@ -473,6 +539,13 @@ fn admit_group(
             continue;
         }
         stats.requests.fetch_add(1, Ordering::Relaxed);
+        let waited_us = admit_now
+            .saturating_duration_since(req.queued_at)
+            .as_micros() as u64;
+        stats.queue_wait_us_total.fetch_add(waited_us, Ordering::Relaxed);
+        if let Some(o) = obs {
+            o.queue_wait.record(waited_us);
+        }
         let toks = engine.tokenizer.encode(&req.prompt);
         if toks.is_empty() {
             let _ = req.reply.send(TokenEvent::Error("empty prompt".into()));
@@ -542,6 +615,9 @@ fn admit_group(
         let ps: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
         engine.prefill_batch(&mut refs, &ps)
     };
+    if let Some(o) = obs {
+        o.prefill.record_elapsed(t0.elapsed());
+    }
     for ((req, sess), lg) in reqs.into_iter().zip(sessions).zip(logits) {
         let mut rng = Rng::new(seed ^ 0x5E2E).fold_in(*next_id);
         *next_id += 1;
@@ -631,6 +707,7 @@ mod tests {
                 session: session.map(|s| s.to_string()),
                 reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
+                queued_at: Instant::now(),
             },
             rx,
         )
@@ -646,6 +723,80 @@ mod tests {
                 TokenEvent::Retry(e) => panic!("unexpected retry: {e}"),
             }
         }
+    }
+
+    /// The three snapshot views (`STATS` line, `/stats` JSON, `merged`)
+    /// must agree with each other and with the raw atomics — including
+    /// the timing totals and the means the JSON derives from them.
+    #[test]
+    fn stats_snapshot_consistency() {
+        let s = ServeStats::default();
+        s.requests.store(4, Ordering::Relaxed);
+        s.decode_steps.store(10, Ordering::Relaxed);
+        s.batch_sum.store(25, Ordering::Relaxed);
+        s.queue_wait_us_total.store(2000, Ordering::Relaxed);
+        s.decode_us_total.store(5000, Ordering::Relaxed);
+        let line = s.snapshot_line();
+        assert!(line.contains("queue_wait_us_total=2000"), "{line}");
+        assert!(line.contains("decode_us_total=5000"), "{line}");
+        let json = s.snapshot_json();
+        let f = |k: &str| json.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(f("requests"), 4.0);
+        assert_eq!(f("queue_wait_us_total"), 2000.0);
+        assert_eq!(f("decode_us_total"), 5000.0);
+        assert_eq!(f("queue_wait_us_mean"), 500.0);
+        assert_eq!(f("decode_us_mean"), 500.0);
+        // derived means reconstruct the totals they came from
+        assert_eq!(f("queue_wait_us_mean") * f("requests"), 2000.0);
+        assert_eq!(f("decode_us_mean") * f("decode_steps"), 5000.0);
+        // merged() carries the new totals through aggregation
+        let m = ServeStats::merged([&s, &s]);
+        assert_eq!(m.queue_wait_us_total.load(Ordering::Relaxed), 4000);
+        assert_eq!(m.decode_us_total.load(Ordering::Relaxed), 10000);
+        assert_eq!(m.mean_queue_wait_us(), 500.0);
+    }
+
+    /// After real traffic the timing totals are live (non-zero) and the
+    /// per-request queue-wait mean is internally consistent with the
+    /// counters it is derived from.
+    #[test]
+    fn stats_timing_totals_populate_under_traffic() {
+        let b = spawn_batcher(4);
+        let (req, rx) = gen_req("hello", 8, None);
+        b.submitter().send(req).unwrap();
+        collect(&rx);
+        assert!(b.stats.decode_us_total.load(Ordering::Relaxed) > 0);
+        assert_eq!(b.stats.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            b.stats.mean_queue_wait_us(),
+            b.stats.queue_wait_us_total.load(Ordering::Relaxed) as f64
+        );
+        b.shutdown();
+    }
+
+    /// `spawn_full` with a ModelObs populates every batcher-side stage
+    /// histogram; `None` leaves metrics fully off (the bench's off-leg).
+    #[test]
+    fn stage_histograms_populate_when_obs_attached() {
+        let obs = Arc::new(ModelObs::default());
+        let b = RequestBatcher::spawn_full(
+            test_engine(),
+            4,
+            Duration::from_micros(500),
+            0,
+            SessionStore::new(StoreOpts::default()).unwrap(),
+            Arc::new(ServeStats::default()),
+            Some(obs.clone()),
+        );
+        let (req, rx) = gen_req("hello", 8, None);
+        b.submitter().send(req).unwrap();
+        collect(&rx);
+        b.shutdown();
+        assert_eq!(obs.queue_wait.snapshot().count(), 1);
+        assert_eq!(obs.prefill.snapshot().count(), 1);
+        // 8 tokens = 1 sampled off prefill logits + 7 decode steps
+        assert_eq!(obs.decode_token.snapshot().count(), 7);
+        assert_eq!(obs.write_flush.snapshot().count(), 0, "reactor-owned");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! the report verifies with a PING round-trip per parked connection.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -280,6 +280,96 @@ pub fn fetch_stats(host: &str, port: u16) -> Result<String> {
     }
 }
 
+/// Fetch the body of `GET /metrics` from the HTTP front end (Prometheus
+/// text exposition). Speaks just enough HTTP/1.1 for a close-delimited
+/// fixed-length response.
+pub fn fetch_metrics(host: &str, port: u16) -> Result<String> {
+    let mut s = connect(host, port)?;
+    let req =
+        format!("GET /metrics HTTP/1.1\r\nHost: {host}\r\nConnection: close\r\n\r\n");
+    s.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).context("reading /metrics response")?;
+    let text = String::from_utf8_lossy(&raw);
+    let Some(split) = text.find("\r\n\r\n") else {
+        bail!("malformed /metrics response (no header terminator)");
+    };
+    let (head, body) = text.split_at(split + 4);
+    if !head.starts_with("HTTP/1.1 200") {
+        bail!(
+            "GET /metrics returned {:?}",
+            head.lines().next().unwrap_or("")
+        );
+    }
+    Ok(body.to_string())
+}
+
+/// The value of one exact series (name plus rendered label set) in a
+/// scrape body, e.g. `metric_value(body, "chon_reactor_open_conns")` or
+/// `metric_value(body, "chon_requests_total{model=\"default\"}")`.
+pub fn metric_value(body: &str, series: &str) -> Option<f64> {
+    for line in body.lines() {
+        if let Some(v) = line.strip_prefix(series).and_then(|r| r.strip_prefix(' ')) {
+            return v.trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// Sum of every sample of family `name` across all label sets (None when
+/// the family is absent from the scrape).
+pub fn metric_total(body: &str, name: &str) -> Option<f64> {
+    let mut total = 0.0f64;
+    let mut seen = false;
+    for line in body.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let Some(rest) = line.strip_prefix(name) else { continue };
+        let rest = match rest.strip_prefix('{') {
+            Some(r) => match r.find('}') {
+                Some(i) => &r[i + 1..],
+                None => continue,
+            },
+            None => rest,
+        };
+        let Some(v) = rest.strip_prefix(' ') else { continue };
+        if let Ok(x) = v.trim().parse::<f64>() {
+            total += x;
+            seen = true;
+        }
+    }
+    seen.then_some(total)
+}
+
+/// Scrape-and-assert (`--metrics-port`): given `/metrics` bodies scraped
+/// before and after a load run, verify the key series exist in both and
+/// moved — request/token/decode counters and the stage-histogram sample
+/// counts must strictly increase, and the reactor health gauges must be
+/// present.
+pub fn assert_metrics_progress(before: &str, after: &str) -> Result<()> {
+    for name in [
+        "chon_requests_total",
+        "chon_tokens_total",
+        "chon_decode_steps_total",
+        "chon_stage_latency_us_count",
+    ] {
+        let b = metric_total(before, name)
+            .with_context(|| format!("{name} missing from the first scrape"))?;
+        let a = metric_total(after, name)
+            .with_context(|| format!("{name} missing from the second scrape"))?;
+        if a <= b {
+            bail!("{name} did not increase across the load run ({b} -> {a})");
+        }
+    }
+    for name in ["chon_reactor_open_conns", "chon_reactor_tick_lag_us"] {
+        if metric_total(after, name).is_none() {
+            bail!("{name} missing from the /metrics scrape");
+        }
+    }
+    Ok(())
+}
+
 /// Ask the server to drain and stop.
 pub fn send_shutdown(host: &str, port: u16) -> Result<()> {
     let mut s = connect(host, port)?;
@@ -478,6 +568,44 @@ mod tests {
         assert_eq!(r.percentile(1.0), 10.0);
         let empty = LoadReport::default();
         assert!(empty.percentile(0.5).is_nan());
+    }
+
+    #[test]
+    fn metric_parsing_reads_values_and_totals() {
+        let body = "\
+# HELP chon_requests_total Requests admitted.\n\
+# TYPE chon_requests_total counter\n\
+chon_requests_total{model=\"a\"} 3\n\
+chon_requests_total{model=\"b\"} 4\n\
+chon_reactor_open_conns 7\n\
+chon_stage_latency_us_count{model=\"a\",stage=\"prefill\"} 2\n";
+        assert_eq!(metric_value(body, "chon_requests_total{model=\"a\"}"), Some(3.0));
+        assert_eq!(metric_value(body, "chon_reactor_open_conns"), Some(7.0));
+        assert_eq!(metric_value(body, "chon_requests_total"), None);
+        assert_eq!(metric_total(body, "chon_requests_total"), Some(7.0));
+        assert_eq!(metric_total(body, "chon_stage_latency_us_count"), Some(2.0));
+        assert_eq!(metric_total(body, "chon_absent"), None);
+        // a family name that prefixes another must not alias into it
+        assert_eq!(metric_total(body, "chon_requests"), None);
+    }
+
+    #[test]
+    fn metrics_progress_requires_strict_increase() {
+        let scrape = |req: u64, tok: u64| {
+            format!(
+                "chon_requests_total{{model=\"a\"}} {req}\n\
+                 chon_tokens_total{{model=\"a\"}} {tok}\n\
+                 chon_decode_steps_total{{model=\"a\"}} {tok}\n\
+                 chon_stage_latency_us_count{{model=\"a\",stage=\"prefill\"}} {req}\n\
+                 chon_reactor_open_conns 1\n\
+                 chon_reactor_tick_lag_us 5\n"
+            )
+        };
+        assert!(assert_metrics_progress(&scrape(1, 8), &scrape(3, 24)).is_ok());
+        // flat counters fail
+        assert!(assert_metrics_progress(&scrape(1, 8), &scrape(1, 8)).is_err());
+        // a missing family fails
+        assert!(assert_metrics_progress("", &scrape(3, 24)).is_err());
     }
 
     /// The per-thread (base + ri) % models indexing partitions the global

@@ -20,15 +20,17 @@
 //! quantized per decode step.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::tokenizer::Tokenizer;
+use crate::obs::outliers::{OpTap, OutlierObs};
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::runtime::native::model::{
-    self, final_norm_idx, infer_linear_prepared, layer_slots, lm_head_idx,
-    model_cfg, pidx, prepare_weight_cached, rmsnorm, sigmoid, Arch, ModelCfg,
-    PreparedWeight,
+    self, final_norm_idx, infer_linear_prepared, infer_linear_prepared_obs,
+    layer_slots, lm_head_idx, model_cfg, pidx, prepare_weight_cached, rmsnorm,
+    sigmoid, Arch, ModelCfg, PreparedWeight,
 };
 use crate::runtime::native::recipe::{op_quant, recipe, NativeRecipe, BF16_OP};
 use crate::serve::pages::KvPages;
@@ -85,6 +87,9 @@ pub struct Engine {
     prepped: Vec<Option<PreparedWeight>>,
     /// total parameter count of the loaded model (reporting)
     n_params: usize,
+    /// `--obs-outliers` taps; None (the default) keeps the decode path
+    /// free of any telemetry work
+    outlier_obs: Option<Arc<OutlierObs>>,
 }
 
 /// Forward-op name of a linear weight slot (None for norm vectors).
@@ -187,6 +192,7 @@ impl Engine {
             params,
             prepped,
             n_params,
+            outlier_obs: None,
         })
     }
 
@@ -211,7 +217,56 @@ impl Engine {
         let n_params = params.iter().map(|m| m.data.len()).sum();
         let prepped = prepare_all(&cfg, &rec, &params);
         let params = strip_prepared(params, &prepped);
-        Engine { cfg, recipe: rec, tokenizer, meta, params, prepped, n_params }
+        Engine {
+            cfg,
+            recipe: rec,
+            tokenizer,
+            meta,
+            params,
+            prepped,
+            n_params,
+            outlier_obs: None,
+        }
+    }
+
+    /// Build the `--obs-outliers` taps for this engine: one [`OpTap`] per
+    /// forward op, sized to the op's input width, with the layer-mean
+    /// per-channel weight score frozen from the prepared weights (zeros
+    /// for recipes without HCP — such taps never record anyway, since the
+    /// observer fires only on the HCP-compensated path).
+    pub fn build_outlier_obs(&self) -> Arc<OutlierObs> {
+        let cfg = &self.cfg;
+        let mut taps = Vec::new();
+        for slot in layer_slots(cfg.arch) {
+            let Some(op) = slot_op(slot) else { continue };
+            let channels = if op == "mlp.down" { cfg.ff } else { cfg.d };
+            let mut wscore = vec![0.0f64; channels];
+            let mut layers = 0usize;
+            for l in 0..cfg.layers {
+                if let Some(ws) = self.prepped[pidx(cfg, l, slot)]
+                    .as_ref()
+                    .and_then(|p| p.wscore.as_ref())
+                {
+                    for (acc, v) in wscore.iter_mut().zip(ws) {
+                        *acc += v;
+                    }
+                    layers += 1;
+                }
+            }
+            if layers > 0 {
+                for v in wscore.iter_mut() {
+                    *v /= layers as f64;
+                }
+            }
+            taps.push(OpTap::new(op, channels, wscore));
+        }
+        Arc::new(OutlierObs { taps })
+    }
+
+    /// Install outlier taps. Passing taps a previous engine of the same
+    /// model built keeps hit counters accumulating across hot reloads.
+    pub fn attach_outlier_obs(&mut self, obs: Arc<OutlierObs>) {
+        self.outlier_obs = Some(obs);
     }
 
     /// Fresh per-request state.
@@ -298,7 +353,17 @@ impl Engine {
                 let idx = pidx(cfg, l, slot);
                 let oq = op_quant(&self.recipe, cfg.arch, l, cfg.layers, op);
                 let pw = self.prepped[idx].as_ref().expect("weight prepared at load");
-                infer_linear_prepared(x, pw, &oq)
+                match self.outlier_obs.as_deref().and_then(|o| o.tap(op)) {
+                    Some(tap) => infer_linear_prepared_obs(
+                        x,
+                        pw,
+                        &oq,
+                        Some(&|hot: &[usize], resid: f64, hot_resid: f64| {
+                            tap.record_row(hot, resid, hot_resid)
+                        }),
+                    ),
+                    None => infer_linear_prepared(x, pw, &oq),
+                }
             };
 
             let (h, _) = rmsnorm(&x, p("attn_norm"));
@@ -807,6 +872,37 @@ mod tests {
         let mut trailing = bytes.clone();
         trailing.push(0);
         assert!(eng.restore_session(&trailing).is_err());
+    }
+
+    /// `--obs-outliers` taps observe HCP rows without perturbing decode:
+    /// an instrumented engine is bit-identical to an uninstrumented one,
+    /// and the taps fill with rows/hits/energy on the HCP-compensated ops.
+    #[test]
+    fn outlier_taps_record_without_changing_decode() {
+        let plain = engine("tiny_gla", "chon");
+        let mut tapped = engine("tiny_gla", "chon");
+        let taps = tapped.build_outlier_obs();
+        tapped.attach_outlier_obs(taps.clone());
+
+        let toks: Vec<u32> = (0..8).map(|i| 97 + i).collect();
+        let mut sp = plain.new_session();
+        let mut st = tapped.new_session();
+        let lp = plain.prefill(&mut sp, &toks);
+        let lt = tapped.prefill(&mut st, &toks);
+        assert_eq!(lp, lt, "observer must not perturb the forward");
+
+        let q = taps.tap("attn.q").expect("attn.q tap");
+        // tiny_gla layer 0 runs attn.q under NVFP4+HCP; 8 prompt tokens
+        // → 8 observed rows through that layer
+        assert_eq!(q.rows.get(), 8);
+        assert!(q.hits.iter().map(|c| c.get()).sum::<u64>() >= 8);
+        assert!(q.resid_energy.get() >= q.hot_energy.get());
+        assert!(q.hot_energy.get() > 0.0);
+        // wscore is frozen at build time from the prepared weights
+        assert!(q.wscore.iter().any(|&v| v > 0.0));
+        // post-QK-protected ops (attn.gk under GLA) run BF16 → no rows
+        let gk = taps.tap("attn.gk").expect("attn.gk tap");
+        assert_eq!(gk.rows.get(), 0);
     }
 
     #[test]

@@ -21,7 +21,8 @@
 //! * `protocol` — the line-delimited TCP wire format
 //!   (GEN/SGEN/`MODEL <name>` routing/...).
 //! * `http` — the hand-rolled HTTP/1.1 layer (`POST /generate` chunked
-//!   streaming with a `"model"` key, `GET /stats`, `POST /shutdown`).
+//!   streaming with a `"model"` key, `GET /stats`, `GET /metrics`
+//!   Prometheus text, `POST /shutdown`).
 //! * `reactor` — thin epoll/eventfd/timerfd-free wrappers over raw
 //!   syscalls: `Poller`, `WakeFd`, a coarse timer wheel, and the
 //!   RLIMIT_NOFILE raiser the connection-scaling paths need.
@@ -30,7 +31,15 @@
 //!   parsing, keep-alive pipelining, idle eviction off the timer wheel,
 //!   graceful shutdown (`chon serve`).
 //! * `client` — protocol client / load generator with per-model latency
-//!   percentiles and an idle-connection scaling mode (`chon client`).
+//!   percentiles, an idle-connection scaling mode, and a
+//!   `--metrics-port` scrape-and-assert mode for smokes (`chon client`).
+//!
+//! Observability rides in `crate::obs`: the batcher and reactor record
+//! stage spans (queue-wait, prefill, per-token decode, write-flush,
+//! accept, parse) into per-model histograms served at `GET /metrics`,
+//! and `--obs-outliers` adds per-op HCP hot-channel taps. Scraping is
+//! side-effect-free by contract — `/stats` and `/metrics` never trigger
+//! loads or reloads.
 
 pub mod batcher;
 pub mod client;

@@ -48,6 +48,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::ModelObs;
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::serve::batcher::{GenRequest, RequestBatcher, ServeStats, TokenEvent};
 use crate::serve::engine::Engine;
@@ -79,6 +80,13 @@ pub struct RegistryOpts {
     /// on the lifecycle thread, to pin that a slow load never stalls
     /// routing to resident models (0 = off)
     pub load_delay_ms: u64,
+    /// this server's metric tree (stage histograms, reactor gauges).
+    /// Defaults to a fresh registry so in-process test servers stay
+    /// isolated; the `chon serve` binary passes `obs::global()`.
+    pub obs: Arc<crate::obs::Registry>,
+    /// sample per-request HCP hot-channel hits + residual energy into
+    /// the metric tree (`--obs-outliers`)
+    pub obs_outliers: bool,
 }
 
 impl Default for RegistryOpts {
@@ -91,6 +99,8 @@ impl Default for RegistryOpts {
             max_resident_models: 0,
             reload_poll_ms: 500,
             load_delay_ms: 0,
+            obs: crate::obs::Registry::new(),
+            obs_outliers: false,
         }
     }
 }
@@ -161,6 +171,9 @@ struct ModelEntry {
     dir: Option<PathBuf>,
     /// cumulative counters, surviving unload/reload
     stats: Arc<ServeStats>,
+    /// stage-latency histograms (+ outlier taps), surviving reloads like
+    /// `stats` — a hot reload swaps the engine thread, not the metrics
+    obs: Arc<ModelObs>,
     route: Mutex<Route>,
     /// LRU stamp (registry clock value of the last routed request)
     last_used: AtomicU64,
@@ -283,6 +296,7 @@ impl ModelRegistry {
             name: name.to_string(),
             dir: Some(dir.to_path_buf()),
             stats: Arc::new(ServeStats::default()),
+            obs: self.shared.opts.obs.model(name),
             route: Mutex::new(Route::Cold),
             last_used: AtomicU64::new(0),
             meta: Mutex::new(MetaState {
@@ -297,18 +311,22 @@ impl ModelRegistry {
     /// Register an already-built in-memory engine (tests, embedding).
     /// Pinned resident: with no backing directory it can be neither
     /// hot-reloaded nor unloaded.
-    pub fn register_engine(&mut self, name: &str, engine: Engine) -> Result<()> {
+    pub fn register_engine(&mut self, name: &str, mut engine: Engine) -> Result<()> {
         if !valid_model_name(name) {
             bail!("bad model name {name:?}");
         }
         let store = SessionStore::new(store_opts_for(&self.shared.opts, name))?;
         let meta = engine.meta.clone();
         let stats = Arc::new(ServeStats::default());
-        let batcher = spawn_batcher(&self.shared.opts, engine, store, stats.clone());
+        let obs = self.shared.opts.obs.model(name);
+        hook_outliers(&self.shared.opts, &mut engine, &obs);
+        let batcher =
+            spawn_batcher(&self.shared.opts, engine, store, stats.clone(), obs.clone());
         let idx = self.push_entry(ModelEntry {
             name: name.to_string(),
             dir: None,
             stats,
+            obs,
             route: Mutex::new(Route::Resident(batcher.submitter())),
             last_used: AtomicU64::new(0),
             meta: Mutex::new(MetaState {
@@ -351,9 +369,11 @@ impl ModelRegistry {
     }
 
     /// Nudge the lifecycle thread to probe every resident watched model
-    /// for a republished checkpoint. The server calls this from its
-    /// timer tick and on `GET /stats`, so generation bumps surface even
-    /// with zero traffic. Never blocks.
+    /// for a republished checkpoint. The server calls this from its 1 Hz
+    /// timer tick ONLY, so generation bumps surface even with zero
+    /// traffic. Observation endpoints (`/stats`, `/metrics`) must never
+    /// call this — scraping is side-effect-free (pinned by
+    /// `stats_and_metrics_never_initiate_loads`). Never blocks.
     pub fn poll_reloads(&self) {
         let _ = self.lifecycle_tx.send(Cmd::Tick);
     }
@@ -572,6 +592,111 @@ impl ModelRegistry {
         fields.push(("per_model".into(), Json::Obj(per_model)));
         Json::Obj(fields)
     }
+
+    /// This server's metric tree (stage histograms + reactor gauges).
+    pub fn obs(&self) -> Arc<crate::obs::Registry> {
+        self.shared.opts.obs.clone()
+    }
+
+    /// The write-flush histogram of a model (reactor-side span). `None`
+    /// resolves to the default model; unknown names return None.
+    pub fn model_obs(&self, model: Option<&str>) -> Option<Arc<ModelObs>> {
+        let snap = self.snapshot();
+        let entry = match model {
+            Some(name) => snap.iter().find(|e| e.name == name)?,
+            None => snap.first()?,
+        };
+        Some(entry.obs.clone())
+    }
+
+    /// The full `GET /metrics` body: the obs registry's families (stage
+    /// histograms, reactor gauges, outlier taps) plus counter/gauge
+    /// families derived from the same `ServeStats` atomics `/stats`
+    /// reads, and the registry's lifecycle counters. Pure observation —
+    /// never probes or loads anything.
+    pub fn metrics_text(&self) -> String {
+        use crate::obs::expo::Expo;
+        let mut body = self.shared.opts.obs.render();
+        let snap = self.snapshot();
+        let mut e = Expo::new();
+        let per_model: &[(&str, &str, fn(&ServeStats) -> u64)] = &[
+            ("chon_requests_total", "Generation requests admitted.", |s| {
+                s.requests.load(Ordering::Relaxed)
+            }),
+            ("chon_tokens_total", "Tokens generated.", |s| {
+                s.tokens.load(Ordering::Relaxed)
+            }),
+            ("chon_decode_steps_total", "Batched decode steps executed.", |s| {
+                s.decode_steps.load(Ordering::Relaxed)
+            }),
+            ("chon_prefill_tokens_total", "Prompt tokens consumed by prefill.", |s| {
+                s.prefill_tokens.load(Ordering::Relaxed)
+            }),
+            ("chon_cancelled_total", "Queued requests dropped as cancelled.", |s| {
+                s.cancelled.load(Ordering::Relaxed)
+            }),
+            ("chon_retry_rejects_total", "Requests rejected retryably.", |s| {
+                s.retry_rejects.load(Ordering::Relaxed)
+            }),
+            ("chon_session_evictions_total", "Named sessions spilled to disk.", |s| {
+                s.evictions.load(Ordering::Relaxed)
+            }),
+            ("chon_session_reloads_total", "Named sessions reloaded from disk.", |s| {
+                s.reloads.load(Ordering::Relaxed)
+            }),
+        ];
+        for (name, help, get) in per_model {
+            e.family(name, "counter", help);
+            for entry in snap.iter() {
+                e.sample(name, &[("model", &entry.name)], get(&entry.stats));
+            }
+        }
+        let per_model_gauges: &[(&str, &str, fn(&ServeStats) -> u64)] = &[
+            ("chon_resident_sessions", "Idle named sessions in memory.", |s| {
+                s.resident_sessions.load(Ordering::Relaxed)
+            }),
+            ("chon_resident_kv_tokens", "KV positions held by resident idle sessions.", |s| {
+                s.resident_kv_tokens.load(Ordering::Relaxed)
+            }),
+        ];
+        for (name, help, get) in per_model_gauges {
+            e.family(name, "gauge", help);
+            for entry in snap.iter() {
+                e.sample(name, &[("model", &entry.name)], get(&entry.stats));
+            }
+        }
+        e.family(
+            "chon_model_resident",
+            "gauge",
+            "1 when the model's engine is loaded.",
+        );
+        for entry in snap.iter() {
+            e.sample(
+                "chon_model_resident",
+                &[("model", &entry.name)],
+                entry.resident() as u64,
+            );
+        }
+        e.family("chon_models", "gauge", "Registered models.");
+        e.sample("chon_models", &[], snap.len() as u64);
+        e.family("chon_resident_models", "gauge", "Models with a loaded engine.");
+        e.sample(
+            "chon_resident_models",
+            &[],
+            snap.iter().filter(|e| e.resident()).count() as u64,
+        );
+        let lifecycle: &[(&str, &str, &AtomicU64)] = &[
+            ("chon_model_loads_total", "Engine loads.", &self.shared.model_loads),
+            ("chon_model_unloads_total", "LRU engine unloads.", &self.shared.model_unloads),
+            ("chon_model_reloads_total", "Hot reloads onto a republished checkpoint.", &self.shared.model_reloads),
+        ];
+        for (name, help, ctr) in lifecycle {
+            e.family(name, "counter", help);
+            e.sample(name, &[], ctr.load(Ordering::Relaxed));
+        }
+        body.push_str(&e.finish());
+        body
+    }
 }
 
 impl ModelEntry {
@@ -600,15 +725,36 @@ fn spawn_batcher(
     engine: Engine,
     store: SessionStore,
     stats: Arc<ServeStats>,
+    obs: Arc<ModelObs>,
 ) -> RequestBatcher {
-    RequestBatcher::spawn_with(
+    RequestBatcher::spawn_full(
         engine,
         opts.max_batch,
         Duration::from_micros(opts.max_wait_us),
         opts.seed,
         store,
         stats,
+        Some(obs),
     )
+}
+
+/// Under `--obs-outliers`, point the engine's HCP path at the model's
+/// outlier taps. Taps are created once per model and survive hot
+/// reloads (cumulative across engine swaps), like `ServeStats`.
+fn hook_outliers(opts: &RegistryOpts, engine: &mut Engine, obs: &ModelObs) {
+    if !opts.obs_outliers {
+        return;
+    }
+    let taps = match obs.outliers.get() {
+        Some(t) => t.clone(),
+        None => {
+            let t = engine.build_outlier_obs();
+            // a racing set keeps the winner; read it back either way
+            let _ = obs.outliers.set(t);
+            obs.outliers.get().expect("just set").clone()
+        }
+    };
+    engine.attach_outlier_obs(taps);
 }
 
 /// The lifecycle thread: single owner of every `RequestBatcher` handle
@@ -699,7 +845,7 @@ impl Lifecycle {
             let engine = Engine::load(&resolved)?;
             Ok((resolved, meta, engine))
         });
-        let (resolved, meta, engine) = match loaded {
+        let (resolved, meta, mut engine) = match loaded {
             Ok(l) => l,
             Err(e) => {
                 warn!("model {name}: load failed: {e:#}");
@@ -719,8 +865,14 @@ impl Lifecycle {
                 }
             },
         };
-        let batcher =
-            spawn_batcher(&self.shared.opts, engine, store, entry.stats.clone());
+        hook_outliers(&self.shared.opts, &mut engine, &entry.obs);
+        let batcher = spawn_batcher(
+            &self.shared.opts,
+            engine,
+            store,
+            entry.stats.clone(),
+            entry.obs.clone(),
+        );
         info!(
             "model {name}: loaded {} (generation {}, step {})",
             resolved.display(),
@@ -749,7 +901,7 @@ impl Lifecycle {
             let engine = Engine::load(&resolved)?;
             Ok((resolved, meta, engine))
         });
-        let (resolved, meta, engine) = match loaded {
+        let (resolved, meta, mut engine) = match loaded {
             Ok(l) => l,
             Err(e) => {
                 warn!(
@@ -781,8 +933,14 @@ impl Lifecycle {
                 }
             },
         };
-        let batcher =
-            spawn_batcher(&self.shared.opts, engine, store, entry.stats.clone());
+        hook_outliers(&self.shared.opts, &mut engine, &entry.obs);
+        let batcher = spawn_batcher(
+            &self.shared.opts,
+            engine,
+            store,
+            entry.stats.clone(),
+            entry.obs.clone(),
+        );
         // queued-but-unadmitted requests continue on the new weights,
         // ahead of anything that queued during the swap
         for r in leftovers {
@@ -997,6 +1155,7 @@ mod tests {
                 session: None,
                 reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
+                queued_at: Instant::now(),
             },
         )
         .unwrap();
@@ -1033,6 +1192,7 @@ mod tests {
                     session: None,
                     reply: ReplySink::channel(tx),
                     cancel: Arc::new(AtomicBool::new(false)),
+                    queued_at: Instant::now(),
                 },
             )
             .unwrap_err();

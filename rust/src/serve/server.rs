@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::info;
+use crate::obs::ModelObs;
 use crate::serve::batcher::{EventSink, GenRequest, ReplySink, TokenEvent};
 use crate::serve::http::{self, HttpRequest, Parsed};
 use crate::serve::protocol::{self, Request, RETRY_PREFIX};
@@ -295,6 +296,10 @@ struct Conn {
     inbuf: Vec<u8>,
     outbuf: OutBuf,
     gen: Option<Gen>,
+    /// stage histograms of the model this connection last generated
+    /// against; write-flush spans are recorded here (set at submit, kept
+    /// after the generation finishes so the terminal flush is attributed)
+    obs: Option<Arc<ModelObs>>,
     /// epoll interest currently registered (avoid redundant epoll_ctl)
     interest: u32,
     /// peer sent EOF: no more requests, but responses may still flush
@@ -309,6 +314,8 @@ struct Reactor {
     listener: Option<TcpListener>,
     http_listener: Option<TcpListener>,
     registry: Arc<ModelRegistry>,
+    /// server-level spans and health gauges (shared with `/metrics`)
+    obs: Arc<crate::obs::Registry>,
     stop: Arc<AtomicBool>,
     mailbox: Arc<GenMailbox>,
     conns: HashMap<u64, Conn>,
@@ -342,11 +349,13 @@ impl Reactor {
         let wake = WakeFd::new().context("creating wake eventfd")?;
         poller.add(wake.raw(), TOK_WAKE, EPOLLIN)?;
         let now = Instant::now();
+        let obs = registry.obs();
         Ok(Reactor {
             poller,
             listener: Some(listener),
             http_listener,
             registry,
+            obs,
             stop,
             mailbox: Arc::new(GenMailbox { queue: Mutex::new(Vec::new()), wake }),
             conns: HashMap::new(),
@@ -393,6 +402,12 @@ impl Reactor {
             }
             let now = Instant::now();
             if now >= next_tick {
+                // a loaded event loop fires the 1 Hz tick late; the
+                // overshoot is the lag a scrape sees as reactor health
+                self.obs
+                    .server
+                    .tick_lag_us
+                    .set(now.saturating_duration_since(next_tick).as_micros() as u64);
                 self.tick(now);
                 next_tick = now + Duration::from_secs(1);
             }
@@ -498,6 +513,7 @@ impl Reactor {
     }
 
     fn adopt(&mut self, stream: TcpStream, kind: ConnKind) {
+        let t0 = Instant::now();
         if stream.set_nonblocking(true).is_err() {
             return;
         }
@@ -516,6 +532,7 @@ impl Reactor {
                 inbuf: Vec::new(),
                 outbuf: OutBuf::default(),
                 gen: None,
+                obs: None,
                 interest: EPOLLIN,
                 peer_closed: false,
                 closing: false,
@@ -525,6 +542,8 @@ impl Reactor {
         if let Some(idle) = self.idle_timeout {
             self.wheel.insert(tok, now + idle, now);
         }
+        self.obs.server.open_conns.set(self.conns.len() as u64);
+        self.obs.server.accept.record_elapsed(t0.elapsed());
     }
 
     // ---- readiness dispatch ----
@@ -603,6 +622,7 @@ impl Reactor {
             if conn.closing || conn.gen.is_some() {
                 break;
             }
+            let t_parse = Instant::now();
             match conn.kind {
                 ConnKind::Line => {
                     let Some(nl) = conn.inbuf.iter().position(|&b| b == b'\n')
@@ -627,6 +647,9 @@ impl Reactor {
                 ConnKind::Http => match http::parse_request(&conn.inbuf) {
                     Ok(Parsed::Complete(req, consumed)) => {
                         conn.inbuf.drain(..consumed);
+                        // parse span: only complete requests count (a
+                        // partial parse re-runs on the next readable)
+                        self.obs.server.parse.record_elapsed(t_parse.elapsed());
                         self.process_http(tok, req);
                     }
                     Ok(Parsed::Partial) => break,
@@ -659,11 +682,15 @@ impl Reactor {
     // ---- line protocol ----
 
     fn process_line(&mut self, tok: u64, line: &str) {
-        let reply = match protocol::parse_request(line) {
+        let t0 = Instant::now();
+        let parsed = protocol::parse_request(line);
+        self.obs.server.parse.record_elapsed(t0.elapsed());
+        let reply = match parsed {
             Err(e) => format!("ERR {}\n", protocol::escape(&e)),
             Ok(Request::Ping) => "PONG\n".into(),
+            // observation is side-effect-free: no reload probe here (the
+            // probe rides the reactor's 1 Hz tick only)
             Ok(Request::Stats) => {
-                self.registry.poll_reloads();
                 format!("STATS {}\n", self.registry.stats_line())
             }
             Ok(Request::Shutdown) => {
@@ -693,9 +720,9 @@ impl Reactor {
         let path = req.target.split('?').next().unwrap_or("").to_string();
         match (req.method.as_str(), path.as_str()) {
             ("GET" | "HEAD", "/stats") => {
-                // a stats poll doubles as a hot-reload probe nudge, so a
-                // republished checkpoint surfaces even on an idle server
-                self.registry.poll_reloads();
+                // observation is side-effect-free: no reload probe here
+                // (the probe rides the reactor's 1 Hz tick only, pinned
+                // by `stats_and_metrics_never_initiate_loads`)
                 let body = self.registry.stats_json().render_pretty();
                 self.respond(
                     tok,
@@ -705,6 +732,20 @@ impl Reactor {
                     close,
                 );
             }
+            ("GET" | "HEAD", "/metrics") => {
+                let body = self.registry.metrics_text();
+                let Some(conn) = self.conns.get_mut(&tok) else { return };
+                let _ = http::write_response(
+                    &mut conn.outbuf,
+                    200,
+                    crate::obs::expo::CONTENT_TYPE,
+                    body.as_bytes(),
+                    req.method == "HEAD",
+                );
+                if close {
+                    conn.closing = true;
+                }
+            }
             ("POST", "/shutdown") => {
                 let body =
                     Json::Obj(vec![("ok".into(), Json::Bool(true))]).render();
@@ -712,17 +753,20 @@ impl Reactor {
                 self.stop.store(true, Ordering::SeqCst);
             }
             ("POST", "/generate") => self.http_generate(tok, &req),
-            (_, "/stats" | "/shutdown" | "/generate") => self.respond(
-                tok,
-                405,
-                &json_error("method not allowed for this path"),
-                req.method == "HEAD",
-                close,
-            ),
+            (_, "/stats" | "/metrics" | "/shutdown" | "/generate") => self
+                .respond(
+                    tok,
+                    405,
+                    &json_error("method not allowed for this path"),
+                    req.method == "HEAD",
+                    close,
+                ),
             _ => self.respond(
                 tok,
                 404,
-                &json_error("no such path (want /generate, /stats, /shutdown)"),
+                &json_error(
+                    "no such path (want /generate, /stats, /metrics, /shutdown)",
+                ),
                 req.method == "HEAD",
                 close,
             ),
@@ -853,6 +897,7 @@ impl Reactor {
             session,
             reply: sink,
             cancel: cancel.clone(),
+            queued_at: Instant::now(),
         };
         if let Err(e) = self.registry.submit(model.as_deref(), req) {
             match http {
@@ -884,12 +929,14 @@ impl Reactor {
             }
             return;
         }
+        let gen_obs = self.registry.model_obs(model.as_deref());
         let Some(conn) = self.conns.get_mut(&tok) else {
             // connection died between parse and submit: abandon
             cancel.store(true, Ordering::Relaxed);
             closed.store(true, Ordering::Relaxed);
             return;
         };
+        conn.obs = gen_obs;
         conn.gen = Some(Gen {
             id: gen_id,
             cancel,
@@ -907,6 +954,7 @@ impl Reactor {
             let mut q = self.mailbox.queue.lock().expect("mailbox poisoned");
             std::mem::take(&mut *q)
         };
+        self.obs.server.mailbox_depth.set(batch.len() as u64);
         let mut touched: HashSet<u64> = HashSet::new();
         for (tok, gen_id, ev) in batch {
             let stale = !self
@@ -922,10 +970,9 @@ impl Reactor {
             if finished {
                 self.finish_generation(tok);
             }
-            let over = self
-                .conns
-                .get(&tok)
-                .is_some_and(|c| c.outbuf.len() > MAX_OUTBUF);
+            let queued = self.conns.get(&tok).map_or(0, |c| c.outbuf.len());
+            self.obs.server.outbuf_highwater.record_max(queued as u64);
+            let over = queued > MAX_OUTBUF;
             if over {
                 // consumer hopelessly behind: treat as dead
                 self.close_conn(tok);
@@ -1121,6 +1168,8 @@ impl Reactor {
         let dead = {
             let Some(conn) = self.conns.get_mut(&tok) else { return false };
             let mut dead = false;
+            let had = conn.outbuf.len();
+            let t0 = Instant::now();
             while !conn.outbuf.is_empty() {
                 match conn.stream.write(conn.outbuf.pending()) {
                     Ok(0) => {
@@ -1137,6 +1186,14 @@ impl Reactor {
                         dead = true;
                         break;
                     }
+                }
+            }
+            // write-flush span: time spent pushing this connection's
+            // response bytes into the kernel, attributed to the model of
+            // its most recent generation
+            if had > conn.outbuf.len() {
+                if let Some(o) = &conn.obs {
+                    o.write_flush.record_elapsed(t0.elapsed());
                 }
             }
             // `closing` only takes effect once nothing is in flight:
@@ -1186,6 +1243,7 @@ impl Reactor {
             self.gens.remove(&tok);
         }
         let _ = self.poller.del(conn.stream.as_raw_fd());
+        self.obs.server.open_conns.set(self.conns.len() as u64);
         // conn.stream drops here, closing the fd
     }
 }

@@ -1,0 +1,226 @@
+//! Property tests for the obs metric primitives, checked against plain
+//! sorted-vector oracles:
+//!
+//! * quantile: for any recorded multiset, `quantile(q)` equals the
+//!   bucket upper bound of the true rank-`ceil(q·n)` order statistic —
+//!   so the estimate `u` of a true value `p >= 2` always satisfies
+//!   `p <= u < 2p` (factor-of-two resolution), and `u == 1` for
+//!   `p <= 1`.
+//! * merge: snapshot-merge is exactly "record the concatenation".
+//! * boundaries: exact powers of two are their own upper bound; one
+//!   past a bound moves up a bucket; values beyond the last finite
+//!   bound saturate into +Inf.
+//! * exposition: the rendered text is structurally valid 0.0.4 —
+//!   HELP/TYPE per family, cumulative non-decreasing `le` buckets
+//!   ending at `_count`, parseable sample lines, escaped labels.
+
+use chon::obs::expo::{escape_label, Expo, CONTENT_TYPE};
+use chon::obs::metrics::{
+    bucket_bound, bucket_idx, HistSnapshot, Histogram, N_BUCKETS, N_FINITE,
+};
+
+/// Deterministic xorshift64* PRNG — keeps the property tests
+/// reproducible without pulling in a rand crate.
+struct Rng(u64);
+
+impl Rng {
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+}
+
+/// The oracle: true order statistic at Prometheus rank `ceil(q·n)`.
+fn oracle_rank(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len() as u64;
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    sorted[(rank - 1) as usize]
+}
+
+#[test]
+fn quantile_matches_sorted_vec_oracle() {
+    let mut rng = Rng(0x9e37_79b9_7f4a_7c15);
+    for round in 0..50 {
+        let n = 1 + (rng.next_u64() % 400) as usize;
+        let h = Histogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // mixed magnitudes: 0 .. 2^25 (stay below the +Inf bucket,
+            // whose estimate saturates by design — tested separately)
+            let mag = rng.next_u64() % (N_FINITE as u64);
+            let v = rng.next_u64() % (1u64 << mag).max(1);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), n as u64);
+        assert_eq!(snap.sum, vals.iter().sum::<u64>());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let p = oracle_rank(&vals, q);
+            let u = snap.quantile(q);
+            // exact: the estimate is the bucket bound of the true order
+            // statistic (bucketing is monotone, so ranks line up)
+            assert_eq!(
+                u,
+                bucket_bound(bucket_idx(p)),
+                "round {round} q={q}: oracle {p} -> estimate {u}"
+            );
+            // and therefore within the advertised factor-of-two band
+            if p <= 1 {
+                assert_eq!(u, 1, "round {round} q={q}");
+            } else {
+                assert!(
+                    u >= p && u < 2 * p,
+                    "round {round} q={q}: p={p} u={u} outside [p, 2p)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_is_recording_the_concatenation() {
+    let mut rng = Rng(42);
+    for _ in 0..20 {
+        let (ha, hb, hall) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for _ in 0..(rng.next_u64() % 200) {
+            let v = rng.next_u64() % (1u64 << (rng.next_u64() % 28)).max(1);
+            ha.record(v);
+            hall.record(v);
+        }
+        for _ in 0..(rng.next_u64() % 200) {
+            let v = rng.next_u64() % (1u64 << (rng.next_u64() % 28)).max(1);
+            hb.record(v);
+            hall.record(v);
+        }
+        let mut merged = ha.snapshot();
+        merged.merge(&hb.snapshot());
+        assert_eq!(merged, hall.snapshot());
+        // merging an empty snapshot is the identity
+        let before = merged.clone();
+        merged.merge(&HistSnapshot::default());
+        assert_eq!(merged, before);
+    }
+}
+
+#[test]
+fn bucket_boundaries_are_inclusive_upper_bounds() {
+    for i in 0..N_FINITE {
+        // an exact power of two reports itself as its own quantile
+        let h = Histogram::new();
+        h.record(bucket_bound(i));
+        assert_eq!(h.snapshot().quantile(0.5), bucket_bound(i), "2^{i}");
+        // one past the bound lands one bucket up (or saturates)
+        let h = Histogram::new();
+        h.record(bucket_bound(i) + 1);
+        let want = if i + 1 < N_FINITE {
+            bucket_bound(i + 1)
+        } else {
+            bucket_bound(N_FINITE - 1) * 2 // +Inf reports saturated 2x
+        };
+        assert_eq!(h.snapshot().quantile(0.5), want, "2^{i}+1");
+    }
+}
+
+#[test]
+fn empty_single_and_saturated() {
+    // empty: every quantile is 0
+    let empty = HistSnapshot::default();
+    assert_eq!(empty.count(), 0);
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(empty.quantile(q), 0);
+    }
+
+    // single sample: every quantile reports its bucket
+    let h = Histogram::new();
+    h.record(300);
+    let s = h.snapshot();
+    assert_eq!(s.count(), 1);
+    assert_eq!(s.sum, 300);
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        let u = s.quantile(q);
+        assert!((300..600).contains(&u), "q{q} -> {u}");
+    }
+
+    // beyond the last finite bound: +Inf bucket, saturated estimate
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    let s = h.snapshot();
+    assert_eq!(s.buckets[N_FINITE], 1);
+    assert_eq!(s.quantile(0.5), bucket_bound(N_FINITE - 1) * 2);
+}
+
+#[test]
+fn exposition_is_structurally_valid() {
+    let h = Histogram::new();
+    for v in [1u64, 7, 7, 900, 1 << 20] {
+        h.record(v);
+    }
+    let mut e = Expo::new();
+    e.family("chon_stage_latency_us", "histogram", "Stage latency (µs).");
+    e.histogram(
+        "chon_stage_latency_us",
+        &[("model", "al\"pha"), ("stage", "decode_token")],
+        &h.snapshot(),
+    );
+    e.family("chon_requests_total", "counter", "Requests admitted.");
+    e.sample("chon_requests_total", &[("model", "al\"pha")], 5);
+    e.family("chon_reactor_open_conns", "gauge", "Open connections.");
+    e.sample("chon_reactor_open_conns", &[], 2);
+    let text = e.finish();
+
+    assert_eq!(CONTENT_TYPE, "text/plain; version=0.0.4");
+
+    // each family has HELP then TYPE, in order, before its first sample
+    // (sample lines start at column 0; comment lines start with '#')
+    for (name, kind) in [
+        ("chon_stage_latency_us", "histogram"),
+        ("chon_requests_total", "counter"),
+        ("chon_reactor_open_conns", "gauge"),
+    ] {
+        let help = text.find(&format!("# HELP {name} ")).expect(name);
+        let ty = text.find(&format!("# TYPE {name} {kind}\n")).expect(name);
+        let first_sample = text
+            .lines()
+            .scan(0usize, |pos, l| {
+                let at = *pos;
+                *pos += l.len() + 1;
+                Some((at, l))
+            })
+            .find(|(_, l)| !l.starts_with('#') && l.starts_with(name))
+            .map(|(at, _)| at)
+            .expect(name);
+        assert!(help < ty && ty < first_sample, "{name} family ordering");
+    }
+
+    // every non-comment line is `name[{labels}] value` with numeric value
+    let mut cum = 0u64;
+    let mut bucket_lines = 0usize;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("sample line");
+        let v: f64 = value.parse().expect("numeric value");
+        if series.starts_with("chon_stage_latency_us_bucket{") {
+            assert!(series.contains("le=\""), "{line}");
+            // escaped label value survives intact
+            assert!(series.contains("model=\"al\\\"pha\""), "{line}");
+            let c = v as u64;
+            assert!(c >= cum, "cumulative buckets must not decrease: {line}");
+            cum = c;
+            bucket_lines += 1;
+        }
+    }
+    assert_eq!(bucket_lines, N_BUCKETS);
+    assert_eq!(cum, 5, "last bucket (le=+Inf) must equal the count");
+    assert!(text.contains(
+        "chon_stage_latency_us_count{model=\"al\\\"pha\",stage=\"decode_token\"} 5\n"
+    ));
+    assert!(escape_label("a\\b\"c\nd") == "a\\\\b\\\"c\\nd");
+}

@@ -23,6 +23,9 @@
 //!   Retry`, counted in `retry_rejects`), never dropped.
 //! * idle reload: a republished checkpoint is picked up with zero
 //!   generate traffic — the reactor timer tick drives the probe.
+//! * observation is side-effect-free: `/stats` and `/metrics` reads
+//!   never initiate a load or reload; only the timer tick (and real
+//!   generate traffic) may trigger the probe.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
@@ -430,9 +433,10 @@ fn slow_model_load_does_not_stall_resident_models() {
 // ------------------------------------------------------- idle reload probe
 
 /// A republished checkpoint is picked up with *zero* generate traffic:
-/// the reactor's timer tick (plus the `GET /stats` nudge) drives the
-/// reload probe, so an idle model converges to the new generation on
-/// its own — no request needed to trigger it.
+/// the reactor's timer tick drives the reload probe, so an idle model
+/// converges to the new generation on its own — no request needed to
+/// trigger it (and no `/stats` scrape either: observation is
+/// side-effect-free; the `/stats` polling below is reads only).
 #[test]
 fn reload_probe_fires_without_generate_traffic() {
     let (root, ckpt1) = train_checkpoint("idle_reload", 8, 11);
@@ -513,6 +517,7 @@ fn lru_unload_rejects_queued_requests_retryably() {
                 session: None,
                 reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
+                queued_at: Instant::now(),
             },
             rx,
         )
@@ -569,5 +574,86 @@ fn lru_unload_rejects_queued_requests_retryably() {
 
     let line = reg.stats_line();
     assert_eq!(stat_of(&line, "retry_rejects"), retried, "{line}");
+    reg.shutdown();
+}
+
+// --------------------------------------------- side-effect-free scrapes
+
+/// Observation must never mutate: with a republished checkpoint sitting
+/// on disk, any number of `stats_json()` / `stats_line()` /
+/// `metrics_text()` reads must NOT initiate the reload — the loaded
+/// generation stays put. Only an explicit probe nudge (what the
+/// reactor's 1 Hz tick sends) picks the republish up. This pins the
+/// `/stats`-triggers-reload bug closed.
+#[test]
+fn stats_and_metrics_never_initiate_loads() {
+    let (root, ckpt1) = train_checkpoint("obs_pin", 8, 11);
+    let reg = {
+        let mut reg = ModelRegistry::new(RegistryOpts {
+            reload_poll_ms: 0,
+            ..RegistryOpts::default()
+        });
+        reg.register("live", &root).unwrap();
+        reg
+    };
+
+    // make the model resident with one real generation
+    let (tx, rx) = mpsc::channel();
+    reg.submit(
+        Some("live"),
+        GenRequest {
+            prompt: "warm ".into(),
+            max_tokens: 4,
+            temp: 0.0,
+            session: None,
+            reply: ReplySink::channel(tx),
+            cancel: Arc::new(AtomicBool::new(false)),
+            queued_at: Instant::now(),
+        },
+    )
+    .unwrap();
+    loop {
+        match rx.recv_timeout(Duration::from_secs(120)).expect("reply hung") {
+            TokenEvent::Token(_) => continue,
+            TokenEvent::Done { .. } => break,
+            ev => panic!("unexpected terminal event: {ev:?}"),
+        }
+    }
+    assert_eq!(reg.loaded_generation("live"), Some(1));
+
+    // republish on disk: generation 2 is now waiting to be noticed
+    let mut tr = Trainer::new(native_cfg(11)).unwrap();
+    tr.restore(&ckpt1).unwrap();
+    tr.train(6).unwrap();
+    let ckpt2 = tr.save_checkpoint_to(&root).unwrap();
+    assert_ne!(ckpt1, ckpt2, "republish should land at a new step dir");
+
+    // hammer every observation surface; none of them may trigger the
+    // reload (the lifecycle thread is idle, so any bump it was going to
+    // make would land well within this window)
+    let until = Instant::now() + Duration::from_millis(1200);
+    while Instant::now() < until {
+        let _ = reg.stats_json();
+        let _ = reg.stats_line();
+        let _ = reg.metrics_text();
+        assert_eq!(
+            reg.loaded_generation("live"),
+            Some(1),
+            "an observation read initiated a reload"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // the explicit probe (what the reactor tick calls) does pick it up
+    reg.poll_reloads();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while reg.loaded_generation("live") != Some(2) {
+        assert!(
+            Instant::now() < deadline,
+            "poll_reloads() never picked up the republish"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        reg.poll_reloads();
+    }
     reg.shutdown();
 }

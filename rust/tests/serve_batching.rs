@@ -5,7 +5,7 @@
 use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use chon::data::corpus::{Corpus, CorpusConfig};
 use chon::data::tokenizer::Tokenizer;
@@ -98,6 +98,7 @@ fn concurrent_clients_get_their_own_completion() {
                 session: None,
                 reply: ReplySink::channel(tx),
                 cancel: Arc::new(AtomicBool::new(false)),
+                queued_at: Instant::now(),
             })
             .unwrap();
         receivers.push(rx);

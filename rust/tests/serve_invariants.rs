@@ -18,7 +18,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use chon::config::RunConfig;
 use chon::coordinator::Trainer;
@@ -195,6 +195,7 @@ fn session_turn(b: &RequestBatcher, sid: &str, prompt: &str, n: usize) -> Vec<u8
             session: Some(sid.into()),
             reply: ReplySink::channel(tx),
             cancel: Arc::new(AtomicBool::new(false)),
+            queued_at: Instant::now(),
         })
         .unwrap();
     drain(&rx)

@@ -1,0 +1,192 @@
+//! `GET /metrics` end-to-end: under concurrent generate load the scrape
+//! returns valid Prometheus text with populated per-model per-stage
+//! latency histograms and reactor health gauges, counters are monotone
+//! across scrapes, `/stats` keeps its existing JSON fields, and
+//! `HEAD /metrics` honors the no-body contract.
+
+use std::path::{Path, PathBuf};
+use std::thread::JoinHandle;
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::serve::{client, ModelRegistry, RegistryOpts, ServeOpts, Server};
+use chon::util::json::Json;
+
+mod common;
+use common::http_request;
+
+fn native_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = "tiny_gla".into();
+    cfg.recipe = "chon".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = seed;
+    cfg.out_dir = std::env::temp_dir().join("chon_serve_metrics_runs");
+    cfg
+}
+
+fn train_checkpoint(tag: &str, steps: usize, seed: u64) -> (PathBuf, PathBuf) {
+    let root = std::env::temp_dir().join(format!("chon_serve_metrics_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut tr = Trainer::new(native_cfg(seed)).unwrap();
+    tr.train(steps).unwrap();
+    let ckpt = tr.save_checkpoint_to(&root).unwrap();
+    (root, ckpt)
+}
+
+fn start_server(
+    entries: &[(&str, &Path)],
+    reg_opts: RegistryOpts,
+) -> (u16, u16, JoinHandle<String>) {
+    let mut registry = ModelRegistry::new(reg_opts);
+    for (name, dir) in entries {
+        registry.register(name, dir).expect("register model");
+    }
+    let opts = ServeOpts { port: 0, http_port: Some(0), ..ServeOpts::default() };
+    let server = Server::bind(registry, &opts).expect("bind");
+    let port = server.port();
+    let http_port = server.http_port().expect("http enabled");
+    let h = std::thread::spawn(move || server.run().expect("server run"));
+    (port, http_port, h)
+}
+
+/// `chon_stage_latency_us_count` for one (model, stage) pair.
+fn stage_count(body: &str, model: &str, stage: &str) -> f64 {
+    client::metric_value(
+        body,
+        &format!(
+            "chon_stage_latency_us_count{{model=\"{model}\",stage=\"{stage}\"}}"
+        ),
+    )
+    .unwrap_or_else(|| panic!("no {stage} count for {model}"))
+}
+
+/// Fire `per_thread` generations from each of `threads` concurrent
+/// clients against the line protocol; every request must succeed.
+fn concurrent_load(port: u16, threads: usize, per_thread: usize, max_tokens: usize) {
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let prompt = format!("load {t} {i} ");
+                    let (text, n, _) = client::generate_once_for(
+                        "127.0.0.1",
+                        port,
+                        Some("alpha"),
+                        &prompt,
+                        max_tokens,
+                        0.0,
+                    )
+                    .expect("generate under load");
+                    assert!(n > 0 && !text.is_empty());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn metrics_scrape_under_concurrent_load() {
+    let (_root, ckpt) = train_checkpoint("load", 8, 11);
+    let (port, http_port, h) =
+        start_server(&[("alpha", ckpt.as_path())], RegistryOpts::default());
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 3;
+    const TOKENS: usize = 8;
+
+    concurrent_load(port, THREADS, PER_THREAD, TOKENS);
+    let m1 = client::fetch_metrics("127.0.0.1", http_port).unwrap();
+    concurrent_load(port, THREADS, PER_THREAD, TOKENS);
+    let m2 = client::fetch_metrics("127.0.0.1", http_port).unwrap();
+
+    let requests = (THREADS * PER_THREAD) as f64;
+
+    // per-model stage histograms are populated with plausible counts:
+    // queue-wait once per request, prefill once per admitted group
+    // (every request prefills, groups may batch several), decode once
+    // per *batched* step — so at least one request's worth of steps
+    // (the prefill emits token 1, decode makes the other TOKENS-1)
+    for m in [&m1, &m2] {
+        assert!(stage_count(m, "alpha", "queue_wait") >= requests);
+        assert!(stage_count(m, "alpha", "prefill") >= 1.0);
+        assert!(stage_count(m, "alpha", "decode_token") >= TOKENS as f64 - 1.0);
+        // the reactor flushed generation bytes at least once per request
+        assert!(stage_count(m, "alpha", "write_flush") >= 1.0);
+        // histogram structure: cumulative buckets, sum, count all render
+        assert!(m.contains("# TYPE chon_stage_latency_us histogram"));
+        assert!(m.contains(
+            "chon_stage_latency_us_bucket{model=\"alpha\",stage=\"prefill\",le=\"+Inf\"}"
+        ));
+        assert!(m.contains("chon_stage_latency_us_sum{model=\"alpha\",stage=\"prefill\"}"));
+
+        // connection spans and reactor health gauges
+        assert!(client::metric_value(m, "chon_conn_stage_us_count{stage=\"accept\"}")
+            .is_some_and(|v| v >= 1.0));
+        assert!(client::metric_value(m, "chon_conn_stage_us_count{stage=\"parse\"}")
+            .is_some_and(|v| v >= 1.0));
+        for gauge in [
+            "chon_reactor_tick_lag_us",
+            "chon_reactor_mailbox_depth",
+            "chon_reactor_open_conns",
+            "chon_reactor_outbuf_highwater_bytes",
+        ] {
+            assert!(client::metric_value(m, gauge).is_some(), "{gauge} missing");
+        }
+
+        // ServeStats-derived counters carry the model label
+        assert!(client::metric_value(m, "chon_requests_total{model=\"alpha\"}")
+            .is_some_and(|v| v >= requests));
+        assert!(client::metric_value(m, "chon_model_resident{model=\"alpha\"}")
+            .is_some_and(|v| v == 1.0));
+    }
+
+    // monotone across scrapes: counters strictly increase under load,
+    // stage histogram counts never decrease
+    client::assert_metrics_progress(&m1, &m2).unwrap();
+    for stage in ["queue_wait", "prefill", "decode_token", "write_flush"] {
+        assert!(
+            stage_count(&m2, "alpha", stage) >= stage_count(&m1, "alpha", stage),
+            "{stage} count decreased across scrapes"
+        );
+    }
+    assert!(
+        client::metric_value(&m2, "chon_requests_total{model=\"alpha\"}").unwrap()
+            >= 2.0 * requests
+    );
+
+    // the same body serves over the test's independent HTTP client, and
+    // HEAD returns headers only
+    let (status, body) = http_request(http_port, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(String::from_utf8(body).unwrap().contains("chon_requests_total"));
+    let (status, body) = http_request(http_port, "HEAD", "/metrics", "");
+    assert_eq!(status, 200);
+    assert!(body.is_empty(), "HEAD /metrics must not carry a body");
+
+    // /stats keeps its existing JSON surface next to /metrics
+    let (status, body) = http_request(http_port, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    for field in ["requests", "tokens", "models", "per_model"] {
+        assert!(doc.get(field).is_some(), "/stats lost field {field:?}");
+    }
+    assert!(
+        doc.get("requests").and_then(|v| v.as_f64()).unwrap() >= 2.0 * requests
+    );
+
+    let stats = stop_line(port, h);
+    assert!(stats.contains("requests="));
+}
+
+fn stop_line(port: u16, h: JoinHandle<String>) -> String {
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap()
+}
