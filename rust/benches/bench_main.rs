@@ -36,7 +36,7 @@ use chon::hcp::modes::{apply, baseline, HcpConfig, QuantizedPair};
 use chon::hcp::pipeline;
 use chon::quant::{fp8_fake_quant, mxfp4, nvfp4, rht};
 use chon::runtime::native;
-use chon::util::ndarray::{matmul, matmul_par, Mat};
+use chon::util::ndarray::{matmul, matmul_par, matmul_quant_packed_with, Mat, SimdLevel};
 use chon::util::prng::Rng;
 
 /// On a single-core CPU testbed, XLA's LLVM passes dominate (minutes per
@@ -805,6 +805,30 @@ fn perf() -> Result<()> {
         format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
     ]);
 
+    // in-register NVFP4 dequant GEMM: weights stay packed (4-bit codes +
+    // e4m3 scales) and decode inside the microkernel. Both SIMD levels
+    // are timed for the log; the recorded entry is the level runtime
+    // dispatch picks on this host, i.e. what `--packed-compute` serves.
+    {
+        let q = nvfp4::PackedQuantMat::pack(&b);
+        let mut timed = [0.0f64; 2];
+        for (i, lvl) in [SimdLevel::Scalar, SimdLevel::Avx2].iter().enumerate() {
+            let t = time_auto(400.0, || {
+                std::hint::black_box(matmul_quant_packed_with(&a, &q, 1, *lvl));
+            });
+            timed[i] = t.median_ms;
+            table.row(&[
+                format!("matmul nvfp4 ({lvl:?})"),
+                "512^3".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.1} GFLOP/s", flops / t.median_ms / 1e6),
+            ]);
+        }
+        let detected = chon::util::ndarray::simd_level_name();
+        let med = if detected == "avx2" { timed[1] } else { timed[0] };
+        record("matmul_nvfp4_512", med);
+    }
+
     // blocked transpose (every backward GEMM transposes an operand)
     let t = time_auto(300.0, || {
         std::hint::black_box(mat.transpose());
@@ -960,6 +984,43 @@ fn perf() -> Result<()> {
             table.row(&[
                 format!("serve decode packed-W (b={batch})"),
                 "tiny_gla/chon".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
+            ]);
+        }
+
+        // --packed-compute decode: NVFP4 layers served straight from the
+        // 4-bit codes (in-register dequant GEMM). "nvfp4" has hcp_frac=0
+        // (pure packed kernel); "chon" adds the hot-channel f32 side-GEMM
+        // on top, so the pair isolates the split's cost. The packed entry
+        // is gated against staying under serve_decode_packed_weights —
+        // same checkpoint, memory-bound regime, smaller resident operand.
+        for (recipe, entry) in [
+            ("nvfp4", "serve_decode_nvfp4_packed"),
+            ("chon", "serve_decode_nvfp4_hot_split"),
+        ] {
+            let cfg = chon::runtime::native::model_cfg("tiny_gla")?;
+            let params = chon::runtime::native::model::init_params(&cfg, 1);
+            let eng = chon::serve::Engine::from_parts_mode(
+                cfg,
+                chon::runtime::native::recipe::recipe(recipe)?,
+                chon::data::tokenizer::Tokenizer::byte_level(),
+                &params,
+                true,
+            );
+            let batch = 4usize;
+            let mut sessions: Vec<chon::serve::Session> =
+                (0..batch).map(|_| eng.new_session()).collect();
+            let toks: Vec<u32> = (0..batch as u32).map(|i| 97 + i).collect();
+            let t = time_auto(300.0, || {
+                let mut refs: Vec<&mut chon::serve::Session> =
+                    sessions.iter_mut().collect();
+                std::hint::black_box(eng.decode_step(&mut refs, &toks));
+            });
+            record(entry, t.median_ms);
+            table.row(&[
+                format!("serve decode nvfp4 (b={batch})"),
+                format!("tiny_gla/{recipe}"),
                 format!("{:.2}", t.median_ms),
                 format!("{:.0} tok/s", batch as f64 / t.median_ms * 1e3),
             ]);

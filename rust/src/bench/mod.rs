@@ -237,16 +237,18 @@ pub fn diff_reports(
             }
         }
     }
-    // new entries never fail the gate, but they must be *visible* in the
-    // same per-entry delta format as everything else: a baseline refresh
-    // (or a bench that started emitting a new name) should be auditable
-    // from the CI log, not silently skipped
+    // entries with no baseline never fail the gate, but they must be
+    // *visible* in the same per-entry delta format as everything else: a
+    // bench that was renamed during a baseline refresh shows up here as
+    // "baseline orphaned" (its old name regresses as MISSING above), so
+    // the rename stays auditable from the CI log instead of silently
+    // passing as a brand-new entry
     let mut fresh = 0usize;
     for c in current {
         if !baseline.iter().any(|b| b.name == c.name) {
             fresh += 1;
             println!(
-                "{:<28} baseline missing (new)   now {:>8.2} {u}  ok",
+                "{:<28} baseline orphaned        now {:>8.2} {u}  ok",
                 c.name,
                 c.value,
                 u = c.unit,
@@ -255,9 +257,10 @@ pub fn diff_reports(
     }
     if fresh > 0 {
         println!(
-            "{fresh} entr{} without a baseline — refresh it to start \
-             gating them",
-            if fresh == 1 { "y" } else { "ies" }
+            "{fresh} entr{} without a baseline (new bench or rename) — \
+             refresh the baseline to start gating {}",
+            if fresh == 1 { "y" } else { "ies" },
+            if fresh == 1 { "it" } else { "them" }
         );
     }
     regressed
@@ -328,8 +331,9 @@ mod tests {
         let cur = vec![BenchEntry::val("matmul", 2.0, "loss")];
         let bad = diff_reports(&entries[..1], &cur, 25.0);
         assert_eq!(bad, vec!["matmul".to_string()]);
-        // entries new in the current run are reported ("baseline
-        // missing") but never regress the gate
+        // entries with no baseline (new bench, or the new name of a
+        // rename) are reported as "baseline orphaned" but never regress
+        // the gate
         let cur = vec![BenchEntry::ms("matmul", 2.0), BenchEntry::ms("brand_new", 9.0)];
         assert!(diff_reports(&entries[..1], &cur, 25.0).is_empty());
     }

@@ -89,6 +89,10 @@ pub struct RunConfig {
     /// serve: sample per-request HCP hot-channel hits and residual
     /// energy into `/metrics` (small per-token overhead; off by default)
     pub obs_outliers: bool,
+    /// serve: keep NVFP4 weights resident as packed 4-bit codes decoded
+    /// in-register by the GEMM, with hot channels split into an f32
+    /// side-GEMM — a distinct recipe mode vs the fake-quant default
+    pub packed_compute: bool,
     /// client: scrape `GET /metrics` on this port before and after the
     /// load run and assert key series exist and increase (0 = off)
     pub metrics_port: u16,
@@ -136,6 +140,7 @@ impl Default for RunConfig {
             prompt: "the ".into(),
             shutdown: false,
             obs_outliers: false,
+            packed_compute: false,
             metrics_port: 0,
         }
     }
@@ -284,6 +289,8 @@ impl RunConfig {
                 "shutdown" => self.shutdown = true,
                 // value-less flag: nothing to consume
                 "obs-outliers" => self.obs_outliers = true,
+                // value-less flag: nothing to consume
+                "packed-compute" => self.packed_compute = true,
                 "metrics-port" => self.metrics_port = next()?.parse()?,
                 "config" => {
                     let loaded = RunConfig::from_file(&PathBuf::from(next()?))?;
@@ -477,6 +484,14 @@ mod tests {
         .unwrap();
         assert!(c.obs_outliers);
         assert_eq!(c.metrics_port, 7412);
+    }
+
+    #[test]
+    fn packed_compute_flag_parses() {
+        let mut c = RunConfig::default();
+        assert!(!c.packed_compute);
+        c.apply_args(&["--packed-compute".into()]).unwrap();
+        assert!(c.packed_compute);
     }
 
     #[test]

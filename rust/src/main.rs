@@ -83,6 +83,11 @@ SERVE/CLIENT FLAGS:
   --shutdown        (ask the server to drain + stop)
   --obs-outliers    serve: sample per-request HCP hot-channel hits and
                     residual energy into GET /metrics (small decode cost)
+  --packed-compute  serve: keep NVFP4 weights as packed 4-bit codes decoded
+                    in-register by the GEMM (hot channels split into an f32
+                    side-GEMM). A distinct recipe mode vs fake-quant; see
+                    the README accuracy contract. CHON_SIMD=scalar|avx2
+                    forces the kernel dispatch
   --metrics-port P  client load mode: scrape /metrics on P before and after
                     the run and assert key series exist and increase
 
@@ -301,7 +306,14 @@ fn main() -> Result<()> {
                 load_delay_ms: 0,
                 obs: chon::obs::global(),
                 obs_outliers: cfg.obs_outliers,
+                packed_compute: cfg.packed_compute,
             };
+            if cfg.packed_compute {
+                println!(
+                    "packed-compute on: SIMD kernel {}",
+                    chon::util::ndarray::simd_level_name()
+                );
+            }
             let mut registry = ModelRegistry::new(reg_opts);
             for (name, dir) in &entries {
                 registry.register(name, dir)?;

@@ -44,6 +44,22 @@ pub struct ModelObs {
     pub write_flush: Histogram,
     /// HCP outlier taps, installed at engine load under `--obs-outliers`
     pub outliers: OnceLock<Arc<OutlierObs>>,
+    /// resident weight bytes of the currently installed engine; set (with
+    /// [`ModelObs::weight_mode`]) every time an engine is installed, so a
+    /// hot reload that flips compute modes re-labels the gauge
+    pub weight_bytes: Gauge,
+    /// compute-mode label for `weight_bytes` ("packed" or "f32"); doubles
+    /// as the presence marker that turns the family on in `render`
+    pub weight_mode: Mutex<Option<&'static str>>,
+}
+
+impl ModelObs {
+    /// Record the resident weight footprint of a freshly installed
+    /// engine. `mode` is the engine's compute mode label.
+    pub fn set_weight_bytes(&self, bytes: u64, mode: &'static str) {
+        self.weight_bytes.set(bytes);
+        *self.weight_mode.lock().unwrap() = Some(mode);
+    }
 }
 
 /// Reactor/connection-level spans and health gauges (model-independent).
@@ -160,6 +176,27 @@ impl Registry {
                     "chon_stage_latency_us",
                     &[("model", name), ("stage", stage)],
                     &h.snapshot(),
+                );
+            }
+        }
+
+        if models
+            .iter()
+            .any(|(_, m)| m.weight_mode.lock().unwrap().is_some())
+        {
+            e.family(
+                "chon_model_weight_bytes",
+                "gauge",
+                "Resident weight bytes of the installed engine, by compute mode.",
+            );
+            for (name, m) in &models {
+                let Some(mode) = *m.weight_mode.lock().unwrap() else {
+                    continue;
+                };
+                e.sample(
+                    "chon_model_weight_bytes",
+                    &[("model", name), ("mode", mode)],
+                    m.weight_bytes.get(),
                 );
             }
         }
@@ -309,6 +346,27 @@ mod tests {
             .contains("chon_stage_latency_us_count{model=\"m1\",stage=\"prefill\"} 1\n"));
         // no outlier families unless taps are installed
         assert!(!text.contains("chon_hcp_"));
+        // no weight gauge until an engine install records it
+        assert!(!text.contains("chon_model_weight_bytes"));
+    }
+
+    #[test]
+    fn render_weight_bytes_when_set() {
+        let r = Registry::new();
+        r.model("packed").set_weight_bytes(123_456, "packed");
+        r.model("dense").set_weight_bytes(987_654, "f32");
+        let text = r.render();
+        assert!(text.contains("# TYPE chon_model_weight_bytes gauge"));
+        assert!(text
+            .contains("chon_model_weight_bytes{model=\"dense\",mode=\"f32\"} 987654\n"));
+        assert!(text
+            .contains("chon_model_weight_bytes{model=\"packed\",mode=\"packed\"} 123456\n"));
+        // a reload that flips modes re-labels the same series
+        r.model("packed").set_weight_bytes(400_000, "f32");
+        let text = r.render();
+        assert!(text
+            .contains("chon_model_weight_bytes{model=\"packed\",mode=\"f32\"} 400000\n"));
+        assert!(!text.contains("mode=\"packed\""));
     }
 
     #[test]

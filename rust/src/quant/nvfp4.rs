@@ -7,7 +7,7 @@
 //! python/compile/kernels/ref.py.
 
 use crate::quant::{e2m1, e4m3};
-use crate::util::ndarray::Mat;
+use crate::util::ndarray::{Mat, KC, NR};
 use crate::util::prng::Rng;
 
 pub const BLOCK: usize = 16;
@@ -102,6 +102,152 @@ pub fn dequantize(q: &Quantized) -> Vec<f32> {
         }
     }
     out
+}
+
+/// One KC-row contraction block of a [`PackedQuantMat`] (mirrors
+/// `ndarray::PackedBlock`).
+#[derive(Clone, Debug)]
+pub struct PackedQuantBlock {
+    /// first k row covered by this block
+    pub(crate) k0: usize,
+    /// rows in this block (== KC except possibly the last)
+    pub(crate) kc: usize,
+    /// byte offset of this block's codes (panel-major)
+    pub(crate) codes_off: usize,
+    /// byte offset of this block's scale codes (panel-major)
+    pub(crate) scales_off: usize,
+}
+
+/// A frozen k×n weight resident as packed NVFP4: e2m1 nibble codes +
+/// per-(16-k-run, column) e4m3 scales + one global f32 decode scale,
+/// laid out in the same NR/KC B-panel order as `ndarray::pack_b` so the
+/// quantized microkernel decodes panels in-register.
+///
+/// Layout per KC block, per panel p (NR output columns):
+/// - codes: `kc` rows × NR/2 bytes; column j sits in nibble j%2 of byte
+///   j/2, low nibble first — `codes_off + p*kc*(NR/2) + kk*(NR/2) + j/2`
+/// - scales: one e4m3 code per (16-k-run g, column j) —
+///   `scales_off + p*ngroups*NR + g*NR + j`, `ngroups = ceil(kc/16)`
+///
+/// Blocks run down k (the contraction dimension, what a tensor-core GEMM
+/// consumes) rather than along rows like [`fake_quant_mat`]; the last
+/// k-run of a block may cover fewer than 16 rows. The ragged right edge
+/// (j ≥ n) packs code 0 under an amax-0 scale, decoding to exact 0.0.
+#[derive(Clone, Debug)]
+pub struct PackedQuantMat {
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) npanels: usize,
+    pub(crate) blocks: Vec<PackedQuantBlock>,
+    pub(crate) codes: Vec<u8>,
+    pub(crate) scales: Vec<u8>,
+    /// global decode scale (Def. C.1)
+    pub(crate) s_dec: f32,
+}
+
+impl PackedQuantMat {
+    /// Quantize + pack a k×n weight (RTN — the frozen-weights path).
+    /// Per-block scale math is step-for-step the one in [`quantize`],
+    /// with blocks running down k instead of along the flat slice.
+    pub fn pack(w: &Mat) -> Self {
+        let (k, n) = (w.rows, w.cols);
+        let npanels = n.div_ceil(NR);
+        let s_enc = global_enc_scale(amax(&w.data));
+        let s_dec = 1.0 / s_enc;
+        let mut blocks = Vec::with_capacity(k.div_ceil(KC));
+        let mut codes = Vec::with_capacity(k.div_ceil(2) * npanels * NR);
+        let mut scales = Vec::with_capacity(k.div_ceil(BLOCK) * npanels * NR);
+        let mut senc = vec![0.0f32; KC.div_ceil(BLOCK) * NR];
+        for k0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - k0);
+            let ngroups = kc.div_ceil(BLOCK);
+            blocks.push(PackedQuantBlock {
+                k0,
+                kc,
+                codes_off: codes.len(),
+                scales_off: scales.len(),
+            });
+            for p in 0..npanels {
+                let c0 = p * NR;
+                // scales first: the code goes to storage, its exact
+                // decoded value drives element encoding (as in quantize)
+                for g in 0..ngroups {
+                    let r1 = kc.min((g + 1) * BLOCK);
+                    for j in 0..NR {
+                        let col = c0 + j;
+                        let mut amax_b = 0.0f32;
+                        if col < n {
+                            for kk in g * BLOCK..r1 {
+                                amax_b = amax_b.max(w.at(k0 + kk, col).abs());
+                            }
+                        }
+                        let s_e4m3_code = e4m3::encode(amax_b / e2m1::E2M1_MAX * s_enc);
+                        let s_e4m3 = e4m3::decode(s_e4m3_code);
+                        scales.push(s_e4m3_code);
+                        let denom = s_e4m3 * s_dec;
+                        senc[g * NR + j] = if denom > 0.0 { 1.0 / denom } else { 0.0 };
+                    }
+                }
+                for kk in 0..kc {
+                    let g = kk / BLOCK;
+                    for j2 in 0..NR / 2 {
+                        let q = |j: usize| -> u8 {
+                            let col = c0 + j;
+                            if col < n {
+                                e2m1::encode(e2m1::rtn(w.at(k0 + kk, col) * senc[g * NR + j]))
+                            } else {
+                                0
+                            }
+                        };
+                        codes.push(q(2 * j2) | (q(2 * j2 + 1) << 4));
+                    }
+                }
+            }
+        }
+        PackedQuantMat { k, n, npanels, blocks, codes, scales, s_dec }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.k
+    }
+
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    /// Resident bytes of the packed operand (codes + scales + global
+    /// scale) — what `chon_model_weight_bytes{mode="packed"}` reports.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + 4
+    }
+
+    /// Decode back to a dense k×n f32 matrix. This is the kernel's
+    /// reference: `matmul_quant_packed(a, q)` is bitwise
+    /// `matmul(a, &q.dequantize_mat())`. The scale product is computed
+    /// e4m3-decode-first (`s = e4m3 * s_dec`, then `e2m1 * s`) — the
+    /// same association order as the kernel's sv precompute; f32
+    /// multiplication is not associative, so the order is load-bearing.
+    pub fn dequantize_mat(&self) -> Mat {
+        let mut out = Mat::zeros(self.k, self.n);
+        for blk in &self.blocks {
+            let ngroups = blk.kc.div_ceil(BLOCK);
+            for p in 0..self.npanels {
+                let c0 = p * NR;
+                let ncols = (self.n - c0).min(NR);
+                for kk in 0..blk.kc {
+                    let row = blk.codes_off + p * blk.kc * (NR / 2) + kk * (NR / 2);
+                    let srow = blk.scales_off + p * ngroups * NR + (kk / BLOCK) * NR;
+                    for j in 0..ncols {
+                        let byte = self.codes[row + j / 2];
+                        let code = if j % 2 == 0 { byte & 0xF } else { byte >> 4 };
+                        let s = e4m3::decode(self.scales[srow + j]) * self.s_dec;
+                        *out.at_mut(blk.k0 + kk, c0 + j) = e2m1::decode(code) * s;
+                    }
+                }
+            }
+        }
+        out
+    }
 }
 
 /// quantize→dequantize in one pass (no packing), matching ref.py exactly.
@@ -301,6 +447,88 @@ mod tests {
         let e1 = x.mse(&fake_quant_mat(&x));
         let e2 = x.mse(&fake_quant_mat_2d(&x, 16));
         assert!(e2 >= e1 * 0.999, "2D {e2} vs 1D {e1}");
+    }
+
+    #[test]
+    fn packed_mat_single_column_matches_quantize() {
+        // With n == 1 the packed codec's k-direction 16-runs coincide
+        // with quantize's flat 16-blocks and the global amax covers the
+        // same slice, so the decode must match bitwise.
+        let col = randn(64, 11, 2.0);
+        let w = Mat::from_vec(64, 1, col.clone());
+        let q = PackedQuantMat::pack(&w);
+        assert_eq!((q.rows(), q.cols()), (64, 1));
+        let deq = q.dequantize_mat();
+        let want = dequantize(&quantize(&col, Rounding::Rtn, None));
+        for (r, &v) in want.iter().enumerate() {
+            assert_eq!(deq.at(r, 0), v, "row {r}");
+        }
+    }
+
+    #[test]
+    fn packed_mat_ragged_error_bounded() {
+        // ragged in every direction: k not a multiple of 16 or KC,
+        // n not a multiple of NR, degenerate 1x1
+        for &(k, n) in &[(1usize, 1usize), (15, 17), (257, 16), (300, 33), (512, 48)] {
+            let w = Mat::from_vec(k, n, randn(k * n, (k * 31 + n) as u64, 1.5));
+            let q = PackedQuantMat::pack(&w);
+            let deq = q.dequantize_mat();
+            assert_eq!((deq.rows, deq.cols), (k, n));
+            // per-(16-k-run, column) bound, k-runs restarting at KC edges
+            for c in 0..n {
+                for k0 in (0..k).step_by(KC) {
+                    let kc = KC.min(k - k0);
+                    for g0 in (0..kc).step_by(BLOCK) {
+                        let g1 = kc.min(g0 + BLOCK);
+                        let amax_b = (g0..g1)
+                            .fold(0.0f32, |m, kk| m.max(w.at(k0 + kk, c).abs()));
+                        let bound = amax_b / 6.0 * 1.125 + 1e-6;
+                        for kk in g0..g1 {
+                            let err = (w.at(k0 + kk, c) - deq.at(k0 + kk, c)).abs();
+                            assert!(
+                                err <= bound,
+                                "({k},{n}) r={} c={c}: err {err} bound {bound}",
+                                k0 + kk
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mat_storage_is_4bit_plus_scales() {
+        let w = Mat::from_vec(512, 32, randn(512 * 32, 12, 1.0));
+        let q = PackedQuantMat::pack(&w);
+        // 2 nibbles/byte + one scale byte per 16 weights + global scale
+        assert_eq!(q.storage_bytes(), 512 * 32 / 2 + (512 / 16) * 32 + 4);
+        // ~4.5 bits/weight vs 32 — the resident-memory win
+        assert!(q.storage_bytes() * 7 < 512 * 32 * 4);
+    }
+
+    #[test]
+    fn packed_mat_zero_matrix_decodes_to_zero() {
+        let w = Mat::zeros(40, 20);
+        let q = PackedQuantMat::pack(&w);
+        assert_eq!(q.s_dec, 1.0);
+        assert!(q.dequantize_mat().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn packed_mat_zeroed_rows_decode_to_exact_zero() {
+        // the hot-channel split zeroes rows before packing; those rows
+        // must come back as exact 0.0 so the side-GEMM owns them alone
+        let mut w = Mat::from_vec(96, 24, randn(96 * 24, 13, 2.0));
+        for c in 0..24 {
+            *w.at_mut(17, c) = 0.0;
+            *w.at_mut(64, c) = 0.0;
+        }
+        let deq = PackedQuantMat::pack(&w).dequantize_mat();
+        for c in 0..24 {
+            assert_eq!(deq.at(17, c), 0.0);
+            assert_eq!(deq.at(64, c), 0.0);
+        }
     }
 
     #[test]

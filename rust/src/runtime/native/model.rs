@@ -24,7 +24,9 @@ use crate::hcp;
 use crate::quant::{fp8_fake_quant, nvfp4, rht};
 use crate::runtime::native::recipe::{op_quant, NativeRecipe, OpQuant, QuantKind};
 use crate::runtime::tensor::HostTensor;
-use crate::util::ndarray::{matmul, matmul_into, matmul_packed, Mat, PackedMat};
+use crate::util::ndarray::{
+    matmul, matmul_into, matmul_packed, matmul_quant_packed, Mat, PackedMat,
+};
 use crate::util::prng::Rng;
 
 /// Attention family.
@@ -311,19 +313,40 @@ pub(crate) struct PreparedWeight {
     pub dw: Option<Mat>,
     /// mean |dW_j,:| per channel (the row-independent score term)
     pub wscore: Option<Vec<f64>>,
+    /// real packed-NVFP4 compute operand (`--packed-compute` serve mode);
+    /// when set, the fake-quant fields above stay empty — that's the
+    /// resident-memory win the mode exists for
+    pub packed: Option<PackedComputeWeight>,
+}
+
+/// The `--packed-compute` operand: the frozen weight resident as packed
+/// NVFP4 codes, with the HCP-persistent hot channels split out of the
+/// packed matrix into a narrow f32 side-matrix (OSC's
+/// channel-separation scheme, PAPERS.md). The hot rows are zeroed
+/// *before* the global amax is taken, so the cold encode scale no longer
+/// stretches over outlier channels.
+pub(crate) struct PackedComputeWeight {
+    /// cold channels, packed in B-panel order for the in-register kernel
+    pub qmat: nvfp4::PackedQuantMat,
+    /// sorted k-row indices of the hot channels
+    pub hot_idx: Vec<usize>,
+    /// hot rows of the original f32 weight, column-major:
+    /// element (r, c) at `c * hot_idx.len() + r`
+    pub hot: Vec<f32>,
 }
 
 /// Quantize one weight per the op's forward recipe (serving path).
 pub(crate) fn prepare_weight(w: &Mat, oq: &OpQuant) -> PreparedWeight {
     match oq.mode {
         QuantKind::Bf16 => {
-            PreparedWeight { wu: w.clone(), wu_panels: None, dw: None, wscore: None }
+            PreparedWeight { wu: w.clone(), wu_panels: None, dw: None, wscore: None, packed: None }
         }
         QuantKind::Fp8 => PreparedWeight {
             wu: Mat::from_vec(w.rows, w.cols, fp8_fake_quant(&w.data)),
             wu_panels: None,
             dw: None,
             wscore: None,
+            packed: None,
         },
         QuantKind::Nvfp4 => {
             let wu = if oq.scaling_2d {
@@ -339,9 +362,15 @@ pub(crate) fn prepare_weight(w: &Mat, oq: &OpQuant) -> PreparedWeight {
                             / dw.cols as f64
                     })
                     .collect();
-                PreparedWeight { wu, wu_panels: None, dw: Some(dw), wscore: Some(wscore) }
+                PreparedWeight {
+                    wu,
+                    wu_panels: None,
+                    dw: Some(dw),
+                    wscore: Some(wscore),
+                    packed: None,
+                }
             } else {
-                PreparedWeight { wu, wu_panels: None, dw: None, wscore: None }
+                PreparedWeight { wu, wu_panels: None, dw: None, wscore: None, packed: None }
             }
         }
     }
@@ -362,6 +391,58 @@ pub(crate) fn prepare_weight_cached(w: &Mat, oq: &OpQuant) -> PreparedWeight {
         pw.wu = Mat::from_vec(0, 0, Vec::new());
     }
     pw
+}
+
+/// The `--packed-compute` preparation: NVFP4 ops keep the weight
+/// resident as packed codes + a hot-channel f32 side-matrix instead of a
+/// dense fake-quantized f32 copy (~4.5 bits/weight instead of 32). Hot
+/// channels come from the weight-side HCP score — mean |dW_j,:| of the
+/// transient fake-quant residual — the persistent half of the online HCP
+/// selection; `hcp_frac` sizes the split exactly as on the fake-quant
+/// path. Non-NVFP4 ops fall back to [`prepare_weight_cached`].
+pub(crate) fn prepare_weight_packed(w: &Mat, oq: &OpQuant) -> PreparedWeight {
+    if oq.mode != QuantKind::Nvfp4 {
+        return prepare_weight_cached(w, oq);
+    }
+    let wu = if oq.scaling_2d {
+        nvfp4::fake_quant_mat_2d(w, 16)
+    } else {
+        nvfp4::fake_quant_mat(w)
+    };
+    let dw = w.sub(&wu);
+    let wscore: Vec<f64> = (0..dw.rows)
+        .map(|j| dw.row(j).iter().map(|&v| v.abs() as f64).sum::<f64>() / dw.cols as f64)
+        .collect();
+    let h = if oq.hcp_frac > 0.0 {
+        (((oq.hcp_frac * w.rows as f64).ceil() as usize).max(1)).min(w.rows)
+    } else {
+        0
+    };
+    let hot_idx = {
+        let mut v = hcp::top_k(&wscore, h);
+        v.sort_unstable();
+        v
+    };
+    // Zero the hot rows BEFORE the global amax: the cold-only encode
+    // scale no longer stretches over outlier channels (the OSC accuracy
+    // win), and the zeroed rows decode to exact 0.0 so the side-GEMM
+    // owns the hot channels alone.
+    let mut cold = w.clone();
+    let mut hot = vec![0.0f32; hot_idx.len() * w.cols];
+    for (r, &j) in hot_idx.iter().enumerate() {
+        for c in 0..w.cols {
+            hot[c * hot_idx.len() + r] = w.at(j, c);
+            *cold.at_mut(j, c) = 0.0;
+        }
+    }
+    let qmat = nvfp4::PackedQuantMat::pack(&cold);
+    PreparedWeight {
+        wu: Mat::from_vec(0, 0, Vec::new()),
+        wu_panels: None,
+        dw: None,
+        wscore: None,
+        packed: Some(PackedComputeWeight { qmat, hot_idx, hot }),
+    }
 }
 
 /// The GEMM over a prepared weight: through the packed-panel cache when
@@ -409,6 +490,35 @@ pub(crate) fn infer_linear_prepared_obs(
             gemm_prepared(&xu, pw)
         }
         QuantKind::Nvfp4 => {
+            if let Some(pc) = &pw.packed {
+                // Real packed compute: activations fake-quantize per row
+                // (batch invariant as before), cold channels run through
+                // the in-register dequant kernel, hot channels through an
+                // f32 side-GEMM on the RAW activations — full precision
+                // on both sides of the split (OSC). Per output element
+                // the chain is fixed, so the mode is bit-identical across
+                // batch sizes, SIMD levels, and thread counts. The HCP
+                // observer never fires here: the split is persistent
+                // (weight-side), there is no per-row selection to tap.
+                let xu = per_row(&|r| nvfp4::fake_quant(r, nvfp4::Rounding::Rtn, None));
+                let mut y = matmul_quant_packed(&xu, &pc.qmat);
+                let h = pc.hot_idx.len();
+                if h > 0 {
+                    for i in 0..x.rows {
+                        let xr = x.row(i);
+                        let yr = y.row_mut(i);
+                        for (c, yv) in yr.iter_mut().enumerate() {
+                            let hcol = &pc.hot[c * h..(c + 1) * h];
+                            let mut acc = 0.0f32;
+                            for (r, &j) in pc.hot_idx.iter().enumerate() {
+                                acc += xr[j] * hcol[r];
+                            }
+                            *yv += acc;
+                        }
+                    }
+                }
+                return y;
+            }
             let xu = per_row(&|r| nvfp4::fake_quant(r, nvfp4::Rounding::Rtn, None));
             let mut y = gemm_prepared(&xu, pw);
             if let (Some(dw), Some(wscore)) = (&pw.dw, &pw.wscore) {
@@ -1422,6 +1532,101 @@ mod tests {
                 assert_eq!(full.row(i), y1.row(0), "row {i} mode {:?}", oq.mode);
             }
         }
+    }
+
+    #[test]
+    fn packed_prepared_weight_matches_dense_reference() {
+        // hot-channel-split correctness: packed cold GEMM + f32 side-GEMM
+        // must agree with an f64 dense GEMM over (dequantized cold matrix,
+        // original f32 hot rows) within float tolerance — the documented
+        // accuracy contract of --packed-compute
+        let mut rng = Rng::new(21);
+        let w = Mat::from_fn(64, 48, |_, _| rng.normal() * 0.3);
+        let oq = OpQuant {
+            mode: QuantKind::Nvfp4,
+            scaling_2d: true,
+            sr: false,
+            rht: false,
+            hcp_frac: 0.0909,
+        };
+        let pw = prepare_weight_packed(&w, &oq);
+        let pc = pw.packed.as_ref().unwrap();
+        assert_eq!(pc.hot_idx.len(), 6); // ceil(0.0909 * 64)
+        assert!(pw.wu.data.is_empty() && pw.wu_panels.is_none() && pw.dw.is_none());
+        let deq = pc.qmat.dequantize_mat();
+        for &j in &pc.hot_idx {
+            assert!(deq.row(j).iter().all(|&v| v == 0.0), "hot row {j} not zeroed");
+        }
+        let x = Mat::from_fn(5, 64, |_, _| rng.normal());
+        let y = infer_linear_prepared(&x, &pw, &oq);
+        let mut xu = Mat::zeros(x.rows, x.cols);
+        for i in 0..x.rows {
+            xu.row_mut(i)
+                .copy_from_slice(&nvfp4::fake_quant(x.row(i), nvfp4::Rounding::Rtn, None));
+        }
+        for i in 0..x.rows {
+            for c in 0..48 {
+                let mut want = 0.0f64;
+                for k in 0..64 {
+                    want += xu.at(i, k) as f64 * deq.at(k, c) as f64;
+                }
+                for &j in &pc.hot_idx {
+                    want += x.at(i, j) as f64 * w.at(j, c) as f64;
+                }
+                let got = y.at(i, c) as f64;
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "({i},{c}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_prepared_is_batch_invariant() {
+        // the serve contract holds in --packed-compute mode too: row i of
+        // a batched call is bit-identical to a batch-of-one call
+        let mut rng = Rng::new(22);
+        let w = Mat::from_fn(64, 32, |_, _| rng.normal() * 0.3);
+        for hcp_frac in [0.0, 0.0909] {
+            let oq = OpQuant {
+                mode: QuantKind::Nvfp4,
+                scaling_2d: false,
+                sr: false,
+                rht: false,
+                hcp_frac,
+            };
+            let pw = prepare_weight_packed(&w, &oq);
+            let x = Mat::from_fn(8, 64, |_, _| rng.normal());
+            let full = infer_linear_prepared(&x, &pw, &oq);
+            for i in 0..x.rows {
+                let one = Mat::from_vec(1, x.cols, x.row(i).to_vec());
+                let y1 = infer_linear_prepared(&one, &pw, &oq);
+                assert_eq!(full.row(i), y1.row(0), "row {i} hcp={hcp_frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_prepared_memory_and_fallback() {
+        let mut rng = Rng::new(23);
+        let w = Mat::from_fn(256, 64, |_, _| rng.normal() * 0.3);
+        let oq = OpQuant {
+            mode: QuantKind::Nvfp4,
+            scaling_2d: true,
+            sr: false,
+            rht: false,
+            hcp_frac: 0.0909,
+        };
+        let pw = prepare_weight_packed(&w, &oq);
+        let pc = pw.packed.as_ref().unwrap();
+        let dense = 256 * 64 * 4;
+        let resident =
+            pc.qmat.storage_bytes() + pc.hot.len() * 4 + pc.hot_idx.len() * 8;
+        assert!(resident * 3 < dense, "resident {resident} vs dense {dense}");
+        // non-NVFP4 ops fall back to the f32 packed-panel cache
+        let bf = prepare_weight_packed(&w, &crate::runtime::native::recipe::BF16_OP);
+        assert!(bf.packed.is_none() && bf.wu_panels.is_some());
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! depend on which requests happen to be coalesced together. Weights are
 //! fake-quantized once at load (`prepare_weight`); only activations are
 //! quantized per decode step.
+//!
+//! `--packed-compute` swaps the NVFP4 weight preparation for the real
+//! packed path (`prepare_weight_packed`): weights stay resident as
+//! packed 4-bit codes decoded in-register by the quantized GEMM kernel,
+//! with HCP-persistent hot channels split into an f32 side-GEMM. A new
+//! recipe mode — bit-identical within itself across batch sizes, SIMD
+//! levels, and thread counts, but gated against the fake-quant path by
+//! evalsuite deltas, not bitwise equality (see README).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -29,8 +37,8 @@ use crate::obs::outliers::{OpTap, OutlierObs};
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::runtime::native::model::{
     self, final_norm_idx, infer_linear_prepared, infer_linear_prepared_obs,
-    layer_slots, lm_head_idx, model_cfg, pidx, prepare_weight_cached, rmsnorm,
-    sigmoid, Arch, ModelCfg, PreparedWeight,
+    layer_slots, lm_head_idx, model_cfg, pidx, prepare_weight_cached,
+    prepare_weight_packed, rmsnorm, sigmoid, Arch, ModelCfg, PreparedWeight,
 };
 use crate::runtime::native::recipe::{op_quant, recipe, NativeRecipe, BF16_OP};
 use crate::serve::pages::KvPages;
@@ -90,6 +98,9 @@ pub struct Engine {
     /// `--obs-outliers` taps; None (the default) keeps the decode path
     /// free of any telemetry work
     outlier_obs: Option<Arc<OutlierObs>>,
+    /// `--packed-compute`: NVFP4 linear weights resident as packed codes
+    /// + hot-channel side-matrix instead of dense fake-quantized f32
+    packed_compute: bool,
 }
 
 /// Forward-op name of a linear weight slot (None for norm vectors).
@@ -117,6 +128,7 @@ fn prepare_all(
     cfg: &ModelCfg,
     rec: &NativeRecipe,
     params: &[Mat],
+    packed_compute: bool,
 ) -> Vec<Option<PreparedWeight>> {
     let mut out: Vec<Option<PreparedWeight>> = params.iter().map(|_| None).collect();
     for l in 0..cfg.layers {
@@ -124,13 +136,30 @@ fn prepare_all(
             if let Some(op) = slot_op(slot) {
                 let idx = pidx(cfg, l, slot);
                 let oq = op_quant(rec, cfg.arch, l, cfg.layers, op);
-                out[idx] = Some(prepare_weight_cached(&params[idx], &oq));
+                out[idx] = Some(if packed_compute {
+                    prepare_weight_packed(&params[idx], &oq)
+                } else {
+                    prepare_weight_cached(&params[idx], &oq)
+                });
             }
         }
     }
+    // the lm_head scores in full precision in every mode
     let hi = lm_head_idx(cfg);
     out[hi] = Some(prepare_weight_cached(&params[hi], &BF16_OP));
     out
+}
+
+/// Resident bytes of one prepared weight — what decode actually keeps in
+/// memory for this parameter across the engine's lifetime.
+fn prepared_bytes(pw: &PreparedWeight) -> usize {
+    if let Some(pc) = &pw.packed {
+        return pc.qmat.storage_bytes() + pc.hot.len() * 4 + pc.hot_idx.len() * 8;
+    }
+    pw.wu.data.len() * 4
+        + pw.wu_panels.as_ref().map_or(0, |p| p.packed_len() * 4)
+        + pw.dw.as_ref().map_or(0, |d| d.data.len() * 4)
+        + pw.wscore.as_ref().map_or(0, |s| s.len() * 8)
 }
 
 /// Drop the full-precision copies of weights that decode only ever reads
@@ -149,6 +178,13 @@ impl Engine {
     /// highest-step one wins). Errors clearly on unknown model/recipe,
     /// tensor name/shape mismatches, vocab drift or corrupt files.
     pub fn load(path: &Path) -> Result<Engine> {
+        Self::load_with_mode(path, false)
+    }
+
+    /// [`Engine::load`] with the compute mode explicit: `packed_compute`
+    /// keeps NVFP4 linear weights resident as packed codes + a
+    /// hot-channel f32 side-matrix (`chon serve --packed-compute`).
+    pub fn load_with_mode(path: &Path, packed_compute: bool) -> Result<Engine> {
         let dir = ckptdir::resolve(path)?;
         let meta_probe = ckptdir::load_meta(&dir)?;
         let cfg = model_cfg(&meta_probe.model).with_context(|| {
@@ -182,9 +218,9 @@ impl Engine {
         let params: Vec<Mat> =
             loaded.params.iter().map(|(_, t)| model::to_mat(t)).collect();
         let n_params = params.iter().map(|m| m.data.len()).sum();
-        let prepped = prepare_all(&cfg, &rec, &params);
+        let prepped = prepare_all(&cfg, &rec, &params, packed_compute);
         let params = strip_prepared(params, &prepped);
-        Ok(Engine {
+        let eng = Engine {
             cfg,
             recipe: rec,
             tokenizer: loaded.tokenizer,
@@ -193,7 +229,16 @@ impl Engine {
             prepped,
             n_params,
             outlier_obs: None,
-        })
+            packed_compute,
+        };
+        crate::info!(
+            "loaded {} ({}): {} resident weight bytes (mode {})",
+            eng.cfg.name,
+            eng.recipe.name,
+            eng.weight_bytes(),
+            eng.compute_mode()
+        );
+        Ok(eng)
     }
 
     /// Build an engine directly from in-memory state (tests / embedding).
@@ -202,6 +247,17 @@ impl Engine {
         rec: NativeRecipe,
         tokenizer: Tokenizer,
         params: &[crate::runtime::HostTensor],
+    ) -> Engine {
+        Self::from_parts_mode(cfg, rec, tokenizer, params, false)
+    }
+
+    /// [`Engine::from_parts`] with the compute mode explicit.
+    pub fn from_parts_mode(
+        cfg: ModelCfg,
+        rec: NativeRecipe,
+        tokenizer: Tokenizer,
+        params: &[crate::runtime::HostTensor],
+        packed_compute: bool,
     ) -> Engine {
         let meta = CheckpointMeta {
             format_version: ckptdir::FORMAT_VERSION,
@@ -215,7 +271,7 @@ impl Engine {
         };
         let params = model::params_to_mats(params);
         let n_params = params.iter().map(|m| m.data.len()).sum();
-        let prepped = prepare_all(&cfg, &rec, &params);
+        let prepped = prepare_all(&cfg, &rec, &params, packed_compute);
         let params = strip_prepared(params, &prepped);
         Engine {
             cfg,
@@ -226,6 +282,7 @@ impl Engine {
             prepped,
             n_params,
             outlier_obs: None,
+            packed_compute,
         }
     }
 
@@ -528,6 +585,23 @@ impl Engine {
         self.n_params
     }
 
+    /// Resident bytes of all prepared weights — the value behind the
+    /// `chon_model_weight_bytes{model,mode}` gauge. In packed mode this
+    /// counts codes + scales + the hot side-matrix; in f32 mode the dense
+    /// operand, its B panels, and any HCP residual state.
+    pub fn weight_bytes(&self) -> usize {
+        self.prepped.iter().flatten().map(prepared_bytes).sum()
+    }
+
+    /// Compute-mode label for logs and the weight-bytes gauge.
+    pub fn compute_mode(&self) -> &'static str {
+        if self.packed_compute {
+            "packed"
+        } else {
+            "f32"
+        }
+    }
+
     /// Serialize a session's full decode state. Bit-exact: every f32 is
     /// stored as its little-endian bit pattern, so
     /// `restore_session(serialize_session(s))` reproduces `s` exactly
@@ -675,6 +749,18 @@ mod tests {
             recipe(rec_name).unwrap(),
             Tokenizer::byte_level(),
             &params,
+        )
+    }
+
+    fn engine_packed(model: &str, rec_name: &str) -> Engine {
+        let cfg = model_cfg(model).unwrap();
+        let params = test_params(&cfg);
+        Engine::from_parts_mode(
+            cfg,
+            recipe(rec_name).unwrap(),
+            Tokenizer::byte_level(),
+            &params,
+            true,
         )
     }
 
@@ -903,6 +989,80 @@ mod tests {
         // post-QK-protected ops (attn.gk under GLA) run BF16 → no rows
         let gk = taps.tap("attn.gk").expect("attn.gk tap");
         assert_eq!(gk.rows.get(), 0);
+    }
+
+    /// `--packed-compute` greedy decode must be bit-identical between
+    /// batch-of-1 and batch-of-8 (the serve contract holds in the new
+    /// recipe mode too, for HCP and non-HCP recipes and both archs).
+    #[test]
+    fn packed_compute_decode_is_bit_identical_across_batch_sizes() {
+        for (model, rec_name) in
+            [("tiny_gla", "chon"), ("tiny_gla", "nvfp4"), ("tiny_sa", "nvfp4")]
+        {
+            let eng = engine_packed(model, rec_name);
+            let prompts: Vec<Vec<u32>> = (0..8)
+                .map(|i| (0..6).map(|j| 97 + ((i * 5 + j) % 20)).collect())
+                .collect();
+            // one-by-one
+            let mut solo_out = Vec::new();
+            for p in &prompts {
+                let mut s = eng.new_session();
+                let logits = eng.prefill(&mut s, p);
+                let mut rng = Rng::new(1);
+                let mut toks = vec![eng.sample(&logits, 0.0, &mut rng)];
+                for _ in 0..5 {
+                    let last = *toks.last().unwrap();
+                    let l = eng.decode_step(&mut [&mut s], &[last]);
+                    toks.push(eng.sample(l.row(0), 0.0, &mut rng));
+                }
+                solo_out.push(toks);
+            }
+            // batch of 8
+            let mut sessions: Vec<Session> = Vec::new();
+            let mut last_toks: Vec<u32> = Vec::new();
+            let mut batched_out: Vec<Vec<u32>> = Vec::new();
+            for p in &prompts {
+                let mut s = eng.new_session();
+                let logits = eng.prefill(&mut s, p);
+                let mut rng = Rng::new(1);
+                let t = eng.sample(&logits, 0.0, &mut rng);
+                batched_out.push(vec![t]);
+                last_toks.push(t);
+                sessions.push(s);
+            }
+            for _ in 0..5 {
+                let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                let l = eng.decode_step(&mut refs, &last_toks);
+                let mut rng = Rng::new(1);
+                for i in 0..prompts.len() {
+                    let t = eng.sample(l.row(i), 0.0, &mut rng);
+                    batched_out[i].push(t);
+                    last_toks[i] = t;
+                }
+            }
+            assert_eq!(solo_out, batched_out, "{model}/{rec_name}");
+        }
+    }
+
+    /// Packed mode must actually shrink resident weight memory, and both
+    /// modes must report a usable gauge value + mode label.
+    #[test]
+    fn packed_compute_reports_smaller_weight_bytes() {
+        let dense = engine("tiny_gla", "nvfp4");
+        let packed = engine_packed("tiny_gla", "nvfp4");
+        assert_eq!(dense.compute_mode(), "f32");
+        assert_eq!(packed.compute_mode(), "packed");
+        assert!(dense.weight_bytes() > 0);
+        assert!(
+            packed.weight_bytes() * 2 < dense.weight_bytes(),
+            "packed {} vs f32 {}",
+            packed.weight_bytes(),
+            dense.weight_bytes()
+        );
+        // packed decode still produces sane output
+        let mut s = packed.new_session();
+        let logits = packed.prefill(&mut s, &[104, 105]);
+        assert!(logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -87,6 +87,9 @@ pub struct RegistryOpts {
     /// sample per-request HCP hot-channel hits + residual energy into
     /// the metric tree (`--obs-outliers`)
     pub obs_outliers: bool,
+    /// serve NVFP4 layers from packed 4-bit codes with the in-register
+    /// dequant GEMM + hot-channel side-GEMM (`--packed-compute`)
+    pub packed_compute: bool,
 }
 
 impl Default for RegistryOpts {
@@ -101,6 +104,7 @@ impl Default for RegistryOpts {
             load_delay_ms: 0,
             obs: crate::obs::Registry::new(),
             obs_outliers: false,
+            packed_compute: false,
         }
     }
 }
@@ -289,9 +293,11 @@ impl ModelRegistry {
         }
         let (resolved, meta) = probe(dir)
             .with_context(|| format!("registering model {name:?} from {}", dir.display()))?;
-        drop(Engine::load(&resolved).with_context(|| {
-            format!("validating model {name:?} from {}", resolved.display())
-        })?);
+        drop(
+            Engine::load_with_mode(&resolved, self.shared.opts.packed_compute).with_context(
+                || format!("validating model {name:?} from {}", resolved.display()),
+            )?,
+        );
         self.push_entry(ModelEntry {
             name: name.to_string(),
             dir: Some(dir.to_path_buf()),
@@ -319,6 +325,7 @@ impl ModelRegistry {
         let meta = engine.meta.clone();
         let stats = Arc::new(ServeStats::default());
         let obs = self.shared.opts.obs.model(name);
+        obs.set_weight_bytes(engine.weight_bytes() as u64, engine.compute_mode());
         hook_outliers(&self.shared.opts, &mut engine, &obs);
         let batcher =
             spawn_batcher(&self.shared.opts, engine, store, stats.clone(), obs.clone());
@@ -842,7 +849,8 @@ impl Lifecycle {
         };
         self.load_delay();
         let loaded = probe(&dir).and_then(|(resolved, meta)| {
-            let engine = Engine::load(&resolved)?;
+            let engine =
+                Engine::load_with_mode(&resolved, self.shared.opts.packed_compute)?;
             Ok((resolved, meta, engine))
         });
         let (resolved, meta, mut engine) = match loaded {
@@ -865,6 +873,9 @@ impl Lifecycle {
                 }
             },
         };
+        entry
+            .obs
+            .set_weight_bytes(engine.weight_bytes() as u64, engine.compute_mode());
         hook_outliers(&self.shared.opts, &mut engine, &entry.obs);
         let batcher = spawn_batcher(
             &self.shared.opts,
@@ -898,7 +909,8 @@ impl Lifecycle {
         let dir = entry.dir.clone().expect("reloads require a watched dir");
         self.load_delay();
         let loaded = probe(&dir).and_then(|(resolved, meta)| {
-            let engine = Engine::load(&resolved)?;
+            let engine =
+                Engine::load_with_mode(&resolved, self.shared.opts.packed_compute)?;
             Ok((resolved, meta, engine))
         });
         let (resolved, meta, mut engine) = match loaded {
@@ -933,6 +945,9 @@ impl Lifecycle {
                 }
             },
         };
+        entry
+            .obs
+            .set_weight_bytes(engine.weight_bytes() as u64, engine.compute_mode());
         hook_outliers(&self.shared.opts, &mut engine, &entry.obs);
         let batcher = spawn_batcher(
             &self.shared.opts,

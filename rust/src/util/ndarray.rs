@@ -177,10 +177,13 @@ impl Mat {
 
 /// Register-tile rows of the microkernel.
 const MR: usize = 4;
-/// Register-tile columns (two 8-lane f32 vectors on AVX2).
-const NR: usize = 16;
+/// Register-tile columns (two 8-lane f32 vectors on AVX2). Public: the
+/// NVFP4 panel codec (`quant::nvfp4::PackedQuantMat`) lays its codes out
+/// in this panel width so the quantized kernel decodes in panel order.
+pub const NR: usize = 16;
 /// Contraction block: one packed B panel block (KC×NR) stays L1-resident.
-const KC: usize = 256;
+/// Public for the same reason as [`NR`].
+pub const KC: usize = 256;
 /// Row count below which the unpacked fallback wins (packing B costs
 /// O(k·n), amortized over m rows — serve's batch-row GEMMs sit here).
 const SMALL_M: usize = 8;
@@ -471,6 +474,283 @@ pub fn matmul_par(a: &Mat, b: &Mat, threads: usize) -> Mat {
     out
 }
 
+// ------------------------------------------------------------------
+// Quantized-weight GEMM: decode packed NVFP4 panels in-register
+// ------------------------------------------------------------------
+
+/// SIMD level of the quantized-decode microkernel. The two levels are
+/// **bitwise identical** by construction: both build each output
+/// element's chain as mul-then-add over k ascending on identical decoded
+/// operand values (`tests/matmul_kernel.rs` pins this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar decode + accumulate (the property-tested reference).
+    Scalar,
+    /// AVX2 nibble-unpack + e2m1-LUT decode (`std::arch` intrinsics).
+    Avx2,
+}
+
+static SIMD_LEVEL: std::sync::OnceLock<SimdLevel> = std::sync::OnceLock::new();
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Resolve the kernel dispatch level once per process: `CHON_SIMD=scalar`
+/// or `CHON_SIMD=avx2` forces it (debugging / CI exercising both kernels
+/// on one runner); otherwise runtime CPU feature detection decides.
+/// Forcing `avx2` on a CPU without it logs a warning and falls back —
+/// the choice never changes results, only speed.
+pub fn simd_level() -> SimdLevel {
+    *SIMD_LEVEL.get_or_init(|| {
+        let auto = if avx2_available() { SimdLevel::Avx2 } else { SimdLevel::Scalar };
+        match std::env::var("CHON_SIMD") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => SimdLevel::Scalar,
+            Ok(v) if v.eq_ignore_ascii_case("avx2") => {
+                if avx2_available() {
+                    SimdLevel::Avx2
+                } else {
+                    crate::warn!("CHON_SIMD=avx2 but this CPU lacks AVX2; using scalar");
+                    SimdLevel::Scalar
+                }
+            }
+            Ok(v) => {
+                crate::warn!("unknown CHON_SIMD={v:?} (expected scalar|avx2); auto-detecting");
+                auto
+            }
+            Err(_) => auto,
+        }
+    })
+}
+
+/// The resolved dispatch level as a log/metric-friendly name.
+pub fn simd_level_name() -> &'static str {
+    match simd_level() {
+        SimdLevel::Scalar => "scalar",
+        SimdLevel::Avx2 => "avx2",
+    }
+}
+
+/// Decode one panel-block of packed e2m1 codes into a row-major
+/// `kc × NR` f32 tile: `tile[kk*NR + j] = e2m1(code) * sv[(kk/16)*NR + j]`.
+/// `codes` holds `kc` rows of NR/2 bytes (column j in nibble j%2 of byte
+/// j/2, low nibble first); `sv` holds the per-(16-row group, column)
+/// decoded scale `e4m3::decode(sc) * s_dec`.
+fn decode_rows_scalar(codes: &[u8], sv: &[f32], kc: usize, tile: &mut [f32]) {
+    use crate::quant::e2m1;
+    for kk in 0..kc {
+        let row = &codes[kk * (NR / 2)..(kk + 1) * (NR / 2)];
+        let svg = &sv[(kk / 16) * NR..(kk / 16) * NR + NR];
+        let trow = &mut tile[kk * NR..kk * NR + NR];
+        for (j2, &b) in row.iter().enumerate() {
+            trow[2 * j2] = e2m1::decode(b & 0xF) * svg[2 * j2];
+            trow[2 * j2 + 1] = e2m1::decode(b >> 4) * svg[2 * j2 + 1];
+        }
+    }
+}
+
+/// AVX2 variant of [`decode_rows_scalar`], bitwise identical to it: the
+/// e2m1 magnitude comes from the same 8-entry table (one
+/// `vpermps` per 8 codes), the sign is applied by XOR-ing the f32 sign
+/// bit (bitwise the `-v` negation `e2m1::decode` performs), and the
+/// scale multiply is the same single IEEE `mul` per element.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `codes.len() >= kc * NR/2`,
+/// `tile.len() >= kc * NR` and `sv.len() >= kc.div_ceil(16) * NR`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_rows_avx2(codes: &[u8], sv: &[f32], kc: usize, tile: &mut [f32]) {
+    use std::arch::x86_64::*;
+    debug_assert!(codes.len() >= kc * (NR / 2));
+    debug_assert!(tile.len() >= kc * NR);
+    let lut = _mm256_loadu_ps(crate::quant::e2m1::E2M1_VALUES.as_ptr());
+    let nib = _mm_set1_epi8(0x0F);
+    for kk in 0..kc {
+        // 8 bytes = one kk row of 16 nibbles, low nibble first
+        let b = _mm_loadl_epi64(codes.as_ptr().add(kk * (NR / 2)) as *const __m128i);
+        let lo = _mm_and_si128(b, nib);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), nib);
+        // interleave → 16 codes in element order
+        let c16 = _mm_unpacklo_epi8(lo, hi);
+        let svg = sv.as_ptr().add((kk / 16) * NR);
+        let dst = tile.as_mut_ptr().add(kk * NR);
+        for half in 0..2 {
+            let c = if half == 0 {
+                _mm256_cvtepu8_epi32(c16)
+            } else {
+                _mm256_cvtepu8_epi32(_mm_srli_si128::<8>(c16))
+            };
+            let mag = _mm256_permutevar8x32_ps(lut, _mm256_and_si256(c, _mm256_set1_epi32(7)));
+            let sign =
+                _mm256_slli_epi32::<28>(_mm256_and_si256(c, _mm256_set1_epi32(8)));
+            let val = _mm256_xor_ps(mag, _mm256_castsi256_ps(sign));
+            let v = _mm256_mul_ps(val, _mm256_loadu_ps(svg.add(half * 8)));
+            _mm256_storeu_ps(dst.add(half * 8), v);
+        }
+    }
+}
+
+/// Accumulate one activation row against a decoded tile:
+/// `acc[j] += a[k0+kk] * tile[kk*NR+j]` for kk ascending — the exact
+/// chain the f32 panel kernels build.
+fn accum_row_scalar(arow: &[f32], k0: usize, kc: usize, tile: &[f32], acc: &mut [f32; NR]) {
+    for kk in 0..kc {
+        let av = arow[k0 + kk];
+        let tv = &tile[kk * NR..kk * NR + NR];
+        for j in 0..NR {
+            acc[j] += av * tv[j];
+        }
+    }
+}
+
+/// AVX2 variant of [`accum_row_scalar`]. Deliberately `mul` + `add`, NOT
+/// fused-multiply-add: FMA contracts the rounding step and would break
+/// bitwise identity with the scalar chain.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available, `arow.len() >= k0 + kc` and
+/// `tile.len() >= kc * NR`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accum_row_avx2(arow: &[f32], k0: usize, kc: usize, tile: &[f32], acc: &mut [f32; NR]) {
+    use std::arch::x86_64::*;
+    let mut a0 = _mm256_loadu_ps(acc.as_ptr());
+    let mut a1 = _mm256_loadu_ps(acc.as_ptr().add(8));
+    for kk in 0..kc {
+        let av = _mm256_set1_ps(*arow.get_unchecked(k0 + kk));
+        let t = tile.as_ptr().add(kk * NR);
+        a0 = _mm256_add_ps(a0, _mm256_mul_ps(av, _mm256_loadu_ps(t)));
+        a1 = _mm256_add_ps(a1, _mm256_mul_ps(av, _mm256_loadu_ps(t.add(8))));
+    }
+    _mm256_storeu_ps(acc.as_mut_ptr(), a0);
+    _mm256_storeu_ps(acc.as_mut_ptr().add(8), a1);
+}
+
+/// Compute rows `r0..r0+nrows` of `a * dequant(q)` into `chunk`, decoding
+/// each KC×NR panel tile once into a scratch buffer and streaming every
+/// activation row through it. Per output element the chain is
+/// `0 + Σ_k a[i,k]·w̃[k,j]` with k strictly ascending (blocks ascending,
+/// kk ascending; the f32 store/load of the running value between blocks
+/// is exact), so the result is bitwise `matmul(a, q.dequantize_mat())`
+/// at either SIMD level and under any row banding.
+fn quant_kernel_rows(
+    a: &Mat,
+    q: &crate::quant::nvfp4::PackedQuantMat,
+    r0: usize,
+    nrows: usize,
+    chunk: &mut [f32],
+    level: SimdLevel,
+) {
+    use crate::quant::e4m3;
+    let n = q.n;
+    debug_assert_eq!(chunk.len(), nrows * n);
+    let mut tile = vec![0.0f32; KC * NR];
+    let mut sv = vec![0.0f32; KC.div_ceil(16) * NR];
+    for blk in &q.blocks {
+        let ngroups = blk.kc.div_ceil(16);
+        for p in 0..q.npanels {
+            let sbase = blk.scales_off + p * ngroups * NR;
+            for (s, &code) in
+                sv[..ngroups * NR].iter_mut().zip(&q.scales[sbase..sbase + ngroups * NR])
+            {
+                // decoded per-(group, column) scale, computed in scalar
+                // code for both SIMD levels (same bits by construction)
+                *s = e4m3::decode(code) * q.s_dec;
+            }
+            let cbase = blk.codes_off + p * blk.kc * (NR / 2);
+            let codes = &q.codes[cbase..cbase + blk.kc * (NR / 2)];
+            match level {
+                #[cfg(target_arch = "x86_64")]
+                SimdLevel::Avx2 => unsafe {
+                    decode_rows_avx2(codes, &sv, blk.kc, &mut tile)
+                },
+                _ => decode_rows_scalar(codes, &sv, blk.kc, &mut tile),
+            }
+            let c0 = p * NR;
+            let ncols = (n - c0).min(NR);
+            for i in 0..nrows {
+                let arow = a.row(r0 + i);
+                let orow = &mut chunk[i * n + c0..i * n + c0 + ncols];
+                let mut acc = [0.0f32; NR];
+                acc[..ncols].copy_from_slice(orow);
+                match level {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdLevel::Avx2 => unsafe {
+                        accum_row_avx2(arow, blk.k0, blk.kc, &tile, &mut acc)
+                    },
+                    _ => accum_row_scalar(arow, blk.k0, blk.kc, &tile, &mut acc),
+                }
+                orow.copy_from_slice(&acc[..ncols]);
+            }
+        }
+    }
+}
+
+/// out = a (m × k) * packed-NVFP4 weight (k × n), decoding codes
+/// in-register per panel instead of reading an f32 B. Dispatches to the
+/// process-wide [`simd_level`].
+pub fn matmul_quant_packed(a: &Mat, q: &crate::quant::nvfp4::PackedQuantMat) -> Mat {
+    matmul_quant_packed_with(a, q, 1, simd_level())
+}
+
+/// Multi-threaded [`matmul_quant_packed`]: row bands on the persistent
+/// worker pool. Bit-identical at every thread count — a band boundary
+/// never changes any single row's chain.
+pub fn matmul_quant_packed_par(
+    a: &Mat,
+    q: &crate::quant::nvfp4::PackedQuantMat,
+    threads: usize,
+) -> Mat {
+    matmul_quant_packed_with(a, q, threads, simd_level())
+}
+
+/// Explicit-level entry point so tests and CI can force both kernels in
+/// one process (the env-var dispatch latches once). An `Avx2` request on
+/// a CPU without AVX2 silently runs scalar — same bits either way.
+pub fn matmul_quant_packed_with(
+    a: &Mat,
+    q: &crate::quant::nvfp4::PackedQuantMat,
+    threads: usize,
+    level: SimdLevel,
+) -> Mat {
+    assert_eq!(a.cols, q.k);
+    let level = if level == SimdLevel::Avx2 && !avx2_available() {
+        SimdLevel::Scalar
+    } else {
+        level
+    };
+    let n = q.n;
+    let mut out = Mat::zeros(a.rows, n);
+    if a.rows == 0 || n == 0 || a.cols == 0 {
+        return out;
+    }
+    let t = threads.max(1).min(a.rows);
+    if t <= 1 {
+        quant_kernel_rows(a, q, 0, a.rows, &mut out.data, level);
+        return out;
+    }
+    let band = a.rows.div_ceil(t);
+    let mut tasks: Vec<(usize, &mut [f32])> = out
+        .data
+        .chunks_mut(band * n)
+        .enumerate()
+        .map(|(i, c)| (i * band, c))
+        .collect();
+    pool::global().for_each_mut(&mut tasks, |_, task| {
+        let (r0, chunk) = (task.0, &mut *task.1);
+        quant_kernel_rows(a, q, r0, chunk.len() / n, chunk, level);
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -625,6 +905,59 @@ mod tests {
                 assert!((x - 2.0 * y).abs() < 1e-3, "{m}x{k}x{n}");
             }
         }
+    }
+
+    #[test]
+    fn quant_kernel_is_bit_identical_to_dequantized_matmul() {
+        // the quantized kernel's per-element chain is exactly
+        // `matmul(a, dequantize_mat())` — bitwise, on every ragged edge
+        for (i, &(m, k, n)) in [
+            (1, 16, 16),
+            (1, 300, 33),
+            (3, 257, 31),
+            (7, 512, 48),
+            (8, 300, 33),
+            (9, 64, 17),
+            (13, 1, 5),
+            (5, 15, 1),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let a = rand_mat(m, k, 600 + i as u64);
+            let w = rand_mat(k, n, 700 + i as u64);
+            let q = crate::quant::nvfp4::PackedQuantMat::pack(&w);
+            let want = matmul(&a, &q.dequantize_mat());
+            let got = matmul_quant_packed_with(&a, &q, 1, SimdLevel::Scalar);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n} scalar");
+            // Avx2 downgrades to scalar off-x86, so this always holds
+            let got = matmul_quant_packed_with(&a, &q, 1, SimdLevel::Avx2);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n} avx2");
+        }
+    }
+
+    #[test]
+    fn quant_kernel_is_bit_identical_at_every_thread_count() {
+        let a = rand_mat(13, 300, 800);
+        let q = crate::quant::nvfp4::PackedQuantMat::pack(&rand_mat(300, 33, 801));
+        for level in [SimdLevel::Scalar, SimdLevel::Avx2] {
+            let serial = matmul_quant_packed_with(&a, &q, 1, level);
+            for t in 2..=8 {
+                let p = matmul_quant_packed_with(&a, &q, t, level);
+                assert_eq!(serial.data, p.data, "threads={t} {level:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_kernel_degenerate_shapes() {
+        let q = crate::quant::nvfp4::PackedQuantMat::pack(&rand_mat(5, 4, 1));
+        assert_eq!(matmul_quant_packed(&Mat::zeros(0, 5), &q).data.len(), 0);
+        let empty_k = crate::quant::nvfp4::PackedQuantMat::pack(&Mat::zeros(0, 4));
+        let out = matmul_quant_packed(&rand_mat(3, 0, 2), &empty_k);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        let empty_n = crate::quant::nvfp4::PackedQuantMat::pack(&Mat::zeros(5, 0));
+        assert_eq!(matmul_quant_packed_par(&rand_mat(3, 5, 2), &empty_n, 4).data.len(), 0);
     }
 
     #[test]

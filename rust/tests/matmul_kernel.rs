@@ -1,9 +1,16 @@
 //! Property tests for the packed matmul microkernel: random (possibly
 //! ragged) shapes against a naive f64 triple-loop reference, bitwise
 //! serial/parallel identity at every thread count, and the degenerate
-//! shapes (1×N, N×1, empty) the tiling edges must survive.
+//! shapes (1×N, N×1, empty) the tiling edges must survive. Also the
+//! packed-NVFP4 quant kernel: in-kernel decode must be bitwise
+//! `matmul` on the dequantized matrix at both SIMD levels (CI runs
+//! this file in release under `CHON_SIMD=scalar` and `CHON_SIMD=avx2`).
 
-use chon::util::ndarray::{matmul, matmul_into, matmul_packed, matmul_par, Mat, PackedMat};
+use chon::quant::nvfp4::PackedQuantMat;
+use chon::util::ndarray::{
+    matmul, matmul_into, matmul_packed, matmul_par, matmul_quant_packed_with, Mat,
+    PackedMat, SimdLevel,
+};
 use chon::util::prng::Rng;
 use chon::util::proptest::{check, Gen};
 
@@ -179,6 +186,46 @@ fn vector_shapes_and_empty_dims() {
     let before = out.data.clone();
     matmul_into(&a, &b, &mut out, true);
     assert_eq!(out.data, before);
+}
+
+/// The packed-NVFP4 compute contract: decoding e2m1 codes + e4m3 scales
+/// *inside* the microkernel must be bitwise `matmul` against the fully
+/// dequantized matrix, for every ragged shape (k not a multiple of the
+/// 16-value scale block or of KC included) and at BOTH SIMD levels. On
+/// hosts without AVX2 the Avx2 request downgrades to scalar, so the
+/// check degrades to scalar==scalar rather than silently skipping.
+#[test]
+fn nvfp4_packed_kernel_is_bitwise_dequantized_matmul() {
+    check("quant kernel == matmul(deq)", 0xF6, 60, &ProblemGen, |p| {
+        let w = rand_mat(p.k, p.n, p.seed ^ 16);
+        let q = PackedQuantMat::pack(&w);
+        if (q.rows(), q.cols()) != (p.k, p.n) {
+            return false;
+        }
+        let a = rand_mat(p.m, p.k, p.seed ^ 17);
+        let want = matmul(&a, &q.dequantize_mat());
+        [SimdLevel::Scalar, SimdLevel::Avx2].iter().all(|&lvl| {
+            matmul_quant_packed_with(&a, &q, 1, lvl).data == want.data
+        })
+    });
+}
+
+/// Scalar and AVX2 packed-quant kernels must agree bitwise at every
+/// thread count 1..=8 — this is what makes `--packed-compute` output
+/// independent of the serving host's SIMD level and thread budget.
+#[test]
+fn nvfp4_scalar_and_avx2_agree_at_every_thread_count() {
+    check("quant kernel simd x threads", 0xF7, 40, &ProblemGen, |p| {
+        let w = rand_mat(p.k, p.n, p.seed ^ 18);
+        let q = PackedQuantMat::pack(&w);
+        let a = rand_mat(p.m, p.k, p.seed ^ 19);
+        let reference = matmul_quant_packed_with(&a, &q, 1, SimdLevel::Scalar);
+        (1..=8).all(|t| {
+            [SimdLevel::Scalar, SimdLevel::Avx2].iter().all(|&lvl| {
+                matmul_quant_packed_with(&a, &q, t, lvl).data == reference.data
+            })
+        })
+    });
 }
 
 #[test]
