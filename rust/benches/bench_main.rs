@@ -1251,6 +1251,25 @@ fn perf() -> Result<()> {
             chon::serve::client::send_shutdown("127.0.0.1", port)?;
             let _ = h.join();
         }
+
+        // loadtest harness: generating + digesting a 16k-request Poisson
+        // schedule (the seeded-reproducibility path every scenario pays
+        // before it touches the network)
+        {
+            let t = time_fn(3, 20, || {
+                let s = chon::loadtest::scenarios::poisson_schedule(
+                    7, 16_384, 5_000.0, 16,
+                );
+                std::hint::black_box(s.digest());
+            });
+            record("loadtest_schedule_16k", t.median_ms);
+            table.row(&[
+                "loadtest schedule gen+digest (16k reqs)".into(),
+                "-".into(),
+                format!("{:.2}", t.median_ms),
+                format!("{:.1} Mreq/s", 16.384 / t.median_ms),
+            ]);
+        }
     }
     table.print();
     let json_path = out_dir().join("perf.json");

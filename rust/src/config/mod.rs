@@ -96,6 +96,23 @@ pub struct RunConfig {
     /// client: scrape `GET /metrics` on this port before and after the
     /// load run and assert key series exist and increase (0 = off)
     pub metrics_port: u16,
+    /// loadtest: scenario names from repeated `--scenario NAME` flags
+    /// (empty = the whole registry)
+    pub loadtest_scenarios: Vec<String>,
+    /// loadtest: smaller workloads, same scenario coverage (CI smoke)
+    pub quick: bool,
+    /// loadtest: gate mode — diff a summary against this baseline
+    pub loadtest_check: Option<PathBuf>,
+    /// loadtest: summary to gate (default: OUT_DIR/loadtest/summary.json)
+    pub loadtest_current: Option<PathBuf>,
+    /// loadtest gate: latency/RSS tolerance in percent
+    pub slo_tolerance: f64,
+    /// loadtest gate: absolute latency floor in ms (jitter guard)
+    pub slo_abs_ms: f64,
+    /// loadtest: artificial client-side per-request latency (ms) — the
+    /// gate-validation hook CI uses to prove `--check` catches
+    /// regressions; 0 in real runs
+    pub inject_latency_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -142,6 +159,13 @@ impl Default for RunConfig {
             obs_outliers: false,
             packed_compute: false,
             metrics_port: 0,
+            loadtest_scenarios: Vec::new(),
+            quick: false,
+            loadtest_check: None,
+            loadtest_current: None,
+            slo_tolerance: 50.0,
+            slo_abs_ms: 20.0,
+            inject_latency_ms: 0,
         }
     }
 }
@@ -292,6 +316,14 @@ impl RunConfig {
                 // value-less flag: nothing to consume
                 "packed-compute" => self.packed_compute = true,
                 "metrics-port" => self.metrics_port = next()?.parse()?,
+                "scenario" => self.loadtest_scenarios.push(next()?),
+                // value-less flag: nothing to consume
+                "quick" => self.quick = true,
+                "check" => self.loadtest_check = Some(PathBuf::from(next()?)),
+                "current" => self.loadtest_current = Some(PathBuf::from(next()?)),
+                "tolerance" => self.slo_tolerance = next()?.parse()?,
+                "abs-ms" => self.slo_abs_ms = next()?.parse()?,
+                "inject-latency-ms" => self.inject_latency_ms = next()?.parse()?,
                 "config" => {
                     let loaded = RunConfig::from_file(&PathBuf::from(next()?))?;
                     *self = loaded;
@@ -492,6 +524,47 @@ mod tests {
         assert!(!c.packed_compute);
         c.apply_args(&["--packed-compute".into()]).unwrap();
         assert!(c.packed_compute);
+    }
+
+    #[test]
+    fn loadtest_flags_parse() {
+        let mut c = RunConfig::default();
+        assert!(c.loadtest_scenarios.is_empty());
+        assert!(!c.quick);
+        assert_eq!(c.slo_tolerance, 50.0);
+        assert_eq!(c.slo_abs_ms, 20.0);
+        assert_eq!(c.inject_latency_ms, 0);
+        c.apply_args(&[
+            "--scenario".into(),
+            "fanout".into(),
+            "--scenario".into(),
+            "poisson".into(),
+            "--quick".into(),
+            "--check".into(),
+            "base/summary.json".into(),
+            "--current".into(),
+            "cur/summary.json".into(),
+            "--tolerance".into(),
+            "35".into(),
+            "--abs-ms".into(),
+            "10".into(),
+            "--inject-latency-ms".into(),
+            "150".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.loadtest_scenarios, vec!["fanout", "poisson"]);
+        assert!(c.quick);
+        assert_eq!(
+            c.loadtest_check.as_deref(),
+            Some(std::path::Path::new("base/summary.json"))
+        );
+        assert_eq!(
+            c.loadtest_current.as_deref(),
+            Some(std::path::Path::new("cur/summary.json"))
+        );
+        assert_eq!(c.slo_tolerance, 35.0);
+        assert_eq!(c.slo_abs_ms, 10.0);
+        assert_eq!(c.inject_latency_ms, 150);
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod coordinator;
 pub mod data;
 pub mod diagnostics;
 pub mod hcp;
+pub mod loadtest;
 pub mod obs;
 pub mod quant;
 pub mod runtime;

@@ -1,0 +1,225 @@
+//! `chon loadtest` — the scenario + chaos load harness.
+//!
+//! One binary, no external tooling: the harness trains (or takes) a
+//! checkpoint, spawns the release `chon serve` binary per scenario,
+//! drives seeded request schedules against it (deterministic bursts,
+//! Poisson arrivals, session churn, eviction storms, hot reloads,
+//! SIGKILL-and-resume), samples the server's `/proc` usage while it
+//! runs, scrapes its `/metrics` stage histograms, and writes one
+//! `summary.json` with per-scenario p50/p99/p999, peak RSS and CPU
+//! ticks. `chon loadtest --check BASELINE` turns the summary into an
+//! SLO gate, the same shape as `chon bench-diff`.
+//!
+//! Harness lineage: the scenario-registry + supervisor + SLO-gate
+//! split follows the WIND bench harness (SNIPPETS §3), adapted to a
+//! single self-contained binary.
+
+pub mod proc;
+pub mod resources;
+pub mod scenarios;
+pub mod scrape;
+pub mod summary;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::Trainer;
+use scenarios::{registry, Ctx};
+use summary::{ScenarioResult, Summary};
+
+/// Everything the `loadtest` subcommand configures.
+#[derive(Clone, Debug)]
+pub struct LoadtestOpts {
+    /// scenario names to run (empty = the whole registry, in order)
+    pub scenarios: Vec<String>,
+    /// smaller workloads, same coverage — CI smoke mode
+    pub quick: bool,
+    pub seed: u64,
+    /// all scratch, logs and summary.json land under here
+    pub out_root: PathBuf,
+    /// serve this checkpoint instead of training a fresh one
+    pub checkpoint: Option<PathBuf>,
+    /// the binary to spawn servers with (None = this very binary)
+    pub bin: Option<PathBuf>,
+    /// artificial client-side latency per request — the gate-validation
+    /// hook used by CI's negative test (0 in real runs)
+    pub inject_latency_ms: u64,
+    /// model/recipe for the self-trained checkpoint (and republishes)
+    pub model: String,
+    pub recipe: String,
+}
+
+impl Default for LoadtestOpts {
+    fn default() -> Self {
+        LoadtestOpts {
+            scenarios: Vec::new(),
+            quick: false,
+            seed: 7,
+            out_root: PathBuf::from("runs/loadtest"),
+            checkpoint: None,
+            bin: None,
+            inject_latency_ms: 0,
+            model: "tiny_gla".to_string(),
+            recipe: "chon".to_string(),
+        }
+    }
+}
+
+/// Train a small checkpoint for the harness to serve, under
+/// `out_root/ckpt` (parent-dir layout: serve/resume pick the highest
+/// step inside).
+fn train_checkpoint(opts: &LoadtestOpts) -> Result<PathBuf> {
+    let root = opts.out_root.join("ckpt");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = opts.model.clone();
+    cfg.recipe = opts.recipe.clone();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = opts.seed;
+    cfg.out_dir = opts.out_root.join("train_runs");
+    let steps = if opts.quick { 12 } else { 30 };
+    let mut tr = Trainer::new(cfg).context("building trainer for the harness checkpoint")?;
+    tr.train(steps).context("training the harness checkpoint")?;
+    tr.save_checkpoint_to(&root)
+        .context("writing the harness checkpoint")?;
+    Ok(root)
+}
+
+/// Resolve requested scenario names against the registry (empty = all).
+fn select(names: &[String]) -> Result<Vec<&'static scenarios::Scenario>> {
+    let all = registry();
+    if names.is_empty() {
+        return Ok(all.iter().collect());
+    }
+    let mut picked = Vec::new();
+    for want in names {
+        match all.iter().find(|s| s.name == want.as_str()) {
+            Some(s) => picked.push(s),
+            None => {
+                let known: Vec<&str> = all.iter().map(|s| s.name).collect();
+                bail!("unknown scenario {want:?}; known: {}", known.join(", "));
+            }
+        }
+    }
+    Ok(picked)
+}
+
+/// Run the selected scenarios and write `out_root/summary.json`.
+/// A scenario that errors out (infrastructure failure, not SLO failure)
+/// is recorded as a failed result and the remaining scenarios still run
+/// — one bad scenario must not hide the others' numbers.
+pub fn run(opts: &LoadtestOpts) -> Result<Summary> {
+    let picked = select(&opts.scenarios)?;
+    std::fs::create_dir_all(&opts.out_root)
+        .with_context(|| format!("creating {}", opts.out_root.display()))?;
+    let bin = match &opts.bin {
+        Some(b) => b.clone(),
+        None => std::env::current_exe().context("locating the chon binary")?,
+    };
+    let ckpt = match &opts.checkpoint {
+        Some(c) => c.clone(),
+        None => train_checkpoint(opts)?,
+    };
+
+    let mut out = Summary {
+        seed: opts.seed,
+        quick: opts.quick,
+        scenarios: Vec::new(),
+    };
+    for sc in picked {
+        let dir = opts.out_root.join(sc.name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let ctx = Ctx {
+            bin: bin.clone(),
+            ckpt: ckpt.clone(),
+            out: dir,
+            seed: opts.seed,
+            quick: opts.quick,
+            inject_latency_ms: opts.inject_latency_ms,
+            model: opts.model.clone(),
+            recipe: opts.recipe.clone(),
+        };
+        let t0 = std::time::Instant::now();
+        let result = match (sc.run)(&ctx) {
+            Ok(r) => r,
+            Err(e) => ScenarioResult::infra_failure(sc.name, sc.kind, &format!("{e:#}")),
+        };
+        println!(
+            "loadtest {:<12} [{}] {} in {:.1}s  (p99 {:.1} ms, {} ok / {} failed, \
+             rss {:.1} MiB)",
+            result.name,
+            result.kind,
+            if result.ok { "ok" } else { "FAILED" },
+            t0.elapsed().as_secs_f64(),
+            result.latency.p99_ms,
+            result.requests_ok,
+            result.failures,
+            result.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+        );
+        if !result.ok {
+            for (name, pass) in &result.checks {
+                if !pass {
+                    println!("    check failed: {name}");
+                }
+            }
+        }
+        out.scenarios.push(result);
+    }
+
+    let path = opts.out_root.join("summary.json");
+    out.write(&path)?;
+    println!("loadtest summary written to {}", path.display());
+    Ok(out)
+}
+
+/// `chon loadtest --check BASELINE [--current CURRENT]`: gate a summary
+/// against a baseline, `bench-diff`-style. Prints each violation and
+/// errors if any exist.
+pub fn check_files(
+    baseline: &std::path::Path,
+    current: &std::path::Path,
+    tol_pct: f64,
+    abs_ms: f64,
+) -> Result<()> {
+    let base = Summary::read(baseline)
+        .with_context(|| format!("reading baseline {}", baseline.display()))?;
+    let cur = Summary::read(current)
+        .with_context(|| format!("reading current {}", current.display()))?;
+    let violations = summary::check(&base, &cur, tol_pct, abs_ms);
+    if violations.is_empty() {
+        println!(
+            "loadtest SLO gate passed: {} scenario(s) within {tol_pct}% (+{abs_ms} ms) \
+             of baseline",
+            cur.scenarios.len()
+        );
+        return Ok(());
+    }
+    for v in &violations {
+        println!("SLO violation: {v}");
+    }
+    bail!("{} SLO violation(s) against {}", violations.len(), baseline.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_resolves_names_and_rejects_unknown() {
+        assert_eq!(select(&[]).unwrap().len(), registry().len());
+        let one = select(&["poisson".to_string()]).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].name, "poisson");
+        let err = select(&["nope".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("unknown scenario"), "{err}");
+        assert!(err.contains("kill_resume"), "lists known names: {err}");
+    }
+}

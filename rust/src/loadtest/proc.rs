@@ -1,0 +1,368 @@
+//! Process supervision for the loadtest harness: spawn a real `chon
+//! serve` binary, discover its ephemeral ports from the startup banner,
+//! wait for readiness, sample its `/proc` usage while it runs, and take
+//! it down — gracefully (SHUTDOWN) or violently (SIGKILL, for the
+//! kill-and-resume chaos scenario).
+//!
+//! Port discovery rides the server's own stdout contract: `chon serve
+//! --port 0` prints `listening on <host>:<port>` (and `http front end on
+//! <host>:<port>`) after binding, and Rust's stdout is line-buffered, so
+//! scanning the redirected log file is race-free — no port file, no
+//! retry-until-connect scan of the port space.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::loadtest::resources::{Sampler, Usage};
+use crate::serve::client;
+
+/// Everything configurable about one supervised `chon serve` process.
+/// Mirrors the CLI flags so a scenario reads like a command line.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    /// `--checkpoint DIR` (registers model "default")
+    pub checkpoint: Option<PathBuf>,
+    /// `--model NAME=DIR` entries
+    pub models: Vec<(String, PathBuf)>,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    /// 0 = unlimited
+    pub max_conns: usize,
+    pub max_resident_sessions: usize,
+    pub max_kv_tokens: usize,
+    pub spill_dir: Option<PathBuf>,
+    pub max_resident_models: usize,
+    pub reload_poll_ms: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            checkpoint: None,
+            models: Vec::new(),
+            max_batch: 8,
+            max_wait_us: 2000,
+            max_conns: 0,
+            max_resident_sessions: 0,
+            max_kv_tokens: 0,
+            spill_dir: None,
+            max_resident_models: 0,
+            reload_poll_ms: 500,
+        }
+    }
+}
+
+impl ServeSpec {
+    fn to_args(&self) -> Vec<String> {
+        let mut args: Vec<String> = vec![
+            "serve".into(),
+            "--port".into(),
+            "0".into(),
+            "--http-port".into(),
+            "0".into(),
+            "--max-batch".into(),
+            self.max_batch.to_string(),
+            "--max-wait-us".into(),
+            self.max_wait_us.to_string(),
+            "--max-conns".into(),
+            self.max_conns.to_string(),
+            "--max-resident-sessions".into(),
+            self.max_resident_sessions.to_string(),
+            "--max-kv-tokens".into(),
+            self.max_kv_tokens.to_string(),
+            "--max-resident-models".into(),
+            self.max_resident_models.to_string(),
+            "--reload-poll-ms".into(),
+            self.reload_poll_ms.to_string(),
+        ];
+        if let Some(ckpt) = &self.checkpoint {
+            args.push("--checkpoint".into());
+            args.push(ckpt.display().to_string());
+        }
+        for (name, dir) in &self.models {
+            args.push("--model".into());
+            args.push(format!("{name}={}", dir.display()));
+        }
+        if let Some(dir) = &self.spill_dir {
+            args.push("--spill-dir".into());
+            args.push(dir.display().to_string());
+        }
+        args
+    }
+}
+
+/// One supervised server process.
+pub struct ServerProc {
+    child: Child,
+    /// TCP line-protocol port (banner-discovered)
+    pub port: u16,
+    /// HTTP front-end port (banner-discovered; scrape target)
+    pub http_port: u16,
+    log_path: PathBuf,
+    sampler: Option<Sampler>,
+    usage_done: Usage,
+}
+
+/// How long spawn waits for the startup banner + PING readiness. Cold
+/// checkpoint loads (engine deserialize + B-panel packing) dominate.
+const READY_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Scan a log for `<marker><host>:<port>` and return the port.
+fn scan_port(log: &str, marker: &str) -> Option<u16> {
+    for line in log.lines() {
+        if let Some(rest) = line.strip_prefix(marker) {
+            if let Some((_, port)) = rest.trim().rsplit_once(':') {
+                if let Ok(p) = port.parse::<u16>() {
+                    if p != 0 {
+                        return Some(p);
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+impl ServerProc {
+    /// Spawn `bin serve ...` per the spec, redirect stdout+stderr to
+    /// `log_path`, wait for both port banners and a PING round-trip,
+    /// then start the resource sampler.
+    pub fn spawn(bin: &Path, spec: &ServeSpec, log_path: &Path) -> Result<ServerProc> {
+        if let Some(parent) = log_path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let log_file = std::fs::File::create(log_path)
+            .with_context(|| format!("creating {}", log_path.display()))?;
+        let log_err = log_file
+            .try_clone()
+            .context("cloning log handle for stderr")?;
+        let mut child = Command::new(bin)
+            .args(spec.to_args())
+            .stdin(Stdio::null())
+            .stdout(Stdio::from(log_file))
+            .stderr(Stdio::from(log_err))
+            .spawn()
+            .with_context(|| format!("spawning {} serve", bin.display()))?;
+
+        // banner scan: the server prints its real ports after binding
+        let deadline = Instant::now() + READY_DEADLINE;
+        let (port, http_port) = loop {
+            let log = std::fs::read_to_string(log_path).unwrap_or_default();
+            if let (Some(p), Some(hp)) = (
+                scan_port(&log, "listening on "),
+                scan_port(&log, "http front end on "),
+            ) {
+                break (p, hp);
+            }
+            if let Some(status) = child.try_wait().context("polling server")? {
+                bail!(
+                    "server exited {status} before printing its ports; log tail:\n{}",
+                    tail_of(&log)
+                );
+            }
+            if Instant::now() >= deadline {
+                let _ = child.kill();
+                bail!(
+                    "server never printed its ports within {READY_DEADLINE:?}; \
+                     log tail:\n{}",
+                    tail_of(&log)
+                );
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        };
+
+        // readiness: the reactor answers PING once the event loop runs
+        let mut ready = false;
+        while Instant::now() < deadline {
+            if client::open_conn("127.0.0.1", port)
+                .and_then(|mut s| client::ping(&mut s))
+                .is_ok()
+            {
+                ready = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if !ready {
+            let _ = child.kill();
+            bail!("server on port {port} never answered PING");
+        }
+
+        let sampler = Some(Sampler::spawn(child.id()));
+        Ok(ServerProc {
+            child,
+            port,
+            http_port,
+            log_path: log_path.to_path_buf(),
+            sampler,
+            usage_done: Usage::default(),
+        })
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.child.id()
+    }
+
+    /// SIGKILL, no drain, no Drop handlers server-side — the chaos
+    /// primitive. Spill files and checkpoints must survive this.
+    pub fn kill_hard(&mut self) -> Result<()> {
+        self.freeze_usage();
+        self.child.kill().context("killing server")?;
+        self.child.wait().context("reaping killed server")?;
+        Ok(())
+    }
+
+    /// Graceful stop: SHUTDOWN over the protocol, then wait (bounded).
+    pub fn stop(&mut self) -> Result<()> {
+        self.freeze_usage();
+        client::send_shutdown("127.0.0.1", self.port)
+            .context("sending SHUTDOWN")?;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if self.child.try_wait().context("polling server")?.is_some() {
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                let _ = self.child.kill();
+                let _ = self.child.wait();
+                bail!(
+                    "server ignored SHUTDOWN for 30s; killed. log tail:\n{}",
+                    self.log_tail()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    fn freeze_usage(&mut self) {
+        if let Some(s) = self.sampler.take() {
+            self.usage_done = s.stop();
+        }
+    }
+
+    /// The process's aggregate resource usage (stops the sampler on
+    /// first call; idempotent).
+    pub fn usage(&mut self) -> Usage {
+        self.freeze_usage();
+        self.usage_done
+    }
+
+    /// Fetch the `/metrics` body from the HTTP front end.
+    pub fn scrape_metrics(&self) -> Result<String> {
+        client::fetch_metrics("127.0.0.1", self.http_port)
+    }
+
+    /// Last lines of the server log (diagnostics on failure).
+    pub fn log_tail(&self) -> String {
+        tail_of(&std::fs::read_to_string(&self.log_path).unwrap_or_default())
+    }
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        // a scenario that errored out mid-flight must not leak a server
+        if self.child.try_wait().map(|s| s.is_none()).unwrap_or(false) {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+}
+
+fn tail_of(log: &str) -> String {
+    let lines: Vec<&str> = log.lines().collect();
+    let start = lines.len().saturating_sub(15);
+    lines[start..].join("\n")
+}
+
+/// Run a one-shot `bin <args>` subprocess to completion (the harness
+/// uses this for `chon train` republishes in the hot-reload scenario),
+/// appending its output to `log_path`. Non-zero exit is an error
+/// carrying the log tail.
+pub fn run_tool(bin: &Path, args: &[String], log_path: &Path) -> Result<()> {
+    if let Some(parent) = log_path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let log_file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(log_path)
+        .with_context(|| format!("opening {}", log_path.display()))?;
+    let log_err = log_file.try_clone().context("cloning log handle")?;
+    let status = Command::new(bin)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::from(log_file))
+        .stderr(Stdio::from(log_err))
+        .status()
+        .with_context(|| format!("running {} {}", bin.display(), args.join(" ")))?;
+    if !status.success() {
+        bail!(
+            "{} {} exited {status}; log tail:\n{}",
+            bin.display(),
+            args.join(" "),
+            tail_of(&std::fs::read_to_string(log_path).unwrap_or_default())
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_scan_finds_banner_lines() {
+        let log = "registered model default -> /tmp/ckpt\n\
+                   listening on 127.0.0.1:43211\n\
+                   http front end on 127.0.0.1:43212\n";
+        assert_eq!(scan_port(log, "listening on "), Some(43211));
+        assert_eq!(scan_port(log, "http front end on "), Some(43212));
+        assert_eq!(scan_port(log, "router on "), None);
+        // an unparsed or zero port is not readiness
+        assert_eq!(scan_port("listening on 127.0.0.1:0\n", "listening on "), None);
+        assert_eq!(scan_port("listening on nope\n", "listening on "), None);
+    }
+
+    #[test]
+    fn spec_args_cover_all_knobs() {
+        let spec = ServeSpec {
+            checkpoint: Some(PathBuf::from("/ck")),
+            models: vec![("alpha".into(), PathBuf::from("/a"))],
+            max_conns: 3,
+            max_resident_sessions: 1,
+            max_kv_tokens: 7,
+            spill_dir: Some(PathBuf::from("/sp")),
+            max_resident_models: 2,
+            reload_poll_ms: 50,
+            ..Default::default()
+        };
+        let args = spec.to_args();
+        let joined = args.join(" ");
+        assert!(joined.starts_with("serve --port 0 --http-port 0"));
+        for want in [
+            "--max-conns 3",
+            "--max-resident-sessions 1",
+            "--max-kv-tokens 7",
+            "--checkpoint /ck",
+            "--model alpha=/a",
+            "--spill-dir /sp",
+            "--max-resident-models 2",
+            "--reload-poll-ms 50",
+        ] {
+            assert!(joined.contains(want), "{want} missing from {joined}");
+        }
+    }
+
+    #[test]
+    fn tail_is_bounded() {
+        let long: String = (0..100).map(|i| format!("line {i}\n")).collect();
+        let t = tail_of(&long);
+        assert!(t.lines().count() <= 15);
+        assert!(t.contains("line 99"));
+    }
+}

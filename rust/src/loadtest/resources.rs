@@ -1,0 +1,204 @@
+//! `/proc/<pid>/{statm,stat}` resource sampling for supervised server
+//! processes: peak RSS and cumulative CPU ticks, polled by a background
+//! thread while a scenario runs.
+//!
+//! Linux-only by construction (the loadtest harness spawns Linux
+//! processes and the CI runners are Linux); on a platform without
+//! `/proc` the reads fail soft and the summary reports zeros instead of
+//! the harness failing.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Kernel page size. `/proc/<pid>/statm` reports pages; 4 KiB is the
+/// x86-64/aarch64 default and the only configuration the harness runs
+/// on. (sysconf is not reachable without libc bindings — a deliberate
+/// zero-dependency tradeoff, documented here.)
+const PAGE_BYTES: u64 = 4096;
+
+/// One instantaneous reading of a process's resource usage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Reading {
+    /// resident set size in bytes (statm field 1 × page size)
+    pub rss_bytes: u64,
+    /// cumulative CPU ticks, user + system (stat utime + stime)
+    pub cpu_ticks: u64,
+}
+
+/// Parse the two fields we need out of raw `statm` + `stat` contents.
+/// Split out from the `/proc` read so the parsing is unit-testable with
+/// fixture strings.
+pub fn parse_proc(statm: &str, stat: &str) -> Result<Reading> {
+    // statm: "size resident shared text lib data dt" (pages)
+    let resident: u64 = statm
+        .split_whitespace()
+        .nth(1)
+        .context("statm missing resident field")?
+        .parse()
+        .context("statm resident field not a number")?;
+    // stat: "pid (comm) state ppid ... utime stime ..." — comm may
+    // contain spaces and parentheses, so field counting must start after
+    // the LAST ')'. utime/stime are fields 14/15 of the documented
+    // layout = whitespace fields 11/12 of the remainder.
+    let after_comm = &stat[stat
+        .rfind(')')
+        .context("stat missing comm terminator")?
+        + 1..];
+    let fields: Vec<&str> = after_comm.split_whitespace().collect();
+    let utime: u64 = fields
+        .get(11)
+        .context("stat missing utime")?
+        .parse()
+        .context("stat utime not a number")?;
+    let stime: u64 = fields
+        .get(12)
+        .context("stat missing stime")?
+        .parse()
+        .context("stat stime not a number")?;
+    Ok(Reading {
+        rss_bytes: resident * PAGE_BYTES,
+        cpu_ticks: utime + stime,
+    })
+}
+
+/// Read one instantaneous usage snapshot of `pid` from `/proc`.
+pub fn read_proc(pid: u32) -> Result<Reading> {
+    let base = Path::new("/proc").join(pid.to_string());
+    let statm = std::fs::read_to_string(base.join("statm"))
+        .with_context(|| format!("reading /proc/{pid}/statm"))?;
+    let stat = std::fs::read_to_string(base.join("stat"))
+        .with_context(|| format!("reading /proc/{pid}/stat"))?;
+    parse_proc(&statm, &stat)
+}
+
+/// Aggregated resource usage over one scenario (possibly across several
+/// server incarnations — kill-and-resume merges the usage of both).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Usage {
+    /// high-water resident set across all samples
+    pub peak_rss_bytes: u64,
+    /// CPU ticks consumed (last reading — ticks are cumulative per
+    /// process, so the final sample is the total)
+    pub cpu_ticks: u64,
+    /// how many samples contributed (0 = /proc was unreadable)
+    pub samples: u64,
+}
+
+impl Usage {
+    /// Combine usage from another process incarnation: peaks take the
+    /// max, ticks and sample counts add.
+    pub fn merge(&mut self, other: &Usage) {
+        self.peak_rss_bytes = self.peak_rss_bytes.max(other.peak_rss_bytes);
+        self.cpu_ticks += other.cpu_ticks;
+        self.samples += other.samples;
+    }
+}
+
+/// Background sampler: polls `/proc/<pid>` every `period` and keeps the
+/// running peak. `stop()` joins the thread and returns the aggregate.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    acc: Arc<Mutex<Usage>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// How often the sampler polls. Coarse enough to be free, fine enough
+/// to catch an RSS spike that lasts a few batch cycles.
+const SAMPLE_PERIOD: Duration = Duration::from_millis(25);
+
+impl Sampler {
+    pub fn spawn(pid: u32) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let acc = Arc::new(Mutex::new(Usage::default()));
+        let (stop2, acc2) = (stop.clone(), acc.clone());
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                if let Ok(r) = read_proc(pid) {
+                    let mut u = acc2.lock().unwrap();
+                    u.peak_rss_bytes = u.peak_rss_bytes.max(r.rss_bytes);
+                    u.cpu_ticks = r.cpu_ticks;
+                    u.samples += 1;
+                } else {
+                    // process gone (SIGKILL scenarios get here): the
+                    // readings so far are the answer, stop polling
+                    break;
+                }
+                std::thread::sleep(SAMPLE_PERIOD);
+            }
+        });
+        Sampler { stop, acc, handle: Some(handle) }
+    }
+
+    /// Stop polling and return the aggregate usage.
+    pub fn stop(mut self) -> Usage {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        *self.acc.lock().unwrap()
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_statm_and_stat_fixtures() {
+        let statm = "3969 576 436 11 0 353 0\n";
+        // comm with spaces and a ')' — the adversarial case
+        let stat = "1234 (we ir)d comm) S 1 1 1 0 -1 4194560 112 0 0 0 \
+                    7 3 0 0 20 0 1 0 123456 16257024 576 \
+                    18446744073709551615 1 1 0 0 0 0 0 0 0 0 0 0 17 0 0 0 \
+                    0 0 0 0 0 0 0 0 0 0 0\n";
+        let r = parse_proc(statm, stat).unwrap();
+        assert_eq!(r.rss_bytes, 576 * 4096);
+        assert_eq!(r.cpu_ticks, 7 + 3);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        assert!(parse_proc("", "1 (c) S 0").is_err());
+        assert!(parse_proc("1 x", "1 (c) S 0").is_err());
+        assert!(parse_proc("1 2", "no comm terminator").is_err());
+        assert!(parse_proc("1 2", "1 (c) S 1 2 3").is_err()); // too short
+    }
+
+    #[test]
+    fn reads_own_process() {
+        let r = read_proc(std::process::id()).unwrap();
+        assert!(r.rss_bytes > 0, "a running process has resident pages");
+    }
+
+    #[test]
+    fn usage_merge_takes_peak_and_sums() {
+        let mut a = Usage { peak_rss_bytes: 100, cpu_ticks: 5, samples: 2 };
+        let b = Usage { peak_rss_bytes: 80, cpu_ticks: 7, samples: 3 };
+        a.merge(&b);
+        assert_eq!(a.peak_rss_bytes, 100);
+        assert_eq!(a.cpu_ticks, 12);
+        assert_eq!(a.samples, 5);
+    }
+
+    #[test]
+    fn sampler_collects_samples() {
+        let s = Sampler::spawn(std::process::id());
+        std::thread::sleep(Duration::from_millis(80));
+        let u = s.stop();
+        assert!(u.samples >= 1);
+        assert!(u.peak_rss_bytes > 0);
+    }
+}

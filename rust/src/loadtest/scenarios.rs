@@ -1,0 +1,1047 @@
+//! The scenario registry: named deterministic / stochastic / chaos
+//! workloads, each of which spawns a supervised `chon serve` process,
+//! drives a seeded request schedule against it, and reports a
+//! [`ScenarioResult`].
+//!
+//! Reproducibility contract: a schedule is a pure function of the run
+//! seed — two runs at the same seed generate byte-identical request
+//! lists (pinned by `schedule_digest` in the summary). Stochastic
+//! scenarios are stochastic in *shape* (Poisson arrivals, ragged prompt
+//! lengths), not in reproducibility.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::loadtest::proc::{run_tool, ServeSpec, ServerProc};
+use crate::loadtest::resources::Usage;
+use crate::loadtest::scrape;
+use crate::loadtest::summary::{ScenarioResult, StageQuantiles};
+use crate::serve::client::{self, LoadReport};
+use crate::serve::protocol;
+use crate::util::prng::{splitmix64, Rng};
+
+const HOST: &str = "127.0.0.1";
+
+/// Everything a scenario needs to run.
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    /// the release `chon` binary to spawn servers (and republishes) with
+    pub bin: PathBuf,
+    /// checkpoint root (parent dir; highest step wins at load)
+    pub ckpt: PathBuf,
+    /// per-scenario scratch + log directory
+    pub out: PathBuf,
+    pub seed: u64,
+    pub quick: bool,
+    /// artificial per-request latency (ms) added client-side — the
+    /// SLO-gate validation hook: CI injects this to prove `--check`
+    /// actually fails on a regression. 0 in real runs.
+    pub inject_latency_ms: u64,
+    /// model/recipe names matching the checkpoint (hot-reload republish)
+    pub model: String,
+    pub recipe: String,
+}
+
+impl Ctx {
+    /// Scale a workload knob by mode.
+    fn n(&self, quick: usize, full: usize) -> usize {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    /// Per-scenario seeded stream, independent across scenario names.
+    fn rng(&self, name: &str) -> Rng {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a over the name
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x1_0000_01b3);
+        }
+        Rng::new(self.seed).fold_in(h)
+    }
+}
+
+/// One scheduled request.
+#[derive(Clone, Debug)]
+pub struct Req {
+    /// when to send, µs after the workload starts
+    pub at_us: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    /// registry model to route to (None = server default)
+    pub model: Option<String>,
+    /// named session (SGEN) — pinned to one worker so turns stay ordered
+    pub session: Option<String>,
+}
+
+/// A full request schedule plus how many workers replay it.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub reqs: Vec<Req>,
+    pub workers: usize,
+}
+
+/// Order-sensitive 64-bit digest (splitmix64 chaining). Not crypto —
+/// just enough to pin "same seed, same schedule" in the summary.
+struct Digest(u64);
+
+impl Digest {
+    fn new() -> Digest {
+        Digest(0x9E37_79B9_7F4A_7C15)
+    }
+
+    fn fold(&mut self, x: u64) {
+        let mut s = self.0 ^ x.wrapping_mul(0xA076_1D64_78BD_642F);
+        self.0 = splitmix64(&mut s);
+    }
+
+    fn fold_bytes(&mut self, b: &[u8]) {
+        self.fold(b.len() as u64);
+        for chunk in b.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.fold(u64::from_le_bytes(buf));
+        }
+    }
+
+    fn fold_opt(&mut self, o: Option<&str>) {
+        match o {
+            None => self.fold(0),
+            Some(s) => {
+                self.fold(1);
+                self.fold_bytes(s.as_bytes());
+            }
+        }
+    }
+}
+
+impl Schedule {
+    /// Digest every field of every request (and the worker count):
+    /// two schedules digest equal iff they replay identically.
+    pub fn digest(&self) -> u64 {
+        let mut d = Digest::new();
+        d.fold(self.reqs.len() as u64);
+        d.fold(self.workers as u64);
+        for r in &self.reqs {
+            d.fold(r.at_us);
+            d.fold(r.max_tokens as u64);
+            d.fold_bytes(r.prompt.as_bytes());
+            d.fold_opt(r.model.as_deref());
+            d.fold_opt(r.session.as_deref());
+        }
+        d.0
+    }
+}
+
+/// Small word pool for synthetic prompts (byte-level models only care
+/// about length mix, not vocabulary).
+const WORDS: &[&str] = &[
+    "the", "of", "and", "to", "in", "is", "was", "for", "on", "as", "with",
+    "his", "they", "at", "be", "this", "have", "from", "or", "one", "had",
+    "by", "word", "but",
+];
+
+fn prompt_words(rng: &mut Rng, n: usize) -> String {
+    let mut out = String::new();
+    for _ in 0..n.max(1) {
+        out.push_str(WORDS[rng.below(WORDS.len())]);
+        out.push(' ');
+        if out.len() + 8 > protocol::MAX_PROMPT_BYTES {
+            break;
+        }
+    }
+    out
+}
+
+/// Exponential inter-arrival sample in µs (Poisson process of mean
+/// `mean_us`), from the full-width uniform (f32 `uniform()` has too few
+/// bits for a clean tail).
+fn exp_us(rng: &mut Rng, mean_us: f64) -> u64 {
+    let u = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+    (-(1.0 - u).ln() * mean_us) as u64
+}
+
+/// Seeded Poisson-arrival GEN schedule — public because the bench suite
+/// times schedule generation + digesting, and the harness tests pin its
+/// determinism.
+pub fn poisson_schedule(seed: u64, n: usize, mean_us: f64, workers: usize) -> Schedule {
+    let mut rng = Rng::new(seed).fold_in(0x1077);
+    let mut at = 0u64;
+    let mut reqs = Vec::with_capacity(n);
+    for _ in 0..n {
+        at += exp_us(&mut rng, mean_us);
+        let words = 1 + rng.below(6);
+        reqs.push(Req {
+            at_us: at,
+            prompt: prompt_words(&mut rng, words),
+            max_tokens: 6,
+            model: None,
+            session: None,
+        });
+    }
+    Schedule { reqs, workers }
+}
+
+/// Per-request outcome inside a worker.
+enum Outcome {
+    Done { tokens: usize, ms: f64 },
+    Empty,
+    Fail(String),
+}
+
+fn session_worker(id: &str, workers: usize) -> usize {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in id.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1_0000_01b3);
+    }
+    (h % workers as u64) as usize
+}
+
+/// Replay a schedule against a live server: requests partition across
+/// workers (sessions pinned by id hash so a session's turns never race
+/// the server's busy-session rejection; sessionless requests
+/// round-robin), each worker holds one persistent connection and
+/// reconnects after a failure. Returns the merged report plus the first
+/// error string (diagnostics — per-request failures are already counted
+/// in the report).
+pub fn run_workload(
+    port: u16,
+    schedule: &Schedule,
+    inject_latency_ms: u64,
+) -> (LoadReport, Option<String>) {
+    let workers = schedule.workers.clamp(1, schedule.reqs.len().max(1));
+    let mut parts: Vec<Vec<&Req>> = vec![Vec::new(); workers];
+    let mut rr = 0usize;
+    for r in &schedule.reqs {
+        let w = match &r.session {
+            Some(id) => session_worker(id, workers),
+            None => {
+                rr += 1;
+                (rr - 1) % workers
+            }
+        };
+        parts[w].push(r);
+    }
+
+    let t0 = Instant::now();
+    let mut per_worker: Vec<Vec<(Option<String>, Outcome)>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for list in &parts {
+            handles.push(s.spawn(move || {
+                let mut conn: Option<std::net::TcpStream> = None;
+                let mut out = Vec::with_capacity(list.len());
+                for req in list {
+                    let target = t0 + Duration::from_micros(req.at_us);
+                    let now = Instant::now();
+                    if target > now {
+                        std::thread::sleep(target - now);
+                    }
+                    if conn.is_none() {
+                        conn = client::open_conn(HOST, port).ok();
+                    }
+                    let Some(stream) = conn.as_mut() else {
+                        out.push((
+                            req.model.clone(),
+                            Outcome::Fail("connect failed".into()),
+                        ));
+                        continue;
+                    };
+                    let res = match &req.session {
+                        Some(sid) => client::generate_session_on_for(
+                            stream,
+                            req.model.as_deref(),
+                            sid,
+                            &req.prompt,
+                            req.max_tokens,
+                            0.0,
+                        ),
+                        None => client::generate_on_for(
+                            stream,
+                            req.model.as_deref(),
+                            &req.prompt,
+                            req.max_tokens,
+                            0.0,
+                        ),
+                    };
+                    let outcome = match res {
+                        Ok((text, n, mut ms)) => {
+                            if inject_latency_ms > 0 {
+                                // gate-validation hook: a real latency
+                                // regression, visible end to end
+                                std::thread::sleep(Duration::from_millis(
+                                    inject_latency_ms,
+                                ));
+                                ms += inject_latency_ms as f64;
+                            }
+                            if text.is_empty() || n == 0 {
+                                Outcome::Empty
+                            } else {
+                                Outcome::Done { tokens: n.max(1), ms }
+                            }
+                        }
+                        Err(e) => {
+                            conn = None; // poisoned: reconnect next time
+                            Outcome::Fail(format!("{e:#}"))
+                        }
+                    };
+                    out.push((req.model.clone(), outcome));
+                }
+                out
+            }));
+        }
+        for h in handles {
+            per_worker.push(h.join().expect("workload worker panicked"));
+        }
+    });
+
+    let mut report = LoadReport {
+        wall_s: t0.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+    let mut first_err = None;
+    for outcomes in per_worker {
+        for (model, o) in outcomes {
+            match o {
+                Outcome::Done { tokens, ms } => {
+                    report.tokens += tokens;
+                    report.latencies_ms.push(ms);
+                    if let Some(m) = model {
+                        report.by_model.entry(m).or_default().push(ms);
+                    }
+                }
+                Outcome::Empty => report.empty_responses += 1,
+                Outcome::Fail(e) => {
+                    report.failures += 1;
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+    }
+    report.sort_latencies();
+    (report, first_err)
+}
+
+// ---- shared scenario plumbing ----
+
+fn default_spec(ctx: &Ctx) -> ServeSpec {
+    ServeSpec {
+        checkpoint: Some(ctx.ckpt.clone()),
+        ..Default::default()
+    }
+}
+
+fn spawn_server(ctx: &Ctx, name: &str, spec: &ServeSpec) -> Result<ServerProc> {
+    ServerProc::spawn(&ctx.bin, spec, &ctx.out.join(format!("{name}_serve.log")))
+}
+
+fn stage_quantiles(body: &str) -> BTreeMap<String, StageQuantiles> {
+    scrape::stage_histograms(body, "chon_stage_latency_us", "stage")
+        .iter()
+        .map(|(stage, snap)| (stage.clone(), StageQuantiles::of(snap)))
+        .collect()
+}
+
+/// Poll a counter family's total until it reaches `min` or the timeout
+/// passes; returns the last observed value either way.
+fn wait_total(server: &ServerProc, family: &str, min: f64, timeout: Duration) -> f64 {
+    let deadline = Instant::now() + timeout;
+    let mut last = 0.0;
+    loop {
+        if let Ok(body) = server.scrape_metrics() {
+            last = client::metric_total(&body, family).unwrap_or(0.0);
+            if last >= min {
+                return last;
+            }
+        }
+        if Instant::now() >= deadline {
+            return last;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Standard scenario epilogue: scrape stage histograms, stop the server
+/// gracefully, collect its resource usage, assemble the result.
+fn finish(
+    name: &str,
+    kind: &str,
+    mut server: ServerProc,
+    report: &LoadReport,
+    digest: u64,
+    first_err: Option<String>,
+    mut checks: Vec<(String, bool)>,
+) -> Result<ScenarioResult> {
+    let stages = match server.scrape_metrics() {
+        Ok(body) => stage_quantiles(&body),
+        Err(_) => BTreeMap::new(),
+    };
+    if let Some(e) = first_err {
+        // surface the first failure's text as a (failed) named check so
+        // the summary says *what* broke, not just how many
+        checks.push((format!("first-error: {e}"), false));
+    }
+    server.stop()?;
+    let usage = server.usage();
+    Ok(ScenarioResult::from_parts(
+        name, kind, report, stages, &usage, digest, checks,
+    ))
+}
+
+fn copy_dir(from: &Path, to: &Path) -> Result<()> {
+    std::fs::create_dir_all(to)
+        .with_context(|| format!("creating {}", to.display()))?;
+    for entry in std::fs::read_dir(from)
+        .with_context(|| format!("reading {}", from.display()))?
+    {
+        let entry = entry?;
+        let src = entry.path();
+        let dst = to.join(entry.file_name());
+        if entry.file_type()?.is_dir() {
+            copy_dir(&src, &dst)?;
+        } else {
+            std::fs::copy(&src, &dst)
+                .with_context(|| format!("copying {}", src.display()))?;
+        }
+    }
+    Ok(())
+}
+
+// ---- the scenarios ----
+
+/// Deterministic fan-out/fan-in: every worker fires its burst at t=0,
+/// all requests race through batching at once, all must come back.
+fn run_fanout(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("fanout");
+    let workers = ctx.n(6, 16);
+    let per = ctx.n(3, 6);
+    let mut reqs = Vec::new();
+    for _ in 0..workers * per {
+        let words = 1 + rng.below(5);
+        reqs.push(Req {
+            at_us: 0,
+            prompt: prompt_words(&mut rng, words),
+            max_tokens: 6,
+            model: None,
+            session: None,
+        });
+    }
+    let schedule = Schedule { reqs, workers };
+    let digest = schedule.digest();
+    let total = schedule.reqs.len() as f64;
+
+    let server = spawn_server(ctx, "fanout", &default_spec(ctx))?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let served = wait_total(&server, "chon_requests_total", total, Duration::from_secs(5));
+    let checks = vec![(format!("requests_total>={total}"), served >= total)];
+    finish("fanout", "deterministic", server, &report, digest, first_err, checks)
+}
+
+/// Deterministic session churn: more named sessions than residency,
+/// multiple turns each — the LRU must spill and reload under load.
+fn run_churn(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("churn");
+    let sessions = ctx.n(4, 8);
+    let turns = ctx.n(2, 3);
+    let mut reqs = Vec::new();
+    for t in 0..turns {
+        for i in 0..sessions {
+            let words = 1 + rng.below(4);
+            reqs.push(Req {
+                at_us: ((t * sessions + i) as u64) * 3_000,
+                prompt: prompt_words(&mut rng, words),
+                max_tokens: 5,
+                model: None,
+                session: Some(format!("churn_{i}")),
+            });
+        }
+    }
+    let schedule = Schedule { reqs, workers: 4 };
+    let digest = schedule.digest();
+
+    let spec = ServeSpec {
+        max_resident_sessions: 2,
+        spill_dir: Some(ctx.out.join("churn_spill")),
+        ..default_spec(ctx)
+    };
+    let server = spawn_server(ctx, "churn", &spec)?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let ev = wait_total(&server, "chon_session_evictions_total", 1.0, Duration::from_secs(5));
+    let rl = wait_total(&server, "chon_session_reloads_total", 1.0, Duration::from_secs(5));
+    let checks = vec![
+        ("evictions>0".to_string(), ev > 0.0),
+        ("session_reloads>0".to_string(), rl > 0.0),
+    ];
+    finish("churn", "deterministic", server, &report, digest, first_err, checks)
+}
+
+/// Stochastic Poisson arrivals: seeded exponential inter-arrival gaps,
+/// open-loop-ish replay across 8 workers.
+fn run_poisson(ctx: &Ctx) -> Result<ScenarioResult> {
+    let n = ctx.n(24, 96);
+    let mean_us = if ctx.quick { 8_000.0 } else { 12_000.0 };
+    let schedule = poisson_schedule(ctx.seed, n, mean_us, 8);
+    let digest = schedule.digest();
+
+    let server = spawn_server(ctx, "poisson", &default_spec(ctx))?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let served = wait_total(&server, "chon_requests_total", n as f64, Duration::from_secs(5));
+    let checks = vec![(format!("requests_total>={n}"), served >= n as f64)];
+    finish("poisson", "stochastic", server, &report, digest, first_err, checks)
+}
+
+/// Ragged prompt-length mix: the product-of-uniforms length law gives a
+/// long tail (most prompts short, a few 100-word monsters), so prefill
+/// group admission sees wildly uneven work.
+fn run_ragged(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("ragged");
+    let n = ctx.n(16, 48);
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let words = 1 + rng.below(11) * rng.below(11);
+        let max_tokens = [4usize, 6, 12][rng.below(3)];
+        reqs.push(Req {
+            at_us: (i as u64) * 2_000,
+            prompt: prompt_words(&mut rng, words),
+            max_tokens,
+            model: None,
+            session: None,
+        });
+    }
+    let schedule = Schedule { reqs, workers: 6 };
+    let digest = schedule.digest();
+
+    let server = spawn_server(ctx, "ragged", &default_spec(ctx))?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let served = wait_total(&server, "chon_requests_total", n as f64, Duration::from_secs(5));
+    let checks = vec![(format!("requests_total>={n}"), served >= n as f64)];
+    finish("ragged", "stochastic", server, &report, digest, first_err, checks)
+}
+
+/// Multi-model spray: two registry models (aliases of the same
+/// checkpoint) take alternating traffic; per-model accounting must see
+/// both.
+fn run_spray(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("spray");
+    let n = ctx.n(16, 48);
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let words = 1 + rng.below(5);
+        let model = if i % 2 == 0 { "alpha" } else { "beta" };
+        reqs.push(Req {
+            at_us: (i as u64) * 1_500,
+            prompt: prompt_words(&mut rng, words),
+            max_tokens: 5,
+            model: Some(model.to_string()),
+            session: None,
+        });
+    }
+    let schedule = Schedule { reqs, workers: 4 };
+    let digest = schedule.digest();
+
+    let spec = ServeSpec {
+        checkpoint: None,
+        models: vec![
+            ("alpha".to_string(), ctx.ckpt.clone()),
+            ("beta".to_string(), ctx.ckpt.clone()),
+        ],
+        ..Default::default()
+    };
+    let server = spawn_server(ctx, "spray", &spec)?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let body = server.scrape_metrics().unwrap_or_default();
+    let alpha = client::metric_value(&body, "chon_requests_total{model=\"alpha\"}")
+        .unwrap_or(0.0);
+    let beta = client::metric_value(&body, "chon_requests_total{model=\"beta\"}")
+        .unwrap_or(0.0);
+    let checks = vec![
+        ("alpha_requests>0".to_string(), alpha > 0.0),
+        ("beta_requests>0".to_string(), beta > 0.0),
+    ];
+    finish("spray", "stochastic", server, &report, digest, first_err, checks)
+}
+
+/// Eviction storm: `--max-kv-tokens 1` makes every idle named session
+/// over-budget (GLA session cost is its row count), so each turn spills
+/// the previous session — disk churn as the steady state.
+fn run_evict_storm(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("evict_storm");
+    let sessions = ctx.n(4, 8);
+    let turns = ctx.n(2, 3);
+    let mut reqs = Vec::new();
+    for t in 0..turns {
+        for i in 0..sessions {
+            let words = 1 + rng.below(4);
+            reqs.push(Req {
+                at_us: ((t * sessions + i) as u64) * 2_000,
+                prompt: prompt_words(&mut rng, words),
+                max_tokens: 4,
+                model: None,
+                session: Some(format!("storm_{i}")),
+            });
+        }
+    }
+    let schedule = Schedule { reqs, workers: 4 };
+    let digest = schedule.digest();
+
+    let spec = ServeSpec {
+        max_kv_tokens: 1,
+        spill_dir: Some(ctx.out.join("storm_spill")),
+        ..default_spec(ctx)
+    };
+    let server = spawn_server(ctx, "evict_storm", &spec)?;
+    let (report, first_err) = run_workload(server.port, &schedule, ctx.inject_latency_ms);
+    let ev = wait_total(
+        &server,
+        "chon_session_evictions_total",
+        sessions as f64,
+        Duration::from_secs(5),
+    );
+    let rl = wait_total(&server, "chon_session_reloads_total", 1.0, Duration::from_secs(5));
+    let checks = vec![
+        (format!("evictions>={sessions}"), ev >= sessions as f64),
+        ("session_reloads>0".to_string(), rl > 0.0),
+    ];
+    finish("evict_storm", "chaos", server, &report, digest, first_err, checks)
+}
+
+/// Hot-reload under load: a republished checkpoint (a resumed `chon
+/// train` into the same parent dir bumps the generation) must be picked
+/// up by the reload probe while traffic flows, without failing requests.
+fn run_reload_under_load(ctx: &Ctx) -> Result<ScenarioResult> {
+    let mut rng = ctx.rng("reload");
+    // private checkpoint copy: the republish must not touch the shared
+    // checkpoint other scenarios serve from. Normalized to
+    // parent-with-one-step layout (resolve handles leaf or parent input)
+    // so the resumed train's higher-step sibling is what the server's
+    // reload probe discovers.
+    let leaf = crate::runtime::ckptdir::resolve(&ctx.ckpt)?;
+    let ckpt = ctx.out.join("reload_ckpt");
+    let leaf_name = leaf
+        .file_name()
+        .context("checkpoint dir has no basename")?
+        .to_owned();
+    copy_dir(&leaf, &ckpt.join(leaf_name))?;
+
+    let n = ctx.n(12, 32);
+    let mut reqs = Vec::new();
+    for i in 0..n {
+        let words = 1 + rng.below(4);
+        reqs.push(Req {
+            at_us: (i as u64) * 25_000, // ~25 ms apart: spans the republish
+            prompt: prompt_words(&mut rng, words),
+            max_tokens: 5,
+            model: None,
+            session: None,
+        });
+    }
+    let schedule = Schedule { reqs, workers: 4 };
+    let digest = schedule.digest();
+
+    let spec = ServeSpec {
+        checkpoint: Some(ckpt.clone()),
+        reload_poll_ms: 50,
+        ..Default::default()
+    };
+    let server = spawn_server(ctx, "reload", &spec)?;
+
+    // traffic on a scoped thread while the republish runs in this one
+    let port = server.port;
+    let inject = ctx.inject_latency_ms;
+    let mut report = LoadReport::default();
+    let mut first_err = None;
+    let mut republish = Ok(());
+    std::thread::scope(|s| {
+        let load = s.spawn(|| run_workload(port, &schedule, inject));
+        republish = run_tool(
+            &ctx.bin,
+            &[
+                "train".into(),
+                "--steps".into(),
+                "2".into(),
+                "--model".into(),
+                ctx.model.clone(),
+                "--recipe".into(),
+                ctx.recipe.clone(),
+                "--seed".into(),
+                ctx.seed.to_string(),
+                "--resume".into(),
+                ckpt.display().to_string(),
+                "--checkpoint-dir".into(),
+                ckpt.display().to_string(),
+                "--out-dir".into(),
+                ctx.out.join("reload_runs").display().to_string(),
+                "--diag-every".into(),
+                "0".into(),
+                "--eval-every".into(),
+                "0".into(),
+                "--log-every".into(),
+                "0".into(),
+            ],
+            &ctx.out.join("republish.log"),
+        );
+        (report, first_err) = load.join().expect("workload thread panicked");
+    });
+    republish.context("republishing checkpoint during load")?;
+
+    // the 50 ms probe must notice the new generation
+    let reloads = wait_total(
+        &server,
+        "chon_model_reloads_total",
+        1.0,
+        Duration::from_secs(10),
+    );
+
+    // post-reload burst: the reloaded engine answers traffic
+    let mut post = Vec::new();
+    for i in 0..4u64 {
+        let words = 1 + rng.below(4);
+        post.push(Req {
+            at_us: i * 2_000,
+            prompt: prompt_words(&mut rng, words),
+            max_tokens: 5,
+            model: None,
+            session: None,
+        });
+    }
+    let (post_report, post_err) =
+        run_workload(server.port, &Schedule { reqs: post, workers: 2 }, inject);
+    report.merge(&post_report);
+    report.sort_latencies();
+    first_err = first_err.or(post_err);
+
+    let checks = vec![("model_reloads>0".to_string(), reloads > 0.0)];
+    finish("reload", "chaos", server, &report, digest, first_err, checks)
+}
+
+/// Kill-and-resume mid-stream: SIGKILL the server while a generation is
+/// streaming, restart it on the same checkpoint + spill dir, and require
+/// a named session (spilled before the kill) to continue bit-identically
+/// to an uninterrupted reference server.
+fn run_kill_resume(ctx: &Ctx) -> Result<ScenarioResult> {
+    let spill = ctx.out.join("kr_spill");
+    let spec = ServeSpec {
+        max_resident_sessions: 1,
+        spill_dir: Some(spill),
+        ..default_spec(ctx)
+    };
+    let p1 = "the quick brown ";
+    let p2 = "and then the ";
+    let (turn_tokens, stream_tokens) = (8, 64);
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut checks: Vec<(String, bool)> = Vec::new();
+    // fixed request sequence — digest it like any other schedule
+    let digest = Schedule {
+        reqs: vec![
+            Req {
+                at_us: 0,
+                prompt: p1.into(),
+                max_tokens: turn_tokens,
+                model: None,
+                session: Some("kr_a".into()),
+            },
+            Req {
+                at_us: 0,
+                prompt: p1.into(),
+                max_tokens: turn_tokens,
+                model: None,
+                session: Some("kr_b".into()),
+            },
+            Req {
+                at_us: 0,
+                prompt: p2.into(),
+                max_tokens: turn_tokens,
+                model: None,
+                session: Some("kr_a".into()),
+            },
+        ],
+        workers: 1,
+    }
+    .digest();
+
+    // --- incarnation 1: seed two sessions, force kr_a to spill ---
+    let mut server1 = spawn_server(ctx, "kill_resume_1", &spec)?;
+    let mut conn = client::open_conn(HOST, server1.port)?;
+    let (a1, _, ms) =
+        client::generate_session_on(&mut conn, "kr_a", p1, turn_tokens, 0.0)?;
+    latencies.push(ms);
+    let (_b1, _, ms) =
+        client::generate_session_on(&mut conn, "kr_b", p1, turn_tokens, 0.0)?;
+    latencies.push(ms);
+    // kr_b's check-in evicts kr_a (residency 1); wait for the spill to
+    // be *observable* before killing — a race here would SIGKILL the
+    // server with kr_a still only in memory
+    let ev = wait_total(
+        &server1,
+        "chon_session_evictions_total",
+        1.0,
+        Duration::from_secs(10),
+    );
+    checks.push(("spilled-before-kill".to_string(), ev >= 1.0));
+
+    // --- SIGKILL mid-generation ---
+    let mut raw = client::open_conn(HOST, server1.port)?;
+    raw.write_all(
+        protocol::format_gen_for(None, stream_tokens, 0.0, "some long stream ")
+            .as_bytes(),
+    )?;
+    let mut reader = BufReader::new(raw.try_clone()?);
+    let mut line = String::new();
+    let mut toks = 0;
+    while toks < 2 {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("stream ended before the kill point");
+        }
+        if line.starts_with("TOK ") {
+            toks += 1;
+        } else if line.starts_with("ERR ") {
+            bail!("mid-stream request failed before kill: {line}");
+        }
+    }
+    server1.kill_hard()?; // generation is provably mid-flight
+    let mut usage = server1.usage();
+    drop(server1);
+    // the killed socket must surface the crash, not hang
+    line.clear();
+    let dead = reader.read_line(&mut line).map(|n| n == 0).unwrap_or(true);
+    checks.push(("client-sees-crash".to_string(), dead));
+
+    // --- incarnation 2: same checkpoint, same spill dir ---
+    let mut server2 = spawn_server(ctx, "kill_resume_2", &spec)?;
+    let mut conn2 = client::open_conn(HOST, server2.port)?;
+    let (a2, _, ms) =
+        client::generate_session_on(&mut conn2, "kr_a", p2, turn_tokens, 0.0)?;
+    latencies.push(ms);
+    let reloads = wait_total(
+        &server2,
+        "chon_session_reloads_total",
+        1.0,
+        Duration::from_secs(5),
+    );
+    checks.push(("session-reloaded-from-spill".to_string(), reloads >= 1.0));
+
+    // --- reference: uninterrupted server, own spill dir ---
+    let ref_spec = ServeSpec {
+        spill_dir: Some(ctx.out.join("kr_ref_spill")),
+        ..default_spec(ctx)
+    };
+    let mut reference = spawn_server(ctx, "kill_resume_ref", &ref_spec)?;
+    let mut rconn = client::open_conn(HOST, reference.port)?;
+    let (ra1, _, _) =
+        client::generate_session_on(&mut rconn, "kr_a", p1, turn_tokens, 0.0)?;
+    let (_rb1, _, _) =
+        client::generate_session_on(&mut rconn, "kr_b", p1, turn_tokens, 0.0)?;
+    let (ra2, _, _) =
+        client::generate_session_on(&mut rconn, "kr_a", p2, turn_tokens, 0.0)?;
+    reference.stop()?;
+    checks.push(("turn1-identical".to_string(), a1 == ra1));
+    checks.push(("resume-bit-identical".to_string(), a2 == ra2));
+
+    // assemble by hand: this scenario's traffic is scripted, not a
+    // Schedule replay, but the summary shape is the same
+    let stages = match server2.scrape_metrics() {
+        Ok(body) => stage_quantiles(&body),
+        Err(_) => BTreeMap::new(),
+    };
+    server2.stop()?;
+    usage.merge(&server2.usage());
+    let mut report = LoadReport {
+        latencies_ms: latencies,
+        tokens: 3 * turn_tokens,
+        ..Default::default()
+    };
+    report.wall_s = report.latencies_ms.iter().sum::<f64>() / 1e3;
+    report.sort_latencies();
+    // usage already merged across both incarnations
+    Ok(ScenarioResult::from_parts(
+        "kill_resume",
+        "chaos",
+        &report,
+        stages,
+        &usage,
+        digest,
+        checks,
+    ))
+}
+
+/// One registered scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    /// "deterministic" | "stochastic" | "chaos"
+    pub kind: &'static str,
+    pub help: &'static str,
+    pub run: fn(&Ctx) -> Result<ScenarioResult>,
+}
+
+/// Every scenario, in execution order.
+pub fn registry() -> &'static [Scenario] {
+    &[
+        Scenario {
+            name: "fanout",
+            kind: "deterministic",
+            help: "simultaneous burst from N workers, all must fan back in",
+            run: run_fanout,
+        },
+        Scenario {
+            name: "churn",
+            kind: "deterministic",
+            help: "more named sessions than residency: LRU spill + reload under load",
+            run: run_churn,
+        },
+        Scenario {
+            name: "poisson",
+            kind: "stochastic",
+            help: "seeded Poisson arrivals over 8 workers",
+            run: run_poisson,
+        },
+        Scenario {
+            name: "ragged",
+            kind: "stochastic",
+            help: "long-tail prompt-length mix with varied token budgets",
+            run: run_ragged,
+        },
+        Scenario {
+            name: "spray",
+            kind: "stochastic",
+            help: "multi-model spray across two registry models",
+            run: run_spray,
+        },
+        Scenario {
+            name: "evict_storm",
+            kind: "chaos",
+            help: "--max-kv-tokens 1: every idle session spills, every turn reloads",
+            run: run_evict_storm,
+        },
+        Scenario {
+            name: "reload",
+            kind: "chaos",
+            help: "checkpoint republished mid-traffic; hot reload must land",
+            run: run_reload_under_load,
+        },
+        Scenario {
+            name: "kill_resume",
+            kind: "chaos",
+            help: "SIGKILL mid-stream, restart, named session resumes bit-identically",
+            run: run_kill_resume,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_is_seed_deterministic() {
+        let a = poisson_schedule(7, 50, 10_000.0, 8);
+        let b = poisson_schedule(7, 50, 10_000.0, 8);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.reqs.len(), 50);
+        for (x, y) in a.reqs.iter().zip(&b.reqs) {
+            assert_eq!(x.at_us, y.at_us);
+            assert_eq!(x.prompt, y.prompt);
+        }
+        let c = poisson_schedule(8, 50, 10_000.0, 8);
+        assert_ne!(a.digest(), c.digest(), "different seed, different schedule");
+        // arrivals move forward
+        assert!(a.reqs.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+    }
+
+    #[test]
+    fn digest_sees_every_field() {
+        let base = Schedule {
+            reqs: vec![Req {
+                at_us: 5,
+                prompt: "the ".into(),
+                max_tokens: 6,
+                model: None,
+                session: None,
+            }],
+            workers: 2,
+        };
+        let d0 = base.digest();
+        let mut m = base.clone();
+        m.reqs[0].at_us = 6;
+        assert_ne!(m.digest(), d0);
+        let mut m = base.clone();
+        m.reqs[0].prompt = "the  ".into();
+        assert_ne!(m.digest(), d0);
+        let mut m = base.clone();
+        m.reqs[0].max_tokens = 7;
+        assert_ne!(m.digest(), d0);
+        let mut m = base.clone();
+        m.reqs[0].model = Some("alpha".into());
+        assert_ne!(m.digest(), d0);
+        let mut m = base.clone();
+        m.reqs[0].session = Some("s".into());
+        assert_ne!(m.digest(), d0);
+        let mut m = base.clone();
+        m.workers = 3;
+        assert_ne!(m.digest(), d0);
+        // None vs empty-string must differ (fold_opt tags presence)
+        let mut m = base.clone();
+        m.reqs[0].session = Some(String::new());
+        assert_ne!(m.digest(), d0);
+    }
+
+    #[test]
+    fn session_pinning_is_stable_and_in_range() {
+        for workers in [1usize, 3, 8] {
+            for id in ["churn_0", "churn_7", "kr_a", "x"] {
+                let w = session_worker(id, workers);
+                assert!(w < workers);
+                assert_eq!(w, session_worker(id, workers));
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_respect_protocol_budget() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let p = prompt_words(&mut rng, 1 + rng.below(11) * rng.below(11));
+            assert!(p.len() <= protocol::MAX_PROMPT_BYTES);
+            assert!(!p.is_empty());
+        }
+    }
+
+    #[test]
+    fn exp_us_has_roughly_the_right_mean() {
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mean = 10_000.0;
+        let total: u64 = (0..n).map(|_| exp_us(&mut rng, mean)).sum();
+        let got = total as f64 / n as f64;
+        assert!((got - mean).abs() < mean * 0.05, "mean {got}");
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_kinds_valid() {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        for s in registry() {
+            assert!(
+                ["deterministic", "stochastic", "chaos"].contains(&s.kind),
+                "{}: {}",
+                s.name,
+                s.kind
+            );
+        }
+        // the ISSUE-mandated suite is all present
+        for want in [
+            "fanout", "churn", "poisson", "ragged", "spray", "evict_storm",
+            "reload", "kill_resume",
+        ] {
+            assert!(names.contains(&want), "{want}");
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Parse `/metrics` scrape bodies back into [`HistSnapshot`]s — the
+//! server-side half of a scenario's latency picture. The harness never
+//! re-derives stage timings: the obs subsystem (PR 7) already measures
+//! queue-wait/prefill/decode/flush per model, so the harness scrapes the
+//! exposition text and de-cumulates the `_bucket` series. Summing
+//! cumulative counts across label sets (models) and then de-cumulating
+//! is exactly a bucket-wise snapshot merge, so per-stage histograms roll
+//! up across models for the summary.
+
+use std::collections::BTreeMap;
+
+use crate::obs::metrics::{bucket_bound, HistSnapshot, N_BUCKETS, N_FINITE};
+
+/// Split one rendered label blob (the text between `{` and `}`) into
+/// (name, value) pairs, honoring the exposition escapes inside values
+/// (`\\`, `\"`, `\n`).
+pub fn parse_labels(blob: &str) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut chars = blob.chars().peekable();
+    loop {
+        // label name up to '='
+        let mut name = String::new();
+        while let Some(&c) = chars.peek() {
+            if c == '=' {
+                break;
+            }
+            chars.next();
+            if c == ',' || c == '"' {
+                return None;
+            }
+            name.push(c);
+        }
+        if chars.next() != Some('=') || chars.next() != Some('"') {
+            return None;
+        }
+        let mut value = String::new();
+        loop {
+            match chars.next()? {
+                '"' => break,
+                '\\' => match chars.next()? {
+                    '\\' => value.push('\\'),
+                    '"' => value.push('"'),
+                    'n' => value.push('\n'),
+                    other => {
+                        // unknown escape: keep both chars, like Prometheus
+                        value.push('\\');
+                        value.push(other);
+                    }
+                },
+                c => value.push(c),
+            }
+        }
+        out.push((name.trim().to_string(), value));
+        match chars.next() {
+            None => return Some(out),
+            Some(',') => continue,
+            Some(_) => return None,
+        }
+    }
+}
+
+/// Map a rendered `le` value back to its bucket index (None for a bound
+/// that is not one of ours — a scrape from an incompatible server).
+fn le_index(le: &str) -> Option<usize> {
+    if le == "+Inf" {
+        return Some(N_FINITE);
+    }
+    let bound: u64 = le.parse().ok()?;
+    (0..N_FINITE).find(|&i| bucket_bound(i) == bound)
+}
+
+/// Reassemble the histograms of `family` from a scrape body, keyed by
+/// the value of `key_label` (e.g. `"stage"`), with all other label sets
+/// (models) merged together. `_sum` series roll up into the snapshot
+/// sums; cumulative `_bucket` counts are summed across label sets first
+/// and de-cumulated once at the end, which equals merging the underlying
+/// snapshots bucket-wise.
+pub fn stage_histograms(
+    body: &str,
+    family: &str,
+    key_label: &str,
+) -> BTreeMap<String, HistSnapshot> {
+    let bucket_prefix = format!("{family}_bucket{{");
+    let sum_prefix = format!("{family}_sum{{");
+    // per key: cumulative count per bucket index
+    let mut cum: BTreeMap<String, [u64; N_BUCKETS]> = BTreeMap::new();
+    let mut sums: BTreeMap<String, u64> = BTreeMap::new();
+    for line in body.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(&bucket_prefix) {
+            let Some((blob, value)) = rest.rsplit_once("} ") else { continue };
+            let Some(labels) = parse_labels(blob) else { continue };
+            let Some(key) =
+                labels.iter().find(|(k, _)| k == key_label).map(|(_, v)| v.clone())
+            else {
+                continue;
+            };
+            let Some(le) = labels.iter().find(|(k, _)| k == "le") else { continue };
+            let Some(i) = le_index(&le.1) else { continue };
+            let Ok(v) = value.trim().parse::<u64>() else { continue };
+            cum.entry(key).or_insert([0; N_BUCKETS])[i] += v;
+        } else if let Some(rest) = line.strip_prefix(&sum_prefix) {
+            let Some((blob, value)) = rest.rsplit_once("} ") else { continue };
+            let Some(labels) = parse_labels(blob) else { continue };
+            let Some(key) =
+                labels.iter().find(|(k, _)| k == key_label).map(|(_, v)| v.clone())
+            else {
+                continue;
+            };
+            if let Ok(v) = value.trim().parse::<u64>() {
+                *sums.entry(key).or_insert(0) += v;
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (key, cum_buckets) in cum {
+        let mut snap = HistSnapshot {
+            sum: sums.get(&key).copied().unwrap_or(0),
+            ..Default::default()
+        };
+        let mut prev = 0u64;
+        for (i, &c) in cum_buckets.iter().enumerate() {
+            snap.buckets[i] = c.saturating_sub(prev);
+            prev = c;
+        }
+        out.insert(key, snap);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::expo::Expo;
+    use crate::obs::metrics::Histogram;
+
+    #[test]
+    fn labels_parse_with_escapes() {
+        let l = parse_labels(r#"model="a\"b\\c",stage="prefill""#).unwrap();
+        assert_eq!(l[0], ("model".into(), "a\"b\\c".into()));
+        assert_eq!(l[1], ("stage".into(), "prefill".into()));
+        assert!(parse_labels("noequals").is_none());
+        assert!(parse_labels(r#"k="unterminated"#).is_none());
+    }
+
+    /// Render two models' stage histograms through the real exposition
+    /// writer, scrape them back, and check the result equals merging the
+    /// snapshots directly — the round-trip contract the harness rests on.
+    #[test]
+    fn scrape_roundtrips_through_expo() {
+        let (pa, pb) = (Histogram::new(), Histogram::new());
+        let da = Histogram::new();
+        for v in [3u64, 90, 4000] {
+            pa.record(v);
+        }
+        for v in [5u64, 5, 1 << 30] {
+            pb.record(v);
+        }
+        da.record(250);
+        let mut e = Expo::new();
+        e.family("chon_stage_latency_us", "histogram", "stages");
+        e.histogram(
+            "chon_stage_latency_us",
+            &[("model", "a"), ("stage", "prefill")],
+            &pa.snapshot(),
+        );
+        e.histogram(
+            "chon_stage_latency_us",
+            &[("model", "b"), ("stage", "prefill")],
+            &pb.snapshot(),
+        );
+        e.histogram(
+            "chon_stage_latency_us",
+            &[("model", "a"), ("stage", "decode_token")],
+            &da.snapshot(),
+        );
+        let body = e.finish();
+
+        let got = stage_histograms(&body, "chon_stage_latency_us", "stage");
+        let mut want_prefill = pa.snapshot();
+        want_prefill.merge(&pb.snapshot());
+        assert_eq!(got["prefill"], want_prefill);
+        assert_eq!(got["decode_token"], da.snapshot());
+        assert_eq!(got.len(), 2);
+        // quantiles work on the reassembled snapshot
+        assert!(got["prefill"].quantile(0.5) >= 5);
+    }
+
+    #[test]
+    fn scrape_ignores_foreign_and_malformed_lines() {
+        let body = "\
+# TYPE chon_stage_latency_us histogram\n\
+chon_stage_latency_us_bucket{model=\"a\",stage=\"prefill\",le=\"1\"} 2\n\
+chon_stage_latency_us_bucket{model=\"a\",stage=\"prefill\",le=\"+Inf\"} 2\n\
+chon_stage_latency_us_bucket{model=\"a\",stage=\"prefill\",le=\"7\"} 9\n\
+chon_stage_latency_us_bucket{model=\"a\",le=\"1\"} 5\n\
+chon_other_bucket{stage=\"x\",le=\"1\"} 5\n\
+chon_stage_latency_us_sum{model=\"a\",stage=\"prefill\"} 2\n\
+garbage\n";
+        let got = stage_histograms(body, "chon_stage_latency_us", "stage");
+        // le="7" is not a log2 bound and the keyless line has no stage:
+        // both ignored; the two valid lines give 2 obs in bucket 0
+        assert_eq!(got.len(), 1);
+        assert_eq!(got["prefill"].buckets[0], 2);
+        assert_eq!(got["prefill"].count(), 2);
+        assert_eq!(got["prefill"].sum, 2);
+    }
+}

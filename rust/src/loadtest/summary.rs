@@ -1,0 +1,556 @@
+//! The machine-readable output of a loadtest run (`summary.json`) and
+//! the SLO gate that diffs two of them (`chon loadtest --check`), the
+//! way `bench-diff` gates microbench medians.
+//!
+//! Schema (v1): a top-level object with `schema`, `seed`, `quick`, and
+//! a `scenarios` array. Each scenario carries client-side latency
+//! percentiles (ms), server-side stage quantiles (µs, scraped from
+//! `/metrics`, factor-of-two bucket resolution), peak RSS + CPU ticks
+//! from `/proc`, the deterministic schedule digest (hex — u64 does not
+//! survive a f64 JSON number), and named pass/fail checks.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::metrics::HistSnapshot;
+use crate::serve::client::{percentile_of, LoadReport};
+use crate::util::json::Json;
+
+/// Client-side latency percentiles of one scenario, in milliseconds.
+/// An empty run reports zeros (JSON cannot carry NaN; `requests_ok == 0`
+/// is the signal that these are vacuous).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize an ascending-sorted latency list.
+    pub fn of(sorted: &[f64]) -> LatencySummary {
+        if sorted.is_empty() {
+            return LatencySummary::default();
+        }
+        LatencySummary {
+            p50_ms: percentile_of(sorted, 0.50),
+            p90_ms: percentile_of(sorted, 0.90),
+            p99_ms: percentile_of(sorted, 0.99),
+            p999_ms: percentile_of(sorted, 0.999),
+            max_ms: sorted[sorted.len() - 1],
+        }
+    }
+}
+
+/// Server-side quantiles of one request-path stage, in microseconds
+/// (scraped; log₂-bucket resolution, so values are upper bounds within
+/// 2× of the truth).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageQuantiles {
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub count: u64,
+}
+
+impl StageQuantiles {
+    pub fn of(snap: &HistSnapshot) -> StageQuantiles {
+        StageQuantiles {
+            p50_us: snap.quantile(0.50),
+            p99_us: snap.quantile(0.99),
+            p999_us: snap.quantile(0.999),
+            count: snap.count(),
+        }
+    }
+}
+
+/// Everything one scenario reports into `summary.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// "deterministic" | "stochastic" | "chaos"
+    pub kind: String,
+    /// overall verdict: no failures, no empty responses, at least one
+    /// completed request, every named check true
+    pub ok: bool,
+    pub requests_ok: u64,
+    pub empty: u64,
+    pub failures: u64,
+    pub wall_s: f64,
+    /// 0.0 when the run was empty or instantaneous (see LoadReport)
+    pub throughput_rps: f64,
+    pub latency: LatencySummary,
+    /// per-stage server-side quantiles, merged across models
+    pub stages: BTreeMap<String, StageQuantiles>,
+    pub peak_rss_bytes: u64,
+    pub cpu_ticks: u64,
+    /// digest of the generated request schedule — two runs at the same
+    /// seed must produce the same value (the determinism contract)
+    pub schedule_digest: u64,
+    /// named scenario-specific assertions, e.g. ("evictions>0", true)
+    pub checks: Vec<(String, bool)>,
+}
+
+impl ScenarioResult {
+    /// Assemble from the pieces a scenario run produces.
+    pub fn from_parts(
+        name: &str,
+        kind: &str,
+        report: &LoadReport,
+        stages: BTreeMap<String, StageQuantiles>,
+        usage: &super::resources::Usage,
+        schedule_digest: u64,
+        checks: Vec<(String, bool)>,
+    ) -> ScenarioResult {
+        let ok = report.failures == 0
+            && report.empty_responses == 0
+            && report.requests_ok() > 0
+            && checks.iter().all(|(_, pass)| *pass);
+        ScenarioResult {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            ok,
+            requests_ok: report.requests_ok() as u64,
+            empty: report.empty_responses as u64,
+            failures: report.failures as u64,
+            wall_s: report.wall_s,
+            throughput_rps: report.throughput_rps().unwrap_or(0.0),
+            latency: LatencySummary::of(&report.latencies_ms),
+            stages,
+            peak_rss_bytes: usage.peak_rss_bytes,
+            cpu_ticks: usage.cpu_ticks,
+            schedule_digest,
+            checks,
+        }
+    }
+
+    /// A scenario that died before producing a report (spawn failure,
+    /// supervisor error): recorded as not-ok with the error as a failed
+    /// check, so one broken scenario cannot hide from the summary.
+    pub fn infra_failure(name: &str, kind: &str, err: &str) -> ScenarioResult {
+        ScenarioResult {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            ok: false,
+            checks: vec![(format!("infra: {err}"), false)],
+            ..Default::default()
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let stages = self
+            .stages
+            .iter()
+            .map(|(stage, q)| {
+                (
+                    stage.clone(),
+                    Json::Obj(vec![
+                        ("p50_us".into(), Json::Num(q.p50_us as f64)),
+                        ("p99_us".into(), Json::Num(q.p99_us as f64)),
+                        ("p999_us".into(), Json::Num(q.p999_us as f64)),
+                        ("count".into(), Json::Num(q.count as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let checks = self
+            .checks
+            .iter()
+            .map(|(name, pass)| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(name.clone())),
+                    ("pass".into(), Json::Bool(*pass)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("kind".into(), Json::Str(self.kind.clone())),
+            ("ok".into(), Json::Bool(self.ok)),
+            ("requests_ok".into(), Json::Num(self.requests_ok as f64)),
+            ("empty".into(), Json::Num(self.empty as f64)),
+            ("failures".into(), Json::Num(self.failures as f64)),
+            ("wall_s".into(), Json::Num(self.wall_s)),
+            ("throughput_rps".into(), Json::Num(self.throughput_rps)),
+            (
+                "latency_ms".into(),
+                Json::Obj(vec![
+                    ("p50".into(), Json::Num(self.latency.p50_ms)),
+                    ("p90".into(), Json::Num(self.latency.p90_ms)),
+                    ("p99".into(), Json::Num(self.latency.p99_ms)),
+                    ("p999".into(), Json::Num(self.latency.p999_ms)),
+                    ("max".into(), Json::Num(self.latency.max_ms)),
+                ]),
+            ),
+            ("stages".into(), Json::Obj(stages)),
+            ("peak_rss_bytes".into(), Json::Num(self.peak_rss_bytes as f64)),
+            ("cpu_ticks".into(), Json::Num(self.cpu_ticks as f64)),
+            (
+                "schedule_digest".into(),
+                Json::Str(format!("{:016x}", self.schedule_digest)),
+            ),
+            ("checks".into(), Json::Arr(checks)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ScenarioResult> {
+        let str_field = |key: &str| -> Result<String> {
+            Ok(v.get(key)
+                .and_then(|x| x.as_str())
+                .with_context(|| format!("scenario missing {key}"))?
+                .to_string())
+        };
+        let num_field = |key: &str| -> Result<f64> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("scenario missing {key}"))
+        };
+        let lat = v.get("latency_ms").context("scenario missing latency_ms")?;
+        let lat_field = |key: &str| -> Result<f64> {
+            lat.get(key)
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("latency_ms missing {key}"))
+        };
+        let mut stages = BTreeMap::new();
+        if let Some(Json::Obj(fields)) = v.get("stages") {
+            for (stage, q) in fields {
+                let f = |key: &str| -> Result<u64> {
+                    Ok(q.get(key)
+                        .and_then(|x| x.as_f64())
+                        .with_context(|| format!("stage {stage} missing {key}"))?
+                        as u64)
+                };
+                stages.insert(
+                    stage.clone(),
+                    StageQuantiles {
+                        p50_us: f("p50_us")?,
+                        p99_us: f("p99_us")?,
+                        p999_us: f("p999_us")?,
+                        count: f("count")?,
+                    },
+                );
+            }
+        }
+        let mut checks = Vec::new();
+        if let Some(Json::Arr(items)) = v.get("checks") {
+            for c in items {
+                let name = c
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .context("check missing name")?;
+                let pass = match c.get("pass") {
+                    Some(Json::Bool(b)) => *b,
+                    _ => bail!("check missing pass"),
+                };
+                checks.push((name.to_string(), pass));
+            }
+        }
+        let ok = match v.get("ok") {
+            Some(Json::Bool(b)) => *b,
+            _ => bail!("scenario missing ok"),
+        };
+        let digest_hex = str_field("schedule_digest")?;
+        let schedule_digest = u64::from_str_radix(&digest_hex, 16)
+            .with_context(|| format!("bad schedule_digest {digest_hex:?}"))?;
+        Ok(ScenarioResult {
+            name: str_field("name")?,
+            kind: str_field("kind")?,
+            ok,
+            requests_ok: num_field("requests_ok")? as u64,
+            empty: num_field("empty")? as u64,
+            failures: num_field("failures")? as u64,
+            wall_s: num_field("wall_s")?,
+            throughput_rps: num_field("throughput_rps")?,
+            latency: LatencySummary {
+                p50_ms: lat_field("p50")?,
+                p90_ms: lat_field("p90")?,
+                p99_ms: lat_field("p99")?,
+                p999_ms: lat_field("p999")?,
+                max_ms: lat_field("max")?,
+            },
+            stages,
+            peak_rss_bytes: num_field("peak_rss_bytes")? as u64,
+            cpu_ticks: num_field("cpu_ticks")? as u64,
+            schedule_digest,
+            checks,
+        })
+    }
+}
+
+/// One whole loadtest run.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub seed: u64,
+    pub quick: bool,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+/// Bump when the JSON layout changes incompatibly.
+const SCHEMA_VERSION: u64 = 1;
+
+impl Summary {
+    pub fn all_ok(&self) -> bool {
+        !self.scenarios.is_empty() && self.scenarios.iter().all(|s| s.ok)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ScenarioResult> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    pub fn render(&self) -> String {
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("quick".into(), Json::Bool(self.quick)),
+            (
+                "scenarios".into(),
+                Json::Arr(self.scenarios.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+        .render_pretty()
+    }
+
+    pub fn parse(text: &str) -> Result<Summary> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let schema = v
+            .get("schema")
+            .and_then(|x| x.as_f64())
+            .context("summary missing schema")? as u64;
+        if schema != SCHEMA_VERSION {
+            bail!("summary schema {schema} != supported {SCHEMA_VERSION}");
+        }
+        let seed = v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        let quick = matches!(v.get("quick"), Some(Json::Bool(true)));
+        let mut scenarios = Vec::new();
+        for s in v
+            .get("scenarios")
+            .and_then(|x| x.as_arr())
+            .context("summary missing scenarios")?
+        {
+            scenarios.push(ScenarioResult::from_json(s)?);
+        }
+        Ok(Summary { seed, quick, scenarios })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        std::fs::write(path, self.render())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn read(path: &Path) -> Result<Summary> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Summary::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// RSS regressions smaller than this are noise (allocator round-off,
+/// page-cache luck), whatever the percentage says.
+const RSS_SLACK_BYTES: u64 = 16 << 20;
+
+/// Diff `current` against `baseline`: every returned string is one SLO
+/// violation. Latency percentiles (p50/p99/p999) regress when they
+/// exceed the baseline by more than `tol_pct` percent AND more than
+/// `abs_ms` milliseconds — the absolute floor keeps micro-latency
+/// scenarios (2 ms p50) from failing on scheduler jitter that a
+/// percentage alone would flag. Peak RSS gates on `tol_pct` with a
+/// 16 MiB floor. CPU ticks are reported in the summary but not gated
+/// (tick totals scale with runner core speed, not with regressions).
+pub fn check(
+    baseline: &Summary,
+    current: &Summary,
+    tol_pct: f64,
+    abs_ms: f64,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    for base in &baseline.scenarios {
+        let Some(cur) = current.get(&base.name) else {
+            violations.push(format!("scenario {} missing from current run", base.name));
+            continue;
+        };
+        if !cur.ok {
+            let failed: Vec<&str> = cur
+                .checks
+                .iter()
+                .filter(|(_, pass)| !pass)
+                .map(|(name, _)| name.as_str())
+                .collect();
+            violations.push(format!(
+                "scenario {} not ok ({} failures, {} empty, failed checks: [{}])",
+                cur.name,
+                cur.failures,
+                cur.empty,
+                failed.join(", ")
+            ));
+            continue;
+        }
+        for (what, b, c) in [
+            ("p50", base.latency.p50_ms, cur.latency.p50_ms),
+            ("p99", base.latency.p99_ms, cur.latency.p99_ms),
+            ("p999", base.latency.p999_ms, cur.latency.p999_ms),
+        ] {
+            let over_pct = c > b * (1.0 + tol_pct / 100.0);
+            let over_abs = c - b > abs_ms;
+            if over_pct && over_abs {
+                violations.push(format!(
+                    "{}: latency {what} regressed {b:.2} -> {c:.2} ms \
+                     (>{tol_pct}% and >{abs_ms} ms)",
+                    cur.name
+                ));
+            }
+        }
+        let rss_limit = (base.peak_rss_bytes as f64 * (1.0 + tol_pct / 100.0)) as u64;
+        if cur.peak_rss_bytes > rss_limit
+            && cur.peak_rss_bytes - base.peak_rss_bytes > RSS_SLACK_BYTES
+        {
+            violations.push(format!(
+                "{}: peak RSS regressed {} -> {} bytes (>{tol_pct}% and >16 MiB)",
+                cur.name, base.peak_rss_bytes, cur.peak_rss_bytes
+            ));
+        }
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_result(name: &str, p99: f64) -> ScenarioResult {
+        let mut stages = BTreeMap::new();
+        stages.insert(
+            "prefill".to_string(),
+            StageQuantiles { p50_us: 512, p99_us: 2048, p999_us: 4096, count: 24 },
+        );
+        ScenarioResult {
+            name: name.into(),
+            kind: "deterministic".into(),
+            ok: true,
+            requests_ok: 24,
+            empty: 0,
+            failures: 0,
+            wall_s: 1.5,
+            throughput_rps: 16.0,
+            latency: LatencySummary {
+                p50_ms: 4.0,
+                p90_ms: 9.0,
+                p99_ms: p99,
+                p999_ms: p99 * 1.5,
+                max_ms: p99 * 2.0,
+            },
+            stages,
+            peak_rss_bytes: 64 << 20,
+            cpu_ticks: 120,
+            schedule_digest: 0xDEAD_BEEF_0123_4567,
+            checks: vec![("requests>=total".into(), true)],
+        }
+    }
+
+    fn sample_summary(p99: f64) -> Summary {
+        Summary {
+            seed: 42,
+            quick: true,
+            scenarios: vec![sample_result("fanout", p99), sample_result("poisson", p99)],
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrip() {
+        let s = sample_summary(12.0);
+        let back = Summary::parse(&s.render()).unwrap();
+        assert_eq!(back.seed, 42);
+        assert!(back.quick);
+        assert_eq!(back.scenarios.len(), 2);
+        let f = back.get("fanout").unwrap();
+        assert_eq!(f.latency, s.scenarios[0].latency);
+        assert_eq!(f.stages, s.scenarios[0].stages);
+        assert_eq!(f.schedule_digest, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(f.checks, s.scenarios[0].checks);
+        assert!(back.all_ok());
+    }
+
+    #[test]
+    fn empty_latency_summary_is_zero_not_nan() {
+        let l = LatencySummary::of(&[]);
+        assert_eq!(l, LatencySummary::default());
+        // and it must render to valid JSON
+        let mut r = sample_result("x", 1.0);
+        r.latency = l;
+        let s = Summary { scenarios: vec![r], ..Default::default() };
+        assert!(Summary::parse(&s.render()).is_ok());
+    }
+
+    #[test]
+    fn check_passes_on_identical_runs() {
+        let s = sample_summary(12.0);
+        assert!(check(&s, &s, 50.0, 5.0).is_empty());
+    }
+
+    #[test]
+    fn check_fails_on_latency_regression() {
+        let base = sample_summary(12.0);
+        let cur = sample_summary(120.0); // 10x p99
+        let v = check(&base, &cur, 50.0, 5.0);
+        assert!(!v.is_empty());
+        assert!(v.iter().any(|m| m.contains("p99")), "{v:?}");
+    }
+
+    #[test]
+    fn check_allows_small_absolute_jitter() {
+        let base = sample_summary(2.0);
+        // 2 -> 3.5 ms p99 is +75% but only +1.5 ms: under the 5 ms floor
+        let cur = sample_summary(3.5);
+        assert!(check(&base, &cur, 50.0, 5.0).is_empty());
+    }
+
+    #[test]
+    fn check_fails_on_missing_or_broken_scenario() {
+        let base = sample_summary(12.0);
+        let mut cur = sample_summary(12.0);
+        cur.scenarios.remove(1);
+        let v = check(&base, &cur, 50.0, 5.0);
+        assert!(v.iter().any(|m| m.contains("missing")), "{v:?}");
+
+        let mut broken = sample_summary(12.0);
+        broken.scenarios[0].ok = false;
+        broken.scenarios[0].checks.push(("resume-bit-identical".into(), false));
+        let v = check(&base, &broken, 50.0, 5.0);
+        assert!(
+            v.iter().any(|m| m.contains("not ok") && m.contains("resume")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn check_gates_rss_with_floor() {
+        let base = sample_summary(12.0);
+        let mut cur = sample_summary(12.0);
+        // +10 MiB at +15%: above 0% tolerance? pct yes at tol 10, but
+        // under the 16 MiB floor -> pass
+        cur.scenarios[0].peak_rss_bytes = (64 << 20) + (10 << 20);
+        assert!(check(&base, &cur, 10.0, 5.0).is_empty());
+        // +64 MiB (2x): both pct and floor exceeded -> violation
+        cur.scenarios[0].peak_rss_bytes = 128 << 20;
+        let v = check(&base, &cur, 10.0, 5.0);
+        assert!(v.iter().any(|m| m.contains("RSS")), "{v:?}");
+    }
+
+    #[test]
+    fn infra_failure_is_never_ok() {
+        let r = ScenarioResult::infra_failure("evict_storm", "chaos", "spawn failed");
+        assert!(!r.ok);
+        let s = Summary { scenarios: vec![r], ..Default::default() };
+        assert!(!s.all_ok());
+        let back = Summary::parse(&s.render()).unwrap();
+        assert!(!back.scenarios[0].ok);
+        assert!(back.scenarios[0].checks[0].0.contains("spawn failed"));
+    }
+}

@@ -8,6 +8,7 @@
 //!   diag            longitudinal diagnostics run (high probe frequency)
 //!   serve           checkpoint-backed inference server (request batching)
 //!   client          protocol client / load generator
+//!   loadtest        scenario + chaos load harness with SLO gates
 //!   bench-diff      gate bench JSON against the checked-in baseline
 //!   info            list available models/recipes (or pjrt artifacts)
 //!
@@ -38,6 +39,8 @@ COMMANDS:
   diag           longitudinal diagnostics (diag every 10 steps)
   serve          serve a checkpoint over TCP + HTTP with request batching
   client         talk to a server; --requests N turns it into a load gen
+  loadtest       run the scenario/chaos load harness against spawned
+                 servers; writes OUT_DIR/loadtest/summary.json
   bench-diff     diff a bench JSON report against the checked-in baseline
   info           list models/recipes (native) or artifacts (pjrt)
   help           this text
@@ -95,6 +98,25 @@ BENCH-DIFF FLAGS:
   --baseline FILE   (default benches/baseline/perf_baseline.json)
   --current FILE    (default runs/bench/perf.json)
   --tolerance PCT   (default 25; fail on >PCT% median regression)
+
+LOADTEST FLAGS:
+  --scenario NAME   run one scenario (repeatable; default: all of
+                    fanout churn poisson ragged spray evict_storm
+                    reload kill_resume)
+  --quick           smaller workloads, same coverage (CI smoke mode)
+  --checkpoint DIR  serve this checkpoint (default: train a fresh tiny
+                    one under OUT_DIR/loadtest/ckpt)
+  --seed N          schedules are a pure function of the seed: same
+                    seed, same request schedule (pinned by the
+                    schedule_digest field in summary.json)
+  --check FILE      gate mode: diff a summary against baseline FILE,
+                    bench-diff style (exit 1 on SLO violations)
+  --current FILE    summary to gate (default OUT_DIR/loadtest/summary.json)
+  --tolerance PCT   gate: latency/RSS tolerance (default 50)
+  --abs-ms MS       gate: absolute latency floor — a percentile must be
+                    over tolerance AND over this to fail (default 20)
+  --inject-latency-ms MS  add artificial client-side latency per request
+                    (CI uses this to prove the gate catches regressions)
 
 The native backend runs the tiny GLA/SA training step in pure Rust — no
 artifacts directory and no libxla needed; runs are bit-reproducible for a
@@ -465,6 +487,41 @@ fn main() -> Result<()> {
                 &cfg, "nvfp4", steps, steps, (steps / 6).max(1),
             )?;
             chon::coordinator::finetune::print_gap_trajectory("nvfp4", &points);
+        }
+        "loadtest" => {
+            if let Some(baseline) = &cfg.loadtest_check {
+                // gate mode: diff an existing summary against a baseline
+                let current = cfg.loadtest_current.clone().unwrap_or_else(|| {
+                    cfg.out_dir.join("loadtest").join("summary.json")
+                });
+                return chon::loadtest::check_files(
+                    baseline,
+                    &current,
+                    cfg.slo_tolerance,
+                    cfg.slo_abs_ms,
+                );
+            }
+            let opts = chon::loadtest::LoadtestOpts {
+                scenarios: cfg.loadtest_scenarios.clone(),
+                quick: cfg.quick,
+                seed: cfg.seed,
+                out_root: cfg.out_dir.join("loadtest"),
+                checkpoint: cfg.checkpoint_dir.clone(),
+                bin: None, // spawn servers from this very binary
+                inject_latency_ms: cfg.inject_latency_ms,
+                model: cfg.model.clone(),
+                recipe: cfg.recipe.clone(),
+            };
+            let summary = chon::loadtest::run(&opts)?;
+            if !summary.all_ok() {
+                let failed: Vec<&str> = summary
+                    .scenarios
+                    .iter()
+                    .filter(|s| !s.ok)
+                    .map(|s| s.name.as_str())
+                    .collect();
+                bail!("loadtest scenario(s) failed: {}", failed.join(", "));
+            }
         }
         "eval-suite" => {
             let all = default_recipes(&cfg);

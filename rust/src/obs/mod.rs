@@ -26,7 +26,7 @@ pub mod outliers;
 
 use std::sync::{Arc, Mutex, OnceLock};
 
-use metrics::{Gauge, Histogram};
+use metrics::{Counter, Gauge, Histogram};
 use outliers::OutlierObs;
 
 /// Request-path stage histograms of one served model. Recorded by the
@@ -77,6 +77,10 @@ pub struct ServerObs {
     pub open_conns: Gauge,
     /// largest per-connection out-buffer observed (bytes, high-water)
     pub outbuf_highwater: Gauge,
+    /// connections refused at accept because `--max-conns` was reached
+    /// (each gets a best-effort `ERR busy` / 503 before the close, so
+    /// load-shedding is distinguishable from a crash on both sides)
+    pub conns_rejected: Counter,
 }
 
 /// One server's metric tree.
@@ -156,6 +160,12 @@ impl Registry {
             &[],
             s.outbuf_highwater.get(),
         );
+        e.family(
+            "chon_conns_rejected_total",
+            "counter",
+            "Connections refused at accept because the --max-conns cap was reached.",
+        );
+        e.sample("chon_conns_rejected_total", &[], s.conns_rejected.get());
 
         let mut models: Vec<(String, Arc<ModelObs>)> =
             self.models.lock().unwrap().clone();
@@ -337,11 +347,13 @@ mod tests {
             "chon_reactor_mailbox_depth",
             "chon_reactor_open_conns",
             "chon_reactor_outbuf_highwater_bytes",
+            "chon_conns_rejected_total",
             "chon_stage_latency_us",
         ] {
             assert!(text.contains(&format!("# TYPE {family}")), "{family}");
         }
         assert!(text.contains("chon_reactor_open_conns 2\n"));
+        assert!(text.contains("chon_conns_rejected_total 0\n"));
         assert!(text
             .contains("chon_stage_latency_us_count{model=\"m1\",stage=\"prefill\"} 1\n"));
         // no outlier families unless taps are installed

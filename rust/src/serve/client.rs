@@ -71,6 +71,13 @@ fn connect(host: &str, port: u16) -> Result<TcpStream> {
     Ok(s)
 }
 
+/// Open one protocol connection (nodelay + read timeout applied) — the
+/// library entry point the loadtest harness drives persistent-connection
+/// workloads through.
+pub fn open_conn(host: &str, port: u16) -> Result<TcpStream> {
+    connect(host, port)
+}
+
 /// A fleet of parked idle connections (the connection-scaling mode).
 /// The server must keep every one of them open at zero cost while other
 /// connections run generations.
@@ -398,8 +405,10 @@ pub struct LoadReport {
     pub idle_alive: usize,
 }
 
-/// p-th percentile of an ascending-sorted latency list.
-fn percentile_of(sorted: &[f64], q: f64) -> f64 {
+/// p-th percentile of an ascending-sorted latency list. Empty input is
+/// NaN — callers that serialize (the loadtest summary) must handle the
+/// empty case themselves rather than leak NaN into JSON.
+pub fn percentile_of(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
@@ -408,6 +417,11 @@ fn percentile_of(sorted: &[f64], q: f64) -> f64 {
     sorted[idx]
 }
 
+/// Threshold below which a wall-clock measurement is treated as "no
+/// elapsed time" for throughput math (avoids inf/NaN from dividing by a
+/// duration that rounded to ~0).
+const MIN_WALL_S: f64 = 1e-9;
+
 impl LoadReport {
     pub fn percentile(&self, q: f64) -> f64 {
         percentile_of(&self.latencies_ms, q)
@@ -415,6 +429,47 @@ impl LoadReport {
 
     pub fn requests_ok(&self) -> usize {
         self.latencies_ms.len()
+    }
+
+    /// Sort all latency lists ascending, NaN-safely (`f64::total_cmp`
+    /// orders NaN after every real number instead of panicking the way
+    /// `partial_cmp(..).unwrap()` did).
+    pub fn sort_latencies(&mut self) {
+        self.latencies_ms.sort_by(f64::total_cmp);
+        for lats in self.by_model.values_mut() {
+            lats.sort_by(f64::total_cmp);
+        }
+    }
+
+    /// Requests per second, or None for an empty/zero-duration run.
+    pub fn throughput_rps(&self) -> Option<f64> {
+        (self.requests_ok() > 0 && self.wall_s > MIN_WALL_S)
+            .then(|| self.requests_ok() as f64 / self.wall_s)
+    }
+
+    /// Tokens per second, or None for an empty/zero-duration run.
+    pub fn throughput_tps(&self) -> Option<f64> {
+        (self.requests_ok() > 0 && self.wall_s > MIN_WALL_S)
+            .then(|| self.tokens as f64 / self.wall_s)
+    }
+
+    /// Fold another report into this one (the loadtest harness merges
+    /// per-worker reports). Latencies are re-sorted by the caller via
+    /// `sort_latencies` once all merges are done.
+    pub fn merge(&mut self, other: &LoadReport) {
+        self.latencies_ms.extend_from_slice(&other.latencies_ms);
+        for (model, lats) in &other.by_model {
+            self.by_model
+                .entry(model.clone())
+                .or_default()
+                .extend_from_slice(lats);
+        }
+        self.tokens += other.tokens;
+        self.failures += other.failures;
+        self.empty_responses += other.empty_responses;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.idle_opened += other.idle_opened;
+        self.idle_alive += other.idle_alive;
     }
 }
 
@@ -501,10 +556,7 @@ pub fn run_load(opts: &ClientOpts) -> Result<LoadReport> {
             }
         }
     }
-    report.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    for lats in report.by_model.values_mut() {
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    }
+    report.sort_latencies();
     Ok(report)
 }
 
@@ -518,11 +570,14 @@ pub fn print_report(opts: &ClientOpts, report: &LoadReport) {
         report.wall_s
     );
     if report.requests_ok() > 0 {
-        println!(
-            "throughput {:.1} req/s  {:.0} tok/s",
-            report.requests_ok() as f64 / report.wall_s,
-            report.tokens as f64 / report.wall_s
-        );
+        match (report.throughput_rps(), report.throughput_tps()) {
+            (Some(rps), Some(tps)) => {
+                println!("throughput {rps:.1} req/s  {tps:.0} tok/s")
+            }
+            // requests completed but the wall clock rounded to ~0: a
+            // rate would be inf, so say so instead of printing one
+            _ => println!("throughput n/a (wall clock ~0)"),
+        }
         println!(
             "latency ms  p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
             report.percentile(0.50),
@@ -606,6 +661,70 @@ chon_stage_latency_us_count{model=\"a\",stage=\"prefill\"} 2\n";
         assert!(assert_metrics_progress(&scrape(1, 8), &scrape(1, 8)).is_err());
         // a missing family fails
         assert!(assert_metrics_progress("", &scrape(3, 24)).is_err());
+    }
+
+    #[test]
+    fn nan_latency_sorts_without_panicking() {
+        let mut r = LoadReport {
+            latencies_ms: vec![3.0, f64::NAN, 1.0, 2.0],
+            ..Default::default()
+        };
+        r.by_model.insert("m".into(), vec![f64::NAN, 5.0]);
+        r.sort_latencies(); // partial_cmp(..).unwrap() would panic here
+        assert_eq!(&r.latencies_ms[..3], &[1.0, 2.0, 3.0]);
+        assert!(r.latencies_ms[3].is_nan()); // total_cmp puts NaN last
+        assert_eq!(r.by_model["m"][0], 5.0);
+        // percentiles below the NaN tail stay finite
+        assert_eq!(r.percentile(0.5), 2.0);
+    }
+
+    #[test]
+    fn throughput_is_none_on_empty_or_instant_runs() {
+        let empty = LoadReport { wall_s: 1.0, ..Default::default() };
+        assert_eq!(empty.throughput_rps(), None);
+        assert_eq!(empty.throughput_tps(), None);
+        let instant = LoadReport {
+            latencies_ms: vec![1.0],
+            tokens: 4,
+            wall_s: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(instant.throughput_rps(), None);
+        let ok = LoadReport {
+            latencies_ms: vec![1.0, 2.0],
+            tokens: 10,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(ok.throughput_rps(), Some(1.0));
+        assert_eq!(ok.throughput_tps(), Some(5.0));
+    }
+
+    #[test]
+    fn merge_accumulates_and_takes_max_wall() {
+        let mut a = LoadReport {
+            latencies_ms: vec![2.0],
+            tokens: 3,
+            failures: 1,
+            wall_s: 1.0,
+            ..Default::default()
+        };
+        let mut b = LoadReport {
+            latencies_ms: vec![1.0],
+            tokens: 2,
+            empty_responses: 1,
+            wall_s: 2.5,
+            ..Default::default()
+        };
+        b.by_model.insert("m".into(), vec![1.0]);
+        a.merge(&b);
+        a.sort_latencies();
+        assert_eq!(a.latencies_ms, vec![1.0, 2.0]);
+        assert_eq!(a.tokens, 5);
+        assert_eq!(a.failures, 1);
+        assert_eq!(a.empty_responses, 1);
+        assert_eq!(a.wall_s, 2.5);
+        assert_eq!(a.by_model["m"], vec![1.0]);
     }
 
     /// The per-thread (base + ri) % models indexing partitions the global

@@ -23,6 +23,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::serve::engine::{Engine, Session};
+use crate::serve::protocol;
 
 /// Positions per KV page. Small enough that short sessions stay cheap,
 /// large enough that the per-page bookkeeping is negligible next to the
@@ -174,12 +175,36 @@ impl SessionStore {
         };
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        // A user-supplied spill dir may already hold session files from a
+        // previous process that died without Drop (SIGKILL, OOM): adopt
+        // them, or a named session that was spilled before the crash would
+        // silently restart from scratch after the server comes back on the
+        // same checkpoint. Only protocol-valid ids are adopted — anything
+        // else in the directory is not ours to own. Auto temp dirs are
+        // freshly created per store, so there is nothing to scan.
+        let mut spilled = HashSet::new();
+        if !own_dir {
+            for entry in std::fs::read_dir(&dir)
+                .with_context(|| format!("scanning spill dir {}", dir.display()))?
+            {
+                let path = entry?.path();
+                if path.extension().and_then(|e| e.to_str()) != Some("sess") {
+                    continue;
+                }
+                let Some(id) = path.file_stem().and_then(|s| s.to_str()) else {
+                    continue;
+                };
+                if protocol::valid_session_id(id) {
+                    spilled.insert(id.to_string());
+                }
+            }
+        }
         Ok(SessionStore {
             opts,
             dir,
             own_dir,
             resident: HashMap::new(),
-            spilled: HashSet::new(),
+            spilled,
             resident_kv: 0,
             clock: 0,
             evictions: 0,
@@ -334,5 +359,38 @@ mod tests {
             assert_eq!(a.k, b.k);
             assert_eq!(a.v, b.v);
         }
+    }
+
+    /// A user-supplied spill dir holding files from a SIGKILLed
+    /// predecessor: the new store adopts valid `.sess` files (so named
+    /// sessions resume after a crash-restart) and leaves foreign files
+    /// alone.
+    #[test]
+    fn new_store_adopts_orphaned_spill_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("chon_pages_rescan_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("abc.sess"), b"x").unwrap();
+        std::fs::write(dir.join(".hidden.sess"), b"x").unwrap(); // invalid id
+        std::fs::write(dir.join("notasess.txt"), b"x").unwrap();
+        let store = SessionStore::new(StoreOpts {
+            spill_dir: Some(dir.clone()),
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(store.spilled_len(), 1);
+        drop(store); // drops only the adopted file, not the foreign ones
+        assert!(!dir.join("abc.sess").exists());
+        assert!(dir.join(".hidden.sess").exists());
+        assert!(dir.join("notasess.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An auto (temp) spill dir is fresh per store — nothing is scanned.
+    #[test]
+    fn auto_dir_starts_empty() {
+        let store = SessionStore::new(StoreOpts::default()).unwrap();
+        assert_eq!(store.spilled_len(), 0);
     }
 }

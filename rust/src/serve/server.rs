@@ -71,7 +71,8 @@ pub struct ServeOpts {
     /// drop connections idle longer than this (0 = never)
     pub idle_timeout_ms: u64,
     /// cap on concurrently open connections (0 = unlimited); excess
-    /// accepts are closed immediately
+    /// accepts get a best-effort `ERR busy` / HTTP 503 and are closed
+    /// (counted in `chon_conns_rejected_total`)
     pub max_conns: usize,
 }
 
@@ -498,7 +499,7 @@ impl Reactor {
             match res {
                 Ok((stream, _)) => {
                     if self.max_conns > 0 && self.conns.len() >= self.max_conns {
-                        drop(stream); // over the cap: refuse by closing
+                        self.reject_busy(stream, kind);
                         continue;
                     }
                     self.adopt(stream, kind);
@@ -510,6 +511,37 @@ impl Reactor {
                 }
             }
         }
+    }
+
+    /// Refuse an over-`--max-conns` accept. A silent close is
+    /// indistinguishable from a crash to the client (and to the load
+    /// harness), so send one best-effort shed notice first — `ERR busy`
+    /// on the line protocol, an HTTP 503 on the web front end — and
+    /// count the rejection. The write must not block the reactor: the
+    /// socket goes non-blocking and a partial/failed write is simply
+    /// abandoned (the close still sheds the load either way).
+    fn reject_busy(&mut self, stream: TcpStream, kind: ConnKind) {
+        let mut stream = stream;
+        if stream.set_nonblocking(true).is_ok() {
+            match kind {
+                ConnKind::Line => {
+                    let _ = stream.write(b"ERR busy: connection limit reached\n");
+                }
+                ConnKind::Http => {
+                    let mut buf = Vec::new();
+                    let _ = http::write_response(
+                        &mut buf,
+                        503,
+                        "application/json",
+                        &json_error("busy: connection limit reached"),
+                        false,
+                    );
+                    let _ = stream.write(&buf);
+                }
+            }
+        }
+        self.obs.server.conns_rejected.inc();
+        // dropped here: refuse by closing after the best-effort notice
     }
 
     fn adopt(&mut self, stream: TcpStream, kind: ConnKind) {

@@ -1,0 +1,141 @@
+//! Kill-and-resume mid-stream, as a tier-1 contract (not just a chaos
+//! scenario): SIGKILL a real `chon serve` process while a generation is
+//! streaming, restart it on the same checkpoint + spill directory, and
+//! require a named session that was spilled before the kill to continue
+//! bit-identically to a server that was never interrupted.
+//!
+//! Dogfoods the loadtest supervisor (`loadtest::proc::ServerProc`) so
+//! the harness's own spawn/banner-scan/SIGKILL plumbing is covered by
+//! the tier-1 suite too. The server binary is the real release artifact
+//! via `CARGO_BIN_EXE_chon`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::loadtest::proc::{ServeSpec, ServerProc};
+use chon::serve::{client, protocol};
+
+fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("chon_kr_ckpt_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = "tiny_gla".into();
+    cfg.recipe = "chon".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = 7;
+    cfg.out_dir = std::env::temp_dir().join("chon_kr_runs");
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.train(steps).unwrap();
+    tr.save_checkpoint_to(&root).unwrap()
+}
+
+/// Poll a counter family on the server's /metrics until it reaches
+/// `min` (panics past the deadline — the precondition never held).
+fn wait_counter(server: &ServerProc, family: &str, min: f64) {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        if let Ok(body) = server.scrape_metrics() {
+            if client::metric_total(&body, family).unwrap_or(0.0) >= min {
+                return;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{family} never reached {min}; server log:\n{}",
+            server.log_tail()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn sigkill_mid_stream_then_restart_resumes_sessions_bit_identically() {
+    let ckpt = train_checkpoint("midstream", 12);
+    let bin = PathBuf::from(env!("CARGO_BIN_EXE_chon"));
+    let out = std::env::temp_dir().join("chon_kr_it");
+    let _ = std::fs::remove_dir_all(&out);
+    std::fs::create_dir_all(&out).unwrap();
+
+    let spec = ServeSpec {
+        checkpoint: Some(ckpt.clone()),
+        max_resident_sessions: 1, // the second session's check-in evicts the first
+        spill_dir: Some(out.join("spill")),
+        ..Default::default()
+    };
+    let (p1, p2) = ("the quick brown ", "and then the ");
+
+    // --- incarnation 1: seed kr_a, force it to spill, then die loudly ---
+    let mut server1 = ServerProc::spawn(&bin, &spec, &out.join("serve1.log")).unwrap();
+    let mut conn = client::open_conn("127.0.0.1", server1.port).unwrap();
+    let (a1, n1, _) = client::generate_session_on(&mut conn, "kr_a", p1, 8, 0.0).unwrap();
+    assert_eq!(n1, 8);
+    let (_b1, _, _) = client::generate_session_on(&mut conn, "kr_b", p1, 8, 0.0).unwrap();
+    // the spill must be on disk BEFORE the kill, or the restart has
+    // nothing to resume from — wait for the eviction to be observable
+    wait_counter(&server1, "chon_session_evictions_total", 1.0);
+
+    // start a long generation and SIGKILL with tokens provably in flight
+    let mut raw = client::open_conn("127.0.0.1", server1.port).unwrap();
+    raw.write_all(protocol::format_gen(64, 0.0, "some long stream ").as_bytes())
+        .unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut line = String::new();
+    let mut toks = 0;
+    while toks < 2 {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "stream ended before the kill point"
+        );
+        if line.starts_with("TOK ") {
+            toks += 1;
+        }
+        assert!(!line.starts_with("ERR "), "mid-stream request failed: {line}");
+    }
+    server1.kill_hard().unwrap();
+    // the killed server's socket surfaces the crash (EOF or reset), not a hang
+    line.clear();
+    let ended = reader.read_line(&mut line).map(|n| n == 0).unwrap_or(true);
+    assert!(ended, "expected EOF/reset after SIGKILL, got {line:?}");
+
+    // --- incarnation 2: same checkpoint dir, same spill dir ---
+    let mut server2 = ServerProc::spawn(&bin, &spec, &out.join("serve2.log")).unwrap();
+    let mut conn2 = client::open_conn("127.0.0.1", server2.port).unwrap();
+    let (a2, n2, _) =
+        client::generate_session_on(&mut conn2, "kr_a", p2, 8, 0.0).unwrap();
+    assert_eq!(n2, 8);
+    // and it really came from the spill file, not a fresh session
+    wait_counter(&server2, "chon_session_reloads_total", 1.0);
+    server2.stop().unwrap();
+
+    // --- reference: one uninterrupted server, its own spill dir ---
+    let ref_spec = ServeSpec {
+        checkpoint: Some(ckpt),
+        spill_dir: Some(out.join("ref_spill")),
+        ..Default::default()
+    };
+    let mut reference =
+        ServerProc::spawn(&bin, &ref_spec, &out.join("serve_ref.log")).unwrap();
+    let mut rconn = client::open_conn("127.0.0.1", reference.port).unwrap();
+    let (ra1, _, _) =
+        client::generate_session_on(&mut rconn, "kr_a", p1, 8, 0.0).unwrap();
+    let (_rb1, _, _) =
+        client::generate_session_on(&mut rconn, "kr_b", p1, 8, 0.0).unwrap();
+    let (ra2, _, _) =
+        client::generate_session_on(&mut rconn, "kr_a", p2, 8, 0.0).unwrap();
+    reference.stop().unwrap();
+
+    assert_eq!(a1, ra1, "first turn must match before the crash even matters");
+    assert_eq!(
+        a2, ra2,
+        "continuation after SIGKILL + restart must be bit-identical to an \
+         uninterrupted server"
+    );
+}

@@ -1,0 +1,188 @@
+//! Loadtest harness contracts that hold without spawning subprocesses:
+//! schedule determinism, the workload driver against an in-process
+//! server, the latency-injection hook the CI gate-validation test rides
+//! on, and the end-to-end summary → gate pipeline.
+
+use std::path::PathBuf;
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::loadtest::scenarios::{poisson_schedule, run_workload, Req, Schedule};
+use chon::loadtest::summary::{self, Summary};
+use chon::serve::{client, ModelRegistry, RegistryOpts, ServeOpts, Server};
+
+fn train_checkpoint(tag: &str, steps: usize) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("chon_lth_ckpt_{tag}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = "tiny_gla".into();
+    cfg.recipe = "chon".into();
+    cfg.diag_every = 0;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.seed = 7;
+    cfg.out_dir = std::env::temp_dir().join("chon_lth_runs");
+    let mut tr = Trainer::new(cfg).unwrap();
+    tr.train(steps).unwrap();
+    tr.save_checkpoint_to(&root).unwrap()
+}
+
+fn start_server(ckpt: &PathBuf) -> (u16, std::thread::JoinHandle<String>) {
+    let mut registry = ModelRegistry::new(RegistryOpts {
+        max_batch: 4,
+        max_wait_us: 2000,
+        ..RegistryOpts::default()
+    });
+    registry.register("default", ckpt).unwrap();
+    let server = Server::bind(
+        registry,
+        &ServeOpts { port: 0, http_port: None, ..ServeOpts::default() },
+    )
+    .unwrap();
+    let port = server.port();
+    let h = std::thread::spawn(move || server.run().unwrap());
+    (port, h)
+}
+
+/// Same seed, same schedule — the reproducibility contract `--seed`
+/// promises and `schedule_digest` pins in summary.json.
+#[test]
+fn schedules_are_a_pure_function_of_the_seed() {
+    let a = poisson_schedule(42, 64, 9_000.0, 8);
+    let b = poisson_schedule(42, 64, 9_000.0, 8);
+    assert_eq!(a.digest(), b.digest());
+    for (x, y) in a.reqs.iter().zip(&b.reqs) {
+        assert_eq!((x.at_us, &x.prompt, x.max_tokens), (y.at_us, &y.prompt, y.max_tokens));
+    }
+    assert_ne!(a.digest(), poisson_schedule(43, 64, 9_000.0, 8).digest());
+}
+
+/// The workload driver completes a mixed GEN/SGEN schedule against a
+/// real server with zero failures, and session turns stay ordered
+/// (worker pinning) — the server would reject a busy session otherwise.
+#[test]
+fn run_workload_completes_mixed_schedule_against_live_server() {
+    let ckpt = train_checkpoint("workload", 12);
+    let (port, h) = start_server(&ckpt);
+
+    let mut reqs = Vec::new();
+    for i in 0..6u64 {
+        reqs.push(Req {
+            at_us: i * 500,
+            prompt: format!("prompt {i} "),
+            max_tokens: 5,
+            model: None,
+            session: None,
+        });
+    }
+    for turn in 0..2u64 {
+        for s in 0..2u64 {
+            reqs.push(Req {
+                at_us: 3_000 + turn * 4_000 + s * 500,
+                prompt: "more words ".into(),
+                max_tokens: 4,
+                model: None,
+                session: Some(format!("lth_{s}")),
+            });
+        }
+    }
+    let total = reqs.len();
+    let schedule = Schedule { reqs, workers: 4 };
+    let (report, first_err) = run_workload(port, &schedule, 0);
+    assert_eq!(first_err, None);
+    assert_eq!(report.requests_ok(), total);
+    assert_eq!(report.failures, 0);
+    assert_eq!(report.empty_responses, 0);
+    assert!(report.wall_s > 0.0);
+    // sorted ascending, ready for percentile_of
+    assert!(report.latencies_ms.windows(2).all(|w| w[0] <= w[1]));
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
+/// `--inject-latency-ms` must shift every recorded latency — it's the
+/// lever CI uses to prove the SLO gate actually fails on regressions,
+/// so if it silently stopped injecting, the negative CI test would go
+/// green for the wrong reason.
+#[test]
+fn injected_latency_is_visible_in_the_report() {
+    let ckpt = train_checkpoint("inject", 12);
+    let (port, h) = start_server(&ckpt);
+    let reqs: Vec<Req> = (0..3)
+        .map(|i| Req {
+            at_us: i * 500,
+            prompt: "the ".into(),
+            max_tokens: 4,
+            model: None,
+            session: None,
+        })
+        .collect();
+    let schedule = Schedule { reqs, workers: 2 };
+    let (clean, _) = run_workload(port, &schedule, 0);
+    let (slow, _) = run_workload(port, &schedule, 60);
+    assert_eq!(clean.requests_ok(), 3);
+    assert_eq!(slow.requests_ok(), 3);
+    assert!(
+        slow.latencies_ms[0] >= 60.0,
+        "every injected latency is at least the injection: {:?}",
+        slow.latencies_ms
+    );
+    assert!(
+        slow.latencies_ms[0] > clean.latencies_ms[2],
+        "injected floor exceeds the clean maximum"
+    );
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
+/// End-to-end gate pipeline on disk: write a summary, self-check passes;
+/// regress one percentile past both thresholds, the gate reports it.
+#[test]
+fn summary_files_roundtrip_through_the_gate() {
+    let dir = std::env::temp_dir().join("chon_lth_gate");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let schedule = poisson_schedule(7, 8, 1_000.0, 2);
+    let report = chon::serve::client::LoadReport {
+        latencies_ms: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        tokens: 32,
+        wall_s: 0.5,
+        ..Default::default()
+    };
+    let usage = chon::loadtest::resources::Usage {
+        peak_rss_bytes: 32 << 20,
+        cpu_ticks: 50,
+        samples: 10,
+    };
+    let result = chon::loadtest::summary::ScenarioResult::from_parts(
+        "poisson",
+        "stochastic",
+        &report,
+        Default::default(),
+        &usage,
+        schedule.digest(),
+        vec![("requests_total>=8".into(), true)],
+    );
+    assert!(result.ok);
+    let base = Summary { seed: 7, quick: true, scenarios: vec![result.clone()] };
+    let base_path = dir.join("baseline.json");
+    base.write(&base_path).unwrap();
+
+    // unchanged rerun passes
+    let reread = Summary::read(&base_path).unwrap();
+    assert_eq!(reread.scenarios[0].schedule_digest, schedule.digest());
+    assert!(summary::check(&base, &reread, 50.0, 20.0).is_empty());
+
+    // a 10x p99 regression (and past the absolute floor) fails
+    let mut bad = base.clone();
+    bad.scenarios[0].latency.p99_ms = base.scenarios[0].latency.p99_ms * 10.0 + 200.0;
+    let violations = summary::check(&base, &bad, 50.0, 20.0);
+    assert!(
+        violations.iter().any(|v| v.contains("p99")),
+        "expected a p99 violation, got {violations:?}"
+    );
+}

@@ -647,6 +647,81 @@ fn idle_connection_soak_leaves_serving_undisturbed() {
     h.join().unwrap();
 }
 
+/// Over-`--max-conns` accepts are refused loudly, not silently: the line
+/// protocol sees `ERR busy` then EOF, the HTTP front end sees a 503, the
+/// rejections are counted in `chon_conns_rejected_total`, and the server
+/// accepts again as soon as the held connections go away.
+#[test]
+fn over_capacity_accepts_get_busy_rejects_then_recover() {
+    let ckpt = train_checkpoint("busy", 12);
+    let (base_opts, reg_opts) = serve_opts(4, 0);
+    let opts = ServeOpts { max_conns: 2, ..base_opts };
+    let (srv, port) = start_server(&ckpt, (opts, reg_opts));
+    let http_port = srv.http_port().expect("http enabled");
+    let h = run_server(srv);
+
+    // fill the cap with two parked line connections (ping proves the
+    // reactor adopted them, not just the kernel backlog)
+    let mut held1 = client::open_conn("127.0.0.1", port).unwrap();
+    client::ping(&mut held1).unwrap();
+    let mut held2 = client::open_conn("127.0.0.1", port).unwrap();
+    client::ping(&mut held2).unwrap();
+
+    // third line connection: ERR busy, then EOF — never a silent close
+    let over = client::open_conn("127.0.0.1", port).unwrap();
+    let mut reader = std::io::BufReader::new(over);
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    assert!(
+        line.starts_with("ERR busy"),
+        "expected a busy shed notice, got {line:?}"
+    );
+    line.clear();
+    assert_eq!(
+        std::io::BufRead::read_line(&mut reader, &mut line).unwrap(),
+        0,
+        "rejected connection must be closed after the notice"
+    );
+
+    // HTTP front end shares the same cap and sheds with a 503
+    let (status, body) = http_request(http_port, "GET", "/stats", "");
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    assert!(
+        String::from_utf8_lossy(&body).contains("busy"),
+        "503 body should say why: {}",
+        String::from_utf8_lossy(&body)
+    );
+
+    // free the cap; the reactor notices the closes on its next wakeup
+    drop(held1);
+    drop(held2);
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let metrics = loop {
+        match client::fetch_metrics("127.0.0.1", http_port) {
+            Ok(body) => break body,
+            Err(e) => assert!(
+                Instant::now() < deadline,
+                "server never recovered after the held conns closed: {e:#}"
+            ),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let rejected =
+        client::metric_total(&metrics, "chon_conns_rejected_total").unwrap_or(0.0);
+    assert!(
+        rejected >= 2.0,
+        "expected >= 2 counted rejections (1 line + 1 http), got {rejected}"
+    );
+
+    // and normal service resumed
+    let (_, n, _) =
+        client::generate_once("127.0.0.1", port, "after the storm ", 4, 0.0).unwrap();
+    assert_eq!(n, 4);
+
+    client::send_shutdown("127.0.0.1", port).unwrap();
+    h.join().unwrap();
+}
+
 // ----------------------------------------------------------------- resume
 
 /// A resumed run's per-step losses are bit-identical to an uninterrupted
