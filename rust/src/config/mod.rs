@@ -94,8 +94,16 @@ pub struct RunConfig {
     /// side-GEMM — a distinct recipe mode vs the fake-quant default
     pub packed_compute: bool,
     /// client: scrape `GET /metrics` on this port before and after the
-    /// load run and assert key series exist and increase (0 = off)
+    /// load run and assert key series exist and increase (0 = off).
+    /// train: serve live `GET /metrics` + `GET /progress` from a
+    /// listener thread on this port during training (0 = off)
     pub metrics_port: u16,
+    /// train/diag: write the crash-durable JSONL run trace
+    /// (`<run_dir>/trace.jsonl`); `--no-trace` turns it off
+    pub trace: bool,
+    /// loadtest: run each scenario this many times and merge the
+    /// per-stage latency histograms across repeats (min 1)
+    pub repeats: usize,
     /// loadtest: scenario names from repeated `--scenario NAME` flags
     /// (empty = the whole registry)
     pub loadtest_scenarios: Vec<String>,
@@ -159,6 +167,8 @@ impl Default for RunConfig {
             obs_outliers: false,
             packed_compute: false,
             metrics_port: 0,
+            trace: true,
+            repeats: 1,
             loadtest_scenarios: Vec::new(),
             quick: false,
             loadtest_check: None,
@@ -316,6 +326,9 @@ impl RunConfig {
                 // value-less flag: nothing to consume
                 "packed-compute" => self.packed_compute = true,
                 "metrics-port" => self.metrics_port = next()?.parse()?,
+                // value-less flag: nothing to consume
+                "no-trace" => self.trace = false,
+                "repeats" => self.repeats = next()?.parse::<usize>()?.max(1),
                 "scenario" => self.loadtest_scenarios.push(next()?),
                 // value-less flag: nothing to consume
                 "quick" => self.quick = true,
@@ -519,6 +532,14 @@ mod tests {
     }
 
     #[test]
+    fn trace_flag_parses() {
+        let mut c = RunConfig::default();
+        assert!(c.trace, "tracing is on by default");
+        c.apply_args(&["--no-trace".into()]).unwrap();
+        assert!(!c.trace);
+    }
+
+    #[test]
     fn packed_compute_flag_parses() {
         let mut c = RunConfig::default();
         assert!(!c.packed_compute);
@@ -531,6 +552,7 @@ mod tests {
         let mut c = RunConfig::default();
         assert!(c.loadtest_scenarios.is_empty());
         assert!(!c.quick);
+        assert_eq!(c.repeats, 1);
         assert_eq!(c.slo_tolerance, 50.0);
         assert_eq!(c.slo_abs_ms, 20.0);
         assert_eq!(c.inject_latency_ms, 0);
@@ -550,9 +572,15 @@ mod tests {
             "10".into(),
             "--inject-latency-ms".into(),
             "150".into(),
+            "--repeats".into(),
+            "3".into(),
         ])
         .unwrap();
         assert_eq!(c.loadtest_scenarios, vec!["fanout", "poisson"]);
+        assert_eq!(c.repeats, 3);
+        // 0 would silently skip every scenario — clamp to 1 at parse
+        c.apply_args(&["--repeats".into(), "0".into()]).unwrap();
+        assert_eq!(c.repeats, 1);
         assert!(c.quick);
         assert_eq!(
             c.loadtest_check.as_deref(),

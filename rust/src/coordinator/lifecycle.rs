@@ -1,0 +1,317 @@
+//! Online hot-channel lifecycle tracking: the paper's Sec. 3.3 finding
+//! — outliers start as transient spikes and harden into persistent hot
+//! channels — turned into a live, queryable signal. Each diag probe
+//! feeds the flattened per-component channel map in; the tracker keeps
+//! an EWMA magnitude and a consecutive-probes-in-top-k streak per
+//! channel, classifies channels transient vs persistent, and emits
+//! birth/death events the trainer writes into the run trace and counts
+//! on `/metrics`.
+//!
+//! Channel indices are the same flattened `layer * chans + chan` space
+//! `Monitor::hot_channel_persistence` uses, and top-k membership comes
+//! from the same `diagnostics::hot_channels` selection, so the online
+//! classification is consistent with the offline Jaccard series.
+
+use crate::diagnostics;
+
+/// Top-k size used by the trainer's tracker (matches the `diag`
+/// command's persistence analysis).
+pub const DEFAULT_K: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LifecycleKind {
+    /// channel promoted to persistent (streak reached `persist_after`)
+    Birth,
+    /// persistent channel missed `death_after` consecutive probes
+    Death,
+}
+
+#[derive(Clone, Debug)]
+pub struct LifecycleEvent {
+    pub step: usize,
+    pub comp: String,
+    pub channel: usize,
+    pub kind: LifecycleKind,
+    /// EWMA |magnitude| at classification time
+    pub ewma: f32,
+}
+
+/// What one probe of one component yields.
+pub struct Observation {
+    /// top-k `(flat channel, magnitude)` of this probe, descending —
+    /// exactly `diagnostics::hot_channels(flat, k)`
+    pub top: Vec<(usize, f32)>,
+    pub events: Vec<LifecycleEvent>,
+    /// Jaccard overlap with the previous probe's top-k (None on the
+    /// component's first probe)
+    pub overlap: Option<f64>,
+}
+
+struct CompState {
+    name: String,
+    ewma: Vec<f32>,
+    /// consecutive probes in the top-k
+    streak: Vec<u32>,
+    /// consecutive probes out of the top-k (persistent channels only)
+    miss: Vec<u32>,
+    persistent: Vec<bool>,
+    prev_top: Option<Vec<(usize, f32)>>,
+}
+
+impl CompState {
+    fn grow(&mut self, n: usize) {
+        if self.ewma.len() < n {
+            self.ewma.resize(n, 0.0);
+            self.streak.resize(n, 0);
+            self.miss.resize(n, 0);
+            self.persistent.resize(n, false);
+        }
+    }
+}
+
+pub struct LifecycleTracker {
+    pub k: usize,
+    /// consecutive probes in the top-k before a channel is persistent
+    pub persist_after: u32,
+    /// consecutive misses before a persistent channel dies
+    pub death_after: u32,
+    /// EWMA decay: `ewma' = decay·ewma + (1−decay)·|mag|`
+    pub decay: f32,
+    comps: Vec<CompState>,
+}
+
+impl LifecycleTracker {
+    pub fn new(k: usize) -> LifecycleTracker {
+        LifecycleTracker {
+            k,
+            persist_after: 3,
+            death_after: 3,
+            decay: 0.8,
+            comps: Vec::new(),
+        }
+    }
+
+    fn comp_mut(&mut self, name: &str) -> &mut CompState {
+        if let Some(i) = self.comps.iter().position(|c| c.name == name) {
+            return &mut self.comps[i];
+        }
+        self.comps.push(CompState {
+            name: name.to_string(),
+            ewma: Vec::new(),
+            streak: Vec::new(),
+            miss: Vec::new(),
+            persistent: Vec::new(),
+            prev_top: None,
+        });
+        self.comps.last_mut().unwrap()
+    }
+
+    fn comp(&self, name: &str) -> Option<&CompState> {
+        self.comps.iter().find(|c| c.name == name)
+    }
+
+    /// Feed one probe of one component (`flat` is the layer-flattened
+    /// |magnitude| map). Returns the probe's top-k, any birth/death
+    /// transitions, and the consecutive-probe Jaccard overlap.
+    pub fn observe(
+        &mut self,
+        step: usize,
+        comp: &str,
+        flat: &[f32],
+    ) -> Observation {
+        let top = diagnostics::hot_channels(flat, self.k);
+        let (persist_after, death_after, decay) =
+            (self.persist_after, self.death_after, self.decay);
+        let st = self.comp_mut(comp);
+        st.grow(flat.len());
+        let overlap = st
+            .prev_top
+            .as_ref()
+            .map(|p| diagnostics::channel_overlap(p, &top));
+        let mut in_top = vec![false; st.ewma.len()];
+        for &(c, _) in &top {
+            if c < in_top.len() {
+                in_top[c] = true;
+            }
+        }
+        let mut events = Vec::new();
+        for c in 0..st.ewma.len() {
+            if in_top[c] {
+                st.ewma[c] =
+                    decay * st.ewma[c] + (1.0 - decay) * flat[c].abs();
+                st.miss[c] = 0;
+                st.streak[c] += 1;
+                if !st.persistent[c] && st.streak[c] >= persist_after {
+                    st.persistent[c] = true;
+                    events.push(LifecycleEvent {
+                        step,
+                        comp: comp.to_string(),
+                        channel: c,
+                        kind: LifecycleKind::Birth,
+                        ewma: st.ewma[c],
+                    });
+                }
+            } else {
+                st.ewma[c] *= decay;
+                st.streak[c] = 0;
+                if st.persistent[c] {
+                    st.miss[c] += 1;
+                    if st.miss[c] >= death_after {
+                        st.persistent[c] = false;
+                        st.miss[c] = 0;
+                        events.push(LifecycleEvent {
+                            step,
+                            comp: comp.to_string(),
+                            channel: c,
+                            kind: LifecycleKind::Death,
+                            ewma: st.ewma[c],
+                        });
+                    }
+                }
+            }
+        }
+        st.prev_top = Some(top.clone());
+        Observation { top, events, overlap }
+    }
+
+    /// `(persistent, transient)` channel counts for a component —
+    /// transient = in the latest top-k but not classified persistent.
+    pub fn counts(&self, comp: &str) -> (usize, usize) {
+        let Some(st) = self.comp(comp) else { return (0, 0) };
+        let persistent = st.persistent.iter().filter(|p| **p).count();
+        let transient = st
+            .prev_top
+            .as_ref()
+            .map(|top| {
+                top.iter()
+                    .filter(|(c, _)| !st.persistent.get(*c).copied().unwrap_or(false))
+                    .count()
+            })
+            .unwrap_or(0);
+        (persistent, transient)
+    }
+
+    /// Currently-persistent channel indices for a component.
+    pub fn persistent_channels(&self, comp: &str) -> Vec<usize> {
+        self.comp(comp)
+            .map(|st| {
+                st.persistent
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| **p)
+                    .map(|(c, _)| c)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A channel that is hot on every probe must become persistent
+    /// (one birth, no deaths), consistent with channel_overlap == 1.0
+    /// between consecutive probes.
+    #[test]
+    fn fixed_hot_channel_becomes_persistent() {
+        let mut t = LifecycleTracker::new(2);
+        let mut births = 0;
+        let mut deaths = 0;
+        for step in 0..10 {
+            // channel 3 always dominant, channel 0 runner-up
+            let flat = vec![1.0, 0.1, 0.1, 9.0, 0.1, 0.1];
+            let ob = t.observe(step, "attn_o", &flat);
+            assert_eq!(ob.top[0].0, 3);
+            if step > 0 {
+                assert_eq!(ob.overlap, Some(1.0), "identical top-k every probe");
+            }
+            for e in &ob.events {
+                match e.kind {
+                    LifecycleKind::Birth => births += 1,
+                    LifecycleKind::Death => deaths += 1,
+                }
+            }
+        }
+        assert_eq!(births, 2, "both always-hot channels born exactly once");
+        assert_eq!(deaths, 0);
+        let p = t.persistent_channels("attn_o");
+        assert!(p.contains(&3) && p.contains(&0), "{p:?}");
+        let (pers, trans) = t.counts("attn_o");
+        assert_eq!((pers, trans), (2, 0));
+    }
+
+    /// A spike that drifts to a different channel every probe never
+    /// builds a streak: no births, everything stays transient —
+    /// consistent with channel_overlap == 0.0 between probes.
+    #[test]
+    fn drifting_spike_stays_transient() {
+        let mut t = LifecycleTracker::new(1);
+        for step in 0..8 {
+            let mut flat = vec![0.0f32; 8];
+            flat[step % 8] = 5.0; // a different channel every probe
+            let ob = t.observe(step, "mlp_up", &flat);
+            assert!(ob.events.is_empty(), "no lifecycle transitions");
+            if step > 0 {
+                assert_eq!(ob.overlap, Some(0.0), "disjoint consecutive top-k");
+            }
+        }
+        let (pers, trans) = t.counts("mlp_up");
+        assert_eq!(pers, 0);
+        assert_eq!(trans, 1, "the latest spike is transient");
+    }
+
+    /// Persistent → cold → death after `death_after` misses; EWMA
+    /// decays while cold.
+    #[test]
+    fn cold_persistent_channel_dies() {
+        let mut t = LifecycleTracker::new(1);
+        for step in 0..4 {
+            t.observe(step, "c", &[7.0, 0.0]);
+        }
+        assert_eq!(t.persistent_channels("c"), vec![0]);
+        let mut death_step = None;
+        for step in 4..10 {
+            let ob = t.observe(step, "c", &[0.0, 7.0]); // heat moved away
+            if let Some(e) = ob.events.first() {
+                assert_eq!(e.kind, LifecycleKind::Death);
+                assert_eq!(e.channel, 0);
+                death_step = Some(step);
+                break;
+            }
+        }
+        assert_eq!(death_step, Some(6), "death after 3 consecutive misses");
+        assert!(t.persistent_channels("c").is_empty());
+    }
+
+    /// Streaks must be *consecutive*: an interruption resets progress
+    /// toward persistence.
+    #[test]
+    fn interrupted_streak_resets() {
+        let mut t = LifecycleTracker::new(1);
+        let hot = [9.0f32, 0.0];
+        let cold = [0.0f32, 9.0];
+        for (step, flat) in
+            [hot, hot, cold, hot, hot, cold].iter().enumerate()
+        {
+            let ob = t.observe(step, "c", flat);
+            assert!(
+                ob.events.is_empty(),
+                "2-streaks never reach persist_after=3"
+            );
+        }
+        assert!(t.persistent_channels("c").is_empty());
+    }
+
+    #[test]
+    fn components_are_independent() {
+        let mut t = LifecycleTracker::new(1);
+        for step in 0..5 {
+            t.observe(step, "a", &[9.0, 0.0]);
+            t.observe(step, "b", &[0.0, 9.0]);
+        }
+        assert_eq!(t.persistent_channels("a"), vec![0]);
+        assert_eq!(t.persistent_channels("b"), vec![1]);
+        assert_eq!(t.counts("nope"), (0, 0));
+    }
+}

@@ -9,10 +9,12 @@
 pub mod ablation;
 pub mod evalsuite;
 pub mod finetune;
+pub mod lifecycle;
 pub mod metrics;
 pub mod monitor;
 pub mod trainer;
 
+pub use lifecycle::{LifecycleEvent, LifecycleKind, LifecycleTracker};
 pub use metrics::{loss_gap_pct, MetricLog, StepMetrics};
 pub use monitor::{DiagRecord, Monitor};
 pub use trainer::Trainer;

@@ -34,6 +34,48 @@ impl Monitor {
         Monitor { names, records: Vec::new() }
     }
 
+    /// Rebuild the metric-series view from a run trace (pass the
+    /// resume-collapsed `trace::logical_view`): `run_start` carries the
+    /// metric names and every `diag` event the full values vector, so
+    /// `series`/`series_mean_matching`/`write_csv` work on a crashed
+    /// run's trace exactly as on the in-memory monitor. The trace keeps
+    /// only top-k channels, not full maps, so reconstructed records
+    /// carry empty `channel_maps` (`write_channel_csvs` is a no-op).
+    pub fn from_trace_events(events: &[crate::util::json::Json]) -> Monitor {
+        use crate::obs::trace;
+        let names: Vec<String> = events
+            .iter()
+            .find(|e| trace::kind(e) == Some("run_start"))
+            .and_then(|e| e.get("metric_names"))
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|n| n.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut m = Monitor::new(names);
+        for e in events.iter().filter(|e| trace::kind(e) == Some("diag")) {
+            let Some(step) = trace::step(e) else { continue };
+            let Some(vals) = e.get("values").and_then(|v| v.as_arr()) else {
+                continue;
+            };
+            let values: Vec<f32> = vals
+                .iter()
+                .filter_map(|v| v.as_f64().map(|n| n as f32))
+                .collect();
+            if values.len() != m.names.len() {
+                continue; // schema drift across an incompatible trace
+            }
+            m.records.push(DiagRecord {
+                step: step as usize,
+                values,
+                channel_maps: Vec::new(),
+            });
+        }
+        m
+    }
+
     pub fn push(&mut self, rec: DiagRecord) {
         assert_eq!(rec.values.len(), self.names.len(), "diag schema mismatch");
         self.records.push(rec);
@@ -179,6 +221,24 @@ mod tests {
         }
         let p = drift.hot_channel_persistence(1);
         assert!(p[0].1.iter().all(|&(_, j)| j == 0.0));
+    }
+
+    #[test]
+    fn from_trace_events_rebuilds_series() {
+        use crate::util::json::Json;
+        let text = concat!(
+            "{\"ev\":\"run_start\",\"step\":0,\"metric_names\":[\"a\",\"b\"]}\n",
+            "{\"ev\":\"step\",\"step\":1,\"loss\":3.0}\n",
+            "{\"ev\":\"diag\",\"step\":10,\"values\":[1.0,2.0]}\n",
+            "{\"ev\":\"diag\",\"step\":20,\"values\":[1.5,2.5]}\n",
+            "{\"ev\":\"diag\",\"step\":30,\"values\":[9.0]}\n", // wrong arity: skipped
+        );
+        let events: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        let m = Monitor::from_trace_events(&events);
+        assert_eq!(m.names, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(m.series("a").unwrap(), vec![(10, 1.0), (20, 1.5)]);
+        assert_eq!(m.series("b").unwrap(), vec![(10, 2.0), (20, 2.5)]);
     }
 
     #[test]

@@ -3,21 +3,33 @@
 //! pure-Rust or PJRT), the data prefetcher, the longitudinal monitor and
 //! checkpointing. Python never runs here.
 
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::coordinator::lifecycle::{LifecycleKind, LifecycleTracker};
 use crate::coordinator::metrics::{MetricLog, StepMetrics};
 use crate::coordinator::monitor::{DiagRecord, Monitor};
 use crate::data::batcher::{Batch, Batcher, Prefetcher};
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::tokenizer::Tokenizer;
 use crate::info;
+use crate::obs::trace::{self, TraceWriter};
+use crate::obs::train::{
+    PhaseSpans, TrainObs, PH_DATA_WAIT, PH_DIAG,
+};
 use crate::runtime::ckptdir::{self, CheckpointMeta};
 use crate::runtime::{backend_for, Backend, DType, Executable, HostTensor};
+use crate::util::json::Json;
+
+/// Top-k size of the online hot-channel tracker and of the per-probe
+/// top-k sets stored in the trace (matches the `chon diag` analysis).
+pub const HOT_K: usize = crate::coordinator::lifecycle::DEFAULT_K;
 
 /// Model + optimizer state in manifest order.
 pub struct TrainState {
@@ -53,6 +65,18 @@ pub struct Trainer {
     pub batch: usize,
     pub seq_len: usize,
     pub total_steps: usize,
+    /// per-phase span sink, shared with the shard engine (which times
+    /// fwd_bwd/allreduce/adam inside `ShardExec::run`) and with any
+    /// `TrainObs` scrape registry attached via [`Trainer::set_obs`]
+    pub spans: Arc<PhaseSpans>,
+    /// live scrape gauges (`--metrics-port`); None = no listener
+    obs: Option<Arc<TrainObs>>,
+    /// crash-durable JSONL run trace; None until `enable_run_outputs`
+    trace: Option<TraceWriter>,
+    /// incremental train.csv writer; None until `enable_run_outputs`
+    csv: Option<std::io::BufWriter<std::fs::File>>,
+    /// online transient-vs-persistent hot-channel classifier
+    pub lifecycle: LifecycleTracker,
 }
 
 /// Split train-artifact outputs: params, m, v (k each), then scalars.
@@ -91,10 +115,12 @@ impl Trainer {
         // engine (default --shards 1): the per-sequence grad + fixed-tree
         // allreduce math is identical for every shard count, so N is a
         // pure scheduling knob (see runtime::native::shard)
+        let spans = Arc::new(PhaseSpans::new());
         let train_exe: Rc<dyn Executable> = if backend.name() == "native" {
             Rc::new(
                 crate::runtime::native::ShardExec::new(&train_name, cfg.shards)
-                    .with_context(|| format!("loading {train_name} (native backend)"))?,
+                    .with_context(|| format!("loading {train_name} (native backend)"))?
+                    .with_spans(spans.clone()),
             )
         } else {
             if cfg.shards > 1 {
@@ -179,7 +205,126 @@ impl Trainer {
             batch,
             seq_len,
             total_steps,
+            spans,
+            obs: None,
+            trace: None,
+            csv: None,
+            lifecycle: LifecycleTracker::new(HOT_K),
         })
+    }
+
+    /// The run's output directory, `<out_dir>/<model>_<recipe>/`.
+    pub fn run_dir(&self) -> PathBuf {
+        self.cfg
+            .out_dir
+            .join(format!("{}_{}", self.cfg.model, self.cfg.recipe))
+    }
+
+    /// Attach the live scrape registry (gauges behind `--metrics-port`).
+    /// Pass a `TrainObs` built over [`Trainer::spans`] so phase
+    /// histograms and trace spans read the same sink.
+    pub fn set_obs(&mut self, obs: Arc<TrainObs>) {
+        obs.total_steps.set(self.total_steps as u64);
+        self.obs = Some(obs);
+    }
+
+    /// Open the per-run telemetry outputs under [`Trainer::run_dir`]:
+    /// the incremental `train.csv` (header now, one flushed row per
+    /// logging interval — interrupted runs keep partial metrics) and,
+    /// unless `--no-trace`, the crash-durable `trace.jsonl`. Call
+    /// *after* `restore()` on a resume: the trace is then opened in
+    /// append mode behind a validated `resume` marker, and because
+    /// resumed training is bit-identical, the logical step series stays
+    /// exactly an uninterrupted run's.
+    pub fn enable_run_outputs(&mut self) -> Result<PathBuf> {
+        let dir = self.run_dir();
+        std::fs::create_dir_all(&dir)?;
+        let f = std::fs::File::create(dir.join("train.csv"))
+            .with_context(|| format!("create {}/train.csv", dir.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "step,loss,grad_norm,lr,wall_ms")?;
+        w.flush()?;
+        self.csv = Some(w);
+        if self.cfg.trace {
+            self.open_trace(&dir)?;
+        }
+        Ok(dir)
+    }
+
+    fn open_trace(&mut self, dir: &Path) -> Result<()> {
+        let path = dir.join(trace::TRACE_FILE);
+        let resuming = self.cfg.resume.is_some() && self.state.step > 0;
+        if resuming && path.exists() {
+            // step monotonicity: appending a resume at a step the trace
+            // never reached would leave a gap indistinguishable from
+            // lost data — refuse instead
+            let events = trace::read_events(&path)?;
+            let last = trace::last_step(&events).unwrap_or(0);
+            if self.state.step as u64 > last {
+                bail!(
+                    "trace {} ends at step {last} but resume starts at \
+                     step {} — refusing to append across the gap",
+                    path.display(),
+                    self.state.step
+                );
+            }
+            self.trace = Some(TraceWriter::append(&path)?);
+        } else {
+            self.trace = Some(TraceWriter::create(&path)?);
+            self.emit_run_start()?;
+        }
+        if resuming {
+            let from = self
+                .cfg
+                .resume
+                .as_ref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_default();
+            self.emit(trace::event(
+                "resume",
+                vec![
+                    ("step", Json::Num(self.state.step as f64)),
+                    ("from", Json::Str(from)),
+                ],
+            ))?;
+            if let Some(obs) = &self.obs {
+                obs.resumes_total.inc();
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_run_start(&self) -> Result<()> {
+        let names = self
+            .monitor
+            .names
+            .iter()
+            .map(|n| Json::Str(n.clone()))
+            .collect();
+        self.emit(trace::event(
+            "run_start",
+            vec![
+                ("step", Json::Num(self.state.step as f64)),
+                ("model", Json::Str(self.cfg.model.clone())),
+                ("recipe", Json::Str(self.cfg.recipe.clone())),
+                ("backend", Json::Str(self.cfg.backend.clone())),
+                ("seed", Json::Num(self.cfg.seed as f64)),
+                ("shards", Json::Num(self.cfg.shards as f64)),
+                ("batch", Json::Num(self.batch as f64)),
+                ("seq_len", Json::Num(self.seq_len as f64)),
+                ("total_steps", Json::Num(self.total_steps as f64)),
+                ("metric_names", Json::Arr(names)),
+                ("version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+            ],
+        ))
+    }
+
+    /// Emit one trace event if tracing is on (no-op otherwise).
+    fn emit(&self, ev: Json) -> Result<()> {
+        match &self.trace {
+            Some(t) => t.emit(&ev),
+            None => Ok(()),
+        }
     }
 
     fn batch_tensors(&self, b: &Batch) -> (HostTensor, HostTensor) {
@@ -197,7 +342,9 @@ impl Trainer {
 
     /// Run one training step; returns its metrics.
     pub fn step(&mut self) -> Result<StepMetrics> {
+        let t_data = Instant::now();
         let b = self.next_data_batch();
+        self.spans.record_elapsed(PH_DATA_WAIT, t_data.elapsed());
         let (tokens, targets) = self.batch_tensors(&b);
         let t0 = Instant::now();
         let k = self.state.params.len();
@@ -223,7 +370,66 @@ impl Trainer {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         };
         self.log.push(met);
+        self.after_step(&met)?;
         Ok(met)
+    }
+
+    /// Telemetry fan-out after a completed step: the incremental CSV
+    /// row, the live gauges, and the trace's step + span events. Pure
+    /// observation — training state is already advanced.
+    fn after_step(&mut self, met: &StepMetrics) -> Result<()> {
+        let tokens = (self.batch * self.seq_len) as u64;
+        let tps = if met.wall_ms > 0.0 {
+            tokens as f64 / (met.wall_ms / 1e3)
+        } else {
+            0.0
+        };
+        if let Some(w) = &mut self.csv {
+            writeln!(
+                w,
+                "{},{},{},{},{:.3}",
+                met.step, met.loss, met.grad_norm, met.lr, met.wall_ms
+            )?;
+            // flush per logging interval (every step when --log-every 0)
+            if met.step % self.cfg.log_every.max(1) == 0 {
+                w.flush()?;
+            }
+        }
+        if let Some(obs) = &self.obs {
+            obs.record_step(
+                met.step, met.loss, met.grad_norm, met.lr, tokens, tps,
+            );
+        }
+        if self.trace.is_some() {
+            self.emit(trace::event(
+                "step",
+                vec![
+                    ("step", Json::Num(met.step as f64)),
+                    ("loss", Json::Num(met.loss as f64)),
+                    ("grad_norm", Json::Num(met.grad_norm as f64)),
+                    ("lr", Json::Num(met.lr as f64)),
+                    ("wall_ms", Json::Num(met.wall_ms)),
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("tokens_per_s", Json::Num(tps)),
+                ],
+            ))?;
+            let us = crate::obs::train::PHASES
+                .iter()
+                .take(PH_DIAG) // per-step phases; diag spans ride the diag event
+                .enumerate()
+                .map(|(i, p)| {
+                    (p.to_string(), Json::Num(self.spans.last(i) as f64))
+                })
+                .collect();
+            self.emit(trace::event(
+                "span",
+                vec![
+                    ("step", Json::Num(met.step as f64)),
+                    ("us", Json::Obj(us)),
+                ],
+            ))?;
+        }
+        Ok(())
     }
 
     /// Lazily load the diag executable (expensive on PJRT; only when probing).
@@ -256,11 +462,14 @@ impl Trainer {
         self.eval_exe.as_deref()
     }
 
-    /// Run the diag artifact on a fresh batch and record it.
+    /// Run the diag artifact on a fresh batch and record it: into the
+    /// monitor, through the online lifecycle tracker (birth/death
+    /// classification), and out to the trace and the live gauges.
     pub fn diagnose(&mut self) -> Result<()> {
         if self.ensure_diag().is_none() {
             return Ok(());
         }
+        let t0 = Instant::now();
         let diag = self.diag_exe.as_ref().unwrap().clone();
         let b = self.next_data_batch();
         let (tokens, _) = self.batch_tensors(&b);
@@ -283,7 +492,86 @@ impl Trainer {
                 .collect();
             channel_maps.push((name.to_string(), rows));
         }
-        self.monitor.push(DiagRecord { step: self.state.step, values, channel_maps });
+
+        // online lifecycle pass over the layer-flattened maps (the same
+        // flattening hot_channel_persistence uses)
+        let step = self.state.step;
+        let mut topk: Vec<(String, Json)> = Vec::new();
+        let mut transitions = Vec::new();
+        for (name, rows) in &channel_maps {
+            let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+            let ob = self.lifecycle.observe(step, name, &flat);
+            if let Some(obs) = &self.obs {
+                let c = obs.comp(name);
+                let (pers, trans) = self.lifecycle.counts(name);
+                c.persistent.set(pers as u64);
+                c.transient.set(trans as u64);
+                if let Some(j) = ob.overlap {
+                    c.persistence.set(j);
+                }
+                for e in &ob.events {
+                    match e.kind {
+                        LifecycleKind::Birth => c.births.inc(),
+                        LifecycleKind::Death => c.deaths.inc(),
+                    }
+                }
+            }
+            topk.push((
+                name.clone(),
+                Json::Arr(
+                    ob.top
+                        .iter()
+                        .map(|&(c, mag)| {
+                            Json::Arr(vec![
+                                Json::Num(c as f64),
+                                Json::Num(mag as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+            transitions.extend(ob.events);
+        }
+        self.spans.record_elapsed(PH_DIAG, t0.elapsed());
+
+        if self.trace.is_some() {
+            self.emit(trace::event(
+                "diag",
+                vec![
+                    ("step", Json::Num(step as f64)),
+                    (
+                        "us",
+                        Json::Num(t0.elapsed().as_micros() as f64),
+                    ),
+                    (
+                        "values",
+                        Json::Arr(
+                            values
+                                .iter()
+                                .map(|&v| Json::Num(v as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("topk", Json::Obj(topk)),
+                ],
+            ))?;
+            for e in &transitions {
+                let kind = match e.kind {
+                    LifecycleKind::Birth => "hot_birth",
+                    LifecycleKind::Death => "hot_death",
+                };
+                self.emit(trace::event(
+                    kind,
+                    vec![
+                        ("step", Json::Num(e.step as f64)),
+                        ("comp", Json::Str(e.comp.clone())),
+                        ("channel", Json::Num(e.channel as f64)),
+                        ("ewma", Json::Num(e.ewma as f64)),
+                    ],
+                ))?;
+            }
+        }
+        self.monitor.push(DiagRecord { step, values, channel_maps });
         Ok(())
     }
 
@@ -383,6 +671,13 @@ impl Trainer {
             Some((self.state.m.as_slice(), self.state.v.as_slice(), self.state.step)),
             &self.tokenizer,
         )?;
+        self.emit(trace::event(
+            "ckpt",
+            vec![
+                ("step", Json::Num(self.state.step as f64)),
+                ("path", Json::Str(path.display().to_string())),
+            ],
+        ))?;
         Ok(path)
     }
 
@@ -464,18 +759,27 @@ impl Trainer {
         Ok(())
     }
 
-    /// Write run outputs (metrics CSV, diag CSVs) to the out dir.
-    pub fn write_outputs(&self) -> Result<PathBuf> {
-        let dir = self
-            .cfg
-            .out_dir
-            .join(format!("{}_{}", self.cfg.model, self.cfg.recipe));
+    /// Write run outputs (metrics CSV, diag CSVs) to the out dir and
+    /// mark the trace complete. With the incremental writer active the
+    /// CSV already holds every row — a final flush, not a rewrite (a
+    /// rewrite under the still-open handle would interleave its
+    /// drop-flush into the fresh file).
+    pub fn write_outputs(&mut self) -> Result<PathBuf> {
+        let dir = self.run_dir();
         std::fs::create_dir_all(&dir)?;
-        self.log.write_csv(&dir.join("train.csv"))?;
+        match self.csv.take() {
+            Some(mut w) => w.flush()?,
+            None => self.log.write_csv(&dir.join("train.csv"))?,
+        }
         if !self.monitor.records.is_empty() {
             self.monitor.write_csv(&dir.join("diag.csv"))?;
             self.monitor.write_channel_csvs(&dir, "diag")?;
         }
+        let mut fields = vec![("step", Json::Num(self.state.step as f64))];
+        if let Some(loss) = self.log.final_loss() {
+            fields.push(("loss", Json::Num(loss as f64)));
+        }
+        self.emit(trace::event("run_end", fields))?;
         Ok(dir)
     }
 }

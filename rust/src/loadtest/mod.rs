@@ -20,14 +20,16 @@ pub mod scenarios;
 pub mod scrape;
 pub mod summary;
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::Trainer;
+use crate::obs::metrics::HistSnapshot;
 use scenarios::{registry, Ctx};
-use summary::{ScenarioResult, Summary};
+use summary::{ScenarioResult, StageQuantiles, Summary};
 
 /// Everything the `loadtest` subcommand configures.
 #[derive(Clone, Debug)]
@@ -49,6 +51,10 @@ pub struct LoadtestOpts {
     /// model/recipe for the self-trained checkpoint (and republishes)
     pub model: String,
     pub recipe: String,
+    /// run every scenario this many times (min 1); stage histograms are
+    /// merged across repeats into `stages_merged`, and the seeded
+    /// schedule digests must agree across repeats (a named check)
+    pub repeats: usize,
 }
 
 impl Default for LoadtestOpts {
@@ -63,6 +69,7 @@ impl Default for LoadtestOpts {
             inject_latency_ms: 0,
             model: "tiny_gla".to_string(),
             recipe: "chon".to_string(),
+            repeats: 1,
         }
     }
 }
@@ -132,44 +139,90 @@ pub fn run(opts: &LoadtestOpts) -> Result<Summary> {
         quick: opts.quick,
         scenarios: Vec::new(),
     };
+    let repeats = opts.repeats.max(1);
     for sc in picked {
-        let dir = opts.out_root.join(sc.name);
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir)
-            .with_context(|| format!("creating {}", dir.display()))?;
-        let ctx = Ctx {
-            bin: bin.clone(),
-            ckpt: ckpt.clone(),
-            out: dir,
-            seed: opts.seed,
-            quick: opts.quick,
-            inject_latency_ms: opts.inject_latency_ms,
-            model: opts.model.clone(),
-            recipe: opts.recipe.clone(),
-        };
-        let t0 = std::time::Instant::now();
-        let result = match (sc.run)(&ctx) {
-            Ok(r) => r,
-            Err(e) => ScenarioResult::infra_failure(sc.name, sc.kind, &format!("{e:#}")),
-        };
-        println!(
-            "loadtest {:<12} [{}] {} in {:.1}s  (p99 {:.1} ms, {} ok / {} failed, \
-             rss {:.1} MiB)",
-            result.name,
-            result.kind,
-            if result.ok { "ok" } else { "FAILED" },
-            t0.elapsed().as_secs_f64(),
-            result.latency.p99_ms,
-            result.requests_ok,
-            result.failures,
-            result.peak_rss_bytes as f64 / (1024.0 * 1024.0),
-        );
-        if !result.ok {
-            for (name, pass) in &result.checks {
-                if !pass {
-                    println!("    check failed: {name}");
+        // --repeats N: run the scenario N times (fresh scratch dir and
+        // server per repeat), keep the first run as the reported result,
+        // AND the verdicts, and merge the scraped stage histograms so
+        // `stages_merged` quantiles rest on N runs' worth of samples
+        let mut base: Option<ScenarioResult> = None;
+        let mut merged: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+        let mut digests: Vec<u64> = Vec::new();
+        for rep in 0..repeats {
+            let sub = if rep == 0 {
+                sc.name.to_string()
+            } else {
+                format!("{}_r{rep}", sc.name)
+            };
+            let dir = opts.out_root.join(&sub);
+            let _ = std::fs::remove_dir_all(&dir);
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+            let ctx = Ctx {
+                bin: bin.clone(),
+                ckpt: ckpt.clone(),
+                out: dir,
+                seed: opts.seed,
+                quick: opts.quick,
+                inject_latency_ms: opts.inject_latency_ms,
+                model: opts.model.clone(),
+                recipe: opts.recipe.clone(),
+            };
+            let t0 = std::time::Instant::now();
+            let result = match (sc.run)(&ctx) {
+                Ok(r) => r,
+                Err(e) => {
+                    ScenarioResult::infra_failure(sc.name, sc.kind, &format!("{e:#}"))
+                }
+            };
+            println!(
+                "loadtest {:<12} [{}] {}{} in {:.1}s  (p99 {:.1} ms, {} ok / {} failed, \
+                 rss {:.1} MiB)",
+                result.name,
+                result.kind,
+                if result.ok { "ok" } else { "FAILED" },
+                if repeats > 1 { format!(" (r{rep})") } else { String::new() },
+                t0.elapsed().as_secs_f64(),
+                result.latency.p99_ms,
+                result.requests_ok,
+                result.failures,
+                result.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+            );
+            if !result.ok {
+                for (name, pass) in &result.checks {
+                    if !pass {
+                        println!("    check failed: {name}");
+                    }
                 }
             }
+            for (stage, snap) in &result.stage_snaps {
+                merged.entry(stage.clone()).or_default().merge(snap);
+            }
+            digests.push(result.schedule_digest);
+            match &mut base {
+                None => base = Some(result),
+                Some(b) => {
+                    b.ok &= result.ok;
+                    for (name, pass) in result.checks {
+                        if !pass {
+                            b.checks.push((format!("r{rep}: {name}"), false));
+                        }
+                    }
+                }
+            }
+        }
+        let mut result = base.expect("repeats >= 1 ran");
+        result.repeats = repeats as u64;
+        if repeats > 1 {
+            // the determinism contract, now cross-checked for real: same
+            // seed, same generated schedule, every repeat
+            let identical = digests.iter().all(|&d| d == digests[0]);
+            result.ok &= identical;
+            result.checks.push(("repeats-digest-identical".to_string(), identical));
+            result.stages_merged = merged
+                .iter()
+                .map(|(stage, snap)| (stage.clone(), StageQuantiles::of(snap)))
+                .collect();
         }
         out.scenarios.push(result);
     }

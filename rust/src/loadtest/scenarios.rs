@@ -19,7 +19,8 @@ use anyhow::{bail, Context, Result};
 use crate::loadtest::proc::{run_tool, ServeSpec, ServerProc};
 use crate::loadtest::resources::Usage;
 use crate::loadtest::scrape;
-use crate::loadtest::summary::{ScenarioResult, StageQuantiles};
+use crate::loadtest::summary::ScenarioResult;
+use crate::obs::metrics::HistSnapshot;
 use crate::serve::client::{self, LoadReport};
 use crate::serve::protocol;
 use crate::util::prng::{splitmix64, Rng};
@@ -340,11 +341,11 @@ fn spawn_server(ctx: &Ctx, name: &str, spec: &ServeSpec) -> Result<ServerProc> {
     ServerProc::spawn(&ctx.bin, spec, &ctx.out.join(format!("{name}_serve.log")))
 }
 
-fn stage_quantiles(body: &str) -> BTreeMap<String, StageQuantiles> {
+/// Raw per-stage histograms off one `/metrics` scrape (models merged).
+/// `from_parts` derives the quantiles; the harness keeps the snapshots
+/// so `--repeats` can merge them across runs before re-quantiling.
+fn stage_snapshots(body: &str) -> BTreeMap<String, HistSnapshot> {
     scrape::stage_histograms(body, "chon_stage_latency_us", "stage")
-        .iter()
-        .map(|(stage, snap)| (stage.clone(), StageQuantiles::of(snap)))
-        .collect()
 }
 
 /// Poll a counter family's total until it reaches `min` or the timeout
@@ -378,7 +379,7 @@ fn finish(
     mut checks: Vec<(String, bool)>,
 ) -> Result<ScenarioResult> {
     let stages = match server.scrape_metrics() {
-        Ok(body) => stage_quantiles(&body),
+        Ok(body) => stage_snapshots(&body),
         Err(_) => BTreeMap::new(),
     };
     if let Some(e) = first_err {
@@ -846,7 +847,7 @@ fn run_kill_resume(ctx: &Ctx) -> Result<ScenarioResult> {
     // assemble by hand: this scenario's traffic is scripted, not a
     // Schedule replay, but the summary shape is the same
     let stages = match server2.scrape_metrics() {
-        Ok(body) => stage_quantiles(&body),
+        Ok(body) => stage_snapshots(&body),
         Err(_) => BTreeMap::new(),
     };
     server2.stop()?;

@@ -93,6 +93,15 @@ pub struct ScenarioResult {
     pub schedule_digest: u64,
     /// named scenario-specific assertions, e.g. ("evictions>0", true)
     pub checks: Vec<(String, bool)>,
+    /// how many times the scenario ran (`--repeats N`; 1 for single runs)
+    pub repeats: u64,
+    /// stage quantiles over the histograms merged across all repeats —
+    /// only present (and only meaningful) when `repeats > 1`; a merged
+    /// N×-sample histogram gives tail quantiles a single repeat cannot
+    pub stages_merged: BTreeMap<String, StageQuantiles>,
+    /// the raw scraped stage histograms backing `stages` — kept so the
+    /// harness can merge across repeats; never serialized
+    pub stage_snaps: BTreeMap<String, HistSnapshot>,
 }
 
 impl ScenarioResult {
@@ -101,7 +110,7 @@ impl ScenarioResult {
         name: &str,
         kind: &str,
         report: &LoadReport,
-        stages: BTreeMap<String, StageQuantiles>,
+        stage_snaps: BTreeMap<String, HistSnapshot>,
         usage: &super::resources::Usage,
         schedule_digest: u64,
         checks: Vec<(String, bool)>,
@@ -110,6 +119,10 @@ impl ScenarioResult {
             && report.empty_responses == 0
             && report.requests_ok() > 0
             && checks.iter().all(|(_, pass)| *pass);
+        let stages = stage_snaps
+            .iter()
+            .map(|(stage, snap)| (stage.clone(), StageQuantiles::of(snap)))
+            .collect();
         ScenarioResult {
             name: name.to_string(),
             kind: kind.to_string(),
@@ -125,6 +138,9 @@ impl ScenarioResult {
             cpu_ticks: usage.cpu_ticks,
             schedule_digest,
             checks,
+            repeats: 1,
+            stages_merged: BTreeMap::new(),
+            stage_snaps,
         }
     }
 
@@ -137,26 +153,28 @@ impl ScenarioResult {
             kind: kind.to_string(),
             ok: false,
             checks: vec![(format!("infra: {err}"), false)],
+            repeats: 1,
             ..Default::default()
         }
     }
 
     fn to_json(&self) -> Json {
-        let stages = self
-            .stages
-            .iter()
-            .map(|(stage, q)| {
-                (
-                    stage.clone(),
-                    Json::Obj(vec![
-                        ("p50_us".into(), Json::Num(q.p50_us as f64)),
-                        ("p99_us".into(), Json::Num(q.p99_us as f64)),
-                        ("p999_us".into(), Json::Num(q.p999_us as f64)),
-                        ("count".into(), Json::Num(q.count as f64)),
-                    ]),
-                )
-            })
-            .collect();
+        let stage_obj = |m: &BTreeMap<String, StageQuantiles>| -> Vec<(String, Json)> {
+            m.iter()
+                .map(|(stage, q)| {
+                    (
+                        stage.clone(),
+                        Json::Obj(vec![
+                            ("p50_us".into(), Json::Num(q.p50_us as f64)),
+                            ("p99_us".into(), Json::Num(q.p99_us as f64)),
+                            ("p999_us".into(), Json::Num(q.p999_us as f64)),
+                            ("count".into(), Json::Num(q.count as f64)),
+                        ]),
+                    )
+                })
+                .collect()
+        };
+        let stages = stage_obj(&self.stages);
         let checks = self
             .checks
             .iter()
@@ -167,7 +185,7 @@ impl ScenarioResult {
                 ])
             })
             .collect();
-        Json::Obj(vec![
+        let mut fields = vec![
             ("name".into(), Json::Str(self.name.clone())),
             ("kind".into(), Json::Str(self.kind.clone())),
             ("ok".into(), Json::Bool(self.ok)),
@@ -194,7 +212,17 @@ impl ScenarioResult {
                 Json::Str(format!("{:016x}", self.schedule_digest)),
             ),
             ("checks".into(), Json::Arr(checks)),
-        ])
+            ("repeats".into(), Json::Num(self.repeats.max(1) as f64)),
+        ];
+        // schema-append, not schema-change: readers that predate repeats
+        // ignore these keys, and single runs omit stages_merged entirely
+        if !self.stages_merged.is_empty() {
+            fields.push((
+                "stages_merged".into(),
+                Json::Obj(stage_obj(&self.stages_merged)),
+            ));
+        }
+        Json::Obj(fields)
     }
 
     fn from_json(v: &Json) -> Result<ScenarioResult> {
@@ -215,26 +243,31 @@ impl ScenarioResult {
                 .and_then(|x| x.as_f64())
                 .with_context(|| format!("latency_ms missing {key}"))
         };
-        let mut stages = BTreeMap::new();
-        if let Some(Json::Obj(fields)) = v.get("stages") {
-            for (stage, q) in fields {
-                let f = |key: &str| -> Result<u64> {
-                    Ok(q.get(key)
-                        .and_then(|x| x.as_f64())
-                        .with_context(|| format!("stage {stage} missing {key}"))?
-                        as u64)
-                };
-                stages.insert(
-                    stage.clone(),
-                    StageQuantiles {
-                        p50_us: f("p50_us")?,
-                        p99_us: f("p99_us")?,
-                        p999_us: f("p999_us")?,
-                        count: f("count")?,
-                    },
-                );
+        let parse_stage_map = |key: &str| -> Result<BTreeMap<String, StageQuantiles>> {
+            let mut out = BTreeMap::new();
+            if let Some(Json::Obj(fields)) = v.get(key) {
+                for (stage, q) in fields {
+                    let f = |key: &str| -> Result<u64> {
+                        Ok(q.get(key)
+                            .and_then(|x| x.as_f64())
+                            .with_context(|| format!("stage {stage} missing {key}"))?
+                            as u64)
+                    };
+                    out.insert(
+                        stage.clone(),
+                        StageQuantiles {
+                            p50_us: f("p50_us")?,
+                            p99_us: f("p99_us")?,
+                            p999_us: f("p999_us")?,
+                            count: f("count")?,
+                        },
+                    );
+                }
             }
-        }
+            Ok(out)
+        };
+        let stages = parse_stage_map("stages")?;
+        let stages_merged = parse_stage_map("stages_merged")?;
         let mut checks = Vec::new();
         if let Some(Json::Arr(items)) = v.get("checks") {
             for c in items {
@@ -277,6 +310,13 @@ impl ScenarioResult {
             cpu_ticks: num_field("cpu_ticks")? as u64,
             schedule_digest,
             checks,
+            // absent in pre-repeats summaries: a single run
+            repeats: v
+                .get("repeats")
+                .and_then(|x| x.as_f64())
+                .map_or(1, |n| (n as u64).max(1)),
+            stages_merged,
+            stage_snaps: BTreeMap::new(),
         })
     }
 }
@@ -451,6 +491,9 @@ mod tests {
             cpu_ticks: 120,
             schedule_digest: 0xDEAD_BEEF_0123_4567,
             checks: vec![("requests>=total".into(), true)],
+            repeats: 1,
+            stages_merged: BTreeMap::new(),
+            stage_snaps: BTreeMap::new(),
         }
     }
 
@@ -474,7 +517,37 @@ mod tests {
         assert_eq!(f.stages, s.scenarios[0].stages);
         assert_eq!(f.schedule_digest, 0xDEAD_BEEF_0123_4567);
         assert_eq!(f.checks, s.scenarios[0].checks);
+        assert_eq!(f.repeats, 1);
+        assert!(f.stages_merged.is_empty());
         assert!(back.all_ok());
+    }
+
+    #[test]
+    fn repeats_and_merged_stages_roundtrip() {
+        let mut r = sample_result("fanout", 12.0);
+        r.repeats = 3;
+        r.stages_merged.insert(
+            "prefill".to_string(),
+            StageQuantiles { p50_us: 512, p99_us: 4096, p999_us: 8192, count: 72 },
+        );
+        let s = Summary { scenarios: vec![r.clone()], ..Default::default() };
+        let back = Summary::parse(&s.render()).unwrap();
+        let f = back.get("fanout").unwrap();
+        assert_eq!(f.repeats, 3);
+        assert_eq!(f.stages_merged, r.stages_merged);
+        // and a pre-repeats summary (no such keys) still parses: defaults
+        let old_json = format!(
+            "{{\"schema\":1,\"seed\":1,\"quick\":false,\"scenarios\":[{}]}}",
+            r#"{"name":"fanout","kind":"deterministic","ok":true,
+                "requests_ok":1,"empty":0,"failures":0,"wall_s":1,
+                "throughput_rps":1,
+                "latency_ms":{"p50":1,"p90":1,"p99":1,"p999":1,"max":1},
+                "stages":{},"peak_rss_bytes":0,"cpu_ticks":0,
+                "schedule_digest":"00000000000000aa","checks":[]}"#
+        );
+        let old = Summary::parse(&old_json).unwrap();
+        assert_eq!(old.get("fanout").unwrap().repeats, 1);
+        assert!(old.get("fanout").unwrap().stages_merged.is_empty());
     }
 
     #[test]

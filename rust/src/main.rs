@@ -9,6 +9,7 @@
 //!   serve           checkpoint-backed inference server (request batching)
 //!   client          protocol client / load generator
 //!   loadtest        scenario + chaos load harness with SLO gates
+//!   tail            follow / summarize a run's trace.jsonl
 //!   bench-diff      gate bench JSON against the checked-in baseline
 //!   info            list available models/recipes (or pjrt artifacts)
 //!
@@ -41,6 +42,8 @@ COMMANDS:
   client         talk to a server; --requests N turns it into a load gen
   loadtest       run the scenario/chaos load harness against spawned
                  servers; writes OUT_DIR/loadtest/summary.json
+  tail           read a run dir's trace.jsonl: live follow (--follow),
+                 offline summary, or Chrome trace export
   bench-diff     diff a bench JSON report against the checked-in baseline
   info           list models/recipes (native) or artifacts (pjrt)
   help           this text
@@ -56,6 +59,21 @@ COMMON FLAGS:
                     bit-identical trajectories for every N)
   --resume DIR      resume params+Adam+step from a checkpoint dir (errors
                     on model/recipe mismatch)
+
+TRAIN TELEMETRY FLAGS:
+  --metrics-port P  train: serve live GET /metrics (Prometheus) and
+                    GET /progress (JSON) from the training process on
+                    port P (0 = off, the default)
+  --no-trace        train/diag: skip the crash-durable JSONL run trace
+                    (runs/<model>_<recipe>/trace.jsonl, on by default)
+
+TAIL USAGE: chon tail RUNDIR [--follow] [--chrome-trace FILE]
+  RUNDIR            a run dir holding trace.jsonl, the file itself, or
+                    an out-dir root containing exactly one run dir
+  --follow          poll for new events and print them live (stops at
+                    run_end)
+  --chrome-trace F  write phase spans as Chrome trace-event JSON (open
+                    in chrome://tracing or ui.perfetto.dev)
 
 SERVE/CLIENT FLAGS:
   --checkpoint DIR  checkpoint dir (or parent; highest step wins);
@@ -117,6 +135,9 @@ LOADTEST FLAGS:
                     over tolerance AND over this to fail (default 20)
   --inject-latency-ms MS  add artificial client-side latency per request
                     (CI uses this to prove the gate catches regressions)
+  --repeats N       run every scenario N times (default 1); stage
+                    latency histograms are merged across repeats and
+                    reported as stages_merged in summary.json
 
 The native backend runs the tiny GLA/SA training step in pure Rust — no
 artifacts directory and no libxla needed; runs are bit-reproducible for a
@@ -177,6 +198,37 @@ fn sensitivity_ops(cfg: &RunConfig) -> Result<Vec<String>> {
     Ok(ops)
 }
 
+/// `chon tail RUNDIR [--follow] [--chrome-trace FILE]` — positional
+/// target, so it parses its own flags like `bench-diff` does.
+fn tail_cmd(args: &[String]) -> Result<()> {
+    let mut target: Option<PathBuf> = None;
+    let mut follow = false;
+    let mut chrome: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--follow" => follow = true,
+            "--chrome-trace" => {
+                chrome = Some(PathBuf::from(it.next().ok_or_else(|| {
+                    anyhow::anyhow!("--chrome-trace needs a file path")
+                })?));
+            }
+            other if other.starts_with("--") => {
+                bail!("unknown tail flag {other:?}");
+            }
+            path => {
+                if target.is_some() {
+                    bail!("tail takes one RUNDIR, got a second: {path:?}");
+                }
+                target = Some(PathBuf::from(path));
+            }
+        }
+    }
+    let target =
+        target.ok_or_else(|| anyhow::anyhow!("usage: chon tail RUNDIR [--follow] [--chrome-trace FILE]"))?;
+    chon::obs::tail::run(&chon::obs::tail::TailOpts { target, follow, chrome })
+}
+
 /// `bench-diff` takes its own flags (file paths, not run config).
 fn bench_diff(args: &[String]) -> Result<()> {
     let mut baseline = PathBuf::from("benches/baseline/perf_baseline.json");
@@ -225,6 +277,11 @@ fn main() -> Result<()> {
     };
     if cmd == "bench-diff" {
         return bench_diff(&args[1..]);
+    }
+    if cmd == "tail" {
+        // positional RUNDIR would trip cfg.apply_args, so tail parses
+        // its own flags like bench-diff
+        return tail_cmd(&args[1..]);
     }
     let mut cfg = RunConfig::default();
     cfg.apply_args(&args[1..])?;
@@ -277,6 +334,24 @@ fn main() -> Result<()> {
                     tr.cfg.model, tr.cfg.recipe, tr.state.step
                 );
             }
+            // live telemetry: gauges/histograms fed by the trainer, the
+            // crash-durable trace + incremental train.csv, and (with
+            // --metrics-port) a /metrics + /progress listener thread
+            let obs = chon::obs::train::TrainObs::new(tr.spans.clone());
+            obs.set_build_info(&tr.cfg.backend, &tr.cfg.recipe);
+            tr.set_obs(obs.clone());
+            tr.enable_run_outputs()?;
+            let metrics_srv = if tr.cfg.metrics_port > 0 {
+                let srv = chon::obs::train::MetricsServer::serve(
+                    &tr.cfg.host,
+                    tr.cfg.metrics_port,
+                    obs,
+                )?;
+                println!("train metrics on {}:{}", tr.cfg.host, srv.port());
+                Some(srv)
+            } else {
+                None
+            };
             let n = if steps > 0 { steps } else { tr.total_steps };
             tr.train(n)?;
             if tr.ensure_eval().is_some() {
@@ -299,6 +374,11 @@ fn main() -> Result<()> {
                 tr.log.mean_step_ms(),
                 dir.display()
             );
+            // scrape-after-finish races in CI are real: keep the
+            // listener up through the final outputs, then stop cleanly
+            if let Some(mut srv) = metrics_srv {
+                srv.stop();
+            }
         }
         "serve" => {
             // --checkpoint registers "default"; --model NAME=DIR adds
@@ -330,6 +410,10 @@ fn main() -> Result<()> {
                 obs_outliers: cfg.obs_outliers,
                 packed_compute: cfg.packed_compute,
             };
+            reg_opts.obs.set_build_info(
+                "native",
+                if cfg.packed_compute { "packed" } else { "fake-quant" },
+            );
             if cfg.packed_compute {
                 println!(
                     "packed-compute on: SIMD kernel {}",
@@ -439,6 +523,9 @@ fn main() -> Result<()> {
             cfg.diag_every = if cfg.diag_every == 0 { 10 } else { cfg.diag_every };
             let steps = cfg.steps;
             let mut tr = Trainer::new(cfg)?;
+            // diag runs get the trace too — probe-dense traces are what
+            // `chon tail` persistence analysis is for
+            tr.enable_run_outputs()?;
             let n = if steps > 0 { steps } else { tr.total_steps };
             tr.train(n)?;
             let dir = tr.write_outputs()?;
@@ -511,6 +598,7 @@ fn main() -> Result<()> {
                 inject_latency_ms: cfg.inject_latency_ms,
                 model: cfg.model.clone(),
                 recipe: cfg.recipe.clone(),
+                repeats: cfg.repeats.max(1),
             };
             let summary = chon::loadtest::run(&opts)?;
             if !summary.all_ok() {

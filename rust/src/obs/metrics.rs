@@ -82,6 +82,26 @@ impl Gauge {
     }
 }
 
+/// A float-valued gauge (loss, learning rate, tokens/s): the f64 bits
+/// ride in an `AtomicU64`, so set/get stay lock-free like every other
+/// primitive here. No arithmetic on the stored value — last write wins.
+#[derive(Default)]
+pub struct GaugeF64(AtomicU64);
+
+impl GaugeF64 {
+    pub fn new() -> GaugeF64 {
+        GaugeF64(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
 /// Fixed-bucket log₂-spaced latency histogram over µs values.
 pub struct Histogram {
     buckets: [AtomicU64; N_BUCKETS],

@@ -11,6 +11,11 @@
 //! * [`Registry`] — one server's metric tree: reactor-level spans and
 //!   health gauges plus per-model stage histograms, rendered into one
 //!   scrape body by [`Registry::render`].
+//! * [`trace`] — the crash-durable JSONL run trace training writes.
+//! * [`train`] — train-path gauges/histograms + the `--metrics-port`
+//!   scrape listener (`/metrics`, `/progress`).
+//! * [`tail`] — `chon tail`: follow/summarize/Chrome-trace-export a
+//!   run trace.
 //!
 //! Stage spans cover the whole request path —
 //! accept → parse → queue-wait → prefill → decode-per-token →
@@ -23,6 +28,9 @@
 pub mod expo;
 pub mod metrics;
 pub mod outliers;
+pub mod tail;
+pub mod trace;
+pub mod train;
 
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -88,6 +96,9 @@ pub struct ServerObs {
 pub struct Registry {
     pub server: ServerObs,
     models: Mutex<Vec<(String, Arc<ModelObs>)>>,
+    /// deployment identity (backend, recipe/compute-mode) exported as
+    /// `chon_build_info`; unset until the binary stamps it
+    build: Mutex<Option<(String, String)>>,
 }
 
 /// How many weight-score channels are exposed per op (cardinality cap;
@@ -122,8 +133,32 @@ impl Registry {
     /// Render every family owned by this registry into Prometheus text.
     /// (The serve front end appends its `ServeStats`-derived counter
     /// families to this body — see `ModelRegistry::metrics_text`.)
+    /// Stamp the deployment identity exported as `chon_build_info`
+    /// (same family the train registry exports, so scrapes can tell
+    /// deployments apart). `recipe` is the serve compute mode.
+    pub fn set_build_info(&self, backend: &str, recipe: &str) {
+        *self.build.lock().unwrap() =
+            Some((backend.to_string(), recipe.to_string()));
+    }
+
     pub fn render(&self) -> String {
         let mut e = expo::Expo::new();
+        if let Some((backend, recipe)) = self.build.lock().unwrap().clone() {
+            e.family(
+                "chon_build_info",
+                "gauge",
+                "Build/deployment identity (always 1).",
+            );
+            e.sample(
+                "chon_build_info",
+                &[
+                    ("version", env!("CARGO_PKG_VERSION")),
+                    ("backend", &backend),
+                    ("recipe", &recipe),
+                ],
+                1,
+            );
+        }
         let s = &self.server;
         e.family(
             "chon_conn_stage_us",
@@ -360,6 +395,18 @@ mod tests {
         assert!(!text.contains("chon_hcp_"));
         // no weight gauge until an engine install records it
         assert!(!text.contains("chon_model_weight_bytes"));
+    }
+
+    #[test]
+    fn render_build_info_when_stamped() {
+        let r = Registry::new();
+        assert!(!r.render().contains("chon_build_info"));
+        r.set_build_info("native", "packed");
+        let text = r.render();
+        assert!(text.contains(&format!(
+            "chon_build_info{{version=\"{}\",backend=\"native\",recipe=\"packed\"}} 1\n",
+            env!("CARGO_PKG_VERSION")
+        )), "{text}");
     }
 
     #[test]

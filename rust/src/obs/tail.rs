@@ -1,0 +1,503 @@
+//! `chon tail RUNDIR` — read a run's crash-durable trace and either
+//! follow it live (`--follow`), summarize it offline (loss trajectory,
+//! phase-time breakdown, hot-channel lifecycle + persistence series),
+//! or export the phase spans as a Chrome trace-event file
+//! (`--chrome-trace out.json`, loadable in `chrome://tracing` /
+//! `ui.perfetto.dev`). Works on torn traces from SIGKILLed runs — the
+//! reader drops the one torn final line and summarizes everything up to
+//! the last completed step.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::diagnostics;
+use crate::obs::trace::{self, TRACE_FILE};
+use crate::obs::train::PHASES;
+use crate::util::json::Json;
+
+pub struct TailOpts {
+    /// a run dir containing `trace.jsonl`, the file itself, or an
+    /// out-dir root holding exactly one run dir
+    pub target: PathBuf,
+    /// follow mode: poll for appended events and print them live
+    pub follow: bool,
+    /// write Chrome trace-event JSON of the phase spans here
+    pub chrome: Option<PathBuf>,
+}
+
+/// Resolve the trace file from a run dir / trace path / out-dir root.
+pub fn resolve_trace(target: &Path) -> Result<PathBuf> {
+    if target.is_file() {
+        return Ok(target.to_path_buf());
+    }
+    let direct = target.join(TRACE_FILE);
+    if direct.is_file() {
+        return Ok(direct);
+    }
+    // an out-dir root: accept it iff exactly one run dir has a trace
+    let mut found = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(target) {
+        for entry in rd.flatten() {
+            let p = entry.path().join(TRACE_FILE);
+            if p.is_file() {
+                found.push(p);
+            }
+        }
+    }
+    match found.len() {
+        1 => Ok(found.remove(0)),
+        0 => bail!("no {TRACE_FILE} under {}", target.display()),
+        _ => bail!(
+            "{} run dirs with a {TRACE_FILE} under {} — name one: {}",
+            found.len(),
+            target.display(),
+            found
+                .iter()
+                .filter_map(|p| p.parent())
+                .map(|p| p.display().to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+pub fn run(opts: &TailOpts) -> Result<()> {
+    let path = resolve_trace(&opts.target)?;
+    if opts.follow {
+        return follow(&path);
+    }
+    let events = trace::read_events(&path)?;
+    let view = trace::logical_view(&events);
+    print_summary(&path, &view);
+    if let Some(out) = &opts.chrome {
+        write_chrome_trace(&view, out)?;
+        println!(
+            "chrome trace -> {} (load in chrome://tracing or ui.perfetto.dev)",
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+/// Per-component persistence series from the trace's stored top-k sets:
+/// Jaccard overlap between consecutive probes, i.e. exactly what
+/// `Monitor::hot_channel_persistence` computes from full channel maps
+/// (the trace stores the top-k selection itself, so the sets match).
+pub fn persistence_series(view: &[Json]) -> Vec<(String, Vec<(u64, f64)>)> {
+    let mut comps: Vec<(String, Vec<(u64, Vec<(usize, f32)>)>)> = Vec::new();
+    for e in view.iter().filter(|e| trace::kind(e) == Some("diag")) {
+        let Some(step) = trace::step(e) else { continue };
+        let Some(Json::Obj(topk)) = e.get("topk") else { continue };
+        for (comp, arr) in topk {
+            let Some(pairs) = arr.as_arr() else { continue };
+            let set: Vec<(usize, f32)> = pairs
+                .iter()
+                .filter_map(|p| {
+                    let p = p.as_arr()?;
+                    Some((
+                        p.first()?.as_f64()? as usize,
+                        p.get(1)?.as_f64()? as f32,
+                    ))
+                })
+                .collect();
+            match comps.iter_mut().find(|(n, _)| n == comp) {
+                Some((_, probes)) => probes.push((step, set)),
+                None => comps.push((comp.clone(), vec![(step, set)])),
+            }
+        }
+    }
+    comps
+        .into_iter()
+        .map(|(name, probes)| {
+            let series = probes
+                .windows(2)
+                .map(|w| {
+                    (w[1].0, diagnostics::channel_overlap(&w[0].1, &w[1].1))
+                })
+                .collect();
+            (name, series)
+        })
+        .collect()
+}
+
+/// Total µs per phase summed over span + diag events, in PHASES order.
+pub fn phase_totals(view: &[Json]) -> Vec<(String, u64)> {
+    let mut totals: Vec<(String, u64)> =
+        PHASES.iter().map(|p| (p.to_string(), 0)).collect();
+    for e in view {
+        match trace::kind(e) {
+            Some("span") => {
+                if let Some(Json::Obj(us)) = e.get("us") {
+                    for (phase, v) in us {
+                        if let (Some(t), Some(v)) = (
+                            totals.iter_mut().find(|(p, _)| p == phase),
+                            v.as_f64(),
+                        ) {
+                            t.1 += v as u64;
+                        }
+                    }
+                }
+            }
+            Some("diag") => {
+                if let Some(us) = e.get("us").and_then(|v| v.as_f64()) {
+                    if let Some(t) =
+                        totals.iter_mut().find(|(p, _)| p == "diag_probe")
+                    {
+                        t.1 += us as u64;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    totals
+}
+
+fn print_summary(path: &Path, view: &[Json]) {
+    println!("trace: {}", path.display());
+    if let Some(rs) =
+        view.iter().find(|e| trace::kind(e) == Some("run_start"))
+    {
+        let s = |k: &str| {
+            rs.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string()
+        };
+        let n = |k: &str| rs.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "run: model {} recipe {} backend {} seed {} shards {} \
+             batch {}x{} total_steps {}",
+            s("model"),
+            s("recipe"),
+            s("backend"),
+            n("seed"),
+            n("shards"),
+            n("batch"),
+            n("seq_len"),
+            n("total_steps"),
+        );
+    }
+    let series = trace::loss_series(view);
+    let count = |k: &str| {
+        view.iter().filter(|e| trace::kind(e) == Some(k)).count()
+    };
+    let (resumes, ckpts) = (count("resume"), count("ckpt"));
+    let ended = count("run_end") > 0;
+    match (series.first(), series.last()) {
+        (Some(&(s0, l0)), Some(&(s1, l1))) => {
+            let min = series
+                .iter()
+                .map(|&(_, l)| l)
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "steps: {} ({}..{}), loss {:.4} -> {:.4} (min {:.4}), \
+                 {} ckpt(s), {} resume(s){}",
+                series.len(),
+                s0,
+                s1,
+                l0,
+                l1,
+                min,
+                ckpts,
+                resumes,
+                if ended { "" } else { " [no run_end: interrupted]" }
+            );
+        }
+        _ => println!(
+            "steps: 0, {} ckpt(s), {} resume(s){}",
+            ckpts,
+            resumes,
+            if ended { "" } else { " [no run_end: interrupted]" }
+        ),
+    }
+
+    let totals = phase_totals(view);
+    let sum: u64 = totals.iter().map(|(_, v)| *v).sum();
+    if sum > 0 {
+        let line = totals
+            .iter()
+            .filter(|(_, v)| *v > 0)
+            .map(|(p, v)| {
+                format!("{p} {:.1}ms ({:.0}%)", *v as f64 / 1e3, *v as f64
+                    / sum as f64
+                    * 100.0)
+            })
+            .collect::<Vec<_>>()
+            .join("  ");
+        println!("phases: {line}");
+    }
+
+    let (births, deaths) = (count("hot_birth"), count("hot_death"));
+    let pers = persistence_series(view);
+    if !pers.is_empty() || births + deaths > 0 {
+        println!("hot channels: {births} birth(s), {deaths} death(s)");
+        for (comp, series) in &pers {
+            let js: Vec<String> =
+                series.iter().map(|&(_, j)| format!("{j:.2}")).collect();
+            println!(
+                "  {comp} persistence (early->late): [{}]",
+                js.join(", ")
+            );
+        }
+    }
+}
+
+/// One human line per event, shared by follow mode.
+fn human_line(e: &Json) -> Option<String> {
+    let n = |k: &str| e.get(k).and_then(|v| v.as_f64());
+    let s = |k: &str| e.get(k).and_then(|v| v.as_str()).unwrap_or("?");
+    match trace::kind(e)? {
+        "run_start" => Some(format!(
+            "run_start: model {} recipe {} total_steps {}",
+            s("model"),
+            s("recipe"),
+            n("total_steps").unwrap_or(0.0)
+        )),
+        "step" => Some(format!(
+            "step {:>5}  loss {:.4}  lr {:.2e}  {:.0} tok/s",
+            n("step").unwrap_or(0.0),
+            n("loss").unwrap_or(f64::NAN),
+            n("lr").unwrap_or(0.0),
+            n("tokens_per_s").unwrap_or(0.0),
+        )),
+        "diag" => Some(format!(
+            "diag @{}: {} metrics",
+            n("step").unwrap_or(0.0),
+            e.get("values").and_then(|v| v.as_arr()).map(<[Json]>::len).unwrap_or(0)
+        )),
+        "hot_birth" => Some(format!(
+            "hot_birth @{}: {} channel {} (ewma {:.3})",
+            n("step").unwrap_or(0.0),
+            s("comp"),
+            n("channel").unwrap_or(-1.0),
+            n("ewma").unwrap_or(0.0)
+        )),
+        "hot_death" => Some(format!(
+            "hot_death @{}: {} channel {} (ewma {:.3})",
+            n("step").unwrap_or(0.0),
+            s("comp"),
+            n("channel").unwrap_or(-1.0),
+            n("ewma").unwrap_or(0.0)
+        )),
+        "ckpt" => Some(format!(
+            "ckpt @{}: {}",
+            n("step").unwrap_or(0.0),
+            s("path")
+        )),
+        "resume" => Some(format!(
+            "resume @{}: from {}",
+            n("step").unwrap_or(0.0),
+            s("from")
+        )),
+        "run_end" => Some(format!(
+            "run_end @{}: loss {:.4}",
+            n("step").unwrap_or(0.0),
+            n("loss").unwrap_or(f64::NAN)
+        )),
+        _ => None,
+    }
+}
+
+/// Follow mode: poll the file for appended *complete* lines, print one
+/// human line per event, stop at `run_end` (or Ctrl-C).
+fn follow(path: &Path) -> Result<()> {
+    let mut offset = 0usize;
+    loop {
+        let text = std::fs::read_to_string(path).unwrap_or_default();
+        if text.len() < offset {
+            // truncated/recreated underneath us: start over
+            println!("[trace truncated — following from the top]");
+            offset = 0;
+        }
+        let new = &text[offset..];
+        let mut done = false;
+        if let Some(last_nl) = new.rfind('\n') {
+            for line in new[..=last_nl].lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let Ok(ev) = Json::parse(line) else { continue };
+                if let Some(h) = human_line(&ev) {
+                    println!("{h}");
+                }
+                if trace::kind(&ev) == Some("run_end") {
+                    done = true;
+                }
+            }
+            offset += last_nl + 1;
+        }
+        if done {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
+}
+
+/// Chrome trace-event export: every span/diag phase as a complete "X"
+/// event on one timeline, laid end to end on a cumulative µs cursor
+/// (the trace stores durations, not absolute timestamps), plus instant
+/// markers for ckpt/resume. pid 1; tid = phase index so the viewer
+/// shows one row per phase.
+pub fn write_chrome_trace(view: &[Json], out: &Path) -> Result<()> {
+    let mut cursor = 0u64;
+    let mut evs: Vec<Json> = Vec::new();
+    let x_event = |name: &str, ts: u64, dur: u64, tid: usize, step: f64| {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(name.to_string())),
+            ("cat".into(), Json::Str("phase".into())),
+            ("ph".into(), Json::Str("X".into())),
+            ("ts".into(), Json::Num(ts as f64)),
+            ("dur".into(), Json::Num(dur as f64)),
+            ("pid".into(), Json::Num(1.0)),
+            ("tid".into(), Json::Num(tid as f64 + 1.0)),
+            (
+                "args".into(),
+                Json::Obj(vec![("step".into(), Json::Num(step))]),
+            ),
+        ])
+    };
+    for e in view {
+        let step = trace::step(e).unwrap_or(0) as f64;
+        match trace::kind(e) {
+            Some("span") => {
+                if let Some(Json::Obj(us)) = e.get("us") {
+                    // phases in canonical order, not object order
+                    for (i, phase) in PHASES.iter().enumerate() {
+                        let Some(dur) = us
+                            .iter()
+                            .find(|(p, _)| p == phase)
+                            .and_then(|(_, v)| v.as_f64())
+                        else {
+                            continue;
+                        };
+                        let dur = dur as u64;
+                        if dur == 0 {
+                            continue;
+                        }
+                        evs.push(x_event(phase, cursor, dur, i, step));
+                        cursor += dur;
+                    }
+                }
+            }
+            Some("diag") => {
+                if let Some(dur) = e.get("us").and_then(|v| v.as_f64()) {
+                    let dur = dur as u64;
+                    evs.push(x_event(
+                        "diag_probe",
+                        cursor,
+                        dur,
+                        PHASES.len() - 1,
+                        step,
+                    ));
+                    cursor += dur;
+                }
+            }
+            Some(k @ ("ckpt" | "resume")) => {
+                evs.push(Json::Obj(vec![
+                    ("name".into(), Json::Str(k.to_string())),
+                    ("cat".into(), Json::Str("marker".into())),
+                    ("ph".into(), Json::Str("i".into())),
+                    ("s".into(), Json::Str("g".into())),
+                    ("ts".into(), Json::Num(cursor as f64)),
+                    ("pid".into(), Json::Num(1.0)),
+                    ("tid".into(), Json::Num(1.0)),
+                ]));
+            }
+            _ => {}
+        }
+    }
+    let doc = Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(evs)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ]);
+    let mut f = std::fs::File::create(out)
+        .with_context(|| format!("create {}", out.display()))?;
+    f.write_all(doc.render().as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view_from(text: &str) -> Vec<Json> {
+        trace::logical_view(&trace::parse_events(text).unwrap())
+    }
+
+    #[test]
+    fn persistence_series_matches_overlap_semantics() {
+        // probe 1 and 2 share {3}, probe 2 and 3 share {3,5} fully
+        let text = concat!(
+            "{\"ev\":\"diag\",\"step\":10,\"us\":5,\"values\":[],\"topk\":{\"attn_o\":[[3,2.0],[1,1.0]]}}\n",
+            "{\"ev\":\"diag\",\"step\":20,\"us\":5,\"values\":[],\"topk\":{\"attn_o\":[[3,2.1],[5,1.2]]}}\n",
+            "{\"ev\":\"diag\",\"step\":30,\"us\":5,\"values\":[],\"topk\":{\"attn_o\":[[5,2.2],[3,1.9]]}}\n",
+        );
+        let p = persistence_series(&view_from(text));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].0, "attn_o");
+        // {3,1} vs {3,5}: |∩|=1 |∪|=3 -> 1/3; {3,5} vs {5,3} -> 1.0
+        assert_eq!(p[0].1.len(), 2);
+        assert_eq!(p[0].1[0].0, 20);
+        assert!((p[0].1[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(p[0].1[1], (30, 1.0));
+    }
+
+    #[test]
+    fn phase_totals_sum_span_and_diag() {
+        let text = concat!(
+            "{\"ev\":\"span\",\"step\":1,\"us\":{\"data_wait\":10,\"fwd_bwd\":100,\"allreduce\":5,\"adam\":7}}\n",
+            "{\"ev\":\"span\",\"step\":2,\"us\":{\"data_wait\":20,\"fwd_bwd\":200,\"allreduce\":5,\"adam\":7}}\n",
+            "{\"ev\":\"diag\",\"step\":2,\"us\":40,\"values\":[],\"topk\":{}}\n",
+        );
+        let t = phase_totals(&view_from(text));
+        let get = |p: &str| t.iter().find(|(n, _)| n == p).unwrap().1;
+        assert_eq!(get("data_wait"), 30);
+        assert_eq!(get("fwd_bwd"), 300);
+        assert_eq!(get("diag_probe"), 40);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_x_events() {
+        let text = concat!(
+            "{\"ev\":\"span\",\"step\":1,\"us\":{\"data_wait\":10,\"fwd_bwd\":100,\"allreduce\":5,\"adam\":7}}\n",
+            "{\"ev\":\"ckpt\",\"step\":1,\"path\":\"/tmp/x\"}\n",
+        );
+        let dir = std::env::temp_dir().join("chon_tail_chrome");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("trace.json");
+        write_chrome_trace(&view_from(text), &out).unwrap();
+        let doc =
+            Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        // 4 phase X events + 1 instant marker
+        assert_eq!(evs.len(), 5);
+        let first = &evs[0];
+        assert_eq!(first.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(first.get("name").and_then(|v| v.as_str()), Some("data_wait"));
+        // spans are laid end to end: second starts where first ends
+        assert_eq!(evs[1].get("ts").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(
+            evs.last().unwrap().get("ph").and_then(|v| v.as_str()),
+            Some("i")
+        );
+    }
+
+    #[test]
+    fn resolve_trace_finds_single_run_dir() {
+        let root = std::env::temp_dir().join("chon_tail_resolve");
+        let _ = std::fs::remove_dir_all(&root);
+        let run = root.join("tiny_gla_chon");
+        std::fs::create_dir_all(&run).unwrap();
+        assert!(resolve_trace(&root).is_err(), "no trace yet");
+        std::fs::write(run.join(TRACE_FILE), "").unwrap();
+        // all three spellings resolve to the same file
+        let direct = resolve_trace(&run.join(TRACE_FILE)).unwrap();
+        assert_eq!(resolve_trace(&run).unwrap(), direct);
+        assert_eq!(resolve_trace(&root).unwrap(), direct);
+        // ambiguity is an error, not a guess
+        let run2 = root.join("tiny_gla_bf16");
+        std::fs::create_dir_all(&run2).unwrap();
+        std::fs::write(run2.join(TRACE_FILE), "").unwrap();
+        assert!(resolve_trace(&root).is_err());
+    }
+}

@@ -1,0 +1,257 @@
+//! Crash-durable append-only run trace: one JSON object per line in
+//! `runs/<run>/trace.jsonl`, written through an unbuffered `write_all`
+//! per record so a SIGKILL loses at most the one torn final line the
+//! reader is required to tolerate. Everything the in-memory `Monitor`
+//! and `MetricLog` hold rides in the trace too — a crashed run's loss
+//! series and hot-channel history are recoverable with `chon tail`, and
+//! `Monitor::from_trace_events` rebuilds the metric-series view.
+//!
+//! Event kinds (the `"ev"` key), all carrying `"step"` where it makes
+//! sense:
+//!
+//! | ev          | payload                                                        |
+//! |-------------|----------------------------------------------------------------|
+//! | `run_start` | model, recipe, seed, shards, batch, seq_len, total_steps, metric_names, version |
+//! | `step`      | loss, grad_norm, lr, wall_ms, tokens, tokens_per_s             |
+//! | `span`      | us: {phase → µs} for the step's phases                         |
+//! | `diag`      | us, values (full metric vector), topk: {comp → [[chan, mag]…]} |
+//! | `hot_birth` | comp, channel, ewma — channel classified persistent            |
+//! | `hot_death` | comp, channel, ewma — persistent channel went cold             |
+//! | `ckpt`      | path — checkpoint written                                      |
+//! | `resume`    | from — run resumed at `step` from a checkpoint                 |
+//! | `run_end`   | loss — clean completion marker                                 |
+//!
+//! Resume appends to the existing trace (validated: the resume step must
+//! not open a gap past the last traced step). Because resumed training
+//! is bit-identical to uninterrupted training, [`logical_view`] can drop
+//! the stale post-resume tail of the crashed incarnation and the
+//! remaining step series equals an uninterrupted run's exactly.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// File name of the trace inside a run directory.
+pub const TRACE_FILE: &str = "trace.jsonl";
+
+/// Event kinds that are superseded by a later `resume` at an earlier
+/// step (the re-executed steps re-emit them bit-identically). Markers
+/// (`run_start`, `ckpt`, `resume`, `run_end`) narrate the run's actual
+/// history and are never dropped.
+const STEP_KEYED: &[&str] = &["step", "span", "diag", "hot_birth", "hot_death"];
+
+/// Append-only writer. Each [`emit`](TraceWriter::emit) is a single
+/// unbuffered `write_all` of `line + "\n"` straight to the kernel: no
+/// user-space buffer exists to lose on SIGKILL.
+pub struct TraceWriter {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl TraceWriter {
+    /// Create (truncate) a fresh trace.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create trace {}", path.display()))?;
+        Ok(TraceWriter { file, path: path.to_path_buf() })
+    }
+
+    /// Open an existing trace for appending (the `--resume` path).
+    pub fn append(path: &Path) -> Result<TraceWriter> {
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("append trace {}", path.display()))?;
+        Ok(TraceWriter { file, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write one event line. `&self` on purpose: `&File` is `Write`, so
+    /// emitting from `&self` methods (checkpoint save) needs no `&mut`.
+    pub fn emit(&self, ev: &Json) -> Result<()> {
+        let mut line = ev.render();
+        line.push('\n');
+        (&self.file)
+            .write_all(line.as_bytes())
+            .with_context(|| format!("write trace {}", self.path.display()))
+    }
+}
+
+/// Build an event object: kind plus fields, `ev` first so the lines are
+/// eyeball-greppable.
+pub fn event(kind: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut obj = vec![("ev".to_string(), Json::Str(kind.to_string()))];
+    obj.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(obj)
+}
+
+/// Event kind (the `"ev"` value).
+pub fn kind(ev: &Json) -> Option<&str> {
+    ev.get("ev").and_then(|v| v.as_str())
+}
+
+/// Event step, where present.
+pub fn step(ev: &Json) -> Option<u64> {
+    ev.get("step").and_then(|v| v.as_f64()).map(|n| n as u64)
+}
+
+/// Parse a trace's text tolerantly: a torn tail (the final non-empty
+/// line failing to parse — what SIGKILL mid-`write` leaves behind) is
+/// silently dropped; a malformed line anywhere *before* that is real
+/// corruption and errors.
+pub fn parse_events(text: &str) -> Result<Vec<Json>> {
+    let lines: Vec<&str> = text.split('\n').collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                let torn_tail =
+                    lines[i + 1..].iter().all(|l| l.trim().is_empty());
+                if torn_tail {
+                    break;
+                }
+                bail!("trace line {}: {e}", i + 1);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Read and tolerantly parse a trace file.
+pub fn read_events(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read trace {}", path.display()))?;
+    parse_events(&text).with_context(|| format!("parse trace {}", path.display()))
+}
+
+/// The logical (resume-collapsed) view: at each `resume{step: S}`,
+/// step-keyed events with step > S from earlier incarnations are
+/// dropped — those steps are about to be re-executed bit-identically,
+/// so the surviving series is exactly an uninterrupted run's. Marker
+/// events always survive.
+pub fn logical_view(events: &[Json]) -> Vec<Json> {
+    let mut out: Vec<Json> = Vec::new();
+    for ev in events {
+        if kind(ev) == Some("resume") {
+            let s = step(ev).unwrap_or(0);
+            out.retain(|e| {
+                let k = kind(e).unwrap_or("");
+                !(STEP_KEYED.contains(&k) && step(e).unwrap_or(0) > s)
+            });
+        }
+        out.push(ev.clone());
+    }
+    out
+}
+
+/// `(step, loss)` series over `step` events in the given slice (pass a
+/// [`logical_view`] for the resume-collapsed series).
+pub fn loss_series(events: &[Json]) -> Vec<(u64, f64)> {
+    events
+        .iter()
+        .filter(|e| kind(e) == Some("step"))
+        .filter_map(|e| {
+            Some((step(e)?, e.get("loss").and_then(|v| v.as_f64())?))
+        })
+        .collect()
+}
+
+/// Highest step among `step` events, if any — what resume-append
+/// monotonicity is validated against.
+pub fn last_step(events: &[Json]) -> Option<u64> {
+    events
+        .iter()
+        .filter(|e| kind(e) == Some("step"))
+        .filter_map(step)
+        .max()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_ev(s: u64, loss: f64) -> Json {
+        event(
+            "step",
+            vec![("step", Json::Num(s as f64)), ("loss", Json::Num(loss))],
+        )
+    }
+
+    #[test]
+    fn round_trip_and_accessors() {
+        let dir = std::env::temp_dir().join("chon_trace_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(TRACE_FILE);
+        let w = TraceWriter::create(&path).unwrap();
+        w.emit(&event("run_start", vec![("step", Json::Num(0.0))])).unwrap();
+        w.emit(&step_ev(1, 3.5)).unwrap();
+        w.emit(&step_ev(2, 3.25)).unwrap();
+        let evs = read_events(&path).unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(kind(&evs[0]), Some("run_start"));
+        assert_eq!(step(&evs[2]), Some(2));
+        assert_eq!(loss_series(&evs), vec![(1, 3.5), (2, 3.25)]);
+        assert_eq!(last_step(&evs), Some(2));
+    }
+
+    #[test]
+    fn torn_final_line_is_tolerated() {
+        let good = format!("{}\n{}\n", step_ev(1, 3.0).render(), step_ev(2, 2.9).render());
+        // cut mid-record, no trailing newline — the SIGKILL shape
+        let torn = format!("{good}{{\"ev\":\"step\",\"st");
+        let evs = parse_events(&torn).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(last_step(&evs), Some(2));
+        // even a newline-terminated garbage tail is torn, not corruption
+        let torn_nl = format!("{good}{{\"ev\": oops\n");
+        assert_eq!(parse_events(&torn_nl).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn torn_middle_line_is_corruption() {
+        let text = format!(
+            "{}\nnot json at all\n{}\n",
+            step_ev(1, 3.0).render(),
+            step_ev(2, 2.9).render()
+        );
+        let err = parse_events(&text).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn logical_view_collapses_resume() {
+        // incarnation 1 ran steps 1..=4, checkpointed at 2, crashed;
+        // incarnation 2 resumed at 2 and re-ran 3..=5
+        let mut evs = vec![event("run_start", vec![("step", Json::Num(0.0))])];
+        for s in 1..=4 {
+            evs.push(step_ev(s, 4.0 - s as f64 * 0.1));
+        }
+        evs.push(event(
+            "resume",
+            vec![("step", Json::Num(2.0)), ("from", Json::Str("ck".into()))],
+        ));
+        for s in 3..=5 {
+            evs.push(step_ev(s, 4.0 - s as f64 * 0.1));
+        }
+        let view = logical_view(&evs);
+        let series = loss_series(&view);
+        assert_eq!(
+            series.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![1, 2, 3, 4, 5],
+            "each step exactly once, in order"
+        );
+        // markers survive the collapse
+        assert!(view.iter().any(|e| kind(e) == Some("resume")));
+        assert!(view.iter().any(|e| kind(e) == Some("run_start")));
+    }
+}

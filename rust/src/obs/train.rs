@@ -1,0 +1,540 @@
+//! Train-path telemetry: lock-free recording for the training hot loop,
+//! Prometheus + JSON rendering, and the tiny scrape listener behind
+//! `chon train --metrics-port P`.
+//!
+//! The trainer and the shard engine write into [`PhaseSpans`] /
+//! [`TrainObs`] with relaxed atomics only — a concurrent scrape never
+//! blocks a step. The listener is one blocking thread reusing the serve
+//! HTTP parser, answering `GET /metrics` (Prometheus 0.0.4) and
+//! `GET /progress` (a compact JSON snapshot for humans and harnesses).
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::obs::expo::{self, Expo};
+use crate::obs::metrics::{Counter, Gauge, GaugeF64, Histogram};
+use crate::serve::http::{parse_request, write_response, Parsed};
+use crate::util::json::Json;
+
+/// Step phases, in within-step execution order. Forward and backward
+/// are fused in the engine (`model::loss_and_grads` computes both in
+/// one call), so they span as one `fwd_bwd` phase rather than the two
+/// the paper's timeline splits them into.
+pub const PHASES: &[&str] =
+    &["data_wait", "fwd_bwd", "allreduce", "adam", "diag_probe"];
+pub const PH_DATA_WAIT: usize = 0;
+pub const PH_FWD_BWD: usize = 1;
+pub const PH_ALLREDUCE: usize = 2;
+pub const PH_ADAM: usize = 3;
+pub const PH_DIAG: usize = 4;
+
+/// Per-phase span sink shared between the trainer, the shard engine
+/// (which times fwd_bwd/allreduce/adam inside `ShardExec::run`) and the
+/// scrape thread: a log₂ histogram for distributions plus the last
+/// value for the per-step trace event and `/progress`.
+pub struct PhaseSpans {
+    hist: Vec<Histogram>,
+    last_us: Vec<AtomicU64>,
+}
+
+impl Default for PhaseSpans {
+    fn default() -> PhaseSpans {
+        PhaseSpans::new()
+    }
+}
+
+impl PhaseSpans {
+    pub fn new() -> PhaseSpans {
+        PhaseSpans {
+            hist: (0..PHASES.len()).map(|_| Histogram::new()).collect(),
+            last_us: (0..PHASES.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one span for phase `idx` (µs). Lock-free.
+    pub fn record(&self, idx: usize, us: u64) {
+        self.hist[idx].record(us);
+        self.last_us[idx].store(us, Ordering::Relaxed);
+    }
+
+    pub fn record_elapsed(&self, idx: usize, d: Duration) {
+        self.record(idx, d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Last recorded span for phase `idx` (µs).
+    pub fn last(&self, idx: usize) -> u64 {
+        self.last_us[idx].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self, idx: usize) -> crate::obs::metrics::HistSnapshot {
+        self.hist[idx].snapshot()
+    }
+}
+
+/// Hot-channel gauges for one diag component (attn_o, mlp_up, …).
+#[derive(Default)]
+pub struct HotCompObs {
+    /// channels currently classified persistent by the lifecycle tracker
+    pub persistent: Gauge,
+    /// channels in the latest top-k but not (yet) persistent
+    pub transient: Gauge,
+    pub births: Counter,
+    pub deaths: Counter,
+    /// Jaccard overlap of the last two probes' top-k sets
+    pub persistence: GaugeF64,
+}
+
+/// The train-side metric registry. All writes are relaxed atomics; the
+/// component list is behind a mutex but only touched at diag cadence
+/// (every `--diag-every` steps), never per step.
+pub struct TrainObs {
+    pub step: Gauge,
+    pub total_steps: Gauge,
+    pub loss: GaugeF64,
+    pub grad_norm: GaugeF64,
+    pub lr: GaugeF64,
+    pub tokens_total: Counter,
+    pub tokens_per_sec: GaugeF64,
+    pub resumes_total: Counter,
+    pub spans: Arc<PhaseSpans>,
+    comps: Mutex<Vec<(String, Arc<HotCompObs>)>>,
+    build: Mutex<Option<(String, String)>>,
+}
+
+impl TrainObs {
+    pub fn new(spans: Arc<PhaseSpans>) -> Arc<TrainObs> {
+        Arc::new(TrainObs {
+            step: Gauge::new(),
+            total_steps: Gauge::new(),
+            loss: GaugeF64::new(),
+            grad_norm: GaugeF64::new(),
+            lr: GaugeF64::new(),
+            tokens_total: Counter::new(),
+            tokens_per_sec: GaugeF64::new(),
+            resumes_total: Counter::new(),
+            spans,
+            comps: Mutex::new(Vec::new()),
+            build: Mutex::new(None),
+        })
+    }
+
+    /// Stamp the deployment identity exported as `chon_build_info`.
+    pub fn set_build_info(&self, backend: &str, recipe: &str) {
+        *self.build.lock().unwrap() =
+            Some((backend.to_string(), recipe.to_string()));
+    }
+
+    /// Get-or-create the gauges for a diag component.
+    pub fn comp(&self, name: &str) -> Arc<HotCompObs> {
+        let mut comps = self.comps.lock().unwrap();
+        if let Some((_, c)) = comps.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Arc::new(HotCompObs::default());
+        comps.push((name.to_string(), c.clone()));
+        c
+    }
+
+    /// Per-step update from the trainer.
+    pub fn record_step(
+        &self,
+        step: usize,
+        loss: f32,
+        grad_norm: f32,
+        lr: f32,
+        tokens: u64,
+        tokens_per_sec: f64,
+    ) {
+        self.step.set(step as u64);
+        self.loss.set(loss as f64);
+        self.grad_norm.set(grad_norm as f64);
+        self.lr.set(lr as f64);
+        self.tokens_total.add(tokens);
+        self.tokens_per_sec.set(tokens_per_sec);
+    }
+
+    /// Prometheus 0.0.4 exposition.
+    pub fn render(&self) -> String {
+        let mut w = Expo::new();
+        if let Some((backend, recipe)) = self.build.lock().unwrap().clone() {
+            w.family(
+                "chon_build_info",
+                "gauge",
+                "build/deployment identity (always 1)",
+            );
+            w.sample(
+                "chon_build_info",
+                &[
+                    ("version", env!("CARGO_PKG_VERSION")),
+                    ("backend", &backend),
+                    ("recipe", &recipe),
+                ],
+                1,
+            );
+        }
+        w.family("chon_train_step", "gauge", "last completed training step");
+        w.sample("chon_train_step", &[], self.step.get());
+        w.family("chon_train_total_steps", "gauge", "target step count");
+        w.sample("chon_train_total_steps", &[], self.total_steps.get());
+        w.family("chon_train_loss", "gauge", "training loss at last step");
+        w.sample_f64("chon_train_loss", &[], self.loss.get());
+        w.family("chon_train_grad_norm", "gauge", "gradient norm at last step");
+        w.sample_f64("chon_train_grad_norm", &[], self.grad_norm.get());
+        w.family("chon_train_lr", "gauge", "learning rate at last step");
+        w.sample_f64("chon_train_lr", &[], self.lr.get());
+        w.family("chon_train_tokens_total", "counter", "tokens consumed");
+        w.sample("chon_train_tokens_total", &[], self.tokens_total.get());
+        w.family(
+            "chon_train_tokens_per_sec",
+            "gauge",
+            "throughput at last step",
+        );
+        w.sample_f64("chon_train_tokens_per_sec", &[], self.tokens_per_sec.get());
+        w.family(
+            "chon_train_resumes_total",
+            "counter",
+            "checkpoint resumes in this process",
+        );
+        w.sample("chon_train_resumes_total", &[], self.resumes_total.get());
+        w.family(
+            "chon_train_phase_us",
+            "histogram",
+            "per-step phase latency (µs), log2 buckets",
+        );
+        for (i, phase) in PHASES.iter().enumerate() {
+            w.histogram(
+                "chon_train_phase_us",
+                &[("phase", phase)],
+                &self.spans.snapshot(i),
+            );
+        }
+        let comps = self.comps.lock().unwrap();
+        if !comps.is_empty() {
+            w.family(
+                "chon_train_hot_channels",
+                "gauge",
+                "hot channels by lifecycle class",
+            );
+            for (name, c) in comps.iter() {
+                w.sample(
+                    "chon_train_hot_channels",
+                    &[("comp", name), ("class", "persistent")],
+                    c.persistent.get(),
+                );
+                w.sample(
+                    "chon_train_hot_channels",
+                    &[("comp", name), ("class", "transient")],
+                    c.transient.get(),
+                );
+            }
+            w.family(
+                "chon_train_hot_births_total",
+                "counter",
+                "channels promoted to persistent",
+            );
+            for (name, c) in comps.iter() {
+                w.sample(
+                    "chon_train_hot_births_total",
+                    &[("comp", name)],
+                    c.births.get(),
+                );
+            }
+            w.family(
+                "chon_train_hot_deaths_total",
+                "counter",
+                "persistent channels gone cold",
+            );
+            for (name, c) in comps.iter() {
+                w.sample(
+                    "chon_train_hot_deaths_total",
+                    &[("comp", name)],
+                    c.deaths.get(),
+                );
+            }
+            w.family(
+                "chon_train_hot_persistence",
+                "gauge",
+                "Jaccard overlap of consecutive top-k probes",
+            );
+            for (name, c) in comps.iter() {
+                w.sample_f64(
+                    "chon_train_hot_persistence",
+                    &[("comp", name)],
+                    c.persistence.get(),
+                );
+            }
+        }
+        w.finish()
+    }
+
+    /// Compact JSON snapshot for `GET /progress`.
+    pub fn progress_json(&self) -> Json {
+        let phases = PHASES
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                (p.to_string(), Json::Num(self.spans.last(i) as f64))
+            })
+            .collect();
+        let hot = self
+            .comps
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| {
+                (
+                    name.clone(),
+                    Json::Obj(vec![
+                        (
+                            "persistent".to_string(),
+                            Json::Num(c.persistent.get() as f64),
+                        ),
+                        (
+                            "transient".to_string(),
+                            Json::Num(c.transient.get() as f64),
+                        ),
+                        (
+                            "persistence".to_string(),
+                            Json::Num(c.persistence.get()),
+                        ),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(vec![
+            ("step".to_string(), Json::Num(self.step.get() as f64)),
+            (
+                "total_steps".to_string(),
+                Json::Num(self.total_steps.get() as f64),
+            ),
+            ("loss".to_string(), Json::Num(self.loss.get())),
+            ("grad_norm".to_string(), Json::Num(self.grad_norm.get())),
+            ("lr".to_string(), Json::Num(self.lr.get())),
+            (
+                "tokens_total".to_string(),
+                Json::Num(self.tokens_total.get() as f64),
+            ),
+            (
+                "tokens_per_sec".to_string(),
+                Json::Num(self.tokens_per_sec.get()),
+            ),
+            ("phases_us".to_string(), Json::Obj(phases)),
+            ("hot".to_string(), Json::Obj(hot)),
+            (
+                "resumes".to_string(),
+                Json::Num(self.resumes_total.get() as f64),
+            ),
+        ])
+    }
+}
+
+/// The scrape listener: one thread, blocking sockets, keep-alive. Not
+/// the serve reactor on purpose — two endpoints at human scrape rates
+/// do not need epoll, and the train process must stay simple.
+pub struct MetricsServer {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `host:port` (port 0 picks an ephemeral port — see
+    /// [`port`](MetricsServer::port)) and serve until dropped.
+    pub fn serve(
+        host: &str,
+        port: u16,
+        obs: Arc<TrainObs>,
+    ) -> Result<MetricsServer> {
+        let listener = TcpListener::bind((host, port))
+            .with_context(|| format!("bind metrics listener {host}:{port}"))?;
+        let port = listener.local_addr()?.port();
+        // non-blocking accept + 50 ms poll so stop() never hangs on a
+        // listener with no final connection to wake it
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("chon-train-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            let _ = handle_conn(stream, &obs);
+                        }
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                }
+            })?;
+        Ok(MetricsServer { port, stop, handle: Some(handle) })
+    }
+
+    /// The bound port (resolves an ephemeral `--metrics-port 0`).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve one keep-alive connection: GET/HEAD `/metrics` and
+/// `/progress`, 404 otherwise.
+fn handle_conn(mut stream: TcpStream, obs: &TrainObs) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let req = loop {
+            match parse_request(&buf) {
+                Ok(Parsed::Complete(req, consumed)) => {
+                    buf.drain(..consumed);
+                    break req;
+                }
+                Ok(Parsed::Partial) => {
+                    let n = stream.read(&mut chunk)?;
+                    if n == 0 {
+                        return Ok(()); // clean EOF between requests
+                    }
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) => {
+                    write_response(
+                        &mut stream,
+                        e.status,
+                        "text/plain",
+                        e.message.as_bytes(),
+                        false,
+                    )?;
+                    return Ok(());
+                }
+            }
+        };
+        let head_only = req.method == "HEAD";
+        let path = req.target.split('?').next().unwrap_or("");
+        match path {
+            "/metrics" => write_response(
+                &mut stream,
+                200,
+                expo::CONTENT_TYPE,
+                obs.render().as_bytes(),
+                head_only,
+            )?,
+            "/progress" => write_response(
+                &mut stream,
+                200,
+                "application/json",
+                obs.progress_json().render().as_bytes(),
+                head_only,
+            )?,
+            _ => write_response(
+                &mut stream,
+                404,
+                "text/plain",
+                b"not found\n",
+                head_only,
+            )?,
+        }
+        if req.wants_close() || req.http10 {
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn phase_spans_record_and_last() {
+        let sp = PhaseSpans::new();
+        sp.record(PH_FWD_BWD, 1000);
+        sp.record(PH_FWD_BWD, 2000);
+        assert_eq!(sp.last(PH_FWD_BWD), 2000);
+        assert_eq!(sp.snapshot(PH_FWD_BWD).count(), 2);
+        assert_eq!(sp.last(PH_ADAM), 0);
+    }
+
+    #[test]
+    fn render_has_core_families_and_build_info() {
+        let obs = TrainObs::new(Arc::new(PhaseSpans::new()));
+        obs.record_step(7, 3.5, 1.0, 3e-4, 4096, 1234.5);
+        let body = obs.render();
+        assert!(!body.contains("chon_build_info"), "unset build info hidden");
+        obs.set_build_info("native", "chon");
+        let body = obs.render();
+        assert!(body.contains("chon_train_step 7"), "{body}");
+        assert!(body.contains("chon_train_tokens_total 4096"));
+        assert!(body.contains(
+            "chon_build_info{version=\"0.1.0\",backend=\"native\",recipe=\"chon\"} 1"
+        ), "{body}");
+        assert!(body.contains("chon_train_phase_us_bucket"));
+        // hot families appear only once a component reported
+        assert!(!body.contains("chon_train_hot_channels"));
+        obs.comp("attn_o").persistent.set(3);
+        let body = obs.render();
+        assert!(body.contains(
+            "chon_train_hot_channels{comp=\"attn_o\",class=\"persistent\"} 3"
+        ));
+    }
+
+    #[test]
+    fn progress_json_parses_and_carries_step() {
+        let obs = TrainObs::new(Arc::new(PhaseSpans::new()));
+        obs.record_step(3, 2.5, 0.5, 1e-3, 512, 100.0);
+        let j = Json::parse(&obs.progress_json().render()).unwrap();
+        assert_eq!(j.get("step").and_then(|v| v.as_f64()), Some(3.0));
+        assert!(j.get("phases_us").and_then(|p| p.get("fwd_bwd")).is_some());
+    }
+
+    #[test]
+    fn metrics_server_serves_and_stops() {
+        let obs = TrainObs::new(Arc::new(PhaseSpans::new()));
+        obs.record_step(5, 3.0, 1.0, 1e-3, 256, 50.0);
+        obs.set_build_info("native", "chon");
+        let mut srv = MetricsServer::serve("127.0.0.1", 0, obs).unwrap();
+        let port = srv.port();
+        let fetch = |path: &str| -> String {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+                .unwrap();
+            let mut body = String::new();
+            s.read_to_string(&mut body).unwrap();
+            body
+        };
+        let m = fetch("/metrics");
+        assert!(m.starts_with("HTTP/1.1 200"), "{m}");
+        assert!(m.contains("chon_train_step 5"));
+        assert!(m.contains("chon_build_info"));
+        let p = fetch("/progress");
+        assert!(p.contains("application/json"), "{p}");
+        let body = p.split("\r\n\r\n").nth(1).unwrap();
+        assert!(Json::parse(body).is_ok(), "{body}");
+        let nf = fetch("/nope");
+        assert!(nf.starts_with("HTTP/1.1 404"), "{nf}");
+        srv.stop();
+    }
+}

@@ -19,8 +19,12 @@
 //! batch-global quantization state is exactly what cannot be sharded
 //! without making results depend on N.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
+use crate::obs::train::{PhaseSpans, PH_ADAM, PH_ALLREDUCE, PH_FWD_BWD};
 use crate::runtime::artifact::Manifest;
 use crate::runtime::backend::{check_inputs, Executable};
 use crate::runtime::native::model::{self, ModelCfg};
@@ -39,6 +43,9 @@ pub struct ShardExec {
     recipe: NativeRecipe,
     manifest: Manifest,
     shards: usize,
+    /// optional phase-span sink (fwd_bwd / allreduce / adam timings);
+    /// timing only — the math is identical with or without it
+    spans: Option<Arc<PhaseSpans>>,
 }
 
 impl ShardExec {
@@ -55,7 +62,21 @@ impl ShardExec {
             recipe_name.ok_or_else(|| anyhow::anyhow!("{name:?} names no recipe"))?;
         let rec = recipe::recipe(&recipe_name)?;
         let manifest = build_manifest(name, Kind::Train, &cfg, Some(&recipe_name));
-        Ok(ShardExec { cfg, recipe: rec, manifest, shards: shards.max(1) })
+        Ok(ShardExec {
+            cfg,
+            recipe: rec,
+            manifest,
+            shards: shards.max(1),
+            spans: None,
+        })
+    }
+
+    /// Attach a phase-span sink before the executable is frozen behind
+    /// `Rc<dyn Executable>` (the trainer shares the same sink with its
+    /// data-wait and diag-probe spans).
+    pub fn with_spans(mut self, spans: Arc<PhaseSpans>) -> ShardExec {
+        self.spans = Some(spans);
+        self
     }
 }
 
@@ -110,6 +131,7 @@ impl Executable for ShardExec {
         let cfg = &self.cfg;
         let rec = &self.recipe;
         let params_ref = &params;
+        let t_fwd = Instant::now();
         let shard_results: Vec<Vec<(f32, Vec<Mat>)>> =
             pool::global().map(shards, |s| {
                 let u0 = s * per;
@@ -125,11 +147,15 @@ impl Executable for ShardExec {
                     })
                     .collect()
             });
+        if let Some(sp) = &self.spans {
+            sp.record_elapsed(PH_FWD_BWD, t_fwd.elapsed());
+        }
 
         // deterministic allreduce: units in index order, fixed tree shape.
         // Peak memory holds one grad set per unit before the fold — fine
         // at tiny-model scale; eager folding of finished subtree pairs
         // would cut that without changing the bits if models grow.
+        let t_reduce = Instant::now();
         let slots: Vec<Option<(f32, Vec<Mat>)>> = shard_results
             .into_iter()
             .flatten()
@@ -144,9 +170,16 @@ impl Executable for ShardExec {
             }
         }
         let loss = loss_sum * inv;
+        if let Some(sp) = &self.spans {
+            sp.record_elapsed(PH_ALLREDUCE, t_reduce.elapsed());
+        }
 
+        let t_adam = Instant::now();
         let lr = model::lr_at(step, self.cfg.total_steps);
         let gnorm = model::adam_update(&mut params, &mut m, &mut v, &grads, step, lr);
+        if let Some(sp) = &self.spans {
+            sp.record_elapsed(PH_ADAM, t_adam.elapsed());
+        }
 
         let to_tensors = |mats: Vec<Mat>| -> Vec<HostTensor> {
             specs

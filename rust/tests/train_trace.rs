@@ -1,0 +1,266 @@
+//! Training-telemetry contracts: telemetry must be pure observation
+//! (bit-identical loss trajectory with everything on vs everything
+//! off), a resume-appended trace must replay to exactly an
+//! uninterrupted run's step series, and a SIGKILLed training process
+//! must leave a trace that parses, scrapes, and `chon tail`s.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use chon::config::RunConfig;
+use chon::coordinator::Trainer;
+use chon::obs::trace;
+use chon::obs::train::{MetricsServer, TrainObs};
+
+fn cfg_for(out: &Path, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = "native".into();
+    cfg.artifacts = PathBuf::from("/nonexistent/chon_artifacts");
+    cfg.model = "tiny_gla".into();
+    cfg.recipe = "chon".into();
+    cfg.steps = steps;
+    cfg.seed = 9;
+    cfg.diag_every = 4;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.out_dir = out.to_path_buf();
+    cfg
+}
+
+/// The pinned acceptance property: attaching the full telemetry stack
+/// (gauges, live scrape listener, trace, incremental CSV) must not
+/// perturb training — the loss trajectory is compared bit for bit.
+#[test]
+fn telemetry_does_not_change_the_bits() {
+    let root = std::env::temp_dir().join("chon_tt_bits");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let mut plain = Trainer::new(cfg_for(&root.join("plain"), 10)).unwrap();
+    plain.train(10).unwrap();
+
+    let mut full = Trainer::new(cfg_for(&root.join("full"), 10)).unwrap();
+    let obs = TrainObs::new(full.spans.clone());
+    obs.set_build_info("native", "chon");
+    full.set_obs(obs.clone());
+    full.enable_run_outputs().unwrap();
+    let mut srv = MetricsServer::serve("127.0.0.1", 0, obs).unwrap();
+    full.train(10).unwrap();
+    srv.stop();
+    let dir = full.write_outputs().unwrap();
+
+    let bits = |t: &Trainer| -> Vec<u32> {
+        t.log.records.iter().map(|m| m.loss.to_bits()).collect()
+    };
+    assert_eq!(bits(&plain), bits(&full));
+
+    // and the trace's loss series equals the in-memory log's
+    let ev = trace::read_events(&dir.join(trace::TRACE_FILE)).unwrap();
+    let series = trace::loss_series(&trace::logical_view(&ev));
+    assert_eq!(series.len(), 10);
+    for (m, &(step, loss)) in full.log.records.iter().zip(&series) {
+        assert_eq!(m.step as u64, step);
+        assert_eq!(m.loss as f64, loss);
+    }
+}
+
+/// Crash + resume: train 6 steps, checkpoint, 2 more steps, "crash"
+/// (no run_end), then resume from the checkpoint into the same run dir.
+/// The appended trace's *logical* step series must equal an
+/// uninterrupted run's exactly — resumed training is bit-identical, and
+/// `logical_view` collapses the pre-crash steps the resume replays.
+#[test]
+fn resume_appended_trace_matches_uninterrupted_run() {
+    let root = std::env::temp_dir().join("chon_tt_resume");
+    let _ = std::fs::remove_dir_all(&root);
+
+    let mut a = Trainer::new(cfg_for(&root.join("a"), 12)).unwrap();
+    a.enable_run_outputs().unwrap();
+    a.train(12).unwrap();
+    let dir_a = a.write_outputs().unwrap();
+    let ev_a = trace::read_events(&dir_a.join(trace::TRACE_FILE)).unwrap();
+    let series_a = trace::loss_series(&trace::logical_view(&ev_a));
+    assert_eq!(series_a.len(), 12);
+
+    let ckpt = root.join("ckpt");
+    let mut b = Trainer::new(cfg_for(&root.join("b"), 12)).unwrap();
+    b.enable_run_outputs().unwrap();
+    b.train(6).unwrap();
+    b.save_checkpoint_to(&ckpt).unwrap();
+    b.train(2).unwrap();
+    drop(b); // simulated crash: no write_outputs, no run_end
+
+    let mut cfg = cfg_for(&root.join("b"), 12);
+    cfg.resume = Some(ckpt.clone());
+    let mut b2 = Trainer::new(cfg).unwrap();
+    b2.restore(&ckpt).unwrap();
+    assert_eq!(b2.state.step, 6);
+    b2.enable_run_outputs().unwrap();
+    b2.train(6).unwrap();
+    let dir_b = b2.write_outputs().unwrap();
+
+    let ev_b = trace::read_events(&dir_b.join(trace::TRACE_FILE)).unwrap();
+    // the raw trace carries the overlap (steps 7-8 appear twice) plus
+    // the resume marker; the logical view deduplicates to A's series
+    let view = trace::logical_view(&ev_b);
+    let series_b = trace::loss_series(&view);
+    assert_eq!(series_a, series_b, "resume must replay A's exact losses");
+    let steps: Vec<u64> = series_b.iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, (1..=12).collect::<Vec<u64>>(), "each step once");
+    let count = |k: &str| view.iter().filter(|e| trace::kind(e) == Some(k)).count();
+    assert_eq!(count("resume"), 1);
+    assert_eq!(count("run_end"), 1);
+}
+
+/// Resuming at a step the trace never reached must be refused — the
+/// gap would be indistinguishable from lost data.
+#[test]
+fn resume_past_end_of_trace_is_refused() {
+    let root = std::env::temp_dir().join("chon_tt_gap");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // checkpoint from a run that traced nothing after step 8
+    let ckpt = root.join("ckpt");
+    let mut a = Trainer::new(cfg_for(&root.join("run"), 12)).unwrap();
+    a.enable_run_outputs().unwrap();
+    a.train(4).unwrap();
+    drop(a);
+    let mut b = Trainer::new(cfg_for(&root.join("other"), 12)).unwrap();
+    b.train(8).unwrap();
+    b.save_checkpoint_to(&ckpt).unwrap();
+
+    let mut cfg = cfg_for(&root.join("run"), 12);
+    cfg.resume = Some(ckpt.clone());
+    let mut c = Trainer::new(cfg).unwrap();
+    c.restore(&ckpt).unwrap();
+    let err = c.enable_run_outputs().unwrap_err().to_string();
+    assert!(err.contains("refusing to append across the gap"), "{err}");
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_chon")
+}
+
+fn http_get(port: u16, path: &str) -> String {
+    let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    let _ = s.read_to_string(&mut buf);
+    buf
+}
+
+fn metric_value(body: &str, series: &str) -> Option<f64> {
+    body.lines()
+        .find(|l| l.starts_with(series) && l[series.len()..].starts_with(' '))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+/// End to end against the real binary: live /metrics and /progress off
+/// a running `chon train`, monotone step gauge across scrapes, then
+/// SIGKILL mid-run — the trace must parse (≤1 torn line), reproduce the
+/// loss series up to the last completed step, and `chon tail` must
+/// summarize it and export a Chrome trace.
+#[test]
+fn sigkilled_train_leaves_scrapeable_trace_for_tail() {
+    let out = std::env::temp_dir().join("chon_tt_kill");
+    let _ = std::fs::remove_dir_all(&out);
+    // grab a free port for the trainer's metrics listener
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let mut child = Command::new(bin())
+        .args([
+            "train",
+            "--steps",
+            "5000",
+            "--diag-every",
+            "5",
+            "--log-every",
+            "0",
+            "--seed",
+            "11",
+            "--out-dir",
+            out.to_str().unwrap(),
+            "--metrics-port",
+            &port.to_string(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+
+    // poll /metrics until the step gauge moves past 5 (listener is up
+    // before training starts; connection refusals just mean "not yet")
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut first = 0.0f64;
+    loop {
+        assert!(Instant::now() < deadline, "trainer never reached step 5");
+        if TcpStream::connect(("127.0.0.1", port)).is_ok() {
+            let body = http_get(port, "/metrics");
+            if let Some(v) = metric_value(&body, "chon_train_step") {
+                if v >= 5.0 {
+                    first = v;
+                    assert!(
+                        body.contains("chon_build_info{"),
+                        "build info gauge missing"
+                    );
+                    assert!(
+                        body.contains("chon_train_phase_us_bucket{"),
+                        "phase histograms missing"
+                    );
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // a later scrape sees a step at least as large (monotone progress)
+    std::thread::sleep(Duration::from_millis(200));
+    let body = http_get(port, "/metrics");
+    let second = metric_value(&body, "chon_train_step").unwrap();
+    assert!(second >= first, "step went backwards: {first} -> {second}");
+    let progress = http_get(port, "/progress");
+    assert!(progress.contains("\"step\":"), "no /progress JSON: {progress}");
+
+    // SIGKILL mid-run: no flush, no run_end, at most one torn line
+    child.kill().unwrap();
+    child.wait().unwrap();
+
+    let run_dir = out.join("tiny_gla_chon");
+    let ev = trace::read_events(&run_dir.join(trace::TRACE_FILE)).unwrap();
+    let series = trace::loss_series(&trace::logical_view(&ev));
+    assert!(
+        series.len() as f64 >= first,
+        "trace has {} steps, scrape saw {first}",
+        series.len()
+    );
+    assert!(trace::last_step(&ev).unwrap() >= 5);
+    assert_eq!(
+        ev.iter().filter(|e| trace::kind(e) == Some("run_end")).count(),
+        0,
+        "a SIGKILLed run must not have a run_end"
+    );
+
+    // `chon tail` summarizes the torn trace and exports a Chrome trace
+    let chrome = out.join("phases.json");
+    let tail = Command::new(bin())
+        .args([
+            "tail",
+            run_dir.to_str().unwrap(),
+            "--chrome-trace",
+            chrome.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&tail.stdout);
+    assert!(tail.status.success(), "tail failed: {stdout}");
+    assert!(stdout.contains("steps:"), "no summary line: {stdout}");
+    assert!(stdout.contains("interrupted"), "missing interrupted marker: {stdout}");
+    let doc = std::fs::read_to_string(&chrome).unwrap();
+    assert!(doc.contains("traceEvents"), "not a Chrome trace: {doc}");
+}
